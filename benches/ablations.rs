@@ -1,0 +1,67 @@
+//! Ablations of design choices DESIGN.md calls out (beyond the paper's own
+//! Fig 4 feature grid):
+//!
+//! * **whitening eps** — §3.2 notes a small boost from *reducing* the
+//!   eigenvalue regularizer vs tysam-code's value; sweep
+//!   {1e-2 (tysam), 5e-4 (paper), 1e-6}.
+//! * **whiten_bias_epochs** — §3.2 trains the whitening bias 3 epochs then
+//!   freezes it "without reducing accuracy"; sweep {0, 3, forever}.
+//! * **lookahead cadence** — Listing 4 updates every 5 steps; sweep
+//!   {1, 5, 20}.
+
+use airbench::config::TtaLevel;
+use airbench::coordinator::{run_fleet, warmup};
+use airbench::experiments::{pct_ci, DataKind, Lab};
+
+fn main() -> anyhow::Result<()> {
+    let mut lab = Lab::new()?;
+    let runs = lab.scale.runs.max(3);
+    let (train_ds, test_ds) = lab.data(DataKind::Cifar10);
+    let mut base = lab.base_config();
+    base.tta = TtaLevel::None;
+    let engine = lab.engine(&base.variant)?;
+    warmup(engine, &train_ds, &base)?;
+
+    println!("== Ablations (n={runs}/cell) ==");
+
+    println!("\nwhitening eps (§3.2; paper: smaller eps beats tysam's 1e-2):");
+    for eps in [1e-2f64, 5e-4, 1e-6] {
+        let mut cfg = base.clone();
+        cfg.whiten_eps = eps;
+        let s = run_fleet(engine, &train_ds, &test_ds, &cfg, runs, None)?.summary();
+        println!("  eps={eps:<8} {}", pct_ci(s.mean, s.ci95()));
+    }
+
+    println!("\nwhiten_bias_epochs (§3.2; paper: 3 then freeze ≈ never freezing):");
+    for wbe in [0.0f64, 3.0, 1e9] {
+        let mut cfg = base.clone();
+        cfg.whiten_bias_epochs = wbe;
+        let s = run_fleet(engine, &train_ds, &test_ds, &cfg, runs, None)?.summary();
+        let label = if wbe == 0.0 {
+            "0 (frozen)".to_string()
+        } else if wbe > 100.0 {
+            "always on".to_string()
+        } else {
+            format!("{wbe}")
+        };
+        println!("  {label:<12} {}", pct_ci(s.mean, s.ci95()));
+    }
+
+    println!("\nlookahead cadence (Listing 4: every 5 steps):");
+    for every in [1usize, 5, 20] {
+        let mut cfg = base.clone();
+        cfg.lookahead_every = every;
+        let s = run_fleet(engine, &train_ds, &test_ds, &cfg, runs, None)?.summary();
+        println!("  every={every:<6} {}", pct_ci(s.mean, s.ci95()));
+    }
+
+    println!("\naltflip hash (SplitMix64 fast path vs Listing 2 exact md5):");
+    for flip in ["alternating", "alternating_md5"] {
+        let mut cfg = base.clone();
+        cfg.set("flip", flip)?;
+        let s = run_fleet(engine, &train_ds, &test_ds, &cfg, runs, None)?.summary();
+        println!("  {flip:<16} {}", pct_ci(s.mean, s.ci95()));
+    }
+    println!("(statistically interchangeable hashes — only parity uniformity matters)");
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Figure 3 — FLOPs vs error-rate tradeoff (paper §4).
+//!
+//! Paper: airbench94/95/96 lie on a straight line in log(FLOPs) ×
+//! log(error). Our rungs: the bench variant at increasing epoch budgets
+//! plus the bench_wide variant — total training FLOPs computed analytically
+//! from the manifest (the same accounting the paper uses), error measured
+//! by fleet. Reports the log-log fit and its residuals.
+
+use airbench::coordinator::{run_fleet, warmup};
+use airbench::experiments::{pct, DataKind, Lab};
+
+fn main() -> anyhow::Result<()> {
+    let mut lab = Lab::new()?;
+    let runs = lab.scale.runs.max(3);
+    let (train_ds, test_ds) = lab.data(DataKind::Cifar10);
+    let base = lab.base_config();
+
+    // Three rungs of increasing compute, like airbench94 -> 95 -> 96.
+    let rungs: [(&str, f64); 3] = [
+        ("bench", base.epochs),
+        ("bench", 2.0 * base.epochs),
+        ("bench_wide", 2.0 * base.epochs),
+    ];
+
+    println!("== Fig 3: FLOPs vs error (n={runs}/rung) ==");
+    println!("rung                | PFLOPs    | error   | acc");
+    println!("--------------------+-----------+---------+------");
+    let mut pts = Vec::new();
+    for (variant, epochs) in rungs {
+        let mut cfg = base.clone();
+        cfg.variant = variant.to_string();
+        cfg.epochs = epochs;
+        let engine = lab.engine(variant)?;
+        warmup(engine, &train_ds, &cfg)?;
+        let fleet = run_fleet(engine, &train_ds, &test_ds, &cfg, runs, None)?;
+        let s = fleet.summary();
+        let flops = fleet.runs[0].flops as f64;
+        println!(
+            "{:<19} | {:>9.4e} | {:>6.3}% | {}",
+            format!("{variant}@{epochs:.0}ep"),
+            flops,
+            100.0 * (1.0 - s.mean),
+            pct(s.mean)
+        );
+        pts.push((flops.ln(), (1.0 - s.mean).ln()));
+    }
+    // Log-log linearity: fit y = a + b x, report max residual.
+    let n = pts.len() as f64;
+    let xm = pts.iter().map(|p| p.0).sum::<f64>() / n;
+    let ym = pts.iter().map(|p| p.1).sum::<f64>() / n;
+    let b = pts.iter().map(|p| (p.0 - xm) * (p.1 - ym)).sum::<f64>()
+        / pts.iter().map(|p| (p.0 - xm) * (p.0 - xm)).sum::<f64>();
+    let a = ym - b * xm;
+    let max_resid = pts
+        .iter()
+        .map(|p| (p.1 - (a + b * p.0)).abs())
+        .fold(0f64, f64::max);
+    println!(
+        "\nlog-log fit: log(err) = {a:.2} + {b:.3}·log(FLOPs); max residual {max_resid:.3} \
+         (paper: apparently linear, slope < 0)"
+    );
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! Figure 4 — training speedups accumulate additively (paper §5.1).
+//!
+//! For each feature F in {dirac init, scalebias, lookahead, multicrop TTA,
+//! alternating flip}: (a) ADD F to the whitened baseline and measure the
+//! accuracy gain at a fixed epoch budget; (b) REMOVE F from the full
+//! airbench config and measure the accuracy drop. Paper claim: the two
+//! deltas match per feature (≈ additive interaction), except multicrop.
+//!
+//! (The paper measures epochs-to-94%; at this scale we measure the
+//! accuracy delta at fixed epochs — the same additivity comparison read
+//! off the other axis of the epochs/accuracy curve.)
+//!
+//! `scalebias` toggles between the `bench` and `bench_noscalebias` AOT
+//! variants (the 64× BatchNorm-bias LR group is baked into the graph).
+
+use airbench::config::{TrainConfig, TtaLevel};
+use airbench::coordinator::{run_fleet, warmup};
+use airbench::data::augment::FlipMode;
+use airbench::experiments::{DataKind, Lab};
+
+#[derive(Clone, Copy)]
+enum Feature {
+    Dirac,
+    ScaleBias,
+    Lookahead,
+    Multicrop,
+    AltFlip,
+}
+
+impl Feature {
+    fn name(&self) -> &'static str {
+        match self {
+            Feature::Dirac => "dirac",
+            Feature::ScaleBias => "scalebias",
+            Feature::Lookahead => "lookahead",
+            Feature::Multicrop => "multicrop",
+            Feature::AltFlip => "altflip",
+        }
+    }
+
+    /// Apply (on=true) or strip (on=false) the feature.
+    fn set(&self, cfg: &mut TrainConfig, on: bool) {
+        match self {
+            Feature::Dirac => cfg.dirac_init = on,
+            Feature::ScaleBias => {
+                cfg.variant = if on { "bench" } else { "bench_noscalebias" }.to_string()
+            }
+            Feature::Lookahead => cfg.lookahead = on,
+            Feature::Multicrop => {
+                cfg.tta = if on { TtaLevel::MirrorTranslate } else { TtaLevel::Mirror }
+            }
+            Feature::AltFlip => {
+                cfg.flip = if on { FlipMode::Alternating } else { FlipMode::Random }
+            }
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut lab = Lab::new()?;
+    let runs = lab.scale.runs.max(3);
+    let (train_ds, test_ds) = lab.data(DataKind::Cifar10);
+
+    // Whitened baseline (§3.2) and the full config, at the same budget.
+    let mut baseline = TrainConfig::whitened_baseline();
+    baseline.epochs = lab.scale.epochs;
+    let full = lab.base_config(); // all features on
+
+    let fleet_mean = |lab: &mut Lab, cfg: &TrainConfig| -> anyhow::Result<f64> {
+        let engine = lab.engine(&cfg.variant)?;
+        warmup(engine, &train_ds, cfg)?;
+        Ok(run_fleet(engine, &train_ds, &test_ds, cfg, runs, None)?
+            .summary()
+            .mean)
+    };
+
+    let base_acc = fleet_mean(&mut lab, &baseline)?;
+    let full_acc = fleet_mean(&mut lab, &full)?;
+    println!("== Fig 4: feature additivity (n={runs}/cell) ==");
+    println!(
+        "whitened baseline: {:.2}%   full airbench: {:.2}%",
+        100.0 * base_acc,
+        100.0 * full_acc
+    );
+    println!("\nfeature    | +feature to baseline | -feature from full | gap");
+    println!("-----------+----------------------+--------------------+------");
+    let features = [
+        Feature::Dirac,
+        Feature::ScaleBias,
+        Feature::Lookahead,
+        Feature::Multicrop,
+        Feature::AltFlip,
+    ];
+    for f in features {
+        let mut plus = baseline.clone();
+        f.set(&mut plus, true);
+        let mut minus = full.clone();
+        f.set(&mut minus, false);
+        let gain = fleet_mean(&mut lab, &plus)? - base_acc;
+        let drop = full_acc - fleet_mean(&mut lab, &minus)?;
+        println!(
+            "{:<10} | {:>+19.2}% | {:>+17.2}% | {:+.2}%",
+            f.name(),
+            100.0 * gain,
+            100.0 * drop,
+            100.0 * (gain - drop)
+        );
+    }
+    println!("\npaper claim: gain ≈ drop per feature (additive), multicrop excepted");
+    Ok(())
+}

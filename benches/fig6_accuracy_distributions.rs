@@ -1,0 +1,53 @@
+//! Figure 6 — accuracy distributions across runs (paper App. D / §5.3).
+//!
+//! Histograms of final TTA accuracy for the three Table 4 settings
+//! (1× epochs, 2× epochs, 1.5× epochs + 1.5× width). Paper: roughly
+//! normal, tight distributions whose spread shrinks as compute grows.
+
+use airbench::coordinator::{run_fleet, warmup};
+use airbench::experiments::{pct, DataKind, Lab};
+use airbench::stats::histogram;
+
+fn main() -> anyhow::Result<()> {
+    let mut lab = Lab::new()?;
+    let runs = (2 * lab.scale.runs).max(8);
+    let (train_ds, test_ds) = lab.data(DataKind::Cifar10);
+    let base = lab.base_config();
+    let settings: [(&str, &str, f64); 3] = [
+        ("1x epochs", "bench", base.epochs),
+        ("2x epochs", "bench", 2.0 * base.epochs),
+        ("1.5x ep + 1.5x width", "bench_wide", 1.5 * base.epochs),
+    ];
+
+    println!("== Fig 6: accuracy distributions (n={runs}/setting, TTA on) ==");
+    for (name, variant, epochs) in settings {
+        let mut cfg = base.clone();
+        cfg.variant = variant.to_string();
+        cfg.epochs = epochs;
+        let engine = lab.engine(variant)?;
+        warmup(engine, &train_ds, &cfg)?;
+        let fleet = run_fleet(engine, &train_ds, &test_ds, &cfg, runs, None)?;
+        let s = fleet.summary();
+        let lo = s.min - 1e-9;
+        let hi = s.max + 1e-9;
+        let bins = 8usize;
+        let h = histogram(&fleet.accuracies, lo, hi, bins);
+        println!(
+            "\n{name}: mean {} std {:.3}% (min {} max {})",
+            pct(s.mean),
+            100.0 * s.std,
+            pct(s.min),
+            pct(s.max)
+        );
+        let w = (hi - lo) / bins as f64;
+        for (i, &c) in h.iter().enumerate() {
+            println!(
+                "  [{}, {}) {}",
+                pct(lo + i as f64 * w),
+                pct(lo + (i + 1) as f64 * w),
+                "#".repeat(c)
+            );
+        }
+    }
+    Ok(())
+}

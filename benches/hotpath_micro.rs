@@ -1,0 +1,108 @@
+//! §Perf — hot-path microbenchmarks (the paper's §3.7 compilation story).
+//!
+//! Measures each stage of the per-step pipeline in isolation:
+//! * compiled train-step execution (PJRT) and its marshal overhead;
+//! * compiled eval-step throughput (images/s) at each TTA level;
+//! * augmentation pipeline (flip/translate/cutout) throughput;
+//! * whitening initialization (patch covariance + Jacobi eigh);
+//! * one-time compile cost vs per-run amortization (the airbench94 vs
+//!   airbench94_compiled trade-off, §3.7).
+//!
+//! Feeds the before/after table in EXPERIMENTS.md §Perf.
+
+use airbench::config::{TrainConfig, TtaLevel};
+use airbench::coordinator::evaluator::evaluate;
+use airbench::data::loader::{Loader, OrderPolicy};
+use airbench::experiments::{DataKind, Lab};
+use airbench::runtime::{Engine, InitConfig, ModelState};
+use airbench::tensor::Tensor;
+use airbench::util::benchmark::Bench;
+use airbench::whitening::whitening_weights;
+
+fn main() -> anyhow::Result<()> {
+    let mut lab = Lab::new()?;
+    let (train_ds, test_ds) = lab.data(DataKind::Cifar10);
+    let cfg = TrainConfig::default();
+
+    // One-time compile cost (the §3.7 trade-off).
+    let t0 = std::time::Instant::now();
+    let mut engine = Engine::load(&lab.client, &lab.manifest, "bench")?;
+    let compile_secs = t0.elapsed().as_secs_f64();
+    println!("compile bench train+eval: {compile_secs:.2}s (one-time, amortized over runs)");
+
+    let batch = engine.batch_train();
+    let mut state = ModelState::init(engine.variant(), &InitConfig::default());
+    state.set_whitening(whitening_weights(
+        &train_ds.head(256).images,
+        engine.variant().hyper.whiten_kernel,
+        5e-4,
+    )?)?;
+
+    // Augmented batch production (L3 data pipeline).
+    let bench = Bench::new(3, 20);
+    let mut loader = Loader::new(&train_ds, batch, cfg.aug(), OrderPolicy::Reshuffle, true, 0);
+    let aug_sample = bench.run("augment+batch (64 imgs)", || {
+        let mut n = 0;
+        loader.run_epoch(|b| {
+            n += b.images.len();
+            false // one batch per iteration
+        });
+        n
+    });
+    println!(
+        "  -> {:.1} Mimg/s pipeline throughput",
+        aug_sample.throughput(batch as f64) / 1e6
+    );
+
+    // Compiled train step.
+    let mut batch_img = Tensor::zeros(&[batch, 3, 32, 32]);
+    batch_img
+        .data_mut()
+        .copy_from_slice(&train_ds.images.data()[..batch * 3 * 32 * 32]);
+    let labels: Vec<i32> = train_ds.labels[..batch].iter().map(|&l| l as i32).collect();
+    let step_bench = Bench::new(2, 10);
+    let s = step_bench.run("train_step (batch 64)", || {
+        engine
+            .train_step(&mut state, &batch_img, &labels, 1e-3, 0.1, true)
+            .unwrap()
+    });
+    let flops = engine.variant().train_flops_per_example() as f64 * batch as f64;
+    println!(
+        "  -> {:.2} GFLOP/s effective ({:.1} ms/step, {:.3} GFLOP/step)",
+        flops / s.mean_secs() / 1e9,
+        1e3 * s.mean_secs(),
+        flops / 1e9
+    );
+    println!(
+        "  -> marshal share so far: {:.1}% of engine time",
+        100.0 * engine.stats.train_marshal_secs
+            / (engine.stats.train_marshal_secs + engine.stats.train_exec_secs)
+    );
+
+    // Eval throughput per TTA level.
+    for tta in [TtaLevel::None, TtaLevel::Mirror, TtaLevel::MirrorTranslate] {
+        let eb = Bench::new(1, 5);
+        let s = eb.run(&format!("evaluate (n={}, tta={})", test_ds.len(), tta.name()), || {
+            evaluate(&mut engine, &state, &test_ds, tta).unwrap().accuracy
+        });
+        println!(
+            "  -> {:.0} img/s",
+            test_ds.len() as f64 / s.mean_secs()
+        );
+    }
+
+    // Whitening init (host-side Jacobi eigensolve).
+    let wb = Bench::new(2, 10);
+    wb.run("whitening init (256 imgs, 12x12 eigh)", || {
+        whitening_weights(&train_ds.head(256).images, 2, 5e-4).unwrap()
+    });
+
+    // Amortization table (§3.7): total time for K runs with one compile.
+    let step_time = s.mean_secs();
+    println!("\namortization (compile {compile_secs:.1}s + K runs x ~{:.1}s train):", 40.0 * step_time);
+    for k in [1usize, 5, 25] {
+        let total = compile_secs + k as f64 * 40.0 * step_time;
+        println!("  K={k:<3} -> {:.1}s total, {:.2}s/run", total, total / k as f64);
+    }
+    Ok(())
+}

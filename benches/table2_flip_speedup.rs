@@ -1,0 +1,68 @@
+//! Table 2 — effective speedup of alternating flip (paper §5.2).
+//!
+//! For each (cutout, epochs) cell, trains fleets with random and
+//! alternating flip; fits the §5.2 power law `error = c + b·epochs^a` to
+//! the random-flip curve; reports the effective speedup of altflip — with
+//! and without TTA (both come from the same runs: the trainer evaluates
+//! both ways). Paper patterns under test: speedups are positive, grow with
+//! epochs, and shrink with extra augmentation (Cutout) and with TTA.
+
+use airbench::coordinator::{run_fleet, warmup};
+use airbench::data::augment::FlipMode;
+use airbench::experiments::{pct, DataKind, Lab};
+use airbench::stats::effective_speedup;
+
+fn main() -> anyhow::Result<()> {
+    let mut lab = Lab::new()?;
+    let runs = std::cmp::max(3, lab.scale.runs * 3 / 5);
+    let epochs = [2.0, 4.0, 8.0]; // paper: {10, 20, 40, 80}, scaled
+    let (train_ds, test_ds) = lab.data(DataKind::Cifar10);
+    let base = lab.base_config();
+    let engine = lab.engine(&base.variant)?;
+    warmup(engine, &train_ds, &base)?;
+
+    println!("== Table 2: altflip effective speedups (n={runs}/cell) ==");
+    println!("cutout | epochs | rand acc | alt acc  | speedup | speedup (w/ TTA)");
+    println!("-------+--------+----------+----------+---------+-----------------");
+    for cutout in [0usize, 6] {
+        // Gather the random-flip curve (both TTA readouts per run).
+        let mut rand_err = Vec::new(); // (epochs, err_no_tta, err_tta)
+        let mut alt_err = Vec::new();
+        for &e in &epochs {
+            for flip in [FlipMode::Random, FlipMode::Alternating] {
+                let mut cfg = base.clone();
+                cfg.epochs = e;
+                cfg.cutout = cutout;
+                cfg.flip = flip;
+                let fleet = run_fleet(engine, &train_ds, &test_ds, &cfg, runs, None)?;
+                let tta = fleet.summary().mean;
+                let no_tta = fleet.summary_no_tta().mean;
+                match flip {
+                    FlipMode::Random => rand_err.push((e, 1.0 - no_tta, 1.0 - tta)),
+                    FlipMode::Alternating => alt_err.push((e, 1.0 - no_tta, 1.0 - tta)),
+                    _ => unreachable!(),
+                }
+            }
+        }
+        let re: Vec<f64> = rand_err.iter().map(|c| c.0).collect();
+        let rn: Vec<f64> = rand_err.iter().map(|c| c.1).collect();
+        let rt: Vec<f64> = rand_err.iter().map(|c| c.2).collect();
+        for (i, &e) in epochs.iter().enumerate() {
+            let fmt = |s: Option<f64>| match s {
+                Some(v) => format!("{:+.1}%", 100.0 * v),
+                None => ">fit".to_string(),
+            };
+            println!(
+                "{:<6} | {:>6} | {:>8} | {:>8} | {:>7} | {}",
+                if cutout > 0 { "yes" } else { "no" },
+                e,
+                pct(1.0 - rand_err[i].1),
+                pct(1.0 - alt_err[i].1),
+                fmt(effective_speedup(&re, &rn, e, alt_err[i].1)),
+                fmt(effective_speedup(&re, &rt, e, alt_err[i].2)),
+            );
+        }
+    }
+    println!("\npaper patterns: speedup > 0; grows with epochs; shrinks with cutout/TTA");
+    Ok(())
+}

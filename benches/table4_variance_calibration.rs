@@ -1,0 +1,76 @@
+//! Table 4 — statistical metrics of airbench trainings (paper §5.3).
+//!
+//! Paper (n=10,000 runs per setting): for {1× epochs, 2× epochs,
+//! 1.5×/1.5× epochs+width} × {TTA off, on}, report mean accuracy, test-set
+//! stddev, distribution-wise stddev, and CACE. Claims:
+//! * dist-wise stddev is at least ~5× below test-set stddev everywhere;
+//! * TTA reduces test-set stddev but increases CACE in every setting.
+//!
+//! Here each setting runs an `AIRBENCH_RUNS`-scaled fleet; width 1.5× uses
+//! the `bench_wide` AOT variant.
+
+use airbench::config::TtaLevel;
+use airbench::coordinator::{run_fleet, warmup};
+use airbench::experiments::{pct, DataKind, Lab};
+use airbench::stats::{cace, decompose_variance};
+
+fn main() -> anyhow::Result<()> {
+    let mut lab = Lab::new()?;
+    let runs = (2 * lab.scale.runs).max(6);
+    let (train_ds, test_ds) = lab.data(DataKind::Cifar10);
+    let base = lab.base_config();
+
+    println!("== Table 4: variance & calibration (n={runs}/setting) ==");
+    println!("epochs | width | TTA | mean acc | test-set std | dist-wise std | CACE");
+    println!("-------+-------+-----+----------+--------------+---------------+------");
+    let e1 = base.epochs;
+    let settings: [(f64, &str, &str); 3] = [
+        (e1, "bench", "1x"),
+        (2.0 * e1, "bench", "1x"),
+        (1.5 * e1, "bench_wide", "1.5x"),
+    ];
+    let mut rows: Vec<(bool, f64, f64, f64)> = Vec::new(); // (tta, test_std, dist_std, cace)
+    for tta in [TtaLevel::None, TtaLevel::MirrorTranslate] {
+        for &(epochs, variant, wname) in &settings {
+            let mut cfg = base.clone();
+            cfg.epochs = epochs;
+            cfg.variant = variant.to_string();
+            cfg.tta = tta;
+            let engine = lab.engine(variant)?;
+            warmup(engine, &train_ds, &cfg)?;
+            let fleet = run_fleet(engine, &train_ds, &test_ds, &cfg, runs, None)?;
+            let v = decompose_variance(&fleet.accuracies, test_ds.len());
+            let mean_cace: f64 = fleet
+                .runs
+                .iter()
+                .map(|r| cace(&r.eval.probs, &test_ds.labels, 15))
+                .sum::<f64>()
+                / fleet.runs.len() as f64;
+            println!(
+                "{:>6} | {:>5} | {:<3} | {:>8} | {:>11.3}% | {:>12.3}% | {:.4}",
+                format!("{:.1}", epochs),
+                wname,
+                if tta == TtaLevel::None { "no" } else { "yes" },
+                pct(v.mean),
+                100.0 * v.test_set_std,
+                100.0 * v.dist_wise_std,
+                mean_cace
+            );
+            rows.push((
+                tta != TtaLevel::None,
+                v.test_set_std,
+                v.dist_wise_std,
+                mean_cace,
+            ));
+        }
+    }
+    // Pattern checks.
+    let dist_below = rows.iter().filter(|r| r.2 <= r.1).count();
+    let cace_no: f64 = rows.iter().filter(|r| !r.0).map(|r| r.3).sum::<f64>() / 3.0;
+    let cace_tta: f64 = rows.iter().filter(|r| r.0).map(|r| r.3).sum::<f64>() / 3.0;
+    println!(
+        "\npattern: dist-wise <= test-set std in {dist_below}/6 settings; \
+         mean CACE no-TTA {cace_no:.4} vs TTA {cace_tta:.4} (paper: TTA higher)"
+    );
+    Ok(())
+}

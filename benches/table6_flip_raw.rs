@@ -1,0 +1,57 @@
+//! Table 6 — raw accuracies of the flip-augmentation grid (paper App. D).
+//!
+//! The raw numbers behind Table 2 / Fig 5: mean accuracy per
+//! (epochs, cutout, TTA, flip option) cell, flip ∈ {none, random,
+//! alternating}. Paper pattern (every row): none < random < alternating,
+//! all row-wise gaps significant at n=400.
+
+use airbench::coordinator::{run_fleet, warmup};
+use airbench::data::augment::FlipMode;
+use airbench::experiments::{pct, DataKind, Lab};
+
+fn main() -> anyhow::Result<()> {
+    let mut lab = Lab::new()?;
+    let runs = lab.scale.runs;
+    let epochs = [2.0, 4.0];
+    let (train_ds, test_ds) = lab.data(DataKind::Cifar10);
+    let base = lab.base_config();
+    let engine = lab.engine(&base.variant)?;
+    warmup(engine, &train_ds, &base)?;
+
+    println!("== Table 6: raw flip-grid accuracies (n={runs}/cell) ==");
+    println!("epochs | cutout | TTA | none     | random   | alternating");
+    println!("-------+--------+-----+----------+----------+------------");
+    let mut rows_ok = 0;
+    let mut rows = 0;
+    for &e in &epochs {
+        for cutout in [0usize, 6] {
+            let mut cell = Vec::new(); // [(no_tta, tta); 3]
+            for flip in [FlipMode::None, FlipMode::Random, FlipMode::Alternating] {
+                let mut cfg = base.clone();
+                cfg.epochs = e;
+                cfg.cutout = cutout;
+                cfg.flip = flip;
+                let fleet = run_fleet(engine, &train_ds, &test_ds, &cfg, runs, None)?;
+                cell.push((fleet.summary_no_tta().mean, fleet.summary().mean));
+            }
+            for (tta, idx) in [("no", 0usize), ("yes", 1)] {
+                let vals: Vec<f64> = cell.iter().map(|c| if idx == 0 { c.0 } else { c.1 }).collect();
+                println!(
+                    "{:>6} | {:<6} | {:<3} | {:>8} | {:>8} | {:>8}",
+                    e,
+                    if cutout > 0 { "yes" } else { "no" },
+                    tta,
+                    pct(vals[0]),
+                    pct(vals[1]),
+                    pct(vals[2])
+                );
+                rows += 1;
+                if vals[2] >= vals[1] && vals[1] >= vals[0] {
+                    rows_ok += 1;
+                }
+            }
+        }
+    }
+    println!("\nmonotone none <= random <= alternating in {rows_ok}/{rows} rows (paper: all)");
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Flip-policy study (paper §5.2 in miniature).
+//!
+//! Trains fleets under the three flip options — none, random, alternating —
+//! at a sweep of epoch budgets, prints mean accuracy ± CI per cell (the
+//! Fig 5 series), and fits the §5.2 power law to the random-flip curve to
+//! report the effective speedup of alternating flip.
+//!
+//! ```bash
+//! cargo run --release --example flip_study -- [--runs 5] [--epochs 2,4,8]
+//! ```
+
+use anyhow::Result;
+
+use airbench::cli::Args;
+use airbench::config::TtaLevel;
+use airbench::coordinator::run_fleet;
+use airbench::data::augment::FlipMode;
+use airbench::experiments::{pct_ci, DataKind, Lab};
+use airbench::stats::{effective_speedup, Summary};
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let mut lab = Lab::new()?;
+    let runs = args.opt_usize("runs", lab.scale.runs)?;
+    let epochs: Vec<f64> = args
+        .opt("epochs", "2,4,8")
+        .split(',')
+        .map(|s| s.parse().expect("bad --epochs"))
+        .collect();
+
+    let (train_ds, test_ds) = lab.data(DataKind::Cifar10);
+    let mut cfg = lab.base_config();
+    cfg.tta = TtaLevel::None; // isolate the flip effect (paper: TTA shrinks it)
+    let engine = lab.engine(&cfg.variant)?;
+    airbench::coordinator::warmup(engine, &train_ds, &cfg)?;
+
+    println!("epochs | flip        | mean acc (95% CI)  | err");
+    println!("-------+-------------+--------------------+------");
+    let mut rand_curve: Vec<(f64, f64)> = Vec::new();
+    let mut alt_cells: Vec<(f64, f64)> = Vec::new();
+    for &e in &epochs {
+        for flip in [FlipMode::None, FlipMode::Random, FlipMode::Alternating] {
+            let mut c = cfg.clone();
+            c.epochs = e;
+            c.flip = flip;
+            let fleet = run_fleet(engine, &train_ds, &test_ds, &c, runs, None)?;
+            let s: Summary = fleet.summary();
+            println!(
+                "{e:>6} | {:<11} | {:>18} | {:.4}",
+                flip.name(),
+                pct_ci(s.mean, s.ci95()),
+                1.0 - s.mean
+            );
+            match flip {
+                FlipMode::Random => rand_curve.push((e, 1.0 - s.mean)),
+                FlipMode::Alternating => alt_cells.push((e, 1.0 - s.mean)),
+                _ => {}
+            }
+        }
+    }
+
+    // §5.2 effective speedups from the random-flip power law.
+    let (re, rr): (Vec<f64>, Vec<f64>) = rand_curve.iter().cloned().unzip();
+    println!("\neffective speedup of alternating over random flip (power-law fit):");
+    for (e, err) in &alt_cells {
+        match effective_speedup(&re, &rr, *e, *err) {
+            Some(s) => println!("  {e} epochs: {:+.1}%", 100.0 * s),
+            None => println!("  {e} epochs: beyond fitted asymptote (large)"),
+        }
+    }
+    Ok(())
+}

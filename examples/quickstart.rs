@@ -1,0 +1,67 @@
+//! Quickstart: the smallest complete airbench run.
+//!
+//! Loads the AOT artifacts, builds a CIFAR-like dataset (real CIFAR-10 if
+//! binaries are present under `data/`), trains the `bench` variant with
+//! every paper feature on (whitening + dirac init, alternating flip,
+//! 2-pixel translate, Lookahead, 6-view TTA), and prints the final
+//! accuracy and the paper-protocol wall time.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+
+use airbench::config::TrainConfig;
+use airbench::coordinator::{train, warmup};
+use airbench::experiments::{pct, DataKind, Lab};
+
+fn main() -> Result<()> {
+    let mut lab = Lab::new()?;
+    let (train_ds, test_ds) = lab.data(DataKind::Cifar10);
+    let mut cfg = TrainConfig::default();
+    cfg.epochs = lab.scale.epochs;
+    cfg.eval_every_epoch = true;
+
+    let engine = lab.engine(&cfg.variant)?;
+    println!(
+        "variant={} ({} params), compile {:.2}s, train n={}, test n={}",
+        cfg.variant,
+        engine.variant().param_count,
+        engine.stats.compile_secs,
+        train_ds.len(),
+        test_ds.len()
+    );
+
+    // Paper §2: a warmup run on dummy data is free — timing starts at
+    // first real-data access.
+    warmup(engine, &train_ds, &cfg)?;
+
+    let result = train(engine, &train_ds, &test_ds, &cfg)?;
+    for log in &result.epoch_log {
+        println!(
+            "epoch {:>2}  train_loss {:.4}  train_acc {}  val_acc {}",
+            log.epoch,
+            log.train_loss,
+            pct(log.train_acc),
+            log.val_acc.map(pct).unwrap_or_default()
+        );
+    }
+    println!(
+        "\nfinal: {} with TTA ({} without) in {:.2}s ({} steps, {:.2} GFLOP)",
+        pct(result.accuracy),
+        pct(result.accuracy_no_tta),
+        result.time_seconds,
+        result.steps_run,
+        result.flops as f64 / 1e9
+    );
+    println!(
+        "engine: exec {:.2}s, marshal {:.2}s over {} steps ({:.1} ms/step)",
+        engine.stats.train_exec_secs,
+        engine.stats.train_marshal_secs,
+        engine.stats.train_steps,
+        1e3 * (engine.stats.train_exec_secs + engine.stats.train_marshal_secs)
+            / engine.stats.train_steps.max(1) as f64
+    );
+    Ok(())
+}

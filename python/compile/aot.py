@@ -1,0 +1,193 @@
+"""AOT lowering: JAX model -> HLO TEXT artifacts + JSON manifest.
+
+This is the one-shot build step (``make artifacts``). Python never runs
+after this; the Rust coordinator loads the HLO text via
+``HloModuleProto::from_text_file`` and compiles it on the PJRT CPU client.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` crate) rejects (`proto.id() <=
+INT_MAX`); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:
+  python -m compile.aot --out ../artifacts \
+      [--variants bench,bench_noscalebias] [--batch-train 128]
+      [--batch-eval 500] [--tiny]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import matmul as kmm
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (return_tuple=True so
+    the Rust side unwraps one tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _abstract_state(cfg):
+    trainable, frozen, stats = model.split_specs(cfg)
+    f32 = lambda s: jax.ShapeDtypeStruct(tuple(s.shape), jnp.float32)
+    return trainable, frozen, stats, f32
+
+
+def lower_train(cfg, batch: int) -> str:
+    trainable, frozen, stats, f32 = _abstract_state(cfg)
+    args = (
+        [f32(s) for s in trainable]
+        + [f32(s) for s in trainable]  # momenta
+        + [f32(s) for s in frozen]
+        + [f32(s) for s in stats]
+        + [
+            jax.ShapeDtypeStruct((batch, 3, cfg.image_hw, cfg.image_hw), jnp.float32),
+            jax.ShapeDtypeStruct((batch,), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.float32),  # lr
+            jax.ShapeDtypeStruct((), jnp.float32),  # wd_over_lr
+            jax.ShapeDtypeStruct((), jnp.float32),  # whiten_bias_on
+        ]
+    )
+    return to_hlo_text(jax.jit(model.make_train_fn(cfg)).lower(*args))
+
+
+def lower_eval(cfg, batch: int) -> str:
+    trainable, frozen, stats, f32 = _abstract_state(cfg)
+    args = (
+        [f32(s) for s in trainable]
+        + [f32(s) for s in frozen]
+        + [f32(s) for s in stats]
+        + [jax.ShapeDtypeStruct((batch, 3, cfg.image_hw, cfg.image_hw), jnp.float32)]
+    )
+    return to_hlo_text(jax.jit(model.make_eval_fn(cfg)).lower(*args))
+
+
+def variant_manifest(cfg, batch_train, batch_eval, files):
+    trainable, frozen, stats = model.split_specs(cfg)
+
+    def spec_json(s):
+        return {
+            "name": s.name,
+            "shape": list(s.shape),
+            "role": s.role,
+            "group": s.group,
+        }
+
+    train_inputs = (
+        [s.name for s in trainable]
+        + [f"m_{s.name}" for s in trainable]
+        + [s.name for s in frozen]
+        + [s.name for s in stats]
+        + ["images", "labels", "lr", "wd_over_lr", "whiten_bias_on"]
+    )
+    train_outputs = (
+        [s.name for s in trainable]
+        + [f"m_{s.name}" for s in trainable]
+        + [s.name for s in stats]
+        + ["loss", "acc"]
+    )
+    eval_inputs = (
+        [s.name for s in trainable]
+        + [s.name for s in frozen]
+        + [s.name for s in stats]
+        + ["images"]
+    )
+    return {
+        "name": cfg.name,
+        "batch_train": batch_train,
+        "batch_eval": batch_eval,
+        "image_hw": cfg.image_hw,
+        "num_classes": cfg.num_classes,
+        "param_count": model.param_count(cfg),
+        "fwd_flops_per_example": model.fwd_flops_per_example(cfg),
+        "hyper": {
+            "widths": list(cfg.widths),
+            "convs_per_block": cfg.convs_per_block,
+            "residual": cfg.residual,
+            "whiten_kernel": cfg.whiten_kernel,
+            "whiten_width": cfg.whiten_width,
+            "scaling_factor": cfg.scaling_factor,
+            "bn_momentum": cfg.bn_momentum,
+            "bn_eps": cfg.bn_eps,
+            "momentum": cfg.momentum,
+            "bias_scaler": cfg.bias_scaler,
+            "label_smoothing": cfg.label_smoothing,
+        },
+        "tensors": [spec_json(s) for s in trainable + frozen + stats],
+        "train": {
+            "file": files["train"],
+            "inputs": train_inputs,
+            "outputs": train_outputs,
+        },
+        "eval": {"file": files["eval"], "inputs": eval_inputs, "outputs": ["logits"]},
+        "vmem_per_tile_bytes": kmm.vmem_bytes(),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default="bench,bench_noscalebias",
+        help="comma-separated variant names (see model.VARIANTS)",
+    )
+    ap.add_argument("--batch-train", type=int, default=128)
+    ap.add_argument("--batch-eval", type=int, default=500)
+    ap.add_argument(
+        "--tiny",
+        action="store_true",
+        help="also emit a batch-16 'tiny' pair of the first variant for fast tests",
+    )
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"format": 1, "variants": {}}
+    names = [v for v in args.variants.split(",") if v]
+    for name in names:
+        cfg = model.VARIANTS[name]
+        files = {"train": f"{name}_train.hlo.txt", "eval": f"{name}_eval.hlo.txt"}
+        print(f"[aot] lowering {name} train (batch={args.batch_train}) ...", flush=True)
+        with open(os.path.join(args.out, files["train"]), "w") as f:
+            f.write(lower_train(cfg, args.batch_train))
+        print(f"[aot] lowering {name} eval (batch={args.batch_eval}) ...", flush=True)
+        with open(os.path.join(args.out, files["eval"]), "w") as f:
+            f.write(lower_eval(cfg, args.batch_eval))
+        manifest["variants"][name] = variant_manifest(
+            cfg, args.batch_train, args.batch_eval, files
+        )
+
+    if args.tiny:
+        name = names[0]
+        cfg = model.VARIANTS[name]
+        files = {
+            "train": f"{name}_tiny_train.hlo.txt",
+            "eval": f"{name}_tiny_eval.hlo.txt",
+        }
+        print(f"[aot] lowering {name} tiny (batch=16/32) ...", flush=True)
+        with open(os.path.join(args.out, files["train"]), "w") as f:
+            f.write(lower_train(cfg, 16))
+        with open(os.path.join(args.out, files["eval"]), "w") as f:
+            f.write(lower_eval(cfg, 32))
+        manifest["variants"][f"{name}_tiny"] = variant_manifest(cfg, 16, 32, files)
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {mpath} ({len(manifest['variants'])} variants)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Convolution lowered onto the L1 Pallas matmul kernel (im2col + MXU).
+
+This is the DESIGN.md §7 hardware adaptation: the paper's cuDNN/tensor-core
+convs become, on TPU, one big matmul per layer — (N*OH*OW, C*KH*KW) patch
+matrix times (C*KH*KW, O) reshaped filters — feeding the 128x128 systolic
+array. The im2col gather itself is cheap strided slicing that XLA fuses;
+the FLOPs all land in ``matmul`` (kernels/matmul.py), whose custom_vjp makes
+the whole conv differentiable with fwd AND bwd on the kernel.
+"""
+
+import jax.numpy as jnp
+
+from . import matmul as mm
+
+
+def _im2col(x, kh, kw, padding):
+    """(N,C,H,W) -> (N*OH*OW, C*KH*KW) patch matrix, stride 1.
+
+    Column index = (c * kh + dy) * kw + dx; matches ref.im2col_ref.
+    Only KH*KW static slices are emitted (channels stay vectorized), so the
+    lowered HLO stays small even at airbench94/96 widths and XLA fuses the
+    gather into the matmul operand feed.
+    """
+    n, c, h, w = x.shape
+    if padding == "SAME":
+        ph, pw = (kh - 1) // 2, (kw - 1) // 2
+        ph2, pw2 = kh - 1 - ph, kw - 1 - pw
+        x = jnp.pad(x, ((0, 0), (0, 0), (ph, ph2), (pw, pw2)))
+    oh = x.shape[2] - kh + 1
+    ow = x.shape[3] - kw + 1
+    taps = []
+    for dy in range(kh):
+        for dx in range(kw):
+            # (N, C, OH, OW) window for this tap offset.
+            taps.append(x[:, :, dy : dy + oh, dx : dx + ow])
+    # (N, C, KH*KW, OH*OW): tap axis right after channels so that the
+    # flattened column order is (c * kh + dy) * kw + dx.
+    patches = jnp.stack(taps, axis=2).reshape(n, c, kh * kw, oh * ow)
+    patches = patches.transpose(0, 3, 1, 2)  # (N, OH*OW, C, KH*KW)
+    return patches.reshape(n * oh * ow, c * kh * kw), (oh, ow)
+
+
+def conv2d(x, w, *, padding="SAME"):
+    """NCHW conv, OIHW weights, stride 1, via im2col + Pallas matmul.
+
+    x: (N, C, H, W), w: (O, C, KH, KW) -> (N, O, OH, OW). Differentiable:
+    gradients flow through the matmul custom_vjp and the (linear) im2col.
+    """
+    n = x.shape[0]
+    o, c, kh, kw = w.shape
+    patches, (oh, ow) = _im2col(x, kh, kw, padding)
+    wmat = w.reshape(o, c * kh * kw).T  # (C*KH*KW, O); rows match col order
+    out = mm.matmul(patches, wmat)  # (N*OH*OW, O)
+    return out.reshape(n, oh, ow, o).transpose(0, 3, 1, 2)
+
+
+def linear(x, w):
+    """(N, F) @ (F, O) classifier head on the kernel."""
+    return mm.matmul(x, w)
+
+
+def conv_flops(n, c, h, w, o, kh, kw, padding="SAME"):
+    """Analytic MAC*2 count for one conv (used by Fig 3 FLOPs accounting)."""
+    if padding == "SAME":
+        oh, ow = h, w
+    else:
+        oh, ow = h - kh + 1, w - kw + 1
+    return 2 * n * o * oh * ow * c * kh * kw

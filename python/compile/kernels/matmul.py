@@ -1,0 +1,143 @@
+"""L1: tiled Pallas matmul kernel — the MXU hot path of the airbench stack.
+
+The paper's wall-clock speed on an A100 comes from tensor-core convolutions.
+The TPU rethink (DESIGN.md §7): every convolution in the network is lowered
+to im2col + THIS kernel, so the whole fwd/bwd FLOP volume flows through one
+tiled matmul that maps onto the 128x128 MXU systolic array.
+
+BlockSpec schedule
+------------------
+grid = (M/bm, N/bn, K/bk), k innermost. Each (i, j) output tile is revisited
+across the k-loop (k does not appear in the output index_map), so the tile
+acts as the accumulator while (bm x bk) and (bk x bn) input tiles stream
+HBM->VMEM — exactly the role threadblock shared-memory staging plays in the
+paper's CUDA world. Working set per step = bm*bk + bk*bn + bm*bn floats;
+with the default 128^3 tiles that is 192 KiB f32, small enough to
+triple-buffer in ~16 MiB of VMEM.
+
+``interpret=True`` is mandatory on this CPU image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Correctness is pinned
+against ``ref.matmul_ref`` by pytest + hypothesis.
+
+Autodiff: ``pallas_call`` has no autodiff rule, so ``matmul`` carries a
+``custom_vjp`` whose backward pass is two more calls of the same kernel
+(dx = g @ w^T, dw = x^T @ g) — fwd and bwd both exercise the MXU path.
+"""
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes, sized for the TPU MXU (128x128 systolic array).
+BM, BN, BK = 128, 128, 128
+
+# Tile profile. "tpu" tiles for the 16 MiB VMEM budget (128^3 f32 blocks,
+# triple-bufferable). "cpu" uses whole-problem tiles (one grid step): the
+# interpret-mode grid loop lowers to a sequential HLO while-loop that XLA
+# cannot fuse or parallelize, so on the CPU-PJRT testbed small tiles cost
+# ~100x wall clock for zero benefit (there is no VMEM to stay inside).
+# Measured in EXPERIMENTS.md §Perf: 1.80 s/step -> 0.02 s/step on the tiny
+# variant. Select with AIRBENCH_TILES=tpu|cpu at lowering time.
+import os
+
+TILE_PROFILE = os.environ.get("AIRBENCH_TILES", "cpu")
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One grid step: o_tile += x_tile @ w_tile (o_tile zeroed at k == 0)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pad_to(x, axis, mult):
+    rem = (-x.shape[axis]) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def matmul_pallas(x, w, *, bm: int = None, bn: int = None, bk: int = None):
+    """``x @ w`` via the tiled Pallas kernel. x: (M, K), w: (K, N) -> (M, N).
+
+    Shapes are padded up to tile multiples (zero padding is exact for
+    matmul) and the result sliced back, so arbitrary shapes are legal.
+    Tile sizes default per TILE_PROFILE; pass explicit bm/bn/bk to pin a
+    schedule (the tests exercise multi-step grids this way).
+    """
+    assert x.ndim == 2 and w.ndim == 2 and x.shape[1] == w.shape[0], (
+        x.shape,
+        w.shape,
+    )
+    m, k = x.shape
+    _, n = w.shape
+    if bm is None:
+        bm = BM if TILE_PROFILE == "tpu" else m
+    if bn is None:
+        bn = BN if TILE_PROFILE == "tpu" else n
+    if bk is None:
+        bk = BK if TILE_PROFILE == "tpu" else k
+    # Clamp tiles to the problem so tiny problems stay tiny.
+    bm_, bk_, bn_ = min(bm, m), min(bk, k), min(bn, n)
+    xp = _pad_to(_pad_to(x, 0, bm_), 1, bk_)
+    wp = _pad_to(_pad_to(w, 0, bk_), 1, bn_)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm_, np_ // bn_, kp // bk_),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,  # CPU image: Mosaic custom-calls cannot run here.
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x, w):
+    """Differentiable tiled matmul; fwd and bwd all run on the L1 kernel."""
+    return matmul_pallas(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul_pallas(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    dx = matmul_pallas(g, w.T)
+    dw = matmul_pallas(x.T, g)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_bytes(bm: int = BM, bn: int = BN, bk: int = BK, dtype_bytes: int = 4):
+    """Analytic VMEM working set per grid step (EXPERIMENTS.md §Perf)."""
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization_estimate(m, k, n, bm: int = BM, bn: int = BN, bk: int = BK):
+    """Fraction of MXU issue slots doing useful work = fill ratio of the
+    padded tile grid. 1.0 when every dim divides its tile."""
+    mp = math.ceil(m / min(bm, m)) * min(bm, m)
+    kp = math.ceil(k / min(bk, k)) * min(bk, k)
+    np_ = math.ceil(n / min(bn, n)) * min(bn, n)
+    return (m * k * n) / (mp * kp * np_)

@@ -1,0 +1,55 @@
+"""Pure-jnp correctness oracles for the L1 kernels.
+
+Everything here is straight-line jax.numpy (no Pallas, no custom_vjp) so it
+is trustworthy as a reference. pytest asserts kernel == ref to tight
+tolerances across shape/dtype sweeps (hypothesis).
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(x, w):
+    """Reference for kernels.matmul: plain (M,K)@(K,N)."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def conv2d_ref(x, w, *, padding="SAME"):
+    """Reference NCHW conv with OIHW weights, stride 1.
+
+    padding: "SAME" (paper's 3x3 convs) or "VALID" (whitening 2x2 conv).
+    """
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding=padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def im2col_ref(x, kh, kw, *, padding="SAME"):
+    """Reference im2col: returns (N*OH*OW, C*KH*KW) patch matrix.
+
+    Column ordering matches kernels.conv._im2col: column index =
+    (c * kh + dy) * kw + dx.
+    """
+    n, c, h, w_ = x.shape
+    if padding == "SAME":
+        ph, pw = (kh - 1) // 2, (kw - 1) // 2
+        ph2, pw2 = kh - 1 - ph, kw - 1 - pw
+        x = jnp.pad(x, ((0, 0), (0, 0), (ph, ph2), (pw, pw2)))
+    oh = x.shape[2] - kh + 1
+    ow = x.shape[3] - kw + 1
+    cols = []
+    for ci in range(c):
+        for dy in range(kh):
+            for dx in range(kw):
+                cols.append(x[:, ci, dy : dy + oh, dx : dx + ow].reshape(n, -1))
+    # list of (N, OH*OW) -> (N, OH*OW, C*KH*KW) -> (N*OH*OW, C*KH*KW)
+    return jnp.stack(cols, axis=-1).reshape(n * oh * ow, c * kh * kw)
+
+
+def gelu_ref(x):
+    """Exact GELU (paper uses torch.nn.GELU default, the erf form)."""
+    return 0.5 * x * (1.0 + lax.erf(x / jnp.sqrt(2.0).astype(x.dtype)))

@@ -1,0 +1,431 @@
+"""L2: the airbench model family in functional JAX (build-time only).
+
+Implements the paper's network (Appendix A / Listing 3-4) and its training
+semantics as pure functions over a flat, *named* list of state tensors, so
+the Rust coordinator can own every buffer:
+
+  train_step(trainable…, momenta…, frozen…, bn_stats…, images, labels,
+             lr, wd_over_lr, whiten_bias_on)
+      -> (trainable'…, momenta'…, bn_stats'…, loss, acc)
+
+  eval_step(trainable…, frozen…, bn_stats…, images) -> logits
+
+Faithful pieces (paper section in parens):
+  * whiten 2x2 conv, VALID, +learnable bias, frozen weights (§3.2);
+    the whitening/dirac *values* are host-side initialization (Rust).
+  * three ConvGroups of 3x3 SAME convs + 2x2 maxpool, BatchNorm with no
+    affine scale, eps=1e-12, running-stat momentum 0.6, GELU (§3.1, A).
+  * airbench96 adds a third conv per group and a residual across the later
+    two convs (§4); cutout is a host-side augmentation.
+  * head: maxpool3 -> flatten -> linear(widths[2] -> 10, no bias) × 1/9.
+  * loss: label-smoothed (0.2) cross entropy, SUM reduction (Listing 4).
+  * optimizer: Nesterov SGD, PyTorch update rule, with the 64× bias_scaler
+    LR group for BatchNorm biases and decoupled weight decay (§3.4): the
+    graph receives lr and wd_over_lr scalars each step from the Rust
+    schedule; the BN-bias group uses lr*bias_scaler and wd_over_lr/bias_scaler.
+  * whiten_bias_on scalar gates the whitening-bias gradient (trained for
+    the first 3 epochs, then frozen — §3.2); Rust flips it to 0.0.
+
+Every convolution (fwd and bwd) runs on the L1 Pallas kernel via
+kernels.conv.conv2d. Lookahead, LR schedule, TTA view generation and
+weighting, augmentation, and initialization are deliberately host-side: the
+paper itself keeps them outside the compiled step.
+"""
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv as kconv
+
+# ---------------------------------------------------------------------------
+# Variant configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class NetConfig:
+    """Architecture + baked training hyperparameters of one variant."""
+
+    name: str
+    widths: Tuple[int, int, int]
+    convs_per_block: int = 2  # airbench96 uses 3
+    residual: bool = False  # airbench96: skip across the later two convs
+    whiten_kernel: int = 2
+    whiten_width: int = 24  # 2 * 3 * k^2
+    image_hw: int = 32
+    num_classes: int = 10
+    scaling_factor: float = 1.0 / 9.0
+    bn_momentum: float = 0.6  # running = m*running + (1-m)*batch
+    bn_eps: float = 1e-12
+    momentum: float = 0.85  # Nesterov SGD
+    bias_scaler: float = 64.0
+    label_smoothing: float = 0.2
+
+    @property
+    def feat_hw(self) -> List[int]:
+        """Feature-map sizes after whiten conv then each pool (31,15,7,3)."""
+        hw = [self.image_hw - self.whiten_kernel + 1]
+        for _ in range(3):
+            hw.append(hw[-1] // 2)
+        return hw
+
+
+# Paper variants (§3, §4) plus a CPU-scale "bench" variant used by default
+# on this 1-core testbed (same topology, smaller widths).
+VARIANTS: Dict[str, NetConfig] = {
+    "bench": NetConfig(name="bench", widths=(16, 32, 32)),
+    "bench_wide": NetConfig(name="bench_wide", widths=(24, 48, 48)),
+    # Fig 4 "scalebias off" ablation: bias_scaler baked to 1.
+    "bench_noscalebias": NetConfig(
+        name="bench_noscalebias", widths=(16, 32, 32), bias_scaler=1.0
+    ),
+    # CPU-scale analogue of airbench96 (§4): third conv per block + residual
+    # across the later two convs.
+    "bench96": NetConfig(
+        name="bench96", widths=(16, 32, 32), convs_per_block=3, residual=True
+    ),
+    "airbench94": NetConfig(name="airbench94", widths=(64, 256, 256)),
+    "airbench95": NetConfig(name="airbench95", widths=(128, 384, 384)),
+    "airbench96": NetConfig(
+        name="airbench96",
+        widths=(128, 512, 512),
+        convs_per_block=3,
+        residual=True,
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# State layout
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TensorSpec:
+    name: str
+    shape: Tuple[int, ...]
+    role: str  # "trainable" | "frozen" | "bn_stat"
+    group: str  # "bias" (BN biases, 64x lr) | "other" | "stat"
+
+
+def state_specs(cfg: NetConfig) -> List[TensorSpec]:
+    """Flat, ordered layout of every state tensor. The order here IS the
+    wire format between Rust and the compiled step (recorded in the
+    manifest): trainables first, then frozen, then BN stats."""
+    k = cfg.whiten_kernel
+    train: List[TensorSpec] = [
+        TensorSpec("whiten_b", (cfg.whiten_width,), "trainable", "other")
+    ]
+    stats: List[TensorSpec] = []
+    c_in = cfg.whiten_width
+    for b, width in enumerate(cfg.widths, start=1):
+        for j in range(1, cfg.convs_per_block + 1):
+            cin = c_in if j == 1 else width
+            train.append(
+                TensorSpec(
+                    f"block{b}_conv{j}_w", (width, cin, 3, 3), "trainable", "other"
+                )
+            )
+            train.append(
+                TensorSpec(f"block{b}_bn{j}_b", (width,), "trainable", "bias")
+            )
+            stats.append(
+                TensorSpec(f"block{b}_bn{j}_mean", (width,), "bn_stat", "stat")
+            )
+            stats.append(
+                TensorSpec(f"block{b}_bn{j}_var", (width,), "bn_stat", "stat")
+            )
+        c_in = width
+    train.append(
+        TensorSpec("head_w", (cfg.widths[2], cfg.num_classes), "trainable", "other")
+    )
+    frozen = [TensorSpec("whiten_w", (cfg.whiten_width, 3, k, k), "frozen", "other")]
+    return train + frozen + stats
+
+
+def split_specs(cfg: NetConfig):
+    specs = state_specs(cfg)
+    trainable = [s for s in specs if s.role == "trainable"]
+    frozen = [s for s in specs if s.role == "frozen"]
+    stats = [s for s in specs if s.role == "bn_stat"]
+    return trainable, frozen, stats
+
+
+def param_count(cfg: NetConfig) -> int:
+    n = 0
+    for s in state_specs(cfg):
+        if s.role != "bn_stat":
+            size = 1
+            for d in s.shape:
+                size *= d
+            n += size
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Initialization (reference implementation; Rust re-implements host-side)
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg: NetConfig, key, dirac: bool = True) -> Dict[str, jnp.ndarray]:
+    """PyTorch-default conv init (U(±1/sqrt(fan_in))) with the paper's dirac
+    overlay (§3.3). Whitening weights start as placeholder normals here;
+    real runs overwrite them host-side from data statistics (§3.2)."""
+    st: Dict[str, jnp.ndarray] = {}
+    for s in state_specs(cfg):
+        key, sub = jax.random.split(key)
+        if s.role == "bn_stat":
+            st[s.name] = (
+                jnp.zeros(s.shape, jnp.float32)
+                if s.name.endswith("_mean")
+                else jnp.ones(s.shape, jnp.float32)
+            )
+        elif s.name.endswith("_b"):  # whiten bias + BN biases start at zero
+            st[s.name] = jnp.zeros(s.shape, jnp.float32)
+        elif len(s.shape) == 4:  # conv weight
+            o, i, kh, kw = s.shape
+            bound = 1.0 / jnp.sqrt(i * kh * kw)
+            w = jax.random.uniform(sub, s.shape, jnp.float32, -bound, bound)
+            if dirac and s.name != "whiten_w" and o >= i and kh == 3:
+                # dirac_(w[:i]): first `i` filters = identity of the input.
+                eye = jnp.zeros((i, i, kh, kw), jnp.float32)
+                eye = eye.at[
+                    jnp.arange(i), jnp.arange(i), kh // 2, kw // 2
+                ].set(1.0)
+                w = w.at[:i].set(eye)
+            st[s.name] = w
+        else:  # linear head
+            bound = 1.0 / jnp.sqrt(s.shape[0])
+            st[s.name] = jax.random.uniform(
+                sub, s.shape, jnp.float32, -bound, bound
+            )
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _gelu(x):
+    return jax.nn.gelu(x, approximate=False)
+
+
+def _maxpool(x, k):
+    """k x k max pool, stride k, NCHW (floor mode like nn.MaxPool2d)."""
+    n, c, h, w = x.shape
+    oh, ow = h // k, w // k
+    x = x[:, :, : oh * k, : ow * k]
+    x = x.reshape(n, c, oh, k, ow, k)
+    return x.max(axis=(3, 5))
+
+
+def _bn_train(x, bias, mean_run, var_run, cfg: NetConfig):
+    """BatchNorm without affine scale; returns output + updated stats.
+
+    PyTorch semantics: normalize by *biased* batch var; the running var
+    update uses the *unbiased* estimate; running = m*running + (1-m)*batch
+    with m = cfg.bn_momentum (the paper passes momentum=1-0.6 to PyTorch)."""
+    n, _, h, w = x.shape
+    cnt = n * h * w
+    mu = x.mean(axis=(0, 2, 3))
+    var = ((x - mu[None, :, None, None]) ** 2).mean(axis=(0, 2, 3))
+    var_unbiased = var * (cnt / max(cnt - 1, 1))
+    xhat = (x - mu[None, :, None, None]) * jax.lax.rsqrt(
+        var[None, :, None, None] + cfg.bn_eps
+    )
+    out = xhat + bias[None, :, None, None]
+    m = cfg.bn_momentum
+    new_mean = m * mean_run + (1.0 - m) * mu
+    new_var = m * var_run + (1.0 - m) * var_unbiased
+    return out, new_mean, new_var
+
+
+def _bn_eval(x, bias, mean_run, var_run, cfg: NetConfig):
+    xhat = (x - mean_run[None, :, None, None]) * jax.lax.rsqrt(
+        var_run[None, :, None, None] + cfg.bn_eps
+    )
+    return xhat + bias[None, :, None, None]
+
+
+def forward(cfg: NetConfig, st: Dict[str, jnp.ndarray], images, *, train: bool):
+    """Full network forward. Returns (logits, new_bn_stats dict)."""
+    new_stats: Dict[str, jnp.ndarray] = {}
+    x = kconv.conv2d(images, st["whiten_w"], padding="VALID")
+    x = x + st["whiten_b"][None, :, None, None]
+    x = _gelu(x)
+    for b in range(1, 4):
+        skip = None
+        for j in range(1, cfg.convs_per_block + 1):
+            x = kconv.conv2d(x, st[f"block{b}_conv{j}_w"], padding="SAME")
+            if j == 1:
+                x = _maxpool(x, 2)
+            mean_k, var_k = f"block{b}_bn{j}_mean", f"block{b}_bn{j}_var"
+            if train:
+                x, nm, nv = _bn_train(
+                    x, st[f"block{b}_bn{j}_b"], st[mean_k], st[var_k], cfg
+                )
+                new_stats[mean_k], new_stats[var_k] = nm, nv
+            else:
+                x = _bn_eval(x, st[f"block{b}_bn{j}_b"], st[mean_k], st[var_k], cfg)
+            x = _gelu(x)
+            if cfg.residual and j == 1:
+                skip = x  # input of the later two convs (§4)
+        if cfg.residual and skip is not None:
+            x = x + skip
+    x = _maxpool(x, 3)
+    x = x.reshape(x.shape[0], -1)
+    logits = kconv.linear(x, st["head_w"]) * cfg.scaling_factor
+    return logits, new_stats
+
+
+# ---------------------------------------------------------------------------
+# Loss / accuracy
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(cfg: NetConfig, logits, labels):
+    """Label-smoothed cross entropy with SUM reduction (Listing 4)."""
+    ls = cfg.label_smoothing
+    k = cfg.num_classes
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, k, dtype=logits.dtype)
+    target = (1.0 - ls) * onehot + ls / k
+    return -(target * logp).sum()
+
+
+def accuracy(logits, labels):
+    return (logits.argmax(axis=-1) == labels).astype(jnp.float32).mean()
+
+
+# ---------------------------------------------------------------------------
+# Train step (Nesterov SGD, PyTorch rule, decoupled lr/wd, bias_scaler)
+# ---------------------------------------------------------------------------
+
+
+def train_step(cfg: NetConfig, st, momenta, images, labels, lr, wd_over_lr, wb_on):
+    """One optimizer step. ``st`` holds ALL state (trainable+frozen+stats);
+    ``momenta`` maps trainable name -> buffer. Returns (st', momenta',
+    loss, acc)."""
+    trainable, _, _ = split_specs(cfg)
+    tnames = [s.name for s in trainable]
+
+    def compute_loss(tparams):
+        full = dict(st)
+        full.update(tparams)
+        logits, new_stats = forward(cfg, full, images, train=True)
+        return loss_fn(cfg, logits, labels), (logits, new_stats)
+
+    tparams = {n: st[n] for n in tnames}
+    (loss, (logits, new_stats)), grads = jax.value_and_grad(
+        compute_loss, has_aux=True
+    )(tparams)
+
+    # §3.2: whitening bias trains only while wb_on == 1.0.
+    grads["whiten_b"] = grads["whiten_b"] * wb_on
+
+    groups = {s.name: s.group for s in trainable}
+    new_st = dict(st)
+    new_st.update(new_stats)
+    new_momenta = {}
+    mu = cfg.momentum
+    for n in tnames:
+        p, g, buf = st[n], grads[n], momenta[n]
+        if groups[n] == "bias":
+            lr_eff = lr * cfg.bias_scaler
+            wd_eff = wd_over_lr / cfg.bias_scaler
+        else:
+            lr_eff = lr
+            wd_eff = wd_over_lr
+        g = g + wd_eff * p  # PyTorch couples wd into the gradient
+        buf = mu * buf + g
+        g = g + mu * buf  # Nesterov
+        new_st[n] = p - lr_eff * g
+        new_momenta[n] = buf
+    acc = accuracy(logits, labels)
+    return new_st, new_momenta, loss, acc
+
+
+def eval_step(cfg: NetConfig, st, images):
+    logits, _ = forward(cfg, st, images, train=False)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Flat wire-format wrappers (what aot.py lowers)
+# ---------------------------------------------------------------------------
+
+
+def make_train_fn(cfg: NetConfig):
+    """Returns fn(*flat_args) -> flat tuple, in manifest order."""
+    trainable, frozen, stats = split_specs(cfg)
+
+    def fn(*args):
+        i = 0
+        st = {}
+        for s in trainable:
+            st[s.name] = args[i]
+            i += 1
+        momenta = {}
+        for s in trainable:
+            momenta[s.name] = args[i]
+            i += 1
+        for s in frozen:
+            st[s.name] = args[i]
+            i += 1
+        for s in stats:
+            st[s.name] = args[i]
+            i += 1
+        images, labels, lr, wd_over_lr, wb_on = args[i : i + 5]
+        new_st, new_m, loss, acc = train_step(
+            cfg, st, momenta, images, labels, lr, wd_over_lr, wb_on
+        )
+        out = [new_st[s.name] for s in trainable]
+        out += [new_m[s.name] for s in trainable]
+        out += [new_st[s.name] for s in stats]
+        out += [loss, acc]
+        return tuple(out)
+
+    return fn
+
+
+def make_eval_fn(cfg: NetConfig):
+    trainable, frozen, stats = split_specs(cfg)
+
+    def fn(*args):
+        i = 0
+        st = {}
+        for s in trainable + frozen + stats:
+            st[s.name] = args[i]
+            i += 1
+        images = args[i]
+        return (eval_step(cfg, st, images),)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# FLOPs accounting (Fig 3)
+# ---------------------------------------------------------------------------
+
+
+def fwd_flops_per_example(cfg: NetConfig) -> int:
+    """Analytic fwd FLOPs (2*MAC) per example; a training step ≈ 3x fwd."""
+    hw = cfg.feat_hw  # e.g. [31, 15, 7, 3]
+    f = kconv.conv_flops(
+        1, 3, cfg.image_hw, cfg.image_hw, cfg.whiten_width,
+        cfg.whiten_kernel, cfg.whiten_kernel, padding="VALID",
+    )
+    c_in = cfg.whiten_width
+    for b, width in enumerate(cfg.widths):
+        h_pre = hw[b]  # conv1 runs at pre-pool resolution
+        h_post = hw[b + 1]
+        f += kconv.conv_flops(1, c_in, h_pre, h_pre, width, 3, 3)
+        for _ in range(cfg.convs_per_block - 1):
+            f += kconv.conv_flops(1, width, h_post, h_post, width, 3, 3)
+        c_in = width
+    f += 2 * cfg.widths[2] * cfg.num_classes
+    return f

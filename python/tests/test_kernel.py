@@ -1,0 +1,185 @@
+"""L1 kernel vs pure-jnp oracle — the core correctness signal.
+
+hypothesis sweeps shapes/dtypes of the Pallas matmul and the im2col conv
+against ref.py; explicit cases pin the network's actual shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv as kconv
+from compile.kernels import matmul as mm
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_shape_sweep(m, k, n, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    np.testing.assert_allclose(
+        mm.matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),
+        (128, 128, 128),  # exactly one tile
+        (129, 127, 130),  # just over/under tile boundaries
+        (256, 384, 512),  # multi-tile grid
+        (64 * 961, 12, 16),  # whiten conv shape (batch 64)
+    ],
+)
+def test_matmul_tile_boundaries(m, k, n):
+    x = _rand(0, (m, k))
+    w = _rand(1, (k, n))
+    np.testing.assert_allclose(
+        mm.matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bm=st.sampled_from([8, 32, 128]),
+    bn=st.sampled_from([8, 32, 128]),
+    bk=st.sampled_from([8, 32, 128]),
+)
+def test_matmul_tile_size_invariance(bm, bn, bk):
+    """Result must be independent of the BlockSpec tiling."""
+    x = _rand(2, (70, 90))
+    w = _rand(3, (90, 50))
+    np.testing.assert_allclose(
+        mm.matmul_pallas(x, w, bm=bm, bn=bn, bk=bk),
+        ref.matmul_ref(x, w),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_matmul_dtype_bf16():
+    x = _rand(4, (33, 65), jnp.bfloat16)
+    w = _rand(5, (65, 17), jnp.bfloat16)
+    got = mm.matmul(x, w).astype(jnp.float32)
+    want = ref.matmul_ref(x, w).astype(jnp.float32)
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 60), k=st.integers(1, 60), n=st.integers(1, 60))
+def test_matmul_vjp_matches_ref(m, k, n):
+    x = _rand(6, (m, k))
+    w = _rand(7, (k, n))
+    g = _rand(8, (m, n))
+    f_ker = lambda x, w: (mm.matmul(x, w) * g).sum()
+    f_ref = lambda x, w: (ref.matmul_ref(x, w) * g).sum()
+    gx1, gw1 = jax.grad(f_ker, argnums=(0, 1))(x, w)
+    gx2, gw2 = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx1, gx2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gw1, gw2, rtol=1e-4, atol=1e-4)
+
+
+def test_mxu_utilization_estimate():
+    assert mm.mxu_utilization_estimate(128, 128, 128) == 1.0
+    assert 0 < mm.mxu_utilization_estimate(129, 128, 128) < 1.0
+
+
+def test_vmem_budget():
+    # Default tiles must fit comfortably in a 16 MiB VMEM budget.
+    assert mm.vmem_bytes() < 16 * 1024 * 1024 // 8
+
+
+# ---------------------------------------------------------------------------
+# im2col + conv
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 4),
+    c=st.integers(1, 8),
+    h=st.integers(3, 16),
+    o=st.integers(1, 8),
+    pad=st.sampled_from(["SAME", "VALID"]),
+)
+def test_conv_matches_lax_sweep(n, c, h, o, pad):
+    x = _rand(9, (n, c, h, h))
+    w = _rand(10, (o, c, 3, 3))
+    np.testing.assert_allclose(
+        kconv.conv2d(x, w, padding=pad),
+        ref.conv2d_ref(x, w, padding=pad),
+        rtol=1e-3,
+        atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_conv_kernel_sizes(k):
+    x = _rand(11, (2, 3, 9, 9))
+    w = _rand(12, (5, 3, k, k))
+    np.testing.assert_allclose(
+        kconv.conv2d(x, w, padding="VALID"),
+        ref.conv2d_ref(x, w, padding="VALID"),
+        rtol=1e-3,
+        atol=1e-4,
+    )
+
+
+def test_whitening_conv_shape():
+    """The paper's first layer: 2x2 VALID, 3->24 ch, 32x32 -> 31x31."""
+    x = _rand(13, (4, 3, 32, 32))
+    w = _rand(14, (24, 3, 2, 2))
+    out = kconv.conv2d(x, w, padding="VALID")
+    assert out.shape == (4, 24, 31, 31)
+    np.testing.assert_allclose(
+        out, ref.conv2d_ref(x, w, padding="VALID"), rtol=1e-3, atol=1e-4
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    c=st.integers(1, 6),
+    h=st.integers(3, 10),
+    kh=st.integers(1, 3),
+)
+def test_im2col_matches_ref(c, h, kh):
+    x = _rand(15, (2, c, h, h))
+    got, _ = kconv._im2col(x, kh, kh, "SAME")
+    want = ref.im2col_ref(x, kh, kh, padding="SAME")
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_conv_grad_matches_lax():
+    x = _rand(16, (2, 4, 8, 8))
+    w = _rand(17, (6, 4, 3, 3))
+    f1 = lambda x, w: (kconv.conv2d(x, w) ** 2).sum()
+    f2 = lambda x, w: (ref.conv2d_ref(x, w) ** 2).sum()
+    g1 = jax.grad(f1, argnums=(0, 1))(x, w)
+    g2 = jax.grad(f2, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(g1[0], g2[0], rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(g1[1], g2[1], rtol=1e-3, atol=1e-3)
+
+
+def test_conv_flops():
+    # 3x3 SAME conv on 32x32, 3->64: 2*64*32*32*3*9 per example.
+    assert kconv.conv_flops(1, 3, 32, 32, 64, 3, 3) == 2 * 64 * 32 * 32 * 3 * 9

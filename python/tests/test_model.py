@@ -1,0 +1,262 @@
+"""L2 model semantics: shapes, BN behaviour, optimizer rule, loss, variants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(name="bench", batch=8):
+    cfg = model.VARIANTS[name]
+    st = model.init_state(cfg, KEY)
+    imgs = jax.random.normal(KEY, (batch, 3, cfg.image_hw, cfg.image_hw))
+    labels = jnp.arange(batch) % cfg.num_classes
+    return cfg, st, imgs, labels
+
+
+# ---------------------------------------------------------------------------
+# Architecture / shapes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["bench", "bench_wide", "airbench96"])
+def test_forward_shapes(name):
+    cfg, st, imgs, _ = _setup(name, batch=4)
+    logits, stats = model.forward(cfg, st, imgs, train=True)
+    assert logits.shape == (4, 10)
+    assert len(stats) == 2 * 3 * cfg.convs_per_block
+
+
+def test_feature_map_ladder():
+    """Paper §3.1: 31x31 -> 15x15 -> 7x7 -> 3x3 (not 32/16/8/4)."""
+    cfg = model.VARIANTS["bench"]
+    assert cfg.feat_hw == [31, 15, 7, 3]
+
+
+def test_param_count_airbench94():
+    """Paper §3.1: ~1.97M parameters for airbench94."""
+    n = model.param_count(model.VARIANTS["airbench94"])
+    assert 1.90e6 < n < 2.05e6, n
+
+
+def test_state_specs_order_stable():
+    cfg = model.VARIANTS["bench"]
+    names = [s.name for s in model.state_specs(cfg)]
+    assert names[0] == "whiten_b"
+    assert names[-1] == "block3_bn2_var"
+    assert "whiten_w" in names and "head_w" in names
+    # trainables before frozen before stats
+    roles = [s.role for s in model.state_specs(cfg)]
+    assert roles == sorted(roles, key=["trainable", "frozen", "bn_stat"].index)
+
+
+def test_dirac_init_is_partial_identity():
+    cfg, st, _, _ = _setup()
+    w = st["block1_conv2_w"]  # (32, 32, 3, 3) square conv -> full identity
+    i = w.shape[1]
+    eye = np.zeros((i, i, 3, 3), np.float32)
+    eye[np.arange(i), np.arange(i), 1, 1] = 1.0
+    np.testing.assert_allclose(w[:i], eye)
+
+
+def test_maxpool_floor_mode():
+    x = jnp.arange(2 * 1 * 5 * 5, dtype=jnp.float32).reshape(2, 1, 5, 5)
+    out = model._maxpool(x, 2)
+    assert out.shape == (2, 1, 2, 2)
+    assert float(out[0, 0, 0, 0]) == 6.0  # max of [[0,1],[5,6]]
+
+
+# ---------------------------------------------------------------------------
+# BatchNorm
+# ---------------------------------------------------------------------------
+
+
+def test_bn_train_normalizes():
+    cfg = model.VARIANTS["bench"]
+    x = jax.random.normal(KEY, (16, 4, 6, 6)) * 3.0 + 5.0
+    bias = jnp.zeros(4)
+    out, nm, nv = model._bn_train(x, bias, jnp.zeros(4), jnp.ones(4), cfg)
+    np.testing.assert_allclose(out.mean(axis=(0, 2, 3)), 0.0, atol=1e-4)
+    np.testing.assert_allclose(out.std(axis=(0, 2, 3)), 1.0, atol=1e-2)
+    # running stats moved toward batch stats with momentum 0.6
+    np.testing.assert_allclose(nm, 0.4 * x.mean(axis=(0, 2, 3)), rtol=1e-4)
+
+
+def test_bn_eval_uses_running_stats():
+    cfg = model.VARIANTS["bench"]
+    x = jax.random.normal(KEY, (4, 2, 3, 3))
+    mean = jnp.array([1.0, -1.0])
+    var = jnp.array([4.0, 0.25])
+    bias = jnp.array([0.5, 0.0])
+    out = model._bn_eval(x, bias, mean, var, cfg)
+    want = (x - mean[None, :, None, None]) / jnp.sqrt(
+        var[None, :, None, None] + cfg.bn_eps
+    ) + bias[None, :, None, None]
+    np.testing.assert_allclose(out, want, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def test_loss_label_smoothing_sum_reduction():
+    cfg = model.VARIANTS["bench"]
+    logits = jnp.zeros((4, 10))
+    labels = jnp.zeros(4, jnp.int32)
+    # Uniform logits: CE = log(10) per example regardless of smoothing.
+    loss = model.loss_fn(cfg, logits, labels)
+    np.testing.assert_allclose(float(loss), 4 * np.log(10.0), rtol=1e-5)
+
+
+def test_loss_decreases_with_correct_logits():
+    cfg = model.VARIANTS["bench"]
+    labels = jnp.arange(4) % 10
+    good = 5.0 * jax.nn.one_hot(labels, 10)
+    bad = -good
+    assert float(model.loss_fn(cfg, good, labels)) < float(
+        model.loss_fn(cfg, bad, labels)
+    )
+
+
+def test_accuracy():
+    logits = jnp.array([[1.0, 0.0], [0.0, 1.0], [1.0, 0.0]])
+    labels = jnp.array([0, 1, 1])
+    np.testing.assert_allclose(float(model.accuracy(logits, labels)), 2 / 3)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer semantics
+# ---------------------------------------------------------------------------
+
+
+def test_train_step_updates_only_trainables():
+    cfg, st, imgs, labels = _setup()
+    momenta = {s.name: jnp.zeros(s.shape) for s in model.split_specs(cfg)[0]}
+    new_st, _, loss, _ = model.train_step(
+        cfg, st, momenta, imgs, labels, jnp.float32(0.01), jnp.float32(1e-3),
+        jnp.float32(1.0),
+    )
+    assert np.isfinite(float(loss))
+    # frozen whitening weights untouched
+    np.testing.assert_array_equal(new_st["whiten_w"], st["whiten_w"])
+    # trainables moved
+    assert not np.allclose(new_st["head_w"], st["head_w"])
+
+
+def test_whiten_bias_gate():
+    cfg, st, imgs, labels = _setup()
+    momenta = {s.name: jnp.zeros(s.shape) for s in model.split_specs(cfg)[0]}
+    new_st, _, _, _ = model.train_step(
+        cfg, st, momenta, imgs, labels, jnp.float32(0.01), jnp.float32(0.0),
+        jnp.float32(0.0),
+    )
+    # gate=0 and wd=0: whiten bias must not move
+    np.testing.assert_array_equal(new_st["whiten_b"], st["whiten_b"])
+
+
+def test_nesterov_matches_pytorch_rule():
+    """Single-scalar check of the PyTorch SGD(nesterov) recurrence."""
+    mu, lr, wd = 0.85, 0.1, 0.0
+    p, buf = 1.0, 0.0
+    g = 2.0 * p  # d(p^2)/dp
+    # our rule
+    gg = g + wd * p
+    buf = mu * buf + gg
+    step = gg + mu * buf
+    want = p - lr * step
+    # hand PyTorch: buf=g (first step), update = g + mu*buf
+    buf_t = gg
+    upd = gg + mu * buf_t
+    want_t = p - lr * upd
+    np.testing.assert_allclose(want, want_t)
+
+
+def test_bias_scaler_applies_64x():
+    """BN biases must move ~bias_scaler times more than an equivalent
+    gradient on 'other' params (verified via two variants)."""
+    cfg = model.VARIANTS["bench"]
+    cfg_ns = model.VARIANTS["bench_noscalebias"]
+    st = model.init_state(cfg, KEY)
+    imgs = jax.random.normal(KEY, (8, 3, 32, 32))
+    labels = jnp.arange(8) % 10
+    momenta = {s.name: jnp.zeros(s.shape) for s in model.split_specs(cfg)[0]}
+    kw = dict(lr=jnp.float32(1e-4), wd_over_lr=jnp.float32(0.0), wb_on=jnp.float32(1.0))
+    a, _, _, _ = model.train_step(cfg, st, momenta, imgs, labels, kw["lr"], kw["wd_over_lr"], kw["wb_on"])
+    b, _, _, _ = model.train_step(cfg_ns, st, momenta, imgs, labels, kw["lr"], kw["wd_over_lr"], kw["wb_on"])
+    da = np.abs(np.asarray(a["block1_bn1_b"] - st["block1_bn1_b"])).mean()
+    db = np.abs(np.asarray(b["block1_bn1_b"] - st["block1_bn1_b"])).mean()
+    np.testing.assert_allclose(da / db, 64.0, rtol=1e-3)
+
+
+def test_loss_decreases_over_steps():
+    """A few steps on a fixed batch must reduce the loss (learnability)."""
+    cfg, st, imgs, labels = _setup(batch=16)
+    momenta = {s.name: jnp.zeros(s.shape) for s in model.split_specs(cfg)[0]}
+    losses = []
+    for _ in range(5):
+        st, momenta, loss, _ = model.train_step(
+            cfg, st, momenta, imgs, labels, jnp.float32(2e-3),
+            jnp.float32(0.0), jnp.float32(1.0),
+        )
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+# ---------------------------------------------------------------------------
+# Flat wire format
+# ---------------------------------------------------------------------------
+
+
+def test_flat_train_fn_round_trip():
+    cfg, st, imgs, labels = _setup()
+    trainable, frozen, stats = model.split_specs(cfg)
+    momenta = {s.name: jnp.zeros(s.shape) for s in trainable}
+    flat_in = (
+        [st[s.name] for s in trainable]
+        + [momenta[s.name] for s in trainable]
+        + [st[s.name] for s in frozen]
+        + [st[s.name] for s in stats]
+        + [imgs, labels, jnp.float32(0.01), jnp.float32(1e-3), jnp.float32(1.0)]
+    )
+    out = model.make_train_fn(cfg)(*flat_in)
+    assert len(out) == 2 * len(trainable) + len(stats) + 2
+    new_st, new_m, loss, acc = model.train_step(
+        cfg, st, momenta, imgs, labels, jnp.float32(0.01), jnp.float32(1e-3),
+        jnp.float32(1.0),
+    )
+    np.testing.assert_allclose(out[0], new_st["whiten_b"], rtol=1e-6)
+    np.testing.assert_allclose(float(out[-2]), float(loss), rtol=1e-6)
+
+
+def test_flat_eval_fn():
+    cfg, st, imgs, _ = _setup()
+    trainable, frozen, stats = model.split_specs(cfg)
+    flat_in = [st[s.name] for s in trainable + frozen + stats] + [imgs]
+    (logits,) = model.make_eval_fn(cfg)(*flat_in)
+    want = model.eval_step(cfg, st, imgs)
+    np.testing.assert_allclose(logits, want, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# FLOPs (Fig 3 accounting)
+# ---------------------------------------------------------------------------
+
+
+def test_flops_ordering():
+    f94 = model.fwd_flops_per_example(model.VARIANTS["airbench94"])
+    f95 = model.fwd_flops_per_example(model.VARIANTS["airbench95"])
+    f96 = model.fwd_flops_per_example(model.VARIANTS["airbench96"])
+    assert f94 < f95 < f96
+
+
+def test_flops_magnitude_airbench94():
+    """Paper: 3.6e14 total / (9.9 epochs * 50k examples * 3x fwd-bwd)
+    ≈ 2.4e8 fwd FLOPs per example — ours must be the same order."""
+    f = model.fwd_flops_per_example(model.VARIANTS["airbench94"])
+    assert 1e8 < f < 1e9, f

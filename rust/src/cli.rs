@@ -1,0 +1,184 @@
+//! Minimal CLI argument parser (clap is not vendored on this image).
+//!
+//! Grammar: `airbench <command> [--flag] [--key value] [--key=value]
+//! [key=value ...]`. Bare `key=value` positionals are config overrides
+//! passed to `TrainConfig::set`, mirroring the launcher style of large
+//! training frameworks.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// First non-flag token (subcommand), if any.
+    pub command: Option<String>,
+    /// `--key value` / `--key=value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `key=value` config overrides, in order.
+    pub overrides: Vec<(String, String)>,
+    /// Bare positionals that are not overrides.
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(flag) = tok.strip_prefix("--") {
+                if flag.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if let Some((k, v)) = flag.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` if the next token isn't another flag,
+                    // else a boolean `--key`.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") && !next.contains('=') => {
+                            let v = it.next().unwrap();
+                            args.options.insert(flag.to_string(), v);
+                        }
+                        _ => {
+                            args.options.insert(flag.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else if let Some((k, v)) = tok.split_once('=') {
+                args.overrides.push((k.to_string(), v.to_string()));
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positionals.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Option value with default.
+    pub fn opt(&self, key: &str, default: &str) -> String {
+        self.options
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Typed option accessors.
+    pub fn opt_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn opt_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.options.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("train --runs 5 --variant=bench epochs=3.5 flip=random");
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.opt("runs", "1"), "5");
+        assert_eq!(a.opt("variant", "x"), "bench");
+        assert_eq!(
+            a.overrides,
+            vec![
+                ("epochs".to_string(), "3.5".to_string()),
+                ("flip".to_string(), "random".to_string())
+            ]
+        );
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse("bench --quiet --n 3");
+        assert!(a.flag("quiet"));
+        assert!(!a.flag("verbose"));
+        assert_eq!(a.opt_usize("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let a = parse("run --fast --seed 7");
+        assert!(a.flag("fast"));
+        assert_eq!(a.opt_u64("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn typed_accessor_errors() {
+        let a = parse("x --n abc");
+        assert!(a.opt_usize("n", 0).is_err());
+        assert_eq!(a.opt_usize("m", 9).unwrap(), 9);
+    }
+
+    #[test]
+    fn positionals_after_command() {
+        let a = parse("report out.json extra");
+        assert_eq!(a.command.as_deref(), Some("report"));
+        assert_eq!(a.positionals, vec!["out.json", "extra"]);
+    }
+
+    #[test]
+    fn parser_never_panics_on_random_tokens() {
+        use crate::rng::Rng;
+        crate::util::proptest::check(
+            "cli_no_panic",
+            200,
+            |rng: &mut Rng| {
+                let n = rng.below(6);
+                (0..n)
+                    .map(|_| {
+                        let len = 1 + rng.below(8);
+                        (0..len)
+                            .map(|_| char::from_u32(33 + rng.below(90) as u32).unwrap())
+                            .collect::<String>()
+                    })
+                    .collect::<Vec<String>>()
+            },
+            |tokens| Args::parse(tokens.clone()).map(|_| true).unwrap_or(true),
+        );
+    }
+
+    #[test]
+    fn override_with_equals_value_containing_path() {
+        let a = parse("train --config configs/a.json");
+        assert_eq!(a.opt("config", ""), "configs/a.json");
+    }
+}

@@ -1,0 +1,195 @@
+//! Multi-crop TTA evaluation (paper §3.5 and Listing 4 `infer`).
+//!
+//! Three levels:
+//! * `None` — run the network once per test image;
+//! * `Mirror` — average logits of the image and its mirror (prior work);
+//! * `MirrorTranslate` — the paper's 6-view policy: {identity, mirror} ×
+//!   {no shift, up-left 1px, down-right 1px}, weighted 0.25/0.25/0.125×4.
+//!
+//! The eval module is lowered at a fixed batch size, so the evaluator pads
+//! the final partial batch and discards the padded rows.
+
+use anyhow::Result;
+
+use crate::config::TtaLevel;
+use crate::data::augment::{tta_view_into, TTA_VIEWS};
+use crate::data::Dataset;
+use crate::runtime::{Engine, ModelState};
+use crate::tensor::Tensor;
+
+/// Per-example predictions of one evaluation pass.
+#[derive(Clone, Debug)]
+pub struct EvalOutput {
+    /// (N, num_classes) softmax probabilities (averaged across TTA views
+    /// in logit space, then softmaxed — matching the paper's logit
+    /// averaging followed by argmax; probabilities feed the CACE metric).
+    pub probs: Tensor,
+    /// argmax predictions.
+    pub predictions: Vec<u16>,
+    /// Top-1 accuracy.
+    pub accuracy: f64,
+    /// Accuracy of the identity view alone (the "without TTA" readout the
+    /// paper reports in §2). Computed from the same pass — the identity
+    /// view is always one of the evaluated views — so it costs nothing
+    /// (EXPERIMENTS.md §Perf iteration 4).
+    pub accuracy_identity: f64,
+}
+
+/// Which TTA views a level evaluates (subset of [`TTA_VIEWS`], with
+/// renormalized weights).
+pub fn views_for(tta: TtaLevel) -> Vec<(bool, i64, i64, f32)> {
+    match tta {
+        TtaLevel::None => vec![(false, 0, 0, 1.0)],
+        TtaLevel::Mirror => vec![(false, 0, 0, 0.5), (true, 0, 0, 0.5)],
+        TtaLevel::MirrorTranslate => TTA_VIEWS.to_vec(),
+    }
+}
+
+fn softmax_rows(logits: &mut Tensor) {
+    let k = *logits.shape().last().unwrap();
+    let n = logits.len() / k;
+    let data = logits.data_mut();
+    for i in 0..n {
+        let row = &mut data[i * k..(i + 1) * k];
+        let max = row.iter().cloned().fold(f32::MIN, f32::max);
+        let mut sum = 0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// Evaluate `state` on `dataset` with the given TTA level.
+pub fn evaluate(
+    engine: &mut Engine,
+    state: &ModelState,
+    dataset: &Dataset,
+    tta: TtaLevel,
+) -> Result<EvalOutput> {
+    let b = engine.batch_eval();
+    let (n, c, h, w) = dataset.images.dims4();
+    let hw = engine.variant().image_hw; // model input; test images are
+                                        // center-resampled if they differ
+    let k = engine.variant().num_classes;
+    let views = views_for(tta);
+
+    let mut logits_sum = Tensor::zeros(&[n, k]);
+    let mut identity_logits = Tensor::zeros(&[n, k]);
+    let mut batch = Tensor::zeros(&[b, c, hw, hw]);
+    let mut view_buf = Tensor::zeros(&[b, c, hw, hw]);
+    let mut scratch = Vec::new();
+    let mut resample_rng = crate::rng::Rng::new(0); // Center crop draws nothing
+
+    let mut start = 0;
+    while start < n {
+        let take = (n - start).min(b);
+        // Pack `take` images (+ zero padding) into the fixed-size batch.
+        for row in 0..take {
+            let src = dataset.images.image(start + row);
+            if (h, w) == (hw, hw) {
+                batch.image_mut(row).copy_from_slice(src);
+            } else {
+                crate::data::augment::CropPolicy::Center { ratio_pct: 100 }.apply_into(
+                    batch.image_mut(row),
+                    src,
+                    c,
+                    h,
+                    w,
+                    hw,
+                    &mut resample_rng,
+                );
+            }
+        }
+        for row in take..b {
+            batch.image_mut(row).fill(0.0);
+        }
+        for &view in &views {
+            tta_view_into(&mut view_buf, &batch, view, &mut scratch);
+            let logits = engine.eval_logits(state, &view_buf)?;
+            let (flip, dy, dx, weight) = view;
+            let src = logits.data();
+            let dst = logits_sum.data_mut();
+            for row in 0..take {
+                for j in 0..k {
+                    dst[(start + row) * k + j] += weight * src[row * k + j];
+                }
+            }
+            if !flip && dy == 0 && dx == 0 {
+                // Free no-TTA readout from the identity view.
+                let dst = identity_logits.data_mut();
+                for row in 0..take {
+                    dst[(start + row) * k..(start + row + 1) * k]
+                        .copy_from_slice(&src[row * k..(row + 1) * k]);
+                }
+            }
+        }
+        start += take;
+    }
+
+    let argmax_acc = |logits: &Tensor| -> (Vec<u16>, f64) {
+        let data = logits.data();
+        let mut correct = 0usize;
+        let mut preds = Vec::with_capacity(n);
+        for i in 0..n {
+            let row = &data[i * k..(i + 1) * k];
+            let mut best = 0usize;
+            for j in 1..k {
+                if row[j] > row[best] {
+                    best = j;
+                }
+            }
+            preds.push(best as u16);
+            if best == dataset.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        (preds, correct as f64 / n as f64)
+    };
+    let (predictions, accuracy) = argmax_acc(&logits_sum);
+    let (_, accuracy_identity) = argmax_acc(&identity_logits);
+    let mut probs = logits_sum;
+    softmax_rows(&mut probs);
+    Ok(EvalOutput {
+        probs,
+        predictions,
+        accuracy,
+        accuracy_identity,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn views_levels() {
+        assert_eq!(views_for(TtaLevel::None).len(), 1);
+        assert_eq!(views_for(TtaLevel::Mirror).len(), 2);
+        assert_eq!(views_for(TtaLevel::MirrorTranslate).len(), 6);
+        for tta in [TtaLevel::None, TtaLevel::Mirror, TtaLevel::MirrorTranslate] {
+            let s: f32 = views_for(tta).iter().map(|v| v.3).sum();
+            assert!((s - 1.0).abs() < 1e-6, "{tta:?} weights sum {s}");
+        }
+    }
+
+    #[test]
+    fn softmax_rows_normalizes() {
+        let mut t = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 0.0, 0.0, 0.0]).unwrap();
+        softmax_rows(&mut t);
+        for i in 0..2 {
+            let s: f32 = t.data()[i * 3..(i + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        // monotone in logits
+        assert!(t.data()[2] > t.data()[1] && t.data()[1] > t.data()[0]);
+        // uniform row
+        assert!((t.data()[3] - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    // evaluate() itself is covered by tests/runtime_integration.rs (needs
+    // a compiled engine).
+}

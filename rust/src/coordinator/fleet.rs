@@ -1,0 +1,120 @@
+//! Fleet runner: n-run statistical experiments (paper §5).
+//!
+//! The paper's evidence is fleet-scale — n=400 per cell for the flip study
+//! (Table 2/6), n=10,000 for the variance study (Table 4). This module
+//! runs a config across `n` forked seeds against ONE compiled engine
+//! (compile once, train many — the amortization argument of §3.7) and
+//! aggregates accuracies, per-run timings, and the evaluation outputs the
+//! statistics modules consume.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::coordinator::trainer::{train, TrainResult};
+use crate::data::Dataset;
+use crate::rng::Rng;
+use crate::runtime::Engine;
+use crate::stats::basic::Summary;
+use crate::util::json::Json;
+
+/// Aggregated results of one fleet.
+#[derive(Clone, Debug)]
+pub struct FleetResult {
+    pub runs: Vec<TrainResult>,
+    /// Final accuracies (configured TTA), one per run.
+    pub accuracies: Vec<f64>,
+    pub accuracies_no_tta: Vec<f64>,
+}
+
+impl FleetResult {
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.accuracies)
+    }
+
+    pub fn summary_no_tta(&self) -> Summary {
+        Summary::of(&self.accuracies_no_tta)
+    }
+
+    pub fn mean_time_seconds(&self) -> f64 {
+        if self.runs.is_empty() {
+            return 0.0;
+        }
+        self.runs.iter().map(|r| r.time_seconds).sum::<f64>() / self.runs.len() as f64
+    }
+
+    /// Mean of the first-crossing epochs among runs that hit the target;
+    /// `None` when no run did.
+    pub fn mean_epochs_to_target(&self) -> Option<f64> {
+        let hits: Vec<f64> = self.runs.iter().filter_map(|r| r.epochs_to_target).collect();
+        if hits.is_empty() {
+            None
+        } else {
+            Some(hits.iter().sum::<f64>() / hits.len() as f64)
+        }
+    }
+}
+
+impl FleetResult {
+    /// Structured log of the whole fleet (written by `airbench fleet
+    /// --log out.json`, the Listing 4 `log.pt` analogue).
+    pub fn to_json(&self, cfg: &crate::config::TrainConfig) -> Json {
+        let s = self.summary();
+        Json::obj(vec![
+            ("config", cfg.to_json()),
+            ("n", Json::num(self.runs.len() as f64)),
+            ("mean", Json::num(s.mean)),
+            ("std", Json::num(s.std)),
+            ("ci95", Json::num(s.ci95())),
+            (
+                "accs",
+                Json::Arr(self.accuracies.iter().map(|&a| Json::num(a)).collect()),
+            ),
+            (
+                "accs_no_tta",
+                Json::Arr(self.accuracies_no_tta.iter().map(|&a| Json::num(a)).collect()),
+            ),
+            (
+                "times",
+                Json::Arr(self.runs.iter().map(|r| Json::num(r.time_seconds)).collect()),
+            ),
+        ])
+    }
+}
+
+/// Run `n` trainings of `cfg` with per-run forked seeds.
+///
+/// `progress` (optional) is invoked after each run with (run_index,
+/// accuracy) — benches use it for live table output.
+pub fn run_fleet(
+    engine: &mut Engine,
+    train_data: &Dataset,
+    test_data: &Dataset,
+    cfg: &TrainConfig,
+    n: usize,
+    mut progress: Option<&mut dyn FnMut(usize, f64)>,
+) -> Result<FleetResult> {
+    let mut seeder = Rng::new(cfg.seed ^ 0xF1EE7);
+    let mut runs = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut run_cfg = cfg.clone();
+        run_cfg.seed = seeder.fork(i as u64).next_u64();
+        let result = train(engine, train_data, test_data, &run_cfg)?;
+        if let Some(cb) = progress.as_deref_mut() {
+            cb(i, result.accuracy);
+        }
+        runs.push(result);
+    }
+    let accuracies = runs.iter().map(|r| r.accuracy).collect();
+    let accuracies_no_tta = runs.iter().map(|r| r.accuracy_no_tta).collect();
+    Ok(FleetResult {
+        runs,
+        accuracies,
+        accuracies_no_tta,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    // Covered end-to-end in tests/runtime_integration.rs (requires the
+    // compiled engine); Summary math is tested in stats::basic.
+}

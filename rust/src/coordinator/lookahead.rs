@@ -1,0 +1,111 @@
+//! Lookahead optimization (§3.4; Zhang et al. 2019, as used in Listing 4).
+//!
+//! Host-side EMA of the fast weights: every `k` steps,
+//! `ema <- lerp(ema, params, 1 - decay)` and `params <- ema`. The paper
+//! keeps this outside the compiled step (its implementation mutates the
+//! PyTorch state dict), and so do we — it runs on the Rust side between
+//! engine steps. The final update uses `decay = 1.0`, which collapses
+//! params onto the EMA.
+
+use crate::runtime::state::ModelState;
+
+/// EMA shadow of all trainable tensors.
+pub struct LookaheadState {
+    ema: Vec<(String, crate::tensor::Tensor)>,
+}
+
+impl LookaheadState {
+    /// Snapshot the current trainables as the initial EMA.
+    pub fn new(state: &ModelState) -> LookaheadState {
+        LookaheadState {
+            ema: state
+                .momenta
+                .keys() // trainable names == momenta keys
+                .map(|k| (k.clone(), state.tensors[k].clone()))
+                .collect(),
+        }
+    }
+
+    /// One Lookahead update (Listing 4 `LookaheadState.update`):
+    /// `ema.lerp_(param, 1-decay); param.copy_(ema)`.
+    pub fn update(&mut self, state: &mut ModelState, decay: f64) {
+        let t = 1.0 - decay as f32;
+        for (name, ema) in &mut self.ema {
+            let param = state
+                .tensors
+                .get_mut(name)
+                .expect("trainable disappeared from state");
+            ema.lerp_from(param, t);
+            param.copy_from(ema);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+    use crate::runtime::state::{InitConfig, ModelState};
+    use std::path::Path;
+
+    fn state() -> Option<ModelState> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        let m = Manifest::load(&dir).ok()?;
+        let v = m.variants.get("bench")?;
+        Some(ModelState::init(v, &InitConfig::default()))
+    }
+
+    #[test]
+    fn decay_one_is_full_rollback_to_ema() {
+        let Some(mut st) = state() else { return };
+        let la = LookaheadState::new(&st);
+        let orig = st.tensors["head_w"].clone();
+        // Perturb the params.
+        for v in st.tensors.get_mut("head_w").unwrap().data_mut() {
+            *v += 1.0;
+        }
+        let mut la = la;
+        la.update(&mut st, 1.0);
+        assert_eq!(st.tensors["head_w"].data(), orig.data());
+    }
+
+    #[test]
+    fn decay_zero_keeps_params() {
+        let Some(mut st) = state() else { return };
+        let mut la = LookaheadState::new(&st);
+        for v in st.tensors.get_mut("head_w").unwrap().data_mut() {
+            *v += 1.0;
+        }
+        let perturbed = st.tensors["head_w"].clone();
+        la.update(&mut st, 0.0);
+        // decay 0 => ema becomes params; params unchanged.
+        assert_eq!(st.tensors["head_w"].data(), perturbed.data());
+    }
+
+    #[test]
+    fn intermediate_decay_interpolates() {
+        let Some(mut st) = state() else { return };
+        let mut la = LookaheadState::new(&st);
+        let orig = st.tensors["whiten_b"].clone();
+        for v in st.tensors.get_mut("whiten_b").unwrap().data_mut() {
+            *v = 10.0;
+        }
+        la.update(&mut st, 0.75);
+        // ema = 0.75*orig + 0.25*10
+        for (v, o) in st.tensors["whiten_b"].data().iter().zip(orig.data()) {
+            let expect = 0.75 * o + 0.25 * 10.0;
+            assert!((v - expect).abs() < 1e-6, "{v} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn only_trainables_are_shadowed() {
+        let Some(st) = state() else { return };
+        let la = LookaheadState::new(&st);
+        assert_eq!(la.ema.len(), st.momenta.len());
+        assert!(la.ema.iter().all(|(k, _)| !k.ends_with("_mean")));
+    }
+}

@@ -1,0 +1,19 @@
+//! The L3 coordinator — the paper's training system, in Rust.
+//!
+//! * [`schedule`] — triangular LR, Lookahead alpha, decoupled hyper math;
+//! * [`lookahead`] — host-side Lookahead EMA (§3.4);
+//! * [`trainer`] — one training run under the paper's timing protocol (§2);
+//! * [`evaluator`] — multi-crop TTA inference (§3.5);
+//! * [`fleet`] — n-run statistical experiments (§5).
+
+pub mod evaluator;
+pub mod fleet;
+pub mod lookahead;
+pub mod schedule;
+pub mod trainer;
+
+pub use evaluator::{evaluate, EvalOutput};
+pub use fleet::{run_fleet, FleetResult};
+pub use lookahead::LookaheadState;
+pub use schedule::{AlphaSchedule, DecoupledHyper, Triangle};
+pub use trainer::{train, train_full, warmup, EpochLog, TrainResult};

@@ -1,0 +1,199 @@
+//! Training schedules (paper §3.1/§3.4, Listing 4).
+//!
+//! * Triangular LR: starts at `start` fraction of peak, rises to 1.0 at
+//!   `peak` fraction of training, decays to `end` (the paper's
+//!   `triangle(total_steps, start=0.2, end=0.07, peak=0.23)`).
+//! * Lookahead alpha: `0.95^5 * (t / T)^3` — the EMA decay ramps up
+//!   cubically so early training moves fast and late training averages
+//!   hard.
+//! * Whitening-bias freeze: the bias of the frozen whitening conv trains
+//!   only for the first `whiten_bias_epochs` epochs (§3.2).
+
+/// Piecewise-linear triangular schedule (fraction of peak LR at `step`).
+#[derive(Clone, Debug)]
+pub struct Triangle {
+    pub total_steps: usize,
+    pub start: f64,
+    pub end: f64,
+    /// Peak position as a fraction of total steps.
+    pub peak: f64,
+}
+
+impl Triangle {
+    pub fn new(total_steps: usize, start: f64, end: f64, peak: f64) -> Triangle {
+        Triangle {
+            total_steps: total_steps.max(1),
+            start,
+            end,
+            peak,
+        }
+    }
+
+    /// Schedule value at `step` in `[0, total_steps]`.
+    pub fn at(&self, step: usize) -> f64 {
+        let t = self.total_steps as f64;
+        let peak_step = (self.peak * t).floor();
+        let x = (step as f64).min(t);
+        if x <= peak_step {
+            if peak_step == 0.0 {
+                1.0
+            } else {
+                self.start + (1.0 - self.start) * (x / peak_step)
+            }
+        } else {
+            let denom = t - peak_step;
+            if denom <= 0.0 {
+                self.end
+            } else {
+                1.0 + (self.end - 1.0) * ((x - peak_step) / denom)
+            }
+        }
+    }
+}
+
+/// Lookahead EMA decay schedule (Listing 4 `alpha_schedule`).
+#[derive(Clone, Debug)]
+pub struct AlphaSchedule {
+    pub total_steps: usize,
+}
+
+impl AlphaSchedule {
+    pub fn new(total_steps: usize) -> AlphaSchedule {
+        AlphaSchedule {
+            total_steps: total_steps.max(1),
+        }
+    }
+
+    /// Decay at `step`: `0.95^5 * (step / total)^3`.
+    pub fn at(&self, step: usize) -> f64 {
+        let frac = (step as f64 / self.total_steps as f64).min(1.0);
+        0.95f64.powi(5) * frac.powi(3)
+    }
+}
+
+/// Decoupled-hyperparameter translation (Listing 4's prologue).
+///
+/// The paper expresses lr/wd "per 1024 examples with momentum correction"
+/// so each can be tuned independently; the graph consumes the raw PyTorch
+/// values. `kilostep_scale = 1024 * (1 + 1/(1-momentum))`.
+#[derive(Clone, Copy, Debug)]
+pub struct DecoupledHyper {
+    /// Un-decoupled peak LR handed to the graph.
+    pub lr_base: f64,
+    /// `weight_decay/lr` — constant across the schedule because PyTorch
+    /// couples wd into the gradient before the lr multiply.
+    pub wd_over_lr: f64,
+}
+
+impl DecoupledHyper {
+    pub fn new(lr: f64, weight_decay: f64, momentum: f64, batch_size: usize) -> DecoupledHyper {
+        let kilostep_scale = 1024.0 * (1.0 + 1.0 / (1.0 - momentum));
+        let lr_base = lr / kilostep_scale;
+        let wd = weight_decay * batch_size as f64 / kilostep_scale;
+        DecoupledHyper {
+            lr_base,
+            wd_over_lr: wd / lr_base,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triangle_endpoints() {
+        let t = Triangle::new(100, 0.2, 0.07, 0.23);
+        assert!((t.at(0) - 0.2).abs() < 1e-12);
+        assert!((t.at(100) - 0.07).abs() < 1e-9);
+        // peak at floor(0.23 * 100) = 23
+        assert!((t.at(23) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn triangle_monotone_up_then_down() {
+        let t = Triangle::new(200, 0.2, 0.0, 0.25);
+        for s in 0..49 {
+            assert!(t.at(s + 1) > t.at(s), "not rising at {s}");
+        }
+        for s in 51..199 {
+            assert!(t.at(s + 1) < t.at(s), "not falling at {s}");
+        }
+    }
+
+    #[test]
+    fn triangle_clamps_beyond_total() {
+        let t = Triangle::new(10, 0.5, 0.1, 0.5);
+        assert_eq!(t.at(10), t.at(999));
+    }
+
+    #[test]
+    fn triangle_degenerate_single_step() {
+        let t = Triangle::new(1, 0.2, 0.07, 0.23);
+        assert!(t.at(0).is_finite());
+        assert!(t.at(1).is_finite());
+    }
+
+    #[test]
+    fn property_triangle_bounded_and_peaks_at_one() {
+        use crate::rng::Rng;
+        crate::util::proptest::check(
+            "triangle_bounds",
+            100,
+            |rng: &mut Rng| {
+                let total = 2 + rng.below(500);
+                let start = rng.uniform() as f64;
+                let end = rng.uniform() as f64;
+                let peak = 0.05 + 0.9 * rng.uniform() as f64;
+                (total, start, end, peak)
+            },
+            |&(total, start, end, peak)| {
+                let t = Triangle::new(total, start, end, peak);
+                let lo = start.min(end).min(1.0) - 1e-9;
+                (0..=total).all(|s| {
+                    let v = t.at(s);
+                    v >= lo && v <= 1.0 + 1e-9
+                }) && (t.at((peak * total as f64).floor() as usize) - 1.0).abs() < 1e-9
+            },
+        );
+    }
+
+    #[test]
+    fn alpha_matches_listing4_formula() {
+        let a = AlphaSchedule::new(1000);
+        let expect = 0.95f64.powi(5) * 0.5f64.powi(3);
+        assert!((a.at(500) - expect).abs() < 1e-12);
+        assert_eq!(a.at(0), 0.0);
+        assert!((a.at(1000) - 0.95f64.powi(5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alpha_monotone_increasing() {
+        let a = AlphaSchedule::new(100);
+        for s in 0..100 {
+            assert!(a.at(s + 1) > a.at(s));
+        }
+    }
+
+    #[test]
+    fn decoupled_matches_listing4_numbers() {
+        // Listing 4: momentum=0.85, batch=1024, lr=11.5, wd=0.0153.
+        let h = DecoupledHyper::new(11.5, 0.0153, 0.85, 1024);
+        let kilostep = 1024.0 * (1.0 + 1.0 / 0.15);
+        assert!((h.lr_base - 11.5 / kilostep).abs() < 1e-12);
+        let wd = 0.0153 * 1024.0 / kilostep;
+        assert!((h.wd_over_lr - wd / (11.5 / kilostep)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decoupling_invariance_under_momentum_change() {
+        // The whole point (Listing 4 comment): changing momentum at fixed
+        // decoupled lr keeps the effective step size lr_base*(1 + 1/(1-m))
+        // constant.
+        let a = DecoupledHyper::new(10.0, 0.01, 0.85, 512);
+        let b = DecoupledHyper::new(10.0, 0.01, 0.9, 512);
+        let step_a = a.lr_base * (1.0 + 1.0 / (1.0 - 0.85));
+        let step_b = b.lr_base * (1.0 + 1.0 / (1.0 - 0.9));
+        assert!((step_a - step_b).abs() < 1e-12);
+    }
+}

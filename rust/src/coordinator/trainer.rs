@@ -1,0 +1,230 @@
+//! The training coordinator: one full airbench run (paper Listing 4
+//! `main`), driven entirely from Rust against the AOT-compiled step.
+//!
+//! Implements the paper's timing protocol (§2): the clock starts when
+//! training data is first accessed (whitening-statistics read) and stops
+//! when test-set predictions are produced; engine compilation ("warmup",
+//! §3.7) is excluded, exactly as the paper excludes its one-time
+//! `torch.compile` cost and GPU warmup run.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::coordinator::evaluator::{evaluate, EvalOutput};
+use crate::coordinator::lookahead::LookaheadState;
+use crate::coordinator::schedule::{AlphaSchedule, DecoupledHyper, Triangle};
+use crate::data::loader::Loader;
+use crate::data::Dataset;
+use crate::runtime::{Engine, InitConfig, ModelState};
+use crate::whitening::whitening_weights;
+
+/// Per-epoch log line (mirrors the paper's printed columns).
+#[derive(Clone, Debug)]
+pub struct EpochLog {
+    pub epoch: usize,
+    /// Accuracy/loss of the last training batch of the epoch.
+    pub train_acc: f64,
+    pub train_loss: f64,
+    /// End-of-epoch validation accuracy (populated when
+    /// `eval_every_epoch`), evaluated with the configured TTA.
+    pub val_acc: Option<f64>,
+}
+
+/// Result of one training run.
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    /// Final test accuracy with the configured TTA level.
+    pub accuracy: f64,
+    /// Final test accuracy without TTA (paper reports both, §2).
+    pub accuracy_no_tta: f64,
+    /// Fractional epochs actually run.
+    pub epochs_run: f64,
+    pub steps_run: usize,
+    /// Paper-protocol time: data access -> test predictions.
+    pub time_seconds: f64,
+    /// First (fractional) epoch whose end-of-epoch eval crossed
+    /// `target_acc` (needs `eval_every_epoch`).
+    pub epochs_to_target: Option<f64>,
+    pub epoch_log: Vec<EpochLog>,
+    /// Final evaluation output (probabilities feed CACE, §5.3).
+    pub eval: EvalOutput,
+    /// Total training FLOPs (for Fig 3).
+    pub flops: u64,
+}
+
+/// Run one training (the paper's `main(run)`), reusing a compiled engine.
+pub fn train(
+    engine: &mut Engine,
+    train_data: &Dataset,
+    test_data: &Dataset,
+    cfg: &TrainConfig,
+) -> Result<TrainResult> {
+    train_full(engine, train_data, test_data, cfg).map(|(r, _)| r)
+}
+
+/// Like [`train`] but also returns the final [`ModelState`] (for
+/// checkpointing — `airbench train --save ckpt.bin`).
+pub fn train_full(
+    engine: &mut Engine,
+    train_data: &Dataset,
+    test_data: &Dataset,
+    cfg: &TrainConfig,
+) -> Result<(TrainResult, ModelState)> {
+    let t0 = Instant::now(); // first training-data access below
+
+    // ---- Initialization (whitening stats ARE data access: timed). -------
+    let mut state = ModelState::init(
+        engine.variant(),
+        &InitConfig {
+            dirac: cfg.dirac_init,
+            seed: cfg.seed,
+        },
+    );
+    if cfg.whiten_init {
+        let head = train_data.head(cfg.whiten_samples);
+        let k = engine.variant().hyper.whiten_kernel;
+        state.set_whitening(whitening_weights(&head.images, k, cfg.whiten_eps)?)?;
+    }
+
+    // ---- Schedules -------------------------------------------------------
+    let batch = engine.batch_train();
+    let mut loader = Loader::new(
+        train_data,
+        batch,
+        cfg.aug(),
+        cfg.order,
+        /* drop_last= */ true,
+        cfg.seed,
+    )
+    .with_output_hw(engine.variant().image_hw);
+    let steps_per_epoch = loader.batches_per_epoch();
+    let total_steps = ((steps_per_epoch as f64) * cfg.epochs).ceil() as usize;
+    let hyper = DecoupledHyper::new(
+        cfg.lr,
+        cfg.weight_decay,
+        engine.variant().hyper.momentum,
+        batch,
+    );
+    let lr_sched = Triangle::new(total_steps, cfg.lr_start_frac, cfg.lr_end_frac, cfg.lr_peak_frac);
+    let alpha = AlphaSchedule::new(total_steps);
+    let mut lookahead = cfg.lookahead.then(|| LookaheadState::new(&state));
+
+    // ---- Step loop ---------------------------------------------------------
+    let mut step = 0usize;
+    let mut epoch_log = Vec::new();
+    let mut epochs_to_target = None;
+    let mut result: Result<()> = Ok(());
+    let epochs_ceil = cfg.epochs.ceil() as usize;
+    'epochs: for epoch in 0..epochs_ceil {
+        let whiten_bias_on = (epoch as f64) < cfg.whiten_bias_epochs;
+        let mut last = (0.0f64, 0.0f64); // (acc, loss) of last batch
+        loader.run_epoch(|b| {
+            let lr = (hyper.lr_base * lr_sched.at(step)) as f32;
+            match engine.train_step(
+                &mut state,
+                b.images,
+                &b.labels,
+                lr,
+                hyper.wd_over_lr as f32,
+                whiten_bias_on,
+            ) {
+                Ok(out) => {
+                    last = (out.acc as f64, out.loss as f64 / batch as f64);
+                }
+                Err(e) => {
+                    result = Err(e);
+                    return false;
+                }
+            }
+            step += 1;
+            if let Some(la) = lookahead.as_mut() {
+                if step % cfg.lookahead_every == 0 {
+                    la.update(&mut state, alpha.at(step));
+                }
+            }
+            step < total_steps
+        });
+        result?;
+        result = Ok(());
+
+        let mut log = EpochLog {
+            epoch,
+            train_acc: last.0,
+            train_loss: last.1,
+            val_acc: None,
+        };
+        if cfg.eval_every_epoch {
+            // Mid-training eval sees the lookahead-averaged weights, like
+            // the paper's per-epoch print.
+            let ev = evaluate(engine, &state, test_data, cfg.tta)?;
+            log.val_acc = Some(ev.accuracy);
+            if epochs_to_target.is_none() && ev.accuracy >= cfg.target_acc {
+                epochs_to_target = Some((epoch + 1) as f64);
+            }
+        }
+        epoch_log.push(log);
+        if step >= total_steps {
+            break 'epochs;
+        }
+    }
+
+    // Final Lookahead collapse (Listing 4: update with decay=1.0).
+    if let Some(la) = lookahead.as_mut() {
+        la.update(&mut state, 1.0);
+    }
+
+    // ---- Final evaluation (stops the clock) -------------------------------
+    // One pass yields both readouts: the TTA accuracy and the identity-view
+    // ("without TTA", §2) accuracy — see EXPERIMENTS.md §Perf iteration 4.
+    let eval = evaluate(engine, &state, test_data, cfg.tta)?;
+    let time_seconds = t0.elapsed().as_secs_f64();
+    let accuracy = eval.accuracy;
+    let accuracy_no_tta = eval.accuracy_identity;
+
+    let flops =
+        engine.variant().train_flops_per_example() * (batch as u64) * (step as u64);
+    Ok((
+        TrainResult {
+            accuracy,
+            accuracy_no_tta,
+            epochs_run: step as f64 / steps_per_epoch as f64,
+            steps_run: step,
+            time_seconds,
+            epochs_to_target,
+            epoch_log,
+            eval,
+            flops,
+        },
+        state,
+    ))
+}
+
+/// GPU-warmup analogue (paper §2): run a couple of steps on dummy labels so
+/// one-time lazy costs (PJRT thread pools, allocator pools) are paid before
+/// timed runs. The paper trains a full run on random labels; two steps are
+/// enough to warm a CPU client.
+pub fn warmup(engine: &mut Engine, train_data: &Dataset, cfg: &TrainConfig) -> Result<()> {
+    let mut cfg = cfg.clone();
+    cfg.eval_every_epoch = false;
+    cfg.tta = crate::config::TtaLevel::None; // warmup needs one eval exec only
+    let mut dummy = train_data.head(train_data.len().min(4 * engine.batch_train()));
+    // ~2 steps over the 4-batch dummy set.
+    cfg.epochs = 0.5;
+    // Random labels, like the paper's warmup run.
+    let mut rng = crate::rng::Rng::new(0xFA57);
+    let k = dummy.num_classes;
+    for l in dummy.labels.iter_mut() {
+        *l = rng.below(k) as u16;
+    }
+    let test_head = dummy.head(engine.batch_eval().min(dummy.len()));
+    train(engine, &dummy, &test_head, &cfg).map(|_| ())
+}
+
+#[cfg(test)]
+mod tests {
+    // End-to-end trainer tests (need artifacts + PJRT) live in
+    // tests/runtime_integration.rs; schedule math is tested in
+    // coordinator::schedule.
+}

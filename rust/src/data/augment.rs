@@ -1,0 +1,744 @@
+//! Augmentation policies: the paper's *alternating flip* (§3.6) plus every
+//! policy its experiments exercise — random flip, 2-pixel reflect-pad random
+//! translation (§3.1), Cutout (§4), the ImageNet-style Heavy/Light random
+//! resized crops and center crops of §5.2, and the 6-view multi-crop TTA
+//! geometry of §3.5.
+//!
+//! All transforms write into caller-owned buffers; the batch hot path
+//! (`apply_batch`) does no allocation per image.
+
+use crate::rng::{hash_index, Rng};
+use crate::tensor::Tensor;
+
+/// Horizontal-flip policy (paper Table 1 / §3.6 / §5.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlipMode {
+    /// No flipping at all (Table 3 "None" column; SVHN in Table 5).
+    None,
+    /// Standard random flip: each image flipped with p=0.5 every epoch
+    /// (paper Listing 1).
+    Random,
+    /// The paper's contribution (Listing 2): epoch 0 flips a pseudorandom
+    /// half; epoch e >= 1 flips exactly the images epoch e-1 did not, so
+    /// every pair of consecutive epochs shows all 2N unique views.
+    Alternating,
+    /// Bit-exact Listing 2: parity of `md5(str(index * seed))[-8:] + epoch`
+    /// (Python-hashlib-identical — see `util::md5`). Statistically the same
+    /// as [`FlipMode::Alternating`]; exists for 1:1 comparison against the
+    /// reference airbench94.py.
+    AlternatingPaper,
+}
+
+impl FlipMode {
+    pub fn parse(s: &str) -> Option<FlipMode> {
+        match s {
+            "none" => Some(FlipMode::None),
+            "random" => Some(FlipMode::Random),
+            "alternating" | "alt" => Some(FlipMode::Alternating),
+            "alternating_md5" | "md5" => Some(FlipMode::AlternatingPaper),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FlipMode::None => "none",
+            FlipMode::Random => "random",
+            FlipMode::Alternating => "alternating",
+            FlipMode::AlternatingPaper => "alternating_md5",
+        }
+    }
+}
+
+/// Decide whether example `index` is flipped this `epoch`.
+///
+/// Alternating flip derandomizes across epochs but stays pseudorandom
+/// across examples: `hash(index) + epoch` parity (paper Listing 2 with
+/// SplitMix64 standing in for md5 — only parity uniformity matters).
+/// Random mode draws a fresh coin from `rng` per call.
+#[inline]
+pub fn flip_decision(
+    mode: FlipMode,
+    index: u64,
+    epoch: u64,
+    seed: u64,
+    rng: &mut Rng,
+) -> bool {
+    match mode {
+        FlipMode::None => false,
+        FlipMode::Random => rng.coin(0.5),
+        FlipMode::Alternating => (hash_index(index, seed) + epoch) % 2 == 0,
+        FlipMode::AlternatingPaper => {
+            (crate::util::md5::paper_hash_fn(index, seed.max(1)) as u64 + epoch) % 2 == 0
+        }
+    }
+}
+
+/// Horizontally mirror `src` (one C*H*W image) into `dst`.
+pub fn flip_into(dst: &mut [f32], src: &[f32], c: usize, h: usize, w: usize) {
+    debug_assert_eq!(src.len(), c * h * w);
+    for ci in 0..c {
+        for y in 0..h {
+            let row = (ci * h + y) * w;
+            for x in 0..w {
+                dst[row + x] = src[row + (w - 1 - x)];
+            }
+        }
+    }
+}
+
+/// In-place horizontal mirror.
+pub fn flip_inplace(img: &mut [f32], c: usize, h: usize, w: usize) {
+    for ci in 0..c {
+        for y in 0..h {
+            let row = (ci * h + y) * w;
+            img[row..row + w].reverse();
+        }
+    }
+}
+
+/// Reflection-padded translation by (dy, dx) pixels: equivalent to the
+/// paper's reflect-pad-then-random-crop (§3.1, Zagoruyko-style padding).
+/// `|dy|, |dx| <= pad` and output size equals input size.
+pub fn translate_reflect_into(
+    dst: &mut [f32],
+    src: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    dy: i64,
+    dx: i64,
+) {
+    // Reading output pixel (y, x) from reflect-padded input at
+    // (y + dy, x + dx), reflected back into [0, h) x [0, w).
+    #[inline]
+    fn reflect(i: i64, n: i64) -> usize {
+        // PyTorch 'reflect' mode: no edge repeat (period 2n-2).
+        let mut i = i;
+        let p = 2 * n - 2;
+        if p <= 0 {
+            return 0;
+        }
+        i = i.rem_euclid(p);
+        if i >= n {
+            i = p - i;
+        }
+        i as usize
+    }
+    for ci in 0..c {
+        let plane = ci * h * w;
+        for y in 0..h {
+            let sy = reflect(y as i64 + dy, h as i64);
+            let srow = plane + sy * w;
+            let drow = plane + y * w;
+            for x in 0..w {
+                let sx = reflect(x as i64 + dx, w as i64);
+                dst[drow + x] = src[srow + sx];
+            }
+        }
+    }
+}
+
+/// Cutout (§4 / DeVries & Taylor): zero a `size x size` square centered at
+/// a random location (center drawn uniformly over the image, clipped like
+/// the reference implementation). Operates on normalized images, so "zero"
+/// is the dataset mean.
+pub fn cutout_inplace(img: &mut [f32], c: usize, h: usize, w: usize, size: usize, rng: &mut Rng) {
+    let cy = rng.below(h) as i64;
+    let cx = rng.below(w) as i64;
+    let half = (size / 2) as i64;
+    // DeVries & Taylor reference: zero rows/cols [c - size/2, c + size/2),
+    // clipped to the image — the cut never exceeds `size` per axis.
+    let y0 = (cy - half).clamp(0, h as i64) as usize;
+    let y1 = (cy + half).clamp(0, h as i64) as usize;
+    let x0 = (cx - half).clamp(0, w as i64) as usize;
+    let x1 = (cx + half).clamp(0, w as i64) as usize;
+    for ci in 0..c {
+        for y in y0..y1 {
+            let row = (ci * h + y) * w;
+            img[row + x0..row + x1].fill(0.0);
+        }
+    }
+}
+
+/// Bilinear resample of an axis-aligned crop `[y0, y0+ch) x [x0, x0+cw)`
+/// of `src` (C x H x W) into a C x out x out `dst` — the core of
+/// RandomResizedCrop and the resize step of center-crop evaluation.
+pub fn resample_crop_into(
+    dst: &mut [f32],
+    src: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    y0: f32,
+    x0: f32,
+    ch: f32,
+    cw: f32,
+    out: usize,
+) {
+    let sy = ch / out as f32;
+    let sx = cw / out as f32;
+    for ci in 0..c {
+        let plane = ci * h * w;
+        for oy in 0..out {
+            // Pixel-center sampling.
+            let fy = (y0 + (oy as f32 + 0.5) * sy - 0.5).clamp(0.0, h as f32 - 1.0);
+            let iy = fy.floor() as usize;
+            let iy1 = (iy + 1).min(h - 1);
+            let ty = fy - iy as f32;
+            for ox in 0..out {
+                let fx = (x0 + (ox as f32 + 0.5) * sx - 0.5).clamp(0.0, w as f32 - 1.0);
+                let ix = fx.floor() as usize;
+                let ix1 = (ix + 1).min(w - 1);
+                let tx = fx - ix as f32;
+                let a = src[plane + iy * w + ix];
+                let b = src[plane + iy * w + ix1];
+                let d = src[plane + iy1 * w + ix];
+                let e = src[plane + iy1 * w + ix1];
+                let top = a + tx * (b - a);
+                let bot = d + tx * (e - d);
+                dst[(ci * out + oy) * out + ox] = top + ty * (bot - top);
+            }
+        }
+    }
+}
+
+/// ImageNet-style crop policies of §5.2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CropPolicy {
+    /// Inception-style RandomResizedCrop: area in [8%, 100%], aspect in
+    /// [3/4, 4/3] (paper "Heavy RRC").
+    HeavyRrc,
+    /// Resize shorter side to target, then random square crop (paper
+    /// "Light RRC").
+    LightRrc,
+    /// Center crop with a crop ratio (paper CC(size, ratio) evaluation).
+    Center { ratio_pct: u32 },
+}
+
+impl CropPolicy {
+    /// Apply to one image, producing an `out x out` crop.
+    pub fn apply_into(
+        &self,
+        dst: &mut [f32],
+        src: &[f32],
+        c: usize,
+        h: usize,
+        w: usize,
+        out: usize,
+        rng: &mut Rng,
+    ) {
+        match *self {
+            CropPolicy::HeavyRrc => {
+                let area = (h * w) as f32;
+                // Torchvision algorithm: 10 attempts, then center fallback.
+                for _ in 0..10 {
+                    let target = area * rng.uniform_in(0.08, 1.0);
+                    // log-uniform aspect in [3/4, 4/3]
+                    let la = (3f32 / 4.0).ln();
+                    let lb = (4f32 / 3.0).ln();
+                    let aspect = rng.uniform_in(la, lb).exp();
+                    let cw = (target * aspect).sqrt();
+                    let ch = (target / aspect).sqrt();
+                    if cw <= w as f32 && ch <= h as f32 {
+                        let y0 = rng.uniform_in(0.0, h as f32 - ch);
+                        let x0 = rng.uniform_in(0.0, w as f32 - cw);
+                        resample_crop_into(dst, src, c, h, w, y0, x0, ch, cw, out);
+                        return;
+                    }
+                }
+                let side = h.min(w) as f32;
+                let y0 = (h as f32 - side) / 2.0;
+                let x0 = (w as f32 - side) / 2.0;
+                resample_crop_into(dst, src, c, h, w, y0, x0, side, side, out);
+            }
+            CropPolicy::LightRrc => {
+                // Shorter side resized to `out`, random out x out crop:
+                // equivalently crop a random `short x short` square and
+                // resample to out.
+                let side = h.min(w) as f32;
+                let y0 = rng.uniform_in(0.0, h as f32 - side);
+                let x0 = rng.uniform_in(0.0, w as f32 - side);
+                resample_crop_into(dst, src, c, h, w, y0, x0, side, side, out);
+            }
+            CropPolicy::Center { ratio_pct } => {
+                let ratio = ratio_pct as f32 / 100.0;
+                let side = h.min(w) as f32 * ratio;
+                let y0 = (h as f32 - side) / 2.0;
+                let x0 = (w as f32 - side) / 2.0;
+                resample_crop_into(dst, src, c, h, w, y0, x0, side, side, out);
+            }
+        }
+    }
+}
+
+/// Batch augmentation settings (the paper's `hyp['aug']` plus policy
+/// extensions used by the §5.2 harness).
+#[derive(Clone, Debug)]
+pub struct AugConfig {
+    pub flip: FlipMode,
+    /// Max |translation| in pixels (paper: 2); 0 disables.
+    pub translate: usize,
+    /// Cutout square size (paper airbench96: 12); 0 disables.
+    pub cutout: usize,
+    /// Optional resized-crop policy (ImageNet-style experiments). When set,
+    /// it replaces the translate step.
+    pub crop: Option<CropPolicy>,
+    /// Seed for the alternating-flip hash (paper Listing 2 `seed=42`).
+    pub flip_seed: u64,
+}
+
+impl Default for AugConfig {
+    fn default() -> Self {
+        AugConfig {
+            flip: FlipMode::Alternating,
+            translate: 2,
+            cutout: 0,
+            crop: None,
+            flip_seed: 42,
+        }
+    }
+}
+
+impl AugConfig {
+    pub fn none() -> AugConfig {
+        AugConfig {
+            flip: FlipMode::None,
+            translate: 0,
+            cutout: 0,
+            crop: None,
+            flip_seed: 42,
+        }
+    }
+}
+
+/// Apply the full augmentation pipeline for one batch.
+///
+/// `indices` are dataset indices of the batch rows (alternating flip is a
+/// function of the *example identity*, not batch position). Output images
+/// are written into `out` (shape `[B, C, out_hw, out_hw]`).
+pub fn apply_batch(
+    out: &mut Tensor,
+    dataset_images: &Tensor,
+    indices: &[u32],
+    epoch: u64,
+    cfg: &AugConfig,
+    rng: &mut Rng,
+    scratch: &mut Vec<f32>,
+) {
+    let (_, c, h, w) = dataset_images.dims4();
+    let (ob, oc, oh, ow) = out.dims4();
+    debug_assert_eq!(oc, c);
+    debug_assert_eq!(ob, indices.len());
+    scratch.resize(c * h * w, 0.0);
+    for (row, &idx) in indices.iter().enumerate() {
+        let src = dataset_images.image(idx as usize);
+        let dst = out.image_mut(row);
+        let flipped = flip_decision(cfg.flip, idx as u64, epoch, cfg.flip_seed, rng);
+
+        // Stage 1: flip (into scratch if any geometric stage follows).
+        let geo_src: &[f32] = if flipped {
+            flip_into(scratch, src, c, h, w);
+            &scratch[..]
+        } else {
+            src
+        };
+
+        // Stage 2: geometry — RRC policy, reflect translate, or (when the
+        // dataset resolution differs from the model input, e.g. the
+        // imagenet-like 48x48 canvas) a full-frame resample.
+        if let Some(policy) = cfg.crop {
+            policy.apply_into(dst, geo_src, c, h, w, oh, rng);
+        } else if (oh, ow) != (h, w) {
+            CropPolicy::Center { ratio_pct: 100 }
+                .apply_into(dst, geo_src, c, h, w, oh, rng);
+        } else if cfg.translate > 0 {
+            let t = cfg.translate as i64;
+            let dy = rng.int_in(-t, t);
+            let dx = rng.int_in(-t, t);
+            translate_reflect_into(dst, geo_src, c, h, w, dy, dx);
+        } else {
+            dst.copy_from_slice(geo_src);
+        }
+
+        // Stage 3: cutout.
+        if cfg.cutout > 0 {
+            cutout_inplace(dst, c, oh, ow, cfg.cutout, rng);
+        }
+    }
+}
+
+/// The six TTA views of §3.5 with their paper weights: (flip, dy, dx, weight).
+/// Views of the untranslated image weigh 0.25 each; the four translated
+/// views weigh 0.125 each.
+pub const TTA_VIEWS: [(bool, i64, i64, f32); 6] = [
+    (false, 0, 0, 0.25),
+    (true, 0, 0, 0.25),
+    (false, -1, -1, 0.125),
+    (true, -1, -1, 0.125),
+    (false, 1, 1, 0.125),
+    (true, 1, 1, 0.125),
+];
+
+/// Produce TTA view `v` of a batch: mirror and/or reflect-translate by one
+/// pixel (§3.5's up-left / down-right crops).
+pub fn tta_view_into(
+    out: &mut Tensor,
+    images: &Tensor,
+    view: (bool, i64, i64, f32),
+    scratch: &mut Vec<f32>,
+) {
+    let (n, c, h, w) = images.dims4();
+    debug_assert_eq!(out.dims4(), (n, c, h, w));
+    let (flip, dy, dx, _) = view;
+    scratch.resize(c * h * w, 0.0);
+    for i in 0..n {
+        let src = images.image(i);
+        let dst = out.image_mut(i);
+        let stage: &[f32] = if flip {
+            flip_into(scratch, src, c, h, w);
+            &scratch[..]
+        } else {
+            src
+        };
+        if dy != 0 || dx != 0 {
+            translate_reflect_into(dst, stage, c, h, w, dy, dx);
+        } else {
+            dst.copy_from_slice(stage);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    fn img_seq(c: usize, h: usize, w: usize) -> Vec<f32> {
+        (0..c * h * w).map(|i| i as f32).collect()
+    }
+
+    #[test]
+    fn flip_reverses_rows() {
+        let src = img_seq(1, 2, 3); // rows [0,1,2],[3,4,5]
+        let mut dst = vec![0.0; 6];
+        flip_into(&mut dst, &src, 1, 2, 3);
+        assert_eq!(dst, vec![2.0, 1.0, 0.0, 5.0, 4.0, 3.0]);
+    }
+
+    #[test]
+    fn flip_is_involution() {
+        proptest::check(
+            "flip_involution",
+            50,
+            |r| {
+                let (c, h, w) = (3usize, 1 + r.below(8), 1 + r.below(8));
+                let img: Vec<f32> = (0..c * h * w).map(|_| r.uniform()).collect();
+                (c, h, w, img)
+            },
+            |(c, h, w, img)| {
+                let mut once = vec![0.0; img.len()];
+                let mut twice = vec![0.0; img.len()];
+                flip_into(&mut once, img, *c, *h, *w);
+                flip_into(&mut twice, &once, *c, *h, *w);
+                twice == *img
+            },
+        );
+    }
+
+    #[test]
+    fn flip_inplace_matches_flip_into() {
+        let src = img_seq(2, 3, 4);
+        let mut a = src.clone();
+        flip_inplace(&mut a, 2, 3, 4);
+        let mut b = vec![0.0; src.len()];
+        flip_into(&mut b, &src, 2, 3, 4);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn alternating_flip_alternates_every_epoch() {
+        // Core §3.6 invariant: for every index, consecutive epochs make
+        // opposite decisions.
+        let mut rng = Rng::new(0);
+        for idx in 0..500u64 {
+            for e in 0..6u64 {
+                let a = flip_decision(FlipMode::Alternating, idx, e, 42, &mut rng);
+                let b = flip_decision(FlipMode::Alternating, idx, e + 1, 42, &mut rng);
+                assert_ne!(a, b, "idx={idx} epoch={e}");
+            }
+        }
+    }
+
+    #[test]
+    fn alternating_flip_first_epoch_is_balanced() {
+        let mut rng = Rng::new(0);
+        let flipped = (0..100_000u64)
+            .filter(|&i| flip_decision(FlipMode::Alternating, i, 0, 42, &mut rng))
+            .count() as f64
+            / 100_000.0;
+        assert!((flipped - 0.5).abs() < 0.01, "{flipped}");
+    }
+
+    #[test]
+    fn alternating_pair_of_epochs_covers_all_2n_views() {
+        // Paper Fig 1: every pair of consecutive epochs contains all 2N
+        // unique inputs; random flip covers only ~1.5N.
+        let n = 10_000u64;
+        let mut rng = Rng::new(1);
+        let alt_unique: usize = (0..n)
+            .map(|i| {
+                let a = flip_decision(FlipMode::Alternating, i, 4, 42, &mut rng);
+                let b = flip_decision(FlipMode::Alternating, i, 5, 42, &mut rng);
+                if a != b { 2 } else { 1 }
+            })
+            .sum();
+        assert_eq!(alt_unique, 2 * n as usize);
+        let rand_unique: usize = (0..n)
+            .map(|i| {
+                let a = flip_decision(FlipMode::Random, i, 4, 42, &mut rng);
+                let b = flip_decision(FlipMode::Random, i, 5, 42, &mut rng);
+                if a != b { 2 } else { 1 }
+            })
+            .sum();
+        let frac = rand_unique as f64 / n as f64;
+        assert!((frac - 1.5).abs() < 0.05, "random flip unique ratio {frac}");
+    }
+
+    #[test]
+    fn alternating_paper_matches_listing2_parities() {
+        // flip_mask = (hash_fn(i) + epoch) % 2 == 0, seed=42; parities of
+        // hash_fn from Python hashlib: i=0 -> even, 1 -> even, 2 -> odd.
+        let mut rng = Rng::new(0);
+        let f = |i, e| flip_decision(FlipMode::AlternatingPaper, i, e, 42, &mut Rng::new(0));
+        assert!(f(0, 0)); // (even + 0) % 2 == 0 -> flip
+        assert!(f(1, 0));
+        assert!(!f(2, 0)); // odd
+        // alternates every epoch, like the fast-hash mode
+        for idx in 0..64u64 {
+            for e in 0..4u64 {
+                let a = flip_decision(FlipMode::AlternatingPaper, idx, e, 42, &mut rng);
+                let b = flip_decision(FlipMode::AlternatingPaper, idx, e + 1, 42, &mut rng);
+                assert_ne!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn flip_none_never_flips() {
+        let mut rng = Rng::new(2);
+        assert!((0..100).all(|i| !flip_decision(FlipMode::None, i, 0, 42, &mut rng)));
+    }
+
+    #[test]
+    fn flip_mode_parse_round_trip() {
+        for m in [FlipMode::None, FlipMode::Random, FlipMode::Alternating] {
+            assert_eq!(FlipMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(FlipMode::parse("alt"), Some(FlipMode::Alternating));
+        assert_eq!(FlipMode::parse("bogus"), None);
+    }
+
+    #[test]
+    fn translate_zero_is_identity() {
+        let src = img_seq(3, 5, 5);
+        let mut dst = vec![0.0; src.len()];
+        translate_reflect_into(&mut dst, &src, 3, 5, 5, 0, 0);
+        assert_eq!(dst, src);
+    }
+
+    #[test]
+    fn translate_shifts_content() {
+        // 1x3x3 image, shift right by 1 (dx = -1 reads from x-1):
+        let src = img_seq(1, 3, 3);
+        let mut dst = vec![0.0; 9];
+        translate_reflect_into(&mut dst, &src, 1, 3, 3, 0, -1);
+        // row 0 = [reflect(-1)=1, 0, 1]
+        assert_eq!(&dst[0..3], &[1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn translate_reflect_has_no_edge_repeat() {
+        // PyTorch 'reflect': index -1 maps to 1 (not 0), -2 -> 2.
+        let src = img_seq(1, 1, 5);
+        let mut dst = vec![0.0; 5];
+        translate_reflect_into(&mut dst, &src, 1, 1, 5, 0, -2);
+        assert_eq!(dst, vec![2.0, 1.0, 0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn translate_preserves_multiset_when_within_bounds_roundtrip() {
+        proptest::check(
+            "translate_roundtrip_interior",
+            40,
+            |r| {
+                let h = 8usize;
+                let img: Vec<f32> = (0..h * h).map(|_| r.uniform()).collect();
+                let dy = r.int_in(-2, 2);
+                let dx = r.int_in(-2, 2);
+                (img, dy, dx)
+            },
+            |(img, dy, dx)| {
+                let h = 8usize;
+                let mut fwd = vec![0.0; h * h];
+                translate_reflect_into(&mut fwd, img, 1, h, h, *dy, *dx);
+                // Interior pixels (away from reflection zone) must round-trip.
+                let mut back = vec![0.0; h * h];
+                translate_reflect_into(&mut back, &fwd, 1, h, h, -dy, -dx);
+                (2..6).all(|y| {
+                    (2..6).all(|x| (back[y * h + x] - img[y * h + x]).abs() < 1e-6)
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn cutout_zeroes_a_square() {
+        let mut rng = Rng::new(3);
+        let mut img = vec![1.0; 3 * 16 * 16];
+        cutout_inplace(&mut img, 3, 16, 16, 8, &mut rng);
+        let zeros = img.iter().filter(|&&v| v == 0.0).count();
+        assert!(zeros > 0, "cutout zeroed nothing");
+        assert!(zeros <= 3 * 8 * 8, "cutout too large: {zeros}");
+        // all three channels cut identically
+        let plane = 16 * 16;
+        for p in 0..plane {
+            assert_eq!(img[p] == 0.0, img[plane + p] == 0.0);
+            assert_eq!(img[p] == 0.0, img[2 * plane + p] == 0.0);
+        }
+    }
+
+    #[test]
+    fn cutout_never_exceeds_size() {
+        proptest::check(
+            "cutout_bounds",
+            60,
+            |r| (1 + r.below(12), Rng::new(r.next_u64())),
+            |(size, seed_rng)| {
+                let mut rng = seed_rng.clone();
+                let mut img = vec![1.0; 20 * 20];
+                cutout_inplace(&mut img, 1, 20, 20, *size, &mut rng);
+                let zeros = img.iter().filter(|&&v| v == 0.0).count();
+                zeros <= size * size
+            },
+        );
+    }
+
+    #[test]
+    fn resample_identity_crop_is_identity() {
+        let src = img_seq(1, 4, 4);
+        let mut dst = vec![0.0; 16];
+        resample_crop_into(&mut dst, &src, 1, 4, 4, 0.0, 0.0, 4.0, 4.0, 4);
+        for (a, b) in dst.iter().zip(&src) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn resample_downscale_averages() {
+        // 2x2 blocks of a constant-block image downsample exactly.
+        let mut src = vec![0.0; 4 * 4];
+        for y in 0..4 {
+            for x in 0..4 {
+                src[y * 4 + x] = ((y / 2) * 2 + x / 2) as f32;
+            }
+        }
+        let mut dst = vec![0.0; 4];
+        resample_crop_into(&mut dst, &src, 1, 4, 4, 0.0, 0.0, 4.0, 4.0, 2);
+        assert_eq!(dst, vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn center_crop_full_ratio_is_resize() {
+        let src = img_seq(1, 6, 6);
+        let mut rng = Rng::new(0);
+        let mut dst = vec![0.0; 36];
+        CropPolicy::Center { ratio_pct: 100 }.apply_into(&mut dst, &src, 1, 6, 6, 6, &mut rng);
+        for (a, b) in dst.iter().zip(&src) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn heavy_rrc_output_in_input_range() {
+        proptest::check(
+            "rrc_range",
+            30,
+            |r| Rng::new(r.next_u64()),
+            |seed_rng| {
+                let mut rng = seed_rng.clone();
+                let src: Vec<f32> = (0..3 * 48 * 48)
+                    .map(|i| (i % 97) as f32 / 97.0)
+                    .collect();
+                let mut dst = vec![-1.0; 3 * 32 * 32];
+                CropPolicy::HeavyRrc.apply_into(&mut dst, &src, 3, 48, 48, 32, &mut rng);
+                dst.iter().all(|&v| (0.0..=1.0).contains(&v))
+            },
+        );
+    }
+
+    #[test]
+    fn light_rrc_is_square_crop_no_scale_when_square_input() {
+        // On a square input, Light RRC at out == h is identity.
+        let src = img_seq(1, 8, 8);
+        let mut rng = Rng::new(5);
+        let mut dst = vec![0.0; 64];
+        CropPolicy::LightRrc.apply_into(&mut dst, &src, 1, 8, 8, 8, &mut rng);
+        for (a, b) in dst.iter().zip(&src) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn tta_views_weights_sum_to_one() {
+        let s: f32 = TTA_VIEWS.iter().map(|v| v.3).sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        // untranslated views weigh double the translated ones (paper §3.5)
+        assert_eq!(TTA_VIEWS[0].3, 2.0 * TTA_VIEWS[2].3);
+    }
+
+    #[test]
+    fn tta_view_zero_is_identity_and_one_is_mirror() {
+        let images =
+            Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let mut out = Tensor::zeros(&[1, 1, 2, 2]);
+        let mut scratch = Vec::new();
+        tta_view_into(&mut out, &images, TTA_VIEWS[0], &mut scratch);
+        assert_eq!(out.data(), images.data());
+        tta_view_into(&mut out, &images, TTA_VIEWS[1], &mut scratch);
+        assert_eq!(out.data(), &[2.0, 1.0, 4.0, 3.0]);
+    }
+
+    #[test]
+    fn apply_batch_respects_flip_mode_none_and_identity_translate() {
+        let ds = Tensor::from_vec(&[2, 1, 2, 2], vec![1., 2., 3., 4., 5., 6., 7., 8.]).unwrap();
+        let mut out = Tensor::zeros(&[2, 1, 2, 2]);
+        let mut rng = Rng::new(0);
+        let mut scratch = Vec::new();
+        let cfg = AugConfig::none();
+        apply_batch(&mut out, &ds, &[1, 0], 0, &cfg, &mut rng, &mut scratch);
+        assert_eq!(out.image(0), ds.image(1));
+        assert_eq!(out.image(1), ds.image(0));
+    }
+
+    #[test]
+    fn apply_batch_alternating_consistent_across_batches() {
+        // The flip decision depends on dataset index + epoch only, never on
+        // batch position or rng state.
+        let ds = Tensor::from_vec(&[4, 1, 1, 2], (0..8).map(|i| i as f32).collect()).unwrap();
+        let cfg = AugConfig {
+            flip: FlipMode::Alternating,
+            translate: 0,
+            ..AugConfig::default()
+        };
+        let mut scratch = Vec::new();
+        let mut out_a = Tensor::zeros(&[2, 1, 1, 2]);
+        let mut out_b = Tensor::zeros(&[2, 1, 1, 2]);
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(999);
+        apply_batch(&mut out_a, &ds, &[2, 3], 5, &cfg, &mut r1, &mut scratch);
+        apply_batch(&mut out_b, &ds, &[3, 2], 5, &cfg, &mut r2, &mut scratch);
+        assert_eq!(out_a.image(0), out_b.image(1));
+        assert_eq!(out_a.image(1), out_b.image(0));
+    }
+}

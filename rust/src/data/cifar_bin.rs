@@ -1,0 +1,160 @@
+//! Real CIFAR-10/100 binary-format reader.
+//!
+//! If `data_batch_1.bin` … `test_batch.bin` (CIFAR-10) or `train.bin` /
+//! `test.bin` (CIFAR-100) are present under a directory, the benchmarks use
+//! the real dataset automatically; otherwise they fall back to
+//! `synthetic::cifar_like` (this testbed has no network access —
+//! DESIGN.md §3).
+//!
+//! CIFAR-10 record: 1 label byte + 3072 pixel bytes (RRR GGG BBB planes,
+//! row-major). CIFAR-100 record: coarse label byte + fine label byte + 3072.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{normalize_inplace, Dataset};
+use crate::tensor::Tensor;
+
+const REC10: usize = 1 + 3072;
+const REC100: usize = 2 + 3072;
+
+fn parse_records(raw: &[u8], rec: usize, label_off: usize) -> Result<(Tensor, Vec<u16>)> {
+    if raw.len() % rec != 0 {
+        bail!("file size {} is not a multiple of record size {rec}", raw.len());
+    }
+    let n = raw.len() / rec;
+    let mut images = Tensor::zeros(&[n, 3, 32, 32]);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let r = &raw[i * rec..(i + 1) * rec];
+        labels.push(r[label_off] as u16);
+        let px = &r[rec - 3072..];
+        let img = images.image_mut(i);
+        for (dst, &src) in img.iter_mut().zip(px) {
+            *dst = src as f32 / 255.0;
+        }
+    }
+    Ok((images, labels))
+}
+
+fn load_files(files: &[PathBuf], rec: usize, label_off: usize, k: usize) -> Result<Dataset> {
+    let mut all = Vec::new();
+    for f in files {
+        all.extend(fs::read(f).with_context(|| format!("reading {f:?}"))?);
+    }
+    let (mut images, labels) = parse_records(&all, rec, label_off)?;
+    let (mean, std) = normalize_inplace(&mut images);
+    Ok(Dataset {
+        images,
+        labels,
+        num_classes: k,
+        mean,
+        std,
+    })
+}
+
+/// Load CIFAR-10 train (5 batches) or test from `dir`. Returns Err if
+/// files are missing.
+pub fn load_cifar10(dir: &Path, train: bool) -> Result<Dataset> {
+    let files: Vec<PathBuf> = if train {
+        (1..=5).map(|i| dir.join(format!("data_batch_{i}.bin"))).collect()
+    } else {
+        vec![dir.join("test_batch.bin")]
+    };
+    for f in &files {
+        if !f.exists() {
+            bail!("CIFAR-10 file not found: {f:?}");
+        }
+    }
+    load_files(&files, REC10, 0, 10)
+}
+
+/// Load CIFAR-100 (fine labels) train/test from `dir`.
+pub fn load_cifar100(dir: &Path, train: bool) -> Result<Dataset> {
+    let f = dir.join(if train { "train.bin" } else { "test.bin" });
+    if !f.exists() {
+        bail!("CIFAR-100 file not found: {f:?}");
+    }
+    load_files(&[f], REC100, 1, 100)
+}
+
+/// Real CIFAR-10 if present under `$AIRBENCH_DATA` or `./data/cifar10`,
+/// else `None` (caller falls back to the synthetic generator).
+pub fn try_real_cifar10(train: bool) -> Option<Dataset> {
+    let candidates = [
+        std::env::var("AIRBENCH_DATA").ok().map(PathBuf::from),
+        Some(PathBuf::from("data/cifar10")),
+        Some(PathBuf::from("data/cifar-10-batches-bin")),
+    ];
+    for dir in candidates.into_iter().flatten() {
+        if let Ok(ds) = load_cifar10(&dir, train) {
+            return Some(ds);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn fake_batch(dir: &Path, name: &str, n: usize, rec: usize, label_off: usize) {
+        let mut buf = vec![0u8; n * rec];
+        for i in 0..n {
+            buf[i * rec + label_off] = (i % 10) as u8;
+            // put a recognizable pixel: first red byte = i
+            buf[i * rec + rec - 3072] = i as u8;
+        }
+        let mut f = fs::File::create(dir.join(name)).unwrap();
+        f.write_all(&buf).unwrap();
+    }
+
+    #[test]
+    fn reads_cifar10_layout() {
+        let dir = std::env::temp_dir().join("airbench_cifar_test");
+        fs::create_dir_all(&dir).unwrap();
+        for i in 1..=5 {
+            fake_batch(&dir, &format!("data_batch_{i}.bin"), 4, REC10, 0);
+        }
+        fake_batch(&dir, "test_batch.bin", 4, REC10, 0);
+        let train = load_cifar10(&dir, true).unwrap();
+        assert_eq!(train.len(), 20);
+        assert_eq!(train.images.shape(), &[20, 3, 32, 32]);
+        assert_eq!(train.labels[3], 3);
+        let test = load_cifar10(&dir, false).unwrap();
+        assert_eq!(test.len(), 4);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reads_cifar100_fine_labels() {
+        let dir = std::env::temp_dir().join("airbench_cifar100_test");
+        fs::create_dir_all(&dir).unwrap();
+        fake_batch(&dir, "train.bin", 6, REC100, 1);
+        let ds = load_cifar100(&dir, true).unwrap();
+        assert_eq!(ds.len(), 6);
+        assert_eq!(ds.num_classes, 100);
+        assert_eq!(ds.labels[2], 2);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_files_error() {
+        let dir = std::env::temp_dir().join("airbench_missing");
+        fs::create_dir_all(&dir).unwrap();
+        assert!(load_cifar10(&dir, true).is_err());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let dir = std::env::temp_dir().join("airbench_trunc");
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(dir.join("test_batch.bin"), vec![0u8; 100]).unwrap();
+        assert!(load_cifar10(&dir, false).is_err());
+        fs::remove_dir_all(&dir).ok();
+    }
+}

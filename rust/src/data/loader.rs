@@ -1,0 +1,346 @@
+//! Epoch loader: the paper's `CifarLoader` (Listing 4) rebuilt in Rust.
+//!
+//! Owns the epoch counter that drives alternating flip (§3.6), the epoch
+//! ordering policy (random reshuffling vs textbook with-replacement SGD —
+//! Table 1), batching with `drop_last` semantics, and fractional epoch
+//! counts (airbench94 trains for 9.9 epochs: the loop stops mid-epoch).
+
+use crate::data::augment::{apply_batch, AugConfig};
+use crate::data::Dataset;
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+/// Epoch ordering policy (paper Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OrderPolicy {
+    /// Standard practice: a fresh permutation each epoch ("random
+    /// reshuffling") — every example seen exactly once per epoch.
+    Reshuffle,
+    /// Textbook SGD: N i.i.d. draws with replacement per "epoch"
+    /// (~0.632N unique examples — §3.6).
+    WithReplacement,
+    /// Fixed order (evaluation / deterministic tests).
+    Sequential,
+}
+
+impl OrderPolicy {
+    pub fn parse(s: &str) -> Option<OrderPolicy> {
+        match s {
+            "reshuffle" => Some(OrderPolicy::Reshuffle),
+            "replacement" => Some(OrderPolicy::WithReplacement),
+            "sequential" => Some(OrderPolicy::Sequential),
+            _ => None,
+        }
+    }
+}
+
+/// Streaming batch loader over a [`Dataset`].
+pub struct Loader<'a> {
+    dataset: &'a Dataset,
+    pub batch_size: usize,
+    pub aug: AugConfig,
+    pub order: OrderPolicy,
+    pub drop_last: bool,
+    /// Epochs completed so far (drives alternating flip parity).
+    pub epoch: u64,
+    rng: Rng,
+    /// Preallocated batch buffer, reused across batches.
+    batch_images: Tensor,
+    scratch: Vec<f32>,
+}
+
+/// One batch: augmented images + labels + the dataset indices they came from.
+pub struct Batch<'b> {
+    pub images: &'b Tensor,
+    pub labels: Vec<i32>,
+    pub indices: Vec<u32>,
+}
+
+impl<'a> Loader<'a> {
+    pub fn new(
+        dataset: &'a Dataset,
+        batch_size: usize,
+        aug: AugConfig,
+        order: OrderPolicy,
+        drop_last: bool,
+        seed: u64,
+    ) -> Loader<'a> {
+        let (_, c, h, w) = dataset.images.dims4();
+        Loader {
+            dataset,
+            batch_size,
+            aug,
+            order,
+            drop_last,
+            epoch: 0,
+            rng: Rng::new(seed ^ 0x10adE12),
+            batch_images: Tensor::zeros(&[batch_size, c, h, w]),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Emit batches at `hw` x `hw` (the model's input resolution) instead
+    /// of the dataset resolution — required when they differ (the crop
+    /// policy, or a full-frame resample, bridges the gap).
+    pub fn with_output_hw(mut self, hw: usize) -> Self {
+        let (_, c, _, _) = self.dataset.images.dims4();
+        self.batch_images = Tensor::zeros(&[self.batch_size, c, hw, hw]);
+        self
+    }
+
+    /// Number of batches per epoch.
+    pub fn batches_per_epoch(&self) -> usize {
+        let n = self.dataset.len();
+        if self.drop_last {
+            n / self.batch_size
+        } else {
+            n.div_ceil(self.batch_size)
+        }
+    }
+
+    /// The epoch's example order under the current policy.
+    fn epoch_order(&mut self) -> Vec<u32> {
+        let n = self.dataset.len();
+        match self.order {
+            OrderPolicy::Reshuffle => self.rng.permutation(n),
+            OrderPolicy::WithReplacement => self.rng.with_replacement(n),
+            OrderPolicy::Sequential => (0..n as u32).collect(),
+        }
+    }
+
+    /// Run one epoch, invoking `f` on each augmented batch. Returns the
+    /// number of batches emitted. Stops early (mid-epoch) when `f` returns
+    /// `false` — how the trainer realizes fractional epochs like 9.9.
+    pub fn run_epoch(&mut self, mut f: impl FnMut(Batch) -> bool) -> usize {
+        let order = self.epoch_order();
+        let bpe = self.batches_per_epoch();
+        let mut emitted = 0;
+        for b in 0..bpe {
+            let start = b * self.batch_size;
+            let end = ((b + 1) * self.batch_size).min(order.len());
+            let idxs = &order[start..end];
+            // Last partial batch (non-drop_last): still uses the full-size
+            // buffer but only the first rows are meaningful; we instead
+            // allocate an exact-size tensor for that rare case.
+            let images: &Tensor = if idxs.len() == self.batch_size {
+                apply_batch(
+                    &mut self.batch_images,
+                    &self.dataset.images,
+                    idxs,
+                    self.epoch,
+                    &self.aug,
+                    &mut self.rng,
+                    &mut self.scratch,
+                );
+                &self.batch_images
+            } else {
+                let (_, c, oh, ow) = self.batch_images.dims4();
+                let mut t = Tensor::zeros(&[idxs.len(), c, oh, ow]);
+                apply_batch(
+                    &mut t,
+                    &self.dataset.images,
+                    idxs,
+                    self.epoch,
+                    &self.aug,
+                    &mut self.rng,
+                    &mut self.scratch,
+                );
+                self.batch_images = t;
+                &self.batch_images
+            };
+            let labels: Vec<i32> = idxs
+                .iter()
+                .map(|&i| self.dataset.labels[i as usize] as i32)
+                .collect();
+            emitted += 1;
+            if !f(Batch {
+                images,
+                labels,
+                indices: idxs.to_vec(),
+            }) {
+                break;
+            }
+        }
+        self.epoch += 1;
+        emitted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::augment::FlipMode;
+    use crate::data::synthetic::{cifar_like, SynthConfig};
+
+    fn tiny_ds(n: usize) -> Dataset {
+        cifar_like(&SynthConfig::default().with_n(n), 11, 0)
+    }
+
+    #[test]
+    fn batches_per_epoch_drop_last_semantics() {
+        let ds = tiny_ds(10);
+        let l = Loader::new(&ds, 4, AugConfig::none(), OrderPolicy::Sequential, true, 0);
+        assert_eq!(l.batches_per_epoch(), 2);
+        let l2 = Loader::new(&ds, 4, AugConfig::none(), OrderPolicy::Sequential, false, 0);
+        assert_eq!(l2.batches_per_epoch(), 3);
+    }
+
+    #[test]
+    fn reshuffle_epoch_covers_every_example_once() {
+        let ds = tiny_ds(32);
+        let mut l = Loader::new(&ds, 8, AugConfig::none(), OrderPolicy::Reshuffle, true, 1);
+        let mut seen = vec![0usize; 32];
+        l.run_epoch(|b| {
+            for &i in &b.indices {
+                seen[i as usize] += 1;
+            }
+            true
+        });
+        assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+    }
+
+    #[test]
+    fn with_replacement_repeats_examples() {
+        let ds = tiny_ds(64);
+        let mut l = Loader::new(
+            &ds,
+            8,
+            AugConfig::none(),
+            OrderPolicy::WithReplacement,
+            true,
+            2,
+        );
+        let mut seen = vec![0usize; 64];
+        l.run_epoch(|b| {
+            for &i in &b.indices {
+                seen[i as usize] += 1;
+            }
+            true
+        });
+        let unique = seen.iter().filter(|&&c| c > 0).count();
+        assert!(unique < 60, "unique={unique} should be ~0.63*64");
+        assert!(seen.iter().any(|&c| c > 1));
+    }
+
+    #[test]
+    fn labels_match_indices() {
+        let ds = tiny_ds(16);
+        let mut l = Loader::new(&ds, 4, AugConfig::none(), OrderPolicy::Reshuffle, true, 3);
+        l.run_epoch(|b| {
+            for (j, &i) in b.indices.iter().enumerate() {
+                assert_eq!(b.labels[j], ds.labels[i as usize] as i32);
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn early_stop_mid_epoch() {
+        let ds = tiny_ds(32);
+        let mut l = Loader::new(&ds, 4, AugConfig::none(), OrderPolicy::Sequential, true, 4);
+        let mut count = 0;
+        let emitted = l.run_epoch(|_| {
+            count += 1;
+            count < 3
+        });
+        assert_eq!(emitted, 3);
+        assert_eq!(l.epoch, 1); // epoch counter still advances
+    }
+
+    #[test]
+    fn epochs_advance_alternating_flip() {
+        // With translate off and alternating flip on, the same sequential
+        // batch must mirror between consecutive epochs.
+        let ds = tiny_ds(8);
+        let aug = AugConfig {
+            flip: FlipMode::Alternating,
+            translate: 0,
+            ..AugConfig::default()
+        };
+        let mut l = Loader::new(&ds, 8, aug, OrderPolicy::Sequential, true, 5);
+        let mut e0 = Vec::new();
+        l.run_epoch(|b| {
+            e0 = b.images.data().to_vec();
+            true
+        });
+        let mut e1 = Vec::new();
+        l.run_epoch(|b| {
+            e1 = b.images.data().to_vec();
+            true
+        });
+        // every image differs (mirrored) between epochs
+        let (_, c, h, w) = ds.images.dims4();
+        let sz = c * h * w;
+        for i in 0..8 {
+            let a = &e0[i * sz..(i + 1) * sz];
+            let b = &e1[i * sz..(i + 1) * sz];
+            assert_ne!(a, b, "image {i} unchanged across epochs");
+            // and it's exactly the mirror:
+            let mut m = vec![0.0; sz];
+            crate::data::augment::flip_into(&mut m, a, c, h, w);
+            assert_eq!(m, b, "image {i} is not the mirror");
+        }
+    }
+
+    #[test]
+    fn partial_last_batch_sizes() {
+        let ds = tiny_ds(10);
+        let mut l = Loader::new(&ds, 4, AugConfig::none(), OrderPolicy::Sequential, false, 6);
+        let mut sizes = Vec::new();
+        l.run_epoch(|b| {
+            sizes.push(b.indices.len());
+            true
+        });
+        assert_eq!(sizes, vec![4, 4, 2]);
+    }
+
+    #[test]
+    fn output_hw_resamples_dataset_resolution() {
+        // 48x48 imagenet-like canvas -> 32x32 model input (the Table 3
+        // pipeline), via the crop policy or the full-frame fallback.
+        let ds = crate::data::synthetic::imagenet_like(8, 1, 0);
+        assert_eq!(ds.hw(), 48);
+        for aug in [
+            AugConfig::none(), // fallback: full-frame center resample
+            AugConfig {
+                crop: Some(crate::data::augment::CropPolicy::LightRrc),
+                translate: 0,
+                ..AugConfig::none()
+            },
+        ] {
+            let mut l = Loader::new(&ds, 4, aug, OrderPolicy::Sequential, true, 0)
+                .with_output_hw(32);
+            let mut shapes = Vec::new();
+            l.run_epoch(|b| {
+                shapes.push(b.images.shape().to_vec());
+                true
+            });
+            for s in &shapes {
+                assert_eq!(&s[1..], &[3, 32, 32]);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = tiny_ds(16);
+        let run = |seed| {
+            let mut l = Loader::new(
+                &ds,
+                4,
+                AugConfig::default(),
+                OrderPolicy::Reshuffle,
+                true,
+                seed,
+            );
+            let mut out = Vec::new();
+            l.run_epoch(|b| {
+                out.extend_from_slice(b.images.data());
+                true
+            });
+            out
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+}

@@ -1,0 +1,138 @@
+//! Data substrate: datasets, augmentation policies, and the epoch loader.
+//!
+//! This is the paper's `CifarLoader` (Listing 4) rebuilt as a Rust
+//! pipeline, plus the paper's *alternating flip* contribution (§3.6), the
+//! ImageNet-style crop policies of §5.2, and the data gates of this
+//! testbed: a real CIFAR-10/100 binary reader (used automatically when the
+//! files exist) and synthetic class-structured generators (used otherwise —
+//! see DESIGN.md §3).
+
+pub mod augment;
+pub mod cifar_bin;
+pub mod loader;
+pub mod synthetic;
+
+use crate::tensor::Tensor;
+
+/// An in-memory image-classification dataset, already converted to
+/// normalized f32 NCHW (the paper also normalizes once, up front).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// (N, C, H, W) normalized images.
+    pub images: Tensor,
+    /// N labels in `0..num_classes`.
+    pub labels: Vec<u16>,
+    pub num_classes: usize,
+    /// Per-channel mean/std used for normalization (kept for TTA padding).
+    pub mean: [f32; 3],
+    pub std: [f32; 3],
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn hw(&self) -> usize {
+        self.images.shape()[2]
+    }
+
+    /// Take the first `n` examples (whitening init uses the first 5000,
+    /// like the paper).
+    pub fn head(&self, n: usize) -> Dataset {
+        let n = n.min(self.len());
+        let (_, c, h, w) = self.images.dims4();
+        let img = Tensor::from_vec(
+            &[n, c, h, w],
+            self.images.data()[..n * c * h * w].to_vec(),
+        )
+        .expect("head slice");
+        Dataset {
+            images: img,
+            labels: self.labels[..n].to_vec(),
+            num_classes: self.num_classes,
+            mean: self.mean,
+            std: self.std,
+        }
+    }
+}
+
+/// Normalize raw `[0,1]` images in place with per-channel statistics,
+/// returning (mean, std) actually used.
+pub fn normalize_inplace(images: &mut Tensor) -> ([f32; 3], [f32; 3]) {
+    let (n, c, h, w) = images.dims4();
+    assert_eq!(c, 3);
+    let plane = h * w;
+    let mut mean = [0f64; 3];
+    let mut var = [0f64; 3];
+    let data = images.data();
+    for ni in 0..n {
+        for ci in 0..3 {
+            let base = (ni * c + ci) * plane;
+            for v in &data[base..base + plane] {
+                mean[ci] += *v as f64;
+            }
+        }
+    }
+    let cnt = (n * plane) as f64;
+    for m in &mut mean {
+        *m /= cnt;
+    }
+    let data = images.data();
+    for ni in 0..n {
+        for ci in 0..3 {
+            let base = (ni * c + ci) * plane;
+            for v in &data[base..base + plane] {
+                let d = *v as f64 - mean[ci];
+                var[ci] += d * d;
+            }
+        }
+    }
+    let std: Vec<f64> = var.iter().map(|v| (v / cnt).sqrt().max(1e-6)).collect();
+    let data = images.data_mut();
+    for ni in 0..n {
+        for ci in 0..3 {
+            let base = (ni * c + ci) * plane;
+            let (m, s) = (mean[ci] as f32, std[ci] as f32);
+            for v in &mut data[base..base + plane] {
+                *v = (*v - m) / s;
+            }
+        }
+    }
+    (
+        [mean[0] as f32, mean[1] as f32, mean[2] as f32],
+        [std[0] as f32, std[1] as f32, std[2] as f32],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn normalize_zero_mean_unit_std() {
+        let mut rng = Rng::new(0);
+        let mut img = Tensor::zeros(&[8, 3, 6, 6]);
+        for v in img.data_mut() {
+            *v = rng.uniform();
+        }
+        let (_, _) = normalize_inplace(&mut img);
+        let data = img.data();
+        let mean: f32 = data.iter().sum::<f32>() / data.len() as f32;
+        assert!(mean.abs() < 1e-4, "{mean}");
+    }
+
+    #[test]
+    fn head_slices() {
+        let ds = synthetic::cifar_like(&synthetic::SynthConfig::default().with_n(20), 7, 0);
+        let h = ds.head(5);
+        assert_eq!(h.len(), 5);
+        assert_eq!(h.images.shape()[0], 5);
+        assert_eq!(&h.labels[..], &ds.labels[..5]);
+    }
+}

@@ -1,0 +1,351 @@
+//! Synthetic class-structured image generators (the data gate, DESIGN.md §3).
+//!
+//! No dataset downloads exist on this testbed, so we synthesize
+//! CIFAR-shaped distributions that preserve the properties the paper's
+//! experiments actually exercise:
+//!
+//! * **learnable class structure** — each class is a smooth template
+//!   (per-class colors + 2-D sinusoid mixture + a localized blob) plus
+//!   instance jitter and pixel noise, so a small CNN climbs well above
+//!   chance within a few epochs;
+//! * **mirror asymmetry** — a class-consistent horizontal gradient and an
+//!   off-center blob make `flip(x)` a *distinct but label-preserving* view,
+//!   which is precisely the regime where horizontal-flip augmentation (and
+//!   hence alternating flip, §3.6) matters;
+//! * **tunable difficulty** — `noise` and `jitter` control the
+//!   accuracy ceiling so epochs-to-target curves have the paper's shape.
+//!
+//! `svhn_like` sets `mirror_asym = 0` AND makes flipped views *label
+//! violating* (digit-like chirality marker), reproducing Table 5's
+//! "flipping off for SVHN" regime.
+
+use crate::data::{normalize_inplace, Dataset};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+/// Generator parameters.
+#[derive(Clone, Debug)]
+pub struct SynthConfig {
+    pub n: usize,
+    pub num_classes: usize,
+    pub hw: usize,
+    /// Additive pixel-noise std (raw [0,1] scale).
+    pub noise: f32,
+    /// Instance-level phase/amplitude jitter.
+    pub jitter: f32,
+    /// Strength of the mirror-asymmetric cues (0 = flip-symmetric classes).
+    pub mirror_asym: f32,
+    /// If true, a chirality marker makes mirrored images out-of-class
+    /// (SVHN-digit-like regime).
+    pub chirality: bool,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        SynthConfig {
+            n: 2048,
+            num_classes: 10,
+            hw: 32,
+            noise: 0.30,
+            jitter: 0.9,
+            mirror_asym: 0.9,
+            chirality: false,
+        }
+    }
+}
+
+impl SynthConfig {
+    pub fn with_n(mut self, n: usize) -> Self {
+        self.n = n;
+        self
+    }
+
+    pub fn with_classes(mut self, k: usize) -> Self {
+        self.num_classes = k;
+        self
+    }
+
+    pub fn with_noise(mut self, noise: f32) -> Self {
+        self.noise = noise;
+        self
+    }
+}
+
+/// Per-class generative template.
+struct ClassProto {
+    color: [f32; 3],
+    freq: [(f32, f32); 2],
+    phase: [f32; 2],
+    grad_slope: f32, // mirror-asymmetric horizontal gradient
+    blob_x: f32,     // off-center blob (mirror-asymmetric position)
+    blob_y: f32,
+    blob_sigma: f32,
+}
+
+fn class_protos(cfg: &SynthConfig, rng: &mut Rng) -> Vec<ClassProto> {
+    (0..cfg.num_classes)
+        .map(|_| ClassProto {
+            color: [rng.uniform(), rng.uniform(), rng.uniform()],
+            freq: [
+                (rng.uniform_in(0.5, 3.0), rng.uniform_in(0.5, 3.0)),
+                (rng.uniform_in(2.0, 6.0), rng.uniform_in(2.0, 6.0)),
+            ],
+            phase: [rng.uniform_in(0.0, 6.28), rng.uniform_in(0.0, 6.28)],
+            grad_slope: rng.uniform_in(-1.0, 1.0),
+            blob_x: rng.uniform_in(0.15, 0.85),
+            blob_y: rng.uniform_in(0.15, 0.85),
+            blob_sigma: rng.uniform_in(0.08, 0.2),
+        })
+        .collect()
+}
+
+/// Generate a dataset. `seed` keys the *class structure* (prototypes);
+/// `split` keys the instance noise stream, so `(seed, 0)` and `(seed, 1)`
+/// are a train/test pair drawn from the SAME distribution — the regime
+/// every experiment needs. Different seeds give different class universes.
+fn generate(cfg: &SynthConfig, seed: u64, split: u64) -> Dataset {
+    let mut proto_rng = Rng::new(seed ^ 0x5EED_DA7A);
+    let protos = class_protos(cfg, &mut proto_rng);
+    let mut rng = Rng::new(seed ^ 0x5EED_DA7A).fork(0x5711 ^ split);
+    let hw = cfg.hw;
+    let mut images = Tensor::zeros(&[cfg.n, 3, hw, hw]);
+    let mut labels = Vec::with_capacity(cfg.n);
+    for i in 0..cfg.n {
+        let label = (i % cfg.num_classes) as u16;
+        labels.push(label);
+        let p = &protos[label as usize];
+        // instance jitter
+        let dphase = [
+            rng.normal() * cfg.jitter,
+            rng.normal() * cfg.jitter,
+        ];
+        let amp = 1.0 + rng.normal() * cfg.jitter * 0.5;
+        // Instance orientation: each class POPULATION is flip-symmetric
+        // (objects appear facing either way, as on CIFAR), while each
+        // INSTANCE is mirror-asymmetric. This is the regime where flip
+        // augmentation is a valid new view (paper §3.6); the chirality
+        // marker below deliberately breaks it for the SVHN case.
+        let orient = rng.coin(0.5);
+        let img = images.image_mut(i);
+        for ci in 0..3 {
+            let cbase = p.color[ci];
+            for y in 0..hw {
+                for x in 0..hw {
+                    // Class cues read the orientation-corrected coordinate;
+                    // the chirality marker reads the raw one.
+                    let xf_raw = x as f32 / hw as f32;
+                    let xf = if orient { xf_raw } else { 1.0 - xf_raw };
+                    let yf = y as f32 / hw as f32;
+                    let mut v = 0.45 * cbase + 0.2;
+                    // class texture
+                    v += 0.18
+                        * amp
+                        * ((p.freq[0].0 * 6.28 * xf + p.freq[0].1 * 6.28 * yf
+                            + p.phase[0]
+                            + dphase[0])
+                            .sin()
+                            + 0.6
+                                * (p.freq[1].0 * 6.28 * xf
+                                    + p.freq[1].1 * 6.28 * yf
+                                    + p.phase[1]
+                                    + dphase[1])
+                                    .sin());
+                    // mirror-asymmetric horizontal gradient
+                    v += cfg.mirror_asym * 0.25 * p.grad_slope * (xf - 0.5);
+                    // mirror-asymmetric localized blob
+                    let dx = xf - p.blob_x;
+                    let dy = yf - p.blob_y;
+                    let blob =
+                        (-(dx * dx + dy * dy) / (2.0 * p.blob_sigma * p.blob_sigma))
+                            .exp();
+                    v += cfg.mirror_asym * 0.35 * blob * if ci == (label as usize % 3) { 1.0 } else { -0.4 };
+                    // chirality marker (SVHN regime): a hard asymmetric
+                    // wedge shared by ALL classes so mirroring leaves the
+                    // class cue but corrupts the marker.
+                    if cfg.chirality && x < hw / 4 && y < hw / 4 && x > y {
+                        v += 0.5;
+                    }
+                    v += rng.normal() * cfg.noise;
+                    img[(ci * hw + y) * hw + x] = v.clamp(0.0, 1.0);
+                }
+            }
+        }
+    }
+    let (mean, std) = normalize_inplace(&mut images);
+    Dataset {
+        images,
+        labels,
+        num_classes: cfg.num_classes,
+        mean,
+        std,
+    }
+}
+
+/// CIFAR-10-like: 10 classes, moderate noise, mirror-asymmetric (flip is a
+/// useful augmentation, as on CIFAR).
+pub fn cifar_like(cfg: &SynthConfig, seed: u64, split: u64) -> Dataset {
+    generate(cfg, seed, split)
+}
+
+/// CIFAR-100-like (Table 5). The AOT model head is fixed at 10 logits, so
+/// the "100 fine classes" gate is substituted by a *finer-grained* 10-class
+/// task: higher instance jitter and noise, i.e. lower class separation —
+/// the axis on which CIFAR-100 is harder than CIFAR-10.
+pub fn cifar100_like(n: usize, seed: u64, split: u64) -> Dataset {
+    generate(
+        &SynthConfig {
+            n,
+            num_classes: 10,
+            noise: 0.38,
+            jitter: 1.3,
+            ..SynthConfig::default()
+        },
+        seed,
+        split,
+    )
+}
+
+/// ImageNet-like for Table 3: higher intra-class jitter (scale/crop
+/// variation is applied by the RRC policies downstream).
+pub fn imagenet_like(n: usize, seed: u64, split: u64) -> Dataset {
+    generate(
+        &SynthConfig {
+            n,
+            num_classes: 10,
+            hw: 48, // larger canvas so RRC crops at 32 have room to vary
+            noise: 0.15,
+            jitter: 0.5,
+            mirror_asym: 0.5,
+            chirality: false,
+        },
+        seed,
+        split,
+    )
+}
+
+/// SVHN-like (Table 5): chirality marker makes horizontal flip harmful —
+/// the paper turns flipping off for SVHN.
+pub fn svhn_like(n: usize, seed: u64, split: u64) -> Dataset {
+    generate(
+        &SynthConfig {
+            n,
+            num_classes: 10,
+            noise: 0.15,
+            mirror_asym: 0.1,
+            chirality: true,
+            ..SynthConfig::default()
+        },
+        seed,
+        split,
+    )
+}
+
+/// CINIC-10-like (Table 5): CIFAR-like but noisier / more diverse.
+pub fn cinic_like(n: usize, seed: u64, split: u64) -> Dataset {
+    generate(
+        &SynthConfig {
+            n,
+            num_classes: 10,
+            noise: 0.24,
+            jitter: 0.6,
+            ..SynthConfig::default()
+        },
+        seed,
+        split,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_labels() {
+        let ds = cifar_like(&SynthConfig::default().with_n(64), 1, 0);
+        assert_eq!(ds.images.shape(), &[64, 3, 32, 32]);
+        assert_eq!(ds.len(), 64);
+        assert!(ds.labels.iter().all(|&l| l < 10));
+        // balanced classes
+        let per = ds.labels.iter().filter(|&&l| l == 3).count();
+        assert!(per >= 6);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = cifar_like(&SynthConfig::default().with_n(8), 42, 0);
+        let b = cifar_like(&SynthConfig::default().with_n(8), 42, 0);
+        assert_eq!(a.images.data(), b.images.data());
+        let c = cifar_like(&SynthConfig::default().with_n(8), 43, 0);
+        assert_ne!(a.images.data(), c.images.data());
+    }
+
+    #[test]
+    fn classes_are_separable_by_mean_template() {
+        // Nearest-class-mean classifier on clean data must beat chance by a
+        // wide margin — the learnability floor for the whole benchmark.
+        let cfg = SynthConfig::default().with_n(400);
+        let train = cifar_like(&cfg, 7, 0);
+        // Same seed (same class universe), different split (fresh noise).
+        let test = cifar_like(&SynthConfig { n: 200, ..cfg.clone() }, 7, 1);
+        let k = train.num_classes;
+        let d = 3 * 32 * 32;
+        let mut means = vec![vec![0f32; d]; k];
+        let mut counts = vec![0f32; k];
+        for i in 0..train.len() {
+            let l = train.labels[i] as usize;
+            counts[l] += 1.0;
+            for (m, v) in means[l].iter_mut().zip(train.images.image(i)) {
+                *m += v;
+            }
+        }
+        for (m, c) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= c;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..test.len() {
+            let img = test.images.image(i);
+            let mut best = (f32::MAX, 0usize);
+            for (ci, m) in means.iter().enumerate() {
+                let dist: f32 = m.iter().zip(img).map(|(a, b)| (a - b) * (a - b)).sum();
+                if dist < best.0 {
+                    best = (dist, ci);
+                }
+            }
+            if best.1 == test.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f32 / test.len() as f32;
+        assert!(acc > 0.5, "nearest-mean accuracy too low: {acc}");
+    }
+
+    #[test]
+    fn mirror_asymmetry_present() {
+        // With mirror_asym > 0, an image and its flip must differ beyond
+        // noise level.
+        let ds = cifar_like(&SynthConfig::default().with_n(10), 3, 0);
+        let img = ds.images.image(0);
+        let hw = 32;
+        let mut diff = 0f32;
+        for ci in 0..3 {
+            for y in 0..hw {
+                for x in 0..hw {
+                    let a = img[(ci * hw + y) * hw + x];
+                    let b = img[(ci * hw + y) * hw + (hw - 1 - x)];
+                    diff += (a - b).abs();
+                }
+            }
+        }
+        assert!(diff / (3.0 * 32.0 * 32.0) > 0.05);
+    }
+
+    #[test]
+    fn variant_generators_run() {
+        assert_eq!(cifar100_like(200, 1, 0).num_classes, 10);
+        assert_eq!(imagenet_like(16, 1, 0).hw(), 48);
+        assert_eq!(svhn_like(16, 1, 0).num_classes, 10);
+        assert_eq!(cinic_like(16, 1, 0).len(), 16);
+    }
+}

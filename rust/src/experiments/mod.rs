@@ -1,0 +1,195 @@
+//! Shared experiment harness used by every bench target and example.
+//!
+//! [`Lab`] owns the PJRT client, the manifest, compiled engines (cached per
+//! variant — compile once, train many, §3.7), and the datasets (real
+//! CIFAR-10 binaries when present, synthetic class-structured data
+//! otherwise — DESIGN.md §3). [`Scale`] centralizes the testbed scaling
+//! knobs (runs per cell, dataset sizes, epoch budgets) so every bench is
+//! consistent and CI-friendly; override via environment:
+//!
+//! ```text
+//! AIRBENCH_RUNS=20 AIRBENCH_TRAIN_N=4096 cargo bench --bench table1_distribution
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+use xla::PjRtClient;
+
+use crate::config::TrainConfig;
+use crate::coordinator::fleet::{run_fleet, FleetResult};
+use crate::data::{cifar_bin, synthetic, Dataset};
+use crate::runtime::{cpu_client, Engine, Manifest};
+
+/// Testbed scaling knobs (paper-scale values in comments).
+#[derive(Clone, Copy, Debug)]
+pub struct Scale {
+    /// Runs per experiment cell (paper: 400 for Table 2/6, 10k for Table 4).
+    pub runs: usize,
+    /// Training-set size (paper: 50,000).
+    pub n_train: usize,
+    /// Test-set size (paper: 10,000).
+    pub n_test: usize,
+    /// Baseline epoch budget (paper airbench94: 9.9).
+    pub epochs: f64,
+}
+
+impl Default for Scale {
+    fn default() -> Self {
+        Scale {
+            runs: 8,
+            n_train: 256,
+            n_test: 512,
+            epochs: 8.0,
+        }
+    }
+}
+
+impl Scale {
+    /// Read overrides from `AIRBENCH_RUNS`, `AIRBENCH_TRAIN_N`,
+    /// `AIRBENCH_TEST_N`, `AIRBENCH_EPOCHS`.
+    pub fn from_env() -> Scale {
+        fn env<T: std::str::FromStr>(key: &str, default: T) -> T {
+            std::env::var(key)
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(default)
+        }
+        let d = Scale::default();
+        Scale {
+            runs: env("AIRBENCH_RUNS", d.runs),
+            n_train: env("AIRBENCH_TRAIN_N", d.n_train),
+            n_test: env("AIRBENCH_TEST_N", d.n_test),
+            epochs: env("AIRBENCH_EPOCHS", d.epochs),
+        }
+    }
+}
+
+/// Which dataset distribution an experiment trains on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataKind {
+    /// Real CIFAR-10 if the binaries exist, else the CIFAR-like generator.
+    Cifar10,
+    Cifar100Like,
+    ImagenetLike,
+    SvhnLike,
+    CinicLike,
+}
+
+/// The experiment laboratory: client + engines + datasets.
+pub struct Lab {
+    pub manifest: Manifest,
+    pub client: PjRtClient,
+    pub scale: Scale,
+    engines: BTreeMap<String, Engine>,
+    datasets: BTreeMap<String, (Dataset, Dataset)>,
+}
+
+impl Lab {
+    pub fn new() -> Result<Lab> {
+        Ok(Lab {
+            manifest: Manifest::load(&Manifest::default_dir())?,
+            client: cpu_client()?,
+            scale: Scale::from_env(),
+            engines: BTreeMap::new(),
+            datasets: BTreeMap::new(),
+        })
+    }
+
+    /// Compiled engine for `variant` (cached).
+    pub fn engine(&mut self, variant: &str) -> Result<&mut Engine> {
+        if !self.engines.contains_key(variant) {
+            let e = Engine::load(&self.client, &self.manifest, variant)?;
+            self.engines.insert(variant.to_string(), e);
+        }
+        Ok(self.engines.get_mut(variant).unwrap())
+    }
+
+    /// (train, test) datasets for `kind` at the lab's scale (cached).
+    pub fn data(&mut self, kind: DataKind) -> (Dataset, Dataset) {
+        let key = format!("{kind:?}-{}-{}", self.scale.n_train, self.scale.n_test);
+        if let Some(pair) = self.datasets.get(&key) {
+            return pair.clone();
+        }
+        let (n, m) = (self.scale.n_train, self.scale.n_test);
+        let pair = match kind {
+            DataKind::Cifar10 => {
+                if let (Some(tr), Some(te)) = (
+                    cifar_bin::try_real_cifar10(true),
+                    cifar_bin::try_real_cifar10(false),
+                ) {
+                    (tr.head(n), te.head(m))
+                } else {
+                    let cfg = synthetic::SynthConfig::default();
+                    (
+                        synthetic::cifar_like(&cfg.clone().with_n(n), 0xC1FA, 0),
+                        synthetic::cifar_like(&cfg.with_n(m), 0xC1FA, 1),
+                    )
+                }
+            }
+            DataKind::Cifar100Like => (
+                synthetic::cifar100_like(n, 0xC100, 0),
+                synthetic::cifar100_like(m, 0xC100, 1),
+            ),
+            DataKind::ImagenetLike => (
+                synthetic::imagenet_like(n, 0x1A6E, 0),
+                synthetic::imagenet_like(m, 0x1A6E, 1),
+            ),
+            DataKind::SvhnLike => (
+                synthetic::svhn_like(n, 0x54A8, 0),
+                synthetic::svhn_like(m, 0x54A8, 1),
+            ),
+            DataKind::CinicLike => (
+                synthetic::cinic_like(n, 0xC121, 0),
+                synthetic::cinic_like(m, 0xC121, 1),
+            ),
+        };
+        self.datasets.insert(key, pair.clone());
+        pair
+    }
+
+    /// Run a fleet of `runs` trainings of `cfg` on `kind` data.
+    pub fn fleet(&mut self, kind: DataKind, cfg: &TrainConfig, runs: usize) -> Result<FleetResult> {
+        let (train, test) = self.data(kind);
+        let engine = self.engine(&cfg.variant)?;
+        run_fleet(engine, &train, &test, cfg, runs, None)
+    }
+
+    /// Base config at the lab's scale (bench variant, lab epochs).
+    pub fn base_config(&self) -> TrainConfig {
+        TrainConfig {
+            epochs: self.scale.epochs,
+            ..TrainConfig::default()
+        }
+    }
+}
+
+/// Format an accuracy as the paper prints them (`94.01%`).
+pub fn pct(x: f64) -> String {
+    format!("{:.2}%", 100.0 * x)
+}
+
+/// Format a ± CI half width.
+pub fn pct_ci(mean: f64, ci: f64) -> String {
+    format!("{:.2}±{:.2}%", 100.0 * mean, 100.0 * ci)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_env_parsing() {
+        // Only checks the default path (env mutation is process-global and
+        // racy under the parallel test harness).
+        let s = Scale::from_env();
+        assert!(s.runs >= 1);
+        assert!(s.n_train >= 1);
+    }
+
+    #[test]
+    fn pct_formats() {
+        assert_eq!(pct(0.9401), "94.01%");
+        assert_eq!(pct_ci(0.94, 0.0014), "94.00±0.14%");
+    }
+}

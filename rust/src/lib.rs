@@ -1,0 +1,36 @@
+//! # airbench-rs
+//!
+//! A Rust + JAX + Pallas reproduction of *"94% on CIFAR-10 in 3.29 Seconds
+//! on a Single GPU"* (Keller Jordan, 2024).
+//!
+//! Three layers (see `DESIGN.md`):
+//! - **L3 (this crate)** — the training coordinator: data pipeline and
+//!   augmentation policies (including the paper's *alternating flip*),
+//!   whitening/dirac initialization, LR + Lookahead schedules, the paper's
+//!   timing protocol, multi-crop TTA evaluation, and fleet runners for the
+//!   paper's statistical experiments.
+//! - **L2** — the airbench CNN + Nesterov-SGD train step, written in JAX
+//!   (`python/compile/model.py`), AOT-lowered to HLO text.
+//! - **L1** — a tiled Pallas MXU matmul kernel that every convolution's
+//!   forward *and* backward pass runs through
+//!   (`python/compile/kernels/matmul.py`).
+//!
+//! At runtime only this crate runs: [`runtime`] loads `artifacts/*.hlo.txt`
+//! via the PJRT CPU client (`xla` crate) and [`coordinator`] drives it.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod rng;
+pub mod runtime;
+pub mod stats;
+pub mod tensor;
+pub mod util;
+pub mod whitening;
+
+/// Crate version (for `airbench --version`).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,250 @@
+//! `airbench` — CLI launcher for the Rust airbench stack.
+//!
+//! Subcommands:
+//! * `train [key=value ...]` — one training run with per-epoch logging
+//!   (the paper's Listing 4 `main`), printing the final TTA accuracy and
+//!   the paper-protocol wall time.
+//! * `fleet --runs N [key=value ...]` — an n-run statistical experiment:
+//!   mean/std/CI of final accuracy (paper §5 methodology).
+//! * `info [--variant NAME]` — inspect the AOT manifest: variants,
+//!   parameter counts, FLOPs, tensor inventory.
+//!
+//! Config overrides are bare `key=value` pairs (see `config::TrainConfig`);
+//! `--config file.json` loads a base config first. `--data` picks the
+//! dataset distribution (cifar10 | cifar100 | imagenet | svhn | cinic).
+
+use anyhow::{bail, Result};
+
+use airbench::cli::Args;
+use airbench::config::TrainConfig;
+use airbench::coordinator::{evaluate, train_full, warmup};
+use airbench::experiments::{pct, DataKind, Lab};
+use airbench::util::logging;
+
+fn parse_data_kind(s: &str) -> Result<DataKind> {
+    Ok(match s {
+        "cifar10" => DataKind::Cifar10,
+        "cifar100" => DataKind::Cifar100Like,
+        "imagenet" => DataKind::ImagenetLike,
+        "svhn" => DataKind::SvhnLike,
+        "cinic" => DataKind::CinicLike,
+        _ => bail!("unknown --data '{s}' (cifar10|cifar100|imagenet|svhn|cinic)"),
+    })
+}
+
+fn build_config(args: &Args, lab: &Lab) -> Result<TrainConfig> {
+    let mut cfg = match args.options.get("config") {
+        Some(path) => TrainConfig::load(std::path::Path::new(path))?,
+        None => {
+            let mut c = TrainConfig::default();
+            c.epochs = lab.scale.epochs;
+            c
+        }
+    };
+    for (k, v) in &args.overrides {
+        cfg.set(k, v)?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut lab = Lab::new()?;
+    let mut cfg = build_config(args, &lab)?;
+    cfg.eval_every_epoch = true;
+    let kind = parse_data_kind(&args.opt("data", "cifar10"))?;
+    let (train_ds, test_ds) = lab.data(kind);
+    let engine = lab.engine(&cfg.variant)?;
+    eprintln!(
+        "[airbench] variant={} params={} compile={:.2}s train_n={} test_n={}",
+        cfg.variant,
+        engine.variant().param_count,
+        engine.stats.compile_secs,
+        train_ds.len(),
+        test_ds.len()
+    );
+    if !args.flag("no-warmup") {
+        warmup(engine, &train_ds, &cfg)?;
+    }
+
+    logging::print_header(logging::TRAIN_COLUMNS);
+    let (result, state) = train_full(engine, &train_ds, &test_ds, &cfg)?;
+    for log in &result.epoch_log {
+        logging::print_row(
+            logging::TRAIN_COLUMNS,
+            &[
+                ("epoch", log.epoch.to_string()),
+                ("train_loss", logging::f4(log.train_loss as f32)),
+                ("train_acc", logging::f4(log.train_acc as f32)),
+                (
+                    "val_acc",
+                    log.val_acc.map(|a| logging::f4(a as f32)).unwrap_or_default(),
+                ),
+            ],
+            false,
+        );
+    }
+    logging::print_row(
+        logging::TRAIN_COLUMNS,
+        &[
+            ("epoch", "eval".to_string()),
+            ("tta_val_acc", logging::f4(result.accuracy as f32)),
+            ("total_time_seconds", format!("{:.3}", result.time_seconds)),
+        ],
+        true,
+    );
+    println!(
+        "final: acc={} (no-TTA {}), epochs={:.2}, steps={}, {:.3}s, {:.2} GFLOP",
+        pct(result.accuracy),
+        pct(result.accuracy_no_tta),
+        result.epochs_run,
+        result.steps_run,
+        result.time_seconds,
+        result.flops as f64 / 1e9,
+    );
+    if let Some(e) = result.epochs_to_target {
+        println!("epochs-to-target({}): {e:.1}", pct(cfg.target_acc));
+    }
+    if let Some(path) = args.options.get("save") {
+        state.save(std::path::Path::new(path))?;
+        println!("checkpoint written to {path}");
+    }
+    Ok(())
+}
+
+/// `airbench eval --load ckpt.bin [--data cifar10] [tta=2 ...]` —
+/// evaluate a saved checkpoint (checkpoint/hand-off workflow).
+fn cmd_eval(args: &Args) -> Result<()> {
+    let mut lab = Lab::new()?;
+    let cfg = build_config(args, &lab)?;
+    let kind = parse_data_kind(&args.opt("data", "cifar10"))?;
+    let Some(path) = args.options.get("load") else {
+        bail!("eval requires --load <checkpoint>");
+    };
+    let state = airbench::runtime::ModelState::load(std::path::Path::new(path))?;
+    let (_, test_ds) = lab.data(kind);
+    let engine = lab.engine(&cfg.variant)?;
+    state.validate(engine.variant())?;
+    let out = evaluate(engine, &state, &test_ds, cfg.tta)?;
+    println!(
+        "checkpoint {path}: acc={} (no-TTA {}) on {} test examples",
+        pct(out.accuracy),
+        pct(out.accuracy_identity),
+        test_ds.len()
+    );
+    Ok(())
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let mut lab = Lab::new()?;
+    let cfg = build_config(args, &lab)?;
+    let kind = parse_data_kind(&args.opt("data", "cifar10"))?;
+    let runs = args.opt_usize("runs", lab.scale.runs)?;
+    let (train_ds, test_ds) = lab.data(kind);
+    let engine = lab.engine(&cfg.variant)?;
+    warmup(engine, &train_ds, &cfg)?;
+    let mut progress = |i: usize, acc: f64| {
+        eprintln!("[fleet] run {i}: {}", pct(acc));
+    };
+    let fleet = airbench::coordinator::run_fleet(
+        engine,
+        &train_ds,
+        &test_ds,
+        &cfg,
+        runs,
+        Some(&mut progress),
+    )?;
+    let s = fleet.summary();
+    println!(
+        "fleet n={}: mean={} std={:.3}% ci95=±{:.3}% min={} max={} mean_time={:.2}s",
+        s.n,
+        pct(s.mean),
+        100.0 * s.std,
+        100.0 * s.ci95(),
+        pct(s.min),
+        pct(s.max),
+        fleet.mean_time_seconds(),
+    );
+    if let Some(path) = args.options.get("log") {
+        std::fs::write(path, fleet.to_json(&cfg).to_string())?;
+        println!("fleet log written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let manifest =
+        airbench::runtime::Manifest::load(&airbench::runtime::Manifest::default_dir())?;
+    match args.options.get("variant") {
+        None => {
+            println!("variants in {:?}:", manifest.dir);
+            for (name, v) in &manifest.variants {
+                println!(
+                    "  {name:<20} params={:<9} batch={}x{} fwd={:.1} MFLOP/example",
+                    v.param_count,
+                    v.batch_train,
+                    v.batch_eval,
+                    v.fwd_flops_per_example as f64 / 1e6
+                );
+            }
+        }
+        Some(name) => {
+            let v = manifest.variant(name)?;
+            if args.flag("hlo") {
+                for (tag, file) in [("train", &v.train.file), ("eval", &v.eval.file)] {
+                    let census =
+                        airbench::util::hlo_census::census_file(&manifest.dir.join(file))?;
+                    println!(
+                        "{tag} module: {} instructions, {} computations; top ops:",
+                        census.instructions, census.computations
+                    );
+                    for (op, n) in census.top(12) {
+                        println!("    {op:<24} {n}");
+                    }
+                }
+                return Ok(());
+            }
+            println!(
+                "variant {name}: widths={:?} convs_per_block={} residual={}",
+                v.hyper.widths, v.hyper.convs_per_block, v.hyper.residual
+            );
+            println!(
+                "  params={} fwd_flops/example={}",
+                v.param_count, v.fwd_flops_per_example
+            );
+            println!("  tensors:");
+            for t in &v.tensors {
+                println!(
+                    "    {:<20} {:?} role={:?} group={}",
+                    t.name, t.shape, t.role, t.group
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn usage() {
+    eprintln!(
+        "usage: airbench <train|eval|fleet|info> [--data cifar10] [--runs N] \
+         [--config file.json] [--save ckpt.bin] [--load ckpt.bin] \
+         [--log fleet.json] [--hlo] [key=value ...]\n       airbench --version"
+    );
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    if args.flag("version") {
+        println!("airbench {}", airbench::version());
+        return Ok(());
+    }
+    match args.command.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("fleet") => cmd_fleet(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            usage();
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! Deterministic pseudo-random substrate.
+//!
+//! No `rand` crate is vendored for this image, and the paper's experiments
+//! hinge on *controlled* randomness (seeded fleets of hundreds of training
+//! runs, a derandomized flip policy), so we own the RNG: SplitMix64 for
+//! seeding/hashing, xoshiro256** for streams, Box–Muller normals, and
+//! Fisher–Yates permutations (the "random reshuffling" of paper §3.6).
+
+/// SplitMix64 step — also used as the integer hash behind alternating flip.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Stateless strong integer hash (one SplitMix64 round keyed by `seed`).
+///
+/// Stands in for the paper's `md5(str(n * seed))[-8:]` (Listing 2): both
+/// are pseudorandom functions of the example index whose *parity* decides
+/// the first-epoch flip; only the parity stream's uniformity matters.
+#[inline]
+pub fn hash_index(index: u64, seed: u64) -> u64 {
+    let mut s = index.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ seed;
+    splitmix64(&mut s)
+}
+
+/// xoshiro256** PRNG — fast, high-quality, no dependencies.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via SplitMix64 (as recommended by the xoshiro authors).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for slot in s.iter_mut() {
+            *slot = splitmix64(&mut sm);
+        }
+        Rng { s }
+    }
+
+    /// Derive an independent stream (for per-run seeding in fleets).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ hash_index(tag, 0xA5A5_A5A5))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn uniform(&mut self) -> f32 {
+        ((self.next_u64() >> 40) as f32) * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire-style rejection-free for our use).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform integer in `[lo, hi]` inclusive (paper's translate shifts).
+    #[inline]
+    pub fn int_in(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + (self.next_u64() % ((hi - lo + 1) as u64)) as i64
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn coin(&mut self, p: f32) -> bool {
+        self.uniform() < p
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.uniform().max(1e-12);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// Fisher–Yates permutation of `0..n` — the paper's "random
+    /// reshuffling" epoch order.
+    pub fn permutation(&mut self, n: usize) -> Vec<u32> {
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        for i in (1..n).rev() {
+            let j = self.below(i + 1);
+            idx.swap(i, j);
+        }
+        idx
+    }
+
+    /// `n` i.i.d. samples WITH replacement from `0..n` — textbook SGD
+    /// sampling (Table 1's "no reshuffling" row).
+    pub fn with_replacement(&mut self, n: usize) -> Vec<u32> {
+        (0..n).map(|_| self.below(n) as u32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(8);
+        assert_ne!(Rng::new(7).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let x = r.uniform();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_near_half() {
+        let mut r = Rng::new(2);
+        let mean: f32 = (0..50_000).map(|_| r.uniform()).sum::<f32>() / 50_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "{mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let xs: Vec<f32> = (0..50_000).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>()
+            / xs.len() as f32;
+        assert!(mean.abs() < 0.02, "{mean}");
+        assert!((var - 1.0).abs() < 0.05, "{var}");
+    }
+
+    #[test]
+    fn permutation_is_a_permutation() {
+        let mut r = Rng::new(4);
+        let p = r.permutation(1000);
+        let mut seen = vec![false; 1000];
+        for &i in &p {
+            assert!(!seen[i as usize]);
+            seen[i as usize] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn with_replacement_hits_about_632_unique() {
+        // Paper §3.6: sampling with replacement sees ~(1-1/e)N ≈ 0.632N
+        // unique examples per "epoch".
+        let mut r = Rng::new(5);
+        let n = 20_000;
+        let s = r.with_replacement(n);
+        let mut seen = vec![false; n];
+        for &i in &s {
+            seen[i as usize] = true;
+        }
+        let unique = seen.iter().filter(|&&b| b).count() as f64 / n as f64;
+        assert!((unique - 0.632).abs() < 0.02, "{unique}");
+    }
+
+    #[test]
+    fn hash_index_parity_balanced() {
+        let flipped = (0..100_000u64)
+            .filter(|&i| hash_index(i, 42) % 2 == 0)
+            .count() as f64
+            / 100_000.0;
+        assert!((flipped - 0.5).abs() < 0.01, "{flipped}");
+    }
+
+    #[test]
+    fn hash_index_seed_sensitivity() {
+        let a: Vec<u64> = (0..64).map(|i| hash_index(i, 1) % 2).collect();
+        let b: Vec<u64> = (0..64).map(|i| hash_index(i, 2) % 2).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn fork_streams_diverge() {
+        let mut base = Rng::new(9);
+        let mut a = base.fork(0);
+        let mut b = base.fork(1);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn int_in_bounds_inclusive() {
+        let mut r = Rng::new(10);
+        let mut hit_lo = false;
+        let mut hit_hi = false;
+        for _ in 0..10_000 {
+            let v = r.int_in(-2, 2);
+            assert!((-2..=2).contains(&v));
+            hit_lo |= v == -2;
+            hit_hi |= v == 2;
+        }
+        assert!(hit_lo && hit_hi);
+    }
+}

@@ -1,0 +1,243 @@
+//! PJRT execution engine: loads the AOT HLO-text artifacts and runs the
+//! compiled train/eval steps from the Rust hot path.
+//!
+//! Wire protocol (see `python/compile/aot.py`):
+//! * modules are lowered with `return_tuple=True`, so every execution
+//!   returns one tuple literal that we decompose in manifest output order;
+//! * train inputs: trainables, momenta, frozen, BN stats, images, labels,
+//!   `lr`, `wd_over_lr`, `whiten_bias_on` (all f32 except i32 labels);
+//! * train outputs: trainables', momenta', BN stats', `loss`, `acc`.
+//!
+//! Python never runs here: the artifacts are self-contained HLO text.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::runtime::manifest::{Manifest, Variant};
+use crate::runtime::state::ModelState;
+use crate::tensor::Tensor;
+
+/// Scalar results of one training step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepOutput {
+    /// Sum-reduced label-smoothed cross entropy over the batch (Listing 4).
+    pub loss: f32,
+    /// Training accuracy of this batch.
+    pub acc: f32,
+}
+
+/// Wall-clock accounting of engine activity (feeds the §Perf bench).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    pub train_steps: u64,
+    pub eval_calls: u64,
+    /// Seconds spent inside PJRT `execute` for train steps.
+    pub train_exec_secs: f64,
+    /// Seconds spent packing/unpacking literals for train steps.
+    pub train_marshal_secs: f64,
+    pub compile_secs: f64,
+}
+
+/// A compiled model variant bound to a PJRT client.
+pub struct Engine {
+    variant: Variant,
+    train_exe: PjRtLoadedExecutable,
+    eval_exe: PjRtLoadedExecutable,
+    pub stats: EngineStats,
+}
+
+fn tensor_literal(t: &Tensor) -> Result<Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(t.data()).reshape(&dims)?)
+}
+
+fn compile(client: &PjRtClient, manifest: &Manifest, file: &str) -> Result<PjRtLoadedExecutable> {
+    let path = manifest.dir.join(file);
+    let proto = HloModuleProto::from_text_file(&path)
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+    let comp = XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {file}"))
+}
+
+impl Engine {
+    /// Compile the train + eval modules of `variant_name` on a PJRT CPU
+    /// client. Compilation happens once; steps after this are pure Rust +
+    /// compiled code (the paper's "warmup then many runs" model, §3.7).
+    pub fn load(client: &PjRtClient, manifest: &Manifest, variant_name: &str) -> Result<Engine> {
+        let variant = manifest.variant(variant_name)?.clone();
+        let t0 = Instant::now();
+        let train_exe = compile(client, manifest, &variant.train.file)?;
+        let eval_exe = compile(client, manifest, &variant.eval.file)?;
+        let compile_secs = t0.elapsed().as_secs_f64();
+        Ok(Engine {
+            variant,
+            train_exe,
+            eval_exe,
+            stats: EngineStats {
+                compile_secs,
+                ..EngineStats::default()
+            },
+        })
+    }
+
+    pub fn variant(&self) -> &Variant {
+        &self.variant
+    }
+
+    pub fn batch_train(&self) -> usize {
+        self.variant.batch_train
+    }
+
+    pub fn batch_eval(&self) -> usize {
+        self.variant.batch_eval
+    }
+
+    /// Execute one compiled training step, updating `state` in place.
+    pub fn train_step(
+        &mut self,
+        state: &mut ModelState,
+        images: &Tensor,
+        labels: &[i32],
+        lr: f32,
+        wd_over_lr: f32,
+        whiten_bias_on: bool,
+    ) -> Result<StepOutput> {
+        let b = self.variant.batch_train;
+        if images.shape()[0] != b || labels.len() != b {
+            bail!(
+                "train batch must be exactly {b} (lowered shape); got images {:?}, {} labels",
+                images.shape(),
+                labels.len()
+            );
+        }
+        let m0 = Instant::now();
+        let mut args: Vec<Literal> = Vec::with_capacity(self.variant.train.inputs.len());
+        for name in &self.variant.train.inputs {
+            match name.as_str() {
+                "images" => args.push(tensor_literal(images)?),
+                "labels" => {
+                    args.push(Literal::vec1(labels).reshape(&[b as i64])?);
+                }
+                "lr" => args.push(Literal::from(lr)),
+                "wd_over_lr" => args.push(Literal::from(wd_over_lr)),
+                "whiten_bias_on" => {
+                    args.push(Literal::from(if whiten_bias_on { 1.0f32 } else { 0.0 }))
+                }
+                _ => {
+                    let t = if let Some(m) = name.strip_prefix("m_") {
+                        state
+                            .momenta
+                            .get(m)
+                            .with_context(|| format!("missing momentum '{name}'"))?
+                    } else {
+                        state.get(name)?
+                    };
+                    args.push(tensor_literal(t)?);
+                }
+            }
+        }
+        let marshal_in = m0.elapsed().as_secs_f64();
+
+        let e0 = Instant::now();
+        let result = self.train_exe.execute::<Literal>(&args)?[0][0].to_literal_sync()?;
+        let exec = e0.elapsed().as_secs_f64();
+
+        let m1 = Instant::now();
+        let outs = result.to_tuple()?;
+        if outs.len() != self.variant.train.outputs.len() {
+            bail!(
+                "train step returned {} outputs, manifest says {}",
+                outs.len(),
+                self.variant.train.outputs.len()
+            );
+        }
+        let mut step = StepOutput {
+            loss: f32::NAN,
+            acc: f32::NAN,
+        };
+        for (name, lit) in self.variant.train.outputs.iter().zip(outs) {
+            match name.as_str() {
+                "loss" => step.loss = lit.get_first_element::<f32>()?,
+                "acc" => step.acc = lit.get_first_element::<f32>()?,
+                _ => {
+                    let vals = lit.to_vec::<f32>()?;
+                    let t = if let Some(m) = name.strip_prefix("m_") {
+                        state
+                            .momenta
+                            .get_mut(m)
+                            .with_context(|| format!("missing momentum '{name}'"))?
+                    } else {
+                        state
+                            .tensors
+                            .get_mut(name)
+                            .with_context(|| format!("missing tensor '{name}'"))?
+                    };
+                    if vals.len() != t.len() {
+                        bail!("output '{name}' has {} values, expected {}", vals.len(), t.len());
+                    }
+                    t.data_mut().copy_from_slice(&vals);
+                }
+            }
+        }
+        self.stats.train_steps += 1;
+        self.stats.train_exec_secs += exec;
+        self.stats.train_marshal_secs += marshal_in + m1.elapsed().as_secs_f64();
+        Ok(step)
+    }
+
+    /// Run the eval module on one full batch; returns `(batch_eval,
+    /// num_classes)` logits. Callers pad partial batches (see
+    /// `coordinator::evaluator`).
+    pub fn eval_logits(&mut self, state: &ModelState, images: &Tensor) -> Result<Tensor> {
+        let b = self.variant.batch_eval;
+        if images.shape()[0] != b {
+            bail!(
+                "eval batch must be exactly {b} (lowered shape); got {:?}",
+                images.shape()
+            );
+        }
+        let mut args: Vec<Literal> = Vec::with_capacity(self.variant.eval.inputs.len());
+        for name in &self.variant.eval.inputs {
+            if name == "images" {
+                args.push(tensor_literal(images)?);
+            } else {
+                args.push(tensor_literal(state.get(name)?)?);
+            }
+        }
+        let result = self.eval_exe.execute::<Literal>(&args)?[0][0].to_literal_sync()?;
+        let logits = result.to_tuple1()?;
+        let vals = logits.to_vec::<f32>()?;
+        self.stats.eval_calls += 1;
+        Tensor::from_vec(&[b, self.variant.num_classes], vals)
+    }
+}
+
+/// Create the process-wide PJRT CPU client.
+pub fn cpu_client() -> Result<PjRtClient> {
+    PjRtClient::cpu().context("creating PJRT CPU client")
+}
+
+#[cfg(test)]
+mod tests {
+    //! Engine tests live in `tests/runtime_integration.rs` (they need the
+    //! built artifacts and a PJRT client, which is process-global state);
+    //! here we only test the pure helpers.
+    use super::*;
+
+    #[test]
+    fn tensor_literal_round_trip() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        let lit = tensor_literal(&t).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), t.data());
+    }
+
+    #[test]
+    fn scalar_literals() {
+        let lit = Literal::from(2.5f32);
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 2.5);
+    }
+}

@@ -1,0 +1,339 @@
+//! AOT manifest: the wire contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! The manifest records, per lowered variant, every state tensor (name,
+//! shape, role, lr-group), the exact input/output ordering of the train and
+//! eval HLO modules, and the baked hyperparameters — so nothing on the Rust
+//! side is hard-coded to one architecture.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// Role of a state tensor in the step contract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// Updated by the optimizer; has a momentum buffer.
+    Trainable,
+    /// Constant through training (the whitening conv weights, §3.2).
+    Frozen,
+    /// BatchNorm running statistics: updated by the graph, not the optimizer.
+    BnStat,
+}
+
+impl Role {
+    fn parse(s: &str) -> Result<Role> {
+        Ok(match s {
+            "trainable" => Role::Trainable,
+            "frozen" => Role::Frozen,
+            "bn_stat" => Role::BnStat,
+            _ => bail!("unknown tensor role '{s}'"),
+        })
+    }
+}
+
+/// One state tensor of the model.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub role: Role,
+    /// "bias" = BatchNorm bias (64x lr group, §3.4), else "other"/"stat".
+    pub group: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_bn_bias(&self) -> bool {
+        self.group == "bias"
+    }
+}
+
+/// Baked (graph-resident) hyperparameters of a variant.
+#[derive(Clone, Debug)]
+pub struct Hyper {
+    pub widths: Vec<usize>,
+    pub convs_per_block: usize,
+    pub residual: bool,
+    pub whiten_kernel: usize,
+    pub whiten_width: usize,
+    pub scaling_factor: f64,
+    pub bn_momentum: f64,
+    pub bn_eps: f64,
+    pub momentum: f64,
+    pub bias_scaler: f64,
+    pub label_smoothing: f64,
+}
+
+/// IO contract of one lowered HLO module.
+#[derive(Clone, Debug)]
+pub struct ModuleSpec {
+    pub file: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+/// One AOT-lowered model variant.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub name: String,
+    pub batch_train: usize,
+    pub batch_eval: usize,
+    pub image_hw: usize,
+    pub num_classes: usize,
+    pub param_count: usize,
+    pub fwd_flops_per_example: u64,
+    pub hyper: Hyper,
+    /// All state tensors in wire order: trainable, then frozen, then stats.
+    pub tensors: Vec<TensorSpec>,
+    pub train: ModuleSpec,
+    pub eval: ModuleSpec,
+}
+
+impl Variant {
+    pub fn trainable(&self) -> impl Iterator<Item = &TensorSpec> {
+        self.tensors.iter().filter(|t| t.role == Role::Trainable)
+    }
+
+    pub fn frozen(&self) -> impl Iterator<Item = &TensorSpec> {
+        self.tensors.iter().filter(|t| t.role == Role::Frozen)
+    }
+
+    pub fn bn_stats(&self) -> impl Iterator<Item = &TensorSpec> {
+        self.tensors.iter().filter(|t| t.role == Role::BnStat)
+    }
+
+    pub fn tensor(&self, name: &str) -> Option<&TensorSpec> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    /// FLOPs of one training step (fwd + bwd ~ 3x fwd, the standard rule).
+    pub fn train_flops_per_example(&self) -> u64 {
+        3 * self.fwd_flops_per_example
+    }
+}
+
+/// The whole manifest: artifact dir + variants by name.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: BTreeMap<String, Variant>,
+}
+
+fn parse_hyper(j: &Json) -> Result<Hyper> {
+    Ok(Hyper {
+        widths: j.get("widths")?.as_usize_vec()?,
+        convs_per_block: j.get("convs_per_block")?.as_usize()?,
+        residual: j.get("residual")?.as_bool()?,
+        whiten_kernel: j.get("whiten_kernel")?.as_usize()?,
+        whiten_width: j.get("whiten_width")?.as_usize()?,
+        scaling_factor: j.get("scaling_factor")?.as_f64()?,
+        bn_momentum: j.get("bn_momentum")?.as_f64()?,
+        bn_eps: j.get("bn_eps")?.as_f64()?,
+        momentum: j.get("momentum")?.as_f64()?,
+        bias_scaler: j.get("bias_scaler")?.as_f64()?,
+        label_smoothing: j.get("label_smoothing")?.as_f64()?,
+    })
+}
+
+fn parse_module(j: &Json) -> Result<ModuleSpec> {
+    let strings = |key: &str| -> Result<Vec<String>> {
+        j.get(key)?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_str()?.to_string()))
+            .collect()
+    };
+    Ok(ModuleSpec {
+        file: j.get("file")?.as_str()?.to_string(),
+        inputs: strings("inputs")?,
+        outputs: strings("outputs")?,
+    })
+}
+
+fn parse_variant(name: &str, j: &Json) -> Result<Variant> {
+    let tensors = j
+        .get("tensors")?
+        .as_arr()?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t.get("name")?.as_str()?.to_string(),
+                shape: t.get("shape")?.as_usize_vec()?,
+                role: Role::parse(t.get("role")?.as_str()?)?,
+                group: t.get("group")?.as_str()?.to_string(),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Variant {
+        name: name.to_string(),
+        batch_train: j.get("batch_train")?.as_usize()?,
+        batch_eval: j.get("batch_eval")?.as_usize()?,
+        image_hw: j.get("image_hw")?.as_usize()?,
+        num_classes: j.get("num_classes")?.as_usize()?,
+        param_count: j.get("param_count")?.as_usize()?,
+        fwd_flops_per_example: j.get("fwd_flops_per_example")?.as_f64()? as u64,
+        hyper: parse_hyper(j.get("hyper")?)?,
+        tensors,
+        train: parse_module(j.get("train")?)?,
+        eval: parse_module(j.get("eval")?)?,
+    })
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Manifest::parse_str(dir, &text)
+    }
+
+    pub fn parse_str(dir: &Path, text: &str) -> Result<Manifest> {
+        let j = parse(text)?;
+        let format = j.get("format")?.as_usize()?;
+        if format != 1 {
+            bail!("unsupported manifest format {format}");
+        }
+        let mut variants = BTreeMap::new();
+        for (name, vj) in j.get("variants")?.as_obj()? {
+            variants.insert(
+                name.clone(),
+                parse_variant(name, vj).with_context(|| format!("variant '{name}'"))?,
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            variants,
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&Variant> {
+        self.variants.get(name).with_context(|| {
+            format!(
+                "variant '{name}' not in manifest (have: {:?}); re-run `make artifacts`",
+                self.variants.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Default artifact location: `$AIRBENCH_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("AIRBENCH_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SNIPPET: &str = r#"{
+      "format": 1,
+      "variants": {
+        "mini": {
+          "name": "mini", "batch_train": 8, "batch_eval": 16,
+          "image_hw": 32, "num_classes": 10, "param_count": 100,
+          "fwd_flops_per_example": 1000,
+          "hyper": {"widths": [4, 8, 8], "convs_per_block": 2,
+                    "residual": false, "whiten_kernel": 2, "whiten_width": 24,
+                    "scaling_factor": 0.111, "bn_momentum": 0.6,
+                    "bn_eps": 1e-12, "momentum": 0.85, "bias_scaler": 64.0,
+                    "label_smoothing": 0.2},
+          "tensors": [
+            {"name": "whiten_b", "shape": [24], "role": "trainable", "group": "other"},
+            {"name": "b1", "shape": [4], "role": "trainable", "group": "bias"},
+            {"name": "whiten_w", "shape": [24, 3, 2, 2], "role": "frozen", "group": "other"},
+            {"name": "m1", "shape": [4], "role": "bn_stat", "group": "stat"}
+          ],
+          "train": {"file": "mini_train.hlo.txt",
+                    "inputs": ["whiten_b", "b1", "m_whiten_b", "m_b1",
+                               "whiten_w", "m1", "images", "labels", "lr",
+                               "wd_over_lr", "whiten_bias_on"],
+                    "outputs": ["whiten_b", "b1", "m_whiten_b", "m_b1", "m1",
+                                "loss", "acc"]},
+          "eval": {"file": "mini_eval.hlo.txt",
+                   "inputs": ["whiten_b", "b1", "whiten_w", "m1", "images"],
+                   "outputs": ["logits"]}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_snippet() {
+        let m = Manifest::parse_str(Path::new("/tmp"), SNIPPET).unwrap();
+        let v = m.variant("mini").unwrap();
+        assert_eq!(v.batch_train, 8);
+        assert_eq!(v.trainable().count(), 2);
+        assert_eq!(v.frozen().count(), 1);
+        assert_eq!(v.bn_stats().count(), 1);
+        assert!(v.tensor("b1").unwrap().is_bn_bias());
+        assert_eq!(v.tensor("whiten_w").unwrap().numel(), 24 * 3 * 4);
+        assert_eq!(v.train_flops_per_example(), 3000);
+        assert_eq!(v.train.inputs.len(), 11);
+    }
+
+    #[test]
+    fn unknown_variant_is_helpful_error() {
+        let m = Manifest::parse_str(Path::new("/tmp"), SNIPPET).unwrap();
+        let err = format!("{:#}", m.variant("nope").unwrap_err());
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn rejects_wrong_format_version() {
+        let bad = SNIPPET.replace("\"format\": 1", "\"format\": 9");
+        assert!(Manifest::parse_str(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn corrupted_manifests_error_cleanly() {
+        // Deleting any required key must produce an error, not a panic.
+        for key in [
+            "\"batch_train\": 8,",
+            "\"tensors\":",
+            "\"hyper\":",
+            "\"inputs\":",
+        ] {
+            let broken = SNIPPET.replacen(key, "\"zzz\":", 1);
+            assert!(
+                Manifest::parse_str(Path::new("/tmp"), &broken).is_err(),
+                "no error after removing {key}"
+            );
+        }
+        // Bad role string.
+        let bad = SNIPPET.replace("\"trainable\"", "\"wizard\"");
+        assert!(Manifest::parse_str(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_dir_is_error_with_hint() {
+        let err = Manifest::load(Path::new("/nonexistent-airbench")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        // Best-effort: exercises the real artifacts if they are built.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            let v = m.variant("bench").unwrap();
+            assert_eq!(v.image_hw, 32);
+            assert_eq!(v.num_classes, 10);
+            // wire order: trainables first, then frozen, then stats
+            let roles: Vec<Role> = v.tensors.iter().map(|t| t.role).collect();
+            let first_frozen = roles.iter().position(|r| *r == Role::Frozen).unwrap();
+            let first_stat = roles.iter().position(|r| *r == Role::BnStat).unwrap();
+            assert!(first_frozen < first_stat);
+            assert!(roles[..first_frozen].iter().all(|r| *r == Role::Trainable));
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Runtime layer: AOT artifact loading + PJRT execution.
+//!
+//! `manifest` parses the JSON contract written by `python/compile/aot.py`;
+//! `state` owns the model/optimizer tensors host-side; `engine` compiles
+//! the HLO-text modules on the PJRT CPU client and runs them. This is the
+//! only module that touches the `xla` crate.
+
+pub mod engine;
+pub mod manifest;
+pub mod state;
+
+pub use engine::{cpu_client, Engine, EngineStats, StepOutput};
+pub use manifest::{Manifest, ModuleSpec, Role, TensorSpec, Variant};
+pub use state::{InitConfig, ModelState};

@@ -1,0 +1,400 @@
+//! Model state owned by the coordinator: every parameter, momentum buffer,
+//! and BatchNorm statistic as a host [`Tensor`], initialized per the paper.
+//!
+//! Initialization features are independently toggleable (Fig 4 ablations):
+//! * PyTorch-default conv/linear init (U(±1/sqrt(fan_in))) — the baseline;
+//! * **dirac** partial-identity overlay on every conv after the first
+//!   (§3.3: first `in_channels` filters = identity transform);
+//! * **whitening** first-layer init from training-patch statistics (§3.2),
+//!   applied by the trainer via [`ModelState::set_whitening`].
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::rng::Rng;
+use crate::runtime::manifest::{Role, Variant};
+use crate::tensor::Tensor;
+
+/// Initialization switches (paper §3.2/3.3, ablated in Fig 4).
+#[derive(Clone, Copy, Debug)]
+pub struct InitConfig {
+    /// Partial-identity (dirac) init for convs after the first (§3.3).
+    pub dirac: bool,
+    /// RNG seed for the PyTorch-default uniform draws.
+    pub seed: u64,
+}
+
+impl Default for InitConfig {
+    fn default() -> Self {
+        InitConfig {
+            dirac: true,
+            seed: 0,
+        }
+    }
+}
+
+/// All state tensors of one training run, keyed by manifest name.
+#[derive(Clone, Debug)]
+pub struct ModelState {
+    /// Parameter / stat tensors, in manifest wire order.
+    pub tensors: BTreeMap<String, Tensor>,
+    /// Momentum buffers for trainable tensors ("m_<name>").
+    pub momenta: BTreeMap<String, Tensor>,
+}
+
+impl ModelState {
+    /// Initialize fresh state for `variant`.
+    pub fn init(variant: &Variant, cfg: &InitConfig) -> ModelState {
+        let mut rng = Rng::new(cfg.seed ^ 0x1217_AB5E);
+        let mut tensors = BTreeMap::new();
+        let mut momenta = BTreeMap::new();
+        for spec in &variant.tensors {
+            let t = match spec.role {
+                Role::BnStat => {
+                    if spec.name.ends_with("_mean") {
+                        Tensor::zeros(&spec.shape)
+                    } else {
+                        Tensor::full(&spec.shape, 1.0)
+                    }
+                }
+                _ => init_param(&spec.name, &spec.shape, cfg, &mut rng),
+            };
+            if spec.role == Role::Trainable {
+                momenta.insert(spec.name.clone(), Tensor::zeros(&spec.shape));
+            }
+            tensors.insert(spec.name.clone(), t);
+        }
+        ModelState { tensors, momenta }
+    }
+
+    /// Overwrite the frozen whitening conv weights (§3.2). Fails loudly on a
+    /// shape mismatch so a wrong patch size cannot slip through.
+    pub fn set_whitening(&mut self, weights: Tensor) -> Result<()> {
+        let Some(t) = self.tensors.get_mut("whiten_w") else {
+            bail!("state has no 'whiten_w' tensor");
+        };
+        if t.shape() != weights.shape() {
+            bail!(
+                "whitening shape mismatch: state {:?} vs computed {:?}",
+                t.shape(),
+                weights.shape()
+            );
+        }
+        *t = weights;
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no state tensor '{name}'"))
+    }
+
+    /// Serialize all tensors + momenta to a checkpoint file.
+    ///
+    /// Format: magic "ABCK1\n", then for each of the two sections
+    /// (tensors, momenta): u32 count, then per tensor
+    /// u32 name_len / name bytes / u32 rank / u64 dims... / f32 data (LE).
+    /// Checkpoint/resume lets a fleet be interrupted and continued — and a
+    /// trained model be handed to a separate evaluation process.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(b"ABCK1\n");
+        for section in [&self.tensors, &self.momenta] {
+            buf.extend_from_slice(&(section.len() as u32).to_le_bytes());
+            for (name, t) in section {
+                buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+                buf.extend_from_slice(name.as_bytes());
+                buf.extend_from_slice(&(t.shape().len() as u32).to_le_bytes());
+                for &d in t.shape() {
+                    buf.extend_from_slice(&(d as u64).to_le_bytes());
+                }
+                for v in t.data() {
+                    buf.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        let mut f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+        f.write_all(&buf)?;
+        Ok(())
+    }
+
+    /// Load a checkpoint written by [`ModelState::save`].
+    pub fn load(path: &Path) -> Result<ModelState> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {path:?}"))?
+            .read_to_end(&mut bytes)?;
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > bytes.len() {
+                bail!("truncated checkpoint at byte {pos}");
+            }
+            let s = &bytes[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 6)? != b"ABCK1\n" {
+            bail!("not an airbench checkpoint (bad magic)");
+        }
+        let mut sections: Vec<BTreeMap<String, Tensor>> = Vec::new();
+        for _ in 0..2 {
+            let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+            let mut map = BTreeMap::new();
+            for _ in 0..count {
+                let nlen = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+                let name = String::from_utf8(take(&mut pos, nlen)?.to_vec())
+                    .context("checkpoint tensor name is not UTF-8")?;
+                let rank = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+                let mut shape = Vec::with_capacity(rank);
+                for _ in 0..rank {
+                    shape.push(u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize);
+                }
+                let numel: usize = shape.iter().product();
+                let raw = take(&mut pos, 4 * numel)?;
+                let data: Vec<f32> = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                map.insert(name, Tensor::from_vec(&shape, data)?);
+            }
+            sections.push(map);
+        }
+        if pos != bytes.len() {
+            bail!("trailing bytes in checkpoint");
+        }
+        let momenta = sections.pop().unwrap();
+        let tensors = sections.pop().unwrap();
+        Ok(ModelState { tensors, momenta })
+    }
+
+    /// Validate that this state matches `variant`'s tensor inventory (used
+    /// after loading a checkpoint into a compiled engine).
+    pub fn validate(&self, variant: &Variant) -> Result<()> {
+        for spec in &variant.tensors {
+            let t = self.get(&spec.name)?;
+            if t.shape() != &spec.shape[..] {
+                bail!(
+                    "checkpoint tensor '{}' has shape {:?}, variant wants {:?}",
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                );
+            }
+        }
+        let want = variant.tensors.iter().filter(|t| t.role == Role::Trainable).count();
+        if self.momenta.len() != want {
+            bail!("checkpoint has {} momenta, variant wants {want}", self.momenta.len());
+        }
+        Ok(())
+    }
+
+    /// Total parameter count (excludes momenta and BN stats).
+    pub fn param_count(&self, variant: &Variant) -> usize {
+        variant
+            .tensors
+            .iter()
+            .filter(|t| t.role != Role::BnStat)
+            .map(|t| t.numel())
+            .sum()
+    }
+}
+
+/// PyTorch-default init (+ optional dirac overlay) for one parameter.
+fn init_param(name: &str, shape: &[usize], cfg: &InitConfig, rng: &mut Rng) -> Tensor {
+    if name.ends_with("_b") {
+        // whiten bias + BN biases start at zero (Listing 4).
+        return Tensor::zeros(shape);
+    }
+    match shape.len() {
+        4 => {
+            let (o, i, kh, kw) = (shape[0], shape[1], shape[2], shape[3]);
+            let bound = 1.0 / ((i * kh * kw) as f32).sqrt();
+            let mut t = Tensor::zeros(shape);
+            for v in t.data_mut() {
+                *v = rng.uniform_in(-bound, bound);
+            }
+            // §3.3 dirac_(w[:i]): identity transform on the first `i`
+            // filters of every 3x3 conv after the (2x2) whitening layer.
+            if cfg.dirac && name != "whiten_w" && o >= i && kh == 3 {
+                for f in 0..i {
+                    for ci in 0..i {
+                        for y in 0..kh {
+                            for x in 0..kw {
+                                let val =
+                                    if f == ci && y == kh / 2 && x == kw / 2 { 1.0 } else { 0.0 };
+                                t.set4(f, ci, y, x, val);
+                            }
+                        }
+                    }
+                }
+            }
+            t
+        }
+        2 => {
+            // linear head: U(±1/sqrt(fan_in)), fan_in = shape[0] (in, out).
+            let bound = 1.0 / (shape[0] as f32).sqrt();
+            let mut t = Tensor::zeros(shape);
+            for v in t.data_mut() {
+                *v = rng.uniform_in(-bound, bound);
+            }
+            t
+        }
+        _ => {
+            let bound = 1.0 / (shape.iter().product::<usize>() as f32).sqrt();
+            let mut t = Tensor::zeros(shape);
+            for v in t.data_mut() {
+                *v = rng.uniform_in(-bound, bound);
+            }
+            t
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+    use std::path::Path;
+
+    fn bench_variant() -> Option<Variant> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Manifest::load(&dir).ok()?.variants.get("bench").cloned()
+    }
+
+    #[test]
+    fn init_shapes_match_manifest() {
+        let Some(v) = bench_variant() else { return };
+        let st = ModelState::init(&v, &InitConfig::default());
+        for spec in &v.tensors {
+            assert_eq!(st.get(&spec.name).unwrap().shape(), &spec.shape[..]);
+        }
+        // momenta only for trainables
+        assert_eq!(st.momenta.len(), v.trainable().count());
+        assert_eq!(st.param_count(&v), v.param_count);
+    }
+
+    #[test]
+    fn biases_and_stats_start_canonical() {
+        let Some(v) = bench_variant() else { return };
+        let st = ModelState::init(&v, &InitConfig::default());
+        for spec in &v.tensors {
+            let t = st.get(&spec.name).unwrap();
+            if spec.name.ends_with("_b") {
+                assert!(t.data().iter().all(|&x| x == 0.0), "{}", spec.name);
+            } else if spec.name.ends_with("_mean") {
+                assert!(t.data().iter().all(|&x| x == 0.0), "{}", spec.name);
+            } else if spec.name.ends_with("_var") {
+                assert!(t.data().iter().all(|&x| x == 1.0), "{}", spec.name);
+            }
+        }
+    }
+
+    #[test]
+    fn dirac_overlay_sets_identity_filters() {
+        let Some(v) = bench_variant() else { return };
+        let st = ModelState::init(&v, &InitConfig::default());
+        // block1_conv1: 16 out, 24 in — o < i, so NO dirac (can't identity).
+        // block1_conv2: 16 out, 16 in — dirac applies to all 16 filters.
+        let w = st.get("block1_conv2_w").unwrap();
+        let (_, i, kh, kw) = w.dims4();
+        for f in 0..i {
+            for ci in 0..i {
+                for y in 0..kh {
+                    for x in 0..kw {
+                        let expect = if f == ci && y == 1 && x == 1 { 1.0 } else { 0.0 };
+                        assert_eq!(w.at4(f, ci, y, x), expect);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn no_dirac_when_disabled() {
+        let Some(v) = bench_variant() else { return };
+        let st = ModelState::init(
+            &v,
+            &InitConfig {
+                dirac: false,
+                seed: 0,
+            },
+        );
+        let w = st.get("block1_conv2_w").unwrap();
+        // center diagonal would all be exactly 1.0 under dirac
+        let diag_ones = (0..16).filter(|&f| w.at4(f, f, 1, 1) == 1.0).count();
+        assert!(diag_ones < 16);
+    }
+
+    #[test]
+    fn init_deterministic_per_seed() {
+        let Some(v) = bench_variant() else { return };
+        let a = ModelState::init(&v, &InitConfig { dirac: true, seed: 5 });
+        let b = ModelState::init(&v, &InitConfig { dirac: true, seed: 5 });
+        let c = ModelState::init(&v, &InitConfig { dirac: true, seed: 6 });
+        assert_eq!(
+            a.get("head_w").unwrap().data(),
+            b.get("head_w").unwrap().data()
+        );
+        assert_ne!(
+            a.get("head_w").unwrap().data(),
+            c.get("head_w").unwrap().data()
+        );
+    }
+
+    #[test]
+    fn checkpoint_round_trip() {
+        let Some(v) = bench_variant() else { return };
+        let st = ModelState::init(&v, &InitConfig { dirac: true, seed: 3 });
+        let path = std::env::temp_dir().join("airbench_ckpt_test.bin");
+        st.save(&path).unwrap();
+        let loaded = ModelState::load(&path).unwrap();
+        assert_eq!(loaded.tensors.len(), st.tensors.len());
+        for (name, t) in &st.tensors {
+            assert_eq!(loaded.tensors[name].shape(), t.shape(), "{name}");
+            assert_eq!(loaded.tensors[name].data(), t.data(), "{name}");
+        }
+        assert_eq!(loaded.momenta.len(), st.momenta.len());
+        loaded.validate(&v).unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn checkpoint_rejects_corruption() {
+        let Some(v) = bench_variant() else { return };
+        let st = ModelState::init(&v, &InitConfig::default());
+        let path = std::env::temp_dir().join("airbench_ckpt_corrupt.bin");
+        st.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() / 2);
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(ModelState::load(&path).is_err());
+        std::fs::write(&path, b"GARBAGE").unwrap();
+        assert!(ModelState::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn validate_catches_mismatch() {
+        let Some(v) = bench_variant() else { return };
+        let mut st = ModelState::init(&v, &InitConfig::default());
+        st.tensors.insert("head_w".into(), Tensor::zeros(&[2, 2]));
+        assert!(st.validate(&v).is_err());
+    }
+
+    #[test]
+    fn set_whitening_validates_shape() {
+        let Some(v) = bench_variant() else { return };
+        let mut st = ModelState::init(&v, &InitConfig::default());
+        assert!(st.set_whitening(Tensor::zeros(&[3, 3])).is_err());
+        let shape = v.tensor("whiten_w").unwrap().shape.clone();
+        assert!(st.set_whitening(Tensor::full(&shape, 0.5)).is_ok());
+        assert_eq!(st.get("whiten_w").unwrap().data()[0], 0.5);
+    }
+}

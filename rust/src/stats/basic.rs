@@ -1,0 +1,129 @@
+//! Basic sample statistics: mean, stddev, confidence intervals.
+//!
+//! Everything the paper's tables print next to an accuracy: `n`, mean,
+//! between-run stddev, and the 95% CI half-widths shown in Figure 5.
+
+/// Summary statistics of a sample.
+#[derive(Clone, Copy, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    /// Sample (n-1) standard deviation.
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        let n = xs.len();
+        if n == 0 {
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                max: 0.0,
+            };
+        }
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.std / (self.n as f64).sqrt()
+        }
+    }
+
+    /// Half-width of the normal-approximation 95% CI (paper Fig 5's bars).
+    pub fn ci95(&self) -> f64 {
+        1.96 * self.sem()
+    }
+}
+
+/// Welch's t-statistic for a difference in means (flip-option comparisons).
+pub fn welch_t(a: &Summary, b: &Summary) -> f64 {
+    let se = (a.sem().powi(2) + b.sem().powi(2)).sqrt();
+    if se == 0.0 {
+        0.0
+    } else {
+        (a.mean - b.mean) / se
+    }
+}
+
+/// Histogram with fixed-width bins over `[lo, hi)` (Fig 6's accuracy
+/// distributions).
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    let mut h = vec![0usize; bins];
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        if x >= lo && x < hi {
+            h[((x - lo) / w) as usize] += 1;
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_known_values() {
+        let s = Summary::of(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.mean - 5.0).abs() < 1e-12);
+        // sample std of that set is sqrt(32/7)
+        assert!((s.std - (32.0f64 / 7.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 9.0);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let e = Summary::of(&[]);
+        assert_eq!(e.n, 0);
+        assert_eq!(e.ci95(), 0.0);
+        let s = Summary::of(&[3.0]);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn ci_shrinks_with_n() {
+        let a = Summary::of(&vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Summary::of(&[1.0, 2.0, 3.0, 4.0].repeat(25));
+        assert!(b.ci95() < a.ci95() / 2.0);
+    }
+
+    #[test]
+    fn welch_t_zero_for_identical() {
+        let a = Summary::of(&[1.0, 2.0, 3.0]);
+        assert_eq!(welch_t(&a, &a), 0.0);
+        let b = Summary::of(&[11.0, 12.0, 13.0]);
+        assert!(welch_t(&b, &a) > 5.0);
+    }
+
+    #[test]
+    fn histogram_bins() {
+        let h = histogram(&[0.05, 0.15, 0.15, 0.95], 0.0, 1.0, 10);
+        assert_eq!(h[0], 1);
+        assert_eq!(h[1], 2);
+        assert_eq!(h[9], 1);
+        assert_eq!(h.iter().sum::<usize>(), 4);
+    }
+}

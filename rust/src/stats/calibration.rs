@@ -1,0 +1,136 @@
+//! Class-aggregated calibration error — CACE (Jiang et al. 2021), used by
+//! paper §5.3 to show TTA trades calibration for lower test-set variance.
+//!
+//! Class-wise calibration demands `P(y = k | p_k(x) = q) = q` for every
+//! class `k` and confidence `q`. CACE measures the aggregate deviation: bin
+//! the predicted probability for each class, and average
+//! `|mean confidence - empirical frequency|` across bins weighted by bin
+//! mass, summed over classes.
+
+use crate::tensor::Tensor;
+
+/// Class-aggregated calibration error over `(N, K)` probabilities.
+///
+/// `CACE = sum_k sum_b (n_kb / N) * |conf_kb - freq_kb|`, with `bins`
+/// equal-width probability bins per class (15 by default matches the
+/// magnitude regime of the paper's reported values).
+pub fn cace(probs: &Tensor, labels: &[u16], bins: usize) -> f64 {
+    let k = probs.shape()[1];
+    let n = probs.shape()[0];
+    assert_eq!(labels.len(), n);
+    let data = probs.data();
+    let mut total = 0.0;
+    for class in 0..k {
+        let mut count = vec![0usize; bins];
+        let mut conf = vec![0f64; bins];
+        let mut hits = vec![0f64; bins];
+        for i in 0..n {
+            let p = data[i * k + class] as f64;
+            let b = ((p * bins as f64) as usize).min(bins - 1);
+            count[b] += 1;
+            conf[b] += p;
+            if labels[i] as usize == class {
+                hits[b] += 1.0;
+            }
+        }
+        for b in 0..bins {
+            if count[b] == 0 {
+                continue;
+            }
+            let m = count[b] as f64;
+            total += (m / n as f64) * (conf[b] / m - hits[b] / m).abs();
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Build (probs, labels) where labels are drawn FROM the predicted
+    /// distribution — perfectly class-wise calibrated by construction.
+    fn calibrated_sample(n: usize, k: usize, seed: u64) -> (Tensor, Vec<u16>) {
+        let mut rng = Rng::new(seed);
+        let mut probs = Tensor::zeros(&[n, k]);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            // random distribution
+            let mut row: Vec<f32> = (0..k).map(|_| rng.uniform() + 1e-3).collect();
+            let s: f32 = row.iter().sum();
+            for v in &mut row {
+                *v /= s;
+            }
+            // sample label from it
+            let u = rng.uniform();
+            let mut acc = 0f32;
+            let mut lab = k - 1;
+            for (j, &p) in row.iter().enumerate() {
+                acc += p;
+                if u < acc {
+                    lab = j;
+                    break;
+                }
+            }
+            labels.push(lab as u16);
+            probs.data_mut()[i * k..(i + 1) * k].copy_from_slice(&row);
+        }
+        (probs, labels)
+    }
+
+    #[test]
+    fn calibrated_predictions_have_low_cace() {
+        let (probs, labels) = calibrated_sample(20_000, 10, 1);
+        let c = cace(&probs, &labels, 15);
+        assert!(c < 0.05, "calibrated CACE too high: {c}");
+    }
+
+    #[test]
+    fn overconfident_predictions_have_high_cace() {
+        // Predict 0.99 for a class that's right only half the time.
+        let n = 2000;
+        let k = 2;
+        let mut probs = Tensor::zeros(&[n, k]);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            probs.data_mut()[i * k] = 0.99;
+            probs.data_mut()[i * k + 1] = 0.01;
+            labels.push((i % 2) as u16); // class 0 correct 50% of the time
+        }
+        let c = cace(&probs, &labels, 15);
+        assert!(c > 0.5, "overconfident CACE too low: {c}");
+    }
+
+    #[test]
+    fn cace_nonnegative_and_bounded() {
+        let (probs, labels) = calibrated_sample(500, 10, 2);
+        let c = cace(&probs, &labels, 15);
+        assert!(c >= 0.0);
+        assert!(c <= 2.0);
+    }
+
+    #[test]
+    fn sharpening_increases_cace() {
+        // Taking a calibrated predictor and sharpening its probabilities
+        // (like TTA does to the ensemble) must increase CACE — the §5.3
+        // hypothesis in miniature.
+        let (probs, labels) = calibrated_sample(20_000, 10, 3);
+        let mut sharp = probs.clone();
+        let k = 10;
+        for i in 0..20_000 {
+            let row = &mut sharp.data_mut()[i * k..(i + 1) * k];
+            let mut s = 0f32;
+            for v in row.iter_mut() {
+                *v = v.powf(2.0); // temperature < 1
+                s += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= s;
+            }
+        }
+        let c0 = cace(&probs, &labels, 15);
+        let c1 = cace(&sharp, &labels, 15);
+        assert!(c1 > c0, "sharpened {c1} <= calibrated {c0}");
+    }
+}

@@ -1,0 +1,206 @@
+//! Host tensor substrate: contiguous f32 NCHW buffers.
+//!
+//! The coordinator owns every model/optimizer/data buffer as a [`Tensor`];
+//! the runtime packs them into `xla::Literal`s at the step boundary. This
+//! is deliberately a thin, allocation-aware type (the augmentation hot path
+//! in `data::augment` writes into preallocated tensors).
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; shape.iter().product()],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} needs {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reshape (same element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {:?} -> {:?}", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Scalar accessor for 4-D NCHW tensors.
+    #[inline]
+    pub fn at4(&self, n: usize, c: usize, h: usize, w: usize) -> f32 {
+        let (_, cc, hh, ww) = self.dims4();
+        self.data[((n * cc + c) * hh + h) * ww + w]
+    }
+
+    #[inline]
+    pub fn set4(&mut self, n: usize, c: usize, h: usize, w: usize, v: f32) {
+        let (_, cc, hh, ww) = self.dims4();
+        self.data[((n * cc + c) * hh + h) * ww + w] = v;
+    }
+
+    #[inline]
+    pub fn dims4(&self) -> (usize, usize, usize, usize) {
+        debug_assert_eq!(self.shape.len(), 4, "expected 4-D, got {:?}", self.shape);
+        (self.shape[0], self.shape[1], self.shape[2], self.shape[3])
+    }
+
+    /// Borrow one NCHW image as a flat slice of C*H*W floats.
+    #[inline]
+    pub fn image(&self, n: usize) -> &[f32] {
+        let (_, c, h, w) = self.dims4();
+        let sz = c * h * w;
+        &self.data[n * sz..(n + 1) * sz]
+    }
+
+    #[inline]
+    pub fn image_mut(&mut self, n: usize) -> &mut [f32] {
+        let (_, c, h, w) = self.dims4();
+        let sz = c * h * w;
+        &mut self.data[n * sz..(n + 1) * sz]
+    }
+
+    /// Elementwise in-place ops used by Lookahead / init.
+    pub fn lerp_from(&mut self, other: &Tensor, t: f32) {
+        debug_assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += t * (*b - *a);
+        }
+    }
+
+    pub fn copy_from(&mut self, other: &Tensor) {
+        debug_assert_eq!(self.shape, other.shape);
+        self.data.copy_from_slice(&other.data);
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// L2 norm (diagnostics, grad-explosion guards in tests).
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_full() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert!(t.data().iter().all(|&v| v == 0.0));
+        let u = Tensor::full(&[4], 2.5);
+        assert_eq!(u.data(), &[2.5; 4]);
+    }
+
+    #[test]
+    fn from_vec_checks_len() {
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0; 3]).is_err());
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn at4_row_major_layout() {
+        let mut t = Tensor::zeros(&[2, 3, 4, 5]);
+        t.set4(1, 2, 3, 4, 9.0);
+        assert_eq!(t.at4(1, 2, 3, 4), 9.0);
+        // last element of the buffer
+        assert_eq!(t.data()[2 * 3 * 4 * 5 - 1], 9.0);
+    }
+
+    #[test]
+    fn image_slices() {
+        let mut t = Tensor::zeros(&[2, 1, 2, 2]);
+        t.image_mut(1).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.image(0), &[0.0; 4]);
+        assert_eq!(t.image(1), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn lerp() {
+        let mut a = Tensor::from_vec(&[2], vec![0.0, 10.0]).unwrap();
+        let b = Tensor::from_vec(&[2], vec![10.0, 10.0]).unwrap();
+        a.lerp_from(&b, 0.25);
+        assert_eq!(a.data(), &[2.5, 10.0]);
+    }
+
+    #[test]
+    fn reshape_round_trip() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        let u = t.clone().reshape(&[3, 2]).unwrap();
+        assert_eq!(u.data(), t.data());
+        assert!(t.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn norm_and_mean() {
+        let t = Tensor::from_vec(&[2], vec![3.0, 4.0]).unwrap();
+        assert!((t.norm() - 5.0).abs() < 1e-6);
+        assert!((t.mean() - 3.5).abs() < 1e-6);
+    }
+}

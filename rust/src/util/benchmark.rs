@@ -1,0 +1,138 @@
+//! Micro/endto-end benchmark harness (criterion is not vendored here).
+//!
+//! `cargo bench` targets use [`Bench`] to time closures with warmup,
+//! report mean/median/min and throughput, and print table rows that mirror
+//! the paper's evaluation tables.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Sample {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+
+    /// items/second given items processed per iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+/// A tiny criterion-alike: fixed warmup iterations then timed iterations.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup_iters: 2,
+            iters: 10,
+        }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup_iters: usize, iters: usize) -> Bench {
+        Bench {
+            warmup_iters,
+            iters,
+        }
+    }
+
+    /// Time `f`, returning the per-iteration stats. The closure's return
+    /// value is passed through `std::hint::black_box` to defeat DCE.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Sample {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed());
+        }
+        times.sort();
+        let total: Duration = times.iter().sum();
+        let s = Sample {
+            name: name.to_string(),
+            iters: self.iters,
+            mean: total / self.iters as u32,
+            median: times[self.iters / 2],
+            min: times[0],
+            max: times[self.iters - 1],
+        };
+        println!(
+            "{:<40} mean {:>10.3?}  median {:>10.3?}  min {:>10.3?}  (n={})",
+            s.name, s.mean, s.median, s.min, s.iters
+        );
+        s
+    }
+}
+
+/// Pretty table printer for the paper-reproduction benches: fixed-width
+/// columns, header rule, one row per call.
+pub struct Table {
+    widths: Vec<usize>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        let widths: Vec<usize> = headers.iter().map(|h| h.len().max(10)).collect();
+        let t = Table { widths };
+        t.row(headers);
+        println!("{}", "-".repeat(t.widths.iter().sum::<usize>() + 3 * t.widths.len() + 1));
+        t
+    }
+
+    pub fn row(&self, cells: &[&str]) {
+        let mut line = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            let w = self.widths.get(i).copied().unwrap_or(10);
+            line.push_str(&format!(" {c:>w$} |"));
+        }
+        println!("{line}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0usize;
+        let b = Bench::new(1, 5);
+        let s = b.run("count", || {
+            n += 1;
+            n
+        });
+        assert_eq!(n, 6); // 1 warmup + 5 timed
+        assert_eq!(s.iters, 5);
+        assert!(s.min <= s.median && s.median <= s.max);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = Sample {
+            name: "x".into(),
+            iters: 1,
+            mean: Duration::from_millis(100),
+            median: Duration::from_millis(100),
+            min: Duration::from_millis(100),
+            max: Duration::from_millis(100),
+        };
+        assert!((s.throughput(50.0) - 500.0).abs() < 1e-9);
+    }
+}

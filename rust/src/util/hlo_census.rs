@@ -1,0 +1,142 @@
+//! HLO-text op census: a small introspection tool over the AOT artifacts.
+//!
+//! Parses the HLO text the runtime compiles and counts instructions by
+//! opcode — used by `airbench info --hlo <variant>` and the L2 section of
+//! EXPERIMENTS.md §Perf to verify the lowered module has the expected
+//! structure (dots for the kernel matmuls, no stray `while` loops from the
+//! interpret-mode grid once the CPU tile profile is active, no
+//! custom-calls that the CPU plugin could not run).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Instruction counts by opcode, plus computation count.
+#[derive(Clone, Debug, Default)]
+pub struct Census {
+    pub ops: BTreeMap<String, usize>,
+    pub computations: usize,
+    pub instructions: usize,
+}
+
+impl Census {
+    pub fn count(&self, op: &str) -> usize {
+        self.ops.get(op).copied().unwrap_or(0)
+    }
+
+    /// Top-n opcodes by count.
+    pub fn top(&self, n: usize) -> Vec<(String, usize)> {
+        let mut v: Vec<(String, usize)> = self.ops.iter().map(|(k, c)| (k.clone(), *c)).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v.truncate(n);
+        v
+    }
+}
+
+/// Census of one HLO text module.
+///
+/// HLO text grammar (the slice we need): computations start with
+/// `ENTRY`/`%name (args) -> ty {` or `name {`; instruction lines look like
+/// `  %foo.12 = f32[2,3]{1,0} opcode(%bar), attr=...`.
+pub fn census_str(text: &str) -> Census {
+    let mut c = Census::default();
+    for line in text.lines() {
+        let t = line.trim_start();
+        if t.ends_with('{') && !t.starts_with('%') {
+            c.computations += 1;
+            continue;
+        }
+        // instruction: "<lhs> = <shape> <opcode>(...)"
+        let Some(eq) = t.find(" = ") else { continue };
+        let rhs = &t[eq + 3..];
+        // skip the shape token (ends at the first space outside brackets)
+        let mut depth = 0usize;
+        let mut shape_end = rhs.len();
+        for (i, ch) in rhs.char_indices() {
+            match ch {
+                '[' | '{' | '(' => depth += 1,
+                ']' | '}' | ')' => depth = depth.saturating_sub(1),
+                ' ' if depth == 0 => {
+                    shape_end = i;
+                    break;
+                }
+                _ => {}
+            }
+        }
+        let after = rhs[shape_end..].trim_start();
+        let op: String = after
+            .chars()
+            .take_while(|ch| ch.is_ascii_alphanumeric() || *ch == '-' || *ch == '_')
+            .collect();
+        if op.is_empty() {
+            continue;
+        }
+        *c.ops.entry(op).or_insert(0) += 1;
+        c.instructions += 1;
+    }
+    c
+}
+
+/// Census of an HLO text file.
+pub fn census_file(path: &Path) -> Result<Census> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    Ok(census_str(&text))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"HloModule jit_fn
+
+ENTRY %main.10 (p0: f32[2,2], p1: f32[2,2]) -> (f32[2,2]) {
+  %p0 = f32[2,2]{1,0} parameter(0)
+  %p1 = f32[2,2]{1,0} parameter(1)
+  %dot.3 = f32[2,2]{1,0} dot(%p0, %p1), lhs_contracting_dims={1}
+  %constant.4 = f32[] constant(2)
+  %broadcast.5 = f32[2,2]{1,0} broadcast(%constant.4), dimensions={}
+  %add.6 = f32[2,2]{1,0} add(%dot.3, %broadcast.5)
+  ROOT %tuple.7 = (f32[2,2]{1,0}) tuple(%add.6)
+}
+"#;
+
+    #[test]
+    fn counts_sample_ops() {
+        let c = census_str(SAMPLE);
+        assert_eq!(c.count("parameter"), 2);
+        assert_eq!(c.count("dot"), 1);
+        assert_eq!(c.count("add"), 1);
+        assert_eq!(c.count("tuple"), 1);
+        assert_eq!(c.computations, 1);
+        assert!(c.instructions >= 7);
+    }
+
+    #[test]
+    fn top_orders_by_count() {
+        let c = census_str(SAMPLE);
+        assert_eq!(c.top(1)[0].0, "parameter");
+    }
+
+    #[test]
+    fn real_artifacts_have_expected_structure() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let f = dir.join("bench_train.hlo.txt");
+        if !f.exists() {
+            return;
+        }
+        let c = census_file(&f).unwrap();
+        // the Pallas matmuls lower to dots/fusions...
+        assert!(c.count("dot") + c.count("fusion") > 0, "{:?}", c.top(10));
+        // ...and the CPU tile profile must not leave grid while-loops
+        // (§Perf iteration 2) or unrunnable custom-calls.
+        assert_eq!(c.count("custom-call"), 0, "{:?}", c.top(20));
+    }
+
+    #[test]
+    fn empty_and_garbage_are_fine() {
+        assert_eq!(census_str("").instructions, 0);
+        let c = census_str("not hlo at all\nstill not = hlo\n");
+        assert!(c.instructions <= 1);
+    }
+}

@@ -1,0 +1,82 @@
+//! Column-aligned training logger, replicating the paper's
+//! `print_columns` / `print_training_details` output format (Listing 4).
+
+/// The paper's logging columns.
+pub const TRAIN_COLUMNS: &[&str] = &[
+    "run   ",
+    "epoch",
+    "train_loss",
+    "train_acc",
+    "val_acc",
+    "tta_val_acc",
+    "total_time_seconds",
+];
+
+/// One formatted cell: right-justified into its column width.
+fn cell(text: &str, width: usize) -> String {
+    format!("{text:>width$}")
+}
+
+/// Render one row (`| a | b |`) given `(column, value)` pairs; columns
+/// missing a value render empty, like the paper's logger.
+pub fn format_row(columns: &[&str], values: &[(&str, String)]) -> String {
+    let mut out = String::new();
+    for col in columns {
+        let v = values
+            .iter()
+            .find(|(k, _)| *k == col.trim())
+            .map(|(_, v)| v.clone())
+            .unwrap_or_default();
+        out.push_str("| ");
+        out.push_str(&cell(&v, col.len()));
+        out.push(' ');
+    }
+    out.push('|');
+    out
+}
+
+/// Print the header (with rules above and below, like the paper).
+pub fn print_header(columns: &[&str]) {
+    let head = format_row(columns, &columns.iter().map(|c| (c.trim(), c.trim().to_string())).collect::<Vec<_>>());
+    println!("{}", "-".repeat(head.len()));
+    println!("{head}");
+    println!("{}", "-".repeat(head.len()));
+}
+
+/// Print a data row; `is_final` adds the closing rule.
+pub fn print_row(columns: &[&str], values: &[(&str, String)], is_final: bool) {
+    let row = format_row(columns, values);
+    println!("{row}");
+    if is_final {
+        println!("{}", "-".repeat(row.len()));
+    }
+}
+
+/// Format a float the way the paper does (`{:0.4f}`).
+pub fn f4(x: f32) -> String {
+    format!("{x:.4}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_right_justifies() {
+        let cols = ["abcdef", "xy"];
+        let row = format_row(&cols, &[("abcdef", "7".into()), ("xy", "q".into())]);
+        assert_eq!(row, "|      7 |  q |");
+    }
+
+    #[test]
+    fn missing_values_render_empty() {
+        let cols = ["abc"];
+        let row = format_row(&cols, &[]);
+        assert_eq!(row, "|     |");
+    }
+
+    #[test]
+    fn f4_format() {
+        assert_eq!(f4(0.94012), "0.9401");
+    }
+}

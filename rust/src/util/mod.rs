@@ -1,0 +1,10 @@
+//! Shared substrates: JSON, the paper-style column logger, a bench harness
+//! (criterion is not vendored on this image), and a small property-testing
+//! harness (proptest is not vendored either).
+
+pub mod benchmark;
+pub mod hlo_census;
+pub mod md5;
+pub mod json;
+pub mod logging;
+pub mod proptest;

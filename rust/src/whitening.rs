@@ -1,0 +1,395 @@
+//! Frozen patch-whitening initialization (paper §3.2).
+//!
+//! The first layer is a 2x2 conv whose first 12 filters are the
+//! eigenvectors of the covariance matrix of 2x2 training patches, scaled by
+//! `1/sqrt(eigenvalue + eps)` so outputs have identity covariance; the
+//! second 12 are their negations (information is preserved through the
+//! GELU). The paper computes this from the first 5000 training images and
+//! freezes the weights.
+//!
+//! Substrate built here: a cyclic Jacobi symmetric eigensolver (no LAPACK
+//! on this image) — for the 12x12 patch covariance it converges to machine
+//! precision in a handful of sweeps.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// Eigendecomposition of a symmetric matrix by the cyclic Jacobi method.
+/// Returns (eigenvalues, eigenvectors) with eigenvectors in ROWS, sorted by
+/// DESCENDING eigenvalue (the paper flips eigh's ascending order).
+pub fn symmetric_eigh(a: &[f64], n: usize) -> Result<(Vec<f64>, Vec<f64>)> {
+    if a.len() != n * n {
+        bail!("matrix must be {n}x{n}, got {} elements", a.len());
+    }
+    let mut m = a.to_vec();
+    // v starts as identity; accumulates rotations as COLUMNS = eigenvectors.
+    let mut v = vec![0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let idx = |r: usize, c: usize| r * n + c;
+    for _sweep in 0..100 {
+        let mut off = 0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += m[idx(p, q)] * m[idx(p, q)];
+            }
+        }
+        if off < 1e-24 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[idx(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[idx(p, p)];
+                let aqq = m[idx(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p and q of m.
+                for k in 0..n {
+                    let mkp = m[idx(k, p)];
+                    let mkq = m[idx(k, q)];
+                    m[idx(k, p)] = c * mkp - s * mkq;
+                    m[idx(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[idx(p, k)];
+                    let mqk = m[idx(q, k)];
+                    m[idx(p, k)] = c * mpk - s * mqk;
+                    m[idx(q, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[idx(k, p)];
+                    let vkq = v[idx(k, q)];
+                    v[idx(k, p)] = c * vkp - s * vkq;
+                    v[idx(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    // Extract (eigenvalue, eigenvector-column) pairs, sort descending.
+    let mut pairs: Vec<(f64, Vec<f64>)> = (0..n)
+        .map(|j| {
+            let lam = m[idx(j, j)];
+            let vec: Vec<f64> = (0..n).map(|i| v[idx(i, j)]).collect();
+            (lam, vec)
+        })
+        .collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let eigenvalues: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+    let mut eigenvectors = vec![0f64; n * n];
+    for (r, p) in pairs.iter().enumerate() {
+        eigenvectors[r * n..(r + 1) * n].copy_from_slice(&p.1);
+    }
+    Ok((eigenvalues, eigenvectors))
+}
+
+/// Covariance matrix (d x d, d = c*k*k) of all k x k patches (stride 1)
+/// across `images` — the paper's `(patches_flat.T @ patches_flat) / n`
+/// (uncentered second moment, exactly as Listing 4 computes it).
+pub fn patch_covariance(images: &Tensor, k: usize) -> Vec<f64> {
+    let (n, c, h, w) = images.dims4();
+    let d = c * k * k;
+    let mut cov = vec![0f64; d * d];
+    let mut patch = vec![0f64; d];
+    let mut count = 0f64;
+    for ni in 0..n {
+        let img = images.image(ni);
+        for y in 0..=(h - k) {
+            for x in 0..=(w - k) {
+                let mut t = 0;
+                for ci in 0..c {
+                    for dy in 0..k {
+                        let row = (ci * h + y + dy) * w + x;
+                        for dx in 0..k {
+                            patch[t] = img[row + dx] as f64;
+                            t += 1;
+                        }
+                    }
+                }
+                count += 1.0;
+                // accumulate upper triangle
+                for i in 0..d {
+                    let pi = patch[i];
+                    for j in i..d {
+                        cov[i * d + j] += pi * patch[j];
+                    }
+                }
+            }
+        }
+    }
+    for i in 0..d {
+        for j in i..d {
+            let v = cov[i * d + j] / count;
+            cov[i * d + j] = v;
+            cov[j * d + i] = v;
+        }
+    }
+    cov
+}
+
+/// Compute the frozen whitening conv weights (paper §3.2 / Listing 4
+/// `init_whitening_conv`): rows are `eigvec / sqrt(eigval + eps)` followed
+/// by their negations. Returns a `(2d, c, k, k)` tensor, d = c*k*k.
+///
+/// The paper notes reducing `eps` (vs tysam-code's 1e-2) gives a small
+/// boost; its Listing 4 uses 5e-4, our default too.
+pub fn whitening_weights(images: &Tensor, k: usize, eps: f64) -> Result<Tensor> {
+    let (_, c, _, _) = images.dims4();
+    let d = c * k * k;
+    let cov = patch_covariance(images, k);
+    let (eigenvalues, eigenvectors) = symmetric_eigh(&cov, d)?;
+    let mut w = vec![0f32; 2 * d * d];
+    for r in 0..d {
+        let scale = 1.0 / (eigenvalues[r].max(0.0) + eps).sqrt();
+        for j in 0..d {
+            let val = (eigenvectors[r * d + j] * scale) as f32;
+            w[r * d + j] = val; // filter r
+            w[(d + r) * d + j] = -val; // negated twin (filter d + r)
+        }
+    }
+    Tensor::from_vec(&[2 * d, c, k, k], w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::util::proptest;
+
+    fn matmul(a: &[f64], b: &[f64], n: usize) -> Vec<f64> {
+        let mut out = vec![0f64; n * n];
+        for i in 0..n {
+            for kk in 0..n {
+                let aik = a[i * n + kk];
+                for j in 0..n {
+                    out[i * n + j] += aik * b[kk * n + j];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn eigh_identity() {
+        let n = 4;
+        let mut a = vec![0f64; 16];
+        for i in 0..4 {
+            a[i * n + i] = 1.0;
+        }
+        let (vals, _) = symmetric_eigh(&a, n).unwrap();
+        for v in vals {
+            assert!((v - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn eigh_known_2x2() {
+        // [[2, 1], [1, 2]] has eigenvalues 3 and 1.
+        let a = vec![2.0, 1.0, 1.0, 2.0];
+        let (vals, vecs) = symmetric_eigh(&a, 2).unwrap();
+        assert!((vals[0] - 3.0).abs() < 1e-12);
+        assert!((vals[1] - 1.0).abs() < 1e-12);
+        // first eigenvector ∝ (1, 1)
+        assert!((vecs[0].abs() - vecs[1].abs()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eigh_reconstructs_matrix() {
+        proptest::check(
+            "eigh_reconstruction",
+            20,
+            |r| {
+                let n = 3 + r.below(8);
+                // random symmetric
+                let mut a = vec![0f64; n * n];
+                for i in 0..n {
+                    for j in i..n {
+                        let v = (r.uniform() * 2.0 - 1.0) as f64;
+                        a[i * n + j] = v;
+                        a[j * n + i] = v;
+                    }
+                }
+                (n, a)
+            },
+            |(n, a)| {
+                let n = *n;
+                let (vals, vecs) = symmetric_eigh(a, n).unwrap();
+                // Reconstruct V^T diag(vals) V where rows of `vecs` are
+                // eigenvectors: A = sum_r lam_r v_r v_r^T.
+                let mut recon = vec![0f64; n * n];
+                for r in 0..n {
+                    for i in 0..n {
+                        for j in 0..n {
+                            recon[i * n + j] +=
+                                vals[r] * vecs[r * n + i] * vecs[r * n + j];
+                        }
+                    }
+                }
+                recon
+                    .iter()
+                    .zip(a.iter())
+                    .all(|(x, y)| (x - y).abs() < 1e-8)
+            },
+        );
+    }
+
+    #[test]
+    fn eigh_eigenvectors_orthonormal() {
+        let mut r = Rng::new(3);
+        let n = 12;
+        let mut a = vec![0f64; n * n];
+        for i in 0..n {
+            for j in i..n {
+                let v = r.normal() as f64;
+                a[i * n + j] = v;
+                a[j * n + i] = v;
+            }
+        }
+        let (_, vecs) = symmetric_eigh(&a, n).unwrap();
+        // rows orthonormal: vecs @ vecs^T = I
+        let mut vt = vec![0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                vt[j * n + i] = vecs[i * n + j];
+            }
+        }
+        let prod = matmul(&vecs, &vt, n);
+        for i in 0..n {
+            for j in 0..n {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (prod[i * n + j] - expect).abs() < 1e-9,
+                    "({i},{j}) = {}",
+                    prod[i * n + j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eigh_rejects_bad_size() {
+        assert!(symmetric_eigh(&[1.0; 5], 2).is_err());
+    }
+
+    #[test]
+    fn patch_covariance_of_constant_images() {
+        // Constant image c: every patch is (c..c), cov = c^2 * ones.
+        let images = Tensor::full(&[2, 1, 4, 4], 2.0);
+        let cov = patch_covariance(&images, 2);
+        for v in &cov {
+            assert!((v - 4.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn patch_covariance_is_symmetric_psd() {
+        let mut r = Rng::new(9);
+        let mut images = Tensor::zeros(&[4, 3, 8, 8]);
+        for v in images.data_mut() {
+            *v = r.normal();
+        }
+        let d = 12;
+        let cov = patch_covariance(&images, 2);
+        for i in 0..d {
+            for j in 0..d {
+                assert!((cov[i * d + j] - cov[j * d + i]).abs() < 1e-9);
+            }
+        }
+        let (vals, _) = symmetric_eigh(&cov, d).unwrap();
+        for v in vals {
+            assert!(v > -1e-9, "negative eigenvalue {v}");
+        }
+    }
+
+    #[test]
+    fn whitening_weights_shape_and_negation() {
+        let mut r = Rng::new(5);
+        let mut images = Tensor::zeros(&[8, 3, 8, 8]);
+        for v in images.data_mut() {
+            *v = r.normal();
+        }
+        let w = whitening_weights(&images, 2, 5e-4).unwrap();
+        assert_eq!(w.shape(), &[24, 3, 2, 2]);
+        // second half is the negation of the first (paper §3.2)
+        let d = 12;
+        let flat = w.data();
+        for i in 0..d * d {
+            assert_eq!(flat[i], -flat[d * d + i]);
+        }
+    }
+
+    #[test]
+    fn whitening_whitens() {
+        // After the whitening transform, patch outputs should have ~identity
+        // covariance (that is the definition used by the paper).
+        let mut r = Rng::new(6);
+        let mut images = Tensor::zeros(&[16, 3, 10, 10]);
+        for v in images.data_mut() {
+            *v = r.normal() * 0.5 + 0.1;
+        }
+        let k = 2;
+        let d = 12;
+        let w = whitening_weights(&images, k, 1e-8).unwrap();
+        let wf = w.data();
+        // Project every patch through the first d filters and accumulate
+        // output covariance.
+        let (n, c, h, wd) = images.dims4();
+        let mut cov = vec![0f64; d * d];
+        let mut cnt = 0f64;
+        let mut patch = vec![0f64; d];
+        let mut out = vec![0f64; d];
+        for ni in 0..n {
+            let img = images.image(ni);
+            for y in 0..=(h - k) {
+                for x in 0..=(wd - k) {
+                    let mut t = 0;
+                    for ci in 0..c {
+                        for dy in 0..k {
+                            for dx in 0..k {
+                                patch[t] = img[(ci * h + y + dy) * wd + x + dx] as f64;
+                                t += 1;
+                            }
+                        }
+                    }
+                    for f in 0..d {
+                        out[f] = (0..d).map(|j| wf[f * d + j] as f64 * patch[j]).sum();
+                    }
+                    for i in 0..d {
+                        for j in 0..d {
+                            cov[i * d + j] += out[i] * out[j];
+                        }
+                    }
+                    cnt += 1.0;
+                }
+            }
+        }
+        for i in 0..d {
+            for j in 0..d {
+                let v = cov[i * d + j] / cnt;
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (v - expect).abs() < 0.05,
+                    "output covariance ({i},{j}) = {v}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eps_regularizes_singular_covariance() {
+        // Degenerate data (all images identical) yields singular covariance;
+        // eps must keep the weights finite.
+        let images = Tensor::full(&[4, 3, 6, 6], 0.7);
+        let w = whitening_weights(&images, 2, 5e-4).unwrap();
+        assert!(w.data().iter().all(|v| v.is_finite()));
+        let maxabs = w.data().iter().fold(0f32, |m, v| m.max(v.abs()));
+        assert!(maxabs < 100.0, "weights blew up: {maxabs}");
+    }
+}
