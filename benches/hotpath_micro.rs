@@ -1,26 +1,83 @@
 //! §Perf — hot-path microbenchmarks (the paper's §3.7 compilation story).
 //!
-//! Measures each stage of the per-step pipeline in isolation:
-//! * compiled train-step execution (PJRT) and its marshal overhead;
-//! * compiled eval-step throughput (images/s) at each TTA level;
-//! * augmentation pipeline (flip/translate/cutout) throughput;
-//! * whitening initialization (patch covariance + Jacobi eigh);
-//! * one-time compile cost vs per-run amortization (the airbench94 vs
-//!   airbench94_compiled trade-off, §3.7).
+//! Part A (host-only, always runs): the data pipeline — synchronous
+//! `Loader` vs the parallel prefetching `Pipeline` at several worker
+//! counts. The two are bit-identical (tests/pipeline_equivalence.rs), so
+//! this is a pure throughput comparison of the same work.
+//!
+//! Part B (needs compiled artifacts + a PJRT runtime; skipped gracefully
+//! otherwise): compiled train-step execution and marshal overhead, eval
+//! throughput per TTA level, whitening init, and the §3.7 compile-cost
+//! amortization table.
 //!
 //! Feeds the before/after table in EXPERIMENTS.md §Perf.
 
 use airbench::config::{TrainConfig, TtaLevel};
 use airbench::coordinator::evaluator::evaluate;
 use airbench::data::loader::{Loader, OrderPolicy};
+use airbench::data::pipeline::Pipeline;
+use airbench::data::synthetic::{cifar_like, SynthConfig};
 use airbench::experiments::{DataKind, Lab};
 use airbench::runtime::{Engine, InitConfig, ModelState};
 use airbench::tensor::Tensor;
 use airbench::util::benchmark::Bench;
 use airbench::whitening::whitening_weights;
 
-fn main() -> anyhow::Result<()> {
-    let mut lab = Lab::new()?;
+fn bench_data_pipeline() {
+    let n: usize = std::env::var("AIRBENCH_TRAIN_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4096);
+    let batch = 64;
+    let ds = cifar_like(&SynthConfig::default().with_n(n), 0xBE9C, 0);
+    let aug = TrainConfig::default().aug(); // alternating flip + translate 2
+    let bench = Bench::new(1, 5);
+
+    let mut loader = Loader::new(&ds, batch, aug.clone(), OrderPolicy::Reshuffle, true, 0);
+    let sync = bench.run(&format!("augment epoch (sync, {n} imgs)"), || {
+        let mut seen = 0;
+        loader.run_epoch(|b| {
+            seen += b.indices.len();
+            true
+        });
+        seen
+    });
+    println!(
+        "  -> {:.2} Mimg/s synchronous baseline",
+        sync.throughput(n as f64) / 1e6
+    );
+
+    for workers in [1usize, 2, 4, 8] {
+        let mut pipe = Pipeline::new(
+            &ds,
+            batch,
+            aug.clone(),
+            OrderPolicy::Reshuffle,
+            true,
+            0,
+            workers,
+            2,
+        );
+        let s = bench.run(
+            &format!("augment epoch (parallel, {workers} workers)"),
+            || {
+                let mut seen = 0;
+                pipe.run_epoch(|b| {
+                    seen += b.indices.len();
+                    true
+                });
+                seen
+            },
+        );
+        println!(
+            "  -> {:.2} Mimg/s, {:.2}x vs sync (bit-identical batches)",
+            s.throughput(n as f64) / 1e6,
+            sync.mean_secs() / s.mean_secs()
+        );
+    }
+}
+
+fn bench_engine(lab: &mut Lab) -> anyhow::Result<()> {
     let (train_ds, test_ds) = lab.data(DataKind::Cifar10);
     let cfg = TrainConfig::default();
 
@@ -37,22 +94,6 @@ fn main() -> anyhow::Result<()> {
         engine.variant().hyper.whiten_kernel,
         5e-4,
     )?)?;
-
-    // Augmented batch production (L3 data pipeline).
-    let bench = Bench::new(3, 20);
-    let mut loader = Loader::new(&train_ds, batch, cfg.aug(), OrderPolicy::Reshuffle, true, 0);
-    let aug_sample = bench.run("augment+batch (64 imgs)", || {
-        let mut n = 0;
-        loader.run_epoch(|b| {
-            n += b.images.len();
-            false // one batch per iteration
-        });
-        n
-    });
-    println!(
-        "  -> {:.1} Mimg/s pipeline throughput",
-        aug_sample.throughput(batch as f64) / 1e6
-    );
 
     // Compiled train step.
     let mut batch_img = Tensor::zeros(&[batch, 3, 32, 32]);
@@ -82,13 +123,11 @@ fn main() -> anyhow::Result<()> {
     // Eval throughput per TTA level.
     for tta in [TtaLevel::None, TtaLevel::Mirror, TtaLevel::MirrorTranslate] {
         let eb = Bench::new(1, 5);
-        let s = eb.run(&format!("evaluate (n={}, tta={})", test_ds.len(), tta.name()), || {
-            evaluate(&mut engine, &state, &test_ds, tta).unwrap().accuracy
-        });
-        println!(
-            "  -> {:.0} img/s",
-            test_ds.len() as f64 / s.mean_secs()
+        let s = eb.run(
+            &format!("evaluate (n={}, tta={})", test_ds.len(), tta.name()),
+            || evaluate(&mut engine, &state, &test_ds, tta).unwrap().accuracy,
         );
+        println!("  -> {:.0} img/s", test_ds.len() as f64 / s.mean_secs());
     }
 
     // Whitening init (host-side Jacobi eigensolve).
@@ -99,10 +138,25 @@ fn main() -> anyhow::Result<()> {
 
     // Amortization table (§3.7): total time for K runs with one compile.
     let step_time = s.mean_secs();
-    println!("\namortization (compile {compile_secs:.1}s + K runs x ~{:.1}s train):", 40.0 * step_time);
+    println!(
+        "\namortization (compile {compile_secs:.1}s + K runs x ~{:.1}s train):",
+        40.0 * step_time
+    );
     for k in [1usize, 5, 25] {
         let total = compile_secs + k as f64 * 40.0 * step_time;
         println!("  K={k:<3} -> {:.1}s total, {:.2}s/run", total, total / k as f64);
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    bench_data_pipeline();
+
+    match Lab::new() {
+        Ok(mut lab) => bench_engine(&mut lab)?,
+        Err(e) => {
+            println!("\nengine benches skipped (no artifacts / PJRT runtime): {e:#}");
+        }
     }
     Ok(())
 }

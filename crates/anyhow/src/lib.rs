@@ -1,0 +1,258 @@
+//! Drop-in shim for the subset of the `anyhow` API this workspace uses
+//! (`Error`, `Result`, `anyhow!`, `bail!`, `ensure!`, `Context`). The real
+//! crate is not vendored on this image; this shim keeps the same call sites
+//! compiling so it can be swapped back for crates.io `anyhow` by editing one
+//! path dependency.
+//!
+//! Semantics match where it matters:
+//! * `Display` prints the outermost message; `{:#}` prints the whole
+//!   context chain (`outer: inner: root`);
+//! * `Debug` (what `fn main() -> Result<()>` prints) shows the outermost
+//!   message plus a `Caused by:` list;
+//! * any `std::error::Error + Send + Sync + 'static` converts via `?`;
+//! * `Context` attaches lazily-built context to `Result` and `Option`.
+
+use std::fmt;
+
+/// Error: an ordered chain of messages, root cause first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message (the `anyhow!` macro's backend).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    fn from_std(e: &(dyn std::error::Error + 'static)) -> Error {
+        let mut chain = Vec::new();
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = Some(e);
+        while let Some(c) = cur {
+            chain.push(c.to_string());
+            cur = c.source();
+        }
+        chain.reverse(); // store root first, outermost last
+        Error { chain }
+    }
+
+    fn push_context(mut self, context: String) -> Error {
+        self.chain.push(context);
+        self
+    }
+
+    /// The context chain, outermost first (mirrors `anyhow::Error::chain`).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().rev().map(String::as_str)
+    }
+
+    /// The innermost (root) message (mirrors `root_cause().to_string()`).
+    pub fn root_cause(&self) -> &str {
+        self.chain.first().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut it = self.chain.iter().rev();
+        match it.next() {
+            Some(outer) => write!(f, "{outer}")?,
+            None => write!(f, "unknown error")?,
+        }
+        if f.alternate() {
+            for c in it {
+                write!(f, ": {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut it = self.chain.iter().rev();
+        match it.next() {
+            Some(outer) => writeln!(f, "{outer}")?,
+            None => writeln!(f, "unknown error")?,
+        }
+        let rest: Vec<&String> = it.collect();
+        if !rest.is_empty() {
+            writeln!(f, "\nCaused by:")?;
+            for (i, c) in rest.iter().enumerate() {
+                writeln!(f, "    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`, exactly
+// like the real anyhow — that is what makes the blanket `From` below and the
+// `Context` impls coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::from_std(&e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+mod private {
+    /// Sealed conversion into [`crate::Error`] — implemented for std errors
+    /// AND for `Error` itself so `.context()` works on both kinds of Result.
+    pub trait IntoError {
+        fn into_error(self) -> crate::Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> crate::Error {
+            crate::Error::from_std(&self)
+        }
+    }
+
+    impl IntoError for crate::Error {
+        fn into_error(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+/// Attach context to errors (`anyhow::Context`).
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: private::IntoError> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().push_context(context.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().push_context(f().to_string()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.to_string(), "no such file");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_display() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: no such file");
+    }
+
+    #[test]
+    fn with_context_on_option_and_on_anyhow_result() {
+        let none: Option<u32> = None;
+        let e = none.with_context(|| "missing key".to_string()).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+
+        // .with_context on an already-anyhow Result (the manifest.rs case).
+        let r: Result<u32> = Err(anyhow!("bad variant"));
+        let e = r.with_context(|| "variant 'x'").unwrap_err();
+        assert_eq!(format!("{e:#}"), "variant 'x': bad variant");
+        assert_eq!(e.root_cause(), "bad variant");
+    }
+
+    #[test]
+    fn bail_and_ensure_and_formatting() {
+        fn f(n: u32) -> Result<u32> {
+            ensure!(n < 10, "n too big: {n}");
+            if n == 3 {
+                bail!("three is right out");
+            }
+            Ok(n)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(3).unwrap_err().to_string(), "three is right out");
+        assert_eq!(f(11).unwrap_err().to_string(), "n too big: 11");
+    }
+
+    #[test]
+    fn debug_prints_caused_by() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening checkpoint").unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("opening checkpoint"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("no such file"));
+    }
+
+    #[test]
+    fn chain_iterates_outermost_first() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("layer1").context("layer2").unwrap_err();
+        let chain: Vec<&str> = e.chain().collect();
+        assert_eq!(chain, vec!["layer2", "layer1", "no such file"]);
+    }
+}

@@ -1,0 +1,249 @@
+//! Stub of the `xla-rs` API surface that `airbench::runtime` compiles
+//! against. The real crate links the XLA C++ runtime, which is not vendored
+//! on this image; this stub keeps the whole workspace building and testing.
+//!
+//! Split personality, on purpose:
+//! * [`Literal`] is **fully functional** — host-side typed buffers with
+//!   shape/reshape/tuple semantics, enough for the marshalling unit tests
+//!   and for any host-only consumer;
+//! * the PJRT types ([`PjRtClient`], [`PjRtLoadedExecutable`],
+//!   [`HloModuleProto`]) **fail at construction time** with a clear
+//!   "runtime unavailable" error, so every caller that needs a compiled
+//!   engine degrades gracefully (integration tests skip, the CLI reports
+//!   the missing backend).
+//!
+//! Swapping the `xla = { path = "crates/xla" }` dependency for the real
+//! bindings restores execution with no source changes in `airbench`.
+
+use std::path::Path;
+
+/// Error type (the real crate's is richer; callers only Display it).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT runtime unavailable (stub `xla` crate; point the \
+         workspace at the real xla-rs bindings to execute compiled modules)"
+    ))
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy + 'static {
+    fn write(data: Vec<Self>, dims: Vec<i64>) -> Literal;
+    fn read(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn write(data: Vec<Self>, dims: Vec<i64>) -> Literal {
+        Literal::F32 { dims, data }
+    }
+
+    fn read(lit: &Literal) -> Result<Vec<Self>> {
+        match lit {
+            Literal::F32 { data, .. } => Ok(data.clone()),
+            other => Err(Error(format!("literal is not f32: {other:?}"))),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn write(data: Vec<Self>, dims: Vec<i64>) -> Literal {
+        Literal::I32 { dims, data }
+    }
+
+    fn read(lit: &Literal) -> Result<Vec<Self>> {
+        match lit {
+            Literal::I32 { data, .. } => Ok(data.clone()),
+            other => Err(Error(format!("literal is not i32: {other:?}"))),
+        }
+    }
+}
+
+/// Host-side typed literal (functional part of the stub).
+#[derive(Debug, Clone)]
+pub enum Literal {
+    F32 { dims: Vec<i64>, data: Vec<f32> },
+    I32 { dims: Vec<i64>, data: Vec<i32> },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::write(data.to_vec(), vec![data.len() as i64])
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if want != have {
+            return Err(Error(format!(
+                "cannot reshape {have} elements into {dims:?}"
+            )));
+        }
+        Ok(match self {
+            Literal::F32 { data, .. } => Literal::F32 {
+                dims: dims.to_vec(),
+                data,
+            },
+            Literal::I32 { data, .. } => Literal::I32 {
+                dims: dims.to_vec(),
+                data,
+            },
+            t @ Literal::Tuple(_) => t,
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            Literal::F32 { data, .. } => data.len(),
+            Literal::I32 { data, .. } => data.len(),
+            Literal::Tuple(parts) => parts.iter().map(Literal::element_count).sum(),
+        }
+    }
+
+    /// Flat copy of the elements, checked against `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::read(self)
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::read(self)?
+            .first()
+            .copied()
+            .ok_or_else(|| Error("literal is empty".into()))
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(parts) => Ok(parts),
+            other => Err(Error(format!("literal is not a tuple: {other:?}"))),
+        }
+    }
+
+    /// Decompose a 1-tuple into its single element.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        let mut parts = self.to_tuple()?;
+        if parts.len() != 1 {
+            return Err(Error(format!("expected 1-tuple, got {}", parts.len())));
+        }
+        Ok(parts.pop().unwrap())
+    }
+}
+
+impl From<f32> for Literal {
+    fn from(v: f32) -> Literal {
+        Literal::F32 {
+            dims: vec![],
+            data: vec![v],
+        }
+    }
+}
+
+/// Parsed HLO module (stub: construction always fails).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        Err(unavailable(&format!(
+            "parsing HLO text {:?}",
+            path.as_ref()
+        )))
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client (stub: construction always fails).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("creating PJRT CPU client"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compiling XLA computation"))
+    }
+}
+
+/// Compiled executable handle (unreachable in the stub: no client exists).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("executing compiled module"))
+    }
+}
+
+/// Device buffer handle (unreachable in the stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("fetching buffer to host"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_vec1_reshape_round_trip() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+        let bad = Literal::vec1(&[1.0f32]).reshape(&[7]);
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn scalar_and_tuple_literals() {
+        let s = Literal::from(2.5f32);
+        assert_eq!(s.get_first_element::<f32>().unwrap(), 2.5);
+        let t = Literal::Tuple(vec![Literal::vec1(&[1i32, 2])]);
+        let inner = t.to_tuple1().unwrap();
+        assert_eq!(inner.to_vec::<i32>().unwrap(), vec![1, 2]);
+        let not_tuple = Literal::from(1.0f32).to_tuple();
+        assert!(not_tuple.is_err());
+    }
+
+    #[test]
+    fn runtime_is_cleanly_unavailable() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("unavailable"), "{e}");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}

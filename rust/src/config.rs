@@ -87,6 +87,12 @@ pub struct TrainConfig {
     pub cutout: usize,
     /// Optional ImageNet-style crop policy (replaces translate; §5.2).
     pub crop: Option<CropPolicy>,
+    /// Data-pipeline worker threads (0 = synchronous loader on the train
+    /// thread; N > 0 = parallel prefetching pipeline with N workers —
+    /// bit-identical output either way, see DESIGN.md §5).
+    pub workers: usize,
+    /// Batches each pipeline worker may run ahead of the consumer.
+    pub prefetch_depth: usize,
     /// RNG seed of the run (fleets fork per-run seeds from this).
     pub seed: u64,
     /// Target accuracy for time-to-target / epochs-to-target reporting
@@ -120,6 +126,8 @@ impl Default for TrainConfig {
             translate: 2,
             cutout: 0,
             crop: None,
+            workers: 0,
+            prefetch_depth: 2,
             seed: 0,
             target_acc: 0.70,
             eval_every_epoch: false,
@@ -194,6 +202,8 @@ impl TrainConfig {
                     _ => return Err(bad()),
                 }
             }
+            "workers" => self.workers = value.parse().map_err(|_| bad())?,
+            "prefetch_depth" => self.prefetch_depth = value.parse().map_err(|_| bad())?,
             "seed" => self.seed = value.parse().map_err(|_| bad())?,
             "target_acc" | "target" => self.target_acc = value.parse().map_err(|_| bad())?,
             "eval_every_epoch" => {
@@ -246,6 +256,8 @@ impl TrainConfig {
             ("flip", Json::str(self.flip.name())),
             ("translate", Json::num(self.translate as f64)),
             ("cutout", Json::num(self.cutout as f64)),
+            ("workers", Json::num(self.workers as f64)),
+            ("prefetch_depth", Json::num(self.prefetch_depth as f64)),
             ("seed", Json::num(self.seed as f64)),
             ("target_acc", Json::num(self.target_acc)),
         ])
@@ -293,12 +305,23 @@ mod tests {
         c.set("dirac", "off").unwrap();
         c.set("order", "replacement").unwrap();
         c.set("crop", "heavy").unwrap();
+        c.set("workers", "4").unwrap();
+        c.set("prefetch_depth", "3").unwrap();
         assert_eq!(c.epochs, 12.5);
         assert_eq!(c.flip, FlipMode::Random);
         assert_eq!(c.tta, TtaLevel::None);
         assert!(!c.dirac_init);
         assert_eq!(c.order, OrderPolicy::WithReplacement);
         assert_eq!(c.crop, Some(CropPolicy::HeavyRrc));
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.prefetch_depth, 3);
+    }
+
+    #[test]
+    fn pipeline_defaults_are_synchronous() {
+        let c = TrainConfig::default();
+        assert_eq!(c.workers, 0);
+        assert_eq!(c.prefetch_depth, 2);
     }
 
     #[test]

@@ -12,7 +12,9 @@
 use anyhow::Result;
 
 use crate::config::TtaLevel;
-use crate::data::augment::{tta_view_into, TTA_VIEWS};
+use crate::data::augment::{tta_view_into, AugConfig, TTA_VIEWS};
+use crate::data::loader::{Loader, OrderPolicy};
+use crate::data::pipeline::BatchSource;
 use crate::data::Dataset;
 use crate::runtime::{Engine, ModelState};
 use crate::tensor::Tensor;
@@ -64,71 +66,91 @@ fn softmax_rows(logits: &mut Tensor) {
 }
 
 /// Evaluate `state` on `dataset` with the given TTA level.
+///
+/// The test set is streamed through a sequential [`BatchSource`] (the same
+/// abstraction the trainer consumes): identity augmentation, no shuffling,
+/// partial final batch kept. The source center-resamples test images to the
+/// model input resolution when they differ, exactly like the old inline
+/// packing loop.
 pub fn evaluate(
     engine: &mut Engine,
     state: &ModelState,
     dataset: &Dataset,
     tta: TtaLevel,
 ) -> Result<EvalOutput> {
+    let hw = engine.variant().image_hw;
+    let mut source = Loader::new(
+        dataset,
+        engine.batch_eval(),
+        AugConfig::none(),
+        OrderPolicy::Sequential,
+        /* drop_last= */ false,
+        0,
+    )
+    .with_output_hw(hw);
+    evaluate_source(engine, state, &mut source, &dataset.labels, tta)
+}
+
+/// Evaluate against batches drawn from any [`BatchSource`]. The source must
+/// yield each example exactly once in index order with identity
+/// augmentation; `labels[i]` is the label of dataset index `i`.
+pub fn evaluate_source(
+    engine: &mut Engine,
+    state: &ModelState,
+    source: &mut dyn BatchSource,
+    labels: &[u16],
+    tta: TtaLevel,
+) -> Result<EvalOutput> {
     let b = engine.batch_eval();
-    let (n, c, h, w) = dataset.images.dims4();
-    let hw = engine.variant().image_hw; // model input; test images are
-                                        // center-resampled if they differ
+    let n = labels.len();
     let k = engine.variant().num_classes;
     let views = views_for(tta);
 
     let mut logits_sum = Tensor::zeros(&[n, k]);
     let mut identity_logits = Tensor::zeros(&[n, k]);
-    let mut batch = Tensor::zeros(&[b, c, hw, hw]);
-    let mut view_buf = Tensor::zeros(&[b, c, hw, hw]);
+    let mut batch: Option<Tensor> = None; // allocated at the first batch
+    let mut view_buf: Option<Tensor> = None;
     let mut scratch = Vec::new();
-    let mut resample_rng = crate::rng::Rng::new(0); // Center crop draws nothing
+    let mut result: Result<()> = Ok(());
 
-    let mut start = 0;
-    while start < n {
-        let take = (n - start).min(b);
-        // Pack `take` images (+ zero padding) into the fixed-size batch.
-        for row in 0..take {
-            let src = dataset.images.image(start + row);
-            if (h, w) == (hw, hw) {
-                batch.image_mut(row).copy_from_slice(src);
-            } else {
-                crate::data::augment::CropPolicy::Center { ratio_pct: 100 }.apply_into(
-                    batch.image_mut(row),
-                    src,
-                    c,
-                    h,
-                    w,
-                    hw,
-                    &mut resample_rng,
-                );
-            }
-        }
+    source.run_epoch(&mut |bt| {
+        let (take, c, h, w) = bt.images.dims4();
+        let batch = batch.get_or_insert_with(|| Tensor::zeros(&[b, c, h, w]));
+        let view_buf = view_buf.get_or_insert_with(|| Tensor::zeros(&[b, c, h, w]));
+        // Pack `take` rows (+ zero padding) into the fixed-size eval batch.
+        batch.data_mut()[..take * c * h * w].copy_from_slice(bt.images.data());
         for row in take..b {
             batch.image_mut(row).fill(0.0);
         }
         for &view in &views {
-            tta_view_into(&mut view_buf, &batch, view, &mut scratch);
-            let logits = engine.eval_logits(state, &view_buf)?;
+            tta_view_into(view_buf, batch, view, &mut scratch);
+            let logits = match engine.eval_logits(state, view_buf) {
+                Ok(l) => l,
+                Err(e) => {
+                    result = Err(e);
+                    return false;
+                }
+            };
             let (flip, dy, dx, weight) = view;
             let src = logits.data();
             let dst = logits_sum.data_mut();
-            for row in 0..take {
+            for (row, &idx) in bt.indices.iter().enumerate() {
                 for j in 0..k {
-                    dst[(start + row) * k + j] += weight * src[row * k + j];
+                    dst[idx as usize * k + j] += weight * src[row * k + j];
                 }
             }
             if !flip && dy == 0 && dx == 0 {
                 // Free no-TTA readout from the identity view.
                 let dst = identity_logits.data_mut();
-                for row in 0..take {
-                    dst[(start + row) * k..(start + row + 1) * k]
+                for (row, &idx) in bt.indices.iter().enumerate() {
+                    dst[idx as usize * k..(idx as usize + 1) * k]
                         .copy_from_slice(&src[row * k..(row + 1) * k]);
                 }
             }
         }
-        start += take;
-    }
+        true
+    });
+    result?;
 
     let argmax_acc = |logits: &Tensor| -> (Vec<u16>, f64) {
         let data = logits.data();
@@ -143,7 +165,7 @@ pub fn evaluate(
                 }
             }
             preds.push(best as u16);
-            if best == dataset.labels[i] as usize {
+            if best == labels[i] as usize {
                 correct += 1;
             }
         }

@@ -12,7 +12,7 @@ pub mod lookahead;
 pub mod schedule;
 pub mod trainer;
 
-pub use evaluator::{evaluate, EvalOutput};
+pub use evaluator::{evaluate, evaluate_source, EvalOutput};
 pub use fleet::{run_fleet, FleetResult};
 pub use lookahead::LookaheadState;
 pub use schedule::{AlphaSchedule, DecoupledHyper, Triangle};

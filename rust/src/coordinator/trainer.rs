@@ -16,6 +16,7 @@ use crate::coordinator::evaluator::{evaluate, EvalOutput};
 use crate::coordinator::lookahead::LookaheadState;
 use crate::coordinator::schedule::{AlphaSchedule, DecoupledHyper, Triangle};
 use crate::data::loader::Loader;
+use crate::data::pipeline::{BatchSource, Pipeline};
 use crate::data::Dataset;
 use crate::runtime::{Engine, InitConfig, ModelState};
 use crate::whitening::whitening_weights;
@@ -90,16 +91,39 @@ pub fn train_full(
 
     // ---- Schedules -------------------------------------------------------
     let batch = engine.batch_train();
-    let mut loader = Loader::new(
-        train_data,
-        batch,
-        cfg.aug(),
-        cfg.order,
-        /* drop_last= */ true,
-        cfg.seed,
-    )
-    .with_output_hw(engine.variant().image_hw);
-    let steps_per_epoch = loader.batches_per_epoch();
+    // cfg.workers > 0 swaps the synchronous loader for the parallel
+    // prefetching pipeline; both implement BatchSource and yield
+    // bit-identical batches (DESIGN.md §5), so training results do not
+    // depend on the worker count.
+    let hw = engine.variant().image_hw;
+    let mut source: Box<dyn BatchSource + '_> = if cfg.workers > 0 {
+        Box::new(
+            Pipeline::new(
+                train_data,
+                batch,
+                cfg.aug(),
+                cfg.order,
+                /* drop_last= */ true,
+                cfg.seed,
+                cfg.workers,
+                cfg.prefetch_depth,
+            )
+            .with_output_hw(hw),
+        )
+    } else {
+        Box::new(
+            Loader::new(
+                train_data,
+                batch,
+                cfg.aug(),
+                cfg.order,
+                /* drop_last= */ true,
+                cfg.seed,
+            )
+            .with_output_hw(hw),
+        )
+    };
+    let steps_per_epoch = source.batches_per_epoch();
     let total_steps = ((steps_per_epoch as f64) * cfg.epochs).ceil() as usize;
     let hyper = DecoupledHyper::new(
         cfg.lr,
@@ -120,7 +144,7 @@ pub fn train_full(
     'epochs: for epoch in 0..epochs_ceil {
         let whiten_bias_on = (epoch as f64) < cfg.whiten_bias_epochs;
         let mut last = (0.0f64, 0.0f64); // (acc, loss) of last batch
-        loader.run_epoch(|b| {
+        source.run_epoch(&mut |b| {
             let lr = (hyper.lr_base * lr_sched.at(step)) as f32;
             match engine.train_step(
                 &mut state,

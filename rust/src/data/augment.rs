@@ -315,15 +315,24 @@ impl AugConfig {
 /// Apply the full augmentation pipeline for one batch.
 ///
 /// `indices` are dataset indices of the batch rows (alternating flip is a
-/// function of the *example identity*, not batch position). Output images
-/// are written into `out` (shape `[B, C, out_hw, out_hw]`).
+/// function of the *example identity*, not batch position); `epoch_pos` is
+/// the epoch position of `indices[0]` (its offset into the epoch's example
+/// order). Output images are written into `out` (shape
+/// `[B, C, out_hw, out_hw]`).
+///
+/// Every random draw comes from a counter-based stream keyed by
+/// `(seed, epoch, epoch_pos + row)` — see [`crate::rng::stream`] — so the
+/// result is a pure function of its arguments. That is what lets the
+/// parallel pipeline (`data::pipeline`) shard batches across workers while
+/// staying bit-identical to the synchronous loader.
 pub fn apply_batch(
     out: &mut Tensor,
     dataset_images: &Tensor,
     indices: &[u32],
     epoch: u64,
+    epoch_pos: u64,
     cfg: &AugConfig,
-    rng: &mut Rng,
+    seed: u64,
     scratch: &mut Vec<f32>,
 ) {
     let (_, c, h, w) = dataset_images.dims4();
@@ -332,6 +341,8 @@ pub fn apply_batch(
     debug_assert_eq!(ob, indices.len());
     scratch.resize(c * h * w, 0.0);
     for (row, &idx) in indices.iter().enumerate() {
+        let rng =
+            &mut crate::rng::stream(seed, crate::rng::LANE_AUG, epoch, epoch_pos + row as u64);
         let src = dataset_images.image(idx as usize);
         let dst = out.image_mut(row);
         let flipped = flip_decision(cfg.flip, idx as u64, epoch, cfg.flip_seed, rng);
@@ -713,10 +724,9 @@ mod tests {
     fn apply_batch_respects_flip_mode_none_and_identity_translate() {
         let ds = Tensor::from_vec(&[2, 1, 2, 2], vec![1., 2., 3., 4., 5., 6., 7., 8.]).unwrap();
         let mut out = Tensor::zeros(&[2, 1, 2, 2]);
-        let mut rng = Rng::new(0);
         let mut scratch = Vec::new();
         let cfg = AugConfig::none();
-        apply_batch(&mut out, &ds, &[1, 0], 0, &cfg, &mut rng, &mut scratch);
+        apply_batch(&mut out, &ds, &[1, 0], 0, 0, &cfg, 0, &mut scratch);
         assert_eq!(out.image(0), ds.image(1));
         assert_eq!(out.image(1), ds.image(0));
     }
@@ -724,7 +734,7 @@ mod tests {
     #[test]
     fn apply_batch_alternating_consistent_across_batches() {
         // The flip decision depends on dataset index + epoch only, never on
-        // batch position or rng state.
+        // batch position, epoch position, or run seed.
         let ds = Tensor::from_vec(&[4, 1, 1, 2], (0..8).map(|i| i as f32).collect()).unwrap();
         let cfg = AugConfig {
             flip: FlipMode::Alternating,
@@ -734,11 +744,38 @@ mod tests {
         let mut scratch = Vec::new();
         let mut out_a = Tensor::zeros(&[2, 1, 1, 2]);
         let mut out_b = Tensor::zeros(&[2, 1, 1, 2]);
-        let mut r1 = Rng::new(1);
-        let mut r2 = Rng::new(999);
-        apply_batch(&mut out_a, &ds, &[2, 3], 5, &cfg, &mut r1, &mut scratch);
-        apply_batch(&mut out_b, &ds, &[3, 2], 5, &cfg, &mut r2, &mut scratch);
+        apply_batch(&mut out_a, &ds, &[2, 3], 5, 0, &cfg, 1, &mut scratch);
+        apply_batch(&mut out_b, &ds, &[3, 2], 5, 6, &cfg, 999, &mut scratch);
         assert_eq!(out_a.image(0), out_b.image(1));
         assert_eq!(out_a.image(1), out_b.image(0));
+    }
+
+    #[test]
+    fn apply_batch_is_a_pure_function_of_epoch_position() {
+        // The draws for row r are keyed by (seed, epoch, epoch_pos + r):
+        // computing a batch whole or split at any boundary yields identical
+        // bytes — the exact property the parallel pipeline relies on.
+        let mut rng = Rng::new(0xF00D);
+        let data: Vec<f32> = (0..6 * 3 * 8 * 8).map(|_| rng.uniform()).collect();
+        let ds = Tensor::from_vec(&[6, 3, 8, 8], data).unwrap();
+        let cfg = AugConfig {
+            flip: FlipMode::Random,
+            translate: 2,
+            cutout: 3,
+            ..AugConfig::default()
+        };
+        let mut scratch = Vec::new();
+        let idxs = [4u32, 1, 5, 0];
+        let mut whole = Tensor::zeros(&[4, 3, 8, 8]);
+        apply_batch(&mut whole, &ds, &idxs, 2, 8, &cfg, 7, &mut scratch);
+        for split in 1..4 {
+            let (lo, hi) = idxs.split_at(split);
+            let mut a = Tensor::zeros(&[lo.len(), 3, 8, 8]);
+            let mut b = Tensor::zeros(&[hi.len(), 3, 8, 8]);
+            apply_batch(&mut a, &ds, lo, 2, 8, &cfg, 7, &mut scratch);
+            apply_batch(&mut b, &ds, hi, 2, 8 + split as u64, &cfg, 7, &mut scratch);
+            let merged: Vec<f32> = a.data().iter().chain(b.data()).copied().collect();
+            assert_eq!(merged, whole.data(), "split at {split}");
+        }
     }
 }

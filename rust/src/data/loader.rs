@@ -6,8 +6,8 @@
 //! counts (airbench94 trains for 9.9 epochs: the loop stops mid-epoch).
 
 use crate::data::augment::{apply_batch, AugConfig};
+use crate::data::pipeline::BatchSource;
 use crate::data::Dataset;
-use crate::rng::Rng;
 use crate::tensor::Tensor;
 
 /// Epoch ordering policy (paper Table 1).
@@ -34,6 +34,29 @@ impl OrderPolicy {
     }
 }
 
+/// Batches per epoch under the drop-last policy — shared by [`Loader`] and
+/// `data::pipeline::Pipeline` so the two can never disagree on batch count.
+pub fn batches_per_epoch(n: usize, batch_size: usize, drop_last: bool) -> usize {
+    if drop_last {
+        n / batch_size
+    } else {
+        n.div_ceil(batch_size)
+    }
+}
+
+/// The epoch's example order under `order` — a pure function of
+/// `(order, n, seed, epoch)` via the [`crate::rng::stream`] derivation, so
+/// the synchronous [`Loader`] and the parallel `data::pipeline` compute the
+/// same order independently.
+pub fn epoch_order(order: OrderPolicy, n: usize, seed: u64, epoch: u64) -> Vec<u32> {
+    let mut rng = crate::rng::stream(seed, crate::rng::LANE_ORDER, epoch, 0);
+    match order {
+        OrderPolicy::Reshuffle => rng.permutation(n),
+        OrderPolicy::WithReplacement => rng.with_replacement(n),
+        OrderPolicy::Sequential => (0..n as u32).collect(),
+    }
+}
+
 /// Streaming batch loader over a [`Dataset`].
 pub struct Loader<'a> {
     dataset: &'a Dataset,
@@ -43,7 +66,7 @@ pub struct Loader<'a> {
     pub drop_last: bool,
     /// Epochs completed so far (drives alternating flip parity).
     pub epoch: u64,
-    rng: Rng,
+    seed: u64,
     /// Preallocated batch buffer, reused across batches.
     batch_images: Tensor,
     scratch: Vec<f32>,
@@ -73,7 +96,7 @@ impl<'a> Loader<'a> {
             order,
             drop_last,
             epoch: 0,
-            rng: Rng::new(seed ^ 0x10adE12),
+            seed,
             batch_images: Tensor::zeros(&[batch_size, c, h, w]),
             scratch: Vec::new(),
         }
@@ -90,63 +113,50 @@ impl<'a> Loader<'a> {
 
     /// Number of batches per epoch.
     pub fn batches_per_epoch(&self) -> usize {
-        let n = self.dataset.len();
-        if self.drop_last {
-            n / self.batch_size
-        } else {
-            n.div_ceil(self.batch_size)
-        }
-    }
-
-    /// The epoch's example order under the current policy.
-    fn epoch_order(&mut self) -> Vec<u32> {
-        let n = self.dataset.len();
-        match self.order {
-            OrderPolicy::Reshuffle => self.rng.permutation(n),
-            OrderPolicy::WithReplacement => self.rng.with_replacement(n),
-            OrderPolicy::Sequential => (0..n as u32).collect(),
-        }
+        batches_per_epoch(self.dataset.len(), self.batch_size, self.drop_last)
     }
 
     /// Run one epoch, invoking `f` on each augmented batch. Returns the
     /// number of batches emitted. Stops early (mid-epoch) when `f` returns
     /// `false` — how the trainer realizes fractional epochs like 9.9.
     pub fn run_epoch(&mut self, mut f: impl FnMut(Batch) -> bool) -> usize {
-        let order = self.epoch_order();
+        let order = epoch_order(self.order, self.dataset.len(), self.seed, self.epoch);
         let bpe = self.batches_per_epoch();
         let mut emitted = 0;
         for b in 0..bpe {
             let start = b * self.batch_size;
             let end = ((b + 1) * self.batch_size).min(order.len());
             let idxs = &order[start..end];
-            // Last partial batch (non-drop_last): still uses the full-size
-            // buffer but only the first rows are meaningful; we instead
-            // allocate an exact-size tensor for that rare case.
+            // Last partial batch (non-drop_last): augmented into an
+            // exact-size temporary so the reusable full-size buffer stays
+            // intact for the next epoch's full batches.
+            let mut partial;
             let images: &Tensor = if idxs.len() == self.batch_size {
                 apply_batch(
                     &mut self.batch_images,
                     &self.dataset.images,
                     idxs,
                     self.epoch,
+                    start as u64,
                     &self.aug,
-                    &mut self.rng,
+                    self.seed,
                     &mut self.scratch,
                 );
                 &self.batch_images
             } else {
                 let (_, c, oh, ow) = self.batch_images.dims4();
-                let mut t = Tensor::zeros(&[idxs.len(), c, oh, ow]);
+                partial = Tensor::zeros(&[idxs.len(), c, oh, ow]);
                 apply_batch(
-                    &mut t,
+                    &mut partial,
                     &self.dataset.images,
                     idxs,
                     self.epoch,
+                    start as u64,
                     &self.aug,
-                    &mut self.rng,
+                    self.seed,
                     &mut self.scratch,
                 );
-                self.batch_images = t;
-                &self.batch_images
+                &partial
             };
             let labels: Vec<i32> = idxs
                 .iter()
@@ -163,6 +173,20 @@ impl<'a> Loader<'a> {
         }
         self.epoch += 1;
         emitted
+    }
+}
+
+impl<'a> BatchSource for Loader<'a> {
+    fn batches_per_epoch(&self) -> usize {
+        Loader::batches_per_epoch(self)
+    }
+
+    fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    fn run_epoch(&mut self, f: &mut dyn FnMut(Batch<'_>) -> bool) -> usize {
+        Loader::run_epoch(self, f)
     }
 }
 
@@ -319,6 +343,18 @@ mod tests {
                 assert_eq!(&s[1..], &[3, 32, 32]);
             }
         }
+    }
+
+    #[test]
+    fn epoch_order_is_seed_and_epoch_keyed() {
+        // Pure function: same keys -> same order; any key change -> new
+        // order (Reshuffle). Sequential ignores the keys entirely.
+        let a = epoch_order(OrderPolicy::Reshuffle, 64, 7, 3);
+        assert_eq!(a, epoch_order(OrderPolicy::Reshuffle, 64, 7, 3));
+        assert_ne!(a, epoch_order(OrderPolicy::Reshuffle, 64, 8, 3));
+        assert_ne!(a, epoch_order(OrderPolicy::Reshuffle, 64, 7, 4));
+        let s = epoch_order(OrderPolicy::Sequential, 5, 9, 9);
+        assert_eq!(s, vec![0, 1, 2, 3, 4]);
     }
 
     #[test]

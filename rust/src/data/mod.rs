@@ -1,16 +1,23 @@
-//! Data substrate: datasets, augmentation policies, and the epoch loader.
+//! Data substrate: datasets, augmentation policies, the epoch loader, and
+//! the parallel prefetching pipeline.
 //!
 //! This is the paper's `CifarLoader` (Listing 4) rebuilt as a Rust
 //! pipeline, plus the paper's *alternating flip* contribution (§3.6), the
 //! ImageNet-style crop policies of §5.2, and the data gates of this
 //! testbed: a real CIFAR-10/100 binary reader (used automatically when the
 //! files exist) and synthetic class-structured generators (used otherwise —
-//! see DESIGN.md §3).
+//! see DESIGN.md §3). Training consumes batches through the [`BatchSource`]
+//! trait, implemented both by the synchronous [`loader::Loader`] and the
+//! multi-threaded [`pipeline::Pipeline`] (bit-identical by construction —
+//! DESIGN.md §5).
 
 pub mod augment;
 pub mod cifar_bin;
 pub mod loader;
+pub mod pipeline;
 pub mod synthetic;
+
+pub use pipeline::{BatchSource, Pipeline};
 
 use crate::tensor::Tensor;
 

@@ -1,0 +1,314 @@
+//! Parallel prefetching batch pipeline.
+//!
+//! The paper's 3.29-second budget leaves no room for the train thread to do
+//! augmentation work (§2 timing protocol): the synchronous [`Loader`]
+//! flips/translates/cuts every batch on the hot path. This module shards
+//! that work across a worker pool and double-buffers finished batches
+//! through bounded channels, so the coordinator consumes ready batches with
+//! zero augmentation work on the training thread.
+//!
+//! **Determinism model** (DESIGN.md §5): every random draw in the data
+//! path is a counter-based stream keyed by `(seed, lane, epoch, counter)`
+//! ([`crate::rng::stream`]) — the epoch order by `(seed, LANE_ORDER,
+//! epoch)`, each example's augmentation by `(seed, LANE_AUG, epoch,
+//! epoch_position)`. Batches are therefore pure functions of their
+//! coordinates, workers share no RNG state, and the pipeline is
+//! **bit-identical** to the synchronous loader for every `OrderPolicy`,
+//! `FlipMode`, seed, worker count, and fractional-epoch combination
+//! (enforced by `tests/pipeline_equivalence.rs`).
+//!
+//! Threading: `run_epoch` spawns `workers` scoped threads. Worker `w`
+//! produces batches `w, w + W, w + 2W, …` into its own bounded channel of
+//! depth `prefetch_depth`; the consumer pops channels round-robin, which
+//! restores global batch order without a reorder buffer and gives
+//! per-worker backpressure. Early exit (fractional epochs) drops the
+//! receivers; blocked producers observe the closed channel and stop.
+
+use std::sync::mpsc::sync_channel;
+
+use crate::data::augment::{apply_batch, AugConfig};
+use crate::data::loader::{batches_per_epoch, epoch_order, Batch, OrderPolicy};
+use crate::data::Dataset;
+use crate::tensor::Tensor;
+
+/// A source of augmented training batches, one epoch at a time.
+///
+/// Implemented by the synchronous [`Loader`] and the parallel [`Pipeline`];
+/// the coordinator (trainer/evaluator) consumes either through this trait
+/// and cannot tell them apart — they are bit-identical by construction.
+pub trait BatchSource {
+    /// Number of batches per epoch under the drop-last policy.
+    fn batches_per_epoch(&self) -> usize;
+
+    /// Epochs completed so far (drives alternating-flip parity).
+    fn epoch(&self) -> u64;
+
+    /// Run one epoch, invoking `f` on each batch in order. Stops early when
+    /// `f` returns `false` (fractional epochs). Returns batches emitted.
+    fn run_epoch(&mut self, f: &mut dyn FnMut(Batch<'_>) -> bool) -> usize;
+}
+
+/// Multi-threaded prefetching implementation of [`BatchSource`].
+pub struct Pipeline<'a> {
+    dataset: &'a Dataset,
+    pub batch_size: usize,
+    pub aug: AugConfig,
+    pub order: OrderPolicy,
+    pub drop_last: bool,
+    /// Epochs completed so far (drives alternating flip parity).
+    pub epoch: u64,
+    seed: u64,
+    /// Worker threads producing batches (>= 1).
+    pub workers: usize,
+    /// Bounded channel depth per worker (>= 1): how many finished batches
+    /// each worker may run ahead of the consumer.
+    pub prefetch_depth: usize,
+    out_hw: usize,
+}
+
+/// One finished batch in flight from a worker to the consumer.
+type BatchMsg = (Tensor, Vec<i32>, Vec<u32>);
+
+impl<'a> Pipeline<'a> {
+    pub fn new(
+        dataset: &'a Dataset,
+        batch_size: usize,
+        aug: AugConfig,
+        order: OrderPolicy,
+        drop_last: bool,
+        seed: u64,
+        workers: usize,
+        prefetch_depth: usize,
+    ) -> Pipeline<'a> {
+        Pipeline {
+            dataset,
+            batch_size,
+            aug,
+            order,
+            drop_last,
+            epoch: 0,
+            seed,
+            workers: workers.max(1),
+            prefetch_depth: prefetch_depth.max(1),
+            out_hw: dataset.hw(),
+        }
+    }
+
+    /// Emit batches at `hw` x `hw` (the model's input resolution), like
+    /// [`Loader::with_output_hw`].
+    pub fn with_output_hw(mut self, hw: usize) -> Self {
+        self.out_hw = hw;
+        self
+    }
+
+    /// Number of batches per epoch (same shared formula as [`Loader`], so
+    /// the two sources can never disagree on batch count).
+    pub fn batches_per_epoch(&self) -> usize {
+        batches_per_epoch(self.dataset.len(), self.batch_size, self.drop_last)
+    }
+
+    /// Run one epoch through the worker pool. Batch `b` is computed by
+    /// worker `b % workers` and consumed in order; see the module docs for
+    /// the determinism argument.
+    pub fn run_epoch(&mut self, mut f: impl FnMut(Batch) -> bool) -> usize {
+        let order = epoch_order(self.order, self.dataset.len(), self.seed, self.epoch);
+        let bpe = self.batches_per_epoch();
+        let workers = self.workers.min(bpe.max(1));
+        let depth = self.prefetch_depth;
+        let epoch = self.epoch;
+        let (batch_size, seed, out_hw) = (self.batch_size, self.seed, self.out_hw);
+        let (dataset, aug) = (self.dataset, &self.aug);
+        let (_, c, _, _) = dataset.images.dims4();
+        let mut emitted = 0;
+
+        std::thread::scope(|s| {
+            let order = &order;
+            let mut rxs = Vec::with_capacity(workers);
+            for wkr in 0..workers {
+                let (tx, rx) = sync_channel::<BatchMsg>(depth);
+                rxs.push(rx);
+                s.spawn(move || {
+                    let mut scratch = Vec::new();
+                    let mut b = wkr;
+                    while b < bpe {
+                        let start = b * batch_size;
+                        let end = ((b + 1) * batch_size).min(order.len());
+                        let idxs = &order[start..end];
+                        let mut images = Tensor::zeros(&[idxs.len(), c, out_hw, out_hw]);
+                        apply_batch(
+                            &mut images,
+                            &dataset.images,
+                            idxs,
+                            epoch,
+                            start as u64,
+                            aug,
+                            seed,
+                            &mut scratch,
+                        );
+                        let labels: Vec<i32> = idxs
+                            .iter()
+                            .map(|&i| dataset.labels[i as usize] as i32)
+                            .collect();
+                        // A closed channel means the consumer stopped early
+                        // (fractional epoch) — wind down quietly.
+                        if tx.send((images, labels, idxs.to_vec())).is_err() {
+                            break;
+                        }
+                        b += workers;
+                    }
+                });
+            }
+            for b in 0..bpe {
+                // recv only fails if a worker panicked; the scope re-raises
+                // that panic right after this loop.
+                let Ok((images, labels, indices)) = rxs[b % workers].recv() else {
+                    break;
+                };
+                emitted += 1;
+                if !f(Batch {
+                    images: &images,
+                    labels,
+                    indices,
+                }) {
+                    break;
+                }
+            }
+            drop(rxs); // unblock producers mid-send before the scope joins
+        });
+
+        self.epoch += 1;
+        emitted
+    }
+}
+
+impl<'a> BatchSource for Pipeline<'a> {
+    fn batches_per_epoch(&self) -> usize {
+        Pipeline::batches_per_epoch(self)
+    }
+
+    fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    fn run_epoch(&mut self, f: &mut dyn FnMut(Batch<'_>) -> bool) -> usize {
+        Pipeline::run_epoch(self, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{cifar_like, SynthConfig};
+
+    fn tiny_ds(n: usize) -> Dataset {
+        cifar_like(&SynthConfig::default().with_n(n), 11, 0)
+    }
+
+    #[test]
+    fn covers_every_example_once_under_reshuffle() {
+        let ds = tiny_ds(32);
+        let mut p = Pipeline::new(
+            &ds,
+            8,
+            AugConfig::none(),
+            OrderPolicy::Reshuffle,
+            true,
+            1,
+            3,
+            2,
+        );
+        let mut seen = vec![0usize; 32];
+        let emitted = p.run_epoch(|b| {
+            for &i in &b.indices {
+                seen[i as usize] += 1;
+            }
+            true
+        });
+        assert_eq!(emitted, 4);
+        assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+        assert_eq!(p.epoch, 1);
+    }
+
+    #[test]
+    fn early_stop_mid_epoch_advances_epoch() {
+        let ds = tiny_ds(64);
+        let mut p = Pipeline::new(
+            &ds,
+            4,
+            AugConfig::default(),
+            OrderPolicy::Sequential,
+            true,
+            4,
+            4,
+            1,
+        );
+        let mut count = 0;
+        let emitted = p.run_epoch(|_| {
+            count += 1;
+            count < 3
+        });
+        assert_eq!(emitted, 3);
+        assert_eq!(p.epoch, 1);
+    }
+
+    #[test]
+    fn partial_last_batch_sizes_without_drop_last() {
+        let ds = tiny_ds(10);
+        let mut p = Pipeline::new(
+            &ds,
+            4,
+            AugConfig::none(),
+            OrderPolicy::Sequential,
+            false,
+            6,
+            2,
+            2,
+        );
+        let mut sizes = Vec::new();
+        p.run_epoch(|b| {
+            sizes.push(b.indices.len());
+            true
+        });
+        assert_eq!(sizes, vec![4, 4, 2]);
+    }
+
+    #[test]
+    fn more_workers_than_batches_is_fine() {
+        let ds = tiny_ds(8);
+        let mut p = Pipeline::new(
+            &ds,
+            8,
+            AugConfig::none(),
+            OrderPolicy::Sequential,
+            true,
+            0,
+            16,
+            4,
+        );
+        assert_eq!(p.run_epoch(|_| true), 1);
+    }
+
+    #[test]
+    fn usable_as_a_trait_object() {
+        let ds = tiny_ds(16);
+        let mut p = Pipeline::new(
+            &ds,
+            4,
+            AugConfig::none(),
+            OrderPolicy::Sequential,
+            true,
+            0,
+            2,
+            2,
+        );
+        let src: &mut dyn BatchSource = &mut p;
+        assert_eq!(src.batches_per_epoch(), 4);
+        assert_eq!(src.epoch(), 0);
+        let mut n = 0;
+        src.run_epoch(&mut |_| {
+            n += 1;
+            true
+        });
+        assert_eq!(n, 4);
+    }
+}

@@ -44,6 +44,17 @@ fn build_config(args: &Args, lab: &Lab) -> Result<TrainConfig> {
     for (k, v) in &args.overrides {
         cfg.set(k, v)?;
     }
+    // Data-pipeline flags (also reachable as `workers=N` /
+    // `prefetch_depth=N` overrides): `--workers N` enables the parallel
+    // prefetching pipeline with N worker threads — bit-identical batches
+    // to the synchronous loader (DESIGN.md §5); `--prefetch-depth N` caps
+    // how many batches each worker runs ahead.
+    if let Some(w) = args.options.get("workers") {
+        cfg.set("workers", w)?;
+    }
+    if let Some(d) = args.options.get("prefetch-depth") {
+        cfg.set("prefetch_depth", d)?;
+    }
     Ok(cfg)
 }
 
@@ -226,8 +237,13 @@ fn cmd_info(args: &Args) -> Result<()> {
 fn usage() {
     eprintln!(
         "usage: airbench <train|eval|fleet|info> [--data cifar10] [--runs N] \
-         [--config file.json] [--save ckpt.bin] [--load ckpt.bin] \
-         [--log fleet.json] [--hlo] [key=value ...]\n       airbench --version"
+         [--config file.json] [--workers N] [--prefetch-depth N] \
+         [--save ckpt.bin] [--load ckpt.bin] \
+         [--log fleet.json] [--hlo] [key=value ...]\n       airbench --version\n\
+         \n\
+         --workers N         augment batches on N background threads \
+         (0 = on the train thread; output is bit-identical either way)\n\
+         --prefetch-depth N  batches each worker may run ahead (default 2)"
     );
 }
 

@@ -1,0 +1,413 @@
+//! Sync/parallel equivalence suite (the contract of `data::pipeline`).
+//!
+//! Three families of tests:
+//! 1. **Bit-exact equivalence**: the parallel prefetching [`Pipeline`]
+//!    yields byte-identical batch tensors, labels, and index order to the
+//!    synchronous [`Loader`] across seeds, worker counts, batch sizes,
+//!    prefetch depths, every `OrderPolicy`, every `FlipMode`, and
+//!    fractional (early-stopped) epochs.
+//! 2. **Alternating-flip invariants** (paper §3.6): every pair of
+//!    consecutive epochs shows all 2N unique views — epoch e flips exactly
+//!    the complement of epoch e−1 — including through the parallel
+//!    pipeline and across a fractional final epoch.
+//! 3. **Golden vectors for `FlipMode::AlternatingPaper`**: parities of
+//!    `md5(str(index * seed))[-8:]` precomputed with Python hashlib, so
+//!    `util::md5` staying bit-exact with the reference airbench94.py is
+//!    asserted against fixtures rather than our own implementation.
+
+use airbench::data::augment::{flip_decision, flip_into, AugConfig, CropPolicy, FlipMode};
+use airbench::data::loader::{Loader, OrderPolicy};
+use airbench::data::pipeline::{BatchSource, Pipeline};
+use airbench::data::synthetic::{cifar_like, SynthConfig};
+use airbench::data::Dataset;
+use airbench::rng::Rng;
+use airbench::util::proptest;
+
+const ORDERS: [OrderPolicy; 3] = [
+    OrderPolicy::Reshuffle,
+    OrderPolicy::WithReplacement,
+    OrderPolicy::Sequential,
+];
+
+const FLIPS: [FlipMode; 4] = [
+    FlipMode::None,
+    FlipMode::Random,
+    FlipMode::Alternating,
+    FlipMode::AlternatingPaper,
+];
+
+/// Everything a source emitted, in order, as owned data.
+#[derive(Debug, PartialEq)]
+struct Emitted {
+    images: Vec<Vec<f32>>,
+    labels: Vec<Vec<i32>>,
+    indices: Vec<Vec<u32>>,
+}
+
+/// Drain `epochs` full epochs plus (optionally) `partial` batches of one
+/// final fractional epoch from a [`BatchSource`].
+fn drain(src: &mut dyn BatchSource, epochs: usize, partial: Option<usize>) -> Emitted {
+    let mut out = Emitted {
+        images: Vec::new(),
+        labels: Vec::new(),
+        indices: Vec::new(),
+    };
+    for _ in 0..epochs {
+        src.run_epoch(&mut |b| {
+            out.images.push(b.images.data().to_vec());
+            out.labels.push(b.labels);
+            out.indices.push(b.indices);
+            true
+        });
+    }
+    if let Some(k) = partial {
+        let mut taken = 0;
+        src.run_epoch(&mut |b| {
+            out.images.push(b.images.data().to_vec());
+            out.labels.push(b.labels);
+            out.indices.push(b.indices);
+            taken += 1;
+            taken < k
+        });
+    }
+    out
+}
+
+fn dataset(n: usize, seed: u64) -> Dataset {
+    cifar_like(&SynthConfig::default().with_n(n), seed, 0)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn assert_equivalent(
+    ds: &Dataset,
+    batch_size: usize,
+    aug: &AugConfig,
+    order: OrderPolicy,
+    drop_last: bool,
+    seed: u64,
+    workers: usize,
+    depth: usize,
+    epochs: usize,
+    partial: Option<usize>,
+) {
+    let mut loader = Loader::new(ds, batch_size, aug.clone(), order, drop_last, seed);
+    let mut pipe = Pipeline::new(
+        ds,
+        batch_size,
+        aug.clone(),
+        order,
+        drop_last,
+        seed,
+        workers,
+        depth,
+    );
+    let sync = drain(&mut loader, epochs, partial);
+    let par = drain(&mut pipe, epochs, partial);
+    assert_eq!(
+        sync.indices, par.indices,
+        "index order diverged (order={order:?} flip={:?} seed={seed} workers={workers})",
+        aug.flip
+    );
+    assert_eq!(sync.labels, par.labels, "labels diverged");
+    assert_eq!(
+        sync.images, par.images,
+        "batch tensors not bit-identical (order={order:?} flip={:?} seed={seed} \
+         workers={workers} batch={batch_size})",
+        aug.flip
+    );
+    assert_eq!(loader.epoch, pipe.epoch, "epoch counters diverged");
+}
+
+/// Acceptance-criterion grid: every (OrderPolicy, FlipMode) combination at
+/// two worker counts, two epochs plus a fractional third.
+#[test]
+fn equivalence_grid_every_order_and_flip_mode() {
+    let ds = dataset(48, 0xE0);
+    for order in ORDERS {
+        for flip in FLIPS {
+            let aug = AugConfig {
+                flip,
+                translate: 2,
+                ..AugConfig::default()
+            };
+            for workers in [2, 4] {
+                assert_equivalent(&ds, 8, &aug, order, true, 3407, workers, 2, 2, Some(3));
+            }
+        }
+    }
+}
+
+/// Randomized sweep: seeds, worker counts, batch sizes, depths, policies,
+/// cutout/translate settings, drop_last, and fractional epochs.
+#[test]
+fn equivalence_property_randomized() {
+    proptest::check(
+        "pipeline_bit_exact_equivalence",
+        16,
+        |r: &mut Rng| {
+            let n = 24 + r.below(40);
+            let batch = 1 + r.below(12);
+            let workers = 1 + r.below(6);
+            let depth = 1 + r.below(4);
+            let order = ORDERS[r.below(3)];
+            let flip = FLIPS[r.below(4)];
+            let translate = [0usize, 2][r.below(2)];
+            let cutout = [0usize, 4][r.below(2)];
+            let drop_last = r.coin(0.5);
+            let seed = r.next_u64();
+            let partial = if r.coin(0.5) { Some(1 + r.below(3)) } else { None };
+            (n, batch, workers, depth, order, flip, translate, cutout, drop_last, seed, partial)
+        },
+        |&(n, batch, workers, depth, order, flip, translate, cutout, drop_last, seed, partial)| {
+            let ds = dataset(n, seed ^ 0xD5);
+            let aug = AugConfig {
+                flip,
+                translate,
+                cutout,
+                ..AugConfig::default()
+            };
+            assert_equivalent(
+                &ds, batch, &aug, order, drop_last, seed, workers, depth, 1, partial,
+            );
+            true
+        },
+    );
+}
+
+/// Crop policies draw a different RNG pattern per image; the counter-based
+/// streams must keep those bit-exact too (the §5.2 ImageNet-style path).
+#[test]
+fn equivalence_with_resized_crop_policies() {
+    let ds = airbench::data::synthetic::imagenet_like(24, 1, 0);
+    for crop in [CropPolicy::HeavyRrc, CropPolicy::LightRrc] {
+        let aug = AugConfig {
+            crop: Some(crop),
+            translate: 0,
+            ..AugConfig::default()
+        };
+        let mut loader =
+            Loader::new(&ds, 8, aug.clone(), OrderPolicy::Reshuffle, true, 7).with_output_hw(32);
+        let mut pipe = Pipeline::new(&ds, 8, aug, OrderPolicy::Reshuffle, true, 7, 3, 2)
+            .with_output_hw(32);
+        let sync = drain(&mut loader, 2, None);
+        let par = drain(&mut pipe, 2, None);
+        assert_eq!(sync, par, "crop {crop:?} diverged");
+    }
+}
+
+/// Repeated runs of the pipeline are identical to themselves (no
+/// scheduling-order leakage into the output) and differ across seeds.
+#[test]
+fn pipeline_is_deterministic_per_seed_across_worker_counts() {
+    let ds = dataset(40, 5);
+    let run = |seed: u64, workers: usize| {
+        let mut p = Pipeline::new(
+            &ds,
+            8,
+            AugConfig::default(),
+            OrderPolicy::Reshuffle,
+            true,
+            seed,
+            workers,
+            2,
+        );
+        drain(&mut p, 2, None)
+    };
+    let a = run(7, 2);
+    assert_eq!(a, run(7, 2), "same seed+workers must reproduce");
+    assert_eq!(a, run(7, 5), "worker count must not affect output");
+    assert_ne!(a.images, run(8, 2).images, "different seed must differ");
+}
+
+// ---------------------------------------------------------------------------
+// Alternating-flip invariants (§3.6)
+// ---------------------------------------------------------------------------
+
+/// Collect each example's image bytes per epoch from the parallel pipeline,
+/// keyed by dataset index.
+fn views_by_index(
+    ds: &Dataset,
+    aug: &AugConfig,
+    order: OrderPolicy,
+    seed: u64,
+    epochs: usize,
+    partial: Option<usize>,
+) -> Vec<std::collections::BTreeMap<u32, Vec<f32>>> {
+    let mut pipe = Pipeline::new(ds, 8, aug.clone(), order, true, seed, 3, 2);
+    let (_, c, h, w) = ds.images.dims4();
+    let sz = c * h * w;
+    let mut per_epoch = Vec::new();
+    let total = epochs + usize::from(partial.is_some());
+    for e in 0..total {
+        let mut map = std::collections::BTreeMap::new();
+        let stop_after = match partial {
+            Some(k) if e == epochs => k,
+            _ => usize::MAX,
+        };
+        let mut taken = 0;
+        pipe.run_epoch(|b| {
+            for (row, &idx) in b.indices.iter().enumerate() {
+                map.insert(idx, b.images.data()[row * sz..(row + 1) * sz].to_vec());
+            }
+            taken += 1;
+            taken < stop_after
+        });
+        per_epoch.push(map);
+    }
+    per_epoch
+}
+
+/// Every pair of consecutive epochs shows all 2N unique views: each example
+/// seen in both epochs is exactly mirrored between them.
+#[test]
+fn alternating_flip_complements_across_consecutive_epochs() {
+    proptest::check(
+        "altflip_2n_views",
+        8,
+        |r: &mut Rng| (24 + r.below(24), r.next_u64(), ORDERS[r.below(2)]),
+        |&(n, seed, order)| {
+            let ds = dataset(n, seed ^ 0xAF);
+            let aug = AugConfig {
+                flip: FlipMode::Alternating,
+                translate: 0, // isolate the flip: geometry must be identity
+                ..AugConfig::default()
+            };
+            let epochs = views_by_index(&ds, &aug, order, seed, 3, None);
+            let (_, c, h, w) = ds.images.dims4();
+            for e in 1..epochs.len() {
+                for (idx, img) in &epochs[e] {
+                    let Some(prev) = epochs[e - 1].get(idx) else {
+                        continue; // WithReplacement may skip an index
+                    };
+                    let mut mirror = vec![0.0; img.len()];
+                    flip_into(&mut mirror, prev, c, h, w);
+                    assert_eq!(
+                        &mirror, img,
+                        "index {idx} epoch {e} is not the mirror of epoch {}",
+                        e - 1
+                    );
+                    assert_ne!(prev, img, "index {idx} unchanged across epochs");
+                }
+            }
+            true
+        },
+    );
+}
+
+/// The complement invariant holds across a fractional final epoch: the
+/// examples the truncated epoch does reach are still the exact complement
+/// of the previous full epoch.
+#[test]
+fn alternating_flip_complement_survives_fractional_epoch() {
+    let ds = dataset(48, 9);
+    let aug = AugConfig {
+        flip: FlipMode::Alternating,
+        translate: 0,
+        ..AugConfig::default()
+    };
+    // 2 full epochs then 3 of 6 batches of epoch 2.
+    let epochs = views_by_index(&ds, &aug, OrderPolicy::Reshuffle, 11, 2, Some(3));
+    assert_eq!(epochs.len(), 3);
+    assert_eq!(epochs[2].len(), 3 * 8, "fractional epoch saw 3 batches");
+    let (_, c, h, w) = ds.images.dims4();
+    for (idx, img) in &epochs[2] {
+        let prev = &epochs[1][idx];
+        let mut mirror = vec![0.0; img.len()];
+        flip_into(&mut mirror, prev, c, h, w);
+        assert_eq!(&mirror, img, "index {idx} fractional-epoch complement broken");
+    }
+}
+
+/// Counting form of the paper's Fig 1 claim, through the real pipeline:
+/// across epochs e and e+1 under Reshuffle, every one of the 2N possible
+/// views (N identities x {flipped, unflipped}) appears exactly once.
+#[test]
+fn alternating_flip_pair_of_epochs_covers_all_2n_views() {
+    let n = 40;
+    let ds = dataset(n, 21);
+    let aug = AugConfig {
+        flip: FlipMode::Alternating,
+        translate: 0,
+        ..AugConfig::default()
+    };
+    let epochs = views_by_index(&ds, &aug, OrderPolicy::Reshuffle, 33, 2, None);
+    let mut unique: std::collections::BTreeSet<(u32, Vec<u32>)> = Default::default();
+    for map in &epochs {
+        for (idx, img) in map {
+            // Bit-pattern key: f32 bytes as u32 so NaN-free exact hashing.
+            unique.insert((*idx, img.iter().map(|f| f.to_bits()).collect()));
+        }
+    }
+    assert_eq!(unique.len(), 2 * n, "pair of epochs must cover all 2N views");
+}
+
+// ---------------------------------------------------------------------------
+// Golden vectors: FlipMode::AlternatingPaper vs Python hashlib
+// ---------------------------------------------------------------------------
+
+/// Parities of `int(md5(str(i * seed)).hexdigest()[-8:], 16)` for
+/// i in 0..32, computed with CPython 3.10 hashlib.
+const GOLDEN_PARITY_SEED42: [u8; 32] = [
+    0, 0, 1, 0, 1, 1, 0, 1, 1, 1, 0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 0, 0, 0, 0, 1, 1, 0, 1, 0, 1,
+    0, 1,
+];
+const GOLDEN_PARITY_SEED1337: [u8; 32] = [
+    0, 1, 0, 0, 0, 0, 0, 1, 0, 1, 0, 0, 0, 0, 0, 1, 1, 1, 0, 1, 0, 0, 0, 0, 0, 0, 0, 0, 1, 0,
+    0, 1,
+];
+const GOLDEN_PARITY_SEED3407: [u8; 32] = [
+    0, 1, 1, 1, 1, 1, 1, 1, 0, 1, 1, 0, 1, 1, 0, 0, 1, 0, 0, 1, 1, 0, 0, 1, 0, 1, 1, 0, 1, 0,
+    0, 0,
+];
+
+/// Full 32-bit hash values for spot indices (same Python source).
+const GOLDEN_VALUES_SEED1337: [(u64, u32); 6] = [
+    (0, 4186399962),
+    (1, 578954363),
+    (2, 4289670176),
+    (5, 4214742076),
+    (31, 2498630497),
+    (999, 1884138100),
+];
+const GOLDEN_VALUES_SEED3407: [(u64, u32); 6] = [
+    (0, 4186399962),
+    (1, 2372132673),
+    (2, 3683765213),
+    (5, 3865368373),
+    (31, 600888850),
+    (999, 857391893),
+];
+
+#[test]
+fn paper_hash_matches_python_hashlib_golden_values() {
+    for (n, want) in GOLDEN_VALUES_SEED1337 {
+        assert_eq!(airbench::util::md5::paper_hash_fn(n, 1337), want, "n={n} seed=1337");
+    }
+    for (n, want) in GOLDEN_VALUES_SEED3407 {
+        assert_eq!(airbench::util::md5::paper_hash_fn(n, 3407), want, "n={n} seed=3407");
+    }
+}
+
+#[test]
+fn alternating_paper_parities_match_golden_vectors() {
+    for (seed, golden) in [
+        (42u64, &GOLDEN_PARITY_SEED42),
+        (1337, &GOLDEN_PARITY_SEED1337),
+        (3407, &GOLDEN_PARITY_SEED3407),
+    ] {
+        let mut rng = Rng::new(0);
+        for (i, &parity) in golden.iter().enumerate() {
+            assert_eq!(
+                airbench::util::md5::paper_hash_fn(i as u64, seed) % 2,
+                parity as u32,
+                "parity mismatch at index {i} seed {seed}"
+            );
+            // Listing 2: flip_mask = (hash_fn(i) + epoch) % 2 == 0. Epoch 0
+            // flips exactly the even-parity indices; epoch 1 the complement.
+            let e0 = flip_decision(FlipMode::AlternatingPaper, i as u64, 0, seed, &mut rng);
+            let e1 = flip_decision(FlipMode::AlternatingPaper, i as u64, 1, seed, &mut rng);
+            assert_eq!(e0, parity == 0, "epoch-0 decision at index {i} seed {seed}");
+            assert_ne!(e0, e1, "decisions must alternate at index {i}");
+        }
+    }
+}
