@@ -30,7 +30,7 @@ fn main() -> anyhow::Result<()> {
         let mut cfg = base.clone();
         cfg.variant = variant.to_string();
         cfg.epochs = epochs;
-        let engine = lab.engine(variant)?;
+        let engine = lab.backend(variant)?;
         warmup(engine, &train_ds, &cfg)?;
         let fleet = run_fleet(engine, &train_ds, &test_ds, &cfg, runs, None)?;
         let s = fleet.summary();

@@ -67,7 +67,7 @@ fn main() -> anyhow::Result<()> {
     let full = lab.base_config(); // all features on
 
     let fleet_mean = |lab: &mut Lab, cfg: &TrainConfig| -> anyhow::Result<f64> {
-        let engine = lab.engine(&cfg.variant)?;
+        let engine = lab.backend(&cfg.variant)?;
         warmup(engine, &train_ds, cfg)?;
         Ok(run_fleet(engine, &train_ds, &test_ds, cfg, runs, None)?
             .summary()

@@ -19,7 +19,7 @@ fn main() -> anyhow::Result<()> {
     let (train_ds, test_ds) = lab.data(DataKind::Cifar10);
     let mut base = lab.base_config();
     base.tta = TtaLevel::None;
-    let engine = lab.engine(&base.variant)?;
+    let engine = lab.backend(&base.variant)?;
     warmup(engine, &train_ds, &base)?;
 
     println!("== Fig 5: altflip boost with CIs (n={runs}/point) ==");

@@ -5,10 +5,12 @@
 //! counts. The two are bit-identical (tests/pipeline_equivalence.rs), so
 //! this is a pure throughput comparison of the same work.
 //!
-//! Part B (needs compiled artifacts + a PJRT runtime; skipped gracefully
-//! otherwise): compiled train-step execution and marshal overhead, eval
-//! throughput per TTA level, whitening init, and the §3.7 compile-cost
-//! amortization table.
+//! Part B (always runs, via the backend seam): train-step execution and
+//! marshal overhead, eval throughput per TTA level (with the eval marshal
+//! share), whitening init, and the §3.7 compile-cost amortization table.
+//! Runs on the PJRT backend when artifacts + runtime exist, else on the
+//! pure-Rust native backend; when PJRT is skipped the reason is printed,
+//! distinguishing "artifacts not built" from "runtime unavailable".
 //!
 //! Feeds the before/after table in EXPERIMENTS.md §Perf.
 
@@ -18,7 +20,7 @@ use airbench::data::loader::{Loader, OrderPolicy};
 use airbench::data::pipeline::Pipeline;
 use airbench::data::synthetic::{cifar_like, SynthConfig};
 use airbench::experiments::{DataKind, Lab};
-use airbench::runtime::{Engine, InitConfig, ModelState};
+use airbench::runtime::{Backend, InitConfig, ModelState, PjrtStatus};
 use airbench::tensor::Tensor;
 use airbench::util::benchmark::Bench;
 use airbench::whitening::whitening_weights;
@@ -77,15 +79,28 @@ fn bench_data_pipeline() {
     }
 }
 
-fn bench_engine(lab: &mut Lab) -> anyhow::Result<()> {
+fn bench_backend(lab: &mut Lab) -> anyhow::Result<()> {
+    // Explain which backend Part B runs on (and why, when PJRT is out).
+    // Probe for the reason only on the skip path — on machines with a real
+    // runtime the probe would build and discard a whole PJRT client.
+    match lab.backend_kind() {
+        airbench::runtime::BackendKind::Pjrt => {
+            println!("\nbackend benches: pjrt (artifacts + runtime present)")
+        }
+        _ => println!(
+            "\nbackend benches: native — pjrt skipped: {}",
+            PjrtStatus::probe(lab.artifacts_dir())
+                .skip_reason()
+                .unwrap_or_else(|| "forced by AIRBENCH_BACKEND".into())
+        ),
+    }
     let (train_ds, test_ds) = lab.data(DataKind::Cifar10);
-    let cfg = TrainConfig::default();
-
-    // One-time compile cost (the §3.7 trade-off).
-    let t0 = std::time::Instant::now();
-    let mut engine = Engine::load(&lab.client, &lab.manifest, "bench")?;
-    let compile_secs = t0.elapsed().as_secs_f64();
-    println!("compile bench train+eval: {compile_secs:.2}s (one-time, amortized over runs)");
+    let engine = lab.backend("bench")?;
+    let compile_secs = engine.stats().compile_secs;
+    println!(
+        "compile bench train+eval: {compile_secs:.2}s (one-time, amortized over runs; \
+         0.00s = native, nothing to compile)"
+    );
 
     let batch = engine.batch_train();
     let mut state = ModelState::init(engine.variant(), &InitConfig::default());
@@ -95,14 +110,16 @@ fn bench_engine(lab: &mut Lab) -> anyhow::Result<()> {
         5e-4,
     )?)?;
 
-    // Compiled train step.
+    // Train step.
+    let n_img = batch.min(train_ds.len());
     let mut batch_img = Tensor::zeros(&[batch, 3, 32, 32]);
-    batch_img
-        .data_mut()
-        .copy_from_slice(&train_ds.images.data()[..batch * 3 * 32 * 32]);
-    let labels: Vec<i32> = train_ds.labels[..batch].iter().map(|&l| l as i32).collect();
-    let step_bench = Bench::new(2, 10);
-    let s = step_bench.run("train_step (batch 64)", || {
+    batch_img.data_mut()[..n_img * 3 * 32 * 32]
+        .copy_from_slice(&train_ds.images.data()[..n_img * 3 * 32 * 32]);
+    let labels: Vec<i32> = (0..batch)
+        .map(|i| train_ds.labels[i % train_ds.len()] as i32)
+        .collect();
+    let step_bench = Bench::new(1, 5);
+    let s = step_bench.run(&format!("train_step (batch {batch})"), || {
         engine
             .train_step(&mut state, &batch_img, &labels, 1e-3, 0.1, true)
             .unwrap()
@@ -115,20 +132,24 @@ fn bench_engine(lab: &mut Lab) -> anyhow::Result<()> {
         flops / 1e9
     );
     println!(
-        "  -> marshal share so far: {:.1}% of engine time",
-        100.0 * engine.stats.train_marshal_secs
-            / (engine.stats.train_marshal_secs + engine.stats.train_exec_secs)
+        "  -> train marshal share so far: {:.1}% of backend time",
+        100.0 * engine.stats().train_marshal_share()
     );
 
     // Eval throughput per TTA level.
     for tta in [TtaLevel::None, TtaLevel::Mirror, TtaLevel::MirrorTranslate] {
-        let eb = Bench::new(1, 5);
+        let eb = Bench::new(1, 3);
         let s = eb.run(
             &format!("evaluate (n={}, tta={})", test_ds.len(), tta.name()),
-            || evaluate(&mut engine, &state, &test_ds, tta).unwrap().accuracy,
+            || evaluate(engine, &state, &test_ds, tta).unwrap().accuracy,
         );
         println!("  -> {:.0} img/s", test_ds.len() as f64 / s.mean_secs());
     }
+    println!(
+        "  -> eval marshal share so far: {:.1}% of backend eval time ({} eval calls)",
+        100.0 * engine.stats().eval_marshal_share(),
+        engine.stats().eval_calls
+    );
 
     // Whitening init (host-side Jacobi eigensolve).
     let wb = Bench::new(2, 10);
@@ -151,12 +172,6 @@ fn bench_engine(lab: &mut Lab) -> anyhow::Result<()> {
 
 fn main() -> anyhow::Result<()> {
     bench_data_pipeline();
-
-    match Lab::new() {
-        Ok(mut lab) => bench_engine(&mut lab)?,
-        Err(e) => {
-            println!("\nengine benches skipped (no artifacts / PJRT runtime): {e:#}");
-        }
-    }
-    Ok(())
+    let mut lab = Lab::new()?;
+    bench_backend(&mut lab)
 }

@@ -60,7 +60,7 @@ fn main() -> anyhow::Result<()> {
     let mut accs = Vec::new();
     for (name, apply) in ladder {
         apply(&mut cfg);
-        let engine = lab.engine(&cfg.variant)?;
+        let engine = lab.backend(&cfg.variant)?;
         warmup(engine, &train_ds, &cfg)?;
         let fleet = run_fleet(engine, &train_ds, &test_ds, &cfg, runs, None)?;
         let s = fleet.summary();

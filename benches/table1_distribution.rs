@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     let (train_ds, test_ds) = lab.data(DataKind::Cifar10);
     let mut base = lab.base_config();
     base.tta = TtaLevel::None;
-    let engine = lab.engine(&base.variant)?;
+    let engine = lab.backend(&base.variant)?;
     warmup(engine, &train_ds, &base)?;
 
     println!("== Table 1: training distribution options (n={runs}/cell) ==");

@@ -18,7 +18,7 @@ fn main() -> anyhow::Result<()> {
     let epochs = [2.0, 4.0, 8.0]; // paper: {10, 20, 40, 80}, scaled
     let (train_ds, test_ds) = lab.data(DataKind::Cifar10);
     let base = lab.base_config();
-    let engine = lab.engine(&base.variant)?;
+    let engine = lab.backend(&base.variant)?;
     warmup(engine, &train_ds, &base)?;
 
     println!("== Table 2: altflip effective speedups (n={runs}/cell) ==");

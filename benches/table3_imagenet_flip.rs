@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
     let mut base = lab.base_config();
     base.translate = 0; // RRC replaces translate, like the paper's pipeline
     base.tta = TtaLevel::Mirror; // the paper's TTA rows use flip TTA
-    let engine = lab.engine(&base.variant)?;
+    let engine = lab.backend(&base.variant)?;
     warmup(engine, &train_ds, &base)?;
 
     println!("== Table 3: flip × crop policy (n={runs}/cell) ==");

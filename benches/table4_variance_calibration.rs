@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
             cfg.epochs = epochs;
             cfg.variant = variant.to_string();
             cfg.tta = tta;
-            let engine = lab.engine(variant)?;
+            let engine = lab.backend(variant)?;
             warmup(engine, &train_ds, &cfg)?;
             let fleet = run_fleet(engine, &train_ds, &test_ds, &cfg, runs, None)?;
             let v = decompose_variance(&fleet.accuracies, test_ds.len());

@@ -61,12 +61,12 @@ fn main() -> anyhow::Result<()> {
             std_cfg.flip = FlipMode::None;
         }
         let s_std = {
-            let engine = lab.engine(&std_cfg.variant)?;
+            let engine = lab.backend(&std_cfg.variant)?;
             warmup(engine, &train_ds, &std_cfg)?;
             run_fleet(engine, &train_ds, &test_ds, &std_cfg, runs, None)?.summary()
         };
         let s_air = {
-            let engine = lab.engine(&air.variant)?;
+            let engine = lab.backend(&air.variant)?;
             warmup(engine, &train_ds, &air)?;
             run_fleet(engine, &train_ds, &test_ds, &air, runs, None)?.summary()
         };

@@ -15,7 +15,7 @@ fn main() -> anyhow::Result<()> {
     let epochs = [2.0, 4.0];
     let (train_ds, test_ds) = lab.data(DataKind::Cifar10);
     let base = lab.base_config();
-    let engine = lab.engine(&base.variant)?;
+    let engine = lab.backend(&base.variant)?;
     warmup(engine, &train_ds, &base)?;
 
     println!("== Table 6: raw flip-grid accuracies (n={runs}/cell) ==");

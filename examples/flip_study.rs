@@ -31,7 +31,7 @@ fn main() -> Result<()> {
     let (train_ds, test_ds) = lab.data(DataKind::Cifar10);
     let mut cfg = lab.base_config();
     cfg.tta = TtaLevel::None; // isolate the flip effect (paper: TTA shrinks it)
-    let engine = lab.engine(&cfg.variant)?;
+    let engine = lab.backend(&cfg.variant)?;
     airbench::coordinator::warmup(engine, &train_ds, &cfg)?;
 
     println!("epochs | flip        | mean acc (95% CI)  | err");

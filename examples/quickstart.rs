@@ -1,13 +1,14 @@
 //! Quickstart: the smallest complete airbench run.
 //!
-//! Loads the AOT artifacts, builds a CIFAR-like dataset (real CIFAR-10 if
-//! binaries are present under `data/`), trains the `bench` variant with
-//! every paper feature on (whitening + dirac init, alternating flip,
-//! 2-pixel translate, Lookahead, 6-view TTA), and prints the final
-//! accuracy and the paper-protocol wall time.
+//! Picks a backend (compiled PJRT when AOT artifacts + runtime exist, the
+//! pure-Rust native backend otherwise), builds a CIFAR-like dataset (real
+//! CIFAR-10 if binaries are present under `data/`), trains the `bench`
+//! variant with every paper feature on (whitening + dirac init,
+//! alternating flip, 2-pixel translate, Lookahead, 6-view TTA), and prints
+//! the final accuracy and the paper-protocol wall time.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
 use anyhow::Result;
@@ -15,20 +16,24 @@ use anyhow::Result;
 use airbench::config::TrainConfig;
 use airbench::coordinator::{train, warmup};
 use airbench::experiments::{pct, DataKind, Lab};
+use airbench::runtime::Backend;
 
 fn main() -> Result<()> {
     let mut lab = Lab::new()?;
     let (train_ds, test_ds) = lab.data(DataKind::Cifar10);
-    let mut cfg = TrainConfig::default();
-    cfg.epochs = lab.scale.epochs;
-    cfg.eval_every_epoch = true;
+    let cfg = TrainConfig {
+        epochs: lab.scale.epochs,
+        eval_every_epoch: true,
+        ..TrainConfig::default()
+    };
 
-    let engine = lab.engine(&cfg.variant)?;
+    let engine = lab.backend(&cfg.variant)?;
     println!(
-        "variant={} ({} params), compile {:.2}s, train n={}, test n={}",
+        "backend={} variant={} ({} params), compile {:.2}s, train n={}, test n={}",
+        engine.name(),
         cfg.variant,
         engine.variant().param_count,
-        engine.stats.compile_secs,
+        engine.stats().compile_secs,
         train_ds.len(),
         test_ds.len()
     );
@@ -55,13 +60,14 @@ fn main() -> Result<()> {
         result.steps_run,
         result.flops as f64 / 1e9
     );
+    let stats = engine.stats();
     println!(
-        "engine: exec {:.2}s, marshal {:.2}s over {} steps ({:.1} ms/step)",
-        engine.stats.train_exec_secs,
-        engine.stats.train_marshal_secs,
-        engine.stats.train_steps,
-        1e3 * (engine.stats.train_exec_secs + engine.stats.train_marshal_secs)
-            / engine.stats.train_steps.max(1) as f64
+        "backend: exec {:.2}s, marshal {:.2}s over {} steps ({:.1} ms/step)",
+        stats.train_exec_secs,
+        stats.train_marshal_secs,
+        stats.train_steps,
+        1e3 * (stats.train_exec_secs + stats.train_marshal_secs)
+            / stats.train_steps.max(1) as f64
     );
     Ok(())
 }

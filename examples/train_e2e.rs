@@ -18,6 +18,7 @@ use airbench::config::TrainConfig;
 use airbench::coordinator::{train, warmup, TrainResult};
 use airbench::data::augment::FlipMode;
 use airbench::experiments::{pct, DataKind, Lab};
+use airbench::runtime::Backend;
 use airbench::util::json::Json;
 
 fn epoch_table(result: &TrainResult) {
@@ -42,12 +43,14 @@ fn main() -> Result<()> {
     let epochs = args.opt_f64("epochs", 12.0)?;
 
     let (train_ds, test_ds) = lab.data(DataKind::Cifar10);
-    let mut cfg = TrainConfig::default();
-    cfg.epochs = epochs;
-    cfg.eval_every_epoch = true;
-    cfg.target_acc = args.opt_f64("target", 0.70)?;
+    let cfg = TrainConfig {
+        epochs,
+        eval_every_epoch: true,
+        target_acc: args.opt_f64("target", 0.70)?,
+        ..TrainConfig::default()
+    };
 
-    let engine = lab.engine(&cfg.variant)?;
+    let engine = lab.backend(&cfg.variant)?;
     println!(
         "== train_e2e: variant={} params={} batch={} steps/epoch={} ==",
         cfg.variant,

@@ -25,7 +25,7 @@ fn main() -> Result<()> {
 
     let (train_ds, test_ds) = lab.data(DataKind::Cifar10);
     let base = lab.base_config();
-    let engine = lab.engine(&base.variant)?;
+    let engine = lab.backend(&base.variant)?;
     airbench::coordinator::warmup(engine, &train_ds, &base)?;
 
     println!("tta       | mean acc | test-set std | dist-wise std | CACE");

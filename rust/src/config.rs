@@ -12,6 +12,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::data::augment::{AugConfig, CropPolicy, FlipMode};
 use crate::data::loader::OrderPolicy;
+use crate::runtime::backend::BackendKind;
 use crate::util::json::{parse, Json};
 
 /// Test-time augmentation level (Listing 4 `tta_level`).
@@ -87,6 +88,9 @@ pub struct TrainConfig {
     pub cutout: usize,
     /// Optional ImageNet-style crop policy (replaces translate; §5.2).
     pub crop: Option<CropPolicy>,
+    /// Execution backend: `auto` (PJRT when artifacts + runtime exist,
+    /// else native), `pjrt`, or `native` (DESIGN.md §2).
+    pub backend: BackendKind,
     /// Data-pipeline worker threads (0 = synchronous loader on the train
     /// thread; N > 0 = parallel prefetching pipeline with N workers —
     /// bit-identical output either way, see DESIGN.md §5).
@@ -126,6 +130,7 @@ impl Default for TrainConfig {
             translate: 2,
             cutout: 0,
             crop: None,
+            backend: BackendKind::Auto,
             workers: 0,
             prefetch_depth: 2,
             seed: 0,
@@ -202,6 +207,7 @@ impl TrainConfig {
                     _ => return Err(bad()),
                 }
             }
+            "backend" => self.backend = BackendKind::parse(value).ok_or_else(bad)?,
             "workers" => self.workers = value.parse().map_err(|_| bad())?,
             "prefetch_depth" => self.prefetch_depth = value.parse().map_err(|_| bad())?,
             "seed" => self.seed = value.parse().map_err(|_| bad())?,
@@ -256,6 +262,7 @@ impl TrainConfig {
             ("flip", Json::str(self.flip.name())),
             ("translate", Json::num(self.translate as f64)),
             ("cutout", Json::num(self.cutout as f64)),
+            ("backend", Json::str(self.backend.name())),
             ("workers", Json::num(self.workers as f64)),
             ("prefetch_depth", Json::num(self.prefetch_depth as f64)),
             ("seed", Json::num(self.seed as f64)),
@@ -307,6 +314,9 @@ mod tests {
         c.set("crop", "heavy").unwrap();
         c.set("workers", "4").unwrap();
         c.set("prefetch_depth", "3").unwrap();
+        c.set("backend", "native").unwrap();
+        assert_eq!(c.backend, BackendKind::Native);
+        assert!(c.set("backend", "tpu").is_err());
         assert_eq!(c.epochs, 12.5);
         assert_eq!(c.flip, FlipMode::Random);
         assert_eq!(c.tta, TtaLevel::None);
@@ -337,11 +347,13 @@ mod tests {
         let mut c = TrainConfig::default();
         c.set("epochs", "3").unwrap();
         c.set("flip", "random").unwrap();
+        c.set("backend", "native").unwrap();
         let j = c.to_json();
         let c2 = TrainConfig::from_json(&j).unwrap();
         assert_eq!(c2.epochs, 3.0);
         assert_eq!(c2.flip, FlipMode::Random);
         assert_eq!(c2.tta, c.tta);
+        assert_eq!(c2.backend, BackendKind::Native);
     }
 
     #[test]

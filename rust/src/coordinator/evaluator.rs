@@ -16,7 +16,7 @@ use crate::data::augment::{tta_view_into, AugConfig, TTA_VIEWS};
 use crate::data::loader::{Loader, OrderPolicy};
 use crate::data::pipeline::BatchSource;
 use crate::data::Dataset;
-use crate::runtime::{Engine, ModelState};
+use crate::runtime::{Backend, ModelState};
 use crate::tensor::Tensor;
 
 /// Per-example predictions of one evaluation pass.
@@ -73,7 +73,7 @@ fn softmax_rows(logits: &mut Tensor) {
 /// model input resolution when they differ, exactly like the old inline
 /// packing loop.
 pub fn evaluate(
-    engine: &mut Engine,
+    engine: &mut dyn Backend,
     state: &ModelState,
     dataset: &Dataset,
     tta: TtaLevel,
@@ -95,7 +95,7 @@ pub fn evaluate(
 /// yield each example exactly once in index order with identity
 /// augmentation; `labels[i]` is the label of dataset index `i`.
 pub fn evaluate_source(
-    engine: &mut Engine,
+    engine: &mut dyn Backend,
     state: &ModelState,
     source: &mut dyn BatchSource,
     labels: &[u16],

@@ -13,7 +13,7 @@ use crate::config::TrainConfig;
 use crate::coordinator::trainer::{train, TrainResult};
 use crate::data::Dataset;
 use crate::rng::Rng;
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 use crate::stats::basic::Summary;
 use crate::util::json::Json;
 
@@ -86,7 +86,7 @@ impl FleetResult {
 /// `progress` (optional) is invoked after each run with (run_index,
 /// accuracy) — benches use it for live table output.
 pub fn run_fleet(
-    engine: &mut Engine,
+    engine: &mut dyn Backend,
     train_data: &Dataset,
     test_data: &Dataset,
     cfg: &TrainConfig,

@@ -18,7 +18,7 @@ use crate::coordinator::schedule::{AlphaSchedule, DecoupledHyper, Triangle};
 use crate::data::loader::Loader;
 use crate::data::pipeline::{BatchSource, Pipeline};
 use crate::data::Dataset;
-use crate::runtime::{Engine, InitConfig, ModelState};
+use crate::runtime::{Backend, InitConfig, ModelState};
 use crate::whitening::whitening_weights;
 
 /// Per-epoch log line (mirrors the paper's printed columns).
@@ -55,9 +55,10 @@ pub struct TrainResult {
     pub flops: u64,
 }
 
-/// Run one training (the paper's `main(run)`), reusing a compiled engine.
+/// Run one training (the paper's `main(run)`), reusing a loaded backend —
+/// compiled PJRT modules or the native kernels, the trainer cannot tell.
 pub fn train(
-    engine: &mut Engine,
+    engine: &mut dyn Backend,
     train_data: &Dataset,
     test_data: &Dataset,
     cfg: &TrainConfig,
@@ -68,7 +69,7 @@ pub fn train(
 /// Like [`train`] but also returns the final [`ModelState`] (for
 /// checkpointing — `airbench train --save ckpt.bin`).
 pub fn train_full(
-    engine: &mut Engine,
+    engine: &mut dyn Backend,
     train_data: &Dataset,
     test_data: &Dataset,
     cfg: &TrainConfig,
@@ -229,7 +230,7 @@ pub fn train_full(
 /// one-time lazy costs (PJRT thread pools, allocator pools) are paid before
 /// timed runs. The paper trains a full run on random labels; two steps are
 /// enough to warm a CPU client.
-pub fn warmup(engine: &mut Engine, train_data: &Dataset, cfg: &TrainConfig) -> Result<()> {
+pub fn warmup(engine: &mut dyn Backend, train_data: &Dataset, cfg: &TrainConfig) -> Result<()> {
     let mut cfg = cfg.clone();
     cfg.eval_every_epoch = false;
     cfg.tta = crate::config::TtaLevel::None; // warmup needs one eval exec only

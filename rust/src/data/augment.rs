@@ -164,6 +164,7 @@ pub fn cutout_inplace(img: &mut [f32], c: usize, h: usize, w: usize, size: usize
 /// Bilinear resample of an axis-aligned crop `[y0, y0+ch) x [x0, x0+cw)`
 /// of `src` (C x H x W) into a C x out x out `dst` — the core of
 /// RandomResizedCrop and the resize step of center-crop evaluation.
+#[allow(clippy::too_many_arguments)]
 pub fn resample_crop_into(
     dst: &mut [f32],
     src: &[f32],
@@ -218,6 +219,7 @@ pub enum CropPolicy {
 
 impl CropPolicy {
     /// Apply to one image, producing an `out x out` crop.
+    #[allow(clippy::too_many_arguments)]
     pub fn apply_into(
         &self,
         dst: &mut [f32],
@@ -325,6 +327,7 @@ impl AugConfig {
 /// result is a pure function of its arguments. That is what lets the
 /// parallel pipeline (`data::pipeline`) shard batches across workers while
 /// staying bit-identical to the synchronous loader.
+#[allow(clippy::too_many_arguments)]
 pub fn apply_batch(
     out: &mut Tensor,
     dataset_images: &Tensor,

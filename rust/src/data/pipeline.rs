@@ -70,6 +70,7 @@ pub struct Pipeline<'a> {
 type BatchMsg = (Tensor, Vec<i32>, Vec<u32>);
 
 impl<'a> Pipeline<'a> {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         dataset: &'a Dataset,
         batch_size: usize,

@@ -1,17 +1,23 @@
 //! Shared experiment harness used by every bench target and example.
 //!
-//! [`Lab`] owns the PJRT client, the manifest, compiled engines (cached per
-//! variant — compile once, train many, §3.7), and the datasets (real
-//! CIFAR-10 binaries when present, synthetic class-structured data
-//! otherwise — DESIGN.md §3). [`Scale`] centralizes the testbed scaling
-//! knobs (runs per cell, dataset sizes, epoch budgets) so every bench is
-//! consistent and CI-friendly; override via environment:
+//! [`Lab`] owns backends (cached per variant — compile once, train many,
+//! §3.7) and the datasets (real CIFAR-10 binaries when present, synthetic
+//! class-structured data otherwise — DESIGN.md §3). The execution backend
+//! is selected per DESIGN.md §2: `auto` resolves to PJRT when the AOT
+//! artifacts and a real PJRT runtime exist, else to the pure-Rust native
+//! backend — so every bench and example runs on every machine. Force a
+//! backend with `AIRBENCH_BACKEND=native|pjrt` (or [`Lab::with_backend`]).
+//!
+//! [`Scale`] centralizes the testbed scaling knobs (runs per cell, dataset
+//! sizes, epoch budgets) so every bench is consistent and CI-friendly;
+//! override via environment:
 //!
 //! ```text
 //! AIRBENCH_RUNS=20 AIRBENCH_TRAIN_N=4096 cargo bench --bench table1_distribution
 //! ```
 
 use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 use xla::PjRtClient;
@@ -19,7 +25,7 @@ use xla::PjRtClient;
 use crate::config::TrainConfig;
 use crate::coordinator::fleet::{run_fleet, FleetResult};
 use crate::data::{cifar_bin, synthetic, Dataset};
-use crate::runtime::{cpu_client, Engine, Manifest};
+use crate::runtime::{cpu_client, Backend, BackendKind, Manifest, NativeBackend, PjrtBackend};
 
 /// Testbed scaling knobs (paper-scale values in comments).
 #[derive(Clone, Copy, Debug)]
@@ -76,33 +82,101 @@ pub enum DataKind {
     CinicLike,
 }
 
-/// The experiment laboratory: client + engines + datasets.
+/// The experiment laboratory: backends + datasets behind one handle.
 pub struct Lab {
-    pub manifest: Manifest,
-    pub client: PjRtClient,
     pub scale: Scale,
-    engines: BTreeMap<String, Engine>,
+    kind: BackendKind,
+    artifacts_dir: PathBuf,
+    /// Lazily created, PJRT path only.
+    manifest: Option<Manifest>,
+    client: Option<PjRtClient>,
+    backends: BTreeMap<String, Box<dyn Backend>>,
     datasets: BTreeMap<String, (Dataset, Dataset)>,
 }
 
 impl Lab {
+    /// Backend kind from `AIRBENCH_BACKEND` (default `auto`). An
+    /// unparseable value is a loud error, not a silent `auto`.
     pub fn new() -> Result<Lab> {
+        let kind = match std::env::var("AIRBENCH_BACKEND") {
+            Ok(v) => BackendKind::parse(&v).ok_or_else(|| {
+                anyhow::anyhow!("AIRBENCH_BACKEND='{v}' is not auto|pjrt|native")
+            })?,
+            Err(_) => BackendKind::Auto,
+        };
+        Lab::with_backend(kind)
+    }
+
+    pub fn with_backend(kind: BackendKind) -> Result<Lab> {
         Ok(Lab {
-            manifest: Manifest::load(&Manifest::default_dir())?,
-            client: cpu_client()?,
             scale: Scale::from_env(),
-            engines: BTreeMap::new(),
+            kind,
+            artifacts_dir: Manifest::default_dir(),
+            manifest: None,
+            client: None,
+            backends: BTreeMap::new(),
             datasets: BTreeMap::new(),
         })
     }
 
-    /// Compiled engine for `variant` (cached).
-    pub fn engine(&mut self, variant: &str) -> Result<&mut Engine> {
-        if !self.engines.contains_key(variant) {
-            let e = Engine::load(&self.client, &self.manifest, variant)?;
-            self.engines.insert(variant.to_string(), e);
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Override the backend kind (takes effect for backends not yet
+    /// created; the CLI calls this after parsing `--backend`).
+    pub fn set_backend(&mut self, kind: BackendKind) {
+        self.kind = kind;
+    }
+
+    /// The kind this lab executes with, resolving `auto` by attempting the
+    /// PJRT path once — the manifest and client built by a successful
+    /// attempt are kept (not a throwaway probe), so backends reuse them.
+    pub fn backend_kind(&mut self) -> BackendKind {
+        if self.kind == BackendKind::Auto {
+            self.kind = match self.init_pjrt() {
+                Ok(()) => BackendKind::Pjrt,
+                Err(_) => BackendKind::Native,
+            };
         }
-        Ok(self.engines.get_mut(variant).unwrap())
+        self.kind
+    }
+
+    /// Load the manifest + create the PJRT client (idempotent).
+    fn init_pjrt(&mut self) -> Result<()> {
+        if self.manifest.is_none() {
+            self.manifest = Some(Manifest::load(&self.artifacts_dir)?);
+        }
+        if self.client.is_none() {
+            self.client = Some(cpu_client()?);
+        }
+        Ok(())
+    }
+
+    /// Loaded backend for `variant` (cached — compile once, train many).
+    pub fn backend(&mut self, variant: &str) -> Result<&mut dyn Backend> {
+        if !self.backends.contains_key(variant) {
+            let b = self.create(variant)?;
+            self.backends.insert(variant.to_string(), b);
+        }
+        Ok(self.backends.get_mut(variant).unwrap().as_mut())
+    }
+
+    fn create(&mut self, variant: &str) -> Result<Box<dyn Backend>> {
+        match self.backend_kind() {
+            BackendKind::Native => Ok(Box::new(NativeBackend::new(
+                variant,
+                &self.artifacts_dir,
+            )?)),
+            _ => {
+                self.init_pjrt()?;
+                Ok(Box::new(PjrtBackend::load(
+                    self.client.as_ref().unwrap(),
+                    self.manifest.as_ref().unwrap(),
+                    variant,
+                )?))
+            }
+        }
     }
 
     /// (train, test) datasets for `kind` at the lab's scale (cached).
@@ -151,7 +225,7 @@ impl Lab {
     /// Run a fleet of `runs` trainings of `cfg` on `kind` data.
     pub fn fleet(&mut self, kind: DataKind, cfg: &TrainConfig, runs: usize) -> Result<FleetResult> {
         let (train, test) = self.data(kind);
-        let engine = self.engine(&cfg.variant)?;
+        let engine = self.backend(&cfg.variant)?;
         run_fleet(engine, &train, &test, cfg, runs, None)
     }
 
@@ -191,5 +265,28 @@ mod tests {
     fn pct_formats() {
         assert_eq!(pct(0.9401), "94.01%");
         assert_eq!(pct_ci(0.94, 0.0014), "94.00±0.14%");
+    }
+
+    #[test]
+    fn lab_always_provides_a_backend() {
+        // `auto` must resolve to SOMETHING on every machine — that is the
+        // point of the backend seam.
+        let mut lab = Lab::new().unwrap();
+        let kind = lab.backend_kind();
+        assert_ne!(kind, BackendKind::Auto, "auto must resolve");
+        let b = lab.backend("bench").unwrap();
+        assert_eq!(b.variant().name, "bench");
+        // cached: second call returns the same loaded backend
+        let steps_before = lab.backend("bench").unwrap().stats().train_steps;
+        assert_eq!(steps_before, 0);
+    }
+
+    #[test]
+    fn forced_native_lab_works_without_artifacts() {
+        let mut lab = Lab::with_backend(BackendKind::Native).unwrap();
+        assert_eq!(lab.backend_kind(), BackendKind::Native);
+        let b = lab.backend("nano").unwrap();
+        assert_eq!(b.name(), "native");
+        assert_eq!(b.batch_train(), 8);
     }
 }

@@ -15,8 +15,11 @@
 //!   forward *and* backward pass runs through
 //!   (`python/compile/kernels/matmul.py`).
 //!
-//! At runtime only this crate runs: [`runtime`] loads `artifacts/*.hlo.txt`
-//! via the PJRT CPU client (`xla` crate) and [`coordinator`] drives it.
+//! At runtime only this crate runs: [`coordinator`] drives the
+//! [`runtime::Backend`] seam — either the compiled PJRT path
+//! (`artifacts/*.hlo.txt` via the `xla` crate) or the pure-Rust
+//! multi-threaded [`runtime::native`] backend, selected by `--backend
+//! auto|pjrt|native` (DESIGN.md §2).
 
 pub mod cli;
 pub mod config;

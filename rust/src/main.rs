@@ -6,12 +6,15 @@
 //!   the paper-protocol wall time.
 //! * `fleet --runs N [key=value ...]` — an n-run statistical experiment:
 //!   mean/std/CI of final accuracy (paper §5 methodology).
-//! * `info [--variant NAME]` — inspect the AOT manifest: variants,
-//!   parameter counts, FLOPs, tensor inventory.
+//! * `info [--variant NAME]` — inspect the AOT manifest when artifacts are
+//!   built, else the native backend's built-in variant table.
 //!
 //! Config overrides are bare `key=value` pairs (see `config::TrainConfig`);
 //! `--config file.json` loads a base config first. `--data` picks the
 //! dataset distribution (cifar10 | cifar100 | imagenet | svhn | cinic).
+//! `--backend auto|pjrt|native` picks the execution backend (DESIGN.md §2):
+//! `auto` (default) uses the compiled PJRT path when artifacts + runtime
+//! exist and falls back to the pure-Rust native backend otherwise.
 
 use anyhow::{bail, Result};
 
@@ -19,6 +22,7 @@ use airbench::cli::Args;
 use airbench::config::TrainConfig;
 use airbench::coordinator::{evaluate, train_full, warmup};
 use airbench::experiments::{pct, DataKind, Lab};
+use airbench::runtime::Backend;
 use airbench::util::logging;
 
 fn parse_data_kind(s: &str) -> Result<DataKind> {
@@ -35,20 +39,23 @@ fn parse_data_kind(s: &str) -> Result<DataKind> {
 fn build_config(args: &Args, lab: &Lab) -> Result<TrainConfig> {
     let mut cfg = match args.options.get("config") {
         Some(path) => TrainConfig::load(std::path::Path::new(path))?,
-        None => {
-            let mut c = TrainConfig::default();
-            c.epochs = lab.scale.epochs;
-            c
-        }
+        None => TrainConfig {
+            epochs: lab.scale.epochs,
+            ..TrainConfig::default()
+        },
     };
     for (k, v) in &args.overrides {
         cfg.set(k, v)?;
     }
-    // Data-pipeline flags (also reachable as `workers=N` /
-    // `prefetch_depth=N` overrides): `--workers N` enables the parallel
-    // prefetching pipeline with N worker threads — bit-identical batches
-    // to the synchronous loader (DESIGN.md §5); `--prefetch-depth N` caps
-    // how many batches each worker runs ahead.
+    // Flag spellings of config keys:
+    // `--backend auto|pjrt|native` picks the execution backend;
+    // `--workers N` enables the parallel prefetching pipeline with N
+    // worker threads — bit-identical batches to the synchronous loader
+    // (DESIGN.md §5); `--prefetch-depth N` caps how many batches each
+    // worker runs ahead.
+    if let Some(b) = args.options.get("backend") {
+        cfg.set("backend", b)?;
+    }
     if let Some(w) = args.options.get("workers") {
         cfg.set("workers", w)?;
     }
@@ -58,18 +65,30 @@ fn build_config(args: &Args, lab: &Lab) -> Result<TrainConfig> {
     Ok(cfg)
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
+fn lab_and_config(args: &Args) -> Result<(Lab, TrainConfig)> {
     let mut lab = Lab::new()?;
-    let mut cfg = build_config(args, &lab)?;
+    let cfg = build_config(args, &lab)?;
+    // Precedence: an explicit `--backend`/`backend=` (anything but the
+    // `auto` default) beats AIRBENCH_BACKEND; plain `auto` defers to the
+    // env-derived kind Lab::new already read.
+    if cfg.backend != airbench::runtime::BackendKind::Auto {
+        lab.set_backend(cfg.backend);
+    }
+    Ok((lab, cfg))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let (mut lab, mut cfg) = lab_and_config(args)?;
     cfg.eval_every_epoch = true;
     let kind = parse_data_kind(&args.opt("data", "cifar10"))?;
     let (train_ds, test_ds) = lab.data(kind);
-    let engine = lab.engine(&cfg.variant)?;
+    let engine = lab.backend(&cfg.variant)?;
     eprintln!(
-        "[airbench] variant={} params={} compile={:.2}s train_n={} test_n={}",
+        "[airbench] backend={} variant={} params={} compile={:.2}s train_n={} test_n={}",
+        engine.name(),
         cfg.variant,
         engine.variant().param_count,
-        engine.stats.compile_secs,
+        engine.stats().compile_secs,
         train_ds.len(),
         test_ds.len()
     );
@@ -123,17 +142,18 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 /// `airbench eval --load ckpt.bin [--data cifar10] [tta=2 ...]` —
-/// evaluate a saved checkpoint (checkpoint/hand-off workflow).
+/// evaluate a saved checkpoint (checkpoint/hand-off workflow). Checkpoints
+/// are backend-portable: a model trained on pjrt evaluates on native and
+/// vice versa (shared `ModelState` layout, DESIGN.md §2).
 fn cmd_eval(args: &Args) -> Result<()> {
-    let mut lab = Lab::new()?;
-    let cfg = build_config(args, &lab)?;
+    let (mut lab, cfg) = lab_and_config(args)?;
     let kind = parse_data_kind(&args.opt("data", "cifar10"))?;
     let Some(path) = args.options.get("load") else {
         bail!("eval requires --load <checkpoint>");
     };
     let state = airbench::runtime::ModelState::load(std::path::Path::new(path))?;
     let (_, test_ds) = lab.data(kind);
-    let engine = lab.engine(&cfg.variant)?;
+    let engine = lab.backend(&cfg.variant)?;
     state.validate(engine.variant())?;
     let out = evaluate(engine, &state, &test_ds, cfg.tta)?;
     println!(
@@ -146,12 +166,12 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_fleet(args: &Args) -> Result<()> {
-    let mut lab = Lab::new()?;
-    let cfg = build_config(args, &lab)?;
+    let (mut lab, cfg) = lab_and_config(args)?;
     let kind = parse_data_kind(&args.opt("data", "cifar10"))?;
     let runs = args.opt_usize("runs", lab.scale.runs)?;
     let (train_ds, test_ds) = lab.data(kind);
-    let engine = lab.engine(&cfg.variant)?;
+    let engine = lab.backend(&cfg.variant)?;
+    eprintln!("[fleet] backend={}", engine.name());
     warmup(engine, &train_ds, &cfg)?;
     let mut progress = |i: usize, acc: f64| {
         eprintln!("[fleet] run {i}: {}", pct(acc));
@@ -182,28 +202,54 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn print_variant_row(name: &str, v: &airbench::runtime::Variant) {
+    println!(
+        "  {name:<20} params={:<9} batch={}x{} fwd={:.1} MFLOP/example",
+        v.param_count,
+        v.batch_train,
+        v.batch_eval,
+        v.fwd_flops_per_example as f64 / 1e6
+    );
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
-    let manifest =
-        airbench::runtime::Manifest::load(&airbench::runtime::Manifest::default_dir())?;
+    let dir = airbench::runtime::Manifest::default_dir();
+    let manifest = airbench::runtime::Manifest::load(&dir).ok();
     match args.options.get("variant") {
         None => {
-            println!("variants in {:?}:", manifest.dir);
-            for (name, v) in &manifest.variants {
-                println!(
-                    "  {name:<20} params={:<9} batch={}x{} fwd={:.1} MFLOP/example",
-                    v.param_count,
-                    v.batch_train,
-                    v.batch_eval,
-                    v.fwd_flops_per_example as f64 / 1e6
+            match &manifest {
+                Some(m) => {
+                    println!("AOT variants in {:?}:", m.dir);
+                    for (name, v) in &m.variants {
+                        print_variant_row(name, v);
+                    }
+                }
+                None => {
+                    println!("no AOT artifacts in {dir:?} (run `make artifacts`)");
+                }
+            }
+            println!("native built-in variants (--backend native):");
+            for name in airbench::runtime::native::builtin_names() {
+                print_variant_row(
+                    name,
+                    &airbench::runtime::native::builtin_variant(name).unwrap(),
                 );
             }
         }
         Some(name) => {
-            let v = manifest.variant(name)?;
+            let v = match &manifest {
+                Some(m) if m.variants.contains_key(name) => m.variant(name)?.clone(),
+                _ => airbench::runtime::native::builtin_variant(name).ok_or_else(|| {
+                    anyhow::anyhow!("variant '{name}' is neither in a manifest nor built-in")
+                })?,
+            };
             if args.flag("hlo") {
-                for (tag, file) in [("train", &v.train.file), ("eval", &v.eval.file)] {
-                    let census =
-                        airbench::util::hlo_census::census_file(&manifest.dir.join(file))?;
+                let Some(m) = &manifest else {
+                    bail!("--hlo needs built AOT artifacts (run `make artifacts`)");
+                };
+                let mv = m.variant(name)?;
+                for (tag, file) in [("train", &mv.train.file), ("eval", &mv.eval.file)] {
+                    let census = airbench::util::hlo_census::census_file(&m.dir.join(file))?;
                     println!(
                         "{tag} module: {} instructions, {} computations; top ops:",
                         census.instructions, census.computations
@@ -237,13 +283,19 @@ fn cmd_info(args: &Args) -> Result<()> {
 fn usage() {
     eprintln!(
         "usage: airbench <train|eval|fleet|info> [--data cifar10] [--runs N] \
-         [--config file.json] [--workers N] [--prefetch-depth N] \
-         [--save ckpt.bin] [--load ckpt.bin] \
+         [--config file.json] [--backend auto|pjrt|native] [--workers N] \
+         [--prefetch-depth N] [--save ckpt.bin] [--load ckpt.bin] \
          [--log fleet.json] [--hlo] [key=value ...]\n       airbench --version\n\
          \n\
+         --backend KIND      execution backend (also config key `backend`): \
+         auto = compiled PJRT when artifacts + runtime exist, else the \
+         pure-Rust native backend; pjrt / native force one\n\
          --workers N         augment batches on N background threads \
          (0 = on the train thread; output is bit-identical either way)\n\
-         --prefetch-depth N  batches each worker may run ahead (default 2)"
+         --prefetch-depth N  batches each worker may run ahead (default 2)\n\
+         \n\
+         env: AIRBENCH_BACKEND=auto|pjrt|native, AIRBENCH_NATIVE_THREADS=N \
+         (native kernel threads; outputs bit-identical at any value)"
     );
 }
 

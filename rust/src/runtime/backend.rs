@@ -1,0 +1,362 @@
+//! The backend seam: one step contract, many execution substrates.
+//!
+//! The coordinator (trainer / evaluator / fleet) never talks to a runtime
+//! directly — it drives a [`Backend`]: "execute one training step against
+//! this [`ModelState`]", "produce logits for this batch". Two
+//! implementations exist:
+//!
+//! * [`crate::runtime::pjrt::PjrtBackend`] — compiles the AOT HLO-text
+//!   artifacts on a PJRT client and executes them (the paper's compiled
+//!   train step, §3.7). Needs built artifacts *and* real xla-rs bindings.
+//! * [`crate::runtime::native::NativeBackend`] — a pure-Rust,
+//!   multi-threaded implementation of the same step semantics (im2col
+//!   conv, BatchNorm, GELU, Nesterov SGD). Runs anywhere, including on
+//!   images where `crates/xla` is the stub.
+//!
+//! Both are driven by the same [`Variant`] tensor inventory, so they share
+//! the [`ModelState`] layout: a checkpoint trained on one backend loads
+//! and evaluates on the other (see `ModelState::{save, load}` for the
+//! state store contract).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::manifest::{Manifest, Variant};
+use crate::runtime::state::{InitConfig, ModelState};
+use crate::tensor::Tensor;
+
+/// Scalar results of one training step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepOutput {
+    /// Sum-reduced label-smoothed cross entropy over the batch (Listing 4).
+    pub loss: f32,
+    /// Training accuracy of this batch.
+    pub acc: f32,
+}
+
+/// Wall-clock accounting of backend activity (feeds the §Perf bench).
+///
+/// Train and eval are accounted separately, and each splits "exec" (time
+/// inside the compiled module / the native kernels) from "marshal" (packing
+/// and unpacking step arguments), so the hot-path bench can report both
+/// marshal shares.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BackendStats {
+    pub train_steps: u64,
+    pub eval_calls: u64,
+    /// Seconds spent executing train steps.
+    pub train_exec_secs: f64,
+    /// Seconds spent packing/unpacking train-step arguments.
+    pub train_marshal_secs: f64,
+    /// Seconds spent executing eval batches.
+    pub eval_exec_secs: f64,
+    /// Seconds spent packing/unpacking eval arguments.
+    pub eval_marshal_secs: f64,
+    /// One-time compile cost (zero for the native backend).
+    pub compile_secs: f64,
+}
+
+impl BackendStats {
+    /// Fraction of train-side time spent marshalling (0 when idle).
+    pub fn train_marshal_share(&self) -> f64 {
+        let total = self.train_marshal_secs + self.train_exec_secs;
+        if total > 0.0 {
+            self.train_marshal_secs / total
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of eval-side time spent marshalling (0 when idle).
+    pub fn eval_marshal_share(&self) -> f64 {
+        let total = self.eval_marshal_secs + self.eval_exec_secs;
+        if total > 0.0 {
+            self.eval_marshal_secs / total
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The step contract every execution substrate implements.
+///
+/// Object-safe on purpose: the coordinator holds `&mut dyn Backend` and a
+/// [`crate::experiments::Lab`] caches `Box<dyn Backend>` per variant.
+pub trait Backend {
+    /// Short name for logs: `"pjrt"` or `"native"`.
+    fn name(&self) -> &'static str;
+
+    /// The variant (tensor inventory + baked hyperparameters) this backend
+    /// executes. Defines the [`ModelState`] layout both backends share.
+    fn variant(&self) -> &Variant;
+
+    /// Execute one training step, updating `state` (params, momenta, BN
+    /// stats) in place.
+    fn train_step(
+        &mut self,
+        state: &mut ModelState,
+        images: &Tensor,
+        labels: &[i32],
+        lr: f32,
+        wd_over_lr: f32,
+        whiten_bias_on: bool,
+    ) -> Result<StepOutput>;
+
+    /// Run inference on one full batch; returns `(batch_eval, num_classes)`
+    /// logits. Callers pad partial batches (see `coordinator::evaluator`).
+    fn eval_logits(&mut self, state: &ModelState, images: &Tensor) -> Result<Tensor>;
+
+    /// Wall-clock accounting so far.
+    fn stats(&self) -> &BackendStats;
+
+    fn stats_mut(&mut self) -> &mut BackendStats;
+
+    /// Lowered/expected train batch size.
+    fn batch_train(&self) -> usize {
+        self.variant().batch_train
+    }
+
+    /// Lowered/expected eval batch size.
+    fn batch_eval(&self) -> usize {
+        self.variant().batch_eval
+    }
+
+    /// Fresh model state matching this backend's variant (state layout is
+    /// shared across backends; persistence is `ModelState::{save, load}`).
+    fn init_state(&self, cfg: &InitConfig) -> ModelState {
+        ModelState::init(self.variant(), cfg)
+    }
+}
+
+/// Which backend to construct (CLI `--backend`, config key `backend`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// PJRT when artifacts + runtime are available, else native.
+    #[default]
+    Auto,
+    Pjrt,
+    Native,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "auto" => Some(BackendKind::Auto),
+            "pjrt" => Some(BackendKind::Pjrt),
+            "native" => Some(BackendKind::Native),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Native => "native",
+        }
+    }
+}
+
+/// Why (or whether) the PJRT path can run. The two failure modes print
+/// differently everywhere (tests, benches, CLI): "artifacts not built" is
+/// fixed by `make artifacts`, "runtime unavailable" by linking real xla-rs.
+#[derive(Clone, Debug)]
+pub enum PjrtStatus {
+    Available,
+    /// `manifest.json` is missing (or unparseable) under the artifact dir.
+    ArtifactsMissing(String),
+    /// The `xla` crate cannot create a PJRT client (stub or broken install).
+    RuntimeUnavailable(String),
+}
+
+impl PjrtStatus {
+    /// Probe artifacts + runtime without compiling anything.
+    pub fn probe(artifacts_dir: &Path) -> PjrtStatus {
+        if let Err(e) = Manifest::load(artifacts_dir) {
+            return PjrtStatus::ArtifactsMissing(format!("{e:#}"));
+        }
+        match xla::PjRtClient::cpu() {
+            Ok(_) => PjrtStatus::Available,
+            Err(e) => PjrtStatus::RuntimeUnavailable(e.to_string()),
+        }
+    }
+
+    /// One-line skip reason, or `None` when available.
+    pub fn skip_reason(&self) -> Option<String> {
+        match self {
+            PjrtStatus::Available => None,
+            PjrtStatus::ArtifactsMissing(e) => {
+                Some(format!("artifacts not built (run `make artifacts`): {e}"))
+            }
+            PjrtStatus::RuntimeUnavailable(e) => {
+                Some(format!("PJRT runtime unavailable: {e}"))
+            }
+        }
+    }
+}
+
+/// A [`crate::runtime::pjrt::PjrtBackend`] bundled with the client that
+/// compiled it, so the factory can hand out a self-contained backend (the
+/// client must outlive the loaded executables — the same invariant `Lab`
+/// and the integration tests maintain by storing the client).
+struct PjrtWithClient {
+    // Field order matters: the backend (and its executables) drops before
+    // the client it was compiled on.
+    backend: crate::runtime::pjrt::PjrtBackend,
+    _client: xla::PjRtClient,
+}
+
+impl Backend for PjrtWithClient {
+    fn name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    fn variant(&self) -> &Variant {
+        Backend::variant(&self.backend)
+    }
+
+    fn train_step(
+        &mut self,
+        state: &mut ModelState,
+        images: &Tensor,
+        labels: &[i32],
+        lr: f32,
+        wd_over_lr: f32,
+        whiten_bias_on: bool,
+    ) -> Result<StepOutput> {
+        self.backend
+            .train_step(state, images, labels, lr, wd_over_lr, whiten_bias_on)
+    }
+
+    fn eval_logits(&mut self, state: &ModelState, images: &Tensor) -> Result<Tensor> {
+        self.backend.eval_logits(state, images)
+    }
+
+    fn stats(&self) -> &BackendStats {
+        Backend::stats(&self.backend)
+    }
+
+    fn stats_mut(&mut self) -> &mut BackendStats {
+        Backend::stats_mut(&mut self.backend)
+    }
+}
+
+/// Construct a backend of `kind` for `variant`, loading PJRT artifacts from
+/// `artifacts_dir` when needed. `Auto` resolves to PJRT when both the
+/// artifacts and the runtime are present, else to native — so every layer
+/// (trainer, evaluator, fleet, benches) runs on any machine.
+pub fn create_backend(
+    kind: BackendKind,
+    variant: &str,
+    artifacts_dir: &Path,
+) -> Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Pjrt => {
+            let manifest = Manifest::load(artifacts_dir)?;
+            let client = crate::runtime::pjrt::cpu_client()?;
+            let backend = crate::runtime::pjrt::PjrtBackend::load(&client, &manifest, variant)?;
+            Ok(Box::new(PjrtWithClient {
+                backend,
+                _client: client,
+            }))
+        }
+        BackendKind::Native => Ok(Box::new(crate::runtime::native::NativeBackend::new(
+            variant,
+            artifacts_dir,
+        )?)),
+        // Attempt the compiled path directly (no throwaway probe client);
+        // ANY failure — missing artifacts, stub runtime, compile error —
+        // falls back to the always-available native backend.
+        BackendKind::Auto => create_backend(BackendKind::Pjrt, variant, artifacts_dir)
+            .or_else(|_| create_backend(BackendKind::Native, variant, artifacts_dir)),
+    }
+}
+
+/// Like [`create_backend`] but with the default artifact location.
+pub fn create_default_backend(kind: BackendKind, variant: &str) -> Result<Box<dyn Backend>> {
+    create_backend(kind, variant, &Manifest::default_dir())
+}
+
+/// Guard shared by both backends: reject mis-shaped step inputs loudly.
+pub(crate) fn check_train_batch(variant: &Variant, images: &Tensor, labels: &[i32]) -> Result<()> {
+    let b = variant.batch_train;
+    if images.shape()[0] != b || labels.len() != b {
+        bail!(
+            "train batch must be exactly {b} (variant '{}'); got images {:?}, {} labels",
+            variant.name,
+            images.shape(),
+            labels.len()
+        );
+    }
+    Ok(())
+}
+
+pub(crate) fn check_eval_batch(variant: &Variant, images: &Tensor) -> Result<()> {
+    let b = variant.batch_eval;
+    if images.shape()[0] != b {
+        bail!(
+            "eval batch must be exactly {b} (variant '{}'); got {:?}",
+            variant.name,
+            images.shape()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_round_trip() {
+        for kind in [BackendKind::Auto, BackendKind::Pjrt, BackendKind::Native] {
+            assert_eq!(BackendKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(BackendKind::parse("gpu"), None);
+        assert_eq!(BackendKind::default(), BackendKind::Auto);
+    }
+
+    #[test]
+    fn marshal_shares_handle_zero() {
+        let s = BackendStats::default();
+        assert_eq!(s.train_marshal_share(), 0.0);
+        assert_eq!(s.eval_marshal_share(), 0.0);
+        let s = BackendStats {
+            train_exec_secs: 3.0,
+            train_marshal_secs: 1.0,
+            eval_exec_secs: 1.0,
+            eval_marshal_secs: 1.0,
+            ..BackendStats::default()
+        };
+        assert!((s.train_marshal_share() - 0.25).abs() < 1e-12);
+        assert!((s.eval_marshal_share() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn probe_reports_a_skip_reason_on_this_image() {
+        // On images without artifacts or without real PJRT this must be a
+        // printable reason; on fully-equipped images it must be None.
+        let status = PjrtStatus::probe(&Manifest::default_dir());
+        match &status {
+            PjrtStatus::Available => assert!(status.skip_reason().is_none()),
+            PjrtStatus::ArtifactsMissing(_) => {
+                let r = status.skip_reason().unwrap();
+                assert!(r.contains("artifacts not built"), "{r}");
+            }
+            PjrtStatus::RuntimeUnavailable(_) => {
+                let r = status.skip_reason().unwrap();
+                assert!(r.contains("runtime unavailable"), "{r}");
+            }
+        }
+    }
+
+    #[test]
+    fn auto_create_always_yields_a_backend() {
+        // The whole point of the seam: `auto` works on every machine.
+        let b = create_default_backend(BackendKind::Auto, "bench").unwrap();
+        assert!(b.name() == "pjrt" || b.name() == "native");
+        assert!(b.batch_train() > 0 && b.batch_eval() > 0);
+        assert_eq!(b.variant().num_classes, 10);
+    }
+}

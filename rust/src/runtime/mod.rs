@@ -1,14 +1,25 @@
-//! Runtime layer: AOT artifact loading + PJRT execution.
+//! Runtime layer: the backend seam and its two implementations.
 //!
-//! `manifest` parses the JSON contract written by `python/compile/aot.py`;
-//! `state` owns the model/optimizer tensors host-side; `engine` compiles
-//! the HLO-text modules on the PJRT CPU client and runs them. This is the
-//! only module that touches the `xla` crate.
+//! `backend` defines the step contract ([`Backend`]) the coordinator
+//! drives; `pjrt` executes AOT-compiled HLO artifacts through the PJRT
+//! client (the only module that touches the `xla` crate); `native` is the
+//! pure-Rust, multi-threaded implementation that runs everywhere;
+//! `manifest` parses the JSON contract written by `python/compile/aot.py`
+//! (the native backend builds the same [`Variant`] structure from its
+//! built-in table); `state` owns the model/optimizer tensors host-side,
+//! shared by both backends.
 
-pub mod engine;
+pub mod backend;
 pub mod manifest;
+pub mod native;
+pub mod pjrt;
 pub mod state;
 
-pub use engine::{cpu_client, Engine, EngineStats, StepOutput};
+pub use backend::{
+    create_backend, create_default_backend, Backend, BackendKind, BackendStats, PjrtStatus,
+    StepOutput,
+};
 pub use manifest::{Manifest, ModuleSpec, Role, TensorSpec, Variant};
+pub use native::NativeBackend;
+pub use pjrt::{cpu_client, PjrtBackend};
 pub use state::{InitConfig, ModelState};

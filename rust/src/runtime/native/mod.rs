@@ -1,0 +1,623 @@
+//! Native backend: the airbench CNN forward/backward and Nesterov-SGD
+//! update in pure, multi-threaded Rust.
+//!
+//! This is the hermetic twin of the PJRT backend: the same step contract
+//! ([`crate::runtime::backend::Backend`]), the same [`Variant`] tensor
+//! inventory, the same training semantics as `python/compile/model.py` —
+//! whiten 2x2 VALID conv + bias, three blocks of 3x3 SAME convs (im2col
+//! matmul) with 2x2 maxpool after the first conv of each block, scale-free
+//! BatchNorm (momentum 0.6, eps 1e-12) + exact GELU, final 3x3 maxpool,
+//! linear head scaled by 1/9, label-smoothed (0.2) sum-reduced cross
+//! entropy, and the PyTorch Nesterov-SGD rule with the 64x BN-bias LR
+//! group and decoupled weight decay (§3.4).
+//!
+//! It exists so every layer above the seam — trainer, evaluator, fleet,
+//! benches, the §2 timing protocol — runs (and is *tested*) on machines
+//! where `crates/xla` is the stub and no artifacts were built. Threading
+//! parallelizes convolutions over the batch with deterministic
+//! partitioning (see [`ops`]), so outputs are bit-identical for every
+//! `AIRBENCH_NATIVE_THREADS` value.
+
+pub mod ops;
+pub mod variants;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::backend::{
+    check_eval_batch, check_train_batch, Backend, BackendStats, StepOutput,
+};
+use crate::runtime::manifest::{Manifest, Role, Variant};
+use crate::runtime::state::ModelState;
+use crate::tensor::Tensor;
+
+pub use variants::{builtin_names, builtin_variant};
+
+/// Thread count for the native kernels: `AIRBENCH_NATIVE_THREADS` or the
+/// machine's available parallelism. Purely a throughput knob — outputs are
+/// bit-identical at any value.
+pub fn default_threads() -> usize {
+    std::env::var("AIRBENCH_NATIVE_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&t| t > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+}
+
+/// Pure-Rust implementation of the step contract.
+pub struct NativeBackend {
+    variant: Variant,
+    threads: usize,
+    pub stats: BackendStats,
+}
+
+/// Per-conv-layer forward cache consumed by the backward pass.
+struct LayerCache {
+    /// Input the conv read (kept for the weight gradient).
+    conv_in: Tensor,
+    /// Conv output shape (pool backward needs it when `pool_idx` is set).
+    conv_out_shape: Vec<usize>,
+    /// Argmax routing of the 2x2 pool after conv1 of each block.
+    pool_idx: Option<Vec<u32>>,
+    /// Normalized BN input.
+    xhat: Tensor,
+    /// Per-channel `1/sqrt(var+eps)`.
+    ivstd: Vec<f32>,
+    /// GELU pre-activation (`xhat + bias`).
+    pre_act: Tensor,
+}
+
+/// Everything the optimizer step needs from one forward+backward pass.
+struct StepMath {
+    out: StepOutput,
+    /// Gradients of every trainable tensor, keyed by manifest name.
+    grads: BTreeMap<String, Tensor>,
+    /// New BatchNorm running statistics `(tensor name, values)`.
+    stat_updates: Vec<(String, Vec<f32>)>,
+}
+
+fn add_channel_bias(x: &mut Tensor, bias: &[f32]) {
+    let (n, c, h, w) = x.dims4();
+    debug_assert_eq!(bias.len(), c);
+    let hw = h * w;
+    let xd = x.data_mut();
+    for ni in 0..n {
+        for ci in 0..c {
+            let base = (ni * c + ci) * hw;
+            let b = bias[ci];
+            for v in &mut xd[base..base + hw] {
+                *v += b;
+            }
+        }
+    }
+}
+
+fn add_into(dst: &mut Tensor, src: &Tensor) {
+    debug_assert_eq!(dst.shape(), src.shape());
+    for (a, &b) in dst.data_mut().iter_mut().zip(src.data()) {
+        *a += b;
+    }
+}
+
+impl NativeBackend {
+    /// Build a native backend for `variant_name`: built-in variant table
+    /// first (no artifacts needed), manifest fallback for names only an AOT
+    /// manifest knows.
+    pub fn new(variant_name: &str, artifacts_dir: &Path) -> Result<NativeBackend> {
+        let variant = match variants::builtin_variant(variant_name) {
+            Some(v) => v,
+            None => Manifest::load(artifacts_dir)
+                .and_then(|m| m.variant(variant_name).cloned())
+                .with_context(|| {
+                    format!(
+                        "variant '{variant_name}' is neither built-in ({:?}) nor in a manifest",
+                        variants::builtin_names()
+                    )
+                })?,
+        };
+        Ok(NativeBackend::from_variant(variant))
+    }
+
+    /// Build from an explicit variant spec (the pjrt/native parity test
+    /// drives both backends from the same manifest [`Variant`]).
+    pub fn from_variant(variant: Variant) -> NativeBackend {
+        NativeBackend {
+            variant,
+            threads: default_threads(),
+            stats: BackendStats::default(),
+        }
+    }
+
+    /// Override the kernel thread count (bit-identical at any value).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn variant(&self) -> &Variant {
+        &self.variant
+    }
+
+    fn check_images(&self, images: &Tensor) -> Result<()> {
+        let hw = self.variant.image_hw;
+        let s = images.shape();
+        if s.len() != 4 || s[1] != 3 || s[2] != hw || s[3] != hw {
+            bail!(
+                "images must be (batch, 3, {hw}, {hw}) for variant '{}'; got {s:?}",
+                self.variant.name
+            );
+        }
+        Ok(())
+    }
+
+    /// Training-mode forward + backward: loss/acc, gradients for every
+    /// trainable, and the new BN running stats. Does not mutate `state`.
+    fn step_math(&self, state: &ModelState, images: &Tensor, labels: &[i32]) -> Result<StepMath> {
+        let v = &self.variant;
+        let hy = &v.hyper;
+        let t = self.threads;
+        let eps = hy.bn_eps as f32;
+        let cpb = hy.convs_per_block;
+        let n = images.shape()[0];
+
+        // ---- forward ----------------------------------------------------
+        let mut pre = ops::conv2d_fwd(images, state.get("whiten_w")?, 0, t);
+        add_channel_bias(&mut pre, state.get("whiten_b")?.data());
+        let whiten_pre = pre;
+        let mut x = ops::gelu_map(&whiten_pre);
+
+        let mut caches: Vec<LayerCache> = Vec::with_capacity(3 * cpb);
+        let mut stat_updates = Vec::new();
+        let m = hy.bn_momentum as f32;
+        for b in 1..=3usize {
+            let mut skip: Option<Tensor> = None;
+            for j in 1..=cpb {
+                let w = state.get(&format!("block{b}_conv{j}_w"))?;
+                let conv_in = x;
+                let conv_out = ops::conv2d_fwd(&conv_in, w, 1, t);
+                let conv_out_shape = conv_out.shape().to_vec();
+                let (bn_in, pool_idx) = if j == 1 {
+                    let (p, idx) = ops::maxpool_fwd(&conv_out, 2);
+                    (p, Some(idx))
+                } else {
+                    (conv_out, None)
+                };
+                let bias = state.get(&format!("block{b}_bn{j}_b"))?;
+                let bn = ops::bn_train_fwd(&bn_in, bias.data(), eps);
+                // running = m*running + (1-m)*batch (momentum 0.6, §A).
+                for (suffix, batch_stat) in
+                    [("mean", &bn.mu), ("var", &bn.var_unbiased)]
+                {
+                    let name = format!("block{b}_bn{j}_{suffix}");
+                    let old = state.get(&name)?.data();
+                    let new: Vec<f32> = old
+                        .iter()
+                        .zip(batch_stat.iter())
+                        .map(|(&o, &s)| m * o + (1.0 - m) * s)
+                        .collect();
+                    stat_updates.push((name, new));
+                }
+                x = ops::gelu_map(&bn.y);
+                caches.push(LayerCache {
+                    conv_in,
+                    conv_out_shape,
+                    pool_idx,
+                    xhat: bn.xhat,
+                    ivstd: bn.ivstd,
+                    pre_act: bn.y,
+                });
+                if hy.residual && j == 1 {
+                    skip = Some(x.clone());
+                }
+            }
+            if let Some(sk) = skip {
+                add_into(&mut x, &sk); // §4 residual across the later convs
+            }
+        }
+        let x_final_shape = x.shape().to_vec();
+        let (pool3, idx3) = ops::maxpool_fwd(&x, 3);
+        let pool3_shape = pool3.shape().to_vec();
+        let f = pool3.len() / n;
+        let head_w = state.get("head_w")?;
+        if head_w.shape()[0] != f {
+            bail!(
+                "head expects {} features, pooled map has {f} — image_hw {} incompatible",
+                head_w.shape()[0],
+                v.image_hw
+            );
+        }
+        let k = v.num_classes;
+        let s = hy.scaling_factor as f32;
+        let head_in = pool3.reshape(&[n, f])?;
+        let mut logits = Tensor::zeros(&[n, k]);
+        ops::matmul_acc(head_in.data(), head_w.data(), n, f, k, logits.data_mut());
+        logits.scale(s);
+
+        // ---- loss + backward --------------------------------------------
+        let (loss, acc, dlogits) = ops::ce_loss_grad(&logits, labels, hy.label_smoothing as f32);
+        let mut grads: BTreeMap<String, Tensor> = BTreeMap::new();
+
+        let mut dhead_w = Tensor::zeros(&[f, k]);
+        ops::matmul_at_acc(head_in.data(), dlogits.data(), n, f, k, dhead_w.data_mut());
+        dhead_w.scale(s);
+        grads.insert("head_w".into(), dhead_w);
+
+        let mut dhead_in = Tensor::zeros(&[n, f]);
+        ops::matmul_bt_acc(dlogits.data(), head_w.data(), n, k, f, dhead_in.data_mut());
+        dhead_in.scale(s);
+        let dpool3 = dhead_in.reshape(&pool3_shape)?;
+        let mut dx = ops::maxpool_bwd(&dpool3, &idx3, &x_final_shape);
+
+        for b in (1..=3usize).rev() {
+            let mut dskip = if hy.residual { Some(dx.clone()) } else { None };
+            for j in (1..=cpb).rev() {
+                if j == 1 {
+                    // The j=1 output feeds both conv2 and the residual add,
+                    // so its gradient is the sum of both paths.
+                    if let Some(ds) = dskip.take() {
+                        add_into(&mut dx, &ds);
+                    }
+                }
+                let cache = caches.pop().expect("cache per conv layer");
+                let dpre = ops::gelu_bwd(&dx, &cache.pre_act);
+                let (dbn_in, dbias) = ops::bn_train_bwd(&dpre, &cache.xhat, &cache.ivstd);
+                grads.insert(
+                    format!("block{b}_bn{j}_b"),
+                    Tensor::from_vec(&[dbias.len()], dbias)?,
+                );
+                let dconv_out = match &cache.pool_idx {
+                    Some(idx) => ops::maxpool_bwd(&dbn_in, idx, &cache.conv_out_shape),
+                    None => dbn_in,
+                };
+                grads.insert(
+                    format!("block{b}_conv{j}_w"),
+                    ops::conv2d_bwd_weights(&cache.conv_in, &dconv_out, 1, 3, 3, t),
+                );
+                let w = state.get(&format!("block{b}_conv{j}_w"))?;
+                let (_, _, ih, iw) = cache.conv_in.dims4();
+                dx = ops::conv2d_bwd_data(&dconv_out, w, 1, ih, iw, t);
+            }
+        }
+        // Whitening layer: frozen weights, trainable bias only — no
+        // gradient flows further than the bias sum.
+        let dwpre = ops::gelu_bwd(&dx, &whiten_pre);
+        let (_, wc, wh, ww_) = dwpre.dims4();
+        let mut db = vec![0.0f32; wc];
+        for ni in 0..n {
+            for ci in 0..wc {
+                let base = (ni * wc + ci) * wh * ww_;
+                let mut sum = 0.0f32;
+                for &v2 in &dwpre.data()[base..base + wh * ww_] {
+                    sum += v2;
+                }
+                db[ci] += sum;
+            }
+        }
+        grads.insert("whiten_b".into(), Tensor::from_vec(&[wc], db)?);
+
+        Ok(StepMath {
+            out: StepOutput { loss, acc },
+            grads,
+            stat_updates,
+        })
+    }
+
+    /// PyTorch Nesterov-SGD update with the bias_scaler LR group and
+    /// weight decay coupled into the gradient (matches `model.train_step`).
+    fn apply_update(
+        &self,
+        state: &mut ModelState,
+        grads: &mut BTreeMap<String, Tensor>,
+        lr: f32,
+        wd_over_lr: f32,
+        whiten_bias_on: bool,
+    ) -> Result<()> {
+        let hy = &self.variant.hyper;
+        let mu = hy.momentum as f32;
+        let bs = hy.bias_scaler as f32;
+        for spec in self.variant.tensors.iter().filter(|t| t.role == Role::Trainable) {
+            let g = grads
+                .get_mut(&spec.name)
+                .with_context(|| format!("no gradient for trainable '{}'", spec.name))?;
+            if spec.name == "whiten_b" && !whiten_bias_on {
+                // §3.2 gate: the *gradient* is zeroed; weight decay and
+                // momentum still apply, as in the compiled graph.
+                g.scale(0.0);
+            }
+            let (lr_eff, wd_eff) = if spec.is_bn_bias() {
+                (lr * bs, wd_over_lr / bs)
+            } else {
+                (lr, wd_over_lr)
+            };
+            let p = state
+                .tensors
+                .get_mut(&spec.name)
+                .with_context(|| format!("no state tensor '{}'", spec.name))?;
+            let buf = state
+                .momenta
+                .get_mut(&spec.name)
+                .with_context(|| format!("no momentum '{}'", spec.name))?;
+            let (pd, bd) = (p.data_mut(), buf.data_mut());
+            let gd = g.data();
+            for i in 0..pd.len() {
+                let mut gi = gd[i] + wd_eff * pd[i];
+                bd[i] = mu * bd[i] + gi;
+                gi += mu * bd[i];
+                pd[i] -= lr_eff * gi;
+            }
+        }
+        Ok(())
+    }
+
+    /// Eval-mode forward: running BN stats, no caches.
+    ///
+    /// Deliberately a separate, cache-free copy of [`Self::step_math`]'s
+    /// forward rather than one parameterized function: the two differ in
+    /// BN mode and in what they retain, and each is independently
+    /// validated against `model.py` (`train_step` / `eval_step`). Any
+    /// topology change must be applied to BOTH (the pjrt/native parity
+    /// test catches divergence whenever the compiled path is available).
+    fn eval_math(&self, state: &ModelState, images: &Tensor) -> Result<Tensor> {
+        let v = &self.variant;
+        let hy = &v.hyper;
+        let t = self.threads;
+        let eps = hy.bn_eps as f32;
+        let cpb = hy.convs_per_block;
+        let n = images.shape()[0];
+
+        let mut pre = ops::conv2d_fwd(images, state.get("whiten_w")?, 0, t);
+        add_channel_bias(&mut pre, state.get("whiten_b")?.data());
+        let mut x = ops::gelu_map(&pre);
+        for b in 1..=3usize {
+            let mut skip: Option<Tensor> = None;
+            for j in 1..=cpb {
+                let w = state.get(&format!("block{b}_conv{j}_w"))?;
+                let conv_out = ops::conv2d_fwd(&x, w, 1, t);
+                let bn_in = if j == 1 {
+                    ops::maxpool_fwd(&conv_out, 2).0
+                } else {
+                    conv_out
+                };
+                let y = ops::bn_eval_fwd(
+                    &bn_in,
+                    state.get(&format!("block{b}_bn{j}_b"))?.data(),
+                    state.get(&format!("block{b}_bn{j}_mean"))?.data(),
+                    state.get(&format!("block{b}_bn{j}_var"))?.data(),
+                    eps,
+                );
+                x = ops::gelu_map(&y);
+                if hy.residual && j == 1 {
+                    skip = Some(x.clone());
+                }
+            }
+            if let Some(sk) = skip {
+                add_into(&mut x, &sk);
+            }
+        }
+        let (pool3, _) = ops::maxpool_fwd(&x, 3);
+        let f = pool3.len() / n;
+        let head_w = state.get("head_w")?;
+        if head_w.shape()[0] != f {
+            bail!("head expects {} features, got {f}", head_w.shape()[0]);
+        }
+        let k = v.num_classes;
+        let head_in = pool3.reshape(&[n, f])?;
+        let mut logits = Tensor::zeros(&[n, k]);
+        ops::matmul_acc(head_in.data(), head_w.data(), n, f, k, logits.data_mut());
+        logits.scale(hy.scaling_factor as f32);
+        Ok(logits)
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn variant(&self) -> &Variant {
+        &self.variant
+    }
+
+    fn train_step(
+        &mut self,
+        state: &mut ModelState,
+        images: &Tensor,
+        labels: &[i32],
+        lr: f32,
+        wd_over_lr: f32,
+        whiten_bias_on: bool,
+    ) -> Result<StepOutput> {
+        check_train_batch(&self.variant, images, labels)?;
+        self.check_images(images)?;
+        let t0 = Instant::now();
+        let mut math = self.step_math(state, images, labels)?;
+        self.apply_update(state, &mut math.grads, lr, wd_over_lr, whiten_bias_on)?;
+        for (name, vals) in &math.stat_updates {
+            state
+                .tensors
+                .get_mut(name)
+                .with_context(|| format!("no BN stat tensor '{name}'"))?
+                .data_mut()
+                .copy_from_slice(vals);
+        }
+        self.stats.train_steps += 1;
+        self.stats.train_exec_secs += t0.elapsed().as_secs_f64();
+        Ok(math.out)
+    }
+
+    fn eval_logits(&mut self, state: &ModelState, images: &Tensor) -> Result<Tensor> {
+        check_eval_batch(&self.variant, images)?;
+        self.check_images(images)?;
+        let t0 = Instant::now();
+        let logits = self.eval_math(state, images)?;
+        self.stats.eval_calls += 1;
+        self.stats.eval_exec_secs += t0.elapsed().as_secs_f64();
+        Ok(logits)
+    }
+
+    fn stats(&self) -> &BackendStats {
+        &self.stats
+    }
+
+    fn stats_mut(&mut self) -> &mut BackendStats {
+        &mut self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{cifar_like, SynthConfig};
+    use crate::runtime::state::InitConfig;
+
+    fn backend() -> NativeBackend {
+        NativeBackend::new("nano", Path::new("/nonexistent")).unwrap()
+    }
+
+    fn batch(b: &NativeBackend, split: u64) -> (Tensor, Vec<i32>) {
+        let n = b.batch_train();
+        let ds = cifar_like(&SynthConfig::default().with_n(n), 0xBEEF, split);
+        let labels = ds.labels.iter().map(|&l| l as i32).collect();
+        (ds.images, labels)
+    }
+
+    #[test]
+    fn builtin_needs_no_artifacts() {
+        let b = backend();
+        assert_eq!(b.name(), "native");
+        assert_eq!(b.variant().name, "nano");
+        assert_eq!(b.stats().compile_secs, 0.0);
+        // unknown name without a manifest is a clean error
+        let err = NativeBackend::new("zzz", Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("zzz"));
+    }
+
+    #[test]
+    fn train_step_updates_state_and_returns_finite_loss() {
+        let mut b = backend();
+        let mut state = b.init_state(&InitConfig::default());
+        let (images, labels) = batch(&b, 0);
+        let before = state.tensors["head_w"].clone();
+        let out = b
+            .train_step(&mut state, &images, &labels, 1e-3, 0.1, true)
+            .unwrap();
+        assert!(out.loss.is_finite() && out.loss > 0.0, "{out:?}");
+        assert!((0.0..=1.0).contains(&out.acc));
+        assert_ne!(state.tensors["head_w"].data(), before.data());
+        assert!(state.momenta["head_w"].data().iter().any(|&v| v != 0.0));
+        // BN running stats moved off their init values
+        assert!(state.tensors["block1_bn1_mean"].data().iter().any(|&v| v != 0.0));
+        assert_eq!(b.stats().train_steps, 1);
+        assert!(b.stats().train_exec_secs > 0.0);
+    }
+
+    #[test]
+    fn step_is_bit_deterministic_across_threads() {
+        let (images, labels) = batch(&backend(), 1);
+        let run = |threads: usize| {
+            let mut b = backend().with_threads(threads);
+            let mut state = b.init_state(&InitConfig { dirac: true, seed: 3 });
+            let out = b
+                .train_step(&mut state, &images, &labels, 2e-3, 0.05, true)
+                .unwrap();
+            (out.loss, state.tensors["block2_conv1_w"].clone())
+        };
+        let (l1, w1) = run(1);
+        for threads in [2usize, 4] {
+            let (l, w) = run(threads);
+            assert_eq!(l1.to_bits(), l.to_bits(), "loss differs at {threads} threads");
+            assert_eq!(w1.data(), w.data(), "weights differ at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn whiten_bias_gate_zeroes_gradient_only() {
+        let mut b = backend();
+        let (images, labels) = batch(&b, 2);
+        // wd = 0: gated bias must stay exactly put.
+        let mut state = b.init_state(&InitConfig::default());
+        let before = state.tensors["whiten_b"].clone();
+        b.train_step(&mut state, &images, &labels, 1e-2, 0.0, false)
+            .unwrap();
+        assert_eq!(state.tensors["whiten_b"].data(), before.data());
+        // ungated it must move.
+        b.train_step(&mut state, &images, &labels, 1e-2, 0.0, true)
+            .unwrap();
+        assert_ne!(state.tensors["whiten_b"].data(), before.data());
+    }
+
+    #[test]
+    fn eval_logits_shape_and_determinism() {
+        let mut b = backend();
+        let state = b.init_state(&InitConfig::default());
+        let n = b.batch_eval();
+        let ds = cifar_like(&SynthConfig::default().with_n(n), 0xE0A1, 0);
+        let a = b.eval_logits(&state, &ds.images).unwrap();
+        let c = b.eval_logits(&state, &ds.images).unwrap();
+        assert_eq!(a.shape(), &[n, 10]);
+        assert_eq!(a.data(), c.data());
+        assert!(a.data().iter().all(|v| v.is_finite()));
+        assert_eq!(b.stats().eval_calls, 2);
+    }
+
+    #[test]
+    fn wrong_batch_or_shape_is_rejected() {
+        let mut b = backend();
+        let mut state = b.init_state(&InitConfig::default());
+        let img = Tensor::zeros(&[3, 3, 32, 32]);
+        assert!(b.train_step(&mut state, &img, &[0; 3], 1e-3, 0.1, true).is_err());
+        assert!(b.eval_logits(&state, &img).is_err());
+        let bad_hw = Tensor::zeros(&[b.batch_train(), 3, 16, 16]);
+        let labels = vec![0i32; b.batch_train()];
+        assert!(b
+            .train_step(&mut state, &bad_hw, &labels, 1e-3, 0.1, true)
+            .is_err());
+    }
+
+    #[test]
+    fn bias_scaler_group_moves_bn_biases_faster() {
+        // One step with a synthetic gradient path: after a step with lr>0,
+        // BN biases (64x group) move much further than same-magnitude
+        // conv updates would — probe via the momentum buffers instead of
+        // exact values: the bias buffer is finite and nonzero.
+        let mut b = backend();
+        let mut state = b.init_state(&InitConfig::default());
+        let (images, labels) = batch(&b, 3);
+        b.train_step(&mut state, &images, &labels, 1e-3, 0.0, true)
+            .unwrap();
+        let bias_moved = state.tensors["block1_bn1_b"]
+            .data()
+            .iter()
+            .any(|&v| v != 0.0);
+        assert!(bias_moved, "BN bias did not train");
+    }
+
+    #[test]
+    fn residual_variant_trains() {
+        let mut b = NativeBackend::new("bench96", Path::new("/nonexistent"))
+            .unwrap()
+            .with_threads(2);
+        // bench96 batch is 64 — too heavy for a unit test; shrink by
+        // driving a custom variant with the same topology.
+        let mut v = b.variant().clone();
+        v.batch_train = 4;
+        v.batch_eval = 4;
+        b = NativeBackend::from_variant(v).with_threads(2);
+        let mut state = b.init_state(&InitConfig::default());
+        let ds = cifar_like(&SynthConfig::default().with_n(4), 0x9696, 0);
+        let labels: Vec<i32> = ds.labels.iter().map(|&l| l as i32).collect();
+        let out = b
+            .train_step(&mut state, &ds.images, &labels, 1e-3, 0.1, true)
+            .unwrap();
+        assert!(out.loss.is_finite());
+        let logits = b.eval_logits(&state, &ds.images).unwrap();
+        assert!(logits.data().iter().all(|v| v.is_finite()));
+    }
+}

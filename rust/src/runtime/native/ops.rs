@@ -1,0 +1,919 @@
+//! Numerical kernels of the native backend: im2col convolution, BatchNorm,
+//! GELU, max pooling, label-smoothed cross entropy, and the small matmul
+//! family everything reduces to.
+//!
+//! Determinism contract: every function here is a pure function of its
+//! inputs — **independent of the thread count**. Convolutions parallelize
+//! over the batch dimension only: each example writes a disjoint output
+//! slice, and weight-gradient reductions accumulate per-[`CHUNK`] partials
+//! that are summed in fixed chunk order. Changing `threads` can therefore
+//! never change a single output bit, which is what makes seed-reproducible
+//! training possible on any machine (DESIGN.md §5 extends this argument to
+//! the data pipeline).
+
+use crate::tensor::Tensor;
+
+/// Baseline examples per weight-gradient partial. Never derived from the
+/// thread count, so the floating-point reduction tree is identical for
+/// every `threads` value.
+pub const CHUNK: usize = 8;
+
+/// Cap on the transient per-call partial-buffer footprint of
+/// [`conv2d_bwd_weights`]. Paper-scale variants (airbench96: batch 1024,
+/// 512x512x3x3 filters) would otherwise allocate gigabytes of partials.
+const MAX_PARTIAL_BYTES: usize = 64 << 20;
+
+/// Chunk size for a weight-gradient reduction over `n` examples with
+/// `plen`-float partials: [`CHUNK`], grown only as far as needed to keep
+/// the partial buffer under [`MAX_PARTIAL_BYTES`]. A pure function of
+/// `(n, plen)` — NOT of the thread count — so determinism holds.
+fn reduce_chunk(n: usize, plen: usize) -> usize {
+    let max_chunks = (MAX_PARTIAL_BYTES / (4 * plen.max(1))).max(1);
+    CHUNK.max(n.div_ceil(max_chunks))
+}
+
+// ---------------------------------------------------------------------------
+// Scalar math
+// ---------------------------------------------------------------------------
+
+/// Error function, Abramowitz–Stegun 7.1.26 (max abs error 1.5e-7 — below
+/// f32 resolution for the activations we see).
+#[inline]
+pub fn erf(x: f32) -> f32 {
+    let sign = if x < 0.0 { -1.0f32 } else { 1.0 };
+    let z = x.abs();
+    let t = 1.0 / (1.0 + 0.327_591_1 * z);
+    let poly = t
+        * (0.254_829_6
+            + t * (-0.284_496_74 + t * (1.421_413_7 + t * (-1.453_152 + t * 1.061_405_4))));
+    sign * (1.0 - poly * (-z * z).exp())
+}
+
+const FRAC_1_SQRT_2: f32 = std::f32::consts::FRAC_1_SQRT_2;
+/// 1 / sqrt(2*pi)
+const INV_SQRT_TAU: f32 = 0.398_942_28;
+
+/// Exact GELU (`jax.nn.gelu(..., approximate=False)`): `x * Phi(x)`.
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + erf(x * FRAC_1_SQRT_2))
+}
+
+/// d/dx of exact GELU: `Phi(x) + x * phi(x)`.
+#[inline]
+pub fn gelu_grad(x: f32) -> f32 {
+    let phi_big = 0.5 * (1.0 + erf(x * FRAC_1_SQRT_2));
+    let phi_small = INV_SQRT_TAU * (-0.5 * x * x).exp();
+    phi_big + x * phi_small
+}
+
+/// Elementwise GELU into a fresh tensor (the pre-activation is kept by the
+/// caller for the backward pass).
+pub fn gelu_map(x: &Tensor) -> Tensor {
+    let mut out = Tensor::zeros(x.shape());
+    for (o, &v) in out.data_mut().iter_mut().zip(x.data()) {
+        *o = gelu(v);
+    }
+    out
+}
+
+/// Backward through GELU: `dpre[i] = dy[i] * gelu'(pre[i])`.
+pub fn gelu_bwd(dy: &Tensor, pre: &Tensor) -> Tensor {
+    debug_assert_eq!(dy.shape(), pre.shape());
+    let mut out = Tensor::zeros(dy.shape());
+    let od = out.data_mut();
+    for i in 0..od.len() {
+        od[i] = dy.data()[i] * gelu_grad(pre.data()[i]);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Matmul family (row-major, accumulate into `out`)
+// ---------------------------------------------------------------------------
+
+/// `out (m,n) += a (m,k) @ b (k,n)` — i-k-j loop, axpy inner (vectorizes).
+pub fn matmul_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (l, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                let brow = &b[l * n..(l + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+}
+
+/// `out (k,n) += a (m,k)^T @ b (m,n)`.
+pub fn matmul_at_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), k * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for (l, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                let orow = &mut out[l * n..(l + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+}
+
+/// `out (m,n) += a (m,k) @ b (n,k)^T` — row-dot inner loop.
+pub fn matmul_bt_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, oj) in orow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for l in 0..k {
+                acc += arow[l] * brow[l];
+            }
+            *oj += acc;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// im2col / col2im (stride 1, symmetric zero padding)
+// ---------------------------------------------------------------------------
+
+/// Output spatial size of a stride-1 conv: `h + 2*pad - kh + 1`.
+#[inline]
+pub fn conv_out_hw(h: usize, kh: usize, pad: usize) -> usize {
+    h + 2 * pad - kh + 1
+}
+
+/// Unfold one `(cin, h, w)` image into `cols (cin*kh*kw, oh*ow)`.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col(
+    x: &[f32],
+    cin: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    pad: usize,
+    cols: &mut [f32],
+) {
+    let oh = conv_out_hw(h, kh, pad);
+    let ow = conv_out_hw(w, kw, pad);
+    debug_assert_eq!(x.len(), cin * h * w);
+    debug_assert_eq!(cols.len(), cin * kh * kw * oh * ow);
+    for ci in 0..cin {
+        let xc = &x[ci * h * w..(ci + 1) * h * w];
+        for ky in 0..kh {
+            for kx in 0..kw {
+                let row = ((ci * kh + ky) * kw + kx) * (oh * ow);
+                for oy in 0..oh {
+                    let dst = &mut cols[row + oy * ow..row + (oy + 1) * ow];
+                    let iy = (oy + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        dst.fill(0.0);
+                        continue;
+                    }
+                    let src_row = &xc[iy as usize * w..(iy as usize + 1) * w];
+                    // ox maps to ix = ox + kx - pad; clip to [0, w).
+                    let shift = kx as isize - pad as isize;
+                    let lo = (-shift).max(0) as usize; // first valid ox
+                    let hi = ((w as isize - shift).min(ow as isize)).max(0) as usize;
+                    dst[..lo.min(ow)].fill(0.0);
+                    if lo < hi {
+                        dst[lo..hi]
+                            .copy_from_slice(&src_row[(lo as isize + shift) as usize..(hi as isize + shift) as usize]);
+                    }
+                    dst[hi.max(lo)..].fill(0.0);
+                }
+            }
+        }
+    }
+}
+
+/// Scatter-add the columns back: `dx (cin, h, w) += fold(cols)`. Exact
+/// adjoint of [`im2col`].
+#[allow(clippy::too_many_arguments)]
+pub fn col2im_acc(
+    cols: &[f32],
+    cin: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    pad: usize,
+    dx: &mut [f32],
+) {
+    let oh = conv_out_hw(h, kh, pad);
+    let ow = conv_out_hw(w, kw, pad);
+    debug_assert_eq!(dx.len(), cin * h * w);
+    debug_assert_eq!(cols.len(), cin * kh * kw * oh * ow);
+    for ci in 0..cin {
+        let xc = &mut dx[ci * h * w..(ci + 1) * h * w];
+        for ky in 0..kh {
+            for kx in 0..kw {
+                let row = ((ci * kh + ky) * kw + kx) * (oh * ow);
+                for oy in 0..oh {
+                    let iy = (oy + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    let src = &cols[row + oy * ow..row + (oy + 1) * ow];
+                    let shift = kx as isize - pad as isize;
+                    let lo = (-shift).max(0) as usize;
+                    let hi = ((w as isize - shift).min(ow as isize)).max(0) as usize;
+                    let base = iy as usize * w;
+                    for ox in lo..hi {
+                        xc[base + (ox as isize + shift) as usize] += src[ox];
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batch-parallel helpers (deterministic partitioning)
+// ---------------------------------------------------------------------------
+
+/// Run `work(example, out_slice, scratch)` for every example, writing each
+/// example's disjoint `out` region. Contiguous example blocks go to up to
+/// `threads` scoped threads; output bits are independent of `threads`
+/// because the per-example computation is independent.
+fn par_examples<F>(n: usize, item: usize, out: &mut [f32], threads: usize, work: &F)
+where
+    F: Fn(usize, &mut [f32], &mut Vec<f32>) + Sync,
+{
+    debug_assert_eq!(out.len(), n * item);
+    let t = threads.clamp(1, n.max(1));
+    if t <= 1 {
+        let mut scratch = Vec::new();
+        for (i, slice) in out.chunks_mut(item).enumerate() {
+            work(i, slice, &mut scratch);
+        }
+        return;
+    }
+    let per = n.div_ceil(t);
+    std::thread::scope(|s| {
+        let mut rest: &mut [f32] = out;
+        let mut start = 0usize;
+        while start < n {
+            let cnt = per.min(n - start);
+            let (mine, tail) = std::mem::take(&mut rest).split_at_mut(cnt * item);
+            rest = tail;
+            let s0 = start;
+            s.spawn(move || {
+                let mut scratch = Vec::new();
+                for (j, slice) in mine.chunks_mut(item).enumerate() {
+                    work(s0 + j, slice, &mut scratch);
+                }
+            });
+            start += cnt;
+        }
+    });
+}
+
+/// Accumulate a per-example contribution of size `plen` into a single
+/// buffer, deterministically: examples are grouped into chunks of
+/// [`reduce_chunk`] size, each chunk accumulates sequentially into its own
+/// partial, and the partials are summed in chunk order — a reduction tree
+/// that does not depend on `threads`.
+fn par_chunk_reduce<F>(n: usize, plen: usize, threads: usize, work: &F) -> Vec<f32>
+where
+    F: Fn(usize, &mut [f32], &mut Vec<f32>) + Sync,
+{
+    let chunk = reduce_chunk(n, plen);
+    let n_chunks = n.div_ceil(chunk).max(1);
+    let mut partials = vec![0.0f32; n_chunks * plen];
+    let t = threads.clamp(1, n_chunks);
+    if t <= 1 {
+        let mut scratch = Vec::new();
+        for (c, part) in partials.chunks_mut(plen).enumerate() {
+            for i in c * chunk..(c * chunk + chunk).min(n) {
+                work(i, part, &mut scratch);
+            }
+        }
+    } else {
+        let per = n_chunks.div_ceil(t);
+        std::thread::scope(|s| {
+            let mut rest: &mut [f32] = &mut partials;
+            let mut c0 = 0usize;
+            while c0 < n_chunks {
+                let cnt = per.min(n_chunks - c0);
+                let (mine, tail) = std::mem::take(&mut rest).split_at_mut(cnt * plen);
+                rest = tail;
+                let first = c0;
+                s.spawn(move || {
+                    let mut scratch = Vec::new();
+                    for (jc, part) in mine.chunks_mut(plen).enumerate() {
+                        let c = first + jc;
+                        for i in c * chunk..(c * chunk + chunk).min(n) {
+                            work(i, part, &mut scratch);
+                        }
+                    }
+                });
+                c0 += cnt;
+            }
+        });
+    }
+    // Fixed-order final reduction.
+    let mut total = vec![0.0f32; plen];
+    for part in partials.chunks(plen) {
+        for (tv, &pv) in total.iter_mut().zip(part) {
+            *tv += pv;
+        }
+    }
+    total
+}
+
+// ---------------------------------------------------------------------------
+// Convolution (stride 1)
+// ---------------------------------------------------------------------------
+
+/// Forward conv: `x (n, cin, h, w) * w (cout, cin, kh, kw) -> (n, cout, oh,
+/// ow)`. `pad = 1` is the 3x3 SAME conv, `pad = 0` the whitening VALID conv.
+pub fn conv2d_fwd(x: &Tensor, weight: &Tensor, pad: usize, threads: usize) -> Tensor {
+    let (n, cin, h, w) = x.dims4();
+    let (cout, cin2, kh, kw) = weight.dims4();
+    debug_assert_eq!(cin, cin2, "conv channel mismatch");
+    let (oh, ow) = (conv_out_hw(h, kh, pad), conv_out_hw(w, kw, pad));
+    let (k, p) = (cin * kh * kw, oh * ow);
+    let mut out = Tensor::zeros(&[n, cout, oh, ow]);
+    let (xd, wd) = (x.data(), weight.data());
+    let xsz = cin * h * w;
+    par_examples(n, cout * p, out.data_mut(), threads, &|i, oslice, scratch| {
+        scratch.resize(k * p, 0.0);
+        im2col(&xd[i * xsz..(i + 1) * xsz], cin, h, w, kh, kw, pad, scratch);
+        matmul_acc(wd, scratch, cout, k, p, oslice);
+    });
+    out
+}
+
+/// Backward-data conv: gradient w.r.t. the conv input.
+pub fn conv2d_bwd_data(
+    dy: &Tensor,
+    weight: &Tensor,
+    pad: usize,
+    in_h: usize,
+    in_w: usize,
+    threads: usize,
+) -> Tensor {
+    let (n, cout, oh, ow) = dy.dims4();
+    let (cout2, cin, kh, kw) = weight.dims4();
+    debug_assert_eq!(cout, cout2);
+    debug_assert_eq!(oh, conv_out_hw(in_h, kh, pad));
+    let (k, p) = (cin * kh * kw, oh * ow);
+    let mut dx = Tensor::zeros(&[n, cin, in_h, in_w]);
+    let (dyd, wd) = (dy.data(), weight.data());
+    let (dysz, xsz) = (cout * p, cin * in_h * in_w);
+    par_examples(n, xsz, dx.data_mut(), threads, &|i, xslice, scratch| {
+        scratch.resize(k * p, 0.0);
+        scratch.fill(0.0);
+        // dcols (k, p) = W^T (k, cout) @ dy_i (cout, p)
+        matmul_at_acc(wd, &dyd[i * dysz..(i + 1) * dysz], cout, k, p, scratch);
+        col2im_acc(scratch, cin, in_h, in_w, kh, kw, pad, xslice);
+    });
+    dx
+}
+
+/// Backward-weights conv: gradient w.r.t. the filters, reduced over the
+/// batch with the deterministic chunked tree.
+pub fn conv2d_bwd_weights(
+    x: &Tensor,
+    dy: &Tensor,
+    pad: usize,
+    kh: usize,
+    kw: usize,
+    threads: usize,
+) -> Tensor {
+    let (n, cin, h, w) = x.dims4();
+    let (n2, cout, oh, ow) = dy.dims4();
+    debug_assert_eq!(n, n2);
+    debug_assert_eq!(oh, conv_out_hw(h, kh, pad));
+    let (k, p) = (cin * kh * kw, oh * ow);
+    let (xd, dyd) = (x.data(), dy.data());
+    let (xsz, dysz) = (cin * h * w, cout * p);
+    let dw = par_chunk_reduce(n, cout * k, threads, &|i, partial, scratch| {
+        scratch.resize(k * p, 0.0);
+        im2col(&xd[i * xsz..(i + 1) * xsz], cin, h, w, kh, kw, pad, scratch);
+        // dW (cout, k) += dy_i (cout, p) @ cols (k, p)^T
+        matmul_bt_acc(&dyd[i * dysz..(i + 1) * dysz], scratch, cout, p, k, partial);
+    });
+    Tensor::from_vec(&[cout, cin, kh, kw], dw).expect("conv dw shape")
+}
+
+// ---------------------------------------------------------------------------
+// Max pooling (k x k, stride k, floor mode — nn.MaxPool2d semantics)
+// ---------------------------------------------------------------------------
+
+/// Forward max pool. Returns the pooled tensor and, per output element, the
+/// flat index into `x.data()` of the chosen source (first max on ties).
+pub fn maxpool_fwd(x: &Tensor, k: usize) -> (Tensor, Vec<u32>) {
+    let (n, c, h, w) = x.dims4();
+    let (oh, ow) = (h / k, w / k);
+    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    let mut idx = vec![0u32; n * c * oh * ow];
+    let xd = x.data();
+    let od = out.data_mut();
+    let mut o = 0usize;
+    for ni in 0..n {
+        for ci in 0..c {
+            let base = (ni * c + ci) * h * w;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_at = 0usize;
+                    for dy in 0..k {
+                        let rbase = base + (oy * k + dy) * w + ox * k;
+                        for dx in 0..k {
+                            let v = xd[rbase + dx];
+                            if v > best {
+                                best = v;
+                                best_at = rbase + dx;
+                            }
+                        }
+                    }
+                    od[o] = best;
+                    idx[o] = best_at as u32;
+                    o += 1;
+                }
+            }
+        }
+    }
+    (out, idx)
+}
+
+/// Backward max pool: route `dy` to the recorded argmax positions.
+pub fn maxpool_bwd(dy: &Tensor, idx: &[u32], x_shape: &[usize]) -> Tensor {
+    debug_assert_eq!(dy.len(), idx.len());
+    let mut dx = Tensor::zeros(x_shape);
+    let dxd = dx.data_mut();
+    for (i, &src) in idx.iter().enumerate() {
+        dxd[src as usize] += dy.data()[i];
+    }
+    dx
+}
+
+// ---------------------------------------------------------------------------
+// BatchNorm (no affine scale, bias added post-normalization)
+// ---------------------------------------------------------------------------
+
+/// Forward training-mode BatchNorm outputs + backward cache.
+pub struct BnFwd {
+    /// `xhat + bias` — the GELU pre-activation.
+    pub y: Tensor,
+    /// Normalized input (cached for the backward pass).
+    pub xhat: Tensor,
+    /// Per-channel batch mean.
+    pub mu: Vec<f32>,
+    /// Per-channel `1/sqrt(var + eps)` (biased batch variance).
+    pub ivstd: Vec<f32>,
+    /// Per-channel unbiased batch variance (running-stat update rule).
+    pub var_unbiased: Vec<f32>,
+}
+
+/// Training-mode BatchNorm (PyTorch semantics: normalize by the biased
+/// batch variance; the running update uses the unbiased estimate).
+pub fn bn_train_fwd(x: &Tensor, bias: &[f32], eps: f32) -> BnFwd {
+    let (n, c, h, w) = x.dims4();
+    debug_assert_eq!(bias.len(), c);
+    let cnt = n * h * w;
+    let xd = x.data();
+    let hw = h * w;
+    let mut mu = vec![0.0f32; c];
+    let mut var = vec![0.0f32; c];
+    for ni in 0..n {
+        for ci in 0..c {
+            let base = (ni * c + ci) * hw;
+            let mut s = 0.0f32;
+            for &v in &xd[base..base + hw] {
+                s += v;
+            }
+            mu[ci] += s;
+        }
+    }
+    for m in mu.iter_mut() {
+        *m /= cnt as f32;
+    }
+    for ni in 0..n {
+        for ci in 0..c {
+            let base = (ni * c + ci) * hw;
+            let m = mu[ci];
+            let mut s = 0.0f32;
+            for &v in &xd[base..base + hw] {
+                let d = v - m;
+                s += d * d;
+            }
+            var[ci] += s;
+        }
+    }
+    for v in var.iter_mut() {
+        *v /= cnt as f32;
+    }
+    let var_unbiased: Vec<f32> = var
+        .iter()
+        .map(|&v| v * (cnt as f32 / (cnt.max(2) - 1) as f32))
+        .collect();
+    let ivstd: Vec<f32> = var.iter().map(|&v| 1.0 / (v + eps).sqrt()).collect();
+    let mut xhat = Tensor::zeros(x.shape());
+    let mut y = Tensor::zeros(x.shape());
+    {
+        let xh = xhat.data_mut();
+        let yd = y.data_mut();
+        for ni in 0..n {
+            for ci in 0..c {
+                let base = (ni * c + ci) * hw;
+                let (m, iv, b) = (mu[ci], ivstd[ci], bias[ci]);
+                for i in base..base + hw {
+                    let v = (xd[i] - m) * iv;
+                    xh[i] = v;
+                    yd[i] = v + b;
+                }
+            }
+        }
+    }
+    BnFwd {
+        y,
+        xhat,
+        mu,
+        ivstd,
+        var_unbiased,
+    }
+}
+
+/// Eval-mode BatchNorm against running statistics.
+pub fn bn_eval_fwd(x: &Tensor, bias: &[f32], mean_run: &[f32], var_run: &[f32], eps: f32) -> Tensor {
+    let (n, c, h, w) = x.dims4();
+    let hw = h * w;
+    let mut y = Tensor::zeros(x.shape());
+    let xd = x.data();
+    let yd = y.data_mut();
+    for ni in 0..n {
+        for ci in 0..c {
+            let base = (ni * c + ci) * hw;
+            let iv = 1.0 / (var_run[ci] + eps).sqrt();
+            let (m, b) = (mean_run[ci], bias[ci]);
+            for i in base..base + hw {
+                yd[i] = (xd[i] - m) * iv + b;
+            }
+        }
+    }
+    y
+}
+
+/// Backward through training-mode BatchNorm (scale-free):
+/// `dx = ivstd * (dy - (s1 + xhat*s2)/cnt)`, `dbias = s1`,
+/// with `s1 = sum(dy)`, `s2 = sum(dy * xhat)` per channel.
+pub fn bn_train_bwd(dy: &Tensor, xhat: &Tensor, ivstd: &[f32]) -> (Tensor, Vec<f32>) {
+    let (n, c, h, w) = dy.dims4();
+    let hw = h * w;
+    let cnt = (n * hw) as f32;
+    let (dyd, xh) = (dy.data(), xhat.data());
+    let mut s1 = vec![0.0f32; c];
+    let mut s2 = vec![0.0f32; c];
+    for ni in 0..n {
+        for ci in 0..c {
+            let base = (ni * c + ci) * hw;
+            let (mut a, mut b) = (0.0f32, 0.0f32);
+            for i in base..base + hw {
+                a += dyd[i];
+                b += dyd[i] * xh[i];
+            }
+            s1[ci] += a;
+            s2[ci] += b;
+        }
+    }
+    let mut dx = Tensor::zeros(dy.shape());
+    let dxd = dx.data_mut();
+    for ni in 0..n {
+        for ci in 0..c {
+            let base = (ni * c + ci) * hw;
+            let (iv, a, b) = (ivstd[ci], s1[ci] / cnt, s2[ci] / cnt);
+            for i in base..base + hw {
+                dxd[i] = iv * (dyd[i] - a - xh[i] * b);
+            }
+        }
+    }
+    (dx, s1)
+}
+
+// ---------------------------------------------------------------------------
+// Label-smoothed cross entropy (SUM reduction, Listing 4)
+// ---------------------------------------------------------------------------
+
+/// Loss, accuracy, and `dL/dlogits` in one pass.
+///
+/// `loss = sum_n -(target_n . log_softmax(logits_n))` with
+/// `target = (1-ls)*onehot + ls/k`; the gradient of the sum reduction is
+/// `softmax - target` per row. Accuracy is the batch mean of
+/// `argmax(logits) == label`.
+pub fn ce_loss_grad(logits: &Tensor, labels: &[i32], smoothing: f32) -> (f32, f32, Tensor) {
+    let shape = logits.shape();
+    debug_assert_eq!(shape.len(), 2);
+    let (n, k) = (shape[0], shape[1]);
+    debug_assert_eq!(labels.len(), n);
+    let mut dlogits = Tensor::zeros(&[n, k]);
+    let ld = logits.data();
+    let dd = dlogits.data_mut();
+    let (mut loss, mut correct) = (0.0f32, 0usize);
+    let off_target = smoothing / k as f32;
+    for i in 0..n {
+        let row = &ld[i * k..(i + 1) * k];
+        let mut max = f32::NEG_INFINITY;
+        let mut arg = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > max {
+                max = v;
+                arg = j;
+            }
+        }
+        let label = labels[i] as usize;
+        if arg == label {
+            correct += 1;
+        }
+        let mut z = 0.0f32;
+        for &v in row {
+            z += (v - max).exp();
+        }
+        let logz = z.ln();
+        let drow = &mut dd[i * k..(i + 1) * k];
+        for j in 0..k {
+            let logp = row[j] - max - logz;
+            let target = if j == label {
+                1.0 - smoothing + off_target
+            } else {
+                off_target
+            };
+            loss -= target * logp;
+            drow[j] = logp.exp() - target; // softmax - target
+        }
+    }
+    (loss, correct as f32 / n as f32, dlogits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        for v in t.data_mut() {
+            *v = rng.uniform_in(-1.0, 1.0);
+        }
+        t
+    }
+
+    #[test]
+    fn erf_reference_values() {
+        // erf(0)=0, erf(±inf)=±1, erf(1)=0.8427007, odd symmetry.
+        assert_eq!(erf(0.0), 0.0);
+        assert!((erf(1.0) - 0.842_700_8).abs() < 1e-5);
+        assert!((erf(-1.0) + 0.842_700_8).abs() < 1e-5);
+        assert!((erf(3.5) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn gelu_reference_values() {
+        // gelu(0)=0; gelu(x) ~ x for large x; gelu(-x) small.
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(1.0) - 0.841_345).abs() < 1e-4);
+        assert!((gelu(5.0) - 5.0).abs() < 1e-4);
+        assert!(gelu(-5.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_difference() {
+        for &x in &[-2.0f32, -0.5, 0.0, 0.3, 1.7] {
+            let h = 1e-3f32;
+            let num = (gelu(x + h) - gelu(x - h)) / (2.0 * h);
+            assert!((gelu_grad(x) - num).abs() < 1e-3, "x={x}");
+        }
+    }
+
+    #[test]
+    fn matmul_small_reference() {
+        // A (2x3) @ B (3x2)
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [7.0f32, 8.0, 9.0, 10.0, 11.0, 12.0];
+        let mut c = [0.0f32; 4];
+        matmul_acc(&a, &b, 2, 3, 2, &mut c);
+        assert_eq!(c, [58.0, 64.0, 139.0, 154.0]);
+        // A^T @ D where D (2x2): (3x2)
+        let d = [1.0f32, 0.0, 0.0, 1.0];
+        let mut e = [0.0f32; 6];
+        matmul_at_acc(&a, &d, 2, 3, 2, &mut e);
+        assert_eq!(e, [1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+        // A @ F^T with F (2x3): (2x2)
+        let mut g = [0.0f32; 4];
+        matmul_bt_acc(&a, &a, 2, 3, 2, &mut g);
+        assert_eq!(g, [14.0, 32.0, 32.0, 77.0]);
+    }
+
+    #[test]
+    fn im2col_col2im_are_adjoint() {
+        // <im2col(x), c> == <x, col2im(c)> for random x, c — the defining
+        // property that makes conv2d_bwd_data the true adjoint.
+        let mut rng = Rng::new(7);
+        for &(cin, h, w, kh, pad) in
+            &[(2usize, 5usize, 4usize, 3usize, 1usize), (1, 4, 4, 2, 0), (3, 6, 5, 3, 1)]
+        {
+            let oh = conv_out_hw(h, kh, pad);
+            let ow = conv_out_hw(w, kh, pad);
+            let x = rand_tensor(&mut rng, &[cin, h, w]);
+            let c = rand_tensor(&mut rng, &[cin * kh * kh, oh * ow]);
+            let mut cols = vec![0.0f32; cin * kh * kh * oh * ow];
+            im2col(x.data(), cin, h, w, kh, kh, pad, &mut cols);
+            let mut folded = vec![0.0f32; cin * h * w];
+            col2im_acc(c.data(), cin, h, w, kh, kh, pad, &mut folded);
+            let lhs: f32 = cols.iter().zip(c.data()).map(|(a, b)| a * b).sum();
+            let rhs: f32 = x.data().iter().zip(&folded).map(|(a, b)| a * b).sum();
+            assert!(
+                (lhs - rhs).abs() < 1e-3,
+                "adjoint broken for cin={cin} h={h} w={w} k={kh} pad={pad}: {lhs} vs {rhs}"
+            );
+        }
+    }
+
+    #[test]
+    fn conv_identity_kernel_is_identity() {
+        // 1x1 kernel with weight 1 reproduces the input exactly.
+        let mut rng = Rng::new(3);
+        let x = rand_tensor(&mut rng, &[2, 1, 4, 4]);
+        let w = Tensor::full(&[1, 1, 1, 1], 1.0);
+        let y = conv2d_fwd(&x, &w, 0, 1);
+        assert_eq!(y.data(), x.data());
+    }
+
+    #[test]
+    fn conv_matches_naive_reference() {
+        let mut rng = Rng::new(11);
+        let (n, cin, h, w, cout, k, pad) = (2usize, 3usize, 5usize, 5usize, 4usize, 3usize, 1usize);
+        let x = rand_tensor(&mut rng, &[n, cin, h, w]);
+        let wt = rand_tensor(&mut rng, &[cout, cin, k, k]);
+        let y = conv2d_fwd(&x, &wt, pad, 1);
+        let (oh, ow) = (conv_out_hw(h, k, pad), conv_out_hw(w, k, pad));
+        for ni in 0..n {
+            for co in 0..cout {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc = 0.0f32;
+                        for ci in 0..cin {
+                            for ky in 0..k {
+                                for kx in 0..k {
+                                    let iy = oy as isize + ky as isize - pad as isize;
+                                    let ix = ox as isize + kx as isize - pad as isize;
+                                    if iy >= 0 && ix >= 0 && (iy as usize) < h && (ix as usize) < w
+                                    {
+                                        acc += x.at4(ni, ci, iy as usize, ix as usize)
+                                            * wt.at4(co, ci, ky, kx);
+                                    }
+                                }
+                            }
+                        }
+                        assert!(
+                            (y.at4(ni, co, oy, ox) - acc).abs() < 1e-4,
+                            "mismatch at ({ni},{co},{oy},{ox})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conv_threading_is_bit_identical() {
+        let mut rng = Rng::new(23);
+        let x = rand_tensor(&mut rng, &[9, 3, 8, 8]);
+        let wt = rand_tensor(&mut rng, &[5, 3, 3, 3]);
+        let dy = rand_tensor(&mut rng, &[9, 5, 8, 8]);
+        let y1 = conv2d_fwd(&x, &wt, 1, 1);
+        let dw1 = conv2d_bwd_weights(&x, &dy, 1, 3, 3, 1);
+        let dx1 = conv2d_bwd_data(&dy, &wt, 1, 8, 8, 1);
+        for threads in [2usize, 3, 8] {
+            assert_eq!(y1.data(), conv2d_fwd(&x, &wt, 1, threads).data());
+            assert_eq!(
+                dw1.data(),
+                conv2d_bwd_weights(&x, &dy, 1, 3, 3, threads).data()
+            );
+            assert_eq!(
+                dx1.data(),
+                conv2d_bwd_data(&dy, &wt, 1, 8, 8, threads).data()
+            );
+        }
+    }
+
+    #[test]
+    fn maxpool_fwd_bwd_route() {
+        let x = Tensor::from_vec(
+            &[1, 1, 4, 4],
+            vec![
+                1.0, 2.0, 5.0, 0.0, //
+                3.0, 4.0, 1.0, 1.0, //
+                0.0, 0.0, 9.0, 8.0, //
+                0.0, 7.0, 6.0, 5.0,
+            ],
+        )
+        .unwrap();
+        let (y, idx) = maxpool_fwd(&x, 2);
+        assert_eq!(y.data(), &[4.0, 5.0, 7.0, 9.0]);
+        let dy = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let dx = maxpool_bwd(&dy, &idx, &[1, 1, 4, 4]);
+        assert_eq!(dx.at4(0, 0, 1, 1), 1.0); // 4.0 lives at (1,1)
+        assert_eq!(dx.at4(0, 0, 0, 2), 2.0); // 5.0 at (0,2)
+        assert_eq!(dx.at4(0, 0, 3, 1), 3.0); // 7.0 at (3,1)
+        assert_eq!(dx.at4(0, 0, 2, 2), 4.0); // 9.0 at (2,2)
+        assert_eq!(dx.data().iter().filter(|&&v| v != 0.0).count(), 4);
+    }
+
+    #[test]
+    fn maxpool_floor_mode_drops_remainder() {
+        let x = Tensor::from_vec(&[1, 1, 3, 3], (0..9).map(|i| i as f32).collect()).unwrap();
+        let (y, _) = maxpool_fwd(&x, 2);
+        assert_eq!(y.shape(), &[1, 1, 1, 1]);
+        assert_eq!(y.data(), &[4.0]); // max of the top-left 2x2 block
+    }
+
+    #[test]
+    fn bn_train_normalizes_and_updates_stats() {
+        let mut rng = Rng::new(5);
+        let x = rand_tensor(&mut rng, &[4, 3, 5, 5]);
+        let bias = vec![0.5f32, -0.5, 0.0];
+        let bn = bn_train_fwd(&x, &bias, 1e-12);
+        let (n, c, h, w) = x.dims4();
+        let cnt = (n * h * w) as f32;
+        for ci in 0..c {
+            // xhat has ~zero mean, ~unit variance per channel.
+            let mut s = 0.0f32;
+            let mut s2 = 0.0f32;
+            for ni in 0..n {
+                for y in 0..h {
+                    for xw in 0..w {
+                        let v = bn.xhat.at4(ni, ci, y, xw);
+                        s += v;
+                        s2 += v * v;
+                        // y = xhat + bias
+                        assert!(
+                            (bn.y.at4(ni, ci, y, xw) - (v + bias[ci])).abs() < 1e-6
+                        );
+                    }
+                }
+            }
+            assert!((s / cnt).abs() < 1e-4, "channel {ci} mean {s}");
+            assert!((s2 / cnt - 1.0).abs() < 1e-3, "channel {ci} var");
+            // unbiased > biased variance
+            let biased = 1.0 / (bn.ivstd[ci] * bn.ivstd[ci]);
+            assert!(bn.var_unbiased[ci] > biased - 1e-6);
+        }
+    }
+
+    #[test]
+    fn bn_eval_uses_running_stats() {
+        let x = Tensor::full(&[1, 2, 2, 2], 3.0);
+        let y = bn_eval_fwd(&x, &[0.0, 1.0], &[1.0, 3.0], &[4.0, 1.0], 0.0);
+        // ch0: (3-1)/2 = 1; ch1: (3-3)/1 + 1 = 1
+        assert!(y.data()[..4].iter().all(|&v| (v - 1.0).abs() < 1e-6));
+        assert!(y.data()[4..].iter().all(|&v| (v - 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn ce_loss_uniform_logits_is_ln_k() {
+        // With uniform logits, loss per example = -sum(target * log(1/k)) =
+        // ln(k) regardless of smoothing (targets sum to 1).
+        let n = 4;
+        let k = 10;
+        let logits = Tensor::zeros(&[n, k]);
+        let labels = vec![0i32, 3, 5, 9];
+        let (loss, _acc, dl) = ce_loss_grad(&logits, &labels, 0.2);
+        assert!((loss - n as f32 * (k as f32).ln()).abs() < 1e-4);
+        // gradient rows sum to zero (softmax and target both sum to 1)
+        for i in 0..n {
+            let s: f32 = dl.data()[i * k..(i + 1) * k].iter().sum();
+            assert!(s.abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn ce_accuracy_counts_argmax() {
+        let logits = Tensor::from_vec(
+            &[2, 3],
+            vec![5.0, 1.0, 0.0, /* argmax 0 */ 0.0, 2.0, 7.0 /* argmax 2 */],
+        )
+        .unwrap();
+        let (_, acc, _) = ce_loss_grad(&logits, &[0, 0], 0.2);
+        assert_eq!(acc, 0.5);
+    }
+}

@@ -1,0 +1,317 @@
+//! Built-in variant inventory for the native backend — the Rust port of
+//! `python/compile/model.py`'s `VARIANTS` + `state_specs`.
+//!
+//! The PJRT backend learns a variant's tensor layout from the AOT
+//! `manifest.json`; the native backend needs no artifacts, so the same
+//! layout is constructed here programmatically. The tensor ORDER and the
+//! module input/output order match `aot.py` exactly — a [`Variant`] built
+//! here is interchangeable with a manifest-loaded one, which is what lets
+//! `ModelState` checkpoints and the pjrt/native parity test work.
+
+use crate::runtime::manifest::{Hyper, ModuleSpec, Role, TensorSpec, Variant};
+
+/// Architecture + batch shape of one built-in variant.
+struct NetConfig {
+    name: &'static str,
+    widths: [usize; 3],
+    convs_per_block: usize,
+    residual: bool,
+    bias_scaler: f64,
+    batch_train: usize,
+    batch_eval: usize,
+}
+
+const WHITEN_KERNEL: usize = 2;
+/// 2 * 3 * WHITEN_KERNEL^2 (whitening output channels, §3.2).
+const WHITEN_WIDTH: usize = 24;
+const IMAGE_HW: usize = 32;
+const NUM_CLASSES: usize = 10;
+
+/// The one table both [`builtin_names`] and [`builtin_variant`] read, so
+/// the CLI listing, the tests, and name lookup can never disagree.
+fn configs() -> Vec<NetConfig> {
+    let base = |name, widths, batch_train, batch_eval| NetConfig {
+        name,
+        widths,
+        convs_per_block: 2,
+        residual: false,
+        bias_scaler: 64.0,
+        batch_train,
+        batch_eval,
+    };
+    vec![
+        // CPU-scale testbed variants (modest batches: the native backend
+        // runs on whatever cores exist, not an MXU).
+        base("bench", [16, 32, 32], 64, 64),
+        base("bench_wide", [24, 48, 48], 64, 64),
+        NetConfig {
+            bias_scaler: 1.0,
+            ..base("bench_noscalebias", [16, 32, 32], 64, 64)
+        },
+        NetConfig {
+            convs_per_block: 3,
+            residual: true,
+            ..base("bench96", [16, 32, 32], 64, 64)
+        },
+        // Small-batch twin of `aot.py --tiny` (fast tests).
+        base("bench_tiny", [16, 32, 32], 16, 32),
+        // Smallest trainable topology — integration tests / CI.
+        base("nano", [4, 8, 8], 8, 32),
+        // Paper-scale variants (§3, §4).
+        base("airbench94", [64, 256, 256], 1024, 1000),
+        base("airbench95", [128, 384, 384], 1024, 1000),
+        NetConfig {
+            convs_per_block: 3,
+            residual: true,
+            ..base("airbench96", [128, 512, 512], 1024, 1000)
+        },
+    ]
+}
+
+fn config(name: &str) -> Option<NetConfig> {
+    configs().into_iter().find(|c| c.name == name)
+}
+
+/// Names of all built-in variants (CLI `info` fallback).
+pub fn builtin_names() -> Vec<&'static str> {
+    configs().iter().map(|c| c.name).collect()
+}
+
+/// Flat, ordered state layout: trainables, then frozen, then BN stats —
+/// the wire format shared with `aot.py`'s manifest.
+fn state_specs(cfg: &NetConfig) -> Vec<TensorSpec> {
+    let spec = |name: String, shape: Vec<usize>, role, group: &str| TensorSpec {
+        name,
+        shape,
+        role,
+        group: group.to_string(),
+    };
+    let mut train = vec![spec(
+        "whiten_b".into(),
+        vec![WHITEN_WIDTH],
+        Role::Trainable,
+        "other",
+    )];
+    let mut stats = Vec::new();
+    let mut c_in = WHITEN_WIDTH;
+    for (bi, &width) in cfg.widths.iter().enumerate() {
+        let b = bi + 1;
+        for j in 1..=cfg.convs_per_block {
+            let cin = if j == 1 { c_in } else { width };
+            train.push(spec(
+                format!("block{b}_conv{j}_w"),
+                vec![width, cin, 3, 3],
+                Role::Trainable,
+                "other",
+            ));
+            train.push(spec(
+                format!("block{b}_bn{j}_b"),
+                vec![width],
+                Role::Trainable,
+                "bias",
+            ));
+            stats.push(spec(
+                format!("block{b}_bn{j}_mean"),
+                vec![width],
+                Role::BnStat,
+                "stat",
+            ));
+            stats.push(spec(
+                format!("block{b}_bn{j}_var"),
+                vec![width],
+                Role::BnStat,
+                "stat",
+            ));
+        }
+        c_in = width;
+    }
+    train.push(spec(
+        "head_w".into(),
+        vec![cfg.widths[2], NUM_CLASSES],
+        Role::Trainable,
+        "other",
+    ));
+    let frozen = vec![spec(
+        "whiten_w".into(),
+        vec![WHITEN_WIDTH, 3, WHITEN_KERNEL, WHITEN_KERNEL],
+        Role::Frozen,
+        "other",
+    )];
+    train.into_iter().chain(frozen).chain(stats).collect()
+}
+
+/// Analytic fwd FLOPs per example (2*MAC), mirroring
+/// `model.fwd_flops_per_example` / `kernels.conv.conv_flops`.
+fn fwd_flops(cfg: &NetConfig) -> u64 {
+    let conv = |cin: usize, oh: usize, cout: usize, k: usize| -> u64 {
+        2 * (oh * oh * cout * cin * k * k) as u64
+    };
+    // Feature sizes after whiten conv then each pool: 31, 15, 7, 3.
+    let hw0 = IMAGE_HW - WHITEN_KERNEL + 1;
+    let hw = [hw0, hw0 / 2, hw0 / 4, hw0 / 8];
+    let mut f = conv(3, hw0, WHITEN_WIDTH, WHITEN_KERNEL); // VALID: oh = 31
+    let mut c_in = WHITEN_WIDTH;
+    for (bi, &width) in cfg.widths.iter().enumerate() {
+        let h_pre = hw[bi]; // conv1 runs at pre-pool resolution
+        let h_post = hw[bi + 1];
+        f += conv(c_in, h_pre, width, 3);
+        for _ in 0..cfg.convs_per_block - 1 {
+            f += conv(width, h_post, width, 3);
+        }
+        c_in = width;
+    }
+    f + 2 * (cfg.widths[2] * NUM_CLASSES) as u64
+}
+
+/// Build the full [`Variant`] for a built-in name (`None` if unknown).
+pub fn builtin_variant(name: &str) -> Option<Variant> {
+    let cfg = config(name)?;
+    let tensors = state_specs(&cfg);
+    let trainable: Vec<&TensorSpec> =
+        tensors.iter().filter(|t| t.role == Role::Trainable).collect();
+    let frozen: Vec<&TensorSpec> = tensors.iter().filter(|t| t.role == Role::Frozen).collect();
+    let stats: Vec<&TensorSpec> = tensors.iter().filter(|t| t.role == Role::BnStat).collect();
+    let names = |specs: &[&TensorSpec]| -> Vec<String> {
+        specs.iter().map(|s| s.name.clone()).collect()
+    };
+    let mut train_inputs = names(&trainable);
+    train_inputs.extend(trainable.iter().map(|s| format!("m_{}", s.name)));
+    train_inputs.extend(names(&frozen));
+    train_inputs.extend(names(&stats));
+    train_inputs.extend(
+        ["images", "labels", "lr", "wd_over_lr", "whiten_bias_on"]
+            .map(String::from),
+    );
+    let mut train_outputs = names(&trainable);
+    train_outputs.extend(trainable.iter().map(|s| format!("m_{}", s.name)));
+    train_outputs.extend(names(&stats));
+    train_outputs.extend(["loss", "acc"].map(String::from));
+    let mut eval_inputs = names(&trainable);
+    eval_inputs.extend(names(&frozen));
+    eval_inputs.extend(names(&stats));
+    eval_inputs.push("images".into());
+
+    let param_count = tensors
+        .iter()
+        .filter(|t| t.role != Role::BnStat)
+        .map(|t| t.numel())
+        .sum();
+    Some(Variant {
+        name: cfg.name.to_string(),
+        batch_train: cfg.batch_train,
+        batch_eval: cfg.batch_eval,
+        image_hw: IMAGE_HW,
+        num_classes: NUM_CLASSES,
+        param_count,
+        fwd_flops_per_example: fwd_flops(&cfg),
+        hyper: Hyper {
+            widths: cfg.widths.to_vec(),
+            convs_per_block: cfg.convs_per_block,
+            residual: cfg.residual,
+            whiten_kernel: WHITEN_KERNEL,
+            whiten_width: WHITEN_WIDTH,
+            scaling_factor: 1.0 / 9.0,
+            bn_momentum: 0.6,
+            bn_eps: 1e-12,
+            momentum: 0.85,
+            bias_scaler: cfg.bias_scaler,
+            label_smoothing: 0.2,
+        },
+        tensors,
+        train: ModuleSpec {
+            file: format!("<native:{name}:train>"),
+            inputs: train_inputs,
+            outputs: train_outputs,
+        },
+        eval: ModuleSpec {
+            file: format!("<native:{name}:eval>"),
+            inputs: eval_inputs,
+            outputs: vec!["logits".into()],
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_matches_python_layout() {
+        let v = builtin_variant("bench").unwrap();
+        // 1 whiten_b + 3 blocks x 2 x (conv_w + bn_b) + head_w = 14
+        // trainables; 1 frozen; 12 stats.
+        assert_eq!(v.trainable().count(), 14);
+        assert_eq!(v.frozen().count(), 1);
+        assert_eq!(v.bn_stats().count(), 12);
+        // wire order: trainables, frozen, stats
+        let roles: Vec<Role> = v.tensors.iter().map(|t| t.role).collect();
+        let first_frozen = roles.iter().position(|r| *r == Role::Frozen).unwrap();
+        assert!(roles[..first_frozen].iter().all(|r| *r == Role::Trainable));
+        assert!(roles[first_frozen + 1..].iter().all(|r| *r == Role::BnStat));
+        // inputs: 14 + 14 momenta + 1 frozen + 12 stats + 5 scalars/io
+        assert_eq!(v.train.inputs.len(), 14 + 14 + 1 + 12 + 5);
+        assert_eq!(v.train.outputs.len(), 14 + 14 + 12 + 2);
+        assert_eq!(v.eval.inputs.len(), 14 + 1 + 12 + 1);
+        // shapes
+        assert_eq!(v.tensor("block1_conv1_w").unwrap().shape, vec![16, 24, 3, 3]);
+        assert_eq!(v.tensor("block1_conv2_w").unwrap().shape, vec![16, 16, 3, 3]);
+        assert_eq!(v.tensor("block2_conv1_w").unwrap().shape, vec![32, 16, 3, 3]);
+        assert_eq!(v.tensor("head_w").unwrap().shape, vec![32, 10]);
+        assert!(v.tensor("block1_bn1_b").unwrap().is_bn_bias());
+        assert!(!v.tensor("whiten_b").unwrap().is_bn_bias());
+    }
+
+    #[test]
+    fn param_count_matches_hand_sum() {
+        let v = builtin_variant("bench").unwrap();
+        // whiten_b 24 + whiten_w 24*3*2*2 + head_w 32*10
+        // block1: 16*24*9 + 16 + 16*16*9 + 16
+        // block2: 32*16*9 + 32 + 32*32*9 + 32
+        // block3: 32*32*9 + 32 + 32*32*9 + 32
+        let expect = 24
+            + 24 * 3 * 4
+            + 320
+            + (16 * 24 * 9 + 16 + 16 * 16 * 9 + 16)
+            + (32 * 16 * 9 + 32 + 32 * 32 * 9 + 32)
+            + (32 * 32 * 9 + 32 + 32 * 32 * 9 + 32);
+        assert_eq!(v.param_count, expect);
+    }
+
+    #[test]
+    fn fwd_flops_matches_python_formula() {
+        // Recompute model.fwd_flops_per_example("bench") by hand:
+        // whiten: 2*31*31*24*3*4; b1c1: 2*31^2*16*24*9; b1c2: 2*15^2*16*16*9;
+        // b2c1: 2*15^2*32*16*9; b2c2: 2*7^2*32*32*9; b3c1: 2*7^2*32*32*9;
+        // b3c2: 2*3^2*32*32*9; head: 2*32*10.
+        let v = builtin_variant("bench").unwrap();
+        let expect: u64 = 2 * 31 * 31 * 24 * 3 * 4
+            + 2 * 31 * 31 * 16 * 24 * 9
+            + 2 * 15 * 15 * 16 * 16 * 9
+            + 2 * 15 * 15 * 32 * 16 * 9
+            + 2 * 7 * 7 * 32 * 32 * 9
+            + 2 * 7 * 7 * 32 * 32 * 9
+            + 2 * 3 * 3 * 32 * 32 * 9
+            + 2 * 32 * 10;
+        assert_eq!(v.fwd_flops_per_example, expect);
+    }
+
+    #[test]
+    fn residual_variant_has_three_convs() {
+        let v = builtin_variant("bench96").unwrap();
+        assert!(v.hyper.residual);
+        assert_eq!(v.hyper.convs_per_block, 3);
+        assert!(v.tensor("block1_conv3_w").is_some());
+        assert_eq!(v.tensor("block1_conv3_w").unwrap().shape, vec![16, 16, 3, 3]);
+    }
+
+    #[test]
+    fn every_builtin_builds() {
+        for name in builtin_names() {
+            let v = builtin_variant(name).unwrap();
+            assert_eq!(v.name, name);
+            assert!(v.param_count > 0);
+            assert!(v.batch_train > 0 && v.batch_eval > 0);
+        }
+        assert!(builtin_variant("nope").is_none());
+    }
+}

@@ -1,5 +1,5 @@
-//! PJRT execution engine: loads the AOT HLO-text artifacts and runs the
-//! compiled train/eval steps from the Rust hot path.
+//! PJRT backend: loads the AOT HLO-text artifacts and runs the compiled
+//! train/eval steps behind the [`Backend`] seam.
 //!
 //! Wire protocol (see `python/compile/aot.py`):
 //! * modules are lowered with `return_tuple=True`, so every execution
@@ -15,37 +15,19 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
+use crate::runtime::backend::{
+    check_eval_batch, check_train_batch, Backend, BackendStats, StepOutput,
+};
 use crate::runtime::manifest::{Manifest, Variant};
 use crate::runtime::state::ModelState;
 use crate::tensor::Tensor;
 
-/// Scalar results of one training step.
-#[derive(Clone, Copy, Debug)]
-pub struct StepOutput {
-    /// Sum-reduced label-smoothed cross entropy over the batch (Listing 4).
-    pub loss: f32,
-    /// Training accuracy of this batch.
-    pub acc: f32,
-}
-
-/// Wall-clock accounting of engine activity (feeds the §Perf bench).
-#[derive(Clone, Copy, Debug, Default)]
-pub struct EngineStats {
-    pub train_steps: u64,
-    pub eval_calls: u64,
-    /// Seconds spent inside PJRT `execute` for train steps.
-    pub train_exec_secs: f64,
-    /// Seconds spent packing/unpacking literals for train steps.
-    pub train_marshal_secs: f64,
-    pub compile_secs: f64,
-}
-
 /// A compiled model variant bound to a PJRT client.
-pub struct Engine {
+pub struct PjrtBackend {
     variant: Variant,
     train_exe: PjRtLoadedExecutable,
     eval_exe: PjRtLoadedExecutable,
-    pub stats: EngineStats,
+    pub stats: BackendStats,
 }
 
 fn tensor_literal(t: &Tensor) -> Result<Literal> {
@@ -63,23 +45,27 @@ fn compile(client: &PjRtClient, manifest: &Manifest, file: &str) -> Result<PjRtL
         .with_context(|| format!("compiling {file}"))
 }
 
-impl Engine {
+impl PjrtBackend {
     /// Compile the train + eval modules of `variant_name` on a PJRT CPU
     /// client. Compilation happens once; steps after this are pure Rust +
     /// compiled code (the paper's "warmup then many runs" model, §3.7).
-    pub fn load(client: &PjRtClient, manifest: &Manifest, variant_name: &str) -> Result<Engine> {
+    pub fn load(
+        client: &PjRtClient,
+        manifest: &Manifest,
+        variant_name: &str,
+    ) -> Result<PjrtBackend> {
         let variant = manifest.variant(variant_name)?.clone();
         let t0 = Instant::now();
         let train_exe = compile(client, manifest, &variant.train.file)?;
         let eval_exe = compile(client, manifest, &variant.eval.file)?;
         let compile_secs = t0.elapsed().as_secs_f64();
-        Ok(Engine {
+        Ok(PjrtBackend {
             variant,
             train_exe,
             eval_exe,
-            stats: EngineStats {
+            stats: BackendStats {
                 compile_secs,
-                ..EngineStats::default()
+                ..BackendStats::default()
             },
         })
     }
@@ -106,14 +92,8 @@ impl Engine {
         wd_over_lr: f32,
         whiten_bias_on: bool,
     ) -> Result<StepOutput> {
+        check_train_batch(&self.variant, images, labels)?;
         let b = self.variant.batch_train;
-        if images.shape()[0] != b || labels.len() != b {
-            bail!(
-                "train batch must be exactly {b} (lowered shape); got images {:?}, {} labels",
-                images.shape(),
-                labels.len()
-            );
-        }
         let m0 = Instant::now();
         let mut args: Vec<Literal> = Vec::with_capacity(self.variant.train.inputs.len());
         for name in &self.variant.train.inputs {
@@ -193,13 +173,9 @@ impl Engine {
     /// num_classes)` logits. Callers pad partial batches (see
     /// `coordinator::evaluator`).
     pub fn eval_logits(&mut self, state: &ModelState, images: &Tensor) -> Result<Tensor> {
+        check_eval_batch(&self.variant, images)?;
         let b = self.variant.batch_eval;
-        if images.shape()[0] != b {
-            bail!(
-                "eval batch must be exactly {b} (lowered shape); got {:?}",
-                images.shape()
-            );
-        }
+        let m0 = Instant::now();
         let mut args: Vec<Literal> = Vec::with_capacity(self.variant.eval.inputs.len());
         for name in &self.variant.eval.inputs {
             if name == "images" {
@@ -208,11 +184,54 @@ impl Engine {
                 args.push(tensor_literal(state.get(name)?)?);
             }
         }
+        let marshal_in = m0.elapsed().as_secs_f64();
+
+        let e0 = Instant::now();
         let result = self.eval_exe.execute::<Literal>(&args)?[0][0].to_literal_sync()?;
+        let exec = e0.elapsed().as_secs_f64();
+
+        let m1 = Instant::now();
         let logits = result.to_tuple1()?;
         let vals = logits.to_vec::<f32>()?;
+        let out = Tensor::from_vec(&[b, self.variant.num_classes], vals)?;
         self.stats.eval_calls += 1;
-        Tensor::from_vec(&[b, self.variant.num_classes], vals)
+        self.stats.eval_exec_secs += exec;
+        self.stats.eval_marshal_secs += marshal_in + m1.elapsed().as_secs_f64();
+        Ok(out)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn variant(&self) -> &Variant {
+        &self.variant
+    }
+
+    fn train_step(
+        &mut self,
+        state: &mut ModelState,
+        images: &Tensor,
+        labels: &[i32],
+        lr: f32,
+        wd_over_lr: f32,
+        whiten_bias_on: bool,
+    ) -> Result<StepOutput> {
+        PjrtBackend::train_step(self, state, images, labels, lr, wd_over_lr, whiten_bias_on)
+    }
+
+    fn eval_logits(&mut self, state: &ModelState, images: &Tensor) -> Result<Tensor> {
+        PjrtBackend::eval_logits(self, state, images)
+    }
+
+    fn stats(&self) -> &BackendStats {
+        &self.stats
+    }
+
+    fn stats_mut(&mut self) -> &mut BackendStats {
+        &mut self.stats
     }
 }
 
@@ -223,7 +242,7 @@ pub fn cpu_client() -> Result<PjRtClient> {
 
 #[cfg(test)]
 mod tests {
-    //! Engine tests live in `tests/runtime_integration.rs` (they need the
+    //! Backend tests live in `tests/runtime_integration.rs` (they need the
     //! built artifacts and a PJRT client, which is process-global state);
     //! here we only test the pure helpers.
     use super::*;
