@@ -5,14 +5,20 @@
 //! counts. The two are bit-identical (tests/pipeline_equivalence.rs), so
 //! this is a pure throughput comparison of the same work.
 //!
-//! Part B (always runs, via the backend seam): train-step execution and
+//! Part B (host-only, always runs): the native conv kernels — the naive
+//! im2col + matmul reference path vs the blocked, register-tiled implicit
+//! GEMM (DESIGN.md §2.1) on the bench-variant layer shapes, fwd + both
+//! backward passes. This is the kernel-level speedup BENCHMARKS.md tracks.
+//!
+//! Part C (always runs, via the backend seam): train-step execution and
 //! marshal overhead, eval throughput per TTA level (with the eval marshal
 //! share), whitening init, and the §3.7 compile-cost amortization table.
 //! Runs on the PJRT backend when artifacts + runtime exist, else on the
 //! pure-Rust native backend; when PJRT is skipped the reason is printed,
 //! distinguishing "artifacts not built" from "runtime unavailable".
 //!
-//! Feeds the before/after table in EXPERIMENTS.md §Perf.
+//! Feeds the before/after table in EXPERIMENTS.md §Perf; the `bench` CLI
+//! subcommand is the *persistent* harness that records the trajectory.
 
 use airbench::config::{TrainConfig, TtaLevel};
 use airbench::coordinator::evaluator::evaluate;
@@ -20,6 +26,8 @@ use airbench::data::loader::{Loader, OrderPolicy};
 use airbench::data::pipeline::Pipeline;
 use airbench::data::synthetic::{cifar_like, SynthConfig};
 use airbench::experiments::{DataKind, Lab};
+use airbench::rng::Rng;
+use airbench::runtime::native::ops;
 use airbench::runtime::{Backend, InitConfig, ModelState, PjrtStatus};
 use airbench::tensor::Tensor;
 use airbench::util::benchmark::Bench;
@@ -77,6 +85,91 @@ fn bench_data_pipeline() {
             sync.mean_secs() / s.mean_secs()
         );
     }
+}
+
+/// Naive im2col+matmul reference vs the blocked implicit-GEMM kernels on
+/// the bench-variant conv layers (fwd + bwd_data + bwd_weights, batch 16).
+fn bench_conv_kernels() {
+    let mut rng = Rng::new(0xC0DE);
+    let mut rand_tensor = |shape: &[usize]| {
+        let mut t = Tensor::zeros(shape);
+        for v in t.data_mut() {
+            *v = rng.uniform_in(-1.0, 1.0);
+        }
+        t
+    };
+    let batch = 16usize;
+    let threads = 1usize; // kernel comparison, not a threading benchmark
+    println!("\nconv kernels: naive im2col reference vs blocked implicit GEMM");
+    let bench = Bench::new(1, 3);
+    let mut total_naive = 0.0f64;
+    let mut total_blocked = 0.0f64;
+    // (cin, h, cout, k, pad) — the bench-variant layer shapes.
+    for &(cin, h, cout, k, pad) in &[
+        (3usize, 32usize, 24usize, 2usize, 0usize),
+        (24, 31, 16, 3, 1),
+        (16, 15, 16, 3, 1),
+        (16, 15, 32, 3, 1),
+        (32, 7, 32, 3, 1),
+        (32, 3, 32, 3, 1),
+    ] {
+        let oh = h + 2 * pad - k + 1;
+        let x = rand_tensor(&[batch, cin, h, h]);
+        let wt = rand_tensor(&[cout, cin, k, k]);
+        let dy = rand_tensor(&[batch, cout, oh, oh]);
+        let has_bwd = k == 3;
+        let kd = cin * k * k;
+        let p = oh * oh;
+        let naive = bench.run(&format!("naive   conv cin={cin:<2} h={h:<2} cout={cout}"), || {
+            // the PR 2 path: materialized im2col + naive matmuls
+            let mut out = vec![0.0f32; batch * cout * p];
+            let mut cols = vec![0.0f32; kd * p];
+            for i in 0..batch {
+                ops::im2col(x.image(i), cin, h, h, k, k, pad, &mut cols);
+                ops::matmul_acc(wt.data(), &cols, cout, kd, p, &mut out[i * cout * p..(i + 1) * cout * p]);
+            }
+            if has_bwd {
+                let mut dxv = vec![0.0f32; batch * cin * h * h];
+                let mut dcols = vec![0.0f32; kd * p];
+                for i in 0..batch {
+                    dcols.fill(0.0);
+                    ops::matmul_at_acc(wt.data(), &dy.data()[i * cout * p..(i + 1) * cout * p], cout, kd, p, &mut dcols);
+                    ops::col2im_acc(&dcols, cin, h, h, k, k, pad, &mut dxv[i * cin * h * h..(i + 1) * cin * h * h]);
+                }
+                let mut dw = vec![0.0f32; cout * kd];
+                for i in 0..batch {
+                    ops::im2col(x.image(i), cin, h, h, k, k, pad, &mut cols);
+                    ops::matmul_bt_acc(&dy.data()[i * cout * p..(i + 1) * cout * p], &cols, cout, p, kd, &mut dw);
+                }
+                std::hint::black_box((dxv, dw));
+            }
+            out
+        });
+        let blocked = bench.run(&format!("blocked conv cin={cin:<2} h={h:<2} cout={cout}"), || {
+            let out = ops::conv2d_fwd(&x, &wt, pad, threads);
+            if has_bwd {
+                let dx = ops::conv2d_bwd_data(&dy, &wt, pad, h, h, threads);
+                let dw = ops::conv2d_bwd_weights(&x, &dy, pad, k, k, threads);
+                std::hint::black_box((dx, dw));
+            }
+            out
+        });
+        let flops = 2.0 * (batch * cout * kd * p) as f64 * if has_bwd { 3.0 } else { 1.0 };
+        println!(
+            "  -> {:.2}x blocked speedup ({:.2} -> {:.2} GFLOP/s)",
+            naive.mean_secs() / blocked.mean_secs(),
+            flops / naive.mean_secs() / 1e9,
+            flops / blocked.mean_secs() / 1e9,
+        );
+        total_naive += naive.mean_secs();
+        total_blocked += blocked.mean_secs();
+    }
+    println!(
+        "  => all conv work: naive {:.1} ms, blocked {:.1} ms, {:.2}x",
+        1e3 * total_naive,
+        1e3 * total_blocked,
+        total_naive / total_blocked
+    );
 }
 
 fn bench_backend(lab: &mut Lab) -> anyhow::Result<()> {
@@ -172,6 +265,7 @@ fn bench_backend(lab: &mut Lab) -> anyhow::Result<()> {
 
 fn main() -> anyhow::Result<()> {
     bench_data_pipeline();
+    bench_conv_kernels();
     let mut lab = Lab::new()?;
     bench_backend(&mut lab)
 }

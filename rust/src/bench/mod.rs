@@ -1,0 +1,492 @@
+//! The persistent benchmark harness: the paper's §3.7 timing protocol
+//! ("warm up once, then time many runs") against any [`Backend`], with
+//! per-phase medians and seed-distribution statistics, written as
+//! machine-readable `BENCH_<tag>.json` at the repository root so every PR
+//! appends a comparable point to the perf trajectory (BENCHMARKS.md).
+//!
+//! Two measurement granularities per run seed:
+//!
+//! * **micro** — `steps` individually-timed train steps on a fixed batch
+//!   (reported as the per-run *median* step time, so one descheduling
+//!   hiccup cannot move the number), plus the init phase (state init +
+//!   whitening statistics) and one full TTA evaluation;
+//! * **macro** — one complete training run through
+//!   [`crate::coordinator::train_full`], broken into the paper-protocol
+//!   phases via [`PhaseTimes`].
+//!
+//! Each metric is reported as a distribution over `runs` seeds
+//! (mean/std/min/max/median + raw per-run values): run-to-run variance is
+//! real (Picard, arXiv 2109.08203) and a single-run number would regularly
+//! mislead by more than the effects we tune for. Everything runs on the
+//! deterministic synthetic CIFAR proxy, so the harness needs no artifacts,
+//! no downloads, and produces comparable numbers on any machine.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::coordinator::trainer::PhaseTimes;
+use crate::coordinator::{evaluate, train_full, warmup};
+use crate::data::synthetic::{cifar_like, SynthConfig};
+use crate::runtime::{create_default_backend, Backend, BackendKind, InitConfig};
+use crate::stats::basic::Summary;
+use crate::util::json::Json;
+
+/// Schema identifier written into (and required from) every `BENCH_*.json`.
+pub const SCHEMA: &str = "airbench.bench/1";
+
+/// Harness configuration (CLI: `airbench bench [--runs N] [--steps N] ...`).
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Variant to execute (built-in native table or AOT manifest).
+    pub variant: String,
+    /// Backend selection; `Auto` resolves exactly like the trainer.
+    pub backend: BackendKind,
+    /// Tag for the output file name `BENCH_<tag>.json`; defaults to
+    /// `<backend>_<variant>` of the backend actually constructed.
+    pub tag: Option<String>,
+    /// Untimed warmup runs before any measurement (§3.7: compilation and
+    /// one-time lazy costs are paid here).
+    pub warmup_runs: usize,
+    /// Timed runs; run `r` uses seed `r` (the seed distribution).
+    pub runs: usize,
+    /// Individually-timed train steps per run in the micro phase.
+    pub steps: usize,
+    /// Epochs of the macro (full-run) phase.
+    pub epochs: f64,
+    /// Synthetic training-set size (clamped up to two train batches).
+    pub train_n: usize,
+    /// Synthetic test-set size (clamped up to one eval batch).
+    pub test_n: usize,
+    /// Data-pipeline workers for the macro phase (0 = synchronous).
+    pub workers: usize,
+    /// Directory the JSON report is written to (repo root by convention).
+    pub out_dir: PathBuf,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            variant: "bench".into(),
+            backend: BackendKind::Auto,
+            tag: None,
+            warmup_runs: 1,
+            runs: 5,
+            steps: 30,
+            epochs: 1.0,
+            train_n: 2048,
+            test_n: 512,
+            workers: 0,
+            out_dir: PathBuf::from("."),
+        }
+    }
+}
+
+/// One metric's distribution over the run seeds.
+#[derive(Clone, Debug, Default)]
+pub struct Dist {
+    /// Raw per-run values, in run (= seed) order.
+    pub per_run: Vec<f64>,
+}
+
+impl Dist {
+    /// Mean/std/min/max over the runs.
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.per_run)
+    }
+
+    /// Median over the runs (the headline number of every phase).
+    pub fn median(&self) -> f64 {
+        if self.per_run.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.per_run.clone();
+        v.sort_by(f64::total_cmp);
+        let n = v.len();
+        if n % 2 == 1 {
+            v[n / 2]
+        } else {
+            0.5 * (v[n / 2 - 1] + v[n / 2])
+        }
+    }
+
+    fn push(&mut self, x: f64) {
+        self.per_run.push(x);
+    }
+
+    fn to_json(&self) -> Json {
+        let s = self.summary();
+        Json::obj(vec![
+            ("n", Json::num(s.n as f64)),
+            ("mean", Json::num(s.mean)),
+            ("std", Json::num(s.std)),
+            ("min", Json::num(s.min)),
+            ("max", Json::num(s.max)),
+            ("median", Json::num(self.median())),
+            (
+                "per_run",
+                Json::Arr(self.per_run.iter().map(|&x| Json::num(x)).collect()),
+            ),
+        ])
+    }
+}
+
+/// Everything one harness invocation measured.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// File tag (`BENCH_<tag>.json`).
+    pub tag: String,
+    /// Name of the backend actually constructed (`"native"` / `"pjrt"`).
+    pub backend_name: String,
+    /// Variant executed.
+    pub variant: String,
+    /// Train batch size of the variant.
+    pub batch_train: usize,
+    /// Protocol knobs, echoed for reproducibility.
+    pub config: BenchConfig,
+    /// Native kernel threads in effect during the measurement (0 when the
+    /// measured backend is not the native one — the knob does not apply).
+    pub threads: usize,
+    /// Micro phase: per-run *median* train-step milliseconds.
+    pub step_ms: Dist,
+    /// Micro phase: state init + whitening milliseconds.
+    pub init_ms: Dist,
+    /// Micro phase: one full TTA evaluation, milliseconds.
+    pub eval_ms: Dist,
+    /// Macro phase: paper-protocol full-run seconds.
+    pub run_s: Dist,
+    /// Macro phase: step-loop share of the run, seconds.
+    pub run_train_s: Dist,
+    /// Macro phase: final-eval share of the run, seconds.
+    pub run_eval_s: Dist,
+    /// Macro phase: final accuracy per run (sanity floor, not a perf metric).
+    pub run_acc: Dist,
+    /// Analytic FLOPs of one train step (3x forward rule).
+    pub flops_per_step: f64,
+    /// Cumulative backend accounting over the whole harness invocation.
+    pub stats: crate::runtime::BackendStats,
+}
+
+impl Report {
+    /// Effective GFLOP/s of the median micro train step.
+    pub fn train_gflops(&self) -> f64 {
+        let ms = self.step_ms.median();
+        if ms > 0.0 {
+            self.flops_per_step / (ms * 1e-3) / 1e9
+        } else {
+            0.0
+        }
+    }
+
+    /// The machine-readable report (schema documented in BENCHMARKS.md).
+    pub fn to_json(&self) -> Json {
+        let c = &self.config;
+        let seeds: Vec<Json> = (0..c.runs).map(|r| Json::num(r as f64)).collect();
+        Json::obj(vec![
+            ("schema", Json::str(SCHEMA)),
+            ("tag", Json::str(&self.tag)),
+            ("backend", Json::str(&self.backend_name)),
+            ("variant", Json::str(&self.variant)),
+            (
+                "created_unix",
+                Json::num(
+                    std::time::SystemTime::now()
+                        .duration_since(std::time::UNIX_EPOCH)
+                        .map(|d| d.as_secs() as f64)
+                        .unwrap_or(0.0),
+                ),
+            ),
+            (
+                "protocol",
+                Json::obj(vec![
+                    ("warmup_runs", Json::num(c.warmup_runs as f64)),
+                    ("runs", Json::num(c.runs as f64)),
+                    ("seeds", Json::Arr(seeds)),
+                    ("steps_per_run", Json::num(c.steps as f64)),
+                    ("epochs", Json::num(c.epochs)),
+                    ("train_n", Json::num(c.train_n as f64)),
+                    ("test_n", Json::num(c.test_n as f64)),
+                    ("batch_train", Json::num(self.batch_train as f64)),
+                    ("data", Json::str("synthetic-cifar")),
+                ]),
+            ),
+            (
+                "env",
+                Json::obj(vec![
+                    ("threads", Json::num(self.threads as f64)),
+                    ("workers", Json::num(c.workers as f64)),
+                    ("os", Json::str(std::env::consts::OS)),
+                    ("arch", Json::str(std::env::consts::ARCH)),
+                ]),
+            ),
+            (
+                "phases",
+                Json::obj(vec![
+                    ("train_step_ms", self.step_ms.to_json()),
+                    ("init_ms", self.init_ms.to_json()),
+                    ("eval_ms", self.eval_ms.to_json()),
+                    ("run_s", self.run_s.to_json()),
+                    ("run_train_s", self.run_train_s.to_json()),
+                    ("run_eval_s", self.run_eval_s.to_json()),
+                    ("run_acc", self.run_acc.to_json()),
+                ]),
+            ),
+            (
+                "derived",
+                Json::obj(vec![
+                    ("flops_per_step", Json::num(self.flops_per_step)),
+                    ("train_gflops", Json::num(self.train_gflops())),
+                    (
+                        "train_img_per_s",
+                        Json::num(if self.step_ms.median() > 0.0 {
+                            self.batch_train as f64 / (self.step_ms.median() * 1e-3)
+                        } else {
+                            0.0
+                        }),
+                    ),
+                ]),
+            ),
+            (
+                "backend_stats",
+                Json::obj(vec![
+                    ("train_steps", Json::num(self.stats.train_steps as f64)),
+                    ("eval_calls", Json::num(self.stats.eval_calls as f64)),
+                    ("train_exec_secs", Json::num(self.stats.train_exec_secs)),
+                    ("train_marshal_secs", Json::num(self.stats.train_marshal_secs)),
+                    ("eval_exec_secs", Json::num(self.stats.eval_exec_secs)),
+                    ("eval_marshal_secs", Json::num(self.stats.eval_marshal_secs)),
+                    ("compile_secs", Json::num(self.stats.compile_secs)),
+                    (
+                        "train_marshal_share",
+                        Json::num(self.stats.train_marshal_share()),
+                    ),
+                    ("eval_marshal_share", Json::num(self.stats.eval_marshal_share())),
+                ]),
+            ),
+        ])
+    }
+
+    /// Write `BENCH_<tag>.json` into `dir`; returns the path. The emitted
+    /// document is validated against the schema before writing, so a
+    /// harness bug cannot poison the committed trajectory.
+    pub fn write(&self, dir: &Path) -> Result<PathBuf> {
+        let j = self.to_json();
+        validate(&j).context("harness produced a schema-invalid report")?;
+        let path = dir.join(format!("BENCH_{}.json", self.tag));
+        std::fs::write(&path, j.to_pretty_string())
+            .with_context(|| format!("writing {path:?}"))?;
+        Ok(path)
+    }
+}
+
+/// Validate a `BENCH_*.json` document against the [`SCHEMA`] contract:
+/// required keys, types, and per-phase distribution consistency
+/// (`per_run.len() == n`, all values finite). Used by the harness before
+/// writing and by the schema smoke test on committed baselines.
+pub fn validate(j: &Json) -> Result<()> {
+    let schema = j.get("schema")?.as_str()?;
+    if schema != SCHEMA {
+        bail!("unknown bench schema '{schema}' (want '{SCHEMA}')");
+    }
+    for key in ["tag", "backend", "variant"] {
+        let s = j.get(key)?.as_str()?;
+        if s.is_empty() {
+            bail!("'{key}' must be a non-empty string");
+        }
+    }
+    j.get("created_unix")?.as_f64()?;
+    let proto = j.get("protocol")?;
+    let runs = proto.get("runs")?.as_usize()?;
+    if runs == 0 {
+        bail!("protocol.runs must be >= 1");
+    }
+    if proto.get("seeds")?.as_arr()?.len() != runs {
+        bail!("protocol.seeds length must equal protocol.runs");
+    }
+    for key in ["warmup_runs", "steps_per_run", "train_n", "test_n", "batch_train"] {
+        proto.get(key)?.as_f64()?;
+    }
+    let env = j.get("env")?;
+    env.get("threads")?.as_usize()?;
+    env.get("os")?.as_str()?;
+    env.get("arch")?.as_str()?;
+    let phases = j.get("phases")?.as_obj()?;
+    for key in [
+        "train_step_ms",
+        "init_ms",
+        "eval_ms",
+        "run_s",
+        "run_train_s",
+        "run_eval_s",
+        "run_acc",
+    ] {
+        let d = phases
+            .get(key)
+            .with_context(|| format!("missing phase '{key}'"))?;
+        let n = d.get("n")?.as_usize()?;
+        if n != runs {
+            bail!("phase '{key}': n {n} != protocol.runs {runs}");
+        }
+        let per_run = d.get("per_run")?.as_arr()?;
+        if per_run.len() != n {
+            bail!("phase '{key}': per_run length {} != n {n}", per_run.len());
+        }
+        for stat in ["mean", "std", "min", "max", "median"] {
+            let x = d.get(stat)?.as_f64()?;
+            if !x.is_finite() {
+                bail!("phase '{key}': {stat} is not finite");
+            }
+        }
+        for v in per_run {
+            if !v.as_f64()?.is_finite() {
+                bail!("phase '{key}': non-finite per_run entry");
+            }
+        }
+    }
+    let derived = j.get("derived")?;
+    derived.get("train_gflops")?.as_f64()?;
+    let bs = j.get("backend_stats")?;
+    for key in ["train_steps", "train_exec_secs", "compile_secs"] {
+        bs.get(key)?.as_f64()?;
+    }
+    Ok(())
+}
+
+/// Run the full protocol described by `cfg` and return the report (the
+/// caller decides whether to [`Report::write`] it).
+pub fn run(cfg: &BenchConfig) -> Result<Report> {
+    let mut engine = create_default_backend(cfg.backend, &cfg.variant)?;
+    let engine = engine.as_mut();
+    let batch = engine.batch_train();
+    let hw = engine.variant().image_hw;
+    let train_n = cfg.train_n.max(2 * batch);
+    let test_n = cfg.test_n.max(engine.batch_eval());
+    // Generated at the variant's resolution, so the micro-phase batch copy
+    // below can never silently mismatch.
+    let synth = |n: usize| SynthConfig { n, hw, ..SynthConfig::default() };
+    let train_ds = cifar_like(&synth(train_n), 0xBE9C, 0);
+    let test_ds = cifar_like(&synth(test_n), 0xBE9C, 1);
+    let whiten_samples = train_n.min(1024);
+
+    let base_cfg = TrainConfig {
+        variant: cfg.variant.to_string(),
+        epochs: cfg.epochs,
+        workers: cfg.workers,
+        whiten_samples,
+        eval_every_epoch: false,
+        ..TrainConfig::default()
+    };
+
+    // §3.7: pay every one-time cost before the clock starts.
+    for _ in 0..cfg.warmup_runs {
+        warmup(engine, &train_ds, &base_cfg)?;
+    }
+
+    let mut report = Report {
+        tag: cfg
+            .tag
+            .clone()
+            .unwrap_or_else(|| format!("{}_{}", engine.name(), cfg.variant)),
+        backend_name: engine.name().to_string(),
+        variant: cfg.variant.clone(),
+        batch_train: batch,
+        config: cfg.clone(),
+        threads: if engine.name() == "native" {
+            crate::runtime::native::default_threads()
+        } else {
+            0
+        },
+        step_ms: Dist::default(),
+        init_ms: Dist::default(),
+        eval_ms: Dist::default(),
+        run_s: Dist::default(),
+        run_train_s: Dist::default(),
+        run_eval_s: Dist::default(),
+        run_acc: Dist::default(),
+        flops_per_step: engine.variant().train_flops_per_example() as f64 * batch as f64,
+        stats: *engine.stats(),
+    };
+
+    // A fixed training batch for the micro phase (augmentation excluded:
+    // this phase isolates backend step time; the macro phase covers the
+    // full pipeline). copy_from_slice panics loudly on any size mismatch —
+    // a degenerate all-zero batch must never be silently timed.
+    let mut images = crate::tensor::Tensor::zeros(&[batch, 3, hw, hw]);
+    for i in 0..batch {
+        images
+            .image_mut(i)
+            .copy_from_slice(train_ds.images.image(i % train_ds.len()));
+    }
+    let labels: Vec<i32> = (0..batch)
+        .map(|i| train_ds.labels[i % train_ds.len()] as i32)
+        .collect();
+
+    for run in 0..cfg.runs {
+        let seed = run as u64;
+        // ---- micro: init phase (state init + whitening stats) ----------
+        let t0 = Instant::now();
+        let mut state = engine.init_state(&InitConfig { dirac: true, seed });
+        let head = train_ds.head(whiten_samples);
+        let wk = engine.variant().hyper.whiten_kernel;
+        state.set_whitening(crate::whitening::whitening_weights(
+            &head.images,
+            wk,
+            base_cfg.whiten_eps,
+        )?)?;
+        report.init_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+
+        // ---- micro: per-step medians ------------------------------------
+        let mut samples = Vec::with_capacity(cfg.steps);
+        for _ in 0..cfg.steps {
+            let t0 = Instant::now();
+            engine.train_step(&mut state, &images, &labels, 1e-3, 0.1, true)?;
+            samples.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        // Same median definition as the cross-run Dist reporting (even
+        // counts average the two middle samples).
+        report.step_ms.push(Dist { per_run: samples }.median());
+
+        // ---- micro: one full TTA evaluation -----------------------------
+        let t0 = Instant::now();
+        let _ = evaluate(engine, &state, &test_ds, base_cfg.tta)?;
+        report.eval_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+
+        // ---- macro: one paper-protocol run ------------------------------
+        let run_cfg = TrainConfig { seed, ..base_cfg.clone() };
+        let (result, _state) = train_full(engine, &train_ds, &test_ds, &run_cfg)?;
+        let PhaseTimes { setup_seconds: _, train_seconds, eval_seconds } = result.phases;
+        report.run_s.push(result.time_seconds);
+        report.run_train_s.push(train_seconds);
+        report.run_eval_s.push(eval_seconds);
+        report.run_acc.push(result.accuracy);
+    }
+    report.stats = *engine.stats();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dist_median_and_summary() {
+        let d = Dist { per_run: vec![3.0, 1.0, 2.0] };
+        assert_eq!(d.median(), 2.0);
+        let e = Dist { per_run: vec![4.0, 1.0, 2.0, 3.0] };
+        assert_eq!(e.median(), 2.5);
+        assert_eq!(Dist::default().median(), 0.0);
+        assert_eq!(d.summary().n, 3);
+    }
+
+    #[test]
+    fn validate_rejects_broken_documents() {
+        use crate::util::json::parse;
+        // A minimal valid skeleton is exercised end-to-end by
+        // tests/bench_harness.rs; here: the validator must fail loudly on
+        // structural damage.
+        assert!(validate(&parse("{}").unwrap()).is_err());
+        assert!(validate(&parse(r#"{"schema": "nope"}"#).unwrap()).is_err());
+    }
+}

@@ -58,6 +58,7 @@ impl Args {
         Ok(args)
     }
 
+    /// Parse the process's command line (argv[0] excluded).
     pub fn from_env() -> Result<Args> {
         Args::parse(std::env::args().skip(1))
     }
@@ -80,6 +81,7 @@ impl Args {
         }
     }
 
+    /// `--key` as f64, with default.
     pub fn opt_f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.options.get(key) {
             None => Ok(default),
@@ -89,6 +91,7 @@ impl Args {
         }
     }
 
+    /// `--key` as u64, with default.
     pub fn opt_u64(&self, key: &str, default: u64) -> Result<u64> {
         match self.options.get(key) {
             None => Ok(default),
@@ -98,6 +101,7 @@ impl Args {
         }
     }
 
+    /// Boolean `--key` (present without a value, or `=true`/`=1`).
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.options.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
     }

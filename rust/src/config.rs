@@ -27,6 +27,7 @@ pub enum TtaLevel {
 }
 
 impl TtaLevel {
+    /// Parse a CLI / config spelling (`0|none`, `1|mirror`, `2|multicrop`).
     pub fn parse(s: &str) -> Option<TtaLevel> {
         match s {
             "0" | "none" => Some(TtaLevel::None),
@@ -36,6 +37,7 @@ impl TtaLevel {
         }
     }
 
+    /// Canonical config spelling (inverse of [`TtaLevel::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             TtaLevel::None => "none",
@@ -58,10 +60,12 @@ pub struct TrainConfig {
     pub lr: f64,
     /// Decoupled weight decay per 1024 examples (paper: 0.0153).
     pub weight_decay: f64,
-    /// Triangular LR schedule (Listing 4): start/end fractions and peak
-    /// position.
+    /// Triangular LR schedule (Listing 4): LR at step 0 as a fraction of
+    /// the peak.
     pub lr_start_frac: f64,
+    /// LR at the final step as a fraction of the peak.
     pub lr_end_frac: f64,
+    /// Position of the LR peak as a fraction of total steps.
     pub lr_peak_frac: f64,
     /// Epochs during which the whitening-layer bias trains (§3.2; paper 3).
     pub whiten_bias_epochs: f64,
@@ -75,6 +79,7 @@ pub struct TrainConfig {
     pub dirac_init: bool,
     /// §3.4 Lookahead: EMA every `lookahead_every` steps.
     pub lookahead: bool,
+    /// Steps between Lookahead EMA updates (paper: 5).
     pub lookahead_every: usize,
     /// §3.5 / Listing 4 TTA level.
     pub tta: TtaLevel,
@@ -242,6 +247,7 @@ impl TrainConfig {
         Ok(cfg)
     }
 
+    /// Load a JSON config file (see [`TrainConfig::from_json`]).
     pub fn load(path: &Path) -> Result<TrainConfig> {
         let text =
             std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;

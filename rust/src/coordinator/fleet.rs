@@ -20,21 +20,26 @@ use crate::util::json::Json;
 /// Aggregated results of one fleet.
 #[derive(Clone, Debug)]
 pub struct FleetResult {
+    /// Full per-run results, in seed order.
     pub runs: Vec<TrainResult>,
     /// Final accuracies (configured TTA), one per run.
     pub accuracies: Vec<f64>,
+    /// Final identity-view accuracies, one per run.
     pub accuracies_no_tta: Vec<f64>,
 }
 
 impl FleetResult {
+    /// Mean/std/CI of the TTA accuracies.
     pub fn summary(&self) -> Summary {
         Summary::of(&self.accuracies)
     }
 
+    /// Mean/std/CI of the identity-view accuracies.
     pub fn summary_no_tta(&self) -> Summary {
         Summary::of(&self.accuracies_no_tta)
     }
 
+    /// Mean paper-protocol wall time per run.
     pub fn mean_time_seconds(&self) -> f64 {
         if self.runs.is_empty() {
             return 0.0;

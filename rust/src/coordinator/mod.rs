@@ -16,4 +16,4 @@ pub use evaluator::{evaluate, evaluate_source, EvalOutput};
 pub use fleet::{run_fleet, FleetResult};
 pub use lookahead::LookaheadState;
 pub use schedule::{AlphaSchedule, DecoupledHyper, Triangle};
-pub use trainer::{train, train_full, warmup, EpochLog, TrainResult};
+pub use trainer::{train, train_full, warmup, EpochLog, PhaseTimes, TrainResult};

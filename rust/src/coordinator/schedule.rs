@@ -12,14 +12,18 @@
 /// Piecewise-linear triangular schedule (fraction of peak LR at `step`).
 #[derive(Clone, Debug)]
 pub struct Triangle {
+    /// Total optimizer steps of the run.
     pub total_steps: usize,
+    /// Fraction of peak LR at step 0.
     pub start: f64,
+    /// Fraction of peak LR at the final step.
     pub end: f64,
     /// Peak position as a fraction of total steps.
     pub peak: f64,
 }
 
 impl Triangle {
+    /// Build a schedule over `total_steps` (clamped to >= 1).
     pub fn new(total_steps: usize, start: f64, end: f64, peak: f64) -> Triangle {
         Triangle {
             total_steps: total_steps.max(1),
@@ -54,10 +58,12 @@ impl Triangle {
 /// Lookahead EMA decay schedule (Listing 4 `alpha_schedule`).
 #[derive(Clone, Debug)]
 pub struct AlphaSchedule {
+    /// Total optimizer steps of the run.
     pub total_steps: usize,
 }
 
 impl AlphaSchedule {
+    /// Build a schedule over `total_steps` (clamped to >= 1).
     pub fn new(total_steps: usize) -> AlphaSchedule {
         AlphaSchedule {
             total_steps: total_steps.max(1),
@@ -86,6 +92,7 @@ pub struct DecoupledHyper {
 }
 
 impl DecoupledHyper {
+    /// Translate decoupled (per-1024-examples) lr/wd into graph values.
     pub fn new(lr: f64, weight_decay: f64, momentum: f64, batch_size: usize) -> DecoupledHyper {
         let kilostep_scale = 1024.0 * (1.0 + 1.0 / (1.0 - momentum));
         let lr_base = lr / kilostep_scale;

@@ -24,13 +24,30 @@ use crate::whitening::whitening_weights;
 /// Per-epoch log line (mirrors the paper's printed columns).
 #[derive(Clone, Debug)]
 pub struct EpochLog {
+    /// Zero-based epoch index.
     pub epoch: usize,
-    /// Accuracy/loss of the last training batch of the epoch.
+    /// Accuracy of the last training batch of the epoch.
     pub train_acc: f64,
+    /// Per-example loss of the last training batch of the epoch.
     pub train_loss: f64,
     /// End-of-epoch validation accuracy (populated when
     /// `eval_every_epoch`), evaluated with the configured TTA.
     pub val_acc: Option<f64>,
+}
+
+/// Wall-clock breakdown of one run into the paper-protocol phases — the
+/// unit the `bench` harness reports distributions over (BENCHMARKS.md).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimes {
+    /// Initialization: state init plus the whitening-statistics pass (the
+    /// first training-data access, which is why the clock is already
+    /// running here).
+    pub setup_seconds: f64,
+    /// The step loop, including any per-epoch evals when
+    /// `eval_every_epoch` is set.
+    pub train_seconds: f64,
+    /// The final evaluation that stops the clock.
+    pub eval_seconds: f64,
 }
 
 /// Result of one training run.
@@ -42,12 +59,16 @@ pub struct TrainResult {
     pub accuracy_no_tta: f64,
     /// Fractional epochs actually run.
     pub epochs_run: f64,
+    /// Optimizer steps actually run.
     pub steps_run: usize,
     /// Paper-protocol time: data access -> test predictions.
     pub time_seconds: f64,
+    /// Per-phase breakdown of `time_seconds`.
+    pub phases: PhaseTimes,
     /// First (fractional) epoch whose end-of-epoch eval crossed
     /// `target_acc` (needs `eval_every_epoch`).
     pub epochs_to_target: Option<f64>,
+    /// One entry per epoch (see [`EpochLog`]).
     pub epoch_log: Vec<EpochLog>,
     /// Final evaluation output (probabilities feed CACE, §5.3).
     pub eval: EvalOutput,
@@ -89,6 +110,7 @@ pub fn train_full(
         let k = engine.variant().hyper.whiten_kernel;
         state.set_whitening(whitening_weights(&head.images, k, cfg.whiten_eps)?)?;
     }
+    let setup_seconds = t0.elapsed().as_secs_f64();
 
     // ---- Schedules -------------------------------------------------------
     let batch = engine.batch_train();
@@ -203,8 +225,14 @@ pub fn train_full(
     // ---- Final evaluation (stops the clock) -------------------------------
     // One pass yields both readouts: the TTA accuracy and the identity-view
     // ("without TTA", §2) accuracy — see EXPERIMENTS.md §Perf iteration 4.
+    let train_end = t0.elapsed().as_secs_f64();
     let eval = evaluate(engine, &state, test_data, cfg.tta)?;
     let time_seconds = t0.elapsed().as_secs_f64();
+    let phases = PhaseTimes {
+        setup_seconds,
+        train_seconds: train_end - setup_seconds,
+        eval_seconds: time_seconds - train_end,
+    };
     let accuracy = eval.accuracy;
     let accuracy_no_tta = eval.accuracy_identity;
 
@@ -217,6 +245,7 @@ pub fn train_full(
             epochs_run: step as f64 / steps_per_epoch as f64,
             steps_run: step,
             time_seconds,
+            phases,
             epochs_to_target,
             epoch_log,
             eval,

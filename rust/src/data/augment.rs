@@ -30,6 +30,7 @@ pub enum FlipMode {
 }
 
 impl FlipMode {
+    /// Parse a CLI / config spelling (`none|random|alternating|md5`).
     pub fn parse(s: &str) -> Option<FlipMode> {
         match s {
             "none" => Some(FlipMode::None),
@@ -40,6 +41,7 @@ impl FlipMode {
         }
     }
 
+    /// Canonical config spelling (inverse of [`FlipMode::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             FlipMode::None => "none",
@@ -214,7 +216,10 @@ pub enum CropPolicy {
     /// "Light RRC").
     LightRrc,
     /// Center crop with a crop ratio (paper CC(size, ratio) evaluation).
-    Center { ratio_pct: u32 },
+    Center {
+        /// Crop side as a percentage of the shorter image side.
+        ratio_pct: u32,
+    },
 }
 
 impl CropPolicy {
@@ -278,6 +283,7 @@ impl CropPolicy {
 /// extensions used by the §5.2 harness).
 #[derive(Clone, Debug)]
 pub struct AugConfig {
+    /// Horizontal-flip policy (§3.6).
     pub flip: FlipMode,
     /// Max |translation| in pixels (paper: 2); 0 disables.
     pub translate: usize,
@@ -303,6 +309,7 @@ impl Default for AugConfig {
 }
 
 impl AugConfig {
+    /// Identity augmentation (evaluation and golden-vector tests).
     pub fn none() -> AugConfig {
         AugConfig {
             flip: FlipMode::None,

@@ -24,6 +24,7 @@ pub enum OrderPolicy {
 }
 
 impl OrderPolicy {
+    /// Parse a CLI / config spelling (`reshuffle|replacement|sequential`).
     pub fn parse(s: &str) -> Option<OrderPolicy> {
         match s {
             "reshuffle" => Some(OrderPolicy::Reshuffle),
@@ -60,9 +61,13 @@ pub fn epoch_order(order: OrderPolicy, n: usize, seed: u64, epoch: u64) -> Vec<u
 /// Streaming batch loader over a [`Dataset`].
 pub struct Loader<'a> {
     dataset: &'a Dataset,
+    /// Examples per emitted batch.
     pub batch_size: usize,
+    /// Augmentation pipeline applied to every batch.
     pub aug: AugConfig,
+    /// Epoch ordering policy (Table 1).
     pub order: OrderPolicy,
+    /// Drop the final partial batch (training) instead of emitting it.
     pub drop_last: bool,
     /// Epochs completed so far (drives alternating flip parity).
     pub epoch: u64,
@@ -74,12 +79,16 @@ pub struct Loader<'a> {
 
 /// One batch: augmented images + labels + the dataset indices they came from.
 pub struct Batch<'b> {
+    /// Augmented image batch (borrowed from the source's reused buffer).
     pub images: &'b Tensor,
+    /// Labels of the batch rows, as the i32 the step contract expects.
     pub labels: Vec<i32>,
+    /// Dataset indices of the batch rows (TTA scatter / equivalence tests).
     pub indices: Vec<u32>,
 }
 
 impl<'a> Loader<'a> {
+    /// Build a loader over `dataset` (see field docs for the knobs).
     pub fn new(
         dataset: &'a Dataset,
         batch_size: usize,

@@ -29,21 +29,26 @@ pub struct Dataset {
     pub images: Tensor,
     /// N labels in `0..num_classes`.
     pub labels: Vec<u16>,
+    /// Number of distinct classes.
     pub num_classes: usize,
-    /// Per-channel mean/std used for normalization (kept for TTA padding).
+    /// Per-channel mean used for normalization (kept for TTA padding).
     pub mean: [f32; 3],
+    /// Per-channel std used for normalization.
     pub std: [f32; 3],
 }
 
 impl Dataset {
+    /// Number of examples.
     pub fn len(&self) -> usize {
         self.labels.len()
     }
 
+    /// True when the dataset has no examples.
     pub fn is_empty(&self) -> bool {
         self.labels.is_empty()
     }
 
+    /// Spatial side length of the (square) images.
     pub fn hw(&self) -> usize {
         self.images.shape()[2]
     }

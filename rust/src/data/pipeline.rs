@@ -51,9 +51,13 @@ pub trait BatchSource {
 /// Multi-threaded prefetching implementation of [`BatchSource`].
 pub struct Pipeline<'a> {
     dataset: &'a Dataset,
+    /// Examples per emitted batch.
     pub batch_size: usize,
+    /// Augmentation pipeline applied to every batch.
     pub aug: AugConfig,
+    /// Epoch ordering policy (Table 1).
     pub order: OrderPolicy,
+    /// Drop the final partial batch (training) instead of emitting it.
     pub drop_last: bool,
     /// Epochs completed so far (drives alternating flip parity).
     pub epoch: u64,
@@ -70,6 +74,8 @@ pub struct Pipeline<'a> {
 type BatchMsg = (Tensor, Vec<i32>, Vec<u32>);
 
 impl<'a> Pipeline<'a> {
+    /// Build a prefetching pipeline; emits batches bit-identical to a
+    /// [`crate::data::loader::Loader`] with the same settings (DESIGN.md §5).
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         dataset: &'a Dataset,

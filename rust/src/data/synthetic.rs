@@ -26,8 +26,11 @@ use crate::tensor::Tensor;
 /// Generator parameters.
 #[derive(Clone, Debug)]
 pub struct SynthConfig {
+    /// Number of examples to generate.
     pub n: usize,
+    /// Number of classes (balanced round-robin labels).
     pub num_classes: usize,
+    /// Square image side length.
     pub hw: usize,
     /// Additive pixel-noise std (raw [0,1] scale).
     pub noise: f32,
@@ -55,16 +58,19 @@ impl Default for SynthConfig {
 }
 
 impl SynthConfig {
+    /// Builder: set the example count.
     pub fn with_n(mut self, n: usize) -> Self {
         self.n = n;
         self
     }
 
+    /// Builder: set the class count.
     pub fn with_classes(mut self, k: usize) -> Self {
         self.num_classes = k;
         self
     }
 
+    /// Builder: set the additive pixel-noise std.
     pub fn with_noise(mut self, noise: f32) -> Self {
         self.noise = noise;
         self

@@ -76,14 +76,20 @@ impl Scale {
 pub enum DataKind {
     /// Real CIFAR-10 if the binaries exist, else the CIFAR-like generator.
     Cifar10,
+    /// CIFAR-100-difficulty synthetic distribution (Table 5).
     Cifar100Like,
+    /// ImageNet-style 48px synthetic distribution (Table 3, §5.2 crops).
     ImagenetLike,
+    /// SVHN-like chirality distribution where flipping hurts (Table 5).
     SvhnLike,
+    /// CINIC-10-like noisier CIFAR distribution (Table 5).
     CinicLike,
 }
 
 /// The experiment laboratory: backends + datasets behind one handle.
 pub struct Lab {
+    /// Experiment scale knobs (`AIRBENCH_RUNS` / `AIRBENCH_TRAIN_N` /
+    /// `AIRBENCH_TEST_N` / `AIRBENCH_EPOCHS` overrides).
     pub scale: Scale,
     kind: BackendKind,
     artifacts_dir: PathBuf,
@@ -107,6 +113,7 @@ impl Lab {
         Lab::with_backend(kind)
     }
 
+    /// Build a lab with an explicit backend kind (tests / benches).
     pub fn with_backend(kind: BackendKind) -> Result<Lab> {
         Ok(Lab {
             scale: Scale::from_env(),
@@ -119,6 +126,7 @@ impl Lab {
         })
     }
 
+    /// Where AOT artifacts are looked up (`AIRBENCH_ARTIFACTS` override).
     pub fn artifacts_dir(&self) -> &Path {
         &self.artifacts_dir
     }

@@ -18,9 +18,34 @@
 //! At runtime only this crate runs: [`coordinator`] drives the
 //! [`runtime::Backend`] seam — either the compiled PJRT path
 //! (`artifacts/*.hlo.txt` via the `xla` crate) or the pure-Rust
-//! multi-threaded [`runtime::native`] backend, selected by `--backend
-//! auto|pjrt|native` (DESIGN.md §2).
+//! multi-threaded [`runtime::native`] backend (its hot path is the blocked
+//! GEMM microkernel in `runtime::native::gemm` — DESIGN.md §2.1), selected
+//! by `--backend auto|pjrt|native` (DESIGN.md §2). The [`bench`] module is
+//! the §3.7 measurement harness behind `airbench bench` (BENCHMARKS.md).
+//!
+//! # Quickstart
+//!
+//! Train the CPU-scale `bench` variant on the native backend (no
+//! artifacts, no downloads — synthetic data is generated on the fly):
+//!
+//! ```bash
+//! cargo run --release -- train --backend native epochs=2
+//! ```
+//!
+//! Or drive a backend directly:
+//!
+//! ```
+//! use airbench::runtime::{create_default_backend, Backend, BackendKind, InitConfig};
+//!
+//! let engine = create_default_backend(BackendKind::Native, "nano").unwrap();
+//! let state = engine.init_state(&InitConfig::default());
+//! assert_eq!(engine.name(), "native");
+//! assert!(state.tensors.contains_key("head_w"));
+//! ```
 
+#![warn(missing_docs)]
+
+pub mod bench;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -6,6 +6,9 @@
 //!   the paper-protocol wall time.
 //! * `fleet --runs N [key=value ...]` — an n-run statistical experiment:
 //!   mean/std/CI of final accuracy (paper §5 methodology).
+//! * `bench [--runs N] [--steps N] [--tag T]` — the §3.7 benchmark
+//!   harness: per-phase medians and seed-distribution stats, written as
+//!   `BENCH_<tag>.json` (see BENCHMARKS.md for protocol and schema).
 //! * `info [--variant NAME]` — inspect the AOT manifest when artifacts are
 //!   built, else the native backend's built-in variant table.
 //!
@@ -202,6 +205,72 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `airbench bench [--backend B] [--variant V] [--runs N] [--steps N]
+/// [--warmup N] [--epochs E] [--workers N] [--tag T] [--out DIR]` — run the
+/// §3.7 harness and write `BENCH_<tag>.json` (BENCHMARKS.md).
+fn cmd_bench(args: &Args) -> Result<()> {
+    let mut cfg = airbench::bench::BenchConfig::default();
+    if let Some(v) = args.options.get("variant") {
+        cfg.variant = v.clone();
+    }
+    let backend = args.opt("backend", "auto");
+    cfg.backend = airbench::runtime::BackendKind::parse(&backend)
+        .ok_or_else(|| anyhow::anyhow!("unknown --backend '{backend}' (auto|pjrt|native)"))?;
+    cfg.runs = args.opt_usize("runs", cfg.runs)?.max(1);
+    cfg.steps = args.opt_usize("steps", cfg.steps)?.max(1);
+    cfg.warmup_runs = args.opt_usize("warmup", cfg.warmup_runs)?;
+    cfg.epochs = args.opt_f64("epochs", cfg.epochs)?;
+    cfg.workers = args.opt_usize("workers", cfg.workers)?;
+    cfg.train_n = args.opt_usize("train-n", cfg.train_n)?;
+    cfg.test_n = args.opt_usize("test-n", cfg.test_n)?;
+    if let Some(t) = args.options.get("tag") {
+        cfg.tag = Some(t.clone());
+    }
+    if let Some(o) = args.options.get("out") {
+        cfg.out_dir = std::path::PathBuf::from(o);
+    }
+
+    eprintln!(
+        "[bench] backend={} variant={} runs={} steps={} warmup={} (§3.7 protocol)",
+        cfg.backend.name(),
+        cfg.variant,
+        cfg.runs,
+        cfg.steps,
+        cfg.warmup_runs
+    );
+    let report = airbench::bench::run(&cfg)?;
+    let row = |name: &str, d: &airbench::bench::Dist, unit: &str| {
+        let s = d.summary();
+        println!(
+            "  {name:<16} median {:>9.2}{unit}  mean {:>9.2}  std {:>7.2}  min {:>9.2}  max {:>9.2}  (n={})",
+            d.median(),
+            s.mean,
+            s.std,
+            s.min,
+            s.max,
+            s.n
+        );
+    };
+    println!(
+        "bench report: backend={} variant={} threads={} batch={}",
+        report.backend_name, report.variant, report.threads, report.batch_train
+    );
+    row("train_step_ms", &report.step_ms, "ms");
+    row("init_ms", &report.init_ms, "ms");
+    row("eval_ms", &report.eval_ms, "ms");
+    row("run_s", &report.run_s, "s");
+    row("run_train_s", &report.run_train_s, "s");
+    row("run_eval_s", &report.run_eval_s, "s");
+    println!(
+        "  step throughput: {:.2} GFLOP/s effective, {:.0} img/s",
+        report.train_gflops(),
+        report.batch_train as f64 / (report.step_ms.median() * 1e-3).max(1e-12),
+    );
+    let path = report.write(&cfg.out_dir)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
 fn print_variant_row(name: &str, v: &airbench::runtime::Variant) {
     println!(
         "  {name:<20} params={:<9} batch={}x{} fwd={:.1} MFLOP/example",
@@ -282,11 +351,14 @@ fn cmd_info(args: &Args) -> Result<()> {
 
 fn usage() {
     eprintln!(
-        "usage: airbench <train|eval|fleet|info> [--data cifar10] [--runs N] \
+        "usage: airbench <train|eval|fleet|bench|info> [--data cifar10] [--runs N] \
          [--config file.json] [--backend auto|pjrt|native] [--workers N] \
          [--prefetch-depth N] [--save ckpt.bin] [--load ckpt.bin] \
          [--log fleet.json] [--hlo] [key=value ...]\n       airbench --version\n\
          \n\
+         bench               run the §3.7 benchmark harness and write \
+         BENCH_<tag>.json (options: --runs --steps --warmup --epochs \
+         --tag --out --train-n --test-n; see BENCHMARKS.md)\n\
          --backend KIND      execution backend (also config key `backend`): \
          auto = compiled PJRT when artifacts + runtime exist, else the \
          pure-Rust native backend; pjrt / native force one\n\
@@ -309,6 +381,7 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("eval") => cmd_eval(&args),
         Some("fleet") => cmd_fleet(&args),
+        Some("bench") => cmd_bench(&args),
         Some("info") => cmd_info(&args),
         _ => {
             usage();

@@ -70,6 +70,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ hash_index(tag, 0xA5A5_A5A5))
     }
 
+    /// Next raw 64-bit draw (xoshiro256** step).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;

@@ -43,7 +43,9 @@ pub struct StepOutput {
 /// marshal shares.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct BackendStats {
+    /// Train steps executed.
     pub train_steps: u64,
+    /// Eval batches executed.
     pub eval_calls: u64,
     /// Seconds spent executing train steps.
     pub train_exec_secs: f64,
@@ -110,6 +112,7 @@ pub trait Backend {
     /// Wall-clock accounting so far.
     fn stats(&self) -> &BackendStats;
 
+    /// Mutable accounting (benches reset it between sections).
     fn stats_mut(&mut self) -> &mut BackendStats;
 
     /// Lowered/expected train batch size.
@@ -135,11 +138,14 @@ pub enum BackendKind {
     /// PJRT when artifacts + runtime are available, else native.
     #[default]
     Auto,
+    /// Force the compiled PJRT path (errors when unavailable).
     Pjrt,
+    /// Force the pure-Rust native backend.
     Native,
 }
 
 impl BackendKind {
+    /// Parse a CLI / config spelling (`auto|pjrt|native`).
     pub fn parse(s: &str) -> Option<BackendKind> {
         match s {
             "auto" => Some(BackendKind::Auto),
@@ -149,6 +155,7 @@ impl BackendKind {
         }
     }
 
+    /// Canonical spelling (inverse of [`BackendKind::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             BackendKind::Auto => "auto",
@@ -163,6 +170,7 @@ impl BackendKind {
 /// fixed by `make artifacts`, "runtime unavailable" by linking real xla-rs.
 #[derive(Clone, Debug)]
 pub enum PjrtStatus {
+    /// Artifacts and a working PJRT runtime are both present.
     Available,
     /// `manifest.json` is missing (or unparseable) under the artifact dir.
     ArtifactsMissing(String),

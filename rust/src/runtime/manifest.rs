@@ -38,18 +38,23 @@ impl Role {
 /// One state tensor of the model.
 #[derive(Clone, Debug)]
 pub struct TensorSpec {
+    /// Manifest name (`block1_conv1_w`, `head_w`, ...).
     pub name: String,
+    /// Tensor dimensions.
     pub shape: Vec<usize>,
+    /// Role in the step contract.
     pub role: Role,
     /// "bias" = BatchNorm bias (64x lr group, §3.4), else "other"/"stat".
     pub group: String,
 }
 
 impl TensorSpec {
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// True for the BatchNorm biases of the 64x learning-rate group.
     pub fn is_bn_bias(&self) -> bool {
         self.group == "bias"
     }
@@ -58,57 +63,85 @@ impl TensorSpec {
 /// Baked (graph-resident) hyperparameters of a variant.
 #[derive(Clone, Debug)]
 pub struct Hyper {
+    /// Channel widths of the three conv blocks.
     pub widths: Vec<usize>,
+    /// Convs per block (2, or 3 for the §4 residual variants).
     pub convs_per_block: usize,
+    /// Whether blocks add a §4-style residual connection.
     pub residual: bool,
+    /// Whitening conv kernel size (paper: 2).
     pub whiten_kernel: usize,
+    /// Whitening conv output channels (`2 * 3 * kernel^2`).
     pub whiten_width: usize,
+    /// Logit scaling factor (paper: 1/9).
     pub scaling_factor: f64,
+    /// BatchNorm running-stat momentum (paper: 0.6).
     pub bn_momentum: f64,
+    /// BatchNorm epsilon (paper: 1e-12).
     pub bn_eps: f64,
+    /// Nesterov-SGD momentum (paper: 0.85).
     pub momentum: f64,
+    /// BN-bias learning-rate multiplier (paper: 64).
     pub bias_scaler: f64,
+    /// Cross-entropy label smoothing (paper: 0.2).
     pub label_smoothing: f64,
 }
 
 /// IO contract of one lowered HLO module.
 #[derive(Clone, Debug)]
 pub struct ModuleSpec {
+    /// HLO text file, relative to the manifest directory.
     pub file: String,
+    /// Input tensor names, in module argument order.
     pub inputs: Vec<String>,
+    /// Output tensor names, in module result order.
     pub outputs: Vec<String>,
 }
 
 /// One AOT-lowered model variant.
 #[derive(Clone, Debug)]
 pub struct Variant {
+    /// Variant name (`bench`, `airbench94`, ...).
     pub name: String,
+    /// Train-step batch size the module was lowered at.
     pub batch_train: usize,
+    /// Eval batch size the module was lowered at.
     pub batch_eval: usize,
+    /// Square input image side length.
     pub image_hw: usize,
+    /// Classifier output count.
     pub num_classes: usize,
+    /// Trainable + frozen parameter count (excludes BN stats).
     pub param_count: usize,
+    /// Analytic forward FLOPs per example (2*MAC rule).
     pub fwd_flops_per_example: u64,
+    /// Baked hyperparameters.
     pub hyper: Hyper,
     /// All state tensors in wire order: trainable, then frozen, then stats.
     pub tensors: Vec<TensorSpec>,
+    /// Train-step module contract.
     pub train: ModuleSpec,
+    /// Eval module contract.
     pub eval: ModuleSpec,
 }
 
 impl Variant {
+    /// The trainable tensors, in wire order.
     pub fn trainable(&self) -> impl Iterator<Item = &TensorSpec> {
         self.tensors.iter().filter(|t| t.role == Role::Trainable)
     }
 
+    /// The frozen tensors (whitening conv weights), in wire order.
     pub fn frozen(&self) -> impl Iterator<Item = &TensorSpec> {
         self.tensors.iter().filter(|t| t.role == Role::Frozen)
     }
 
+    /// The BatchNorm running-stat tensors, in wire order.
     pub fn bn_stats(&self) -> impl Iterator<Item = &TensorSpec> {
         self.tensors.iter().filter(|t| t.role == Role::BnStat)
     }
 
+    /// Look up a tensor spec by manifest name.
     pub fn tensor(&self, name: &str) -> Option<&TensorSpec> {
         self.tensors.iter().find(|t| t.name == name)
     }
@@ -122,7 +155,9 @@ impl Variant {
 /// The whole manifest: artifact dir + variants by name.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Directory the manifest (and the HLO files it names) lives in.
     pub dir: PathBuf,
+    /// Variants by name.
     pub variants: BTreeMap<String, Variant>,
 }
 
@@ -195,6 +230,7 @@ impl Manifest {
         Manifest::parse_str(dir, &text)
     }
 
+    /// Parse manifest JSON, recording `dir` as the artifact location.
     pub fn parse_str(dir: &Path, text: &str) -> Result<Manifest> {
         let j = parse(text)?;
         let format = j.get("format")?.as_usize()?;
@@ -214,6 +250,7 @@ impl Manifest {
         })
     }
 
+    /// Look up a variant, with a `make artifacts` hint on failure.
     pub fn variant(&self, name: &str) -> Result<&Variant> {
         self.variants.get(name).with_context(|| {
             format!(

@@ -1,0 +1,533 @@
+//! Cache-blocked, register-tiled f32 GEMM microkernel — the one compute
+//! primitive behind every convolution (forward *and* backward) and the
+//! classifier matmul of the native backend (DESIGN.md §2.1).
+//!
+//! # Shape of the kernel
+//!
+//! The classic three-level BLIS decomposition, sized for the small-matrix
+//! regime airbench lives in (reduction depths of 12–4608, output panels of
+//! 9–961 columns):
+//!
+//! * **Microkernel** — an [`MR`]`×`[`NR`] register tile. Per reduction step
+//!   it broadcasts `MR` packed A values against one `NR`-wide packed B row
+//!   and accumulates into `MR*NR` local scalars the compiler keeps in
+//!   vector registers. The loop body is branch-free with constant bounds,
+//!   which is what lets LLVM autovectorize it into broadcast-multiply-add
+//!   form on any target (SSE2 baseline included — no intrinsics, no
+//!   `unsafe`).
+//! * **Packing** — A is packed once per call into `MR`-row column-major
+//!   strips ([`pack_a`] / [`pack_a_t`]) and is then *reused across every
+//!   example in the batch* (the weights of a conv layer are the A operand
+//!   of all `N` per-example GEMMs). B panels are packed per [`KC`]`x`[`NC`]
+//!   block into the caller's scratch buffer, which each worker thread
+//!   reuses across every example it processes — the panel footprint is a
+//!   bounded 512 KB per thread instead of a per-example column matrix.
+//! * **Implicit im2col** — for convolutions, B is never materialized as the
+//!   full `(cin*kh*kw, oh*ow)` im2col matrix (PR 2 built that buffer per
+//!   example per layer). Instead [`BSrc::Im2col`] / [`BSrc::Im2colT`] pack
+//!   each `KC×NC` panel straight from the source image, applying the
+//!   padding clip on the fly. The big intermediate — ~830 KB per example
+//!   for the first bench-variant conv — disappears from the hot path.
+//!
+//! # Determinism contract
+//!
+//! For one output element, additions happen in a fixed order: `KC` blocks
+//! ascending, and reduction indices ascending within a block. Nothing in
+//! this module inspects the thread count, and callers only parallelize
+//! over disjoint per-example output slices — so results are **bit-identical
+//! for every `AIRBENCH_NATIVE_THREADS` value**, which is what keeps native
+//! training seed-reproducible on any machine (DESIGN.md §5). Results are
+//! *not* bit-identical to the naive [`super::ops::matmul_acc`] reference
+//! (f32 addition is non-associative); the parity tests bound the relative
+//! difference at the measured reorder-noise level (~1e-6 per unit of
+//! reduction depth) instead.
+
+use super::ops::conv_out_hw;
+
+/// Rows of one microkernel tile (values of A broadcast per reduction step).
+pub const MR: usize = 4;
+/// Columns of one microkernel tile (width of one packed B row).
+pub const NR: usize = 8;
+/// Reduction-dimension block size: one packed B panel covers `KC` reduction
+/// steps, so a panel stays cache-resident while every A row strip streams
+/// over it.
+pub const KC: usize = 256;
+/// Output-column block size: bounds the packed-B scratch footprint at
+/// `KC * NC * 4` bytes (512 KB), roughly an L2 way on the machines we run.
+pub const NC: usize = 512;
+
+/// The B operand of one GEMM call: either a real matrix or a virtual
+/// im2col view of an image that is packed panel-by-panel on demand.
+///
+/// Logical B always has shape `(k, n)` where `k` is the reduction depth of
+/// the call; the variants only differ in how one element `B[kk][j]` is
+/// fetched during packing.
+pub enum BSrc<'a> {
+    /// Row-major `(k, n)` matrix: `B[kk][j] = b[kk * n + j]`.
+    Mat(&'a [f32]),
+    /// Transposed matrix stored row-major as `(n, k)`:
+    /// `B[kk][j] = b[j * k + kk]` (the classifier's `head_wᵀ` operand).
+    MatT(&'a [f32]),
+    /// Implicit im2col of one `(cin, h, w)` image for a stride-1 conv with
+    /// `kh×kw` kernels and symmetric zero `pad`: `k = cin*kh*kw` rows,
+    /// `n = oh*ow` columns. `B[(ci,ky,kx)][(oy,ox)] = x[ci][oy+ky-pad][ox+kx-pad]`
+    /// (zero outside the image).
+    Im2col {
+        /// One image, `cin * h * w` floats.
+        x: &'a [f32],
+        /// Input channels.
+        cin: usize,
+        /// Input height.
+        h: usize,
+        /// Input width.
+        w: usize,
+        /// Kernel height.
+        kh: usize,
+        /// Kernel width.
+        kw: usize,
+        /// Symmetric zero padding.
+        pad: usize,
+    },
+    /// Transpose of [`BSrc::Im2col`]: `k = oh*ow` rows (pixels) and
+    /// `n = cin*kh*kw` columns (kernel positions) — the B operand of the
+    /// weight-gradient GEMM `dW += dy · im2colᵀ`.
+    Im2colT {
+        /// One image, `cin * h * w` floats.
+        x: &'a [f32],
+        /// Input channels.
+        cin: usize,
+        /// Input height.
+        h: usize,
+        /// Input width.
+        w: usize,
+        /// Kernel height.
+        kh: usize,
+        /// Kernel width.
+        kw: usize,
+        /// Symmetric zero padding.
+        pad: usize,
+    },
+}
+
+/// Length in floats of the packed-A buffer for an `(m, k)` A operand:
+/// `ceil(m / MR)` strips of `k * MR` floats (rows padded with zeros).
+pub fn packed_a_len(m: usize, k: usize) -> usize {
+    m.div_ceil(MR) * k * MR
+}
+
+/// Pack a row-major `(m, k)` matrix into `MR`-row strips, column-major
+/// within each strip: `out[strip][kk * MR + i] = a[(strip*MR + i) * k + kk]`.
+/// Rows beyond `m` are zero-filled, so edge microtiles need no branches.
+pub fn pack_a(a: &[f32], m: usize, k: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(out.len(), packed_a_len(m, k));
+    for (ip, strip) in out.chunks_exact_mut(k * MR).enumerate() {
+        for kk in 0..k {
+            for i in 0..MR {
+                let r = ip * MR + i;
+                strip[kk * MR + i] = if r < m { a[r * k + kk] } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// Like [`pack_a`] for a transposed operand: `a` is stored row-major as
+/// `(k, m)` and the logical A is `aᵀ` with shape `(m, k)` — used for the
+/// `head_inᵀ · dlogits` weight-gradient GEMM without materializing the
+/// transpose.
+pub fn pack_a_t(a: &[f32], m: usize, k: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(out.len(), packed_a_len(m, k));
+    for (ip, strip) in out.chunks_exact_mut(k * MR).enumerate() {
+        for kk in 0..k {
+            for i in 0..MR {
+                let r = ip * MR + i;
+                strip[kk * MR + i] = if r < m { a[kk * m + r] } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// Number of logical B rows (reduction depth) and columns of `b` given the
+/// caller's `(k, n)`; for the im2col variants these are derived from the
+/// image geometry and must agree with the caller.
+fn check_b_dims(b: &BSrc<'_>, k: usize, n: usize) {
+    match b {
+        BSrc::Mat(m) => debug_assert_eq!(m.len(), k * n),
+        BSrc::MatT(m) => debug_assert_eq!(m.len(), k * n),
+        BSrc::Im2col { cin, h, w, kh, kw, pad, x } => {
+            debug_assert_eq!(x.len(), cin * h * w);
+            debug_assert_eq!(k, cin * kh * kw);
+            debug_assert_eq!(n, conv_out_hw(*h, *kh, *pad) * conv_out_hw(*w, *kw, *pad));
+        }
+        BSrc::Im2colT { cin, h, w, kh, kw, pad, x } => {
+            debug_assert_eq!(x.len(), cin * h * w);
+            debug_assert_eq!(n, cin * kh * kw);
+            debug_assert_eq!(k, conv_out_hw(*h, *kh, *pad) * conv_out_hw(*w, *kw, *pad));
+        }
+    }
+}
+
+/// Pack one `(kc × nc)` block of B starting at `(k0, j0)` into `dst` as
+/// `ceil(nc / NR)` panels of `kc * NR` floats (reduction-major within each
+/// panel). Columns beyond `nc` are zero-filled.
+#[allow(clippy::too_many_arguments)]
+fn pack_b(b: &BSrc<'_>, k: usize, n: usize, k0: usize, kc: usize, j0: usize, nc: usize, dst: &mut [f32]) {
+    let npan = nc.div_ceil(NR);
+    debug_assert!(dst.len() >= npan * kc * NR);
+    for jp in 0..npan {
+        let jb = j0 + jp * NR;
+        let cols = NR.min(nc - jp * NR);
+        let pan = &mut dst[jp * kc * NR..(jp + 1) * kc * NR];
+        match b {
+            BSrc::Mat(bm) => {
+                for kk in 0..kc {
+                    let src = &bm[(k0 + kk) * n + jb..(k0 + kk) * n + jb + cols];
+                    let row = &mut pan[kk * NR..kk * NR + NR];
+                    row[..cols].copy_from_slice(src);
+                    row[cols..].fill(0.0);
+                }
+            }
+            BSrc::MatT(bm) => {
+                for kk in 0..kc {
+                    let row = &mut pan[kk * NR..kk * NR + NR];
+                    for (j, rv) in row[..cols].iter_mut().enumerate() {
+                        *rv = bm[(jb + j) * k + (k0 + kk)];
+                    }
+                    row[cols..].fill(0.0);
+                }
+            }
+            BSrc::Im2col { x, cin: _, h, w, kh, kw, pad } => {
+                let (h, w, kh, kw, pad) = (*h, *w, *kh, *kw, *pad);
+                let khw = kh * kw;
+                let ow = conv_out_hw(w, kw, pad);
+                for kk in 0..kc {
+                    let kabs = k0 + kk;
+                    let ci = kabs / khw;
+                    let rem = kabs % khw;
+                    let ky = (rem / kw) as isize;
+                    let kx = (rem % kw) as isize;
+                    let xc = &x[ci * h * w..(ci + 1) * h * w];
+                    let mut oy = jb / ow;
+                    let mut ox = jb % ow;
+                    let row = &mut pan[kk * NR..kk * NR + NR];
+                    for (j, rv) in row.iter_mut().enumerate() {
+                        let mut v = 0.0f32;
+                        if j < cols {
+                            let iy = oy as isize + ky - pad as isize;
+                            let ix = ox as isize + kx - pad as isize;
+                            if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                                v = xc[iy as usize * w + ix as usize];
+                            }
+                        }
+                        *rv = v;
+                        ox += 1;
+                        if ox == ow {
+                            ox = 0;
+                            oy += 1;
+                        }
+                    }
+                }
+            }
+            BSrc::Im2colT { x, cin: _, h, w, kh, kw, pad } => {
+                let (h, w, kh, kw, pad) = (*h, *w, *kh, *kw, *pad);
+                let khw = kh * kw;
+                let ow = conv_out_hw(w, kw, pad);
+                // Decode the NR kernel-position columns of this panel once.
+                let mut dec = [(0usize, 0isize, 0isize); NR];
+                for (j, d) in dec.iter_mut().take(cols).enumerate() {
+                    let kabs = jb + j;
+                    *d = (
+                        kabs / khw,
+                        ((kabs % khw) / kw) as isize,
+                        (kabs % kw) as isize,
+                    );
+                }
+                let mut oy = k0 / ow;
+                let mut ox = k0 % ow;
+                for kk in 0..kc {
+                    let row = &mut pan[kk * NR..kk * NR + NR];
+                    for (j, rv) in row.iter_mut().enumerate() {
+                        let mut v = 0.0f32;
+                        if j < cols {
+                            let (ci, ky, kx) = dec[j];
+                            let iy = oy as isize + ky - pad as isize;
+                            let ix = ox as isize + kx - pad as isize;
+                            if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                                v = x[ci * h * w + iy as usize * w + ix as usize];
+                            }
+                        }
+                        *rv = v;
+                    }
+                    ox += 1;
+                    if ox == ow {
+                        ox = 0;
+                        oy += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The register tile: `acc[i][j] += Σ_kk a[kk][i] * b[kk][j]` over `kc`
+/// reduction steps, in ascending `kk` order. `a` is one packed A strip
+/// (`kc * MR`, k-major), `b` one packed B panel (`kc * NR`, k-major). The
+/// constant-bound inner loops over a local accumulator array are what LLVM
+/// turns into broadcast-multiply-add vector code.
+#[inline(always)]
+fn micro(kc: usize, a: &[f32], b: &[f32]) -> [[f32; NR]; MR] {
+    let mut acc = [[0.0f32; NR]; MR];
+    for (av, bv) in a.chunks_exact(MR).zip(b.chunks_exact(NR)).take(kc) {
+        for i in 0..MR {
+            let ai = av[i];
+            for j in 0..NR {
+                acc[i][j] += ai * bv[j];
+            }
+        }
+    }
+    acc
+}
+
+/// `c (m, n) += A (m, k) · B (k, n)` with A pre-packed by [`pack_a`] /
+/// [`pack_a_t`] and B described by a [`BSrc`].
+///
+/// `scratch` is the caller's packed-B buffer; it is grown to at most
+/// `KC * NC` floats on first use and reused across calls made with the
+/// same buffer (the conv drivers hand each worker thread one scratch that
+/// it reuses for every example it processes within the call). Accumulation
+/// into `c` happens in a fixed, thread-independent order — see the module
+/// docs for the determinism argument.
+pub fn gemm(c: &mut [f32], m: usize, n: usize, k: usize, apack: &[f32], b: &BSrc<'_>, scratch: &mut Vec<f32>) {
+    debug_assert_eq!(c.len(), m * n);
+    debug_assert_eq!(apack.len(), packed_a_len(m, k));
+    check_b_dims(b, k, n);
+    let mut j0 = 0usize;
+    while j0 < n {
+        let nc = NC.min(n - j0);
+        let npan = nc.div_ceil(NR);
+        let mut k0 = 0usize;
+        while k0 < k {
+            let kc = KC.min(k - k0);
+            if scratch.len() < npan * kc * NR {
+                scratch.resize(npan * kc * NR, 0.0);
+            }
+            pack_b(b, k, n, k0, kc, j0, nc, scratch);
+            for ip in 0..m.div_ceil(MR) {
+                let astrip = &apack[ip * k * MR + k0 * MR..ip * k * MR + (k0 + kc) * MR];
+                let rows = MR.min(m - ip * MR);
+                for jp in 0..npan {
+                    let acc = micro(kc, astrip, &scratch[jp * kc * NR..(jp + 1) * kc * NR]);
+                    let cols = NR.min(nc - jp * NR);
+                    let jbase = j0 + jp * NR;
+                    for (i, arow) in acc.iter().enumerate().take(rows) {
+                        let crow = &mut c[(ip * MR + i) * n + jbase..(ip * MR + i) * n + jbase + cols];
+                        for (cv, av) in crow.iter_mut().zip(arow.iter()) {
+                            *cv += av;
+                        }
+                    }
+                }
+            }
+            k0 += kc;
+        }
+        j0 += nc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::runtime::native::ops;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect()
+    }
+
+    fn max_rel(a: &[f32], b: &[f32]) -> f32 {
+        a.iter()
+            .zip(b)
+            .map(|(&x, &y)| (x - y).abs() / x.abs().max(y.abs()).max(1e-4))
+            .fold(0.0f32, f32::max)
+    }
+
+    #[test]
+    fn gemm_matches_naive_reference_awkward_shapes() {
+        // Sizes straddle every blocking edge: m % MR, n % NR, k % KC, and
+        // multi-block k (700 > 2*KC is two full blocks + remainder).
+        let mut rng = Rng::new(0x6E33);
+        for &(m, n, k) in &[
+            (5usize, 13usize, 700usize),
+            (4, 8, 256),
+            (17, 31, 300),
+            (1, 1, 1),
+            (64, 10, 32),
+            (33, 961, 216),
+            (3, 600, 12),
+        ] {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let mut want = vec![0.0f32; m * n];
+            ops::matmul_acc(&a, &b, m, k, n, &mut want);
+
+            let mut apack = vec![0.0f32; packed_a_len(m, k)];
+            pack_a(&a, m, k, &mut apack);
+            let mut scratch = Vec::new();
+            let mut got = vec![0.0f32; m * n];
+            gemm(&mut got, m, n, k, &apack, &BSrc::Mat(&b), &mut scratch);
+            let rel = max_rel(&want, &got);
+            // f32 addition is not associative: the blocked reduction order
+            // legitimately differs from the running sum by O(k * eps) on
+            // cancellation-heavy elements (measured ~6e-5 at k=300), so the
+            // bound scales with the reduction depth. A real indexing bug
+            // produces O(1) relative error and still fails loudly.
+            let tol = (1e-6 * k as f32).max(1e-5);
+            assert!(rel < tol, "nn m={m} n={n} k={k}: rel {rel} (tol {tol})");
+
+            // Aᵀ path: store A as (k, m) and pack transposed.
+            let mut at = vec![0.0f32; m * k];
+            for r in 0..m {
+                for kk in 0..k {
+                    at[kk * m + r] = a[r * k + kk];
+                }
+            }
+            pack_a_t(&at, m, k, &mut apack);
+            let mut got_t = vec![0.0f32; m * n];
+            gemm(&mut got_t, m, n, k, &apack, &BSrc::Mat(&b), &mut scratch);
+            // Same packed panels, same order: bit-identical to the nn path.
+            assert_eq!(got, got_t, "tn differs from nn at m={m} n={n} k={k}");
+
+            // Bᵀ path: store B as (n, k).
+            let mut bt = vec![0.0f32; k * n];
+            for kk in 0..k {
+                for j in 0..n {
+                    bt[j * k + kk] = b[kk * n + j];
+                }
+            }
+            pack_a(&a, m, k, &mut apack);
+            let mut got_bt = vec![0.0f32; m * n];
+            gemm(&mut got_bt, m, n, k, &apack, &BSrc::MatT(&bt), &mut scratch);
+            assert_eq!(got, got_bt, "nt differs from nn at m={m} n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn gemm_accumulates_into_c() {
+        // C += A·B semantics: a second call doubles the result.
+        let mut rng = Rng::new(0xACC);
+        let (m, n, k) = (6usize, 20usize, 40usize);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mut apack = vec![0.0f32; packed_a_len(m, k)];
+        pack_a(&a, m, k, &mut apack);
+        let mut scratch = Vec::new();
+        let mut c = vec![0.0f32; m * n];
+        gemm(&mut c, m, n, k, &apack, &BSrc::Mat(&b), &mut scratch);
+        let once = c.clone();
+        gemm(&mut c, m, n, k, &apack, &BSrc::Mat(&b), &mut scratch);
+        for (twice, one) in c.iter().zip(&once) {
+            assert_eq!(*twice, 2.0 * one);
+        }
+    }
+
+    #[test]
+    fn implicit_im2col_matches_materialized() {
+        // Packing straight from the image must equal im2col-then-Mat —
+        // bit-for-bit, since the packed panels are identical.
+        let mut rng = Rng::new(0x1337);
+        for &(cin, h, w, cout, kh, pad) in &[
+            (3usize, 32usize, 32usize, 24usize, 2usize, 0usize),
+            (24, 31, 31, 16, 3, 1),
+            (16, 15, 15, 32, 3, 1),
+            (32, 3, 3, 32, 3, 1),
+            (2, 5, 4, 3, 3, 1),
+        ] {
+            let (oh, ow) = (conv_out_hw(h, kh, pad), conv_out_hw(w, kh, pad));
+            let (k, p) = (cin * kh * kh, oh * ow);
+            let x = rand_vec(&mut rng, cin * h * w);
+            let wt = rand_vec(&mut rng, cout * k);
+            let mut cols = vec![0.0f32; k * p];
+            ops::im2col(&x, cin, h, w, kh, kh, pad, &mut cols);
+
+            let mut apack = vec![0.0f32; packed_a_len(cout, k)];
+            pack_a(&wt, cout, k, &mut apack);
+            let mut scratch = Vec::new();
+            let mut via_mat = vec![0.0f32; cout * p];
+            gemm(&mut via_mat, cout, p, k, &apack, &BSrc::Mat(&cols), &mut scratch);
+            let mut via_img = vec![0.0f32; cout * p];
+            gemm(
+                &mut via_img,
+                cout,
+                p,
+                k,
+                &apack,
+                &BSrc::Im2col { x: &x, cin, h, w, kh, kw: kh, pad },
+                &mut scratch,
+            );
+            assert_eq!(via_mat, via_img, "cin={cin} h={h} cout={cout} kh={kh}");
+
+            // Transposed: dW-style GEMM against im2colᵀ vs materialized colsᵀ.
+            let dy = rand_vec(&mut rng, cout * p);
+            let mut colst = vec![0.0f32; k * p];
+            for kk in 0..k {
+                for j in 0..p {
+                    colst[j * k + kk] = cols[kk * p + j];
+                }
+            }
+            let mut apy = vec![0.0f32; packed_a_len(cout, p)];
+            pack_a(&dy, cout, p, &mut apy);
+            let mut dw_mat = vec![0.0f32; cout * k];
+            gemm(&mut dw_mat, cout, k, p, &apy, &BSrc::Mat(&colst), &mut scratch);
+            let mut dw_img = vec![0.0f32; cout * k];
+            gemm(
+                &mut dw_img,
+                cout,
+                k,
+                p,
+                &apy,
+                &BSrc::Im2colT { x: &x, cin, h, w, kh, kw: kh, pad },
+                &mut scratch,
+            );
+            assert_eq!(dw_mat, dw_img, "im2colT cin={cin} h={h}");
+        }
+    }
+
+    #[test]
+    fn gemm_is_deterministic_across_scratch_states() {
+        // A dirty or pre-grown scratch buffer must not change a single bit
+        // (panels are fully overwritten, edges zero-filled).
+        let mut rng = Rng::new(0xD17);
+        let (m, n, k) = (10usize, 100usize, 50usize);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mut apack = vec![0.0f32; packed_a_len(m, k)];
+        pack_a(&a, m, k, &mut apack);
+        let run = |scratch: &mut Vec<f32>| {
+            let mut c = vec![0.0f32; m * n];
+            gemm(&mut c, m, n, k, &apack, &BSrc::Mat(&b), scratch);
+            c
+        };
+        let clean = run(&mut Vec::new());
+        let mut dirty = vec![f32::NAN; KC * NC];
+        assert_eq!(clean, run(&mut dirty));
+        let mut grown = vec![7.5f32; 8];
+        assert_eq!(clean, run(&mut grown));
+    }
+
+    #[test]
+    fn pack_a_zero_pads_edge_rows() {
+        // m = 5 -> two strips; rows 5..7 of strip 1 must be zero.
+        let (m, k) = (5usize, 3usize);
+        let a: Vec<f32> = (0..m * k).map(|i| i as f32 + 1.0).collect();
+        let mut out = vec![f32::NAN; packed_a_len(m, k)];
+        pack_a(&a, m, k, &mut out);
+        for kk in 0..k {
+            assert_eq!(out[kk * MR], a[kk]); // row 0
+            let strip1 = &out[k * MR..];
+            assert_eq!(strip1[kk * MR], a[4 * k + kk]); // row 4
+            for i in 1..MR {
+                assert_eq!(strip1[kk * MR + i], 0.0, "pad row {i} not zero");
+            }
+        }
+    }
+}

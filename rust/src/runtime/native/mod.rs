@@ -4,12 +4,14 @@
 //! This is the hermetic twin of the PJRT backend: the same step contract
 //! ([`crate::runtime::backend::Backend`]), the same [`Variant`] tensor
 //! inventory, the same training semantics as `python/compile/model.py` —
-//! whiten 2x2 VALID conv + bias, three blocks of 3x3 SAME convs (im2col
-//! matmul) with 2x2 maxpool after the first conv of each block, scale-free
-//! BatchNorm (momentum 0.6, eps 1e-12) + exact GELU, final 3x3 maxpool,
-//! linear head scaled by 1/9, label-smoothed (0.2) sum-reduced cross
-//! entropy, and the PyTorch Nesterov-SGD rule with the 64x BN-bias LR
-//! group and decoupled weight decay (§3.4).
+//! whiten 2x2 VALID conv + bias, three blocks of 3x3 SAME convs with 2x2
+//! maxpool after the first conv of each block, scale-free BatchNorm
+//! (momentum 0.6, eps 1e-12) + exact GELU, final 3x3 maxpool, linear head
+//! scaled by 1/9, label-smoothed (0.2) sum-reduced cross entropy, and the
+//! PyTorch Nesterov-SGD rule with the 64x BN-bias LR group and decoupled
+//! weight decay (§3.4). Every convolution (forward and backward) and the
+//! classifier matmul run through the blocked, register-tiled GEMM
+//! microkernel in [`gemm`] (DESIGN.md §2.1).
 //!
 //! It exists so every layer above the seam — trainer, evaluator, fleet,
 //! benches, the §2 timing protocol — runs (and is *tested*) on machines
@@ -18,6 +20,7 @@
 //! partitioning (see [`ops`]), so outputs are bit-identical for every
 //! `AIRBENCH_NATIVE_THREADS` value.
 
+pub mod gemm;
 pub mod ops;
 pub mod variants;
 
@@ -55,6 +58,7 @@ pub fn default_threads() -> usize {
 pub struct NativeBackend {
     variant: Variant,
     threads: usize,
+    /// Wall-clock accounting (public so benches can reset between sections).
     pub stats: BackendStats,
 }
 
@@ -72,6 +76,9 @@ struct LayerCache {
     ivstd: Vec<f32>,
     /// GELU pre-activation (`xhat + bias`).
     pre_act: Tensor,
+    /// Cached GELU CDF factor `Phi(pre_act)` — halves the backward pass's
+    /// transcendental cost (see [`ops::gelu_bwd_cached`]).
+    phi: Vec<f32>,
 }
 
 /// Everything the optimizer step needs from one forward+backward pass.
@@ -141,6 +148,7 @@ impl NativeBackend {
         self
     }
 
+    /// The variant this backend executes.
     pub fn variant(&self) -> &Variant {
         &self.variant
     }
@@ -171,7 +179,7 @@ impl NativeBackend {
         let mut pre = ops::conv2d_fwd(images, state.get("whiten_w")?, 0, t);
         add_channel_bias(&mut pre, state.get("whiten_b")?.data());
         let whiten_pre = pre;
-        let mut x = ops::gelu_map(&whiten_pre);
+        let (mut x, whiten_phi) = ops::gelu_fwd_cache(&whiten_pre);
 
         let mut caches: Vec<LayerCache> = Vec::with_capacity(3 * cpb);
         let mut stat_updates = Vec::new();
@@ -204,7 +212,8 @@ impl NativeBackend {
                         .collect();
                     stat_updates.push((name, new));
                 }
-                x = ops::gelu_map(&bn.y);
+                let (act, phi) = ops::gelu_fwd_cache(&bn.y);
+                x = act;
                 caches.push(LayerCache {
                     conv_in,
                     conv_out_shape,
@@ -212,6 +221,7 @@ impl NativeBackend {
                     xhat: bn.xhat,
                     ivstd: bn.ivstd,
                     pre_act: bn.y,
+                    phi,
                 });
                 if hy.residual && j == 1 {
                     skip = Some(x.clone());
@@ -236,21 +246,58 @@ impl NativeBackend {
         let k = v.num_classes;
         let s = hy.scaling_factor as f32;
         let head_in = pool3.reshape(&[n, f])?;
+        // The classifier matmuls run through the same blocked GEMM kernel
+        // as the convolutions; one packed-A buffer and one panel scratch
+        // are reused across the three head GEMMs of the step.
+        let mut scratch = Vec::new();
+        let apack_len = gemm::packed_a_len(n, f)
+            .max(gemm::packed_a_len(f, n))
+            .max(gemm::packed_a_len(n, k));
+        let mut apack = vec![0.0f32; apack_len];
         let mut logits = Tensor::zeros(&[n, k]);
-        ops::matmul_acc(head_in.data(), head_w.data(), n, f, k, logits.data_mut());
+        gemm::pack_a(head_in.data(), n, f, &mut apack[..gemm::packed_a_len(n, f)]);
+        gemm::gemm(
+            logits.data_mut(),
+            n,
+            k,
+            f,
+            &apack[..gemm::packed_a_len(n, f)],
+            &gemm::BSrc::Mat(head_w.data()),
+            &mut scratch,
+        );
         logits.scale(s);
 
         // ---- loss + backward --------------------------------------------
         let (loss, acc, dlogits) = ops::ce_loss_grad(&logits, labels, hy.label_smoothing as f32);
         let mut grads: BTreeMap<String, Tensor> = BTreeMap::new();
 
+        // dW (f, k) = head_in^T (f, n) @ dlogits (n, k)
         let mut dhead_w = Tensor::zeros(&[f, k]);
-        ops::matmul_at_acc(head_in.data(), dlogits.data(), n, f, k, dhead_w.data_mut());
+        gemm::pack_a_t(head_in.data(), f, n, &mut apack[..gemm::packed_a_len(f, n)]);
+        gemm::gemm(
+            dhead_w.data_mut(),
+            f,
+            k,
+            n,
+            &apack[..gemm::packed_a_len(f, n)],
+            &gemm::BSrc::Mat(dlogits.data()),
+            &mut scratch,
+        );
         dhead_w.scale(s);
         grads.insert("head_w".into(), dhead_w);
 
+        // dhead_in (n, f) = dlogits (n, k) @ head_w^T (k, f)
         let mut dhead_in = Tensor::zeros(&[n, f]);
-        ops::matmul_bt_acc(dlogits.data(), head_w.data(), n, k, f, dhead_in.data_mut());
+        gemm::pack_a(dlogits.data(), n, k, &mut apack[..gemm::packed_a_len(n, k)]);
+        gemm::gemm(
+            dhead_in.data_mut(),
+            n,
+            f,
+            k,
+            &apack[..gemm::packed_a_len(n, k)],
+            &gemm::BSrc::MatT(head_w.data()),
+            &mut scratch,
+        );
         dhead_in.scale(s);
         let dpool3 = dhead_in.reshape(&pool3_shape)?;
         let mut dx = ops::maxpool_bwd(&dpool3, &idx3, &x_final_shape);
@@ -266,7 +313,7 @@ impl NativeBackend {
                     }
                 }
                 let cache = caches.pop().expect("cache per conv layer");
-                let dpre = ops::gelu_bwd(&dx, &cache.pre_act);
+                let dpre = ops::gelu_bwd_cached(&dx, &cache.pre_act, &cache.phi);
                 let (dbn_in, dbias) = ops::bn_train_bwd(&dpre, &cache.xhat, &cache.ivstd);
                 grads.insert(
                     format!("block{b}_bn{j}_b"),
@@ -287,7 +334,7 @@ impl NativeBackend {
         }
         // Whitening layer: frozen weights, trainable bias only — no
         // gradient flows further than the bias sum.
-        let dwpre = ops::gelu_bwd(&dx, &whiten_pre);
+        let dwpre = ops::gelu_bwd_cached(&dx, &whiten_pre, &whiten_phi);
         let (_, wc, wh, ww_) = dwpre.dims4();
         let mut db = vec![0.0f32; wc];
         for ni in 0..n {
@@ -410,7 +457,18 @@ impl NativeBackend {
         let k = v.num_classes;
         let head_in = pool3.reshape(&[n, f])?;
         let mut logits = Tensor::zeros(&[n, k]);
-        ops::matmul_acc(head_in.data(), head_w.data(), n, f, k, logits.data_mut());
+        let mut apack = vec![0.0f32; gemm::packed_a_len(n, f)];
+        gemm::pack_a(head_in.data(), n, f, &mut apack);
+        let mut scratch = Vec::new();
+        gemm::gemm(
+            logits.data_mut(),
+            n,
+            k,
+            f,
+            &apack,
+            &gemm::BSrc::Mat(head_w.data()),
+            &mut scratch,
+        );
         logits.scale(hy.scaling_factor as f32);
         Ok(logits)
     }

@@ -1,6 +1,13 @@
-//! Numerical kernels of the native backend: im2col convolution, BatchNorm,
-//! GELU, max pooling, label-smoothed cross entropy, and the small matmul
-//! family everything reduces to.
+//! Numerical kernels of the native backend: blocked-GEMM convolution,
+//! BatchNorm, GELU, max pooling, and label-smoothed cross entropy.
+//!
+//! Convolutions (forward, backward-data, backward-weights) all lower to the
+//! cache-blocked, register-tiled GEMM in [`super::gemm`], with the im2col
+//! operand packed implicitly from the image — no per-example column matrix
+//! is materialized (DESIGN.md §2.1). The naive kernels this replaced
+//! ([`matmul_acc`] and friends, [`im2col`]/[`col2im_acc`]) are kept as the
+//! slow reference implementations that the parity tests and
+//! `benches/hotpath_micro.rs` compare against.
 //!
 //! Determinism contract: every function here is a pure function of its
 //! inputs — **independent of the thread count**. Convolutions parallelize
@@ -11,6 +18,7 @@
 //! training possible on any machine (DESIGN.md §5 extends this argument to
 //! the data pipeline).
 
+use crate::runtime::native::gemm::{self, BSrc};
 use crate::tensor::Tensor;
 
 /// Baseline examples per weight-gradient partial. Never derived from the
@@ -88,11 +96,49 @@ pub fn gelu_bwd(dy: &Tensor, pre: &Tensor) -> Tensor {
     out
 }
 
+/// GELU forward that also returns the per-element CDF factor
+/// `Φ(x) = 0.5 * (1 + erf(x/√2))`, so the training backward pass can reuse
+/// it: `gelu'(x) = Φ(x) + x·φ(x)` then needs only one `exp` per element
+/// instead of recomputing the erf polynomial ([`gelu_bwd_cached`]).
+/// Bit-identical outputs to [`gelu_map`].
+pub fn gelu_fwd_cache(x: &Tensor) -> (Tensor, Vec<f32>) {
+    let mut out = Tensor::zeros(x.shape());
+    let mut phi = vec![0.0f32; x.len()];
+    for ((o, p), &v) in out.data_mut().iter_mut().zip(phi.iter_mut()).zip(x.data()) {
+        let cdf = 0.5 * (1.0 + erf(v * FRAC_1_SQRT_2));
+        *p = cdf;
+        *o = v * cdf;
+    }
+    (out, phi)
+}
+
+/// Backward through GELU with the forward's cached `Φ(pre)` — bit-identical
+/// to [`gelu_bwd`], at roughly half the transcendental cost.
+pub fn gelu_bwd_cached(dy: &Tensor, pre: &Tensor, phi: &[f32]) -> Tensor {
+    debug_assert_eq!(dy.shape(), pre.shape());
+    debug_assert_eq!(dy.len(), phi.len());
+    let mut out = Tensor::zeros(dy.shape());
+    let od = out.data_mut();
+    let (dyd, pd) = (dy.data(), pre.data());
+    for i in 0..od.len() {
+        let x = pd[i];
+        let phi_small = INV_SQRT_TAU * (-0.5 * x * x).exp();
+        od[i] = dyd[i] * (phi[i] + x * phi_small);
+    }
+    out
+}
+
 // ---------------------------------------------------------------------------
-// Matmul family (row-major, accumulate into `out`)
+// Naive matmul family (row-major, accumulate into `out`)
+//
+// These are the pre-blocked-GEMM kernels, kept as the *reference*
+// implementations: the gemm parity tests compare against them, and
+// `benches/hotpath_micro.rs` times them against the blocked kernel. The
+// hot path no longer calls them.
 // ---------------------------------------------------------------------------
 
-/// `out (m,n) += a (m,k) @ b (k,n)` — i-k-j loop, axpy inner (vectorizes).
+/// `out (m,n) += a (m,k) @ b (k,n)` — naive i-k-j loop, axpy inner
+/// (reference kernel; the hot path uses [`super::gemm`]).
 pub fn matmul_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
@@ -111,7 +157,7 @@ pub fn matmul_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut 
     }
 }
 
-/// `out (k,n) += a (m,k)^T @ b (m,n)`.
+/// `out (k,n) += a (m,k)^T @ b (m,n)` (naive reference kernel).
 pub fn matmul_at_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), m * n);
@@ -130,7 +176,7 @@ pub fn matmul_at_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &m
     }
 }
 
-/// `out (m,n) += a (m,k) @ b (n,k)^T` — row-dot inner loop.
+/// `out (m,n) += a (m,k) @ b (n,k)^T` — naive row-dot reference kernel.
 pub fn matmul_bt_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
@@ -151,6 +197,11 @@ pub fn matmul_bt_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &m
 
 // ---------------------------------------------------------------------------
 // im2col / col2im (stride 1, symmetric zero padding)
+//
+// Reference implementations: the hot path packs the im2col operand
+// implicitly inside `gemm` and computes backward-data as a rotated-filter
+// forward conv, so neither function runs per step anymore. The adjoint
+// property test and the parity tests keep them honest.
 // ---------------------------------------------------------------------------
 
 /// Output spatial size of a stride-1 conv: `h + 2*pad - kh + 1`.
@@ -249,18 +300,30 @@ pub fn col2im_acc(
 // Batch-parallel helpers (deterministic partitioning)
 // ---------------------------------------------------------------------------
 
+/// Per-thread scratch buffers a worker reuses across every example it
+/// processes within one conv call: `a` holds a packed GEMM A operand (the
+/// weight-gradient path packs one per example), `b` holds the packed B
+/// panels of the blocked GEMM. Buffers are allocated per call, not
+/// persisted across steps — the per-step allocation cost is a handful of
+/// bounded buffers, amortized over a whole batch of GEMMs.
+#[derive(Default)]
+struct Scratch {
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
 /// Run `work(example, out_slice, scratch)` for every example, writing each
 /// example's disjoint `out` region. Contiguous example blocks go to up to
 /// `threads` scoped threads; output bits are independent of `threads`
 /// because the per-example computation is independent.
 fn par_examples<F>(n: usize, item: usize, out: &mut [f32], threads: usize, work: &F)
 where
-    F: Fn(usize, &mut [f32], &mut Vec<f32>) + Sync,
+    F: Fn(usize, &mut [f32], &mut Scratch) + Sync,
 {
     debug_assert_eq!(out.len(), n * item);
     let t = threads.clamp(1, n.max(1));
     if t <= 1 {
-        let mut scratch = Vec::new();
+        let mut scratch = Scratch::default();
         for (i, slice) in out.chunks_mut(item).enumerate() {
             work(i, slice, &mut scratch);
         }
@@ -276,7 +339,7 @@ where
             rest = tail;
             let s0 = start;
             s.spawn(move || {
-                let mut scratch = Vec::new();
+                let mut scratch = Scratch::default();
                 for (j, slice) in mine.chunks_mut(item).enumerate() {
                     work(s0 + j, slice, &mut scratch);
                 }
@@ -293,14 +356,14 @@ where
 /// that does not depend on `threads`.
 fn par_chunk_reduce<F>(n: usize, plen: usize, threads: usize, work: &F) -> Vec<f32>
 where
-    F: Fn(usize, &mut [f32], &mut Vec<f32>) + Sync,
+    F: Fn(usize, &mut [f32], &mut Scratch) + Sync,
 {
     let chunk = reduce_chunk(n, plen);
     let n_chunks = n.div_ceil(chunk).max(1);
     let mut partials = vec![0.0f32; n_chunks * plen];
     let t = threads.clamp(1, n_chunks);
     if t <= 1 {
-        let mut scratch = Vec::new();
+        let mut scratch = Scratch::default();
         for (c, part) in partials.chunks_mut(plen).enumerate() {
             for i in c * chunk..(c * chunk + chunk).min(n) {
                 work(i, part, &mut scratch);
@@ -317,7 +380,7 @@ where
                 rest = tail;
                 let first = c0;
                 s.spawn(move || {
-                    let mut scratch = Vec::new();
+                    let mut scratch = Scratch::default();
                     for (jc, part) in mine.chunks_mut(plen).enumerate() {
                         let c = first + jc;
                         for i in c * chunk..(c * chunk + chunk).min(n) {
@@ -345,6 +408,11 @@ where
 
 /// Forward conv: `x (n, cin, h, w) * w (cout, cin, kh, kw) -> (n, cout, oh,
 /// ow)`. `pad = 1` is the 3x3 SAME conv, `pad = 0` the whitening VALID conv.
+///
+/// Lowered to implicit GEMM: the weights are packed once per call (the A
+/// operand shared by every example's GEMM), and each example's im2col
+/// operand is packed panel-by-panel straight from the image — the full
+/// column matrix is never materialized.
 pub fn conv2d_fwd(x: &Tensor, weight: &Tensor, pad: usize, threads: usize) -> Tensor {
     let (n, cin, h, w) = x.dims4();
     let (cout, cin2, kh, kw) = weight.dims4();
@@ -352,17 +420,36 @@ pub fn conv2d_fwd(x: &Tensor, weight: &Tensor, pad: usize, threads: usize) -> Te
     let (oh, ow) = (conv_out_hw(h, kh, pad), conv_out_hw(w, kw, pad));
     let (k, p) = (cin * kh * kw, oh * ow);
     let mut out = Tensor::zeros(&[n, cout, oh, ow]);
-    let (xd, wd) = (x.data(), weight.data());
+    let xd = x.data();
     let xsz = cin * h * w;
-    par_examples(n, cout * p, out.data_mut(), threads, &|i, oslice, scratch| {
-        scratch.resize(k * p, 0.0);
-        im2col(&xd[i * xsz..(i + 1) * xsz], cin, h, w, kh, kw, pad, scratch);
-        matmul_acc(wd, scratch, cout, k, p, oslice);
+    let mut apack = vec![0.0f32; gemm::packed_a_len(cout, k)];
+    gemm::pack_a(weight.data(), cout, k, &mut apack);
+    let apack = &apack;
+    par_examples(n, cout * p, out.data_mut(), threads, &|i, oslice, s| {
+        gemm::gemm(
+            oslice,
+            cout,
+            p,
+            k,
+            apack,
+            &BSrc::Im2col { x: &xd[i * xsz..(i + 1) * xsz], cin, h, w, kh, kw, pad },
+            &mut s.b,
+        );
     });
     out
 }
 
 /// Backward-data conv: gradient w.r.t. the conv input.
+///
+/// The adjoint of a stride-1 conv is itself a stride-1 conv with the
+/// filters channel-transposed and rotated 180 degrees, applied to `dy`
+/// with padding `k - 1 - pad` — so this runs through the *same* implicit
+/// GEMM as the forward pass instead of materializing a `(k, p)` column
+/// gradient and scatter-adding it back. Rectangular kernels and
+/// `pad >= k` have no symmetric-padding rotated-filter equivalent; those
+/// (cold, outside the airbench topology) fall back to the explicit
+/// [`col2im_acc`] adjoint, so the full domain of the pre-blocked
+/// implementation still works in release builds.
 pub fn conv2d_bwd_data(
     dy: &Tensor,
     weight: &Tensor,
@@ -375,22 +462,71 @@ pub fn conv2d_bwd_data(
     let (cout2, cin, kh, kw) = weight.dims4();
     debug_assert_eq!(cout, cout2);
     debug_assert_eq!(oh, conv_out_hw(in_h, kh, pad));
-    let (k, p) = (cin * kh * kw, oh * ow);
+    let wd = weight.data();
+    if kh != kw || pad >= kh {
+        // Explicit adjoint: dcols (k, p) = W^T @ dy_i, scatter-added back.
+        let (k, p) = (cin * kh * kw, oh * ow);
+        let mut dx = Tensor::zeros(&[n, cin, in_h, in_w]);
+        let dyd = dy.data();
+        let (dysz, xsz) = (cout * p, cin * in_h * in_w);
+        par_examples(n, xsz, dx.data_mut(), threads, &|i, xslice, s| {
+            s.b.resize(k * p, 0.0);
+            s.b.fill(0.0);
+            matmul_at_acc(wd, &dyd[i * dysz..(i + 1) * dysz], cout, k, p, &mut s.b);
+            col2im_acc(&s.b, cin, in_h, in_w, kh, kw, pad, xslice);
+        });
+        return dx;
+    }
+    // W'[ci][co][ky][kx] = W[co][ci][kh-1-ky][kw-1-kx]
+    let mut wrot = vec![0.0f32; cin * cout * kh * kw];
+    for co in 0..cout {
+        for ci in 0..cin {
+            for ky in 0..kh {
+                for kx in 0..kw {
+                    wrot[((ci * cout + co) * kh + (kh - 1 - ky)) * kw + (kw - 1 - kx)] =
+                        wd[((co * cin + ci) * kh + ky) * kw + kx];
+                }
+            }
+        }
+    }
+    let padr = kh - 1 - pad;
+    debug_assert_eq!(conv_out_hw(oh, kh, padr), in_h);
+    let kdim = cout * kh * kw;
+    let p = in_h * in_w;
+    let mut apack = vec![0.0f32; gemm::packed_a_len(cin, kdim)];
+    gemm::pack_a(&wrot, cin, kdim, &mut apack);
+    let apack = &apack;
     let mut dx = Tensor::zeros(&[n, cin, in_h, in_w]);
-    let (dyd, wd) = (dy.data(), weight.data());
-    let (dysz, xsz) = (cout * p, cin * in_h * in_w);
-    par_examples(n, xsz, dx.data_mut(), threads, &|i, xslice, scratch| {
-        scratch.resize(k * p, 0.0);
-        scratch.fill(0.0);
-        // dcols (k, p) = W^T (k, cout) @ dy_i (cout, p)
-        matmul_at_acc(wd, &dyd[i * dysz..(i + 1) * dysz], cout, k, p, scratch);
-        col2im_acc(scratch, cin, in_h, in_w, kh, kw, pad, xslice);
+    let dyd = dy.data();
+    let dysz = cout * oh * ow;
+    par_examples(n, cin * p, dx.data_mut(), threads, &|i, xslice, s| {
+        gemm::gemm(
+            xslice,
+            cin,
+            p,
+            kdim,
+            apack,
+            &BSrc::Im2col {
+                x: &dyd[i * dysz..(i + 1) * dysz],
+                cin: cout,
+                h: oh,
+                w: ow,
+                kh,
+                kw,
+                pad: padr,
+            },
+            &mut s.b,
+        );
     });
     dx
 }
 
 /// Backward-weights conv: gradient w.r.t. the filters, reduced over the
 /// batch with the deterministic chunked tree.
+///
+/// Per example this is the GEMM `dW (cout, k) += dy_i (cout, p) ·
+/// im2col(x_i)ᵀ (p, k)`: `dy_i` is packed as the A operand and the
+/// transposed column matrix is packed implicitly from the image.
 pub fn conv2d_bwd_weights(
     x: &Tensor,
     dy: &Tensor,
@@ -406,11 +542,19 @@ pub fn conv2d_bwd_weights(
     let (k, p) = (cin * kh * kw, oh * ow);
     let (xd, dyd) = (x.data(), dy.data());
     let (xsz, dysz) = (cin * h * w, cout * p);
-    let dw = par_chunk_reduce(n, cout * k, threads, &|i, partial, scratch| {
-        scratch.resize(k * p, 0.0);
-        im2col(&xd[i * xsz..(i + 1) * xsz], cin, h, w, kh, kw, pad, scratch);
-        // dW (cout, k) += dy_i (cout, p) @ cols (k, p)^T
-        matmul_bt_acc(&dyd[i * dysz..(i + 1) * dysz], scratch, cout, p, k, partial);
+    let alen = gemm::packed_a_len(cout, p);
+    let dw = par_chunk_reduce(n, cout * k, threads, &|i, partial, s| {
+        s.a.resize(alen, 0.0);
+        gemm::pack_a(&dyd[i * dysz..(i + 1) * dysz], cout, p, &mut s.a);
+        gemm::gemm(
+            partial,
+            cout,
+            k,
+            p,
+            &s.a,
+            &BSrc::Im2colT { x: &xd[i * xsz..(i + 1) * xsz], cin, h, w, kh, kw, pad },
+            &mut s.b,
+        );
     });
     Tensor::from_vec(&[cout, cin, kh, kw], dw).expect("conv dw shape")
 }
@@ -792,6 +936,125 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Max relative difference with a small absolute floor (f32 reorder
+    /// noise on near-zero sums would otherwise dominate the ratio).
+    fn max_rel(a: &[f32], b: &[f32]) -> f32 {
+        a.iter()
+            .zip(b)
+            .map(|(&x, &y)| (x - y).abs() / x.abs().max(y.abs()).max(1e-2))
+            .fold(0.0f32, f32::max)
+    }
+
+    #[test]
+    fn conv_bwd_data_matches_col2im_adjoint() {
+        // The blocked path computes dx as a rotated-filter forward conv;
+        // the reference is the explicit adjoint W^T @ dy -> col2im. Same
+        // math, different f32 summation order: the bound (2e-4 with a 1e-2
+        // floor) sits ~20x above the measured reorder noise at these
+        // shapes, and ~4 orders below what any indexing bug produces.
+        let mut rng = Rng::new(0xADA);
+        for &(n, cin, h, w, cout, k, pad) in &[
+            (2usize, 3usize, 8usize, 8usize, 4usize, 3usize, 1usize),
+            (1, 2, 5, 4, 3, 3, 1),
+            (2, 4, 6, 6, 2, 2, 0),
+        ] {
+            let (oh, ow) = (conv_out_hw(h, k, pad), conv_out_hw(w, k, pad));
+            let wt = rand_tensor(&mut rng, &[cout, cin, k, k]);
+            let dy = rand_tensor(&mut rng, &[n, cout, oh, ow]);
+            let got = conv2d_bwd_data(&dy, &wt, pad, h, w, 1);
+            // reference: per example, dcols = W^T @ dy_i, then col2im
+            let (kd, p) = (cin * k * k, oh * ow);
+            let mut want = Tensor::zeros(&[n, cin, h, w]);
+            for i in 0..n {
+                let mut dcols = vec![0.0f32; kd * p];
+                matmul_at_acc(
+                    wt.data(),
+                    &dy.data()[i * cout * p..(i + 1) * cout * p],
+                    cout,
+                    kd,
+                    p,
+                    &mut dcols,
+                );
+                let xsz = cin * h * w;
+                col2im_acc(&dcols, cin, h, w, k, k, pad, &mut want.data_mut()[i * xsz..(i + 1) * xsz]);
+            }
+            let rel = max_rel(want.data(), got.data());
+            assert!(rel < 2e-4, "bwd_data rel {rel} at cin={cin} h={h} pad={pad}");
+        }
+    }
+
+    #[test]
+    fn conv_bwd_weights_matches_naive_reference() {
+        let mut rng = Rng::new(0xD0);
+        let (n, cin, h, w, cout, k, pad) = (4usize, 3usize, 9usize, 7usize, 5usize, 3usize, 1usize);
+        let (oh, ow) = (conv_out_hw(h, k, pad), conv_out_hw(w, k, pad));
+        let x = rand_tensor(&mut rng, &[n, cin, h, w]);
+        let dy = rand_tensor(&mut rng, &[n, cout, oh, ow]);
+        let got = conv2d_bwd_weights(&x, &dy, pad, k, k, 1);
+        // reference: im2col + dy @ cols^T summed over examples
+        let (kd, p) = (cin * k * k, oh * ow);
+        let mut want = vec![0.0f32; cout * kd];
+        let mut cols = vec![0.0f32; kd * p];
+        for i in 0..n {
+            im2col(&x.data()[i * cin * h * w..(i + 1) * cin * h * w], cin, h, w, k, k, pad, &mut cols);
+            matmul_bt_acc(&dy.data()[i * cout * p..(i + 1) * cout * p], &cols, cout, p, kd, &mut want);
+        }
+        let rel = max_rel(&want, got.data());
+        // Reorder-noise bound, same reasoning as conv_bwd_data above.
+        assert!(rel < 2e-4, "bwd_weights rel {rel}");
+    }
+
+    #[test]
+    fn conv_bwd_data_general_domain_satisfies_adjoint_identity() {
+        // Rectangular kernels and pad >= k take the col2im fallback; the
+        // defining adjoint property <conv_fwd(x), dy> == <x, bwd_data(dy)>
+        // must hold across the whole public domain.
+        let mut rng = Rng::new(0x9E9);
+        for &(cin, h, w, cout, kh, kw, pad) in &[
+            (2usize, 5usize, 4usize, 3usize, 2usize, 3usize, 1usize), // kh != kw
+            (2, 5, 5, 3, 2, 2, 2),                                    // pad >= k
+            (1, 4, 6, 2, 3, 2, 2),                                    // both
+        ] {
+            let (oh, ow) = (conv_out_hw(h, kh, pad), conv_out_hw(w, kw, pad));
+            let mut x = Tensor::zeros(&[1, cin, h, w]);
+            for v in x.data_mut() {
+                *v = rng.uniform_in(-1.0, 1.0);
+            }
+            let mut wt = Tensor::zeros(&[cout, cin, kh, kw]);
+            for v in wt.data_mut() {
+                *v = rng.uniform_in(-1.0, 1.0);
+            }
+            let mut dy = Tensor::zeros(&[1, cout, oh, ow]);
+            for v in dy.data_mut() {
+                *v = rng.uniform_in(-1.0, 1.0);
+            }
+            let y = conv2d_fwd(&x, &wt, pad, 1);
+            let dx = conv2d_bwd_data(&dy, &wt, pad, h, w, 1);
+            let lhs: f32 = y.data().iter().zip(dy.data()).map(|(a, b)| a * b).sum();
+            let rhs: f32 = x.data().iter().zip(dx.data()).map(|(a, b)| a * b).sum();
+            assert!(
+                (lhs - rhs).abs() < 1e-3,
+                "adjoint identity broken: kh={kh} kw={kw} pad={pad}: {lhs} vs {rhs}"
+            );
+        }
+    }
+
+    #[test]
+    fn gelu_cached_paths_match_plain() {
+        let mut rng = Rng::new(0x6E1);
+        let x = rand_tensor(&mut rng, &[2, 3, 4, 4]);
+        let dy = rand_tensor(&mut rng, &[2, 3, 4, 4]);
+        let (y, phi) = gelu_fwd_cache(&x);
+        let y_plain = gelu_map(&x);
+        for (a, b) in y.data().iter().zip(y_plain.data()) {
+            assert!((a - b).abs() <= 1e-7, "fwd {a} vs {b}");
+        }
+        // backward with cached Phi is bit-identical to the plain backward
+        let d1 = gelu_bwd_cached(&dy, &x, &phi);
+        let d2 = gelu_bwd(&dy, &x);
+        assert_eq!(d1.data(), d2.data());
     }
 
     #[test]

@@ -27,6 +27,7 @@ pub struct PjrtBackend {
     variant: Variant,
     train_exe: PjRtLoadedExecutable,
     eval_exe: PjRtLoadedExecutable,
+    /// Wall-clock accounting (public so benches can reset between sections).
     pub stats: BackendStats,
 }
 
@@ -70,14 +71,17 @@ impl PjrtBackend {
         })
     }
 
+    /// The variant this backend executes.
     pub fn variant(&self) -> &Variant {
         &self.variant
     }
 
+    /// Train batch size the module was lowered at.
     pub fn batch_train(&self) -> usize {
         self.variant.batch_train
     }
 
+    /// Eval batch size the module was lowered at.
     pub fn batch_eval(&self) -> usize {
         self.variant.batch_eval
     }

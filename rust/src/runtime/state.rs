@@ -87,6 +87,7 @@ impl ModelState {
         Ok(())
     }
 
+    /// Look up a state tensor by manifest name.
     pub fn get(&self, name: &str) -> Result<&Tensor> {
         self.tensors
             .get(name)

@@ -6,15 +6,20 @@
 /// Summary statistics of a sample.
 #[derive(Clone, Copy, Debug)]
 pub struct Summary {
+    /// Sample size.
     pub n: usize,
+    /// Sample mean.
     pub mean: f64,
     /// Sample (n-1) standard deviation.
     pub std: f64,
+    /// Smallest value.
     pub min: f64,
+    /// Largest value.
     pub max: f64,
 }
 
 impl Summary {
+    /// Summarize a sample (all-zeros for an empty slice).
     pub fn of(xs: &[f64]) -> Summary {
         let n = xs.len();
         if n == 0 {

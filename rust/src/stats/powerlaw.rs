@@ -10,14 +10,18 @@
 /// Fitted `error = c + b * epochs^a` curve.
 #[derive(Clone, Copy, Debug)]
 pub struct PowerLaw {
+    /// Exponent (negative for decreasing error curves).
     pub a: f64,
+    /// Scale coefficient.
     pub b: f64,
+    /// Asymptotic error floor.
     pub c: f64,
     /// Sum of squared residuals at the fit.
     pub sse: f64,
 }
 
 impl PowerLaw {
+    /// Predicted error at `epochs`.
     pub fn predict(&self, epochs: f64) -> f64 {
         self.c + self.b * epochs.powf(self.a)
     }

@@ -15,6 +15,7 @@ pub struct Tensor {
 }
 
 impl Tensor {
+    /// All-zeros tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Tensor {
         Tensor {
             shape: shape.to_vec(),
@@ -22,6 +23,7 @@ impl Tensor {
         }
     }
 
+    /// Constant-filled tensor of the given shape.
     pub fn full(shape: &[usize], v: f32) -> Tensor {
         Tensor {
             shape: shape.to_vec(),
@@ -29,6 +31,7 @@ impl Tensor {
         }
     }
 
+    /// Wrap an existing buffer; errors when the length does not match.
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
         let n: usize = shape.iter().product();
         if n != data.len() {
@@ -40,31 +43,37 @@ impl Tensor {
         })
     }
 
+    /// The dimensions.
     #[inline]
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
+    /// Total element count.
     #[inline]
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when the tensor has zero elements.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Read the flat row-major buffer.
     #[inline]
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutate the flat row-major buffer.
     #[inline]
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Consume into the flat buffer.
     pub fn into_vec(self) -> Vec<f32> {
         self.data
     }
@@ -86,12 +95,14 @@ impl Tensor {
         self.data[((n * cc + c) * hh + h) * ww + w]
     }
 
+    /// Scalar store for 4-D NCHW tensors.
     #[inline]
     pub fn set4(&mut self, n: usize, c: usize, h: usize, w: usize, v: f32) {
         let (_, cc, hh, ww) = self.dims4();
         self.data[((n * cc + c) * hh + h) * ww + w] = v;
     }
 
+    /// The four dimensions of an NCHW tensor.
     #[inline]
     pub fn dims4(&self) -> (usize, usize, usize, usize) {
         debug_assert_eq!(self.shape.len(), 4, "expected 4-D, got {:?}", self.shape);
@@ -106,6 +117,7 @@ impl Tensor {
         &self.data[n * sz..(n + 1) * sz]
     }
 
+    /// Mutable flat slice of one NCHW image.
     #[inline]
     pub fn image_mut(&mut self, n: usize) -> &mut [f32] {
         let (_, c, h, w) = self.dims4();
@@ -121,11 +133,13 @@ impl Tensor {
         }
     }
 
+    /// Copy all elements from a same-shaped tensor.
     pub fn copy_from(&mut self, other: &Tensor) {
         debug_assert_eq!(self.shape, other.shape);
         self.data.copy_from_slice(&other.data);
     }
 
+    /// Multiply every element by `s` in place.
     pub fn scale(&mut self, s: f32) {
         for v in &mut self.data {
             *v *= s;
@@ -137,6 +151,7 @@ impl Tensor {
         self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
     }
 
+    /// Mean of all elements (0 for empty tensors).
     pub fn mean(&self) -> f32 {
         if self.data.is_empty() {
             return 0.0;

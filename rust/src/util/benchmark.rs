@@ -9,15 +9,22 @@ use std::time::{Duration, Instant};
 /// Timing summary of one benchmark case.
 #[derive(Clone, Debug)]
 pub struct Sample {
+    /// Case label (printed in the report row).
     pub name: String,
+    /// Timed iterations.
     pub iters: usize,
+    /// Mean per-iteration time.
     pub mean: Duration,
+    /// Median per-iteration time.
     pub median: Duration,
+    /// Fastest iteration.
     pub min: Duration,
+    /// Slowest iteration.
     pub max: Duration,
 }
 
 impl Sample {
+    /// Mean per-iteration time in seconds.
     pub fn mean_secs(&self) -> f64 {
         self.mean.as_secs_f64()
     }
@@ -30,7 +37,9 @@ impl Sample {
 
 /// A tiny criterion-alike: fixed warmup iterations then timed iterations.
 pub struct Bench {
+    /// Untimed warmup iterations before measurement.
     pub warmup_iters: usize,
+    /// Timed iterations.
     pub iters: usize,
 }
 
@@ -44,6 +53,7 @@ impl Default for Bench {
 }
 
 impl Bench {
+    /// Build a bench with explicit warmup / timed iteration counts.
     pub fn new(warmup_iters: usize, iters: usize) -> Bench {
         Bench {
             warmup_iters,
@@ -88,6 +98,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Print the header row and rule; returns the column layout.
     pub fn new(headers: &[&str]) -> Table {
         let widths: Vec<usize> = headers.iter().map(|h| h.len().max(10)).collect();
         let t = Table { widths };
@@ -96,6 +107,7 @@ impl Table {
         t
     }
 
+    /// Print one data row under the header.
     pub fn row(&self, cells: &[&str]) {
         let mut line = String::from("|");
         for (i, c) in cells.iter().enumerate() {

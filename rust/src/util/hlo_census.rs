@@ -15,12 +15,16 @@ use anyhow::{Context, Result};
 /// Instruction counts by opcode, plus computation count.
 #[derive(Clone, Debug, Default)]
 pub struct Census {
+    /// Instruction count per opcode.
     pub ops: BTreeMap<String, usize>,
+    /// Number of HLO computations in the module.
     pub computations: usize,
+    /// Total instruction count.
     pub instructions: usize,
 }
 
 impl Census {
+    /// Count for one opcode (0 when absent).
     pub fn count(&self, op: &str) -> usize {
         self.ops.get(op).copied().unwrap_or(0)
     }

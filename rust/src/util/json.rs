@@ -11,17 +11,24 @@ use anyhow::{anyhow, bail, Result};
 /// A JSON value. Objects keep sorted key order (BTreeMap) for stable output.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (integers round-trip below 2^53).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object with sorted keys.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
     // ----- typed accessors -------------------------------------------------
 
+    /// Required object key (error when absent or not an object).
     pub fn get(&self, key: &str) -> Result<&Json> {
         match self {
             Json::Obj(m) => m
@@ -31,6 +38,7 @@ impl Json {
         }
     }
 
+    /// Optional object key (`None` when absent or not an object).
     pub fn opt(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -38,6 +46,7 @@ impl Json {
         }
     }
 
+    /// The value as f64 (error for non-numbers).
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(x) => Ok(*x),
@@ -45,10 +54,12 @@ impl Json {
         }
     }
 
+    /// The value as usize (truncating; error for non-numbers).
     pub fn as_usize(&self) -> Result<usize> {
         Ok(self.as_f64()? as usize)
     }
 
+    /// The value as a string slice.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -56,6 +67,7 @@ impl Json {
         }
     }
 
+    /// The value as a bool.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -63,6 +75,7 @@ impl Json {
         }
     }
 
+    /// The value as an array slice.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(a) => Ok(a),
@@ -70,6 +83,7 @@ impl Json {
         }
     }
 
+    /// The value as an object map.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -84,24 +98,72 @@ impl Json {
 
     // ----- construction helpers -------------------------------------------
 
+    /// Build an object from (key, value) pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a number.
     pub fn num(x: f64) -> Json {
         Json::Num(x)
     }
 
+    /// Build a string.
     pub fn str(s: &str) -> Json {
         Json::Str(s.to_string())
     }
 
     // ----- serialization ---------------------------------------------------
 
+    /// Compact single-line serialization.
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out);
         out
+    }
+
+    /// Indented serialization (2 spaces per level, one key or element per
+    /// line) — used for committed artifacts like `BENCH_*.json` so git
+    /// diffs stay line-oriented.
+    pub fn to_pretty_string(&self) -> String {
+        let mut out = String::new();
+        self.write_pretty(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn write_pretty(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Arr(a) if !a.is_empty() => {
+                out.push_str("[\n");
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    out.push_str(&"  ".repeat(indent + 1));
+                    v.write_pretty(out, indent + 1);
+                }
+                out.push('\n');
+                out.push_str(&"  ".repeat(indent));
+                out.push(']');
+            }
+            Json::Obj(m) if !m.is_empty() => {
+                out.push_str("{\n");
+                for (i, (key, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    out.push_str(&"  ".repeat(indent + 1));
+                    Json::Str(key.clone()).write(out);
+                    out.push_str(": ");
+                    v.write_pretty(out, indent + 1);
+                }
+                out.push('\n');
+                out.push_str(&"  ".repeat(indent));
+                out.push('}');
+            }
+            other => other.write(out),
+        }
     }
 
     fn write(&self, out: &mut String) {
@@ -411,6 +473,17 @@ mod tests {
     fn integers_print_without_fraction() {
         assert_eq!(Json::Num(5.0).to_string(), "5");
         assert_eq!(Json::Num(5.25).to_string(), "5.25");
+    }
+
+    #[test]
+    fn pretty_round_trips_and_indents() {
+        let v = parse(r#"{"a": [1, 2], "b": {"c": "x"}, "d": [], "e": {}}"#).unwrap();
+        let pretty = v.to_pretty_string();
+        assert_eq!(parse(&pretty).unwrap(), v);
+        assert!(pretty.contains("\"a\": [\n    1,\n    2\n  ]"), "{pretty}");
+        assert!(pretty.contains("\"d\": []"));
+        assert!(pretty.contains("\"e\": {}"));
+        assert!(pretty.ends_with('\n'));
     }
 
     #[test]

@@ -1,0 +1,92 @@
+//! Bench-harness smoke test: a tiny §3.7 protocol run on the nano variant
+//! must produce a schema-valid `BENCH_*.json`, and the committed baseline
+//! at the repository root must stay schema-valid too (the trajectory file
+//! every PR appends to — BENCHMARKS.md).
+
+use airbench::bench::{run, validate, BenchConfig, SCHEMA};
+use airbench::runtime::BackendKind;
+use airbench::util::json::parse;
+
+fn tiny_config(out: std::path::PathBuf) -> BenchConfig {
+    BenchConfig {
+        variant: "nano".into(),
+        backend: BackendKind::Native,
+        tag: Some("smoke_test".into()),
+        warmup_runs: 0,
+        runs: 2,
+        steps: 3,
+        epochs: 0.25,
+        train_n: 64,
+        test_n: 32,
+        workers: 0,
+        out_dir: out,
+    }
+}
+
+#[test]
+fn harness_emits_schema_valid_json() {
+    let dir = std::env::temp_dir().join("airbench_bench_smoke");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = tiny_config(dir.clone());
+    let report = run(&cfg).expect("harness run");
+
+    // Distributions carry one entry per run seed.
+    assert_eq!(report.step_ms.per_run.len(), cfg.runs);
+    assert_eq!(report.run_s.per_run.len(), cfg.runs);
+    assert!(report.step_ms.median() > 0.0, "steps were not timed");
+    assert!(report.run_s.median() > 0.0, "runs were not timed");
+    assert_eq!(report.backend_name, "native");
+    assert!(report.stats.train_steps > 0);
+
+    // The emitted file parses and validates against the schema.
+    let path = report.write(&dir).expect("write report");
+    assert_eq!(path.file_name().unwrap(), "BENCH_smoke_test.json");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let j = parse(&text).expect("emitted JSON parses");
+    validate(&j).expect("emitted JSON is schema-valid");
+    assert_eq!(j.get("schema").unwrap().as_str().unwrap(), SCHEMA);
+    assert_eq!(j.get("backend").unwrap().as_str().unwrap(), "native");
+    assert_eq!(
+        j.get("protocol").unwrap().get("runs").unwrap().as_usize().unwrap(),
+        cfg.runs
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn default_tag_names_backend_and_variant() {
+    let dir = std::env::temp_dir().join("airbench_bench_smoke_tag");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut cfg = tiny_config(dir.clone());
+    cfg.tag = None;
+    cfg.runs = 1;
+    cfg.steps = 1;
+    let report = run(&cfg).expect("harness run");
+    assert_eq!(report.tag, "native_nano");
+    let path = report.write(&dir).expect("write report");
+    assert!(path.ends_with("BENCH_native_nano.json"), "{path:?}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn committed_baseline_is_schema_valid() {
+    // BENCH_*.json files live at the repository root (one level above the
+    // crate). Every committed baseline must parse and validate — otherwise
+    // the perf trajectory silently rots.
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate has a parent dir")
+        .to_path_buf();
+    let mut found = 0usize;
+    for entry in std::fs::read_dir(&root).expect("read repo root") {
+        let entry = entry.unwrap();
+        let name = entry.file_name().to_string_lossy().to_string();
+        if name.starts_with("BENCH_") && name.ends_with(".json") {
+            let text = std::fs::read_to_string(entry.path()).unwrap();
+            let j = parse(&text).unwrap_or_else(|e| panic!("{name} does not parse: {e:#}"));
+            validate(&j).unwrap_or_else(|e| panic!("{name} is schema-invalid: {e:#}"));
+            found += 1;
+        }
+    }
+    assert!(found >= 1, "no BENCH_*.json baseline committed at the repo root");
+}
