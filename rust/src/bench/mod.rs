@@ -28,14 +28,19 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::TrainConfig;
 use crate::coordinator::trainer::PhaseTimes;
-use crate::coordinator::{evaluate, train_full, warmup};
+use crate::coordinator::{evaluate, run_fleet_parallel, train_full, warmup};
 use crate::data::synthetic::{cifar_like, SynthConfig};
-use crate::runtime::{create_default_backend, Backend, BackendKind, InitConfig};
-use crate::stats::basic::Summary;
+use crate::runtime::native::available_cores;
+use crate::runtime::{create_default_backend, Backend, BackendKind, EngineSpec, InitConfig};
+use crate::stats::basic::{Summary, Welford};
 use crate::util::json::Json;
 
-/// Schema identifier written into (and required from) every `BENCH_*.json`.
+/// Schema identifier written into (and required from) every single-run
+/// `BENCH_*.json` (the fleet phase uses [`FLEET_SCHEMA`]).
 pub const SCHEMA: &str = "airbench.bench/1";
+
+/// Schema identifier of fleet-throughput reports (`airbench bench --fleet`).
+pub const FLEET_SCHEMA: &str = "airbench.fleet-bench/1";
 
 /// Harness configuration (CLI: `airbench bench [--runs N] [--steps N] ...`).
 #[derive(Clone, Debug)]
@@ -352,6 +357,339 @@ pub fn validate(j: &Json) -> Result<()> {
         bs.get(key)?.as_f64()?;
     }
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fleet-throughput phase (`airbench bench --fleet`)
+// ---------------------------------------------------------------------------
+
+/// Configuration of the fleet-throughput phase: the same n-run fleet,
+/// timed at each requested `--fleet-parallel` level.
+#[derive(Clone, Debug)]
+pub struct FleetBenchConfig {
+    /// Variant to execute.
+    pub variant: String,
+    /// Backend selection (parallel levels > 1 need native workers).
+    pub backend: BackendKind,
+    /// Tag for `BENCH_<tag>.json`; defaults to `<backend>_fleet`.
+    pub tag: Option<String>,
+    /// Runs per fleet (every level trains the same `n_runs` seeds).
+    pub n_runs: usize,
+    /// Parallelism levels to time, in order; level `parallel_levels[0]` is
+    /// the speedup baseline (conventionally 1).
+    pub parallel_levels: Vec<usize>,
+    /// Epochs per run.
+    pub epochs: f64,
+    /// Synthetic training-set size.
+    pub train_n: usize,
+    /// Synthetic test-set size.
+    pub test_n: usize,
+    /// Directory the JSON report is written to (repo root by convention).
+    pub out_dir: PathBuf,
+}
+
+impl Default for FleetBenchConfig {
+    fn default() -> Self {
+        FleetBenchConfig {
+            variant: "nano".into(),
+            backend: BackendKind::Auto,
+            tag: None,
+            n_runs: 8,
+            parallel_levels: vec![1, 2, 4],
+            epochs: 1.0,
+            train_n: 256,
+            test_n: 128,
+            out_dir: PathBuf::from("."),
+        }
+    }
+}
+
+/// One timed parallelism level of the fleet phase.
+#[derive(Clone, Debug)]
+pub struct FleetLevel {
+    /// Concurrent runs actually executed (the resolved
+    /// [`crate::coordinator::fleet::fleet_budget`] — a request beyond
+    /// `n_runs` is capped, and a non-parallel backend collapses to 1).
+    pub parallel: usize,
+    /// Kernel threads each run was budgeted
+    /// ([`crate::runtime::ThreadBudget`]).
+    pub kernel_threads: usize,
+    /// Wall-clock seconds for the whole n-run fleet.
+    pub wall_s: f64,
+    /// Throughput: `n_runs / wall_s`.
+    pub runs_per_s: f64,
+    /// `wall_s(levels[0]) / wall_s(this)`.
+    pub speedup_vs_p1: f64,
+    /// Mean final accuracy across the fleet's runs.
+    pub mean_acc: f64,
+    /// Whether every per-run accuracy is bit-identical to the first
+    /// level's — the scheduler's determinism contract, measured.
+    pub bit_identical_to_p1: bool,
+}
+
+/// Everything one fleet-phase invocation measured.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    /// File tag (`BENCH_<tag>.json`).
+    pub tag: String,
+    /// Backend actually constructed.
+    pub backend_name: String,
+    /// Variant executed.
+    pub variant: String,
+    /// Cores the budget was planned against.
+    pub cores: usize,
+    /// Protocol knobs, echoed for reproducibility.
+    pub config: FleetBenchConfig,
+    /// One entry per `parallel_levels` element, in order.
+    pub levels: Vec<FleetLevel>,
+}
+
+impl FleetReport {
+    /// The machine-readable report (schema documented in BENCHMARKS.md).
+    pub fn to_json(&self) -> Json {
+        let c = &self.config;
+        Json::obj(vec![
+            ("schema", Json::str(FLEET_SCHEMA)),
+            ("tag", Json::str(&self.tag)),
+            ("backend", Json::str(&self.backend_name)),
+            ("variant", Json::str(&self.variant)),
+            (
+                "created_unix",
+                Json::num(
+                    std::time::SystemTime::now()
+                        .duration_since(std::time::UNIX_EPOCH)
+                        .map(|d| d.as_secs() as f64)
+                        .unwrap_or(0.0),
+                ),
+            ),
+            (
+                "protocol",
+                Json::obj(vec![
+                    ("n_runs", Json::num(c.n_runs as f64)),
+                    (
+                        "parallel_levels",
+                        Json::Arr(c.parallel_levels.iter().map(|&p| Json::num(p as f64)).collect()),
+                    ),
+                    ("epochs", Json::num(c.epochs)),
+                    ("train_n", Json::num(c.train_n as f64)),
+                    ("test_n", Json::num(c.test_n as f64)),
+                    ("data", Json::str("synthetic-cifar")),
+                ]),
+            ),
+            (
+                "env",
+                Json::obj(vec![
+                    ("cores", Json::num(self.cores as f64)),
+                    ("os", Json::str(std::env::consts::OS)),
+                    ("arch", Json::str(std::env::consts::ARCH)),
+                ]),
+            ),
+            (
+                "levels",
+                Json::Arr(
+                    self.levels
+                        .iter()
+                        .map(|l| {
+                            Json::obj(vec![
+                                ("parallel", Json::num(l.parallel as f64)),
+                                ("kernel_threads", Json::num(l.kernel_threads as f64)),
+                                ("wall_s", Json::num(l.wall_s)),
+                                ("runs_per_s", Json::num(l.runs_per_s)),
+                                ("speedup_vs_p1", Json::num(l.speedup_vs_p1)),
+                                ("mean_acc", Json::num(l.mean_acc)),
+                                ("bit_identical_to_p1", Json::Bool(l.bit_identical_to_p1)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write `BENCH_<tag>.json` into `dir` (schema-validated first).
+    pub fn write(&self, dir: &Path) -> Result<PathBuf> {
+        let j = self.to_json();
+        validate_fleet(&j).context("fleet phase produced a schema-invalid report")?;
+        let path = dir.join(format!("BENCH_{}.json", self.tag));
+        std::fs::write(&path, j.to_pretty_string())
+            .with_context(|| format!("writing {path:?}"))?;
+        Ok(path)
+    }
+}
+
+/// Validate a fleet-throughput `BENCH_*.json` against [`FLEET_SCHEMA`].
+pub fn validate_fleet(j: &Json) -> Result<()> {
+    let schema = j.get("schema")?.as_str()?;
+    if schema != FLEET_SCHEMA {
+        bail!("unknown fleet-bench schema '{schema}' (want '{FLEET_SCHEMA}')");
+    }
+    for key in ["tag", "backend", "variant"] {
+        if j.get(key)?.as_str()?.is_empty() {
+            bail!("'{key}' must be a non-empty string");
+        }
+    }
+    j.get("created_unix")?.as_f64()?;
+    let proto = j.get("protocol")?;
+    let n_runs = proto.get("n_runs")?.as_usize()?;
+    if n_runs == 0 {
+        bail!("protocol.n_runs must be >= 1");
+    }
+    let levels_decl = proto.get("parallel_levels")?.as_arr()?.len();
+    for key in ["epochs", "train_n", "test_n"] {
+        proto.get(key)?.as_f64()?;
+    }
+    let env = j.get("env")?;
+    if env.get("cores")?.as_usize()? == 0 {
+        bail!("env.cores must be >= 1");
+    }
+    env.get("os")?.as_str()?;
+    env.get("arch")?.as_str()?;
+    let levels = j.get("levels")?.as_arr()?;
+    if levels.is_empty() || levels.len() != levels_decl {
+        bail!(
+            "levels length {} must match protocol.parallel_levels length {levels_decl} (and be >= 1)",
+            levels.len()
+        );
+    }
+    for (i, l) in levels.iter().enumerate() {
+        if l.get("parallel")?.as_usize()? == 0 || l.get("kernel_threads")?.as_usize()? == 0 {
+            bail!("levels[{i}]: parallel and kernel_threads must be >= 1");
+        }
+        for key in ["wall_s", "runs_per_s", "speedup_vs_p1", "mean_acc"] {
+            let x = l.get(key)?.as_f64()?;
+            if !x.is_finite() {
+                bail!("levels[{i}].{key} is not finite");
+            }
+        }
+        if l.get("wall_s")?.as_f64()? <= 0.0 {
+            bail!("levels[{i}].wall_s must be positive");
+        }
+        l.get("bit_identical_to_p1")?.as_bool()?;
+    }
+    Ok(())
+}
+
+/// Validate any committed `BENCH_*.json`, dispatching on its `schema` key
+/// ([`SCHEMA`] or [`FLEET_SCHEMA`]).
+pub fn validate_any(j: &Json) -> Result<()> {
+    match j.get("schema")?.as_str()? {
+        FLEET_SCHEMA => validate_fleet(j),
+        _ => validate(j),
+    }
+}
+
+/// Run the fleet-throughput phase: one warmup, then the same `n_runs`-seed
+/// fleet timed at every requested parallelism level. Accuracy vectors are
+/// compared bitwise across levels — the report records a measured
+/// determinism verdict next to the measured speedup.
+pub fn run_fleet_bench(cfg: &FleetBenchConfig) -> Result<FleetReport> {
+    if cfg.parallel_levels.is_empty() {
+        bail!("fleet bench needs at least one parallelism level");
+    }
+    let factory = EngineSpec::new(cfg.backend, &cfg.variant).factory()?;
+    let variant = factory.variant().clone();
+    let hw = variant.image_hw;
+    let train_n = cfg.train_n.max(2 * variant.batch_train);
+    let test_n = cfg.test_n.max(variant.batch_eval);
+    let synth = |n: usize| SynthConfig { n, hw, ..SynthConfig::default() };
+    let train_ds = cifar_like(&synth(train_n), 0xF1E7, 0);
+    let test_ds = cifar_like(&synth(test_n), 0xF1E7, 1);
+
+    let run_cfg = TrainConfig {
+        variant: cfg.variant.clone(),
+        epochs: cfg.epochs,
+        whiten_samples: train_n.min(1024),
+        eval_every_epoch: false,
+        ..TrainConfig::default()
+    };
+
+    // §3.7: pay one-time costs (pool spawn, allocators, PJRT compile)
+    // untimed. A non-parallel (PJRT) factory keeps this one compiled
+    // worker alive across warmup AND every level — spawning per level
+    // would put recompilation inside the timed window.
+    let mut seq_engine: Option<Box<dyn Backend>> = None;
+    {
+        let mut w = factory.spawn()?;
+        warmup(w.as_mut(), &train_ds, &run_cfg)?;
+        if !factory.supports_parallel() {
+            seq_engine = Some(w);
+        }
+    }
+
+    let cores = available_cores();
+    let mut levels: Vec<FleetLevel> = Vec::with_capacity(cfg.parallel_levels.len());
+    let mut baseline: Option<(f64, Vec<f64>)> = None; // (wall_s, accs) of levels[0]
+    for &parallel in &cfg.parallel_levels {
+        // The budget the scheduler itself resolves — recorded == executed.
+        let budget = crate::coordinator::fleet::fleet_budget(&factory, parallel.max(1), cfg.n_runs);
+        let t0 = Instant::now();
+        let fleet = match seq_engine.as_mut() {
+            Some(engine) => crate::coordinator::run_fleet(
+                engine.as_mut(),
+                &train_ds,
+                &test_ds,
+                &run_cfg,
+                cfg.n_runs,
+                None,
+            )?,
+            None => run_fleet_parallel(
+                &factory,
+                &train_ds,
+                &test_ds,
+                &run_cfg,
+                cfg.n_runs,
+                parallel.max(1),
+                None,
+            )?,
+        };
+        let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+        let mut acc = Welford::new();
+        for &a in &fleet.accuracies {
+            acc.push(a);
+        }
+        let bit_identical = match &baseline {
+            None => true,
+            Some((_, accs0)) => {
+                accs0.len() == fleet.accuracies.len()
+                    && accs0
+                        .iter()
+                        .zip(&fleet.accuracies)
+                        .all(|(a, b)| a.to_bits() == b.to_bits())
+            }
+        };
+        let base_wall = match &baseline {
+            None => wall_s,
+            Some((w0, _)) => *w0,
+        };
+        if baseline.is_none() {
+            baseline = Some((wall_s, fleet.accuracies.clone()));
+        }
+        levels.push(FleetLevel {
+            parallel: budget.runs_parallel,
+            kernel_threads: budget.kernel_threads,
+            wall_s,
+            runs_per_s: cfg.n_runs as f64 / wall_s,
+            speedup_vs_p1: base_wall / wall_s,
+            mean_acc: acc.summary().mean,
+            bit_identical_to_p1: bit_identical,
+        });
+    }
+    // Echo the EFFECTIVE protocol (clamped dataset sizes), so regenerating
+    // from the recorded file reproduces the measured workload.
+    let mut effective = cfg.clone();
+    effective.train_n = train_n;
+    effective.test_n = test_n;
+    Ok(FleetReport {
+        tag: cfg
+            .tag
+            .clone()
+            .unwrap_or_else(|| format!("{}_fleet", factory.kind().name())),
+        backend_name: factory.kind().name().to_string(),
+        variant: cfg.variant.clone(),
+        cores,
+        config: effective,
+        levels,
+    })
 }
 
 /// Run the full protocol described by `cfg` and return the report (the

@@ -101,6 +101,21 @@ impl Args {
         }
     }
 
+    /// `--key` as a comma-separated list of integers (e.g. the fleet
+    /// bench's `--parallel-levels 1,2,4`), with default.
+    pub fn opt_usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.options.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| p.trim().parse::<usize>())
+                .collect::<Result<Vec<_>, _>>()
+                .map_err(|_| {
+                    anyhow::anyhow!("--{key} expects comma-separated integers, got '{v}'")
+                }),
+        }
+    }
+
     /// Boolean `--key` (present without a value, or `=true`/`=1`).
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.options.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
@@ -150,6 +165,15 @@ mod tests {
         let a = parse("x --n abc");
         assert!(a.opt_usize("n", 0).is_err());
         assert_eq!(a.opt_usize("m", 9).unwrap(), 9);
+    }
+
+    #[test]
+    fn usize_list_parses_and_defaults() {
+        let a = parse("bench --parallel-levels 1,2,4");
+        assert_eq!(a.opt_usize_list("parallel-levels", &[1]).unwrap(), vec![1, 2, 4]);
+        assert_eq!(a.opt_usize_list("absent", &[3, 5]).unwrap(), vec![3, 5]);
+        let b = parse("bench --parallel-levels 1,x");
+        assert!(b.opt_usize_list("parallel-levels", &[1]).is_err());
     }
 
     #[test]

@@ -102,6 +102,14 @@ pub struct TrainConfig {
     pub workers: usize,
     /// Batches each pipeline worker may run ahead of the consumer.
     pub prefetch_depth: usize,
+    /// Concurrent runs of a fleet (`--fleet-parallel`; 0 = auto: the
+    /// `AIRBENCH_FLEET_PARALLEL` env override if set, else one run per
+    /// core). Per-run results are bit-identical at every value (DESIGN.md
+    /// §8), so this — like `workers` — is purely a throughput knob, and is
+    /// deliberately NOT serialized by [`TrainConfig::to_json`]: fleet logs
+    /// taken at different parallelism levels must compare equal modulo
+    /// times.
+    pub fleet_parallel: usize,
     /// RNG seed of the run (fleets fork per-run seeds from this).
     pub seed: u64,
     /// Target accuracy for time-to-target / epochs-to-target reporting
@@ -138,6 +146,7 @@ impl Default for TrainConfig {
             backend: BackendKind::Auto,
             workers: 0,
             prefetch_depth: 2,
+            fleet_parallel: 0,
             seed: 0,
             target_acc: 0.70,
             eval_every_epoch: false,
@@ -215,6 +224,7 @@ impl TrainConfig {
             "backend" => self.backend = BackendKind::parse(value).ok_or_else(bad)?,
             "workers" => self.workers = value.parse().map_err(|_| bad())?,
             "prefetch_depth" => self.prefetch_depth = value.parse().map_err(|_| bad())?,
+            "fleet_parallel" => self.fleet_parallel = value.parse().map_err(|_| bad())?,
             "seed" => self.seed = value.parse().map_err(|_| bad())?,
             "target_acc" | "target" => self.target_acc = value.parse().map_err(|_| bad())?,
             "eval_every_epoch" => {
@@ -338,6 +348,20 @@ mod tests {
         let c = TrainConfig::default();
         assert_eq!(c.workers, 0);
         assert_eq!(c.prefetch_depth, 2);
+        assert_eq!(c.fleet_parallel, 0); // auto
+    }
+
+    #[test]
+    fn fleet_parallel_sets_but_never_serializes() {
+        let mut c = TrainConfig::default();
+        c.set("fleet_parallel", "4").unwrap();
+        assert_eq!(c.fleet_parallel, 4);
+        assert!(c.set("fleet_parallel", "x").is_err());
+        // Throughput knob only: fleet logs at different parallelism levels
+        // must serialize identically (tests/fleet_parallel.rs relies on it).
+        let mut d = TrainConfig::default();
+        d.set("fleet_parallel", "2").unwrap();
+        assert_eq!(c.to_json(), d.to_json());
     }
 
     #[test]

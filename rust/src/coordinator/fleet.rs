@@ -1,19 +1,40 @@
-//! Fleet runner: n-run statistical experiments (paper §5).
+//! Fleet runner: n-run statistical experiments (paper §5) as a concurrent,
+//! deterministic workload.
 //!
 //! The paper's evidence is fleet-scale — n=400 per cell for the flip study
-//! (Table 2/6), n=10,000 for the variance study (Table 4). This module
-//! runs a config across `n` forked seeds against ONE compiled engine
-//! (compile once, train many — the amortization argument of §3.7) and
-//! aggregates accuracies, per-run timings, and the evaluation outputs the
-//! statistics modules consume.
+//! (Table 2/6), n=10,000 for the variance study (Table 4). PR 4 turned the
+//! fleet from a `for` loop over one `&mut dyn Backend` into a work-queue
+//! scheduler: [`run_fleet_parallel`] spawns `runs_parallel` workers from a
+//! [`BackendFactory`] (each an `Arc`-clone of the shared immutable engine
+//! state), hands each worker `kernel_threads` of the machine's
+//! [`ThreadBudget`], and streams finished runs through a channel into
+//! seed-ordered slots. Summary aggregation is Welford-backed
+//! ([`Summary::of`] wraps the incremental accumulator in
+//! [`crate::stats::basic`]), and callers that only need aggregates can
+//! stream accuracies from the `progress` callback into a
+//! [`crate::stats::basic::Welford`] in O(1) state; [`FleetResult`] itself
+//! still retains the per-run records the statistical suites consume.
+//!
+//! **Determinism contract.** Per-run seeds are forked from `cfg.seed`
+//! exactly as the sequential path forks them ([`fleet_seeds`] is the single
+//! implementation both paths call), each run is bit-reproducible from its
+//! seed regardless of kernel-thread count (DESIGN.md §2.1) and worker count
+//! (DESIGN.md §5), and runs share no mutable state — so per-run accuracies
+//! are **bit-identical at every `--fleet-parallel` level**, including 1 and
+//! the sequential [`run_fleet`] reference path
+//! (`tests/fleet_parallel.rs` pins this). Only wall-clock times and the
+//! arrival order of progress callbacks change with parallelism.
 
-use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use anyhow::{Context, Result};
 
 use crate::config::TrainConfig;
 use crate::coordinator::trainer::{train, TrainResult};
 use crate::data::Dataset;
 use crate::rng::Rng;
-use crate::runtime::Backend;
+use crate::runtime::native::{fleet_parallel_env, ThreadBudget};
+use crate::runtime::{Backend, BackendFactory};
 use crate::stats::basic::Summary;
 use crate::util::json::Json;
 
@@ -29,7 +50,8 @@ pub struct FleetResult {
 }
 
 impl FleetResult {
-    /// Mean/std/CI of the TTA accuracies.
+    /// Mean/std/CI of the TTA accuracies (built incrementally — see
+    /// [`crate::stats::basic::Welford`]).
     pub fn summary(&self) -> Summary {
         Summary::of(&self.accuracies)
     }
@@ -62,14 +84,30 @@ impl FleetResult {
 impl FleetResult {
     /// Structured log of the whole fleet (written by `airbench fleet
     /// --log out.json`, the Listing 4 `log.pt` analogue).
+    ///
+    /// Time-dependent fields (`times`, `time_stats`) aside, two fleets of
+    /// the same config produce identical documents at any parallelism
+    /// level — the schema check in `tests/bench_harness.rs` and the
+    /// determinism suite in `tests/fleet_parallel.rs` rely on it.
     pub fn to_json(&self, cfg: &crate::config::TrainConfig) -> Json {
         let s = self.summary();
+        let s_no = self.summary_no_tta();
+        let times: Vec<f64> = self.runs.iter().map(|r| r.time_seconds).collect();
+        let ts = Summary::of(&times);
         Json::obj(vec![
             ("config", cfg.to_json()),
             ("n", Json::num(self.runs.len() as f64)),
             ("mean", Json::num(s.mean)),
             ("std", Json::num(s.std)),
             ("ci95", Json::num(s.ci95())),
+            (
+                "no_tta",
+                Json::obj(vec![
+                    ("mean", Json::num(s_no.mean)),
+                    ("std", Json::num(s_no.std)),
+                    ("ci95", Json::num(s_no.ci95())),
+                ]),
+            ),
             (
                 "accs",
                 Json::Arr(self.accuracies.iter().map(|&a| Json::num(a)).collect()),
@@ -79,14 +117,83 @@ impl FleetResult {
                 Json::Arr(self.accuracies_no_tta.iter().map(|&a| Json::num(a)).collect()),
             ),
             (
+                "epochs_to_target",
+                Json::Arr(
+                    self.runs
+                        .iter()
+                        .map(|r| r.epochs_to_target.map(Json::num).unwrap_or(Json::Null))
+                        .collect(),
+                ),
+            ),
+            (
+                "mean_epochs_to_target",
+                self.mean_epochs_to_target()
+                    .map(Json::num)
+                    .unwrap_or(Json::Null),
+            ),
+            (
                 "times",
-                Json::Arr(self.runs.iter().map(|r| Json::num(r.time_seconds)).collect()),
+                Json::Arr(times.iter().map(|&t| Json::num(t)).collect()),
+            ),
+            (
+                "time_stats",
+                Json::obj(vec![
+                    ("mean_s", Json::num(ts.mean)),
+                    ("std_s", Json::num(ts.std)),
+                    ("min_s", Json::num(ts.min)),
+                    ("max_s", Json::num(ts.max)),
+                    ("total_s", Json::num(times.iter().sum())),
+                ]),
             ),
         ])
     }
 }
 
-/// Run `n` trainings of `cfg` with per-run forked seeds.
+/// The per-run seed fork shared by the sequential and concurrent paths:
+/// run `i` of a fleet seeded `cfg.seed` always trains with `seeds[i]`,
+/// regardless of scheduling. (The forks are drawn sequentially from one
+/// seeder stream, exactly as the original `for` loop drew them.)
+pub fn fleet_seeds(cfg: &TrainConfig, n: usize) -> Vec<u64> {
+    let mut seeder = Rng::new(cfg.seed ^ 0xF1EE7);
+    (0..n).map(|i| seeder.fork(i as u64).next_u64()).collect()
+}
+
+fn assemble(runs: Vec<TrainResult>) -> FleetResult {
+    let accuracies = runs.iter().map(|r| r.accuracy).collect();
+    let accuracies_no_tta = runs.iter().map(|r| r.accuracy_no_tta).collect();
+    FleetResult {
+        runs,
+        accuracies,
+        accuracies_no_tta,
+    }
+}
+
+/// Resolve a `--fleet-parallel` request into the budget the scheduler will
+/// actually use: `0` defers to `AIRBENCH_FLEET_PARALLEL` (else auto), the
+/// plan is capped at `n` runs, and factories that cannot produce `Send`
+/// workers (PJRT) collapse to one sequential run regardless of the
+/// request. One implementation, used by [`run_fleet_parallel`], the CLI
+/// banner, and the fleet bench phase — so what is printed/recorded is what
+/// runs.
+pub fn fleet_budget(factory: &BackendFactory, parallel: usize, n: usize) -> ThreadBudget {
+    let requested = if parallel == 0 {
+        fleet_parallel_env().unwrap_or(0)
+    } else {
+        parallel
+    };
+    let mut budget = ThreadBudget::plan(requested, n);
+    if !factory.supports_parallel() {
+        // One sequential run owns the whole machine; recompute the kernel
+        // share too so the recorded budget is the one that executes.
+        budget.runs_parallel = 1;
+        budget.kernel_threads = budget.cores;
+    }
+    budget
+}
+
+/// Run `n` trainings of `cfg` with per-run forked seeds, sequentially
+/// against one backend — the reference path the concurrent scheduler is
+/// bit-compared to (and the fallback for non-`Send` backends).
 ///
 /// `progress` (optional) is invoked after each run with (run_index,
 /// accuracy) — benches use it for live table output.
@@ -98,28 +205,122 @@ pub fn run_fleet(
     n: usize,
     mut progress: Option<&mut dyn FnMut(usize, f64)>,
 ) -> Result<FleetResult> {
-    let mut seeder = Rng::new(cfg.seed ^ 0xF1EE7);
+    let seeds = fleet_seeds(cfg, n);
     let mut runs = Vec::with_capacity(n);
-    for i in 0..n {
+    for (i, &seed) in seeds.iter().enumerate() {
         let mut run_cfg = cfg.clone();
-        run_cfg.seed = seeder.fork(i as u64).next_u64();
+        run_cfg.seed = seed;
         let result = train(engine, train_data, test_data, &run_cfg)?;
         if let Some(cb) = progress.as_deref_mut() {
             cb(i, result.accuracy);
         }
         runs.push(result);
     }
-    let accuracies = runs.iter().map(|r| r.accuracy).collect();
-    let accuracies_no_tta = runs.iter().map(|r| r.accuracy_no_tta).collect();
-    Ok(FleetResult {
-        runs,
-        accuracies,
-        accuracies_no_tta,
-    })
+    Ok(assemble(runs))
+}
+
+/// Run `n` trainings of `cfg` as a concurrent work-queue over workers
+/// spawned from `factory`.
+///
+/// `parallel` requests the number of concurrent runs: `0` means auto —
+/// the `AIRBENCH_FLEET_PARALLEL` env override if set, else one run per
+/// core. The request is resolved through [`ThreadBudget::plan`], which
+/// also assigns each worker its kernel-thread share so `runs_parallel x
+/// kernel_threads <= cores`. Factories that cannot produce `Send` workers
+/// (PJRT) and plans that resolve to one run fall back to the sequential
+/// [`run_fleet`] path — same results either way, by construction.
+///
+/// `progress` fires on the scheduler thread in completion order (run
+/// indices arrive out of order under parallelism; the *results* are always
+/// assembled in seed order).
+pub fn run_fleet_parallel(
+    factory: &BackendFactory,
+    train_data: &Dataset,
+    test_data: &Dataset,
+    cfg: &TrainConfig,
+    n: usize,
+    parallel: usize,
+    mut progress: Option<&mut dyn FnMut(usize, f64)>,
+) -> Result<FleetResult> {
+    let budget = fleet_budget(factory, parallel, n);
+    if budget.runs_parallel <= 1 || n <= 1 {
+        // Sequential fallback. Native engines still take their budgeted
+        // kernel-thread share so the recorded budget is what actually ran;
+        // PJRT spawns the factory's cached compiled backend.
+        let mut engine: Box<dyn Backend> = if factory.supports_parallel() {
+            factory.spawn_send(budget.kernel_threads)?
+        } else {
+            factory.spawn()?
+        };
+        return run_fleet(engine.as_mut(), train_data, test_data, cfg, n, progress);
+    }
+
+    let seeds = fleet_seeds(cfg, n);
+    let mut workers = Vec::with_capacity(budget.runs_parallel);
+    for _ in 0..budget.runs_parallel {
+        workers.push(factory.spawn_send(budget.kernel_threads)?);
+    }
+
+    let next = AtomicUsize::new(0);
+    let stop = AtomicBool::new(false);
+    let (tx, rx) = std::sync::mpsc::channel::<(usize, Result<TrainResult>)>();
+    let mut slots: Vec<Option<TrainResult>> = (0..n).map(|_| None).collect();
+    let mut first_err: Option<(usize, anyhow::Error)> = None;
+    std::thread::scope(|s| {
+        for mut worker in workers {
+            let tx = tx.clone();
+            let (next, stop, seeds) = (&next, &stop, &seeds);
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n || stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let mut run_cfg = cfg.clone();
+                run_cfg.seed = seeds[i];
+                let res = train(worker.as_mut(), train_data, test_data, &run_cfg);
+                let failed = res.is_err();
+                if tx.send((i, res)).is_err() || failed {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        // Stream results as they land: progress callback + ordered slots.
+        while let Ok((i, res)) = rx.recv() {
+            match res {
+                Ok(r) => {
+                    if let Some(cb) = progress.as_deref_mut() {
+                        cb(i, r.accuracy);
+                    }
+                    slots[i] = Some(r);
+                }
+                Err(e) => {
+                    stop.store(true, Ordering::Relaxed);
+                    // Keep the failure of the lowest run index, like the
+                    // sequential path would have surfaced.
+                    let keep_existing = matches!(&first_err, Some((j, _)) if *j <= i);
+                    if !keep_existing {
+                        first_err = Some((i, e));
+                    }
+                }
+            }
+        }
+    });
+    if let Some((i, e)) = first_err {
+        return Err(e).with_context(|| format!("fleet run {i} failed"));
+    }
+    let runs: Vec<TrainResult> = slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| r.with_context(|| format!("fleet run {i} produced no result")))
+        .collect::<Result<_>>()?;
+    Ok(assemble(runs))
 }
 
 #[cfg(test)]
 mod tests {
-    // Covered end-to-end in tests/runtime_integration.rs (requires the
-    // compiled engine); Summary math is tested in stats::basic.
+    // The scheduler is covered end-to-end in tests/fleet_parallel.rs
+    // (bit-identical accuracies across parallelism levels) and
+    // tests/runtime_integration.rs; Summary/Welford math is tested in
+    // stats::basic, the budget planner in runtime::native::pool.
 }

@@ -13,7 +13,7 @@ pub mod schedule;
 pub mod trainer;
 
 pub use evaluator::{evaluate, evaluate_source, EvalOutput};
-pub use fleet::{run_fleet, FleetResult};
+pub use fleet::{fleet_budget, fleet_seeds, run_fleet, run_fleet_parallel, FleetResult};
 pub use lookahead::LookaheadState;
 pub use schedule::{AlphaSchedule, DecoupledHyper, Triangle};
 pub use trainer::{train, train_full, warmup, EpochLog, PhaseTimes, TrainResult};

@@ -137,6 +137,13 @@ impl Lab {
         self.kind = kind;
     }
 
+    /// The configured (possibly still `Auto`) kind, without resolving it —
+    /// what an [`crate::runtime::EngineSpec`] wants, since the factory does
+    /// its own `Auto` resolution.
+    pub fn kind(&self) -> BackendKind {
+        self.kind
+    }
+
     /// The kind this lab executes with, resolving `auto` by attempting the
     /// PJRT path once — the manifest and client built by a successful
     /// attempt are kept (not a throwaway probe), so backends reuse them.

@@ -4,11 +4,16 @@
 //! * `train [key=value ...]` — one training run with per-epoch logging
 //!   (the paper's Listing 4 `main`), printing the final TTA accuracy and
 //!   the paper-protocol wall time.
-//! * `fleet --runs N [key=value ...]` — an n-run statistical experiment:
-//!   mean/std/CI of final accuracy (paper §5 methodology).
+//! * `fleet --runs N [--parallel P] [key=value ...]` — an n-run
+//!   statistical experiment: mean/std/CI of final accuracy (paper §5
+//!   methodology). `--parallel` trains P runs concurrently on
+//!   factory-spawned workers under the global thread budget — per-run
+//!   results are bit-identical at every P (DESIGN.md §8).
 //! * `bench [--runs N] [--steps N] [--tag T]` — the §3.7 benchmark
 //!   harness: per-phase medians and seed-distribution stats, written as
 //!   `BENCH_<tag>.json` (see BENCHMARKS.md for protocol and schema).
+//!   `bench --fleet` times the same fleet at several parallelism levels
+//!   (the fleet-throughput phase, `airbench.fleet-bench/1` schema).
 //! * `info [--variant NAME]` — inspect the AOT manifest when artifacts are
 //!   built, else the native backend's built-in variant table.
 //!
@@ -172,21 +177,71 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let (mut lab, cfg) = lab_and_config(args)?;
     let kind = parse_data_kind(&args.opt("data", "cifar10"))?;
     let runs = args.opt_usize("runs", lab.scale.runs)?;
+    // `--parallel N` / `--fleet-parallel N` (or the `fleet_parallel` config
+    // key / AIRBENCH_FLEET_PARALLEL env): concurrent runs. 0 = auto.
+    let parallel = match args
+        .options
+        .get("parallel")
+        .or_else(|| args.options.get("fleet-parallel"))
+    {
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--parallel expects an integer, got '{v}'"))?,
+        None => cfg.fleet_parallel,
+    };
     let (train_ds, test_ds) = lab.data(kind);
-    let engine = lab.backend(&cfg.variant)?;
-    eprintln!("[fleet] backend={}", engine.name());
-    warmup(engine, &train_ds, &cfg)?;
+    let factory = airbench::runtime::EngineSpec::new(lab.kind(), &cfg.variant)
+        .with_artifacts_dir(lab.artifacts_dir())
+        .factory()?;
+    // The one resolver the scheduler itself uses — what we print is what
+    // runs (env override, auto, PJRT sequential collapse included).
+    let budget = airbench::coordinator::fleet_budget(&factory, parallel, runs);
+    eprintln!(
+        "[fleet] backend={} parallel={} kernel_threads={} cores={}",
+        factory.kind().name(),
+        budget.runs_parallel,
+        budget.kernel_threads,
+        budget.cores,
+    );
     let mut progress = |i: usize, acc: f64| {
         eprintln!("[fleet] run {i}: {}", pct(acc));
     };
-    let fleet = airbench::coordinator::run_fleet(
-        engine,
-        &train_ds,
-        &test_ds,
-        &cfg,
-        runs,
-        Some(&mut progress),
-    )?;
+    let concurrent = budget.runs_parallel > 1 && runs > 1;
+    let fleet = if concurrent {
+        // Pay one-time costs (pool spawn, allocators) on a throwaway
+        // worker — native workers are an Arc clone, so this is free.
+        {
+            let mut w = factory.spawn()?;
+            warmup(w.as_mut(), &train_ds, &cfg)?;
+        }
+        airbench::coordinator::run_fleet_parallel(
+            &factory,
+            &train_ds,
+            &test_ds,
+            &cfg,
+            runs,
+            parallel,
+            Some(&mut progress),
+        )?
+    } else {
+        // Sequential: keep the (possibly compiled-once PJRT) worker alive
+        // across warmup and every run. Native engines take the budgeted
+        // kernel share so the banner above describes what actually runs.
+        let mut engine: Box<dyn airbench::runtime::Backend> = if factory.supports_parallel() {
+            factory.spawn_send(budget.kernel_threads)?
+        } else {
+            factory.spawn()?
+        };
+        warmup(engine.as_mut(), &train_ds, &cfg)?;
+        airbench::coordinator::run_fleet(
+            engine.as_mut(),
+            &train_ds,
+            &test_ds,
+            &cfg,
+            runs,
+            Some(&mut progress),
+        )?
+    };
     let s = fleet.summary();
     println!(
         "fleet n={}: mean={} std={:.3}% ci95=±{:.3}% min={} max={} mean_time={:.2}s",
@@ -209,6 +264,9 @@ fn cmd_fleet(args: &Args) -> Result<()> {
 /// [--warmup N] [--epochs E] [--workers N] [--tag T] [--out DIR]` — run the
 /// §3.7 harness and write `BENCH_<tag>.json` (BENCHMARKS.md).
 fn cmd_bench(args: &Args) -> Result<()> {
+    if args.flag("fleet") {
+        return cmd_bench_fleet(args);
+    }
     let mut cfg = airbench::bench::BenchConfig::default();
     if let Some(v) = args.options.get("variant") {
         cfg.variant = v.clone();
@@ -266,6 +324,59 @@ fn cmd_bench(args: &Args) -> Result<()> {
         report.train_gflops(),
         report.batch_train as f64 / (report.step_ms.median() * 1e-3).max(1e-12),
     );
+    let path = report.write(&cfg.out_dir)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+/// `airbench bench --fleet [--fleet-runs N] [--parallel-levels 1,2,4]
+/// [--variant V] [--backend B] [--epochs E] [--tag T] [--out DIR]` — time
+/// the same n-run fleet at several `--fleet-parallel` levels and write a
+/// `BENCH_<tag>.json` with the `airbench.fleet-bench/1` schema.
+fn cmd_bench_fleet(args: &Args) -> Result<()> {
+    let d = airbench::bench::FleetBenchConfig::default();
+    let backend = args.opt("backend", "auto");
+    let cfg = airbench::bench::FleetBenchConfig {
+        variant: args.opt("variant", &d.variant),
+        backend: airbench::runtime::BackendKind::parse(&backend)
+            .ok_or_else(|| anyhow::anyhow!("unknown --backend '{backend}' (auto|pjrt|native)"))?,
+        tag: args.options.get("tag").cloned(),
+        n_runs: args.opt_usize("fleet-runs", d.n_runs)?.max(1),
+        parallel_levels: args.opt_usize_list("parallel-levels", &d.parallel_levels)?,
+        epochs: args.opt_f64("epochs", d.epochs)?,
+        train_n: args.opt_usize("train-n", d.train_n)?,
+        test_n: args.opt_usize("test-n", d.test_n)?,
+        out_dir: args
+            .options
+            .get("out")
+            .map(std::path::PathBuf::from)
+            .unwrap_or(d.out_dir),
+    };
+    eprintln!(
+        "[bench] fleet phase: backend={} variant={} n_runs={} levels={:?}",
+        cfg.backend.name(),
+        cfg.variant,
+        cfg.n_runs,
+        cfg.parallel_levels
+    );
+    let report = airbench::bench::run_fleet_bench(&cfg)?;
+    println!(
+        "fleet bench: backend={} variant={} n_runs={} cores={}",
+        report.backend_name, report.variant, cfg.n_runs, report.cores
+    );
+    for l in &report.levels {
+        println!(
+            "  parallel {:>2} (x{} kernel threads): {:>7.2}s wall, {:>6.2} runs/s, \
+             speedup {:>5.2}x, mean acc {:.4}, bit-identical: {}",
+            l.parallel,
+            l.kernel_threads,
+            l.wall_s,
+            l.runs_per_s,
+            l.speedup_vs_p1,
+            l.mean_acc,
+            l.bit_identical_to_p1
+        );
+    }
     let path = report.write(&cfg.out_dir)?;
     println!("wrote {}", path.display());
     Ok(())
@@ -353,21 +464,29 @@ fn usage() {
     eprintln!(
         "usage: airbench <train|eval|fleet|bench|info> [--data cifar10] [--runs N] \
          [--config file.json] [--backend auto|pjrt|native] [--workers N] \
-         [--prefetch-depth N] [--save ckpt.bin] [--load ckpt.bin] \
+         [--prefetch-depth N] [--parallel N] [--save ckpt.bin] [--load ckpt.bin] \
          [--log fleet.json] [--hlo] [key=value ...]\n       airbench --version\n\
          \n\
          bench               run the §3.7 benchmark harness and write \
          BENCH_<tag>.json (options: --runs --steps --warmup --epochs \
          --tag --out --train-n --test-n; see BENCHMARKS.md)\n\
+         bench --fleet       fleet-throughput phase: time the same n-run \
+         fleet at several parallelism levels (--fleet-runs N \
+         --parallel-levels 1,2,4) and write a fleet-schema BENCH_<tag>.json\n\
          --backend KIND      execution backend (also config key `backend`): \
          auto = compiled PJRT when artifacts + runtime exist, else the \
          pure-Rust native backend; pjrt / native force one\n\
          --workers N         augment batches on N background threads \
          (0 = on the train thread; output is bit-identical either way)\n\
          --prefetch-depth N  batches each worker may run ahead (default 2)\n\
+         --parallel N        (fleet; alias --fleet-parallel, config key \
+         `fleet_parallel`) concurrent runs, budgeted so runs x kernel \
+         threads <= cores; 0 = auto. Per-run results are bit-identical \
+         at every value\n\
          \n\
          env: AIRBENCH_BACKEND=auto|pjrt|native, AIRBENCH_NATIVE_THREADS=N \
-         (native kernel threads; outputs bit-identical at any value)"
+         (native kernel threads; outputs bit-identical at any value), \
+         AIRBENCH_FLEET_PARALLEL=N (fleet auto-parallelism override)"
     );
 }
 

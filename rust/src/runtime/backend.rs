@@ -18,11 +18,14 @@
 //! and evaluates on the other (see `ModelState::{save, load}` for the
 //! state store contract).
 
-use std::path::Path;
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::runtime::manifest::{Manifest, Variant};
+use crate::runtime::native::NativeShared;
 use crate::runtime::state::{InitConfig, ModelState};
 use crate::tensor::Tensor;
 
@@ -250,35 +253,178 @@ impl Backend for PjrtWithClient {
     }
 }
 
+/// Everything needed to construct backend workers for one engine: kind,
+/// variant name, artifact location. The spec is plain data (`Clone`,
+/// printable); [`EngineSpec::factory`] resolves it — variant lookup, PJRT
+/// availability, `Auto` fallback — exactly once into a [`BackendFactory`]
+/// that then hands out workers cheaply.
+#[derive(Clone, Debug)]
+pub struct EngineSpec {
+    /// Backend selection (`Auto` resolves at [`EngineSpec::factory`] time).
+    pub kind: BackendKind,
+    /// Variant name (built-in native table or AOT manifest).
+    pub variant: String,
+    /// Where PJRT artifacts are looked up.
+    pub artifacts_dir: PathBuf,
+}
+
+impl EngineSpec {
+    /// Spec with the default artifact location.
+    pub fn new(kind: BackendKind, variant: &str) -> EngineSpec {
+        EngineSpec {
+            kind,
+            variant: variant.to_string(),
+            artifacts_dir: Manifest::default_dir(),
+        }
+    }
+
+    /// Override the artifact directory.
+    pub fn with_artifacts_dir(mut self, dir: &Path) -> EngineSpec {
+        self.artifacts_dir = dir.to_path_buf();
+        self
+    }
+
+    /// Resolve into a factory. `Auto` attempts the full PJRT path (the
+    /// successfully compiled backend is kept for the first [`spawn`] — the
+    /// §3.7 compile-once cost is paid here, not per worker) and falls back
+    /// to native on ANY failure: missing artifacts, stub runtime, compile
+    /// error. The variant is validated either way, so `spawn` after a
+    /// successful `factory()` cannot fail on bad names.
+    ///
+    /// [`spawn`]: BackendFactory::spawn
+    pub fn factory(&self) -> Result<BackendFactory> {
+        match self.kind {
+            BackendKind::Native => self.native_factory(),
+            BackendKind::Pjrt => self.pjrt_factory(),
+            BackendKind::Auto => self.pjrt_factory().or_else(|_| self.native_factory()),
+        }
+    }
+
+    fn native_factory(&self) -> Result<BackendFactory> {
+        let shared = Arc::new(NativeShared::resolve(&self.variant, &self.artifacts_dir)?);
+        Ok(BackendFactory {
+            kind: BackendKind::Native,
+            spec: self.clone(),
+            variant: shared.variant().clone(),
+            shared: Some(shared),
+            cached_pjrt: RefCell::new(None),
+        })
+    }
+
+    fn pjrt_factory(&self) -> Result<BackendFactory> {
+        let first = build_pjrt(&self.variant, &self.artifacts_dir)?;
+        Ok(BackendFactory {
+            kind: BackendKind::Pjrt,
+            spec: self.clone(),
+            variant: Backend::variant(&first).clone(),
+            shared: None,
+            cached_pjrt: RefCell::new(Some(Box::new(first))),
+        })
+    }
+}
+
+fn build_pjrt(variant: &str, artifacts_dir: &Path) -> Result<PjrtWithClient> {
+    let manifest = Manifest::load(artifacts_dir)?;
+    let client = crate::runtime::pjrt::cpu_client()?;
+    let backend = crate::runtime::pjrt::PjrtBackend::load(&client, &manifest, variant)?;
+    Ok(PjrtWithClient {
+        backend,
+        _client: client,
+    })
+}
+
+/// A resolved engine that spawns backend workers.
+///
+/// * **native** — workers share one `Arc<NativeShared>` (variant table +
+///   layer plan); spawning is an `Arc` clone plus fresh accounting, and the
+///   workers are `Send`, which is what the concurrent fleet scheduler
+///   ([`crate::coordinator::fleet::run_fleet_parallel`]) builds on.
+/// * **pjrt** — the backend compiled during [`EngineSpec::factory`] is
+///   handed to the first [`BackendFactory::spawn`]; later spawns recompile.
+///   PJRT client handles are process-pinned (not `Send` in the real
+///   bindings), so [`BackendFactory::spawn_send`] refuses and fleets fall
+///   back to sequential execution.
+pub struct BackendFactory {
+    kind: BackendKind,
+    spec: EngineSpec,
+    variant: Variant,
+    shared: Option<Arc<NativeShared>>,
+    cached_pjrt: RefCell<Option<Box<dyn Backend>>>,
+}
+
+impl BackendFactory {
+    /// The resolved kind: [`BackendKind::Pjrt`] or [`BackendKind::Native`],
+    /// never `Auto`.
+    pub fn kind(&self) -> BackendKind {
+        self.kind
+    }
+
+    /// The resolved variant (tensor inventory + batch shapes).
+    pub fn variant(&self) -> &Variant {
+        &self.variant
+    }
+
+    /// Whether [`BackendFactory::spawn_send`] works — i.e. whether a fleet
+    /// can run this engine's workers concurrently.
+    pub fn supports_parallel(&self) -> bool {
+        self.kind == BackendKind::Native
+    }
+
+    /// A backend worker for same-thread use.
+    pub fn spawn(&self) -> Result<Box<dyn Backend>> {
+        match self.kind {
+            BackendKind::Native => {
+                let shared = self.shared.as_ref().expect("native factory has shared state");
+                Ok(Box::new(crate::runtime::native::NativeBackend::from_shared(
+                    Arc::clone(shared),
+                )))
+            }
+            _ => {
+                if let Some(b) = self.cached_pjrt.borrow_mut().take() {
+                    return Ok(b);
+                }
+                Ok(Box::new(build_pjrt(&self.spec.variant, &self.spec.artifacts_dir)?))
+            }
+        }
+    }
+
+    /// A `Send` backend worker for the concurrent fleet scheduler.
+    /// `kernel_threads = 0` keeps the process default
+    /// ([`crate::runtime::native::default_threads`]); a fleet passes its
+    /// [`crate::runtime::native::ThreadBudget`] share so `runs_parallel x
+    /// kernel_threads` never oversubscribes the machine.
+    pub fn spawn_send(&self, kernel_threads: usize) -> Result<Box<dyn Backend + Send>> {
+        match self.kind {
+            BackendKind::Native => {
+                let shared = self.shared.as_ref().expect("native factory has shared state");
+                let mut b = crate::runtime::native::NativeBackend::from_shared(Arc::clone(shared));
+                if kernel_threads > 0 {
+                    b = b.with_threads(kernel_threads);
+                }
+                Ok(Box::new(b))
+            }
+            _ => bail!(
+                "concurrent fleet workers need a Send backend; PJRT client handles are \
+                 process-pinned — use --backend native or --fleet-parallel 1"
+            ),
+        }
+    }
+}
+
 /// Construct a backend of `kind` for `variant`, loading PJRT artifacts from
 /// `artifacts_dir` when needed. `Auto` resolves to PJRT when both the
 /// artifacts and the runtime are present, else to native — so every layer
-/// (trainer, evaluator, fleet, benches) runs on any machine.
+/// (trainer, evaluator, fleet, benches) runs on any machine. Thin wrapper
+/// over [`EngineSpec::factory`] + [`BackendFactory::spawn`].
 pub fn create_backend(
     kind: BackendKind,
     variant: &str,
     artifacts_dir: &Path,
 ) -> Result<Box<dyn Backend>> {
-    match kind {
-        BackendKind::Pjrt => {
-            let manifest = Manifest::load(artifacts_dir)?;
-            let client = crate::runtime::pjrt::cpu_client()?;
-            let backend = crate::runtime::pjrt::PjrtBackend::load(&client, &manifest, variant)?;
-            Ok(Box::new(PjrtWithClient {
-                backend,
-                _client: client,
-            }))
-        }
-        BackendKind::Native => Ok(Box::new(crate::runtime::native::NativeBackend::new(
-            variant,
-            artifacts_dir,
-        )?)),
-        // Attempt the compiled path directly (no throwaway probe client);
-        // ANY failure — missing artifacts, stub runtime, compile error —
-        // falls back to the always-available native backend.
-        BackendKind::Auto => create_backend(BackendKind::Pjrt, variant, artifacts_dir)
-            .or_else(|_| create_backend(BackendKind::Native, variant, artifacts_dir)),
-    }
+    EngineSpec::new(kind, variant)
+        .with_artifacts_dir(artifacts_dir)
+        .factory()?
+        .spawn()
 }
 
 /// Like [`create_backend`] but with the default artifact location.
@@ -356,6 +502,32 @@ mod tests {
                 let r = status.skip_reason().unwrap();
                 assert!(r.contains("runtime unavailable"), "{r}");
             }
+        }
+    }
+
+    #[test]
+    fn factory_spawns_cheap_native_workers() {
+        let f = EngineSpec::new(BackendKind::Native, "nano").factory().unwrap();
+        assert_eq!(f.kind(), BackendKind::Native);
+        assert!(f.supports_parallel());
+        assert_eq!(f.variant().name, "nano");
+        let a = f.spawn().unwrap();
+        let b = f.spawn_send(2).unwrap();
+        assert_eq!(a.variant().name, "nano");
+        assert_eq!(b.variant().name, "nano");
+        // An unknown variant fails at factory() time, not at spawn time.
+        assert!(EngineSpec::new(BackendKind::Native, "zzz").factory().is_err());
+    }
+
+    #[test]
+    fn auto_factory_resolves_and_never_stays_auto() {
+        let f = EngineSpec::new(BackendKind::Auto, "bench").factory().unwrap();
+        assert_ne!(f.kind(), BackendKind::Auto);
+        assert_eq!(f.variant().num_classes, 10);
+        if !f.supports_parallel() {
+            // PJRT workers are process-pinned: spawn_send must refuse loudly.
+            let e = f.spawn_send(0).unwrap_err();
+            assert!(format!("{e:#}").contains("native"), "{e:#}");
         }
     }
 

@@ -16,10 +16,10 @@ pub mod pjrt;
 pub mod state;
 
 pub use backend::{
-    create_backend, create_default_backend, Backend, BackendKind, BackendStats, PjrtStatus,
-    StepOutput,
+    create_backend, create_default_backend, Backend, BackendFactory, BackendKind, BackendStats,
+    EngineSpec, PjrtStatus, StepOutput,
 };
 pub use manifest::{Manifest, ModuleSpec, Role, TensorSpec, Variant};
-pub use native::NativeBackend;
+pub use native::{NativeBackend, NativeShared, ThreadBudget};
 pub use pjrt::{cpu_client, PjrtBackend};
 pub use state::{InitConfig, ModelState};

@@ -17,15 +17,21 @@
 //! benches, the §2 timing protocol — runs (and is *tested*) on machines
 //! where `crates/xla` is the stub and no artifacts were built. Threading
 //! parallelizes convolutions over the batch with deterministic
-//! partitioning (see [`ops`]), so outputs are bit-identical for every
-//! `AIRBENCH_NATIVE_THREADS` value.
+//! partitioning (see [`ops`]) on the persistent, budget-governed worker
+//! pool in [`pool`] (no per-call thread spawns), so outputs are
+//! bit-identical for every `AIRBENCH_NATIVE_THREADS` value and for every
+//! fleet parallelism level. The engine itself splits into the immutable
+//! [`NativeShared`] (variant table + layer plan, `Arc`-shared by every
+//! fleet worker) and the per-run mutable [`NativeBackend`].
 
 pub mod gemm;
 pub mod ops;
+pub mod pool;
 pub mod variants;
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -37,6 +43,7 @@ use crate::runtime::manifest::{Manifest, Role, Variant};
 use crate::runtime::state::ModelState;
 use crate::tensor::Tensor;
 
+pub use pool::{available_cores, fleet_parallel_env, ThreadBudget};
 pub use variants::{builtin_names, builtin_variant};
 
 /// Thread count for the native kernels: `AIRBENCH_NATIVE_THREADS` or the
@@ -54,9 +61,79 @@ pub fn default_threads() -> usize {
         })
 }
 
-/// Pure-Rust implementation of the step contract.
-pub struct NativeBackend {
+/// Precomputed per-conv-layer name table — the hot loops look tensors up
+/// by these instead of re-`format!`ing strings every step.
+struct LayerPlan {
+    /// `"block{b}_conv{j}_w"`.
+    conv_w: String,
+    /// `"block{b}_bn{j}_b"`.
+    bn_b: String,
+    /// `"block{b}_bn{j}_mean"`.
+    bn_mean: String,
+    /// `"block{b}_bn{j}_var"`.
+    bn_var: String,
+}
+
+/// The immutable half of a native engine, shared (behind an [`Arc`]) by
+/// every worker a [`crate::runtime::backend::BackendFactory`] spawns: the
+/// resolved [`Variant`] (tensor inventory + baked hyperparameters) and the
+/// per-layer tensor-name plan. Everything mutable — wall-clock stats,
+/// model/optimizer state — stays per-run, which is what makes fleet
+/// workers cheap to instantiate and safe to run concurrently.
+pub struct NativeShared {
     variant: Variant,
+    layers: Vec<LayerPlan>,
+}
+
+impl NativeShared {
+    /// Build the shared state from an explicit variant spec.
+    pub fn new(variant: Variant) -> NativeShared {
+        let cpb = variant.hyper.convs_per_block;
+        let mut layers = Vec::with_capacity(3 * cpb);
+        for b in 1..=3usize {
+            for j in 1..=cpb {
+                layers.push(LayerPlan {
+                    conv_w: format!("block{b}_conv{j}_w"),
+                    bn_b: format!("block{b}_bn{j}_b"),
+                    bn_mean: format!("block{b}_bn{j}_mean"),
+                    bn_var: format!("block{b}_bn{j}_var"),
+                });
+            }
+        }
+        NativeShared { variant, layers }
+    }
+
+    /// Resolve a variant name exactly like [`NativeBackend::new`]: built-in
+    /// table first, AOT-manifest fallback.
+    pub fn resolve(variant_name: &str, artifacts_dir: &Path) -> Result<NativeShared> {
+        let variant = match variants::builtin_variant(variant_name) {
+            Some(v) => v,
+            None => Manifest::load(artifacts_dir)
+                .and_then(|m| m.variant(variant_name).cloned())
+                .with_context(|| {
+                    format!(
+                        "variant '{variant_name}' is neither built-in ({:?}) nor in a manifest",
+                        variants::builtin_names()
+                    )
+                })?,
+        };
+        Ok(NativeShared::new(variant))
+    }
+
+    /// The variant this engine executes.
+    pub fn variant(&self) -> &Variant {
+        &self.variant
+    }
+
+    fn layer(&self, block: usize, conv: usize) -> &LayerPlan {
+        &self.layers[(block - 1) * self.variant.hyper.convs_per_block + (conv - 1)]
+    }
+}
+
+/// Pure-Rust implementation of the step contract: an [`Arc`]-shared
+/// immutable [`NativeShared`] plus this worker's own mutable accounting.
+pub struct NativeBackend {
+    shared: Arc<NativeShared>,
     threads: usize,
     /// Wall-clock accounting (public so benches can reset between sections).
     pub stats: BackendStats,
@@ -118,25 +195,25 @@ impl NativeBackend {
     /// first (no artifacts needed), manifest fallback for names only an AOT
     /// manifest knows.
     pub fn new(variant_name: &str, artifacts_dir: &Path) -> Result<NativeBackend> {
-        let variant = match variants::builtin_variant(variant_name) {
-            Some(v) => v,
-            None => Manifest::load(artifacts_dir)
-                .and_then(|m| m.variant(variant_name).cloned())
-                .with_context(|| {
-                    format!(
-                        "variant '{variant_name}' is neither built-in ({:?}) nor in a manifest",
-                        variants::builtin_names()
-                    )
-                })?,
-        };
-        Ok(NativeBackend::from_variant(variant))
+        Ok(NativeBackend::from_shared(Arc::new(NativeShared::resolve(
+            variant_name,
+            artifacts_dir,
+        )?)))
     }
 
     /// Build from an explicit variant spec (the pjrt/native parity test
     /// drives both backends from the same manifest [`Variant`]).
     pub fn from_variant(variant: Variant) -> NativeBackend {
+        NativeBackend::from_shared(Arc::new(NativeShared::new(variant)))
+    }
+
+    /// Cheap worker constructor: clone an [`Arc`] to the shared immutable
+    /// engine state, fresh per-run accounting. This is what
+    /// [`crate::runtime::backend::BackendFactory::spawn_send`] hands to
+    /// every concurrent fleet run.
+    pub fn from_shared(shared: Arc<NativeShared>) -> NativeBackend {
         NativeBackend {
-            variant,
+            shared,
             threads: default_threads(),
             stats: BackendStats::default(),
         }
@@ -150,16 +227,21 @@ impl NativeBackend {
 
     /// The variant this backend executes.
     pub fn variant(&self) -> &Variant {
-        &self.variant
+        &self.shared.variant
+    }
+
+    /// The shared immutable engine state (cloned cheaply by fleet workers).
+    pub fn shared(&self) -> &Arc<NativeShared> {
+        &self.shared
     }
 
     fn check_images(&self, images: &Tensor) -> Result<()> {
-        let hw = self.variant.image_hw;
+        let hw = self.shared.variant.image_hw;
         let s = images.shape();
         if s.len() != 4 || s[1] != 3 || s[2] != hw || s[3] != hw {
             bail!(
                 "images must be (batch, 3, {hw}, {hw}) for variant '{}'; got {s:?}",
-                self.variant.name
+                self.shared.variant.name
             );
         }
         Ok(())
@@ -168,7 +250,7 @@ impl NativeBackend {
     /// Training-mode forward + backward: loss/acc, gradients for every
     /// trainable, and the new BN running stats. Does not mutate `state`.
     fn step_math(&self, state: &ModelState, images: &Tensor, labels: &[i32]) -> Result<StepMath> {
-        let v = &self.variant;
+        let v = &self.shared.variant;
         let hy = &v.hyper;
         let t = self.threads;
         let eps = hy.bn_eps as f32;
@@ -187,7 +269,8 @@ impl NativeBackend {
         for b in 1..=3usize {
             let mut skip: Option<Tensor> = None;
             for j in 1..=cpb {
-                let w = state.get(&format!("block{b}_conv{j}_w"))?;
+                let lp = self.shared.layer(b, j);
+                let w = state.get(&lp.conv_w)?;
                 let conv_in = x;
                 let conv_out = ops::conv2d_fwd(&conv_in, w, 1, t);
                 let conv_out_shape = conv_out.shape().to_vec();
@@ -197,20 +280,19 @@ impl NativeBackend {
                 } else {
                     (conv_out, None)
                 };
-                let bias = state.get(&format!("block{b}_bn{j}_b"))?;
+                let bias = state.get(&lp.bn_b)?;
                 let bn = ops::bn_train_fwd(&bn_in, bias.data(), eps);
                 // running = m*running + (1-m)*batch (momentum 0.6, §A).
-                for (suffix, batch_stat) in
-                    [("mean", &bn.mu), ("var", &bn.var_unbiased)]
+                for (name, batch_stat) in
+                    [(&lp.bn_mean, &bn.mu), (&lp.bn_var, &bn.var_unbiased)]
                 {
-                    let name = format!("block{b}_bn{j}_{suffix}");
-                    let old = state.get(&name)?.data();
+                    let old = state.get(name)?.data();
                     let new: Vec<f32> = old
                         .iter()
                         .zip(batch_stat.iter())
                         .map(|(&o, &s)| m * o + (1.0 - m) * s)
                         .collect();
-                    stat_updates.push((name, new));
+                    stat_updates.push((name.clone(), new));
                 }
                 let (act, phi) = ops::gelu_fwd_cache(&bn.y);
                 x = act;
@@ -312,22 +394,20 @@ impl NativeBackend {
                         add_into(&mut dx, &ds);
                     }
                 }
+                let lp = self.shared.layer(b, j);
                 let cache = caches.pop().expect("cache per conv layer");
                 let dpre = ops::gelu_bwd_cached(&dx, &cache.pre_act, &cache.phi);
                 let (dbn_in, dbias) = ops::bn_train_bwd(&dpre, &cache.xhat, &cache.ivstd);
-                grads.insert(
-                    format!("block{b}_bn{j}_b"),
-                    Tensor::from_vec(&[dbias.len()], dbias)?,
-                );
+                grads.insert(lp.bn_b.clone(), Tensor::from_vec(&[dbias.len()], dbias)?);
                 let dconv_out = match &cache.pool_idx {
                     Some(idx) => ops::maxpool_bwd(&dbn_in, idx, &cache.conv_out_shape),
                     None => dbn_in,
                 };
                 grads.insert(
-                    format!("block{b}_conv{j}_w"),
+                    lp.conv_w.clone(),
                     ops::conv2d_bwd_weights(&cache.conv_in, &dconv_out, 1, 3, 3, t),
                 );
-                let w = state.get(&format!("block{b}_conv{j}_w"))?;
+                let w = state.get(&lp.conv_w)?;
                 let (_, _, ih, iw) = cache.conv_in.dims4();
                 dx = ops::conv2d_bwd_data(&dconv_out, w, 1, ih, iw, t);
             }
@@ -366,10 +446,11 @@ impl NativeBackend {
         wd_over_lr: f32,
         whiten_bias_on: bool,
     ) -> Result<()> {
-        let hy = &self.variant.hyper;
+        let hy = &self.shared.variant.hyper;
         let mu = hy.momentum as f32;
         let bs = hy.bias_scaler as f32;
-        for spec in self.variant.tensors.iter().filter(|t| t.role == Role::Trainable) {
+        let trainables = self.shared.variant.tensors.iter();
+        for spec in trainables.filter(|t| t.role == Role::Trainable) {
             let g = grads
                 .get_mut(&spec.name)
                 .with_context(|| format!("no gradient for trainable '{}'", spec.name))?;
@@ -412,7 +493,7 @@ impl NativeBackend {
     /// topology change must be applied to BOTH (the pjrt/native parity
     /// test catches divergence whenever the compiled path is available).
     fn eval_math(&self, state: &ModelState, images: &Tensor) -> Result<Tensor> {
-        let v = &self.variant;
+        let v = &self.shared.variant;
         let hy = &v.hyper;
         let t = self.threads;
         let eps = hy.bn_eps as f32;
@@ -425,7 +506,8 @@ impl NativeBackend {
         for b in 1..=3usize {
             let mut skip: Option<Tensor> = None;
             for j in 1..=cpb {
-                let w = state.get(&format!("block{b}_conv{j}_w"))?;
+                let lp = self.shared.layer(b, j);
+                let w = state.get(&lp.conv_w)?;
                 let conv_out = ops::conv2d_fwd(&x, w, 1, t);
                 let bn_in = if j == 1 {
                     ops::maxpool_fwd(&conv_out, 2).0
@@ -434,9 +516,9 @@ impl NativeBackend {
                 };
                 let y = ops::bn_eval_fwd(
                     &bn_in,
-                    state.get(&format!("block{b}_bn{j}_b"))?.data(),
-                    state.get(&format!("block{b}_bn{j}_mean"))?.data(),
-                    state.get(&format!("block{b}_bn{j}_var"))?.data(),
+                    state.get(&lp.bn_b)?.data(),
+                    state.get(&lp.bn_mean)?.data(),
+                    state.get(&lp.bn_var)?.data(),
                     eps,
                 );
                 x = ops::gelu_map(&y);
@@ -480,7 +562,7 @@ impl Backend for NativeBackend {
     }
 
     fn variant(&self) -> &Variant {
-        &self.variant
+        &self.shared.variant
     }
 
     fn train_step(
@@ -492,7 +574,7 @@ impl Backend for NativeBackend {
         wd_over_lr: f32,
         whiten_bias_on: bool,
     ) -> Result<StepOutput> {
-        check_train_batch(&self.variant, images, labels)?;
+        check_train_batch(&self.shared.variant, images, labels)?;
         self.check_images(images)?;
         let t0 = Instant::now();
         let mut math = self.step_math(state, images, labels)?;
@@ -511,7 +593,7 @@ impl Backend for NativeBackend {
     }
 
     fn eval_logits(&mut self, state: &ModelState, images: &Tensor) -> Result<Tensor> {
-        check_eval_batch(&self.variant, images)?;
+        check_eval_batch(&self.shared.variant, images)?;
         self.check_images(images)?;
         let t0 = Instant::now();
         let logits = self.eval_math(state, images)?;

@@ -19,6 +19,7 @@
 //! the data pipeline).
 
 use crate::runtime::native::gemm::{self, BSrc};
+use crate::runtime::native::pool;
 use crate::tensor::Tensor;
 
 /// Baseline examples per weight-gradient partial. Never derived from the
@@ -313,9 +314,11 @@ struct Scratch {
 }
 
 /// Run `work(example, out_slice, scratch)` for every example, writing each
-/// example's disjoint `out` region. Contiguous example blocks go to up to
-/// `threads` scoped threads; output bits are independent of `threads`
-/// because the per-example computation is independent.
+/// example's disjoint `out` region. Contiguous example blocks become up to
+/// `threads` tasks on the persistent [`pool`] (no per-call thread spawns);
+/// output bits are independent of `threads` because the per-example
+/// computation is independent and the partitioning is a pure function of
+/// `(n, threads)`.
 fn par_examples<F>(n: usize, item: usize, out: &mut [f32], threads: usize, work: &F)
 where
     F: Fn(usize, &mut [f32], &mut Scratch) + Sync,
@@ -330,7 +333,7 @@ where
         return;
     }
     let per = n.div_ceil(t);
-    std::thread::scope(|s| {
+    pool::scope(|s| {
         let mut rest: &mut [f32] = out;
         let mut start = 0usize;
         while start < n {
@@ -371,7 +374,7 @@ where
         }
     } else {
         let per = n_chunks.div_ceil(t);
-        std::thread::scope(|s| {
+        pool::scope(|s| {
             let mut rest: &mut [f32] = &mut partials;
             let mut c0 = 0usize;
             while c0 < n_chunks {

@@ -1,0 +1,359 @@
+//! Persistent kernel worker pool + the global thread-budget planner.
+//!
+//! PR 3's kernels paid a `std::thread::scope` spawn (clone + stack setup +
+//! join) on every conv call — tolerable for one run, ruinous for a fleet
+//! of R concurrent runs each spawning per call. This module replaces those
+//! per-call spawns with one process-wide pool of parked worker threads and
+//! a [`scope`] API shaped like `std::thread::scope`, so the kernels in
+//! [`super::ops`] did not have to change their partitioning (and therefore
+//! their bit-exact determinism contract — tasks still own disjoint output
+//! slices; execution *order* is irrelevant to the result).
+//!
+//! The pool is budgeted by [`ThreadBudget`]: a fleet running
+//! `runs_parallel` trainings concurrently gives each run
+//! `kernel_threads = cores / runs_parallel` kernel tasks, so
+//! `runs_parallel x kernel_threads <= cores` and the machine is never
+//! oversubscribed (unless the user explicitly requests more concurrent
+//! runs than cores — then each run degrades to one kernel thread).
+//! Callers of [`scope`] execute the first task inline, so the pool itself
+//! holds `cores - 1` threads; idle workers park on a condvar and cost
+//! nothing. Waiting callers *help*: they drain queued tasks (their own or
+//! another run's) instead of blocking, which both keeps the machine busy
+//! and makes nested scopes deadlock-free.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Cores visible to this process (`available_parallelism`, min 1).
+pub fn available_cores() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// `AIRBENCH_FLEET_PARALLEL` override for fleet run-parallelism
+/// (`None` when unset, unparseable, or zero — all meaning "auto").
+pub fn fleet_parallel_env() -> Option<usize> {
+    std::env::var("AIRBENCH_FLEET_PARALLEL")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&p| p > 0)
+}
+
+/// The resolved thread budget of a fleet: how many runs execute
+/// concurrently and how many kernel tasks each run's convolutions fan out
+/// to. Invariant: `runs_parallel * kernel_threads <= cores` whenever
+/// `runs_parallel <= cores` (an explicit request for more concurrent runs
+/// than cores is honored with one kernel thread each).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ThreadBudget {
+    /// Cores the plan was computed for.
+    pub cores: usize,
+    /// Concurrent training runs.
+    pub runs_parallel: usize,
+    /// Kernel tasks per run (`NativeBackend::with_threads` value).
+    pub kernel_threads: usize,
+}
+
+impl ThreadBudget {
+    /// Plan for this machine. `requested = 0` means auto: one run per core
+    /// (capped at `n_runs`), single-threaded kernels. An explicit request
+    /// is honored (capped at `n_runs`), and the leftover cores go to the
+    /// kernels.
+    pub fn plan(requested: usize, n_runs: usize) -> ThreadBudget {
+        ThreadBudget::plan_on(requested, n_runs, available_cores())
+    }
+
+    /// [`ThreadBudget::plan`] against an explicit core count (tests).
+    pub fn plan_on(requested: usize, n_runs: usize, cores: usize) -> ThreadBudget {
+        let cores = cores.max(1);
+        let n = n_runs.max(1);
+        let runs_parallel = if requested == 0 {
+            cores.min(n)
+        } else {
+            requested.min(n).max(1)
+        };
+        ThreadBudget {
+            cores,
+            runs_parallel,
+            kernel_threads: (cores / runs_parallel).max(1),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The pool
+// ---------------------------------------------------------------------------
+
+/// One batch of tasks submitted together; the scope waits on it.
+struct Group {
+    /// Queued (not yet finished) tasks of this batch.
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+struct Job {
+    run: Box<dyn FnOnce() + Send>,
+    group: Arc<Group>,
+}
+
+struct Queue {
+    jobs: Mutex<VecDeque<Job>>,
+    ready: Condvar,
+}
+
+static POOL: OnceLock<Arc<Queue>> = OnceLock::new();
+
+fn pool() -> &'static Arc<Queue> {
+    POOL.get_or_init(|| {
+        let queue = Arc::new(Queue {
+            jobs: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+        });
+        // Scope callers execute one task of every batch inline, so
+        // `cores - 1` persistent workers saturate the machine; keep at
+        // least one so a queued task can always make progress.
+        let workers = available_cores().saturating_sub(1).max(1);
+        for w in 0..workers {
+            let q = Arc::clone(&queue);
+            std::thread::Builder::new()
+                .name(format!("airbench-pool-{w}"))
+                .spawn(move || worker_loop(&q))
+                .expect("spawn pool worker");
+        }
+        queue
+    })
+}
+
+fn worker_loop(q: &Queue) {
+    loop {
+        let job = {
+            let mut jobs = q.jobs.lock().unwrap();
+            loop {
+                if let Some(j) = jobs.pop_front() {
+                    break j;
+                }
+                jobs = q.ready.wait(jobs).unwrap();
+            }
+        };
+        execute(job);
+    }
+}
+
+/// Run one job and mark its group; a panic inside the task is recorded on
+/// the group (and re-raised by the waiting scope), never lost.
+fn execute(job: Job) {
+    let Job { run, group } = job;
+    if catch_unwind(AssertUnwindSafe(run)).is_err() {
+        group.panicked.store(true, Ordering::SeqCst);
+    }
+    let mut rem = group.remaining.lock().unwrap();
+    *rem -= 1;
+    if *rem == 0 {
+        group.done.notify_all();
+    }
+}
+
+/// Spawn handle passed to the [`scope`] closure.
+pub struct Scope<'env> {
+    tasks: Vec<Box<dyn FnOnce() + Send + 'env>>,
+}
+
+impl<'env> Scope<'env> {
+    /// Queue a task. Tasks may borrow from the enclosing stack frame
+    /// (`'env`); [`scope`] does not return until every task has finished.
+    pub fn spawn<F: FnOnce() + Send + 'env>(&mut self, f: F) {
+        self.tasks.push(Box::new(f));
+    }
+}
+
+/// `std::thread::scope` lookalike on the persistent pool: collect tasks,
+/// run the first inline on the caller, farm the rest out to the parked
+/// workers, help drain the queue while waiting, and propagate panics.
+/// Structured concurrency guarantee: every task completes (or its panic is
+/// re-raised here) before this function returns, which is what makes the
+/// `'env` stack borrows sound.
+pub fn scope<'env, F: FnOnce(&mut Scope<'env>)>(f: F) {
+    let mut s = Scope { tasks: Vec::new() };
+    f(&mut s);
+    let mut tasks = s.tasks;
+    if tasks.is_empty() {
+        return;
+    }
+    let first = tasks.remove(0);
+    if tasks.is_empty() {
+        first();
+        return;
+    }
+    let group = Arc::new(Group {
+        remaining: Mutex::new(tasks.len()),
+        done: Condvar::new(),
+        panicked: AtomicBool::new(false),
+    });
+    let q = pool();
+    {
+        let mut jobs = q.jobs.lock().unwrap();
+        for t in tasks {
+            // Lifetime erasure: the job queue is 'static, the task borrows
+            // 'env. Sound because this function blocks until `remaining`
+            // hits zero — no task can outlive the borrows it captured.
+            let run: Box<dyn FnOnce() + Send> = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'env>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(t)
+            };
+            jobs.push_back(Job {
+                run,
+                group: Arc::clone(&group),
+            });
+        }
+        q.ready.notify_all();
+    }
+    // Caller runs its own first task, then helps with whatever is queued
+    // (its tasks or another scope's) until its group completes.
+    let inline_panic = catch_unwind(AssertUnwindSafe(first)).err();
+    loop {
+        {
+            let rem = group.remaining.lock().unwrap();
+            if *rem == 0 {
+                break;
+            }
+        }
+        let job = q.jobs.lock().unwrap().pop_front();
+        match job {
+            Some(j) => execute(j),
+            None => {
+                // Queue drained: our stragglers are running on workers.
+                let mut rem = group.remaining.lock().unwrap();
+                while *rem != 0 {
+                    rem = group.done.wait(rem).unwrap();
+                }
+                break;
+            }
+        }
+    }
+    if let Some(payload) = inline_panic {
+        resume_unwind(payload);
+    }
+    if group.panicked.load(Ordering::SeqCst) {
+        panic!("a pooled kernel task panicked");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_runs_every_task_with_stack_borrows() {
+        let mut out = vec![0u64; 64];
+        scope(|s| {
+            for (i, chunk) in out.chunks_mut(8).enumerate() {
+                s.spawn(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = (i * 8 + j) as u64 + 1;
+                    }
+                });
+            }
+        });
+        assert_eq!(out, (1..=64).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn empty_and_single_task_scopes() {
+        scope(|_| {});
+        let mut hit = false;
+        scope(|s| s.spawn(|| hit = true));
+        assert!(hit);
+    }
+
+    #[test]
+    fn nested_scopes_complete() {
+        let mut sums = vec![0u64; 4];
+        scope(|s| {
+            for (i, slot) in sums.iter_mut().enumerate() {
+                s.spawn(move || {
+                    let mut inner = vec![0u64; 4];
+                    scope(|s2| {
+                        for (j, v) in inner.iter_mut().enumerate() {
+                            s2.spawn(move || *v = (i * 4 + j) as u64);
+                        }
+                    });
+                    *slot = inner.iter().sum();
+                });
+            }
+        });
+        assert_eq!(sums.iter().sum::<u64>(), (0..16).sum());
+    }
+
+    #[test]
+    fn panics_propagate_from_inline_and_pooled_tasks() {
+        // First task runs inline on the caller.
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            scope(|s| {
+                s.spawn(|| panic!("inline boom"));
+                s.spawn(|| {});
+            });
+        }));
+        assert!(r.is_err());
+        // Later tasks run on pool workers.
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            scope(|s| {
+                s.spawn(|| {});
+                s.spawn(|| panic!("pooled boom"));
+            });
+        }));
+        assert!(r.is_err());
+        // The pool survives both panics.
+        let mut v = [0u8; 3];
+        scope(|s| {
+            for x in v.iter_mut() {
+                s.spawn(move || *x = 7);
+            }
+        });
+        assert_eq!(v, [7, 7, 7]);
+    }
+
+    #[test]
+    fn budget_planner_invariants() {
+        // Auto: one run per core, capped by the fleet size.
+        assert_eq!(
+            ThreadBudget::plan_on(0, 100, 8),
+            ThreadBudget { cores: 8, runs_parallel: 8, kernel_threads: 1 }
+        );
+        assert_eq!(
+            ThreadBudget::plan_on(0, 2, 8),
+            ThreadBudget { cores: 8, runs_parallel: 2, kernel_threads: 4 }
+        );
+        // Explicit request: honored, leftover cores go to the kernels.
+        assert_eq!(
+            ThreadBudget::plan_on(2, 100, 8),
+            ThreadBudget { cores: 8, runs_parallel: 2, kernel_threads: 4 }
+        );
+        assert_eq!(
+            ThreadBudget::plan_on(3, 100, 8),
+            ThreadBudget { cores: 8, runs_parallel: 3, kernel_threads: 2 }
+        );
+        // Overcommit request: one kernel thread each, never zero.
+        assert_eq!(
+            ThreadBudget::plan_on(16, 100, 4),
+            ThreadBudget { cores: 4, runs_parallel: 16, kernel_threads: 1 }
+        );
+        // Degenerate inputs clamp instead of dividing by zero.
+        let b = ThreadBudget::plan_on(0, 0, 0);
+        assert!(b.cores == 1 && b.runs_parallel == 1 && b.kernel_threads == 1);
+        // The budget invariant itself.
+        for cores in 1..=16 {
+            for req in 0..=20 {
+                let b = ThreadBudget::plan_on(req, 10, cores);
+                if b.runs_parallel <= b.cores {
+                    assert!(b.runs_parallel * b.kernel_threads <= b.cores, "{b:?}");
+                }
+            }
+        }
+    }
+}

@@ -18,11 +18,50 @@ pub struct Summary {
     pub max: f64,
 }
 
-impl Summary {
-    /// Summarize a sample (all-zeros for an empty slice).
-    pub fn of(xs: &[f64]) -> Summary {
-        let n = xs.len();
-        if n == 0 {
+/// Incremental (Welford) accumulator behind [`Summary`]: push values one at
+/// a time, read the summary at any point. An n=10,000 fleet (Table 4 scale)
+/// streams per-run accuracies through this — O(1) state, no need to hold
+/// every per-run record in memory just to aggregate.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Welford {
+    n: usize,
+    mean: f64,
+    /// Sum of squared deviations from the running mean.
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    /// Empty accumulator.
+    pub fn new() -> Welford {
+        Welford::default()
+    }
+
+    /// Number of values pushed so far.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Add one value (Welford's update: numerically stable, single pass).
+    pub fn push(&mut self, x: f64) {
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    /// Snapshot as a [`Summary`] (all-zeros when nothing was pushed, like
+    /// `Summary::of(&[])`).
+    pub fn summary(&self) -> Summary {
+        if self.n == 0 {
             return Summary {
                 n: 0,
                 mean: 0.0,
@@ -31,19 +70,31 @@ impl Summary {
                 max: 0.0,
             };
         }
-        let mean = xs.iter().sum::<f64>() / n as f64;
-        let var = if n > 1 {
-            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        let var = if self.n > 1 {
+            self.m2 / (self.n - 1) as f64
         } else {
             0.0
         };
         Summary {
-            n,
-            mean,
+            n: self.n,
+            mean: self.mean,
             std: var.sqrt(),
-            min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
-            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            min: self.min,
+            max: self.max,
         }
+    }
+}
+
+impl Summary {
+    /// Summarize a sample (all-zeros for an empty slice). Wrapper over the
+    /// incremental [`Welford`] path, so batch and streaming aggregation can
+    /// never disagree.
+    pub fn of(xs: &[f64]) -> Summary {
+        let mut w = Welford::new();
+        for &x in xs {
+            w.push(x);
+        }
+        w.summary()
     }
 
     /// Standard error of the mean.
@@ -121,6 +172,42 @@ mod tests {
         assert_eq!(welch_t(&a, &a), 0.0);
         let b = Summary::of(&[11.0, 12.0, 13.0]);
         assert!(welch_t(&b, &a) > 5.0);
+    }
+
+    #[test]
+    fn welford_streaming_matches_independent_two_pass() {
+        // Reference computed INLINE with the classic two-pass formulas —
+        // Summary::of now wraps Welford itself, so comparing against it
+        // would be vacuous.
+        fn two_pass(xs: &[f64]) -> (f64, f64, f64, f64) {
+            let n = xs.len() as f64;
+            let mean = xs.iter().sum::<f64>() / n;
+            let var = if xs.len() > 1 {
+                xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0)
+            } else {
+                0.0
+            };
+            let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+            let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            (mean, var.sqrt(), min, max)
+        }
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0, -1.5, 0.25];
+        let mut w = Welford::new();
+        for (i, &x) in xs.iter().enumerate() {
+            w.push(x);
+            // At every prefix the stream agrees with the two-pass math.
+            let s = w.summary();
+            let (mean, std, min, max) = two_pass(&xs[..=i]);
+            assert_eq!(s.n, i + 1);
+            assert!((s.mean - mean).abs() < 1e-12);
+            assert!((s.std - std).abs() < 1e-12);
+            assert_eq!(s.min, min);
+            assert_eq!(s.max, max);
+        }
+        assert_eq!(w.n(), xs.len());
+        // Empty accumulator mirrors Summary::of(&[]).
+        let e = Welford::new().summary();
+        assert_eq!((e.n, e.mean, e.std, e.min, e.max), (0, 0.0, 0.0, 0.0, 0.0));
     }
 
     #[test]

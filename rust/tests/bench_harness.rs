@@ -1,9 +1,14 @@
 //! Bench-harness smoke test: a tiny §3.7 protocol run on the nano variant
-//! must produce a schema-valid `BENCH_*.json`, and the committed baseline
-//! at the repository root must stay schema-valid too (the trajectory file
-//! every PR appends to — BENCHMARKS.md).
+//! must produce a schema-valid `BENCH_*.json`, the fleet-throughput phase
+//! must produce a schema-valid fleet report, the fleet log
+//! (`FleetResult::to_json`) must carry its full field set, and every
+//! committed baseline at the repository root must stay schema-valid (the
+//! trajectory files every PR appends to — BENCHMARKS.md).
 
-use airbench::bench::{run, validate, BenchConfig, SCHEMA};
+use airbench::bench::{
+    run, run_fleet_bench, validate, validate_any, validate_fleet, BenchConfig, FleetBenchConfig,
+    FLEET_SCHEMA, SCHEMA,
+};
 use airbench::runtime::BackendKind;
 use airbench::util::json::parse;
 
@@ -69,10 +74,97 @@ fn default_tag_names_backend_and_variant() {
 }
 
 #[test]
+fn fleet_phase_emits_schema_valid_json() {
+    let dir = std::env::temp_dir().join("airbench_fleet_bench_smoke");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = FleetBenchConfig {
+        variant: "nano".into(),
+        backend: BackendKind::Native,
+        tag: Some("fleet_smoke".into()),
+        n_runs: 2,
+        parallel_levels: vec![1, 2],
+        epochs: 0.5,
+        train_n: 64,
+        test_n: 32,
+        out_dir: dir.clone(),
+    };
+    let report = run_fleet_bench(&cfg).expect("fleet bench run");
+    assert_eq!(report.levels.len(), 2);
+    assert!(report.levels.iter().all(|l| l.wall_s > 0.0));
+    // The scheduler's measured determinism verdict must hold.
+    assert!(report.levels.iter().all(|l| l.bit_identical_to_p1));
+    assert_eq!(report.levels[0].speedup_vs_p1, 1.0);
+
+    let path = report.write(&dir).expect("write fleet report");
+    assert_eq!(path.file_name().unwrap(), "BENCH_fleet_smoke.json");
+    let j = parse(&std::fs::read_to_string(&path).unwrap()).expect("fleet JSON parses");
+    validate_fleet(&j).expect("fleet JSON is schema-valid");
+    validate_any(&j).expect("dispatching validator accepts it");
+    assert_eq!(j.get("schema").unwrap().as_str().unwrap(), FLEET_SCHEMA);
+    // The single-run validator must NOT accept a fleet document.
+    assert!(validate(&j).is_err());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn fleet_log_carries_full_field_set() {
+    // Schema check for `FleetResult::to_json` (`airbench fleet --log`):
+    // per-run epochs_to_target, the no-TTA summary, and wall-time stats
+    // must all be present with the right shapes.
+    use airbench::config::{TrainConfig, TtaLevel};
+    use airbench::coordinator::run_fleet_parallel;
+    use airbench::data::synthetic::{cifar_like, SynthConfig};
+    use airbench::runtime::EngineSpec;
+
+    let n = 3usize;
+    let cfg = TrainConfig {
+        variant: "nano".into(),
+        epochs: 1.0,
+        tta: TtaLevel::None,
+        whiten_samples: 32,
+        eval_every_epoch: true,
+        target_acc: 0.0, // every run crosses at its first eval
+        ..TrainConfig::default()
+    };
+    let train_ds = cifar_like(&SynthConfig::default().with_n(64), 0x106, 0);
+    let test_ds = cifar_like(&SynthConfig::default().with_n(32), 0x106, 1);
+    let f = EngineSpec::new(BackendKind::Native, "nano").factory().unwrap();
+    let fleet = run_fleet_parallel(&f, &train_ds, &test_ds, &cfg, n, 2, None).unwrap();
+    let j = fleet.to_json(&cfg);
+
+    assert_eq!(j.get("n").unwrap().as_usize().unwrap(), n);
+    for key in ["mean", "std", "ci95"] {
+        assert!(j.get(key).unwrap().as_f64().unwrap().is_finite(), "{key}");
+    }
+    let no_tta = j.get("no_tta").unwrap();
+    for key in ["mean", "std", "ci95"] {
+        assert!(no_tta.get(key).unwrap().as_f64().unwrap().is_finite(), "no_tta.{key}");
+    }
+    for key in ["accs", "accs_no_tta", "times", "epochs_to_target"] {
+        assert_eq!(j.get(key).unwrap().as_arr().unwrap().len(), n, "{key}");
+    }
+    // target_acc = 0 means every run hit the target at its first eval:
+    // per-run entries are numbers (not null), and the mean exists.
+    for e in j.get("epochs_to_target").unwrap().as_arr().unwrap() {
+        assert!(e.as_f64().unwrap() >= 1.0);
+    }
+    assert!(j.get("mean_epochs_to_target").unwrap().as_f64().unwrap() >= 1.0);
+    let ts = j.get("time_stats").unwrap();
+    for key in ["mean_s", "std_s", "min_s", "max_s", "total_s"] {
+        assert!(ts.get(key).unwrap().as_f64().unwrap().is_finite(), "time_stats.{key}");
+    }
+    assert!(ts.get("total_s").unwrap().as_f64().unwrap() > 0.0);
+    // Config echo present (used by the determinism suite's log diff).
+    assert!(j.get("config").unwrap().get("variant").is_ok());
+}
+
+#[test]
 fn committed_baseline_is_schema_valid() {
     // BENCH_*.json files live at the repository root (one level above the
-    // crate). Every committed baseline must parse and validate — otherwise
-    // the perf trajectory silently rots.
+    // crate). Every committed baseline must parse and validate against its
+    // declared schema — single-run (airbench.bench/1) or fleet
+    // (airbench.fleet-bench/1) — otherwise the perf trajectory silently
+    // rots.
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()
         .expect("crate has a parent dir")
@@ -84,9 +176,9 @@ fn committed_baseline_is_schema_valid() {
         if name.starts_with("BENCH_") && name.ends_with(".json") {
             let text = std::fs::read_to_string(entry.path()).unwrap();
             let j = parse(&text).unwrap_or_else(|e| panic!("{name} does not parse: {e:#}"));
-            validate(&j).unwrap_or_else(|e| panic!("{name} is schema-invalid: {e:#}"));
+            validate_any(&j).unwrap_or_else(|e| panic!("{name} is schema-invalid: {e:#}"));
             found += 1;
         }
     }
-    assert!(found >= 1, "no BENCH_*.json baseline committed at the repo root");
+    assert!(found >= 2, "expected both the pr3 and pr4 baselines at the repo root");
 }

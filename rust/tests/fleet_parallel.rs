@@ -1,0 +1,165 @@
+//! Fleet determinism suite: the concurrent work-queue scheduler must be an
+//! *invisible* optimization. For the nano variant, an n=8 fleet is trained
+//! at `--fleet-parallel` 1, 2, and 4 from the same factory, and every
+//! per-run accuracy must be bit-identical across the levels AND to the
+//! sequential `run_fleet` reference path; the structured fleet logs must
+//! be identical modulo the time-dependent fields.
+
+use airbench::config::{TrainConfig, TtaLevel};
+use airbench::coordinator::{fleet_seeds, run_fleet, run_fleet_parallel, FleetResult};
+use airbench::data::synthetic::{cifar_like, SynthConfig};
+use airbench::data::Dataset;
+use airbench::runtime::{BackendKind, EngineSpec, ThreadBudget};
+use airbench::util::json::Json;
+
+const N_RUNS: usize = 8;
+
+fn fleet_config() -> TrainConfig {
+    TrainConfig {
+        variant: "nano".into(),
+        epochs: 2.0,
+        tta: TtaLevel::None,
+        whiten_samples: 32,
+        seed: 7,
+        // Exercise the per-epoch eval path too, so `epochs_to_target`
+        // comparisons (and the to_json field) are not vacuously None-only
+        // by construction.
+        eval_every_epoch: true,
+        ..TrainConfig::default()
+    }
+}
+
+fn tiny_data() -> (Dataset, Dataset) {
+    let cfg = SynthConfig::default();
+    (
+        cifar_like(&cfg.clone().with_n(64), 0xF1EE, 0),
+        cifar_like(&cfg.with_n(32), 0xF1EE, 1),
+    )
+}
+
+fn factory() -> airbench::runtime::BackendFactory {
+    EngineSpec::new(BackendKind::Native, "nano").factory().unwrap()
+}
+
+/// Strip the time-dependent fields from a fleet log, leaving everything
+/// the determinism contract says must match.
+fn without_times(j: &Json) -> Json {
+    match j {
+        Json::Obj(m) => Json::Obj(
+            m.iter()
+                .filter(|(k, _)| k.as_str() != "times" && k.as_str() != "time_stats")
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect(),
+        ),
+        other => other.clone(),
+    }
+}
+
+#[test]
+fn parallel_levels_are_bit_identical_and_match_sequential() {
+    let (train_ds, test_ds) = tiny_data();
+    let cfg = fleet_config();
+    let f = factory();
+
+    // The sequential reference path (one worker, plain `for` loop).
+    let mut engine = f.spawn().unwrap();
+    let seq = run_fleet(engine.as_mut(), &train_ds, &test_ds, &cfg, N_RUNS, None).unwrap();
+    assert_eq!(seq.runs.len(), N_RUNS);
+    assert!(seq.accuracies.iter().all(|a| a.is_finite()));
+
+    let mut logs: Vec<Json> = vec![seq.to_json(&cfg)];
+    for parallel in [1usize, 2, 4] {
+        let fleet: FleetResult =
+            run_fleet_parallel(&f, &train_ds, &test_ds, &cfg, N_RUNS, parallel, None).unwrap();
+        assert_eq!(fleet.runs.len(), N_RUNS, "parallel={parallel}");
+        for i in 0..N_RUNS {
+            assert_eq!(
+                seq.accuracies[i].to_bits(),
+                fleet.accuracies[i].to_bits(),
+                "run {i} accuracy differs at parallel={parallel}"
+            );
+            assert_eq!(
+                seq.accuracies_no_tta[i].to_bits(),
+                fleet.accuracies_no_tta[i].to_bits(),
+                "run {i} no-TTA accuracy differs at parallel={parallel}"
+            );
+            assert_eq!(
+                seq.runs[i].steps_run, fleet.runs[i].steps_run,
+                "run {i} steps differ at parallel={parallel}"
+            );
+            assert_eq!(
+                seq.runs[i].epochs_to_target, fleet.runs[i].epochs_to_target,
+                "run {i} epochs_to_target differs at parallel={parallel}"
+            );
+        }
+        logs.push(fleet.to_json(&cfg));
+    }
+
+    // Fleet logs are identical modulo the time-dependent fields.
+    let reference = without_times(&logs[0]);
+    for (idx, log) in logs.iter().enumerate().skip(1) {
+        assert_eq!(
+            reference,
+            without_times(log),
+            "fleet log {idx} differs beyond times"
+        );
+    }
+    // ... and the stripped comparison is not vacuous: times DO exist.
+    for log in &logs {
+        assert!(log.get("times").is_ok());
+        assert!(log.get("time_stats").is_ok());
+    }
+}
+
+#[test]
+fn progress_reports_every_run_exactly_once() {
+    let (train_ds, test_ds) = tiny_data();
+    let cfg = fleet_config();
+    let f = factory();
+    let mut seen = vec![0usize; 4];
+    let mut progress = |i: usize, acc: f64| {
+        seen[i] += 1;
+        assert!(acc.is_finite());
+    };
+    let fleet =
+        run_fleet_parallel(&f, &train_ds, &test_ds, &cfg, 4, 2, Some(&mut progress)).unwrap();
+    assert_eq!(fleet.runs.len(), 4);
+    assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+}
+
+#[test]
+fn seed_fork_is_shared_and_sequential_order_independent() {
+    // The per-run seed table is a pure function of (cfg.seed, n): the
+    // scheduler can hand run i to any worker at any time.
+    let cfg = fleet_config();
+    let a = fleet_seeds(&cfg, N_RUNS);
+    let b = fleet_seeds(&cfg, N_RUNS);
+    assert_eq!(a, b);
+    // A prefix of a longer fleet's seeds equals the shorter fleet's seeds.
+    let long = fleet_seeds(&cfg, 2 * N_RUNS);
+    assert_eq!(&long[..N_RUNS], &a[..]);
+    // Distinct fleet seeds fork distinct run seeds.
+    let mut other_cfg = cfg.clone();
+    other_cfg.seed ^= 0xDEAD;
+    assert_ne!(fleet_seeds(&other_cfg, N_RUNS), a);
+    // All seeds distinct within one fleet.
+    let mut sorted = a.clone();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert_eq!(sorted.len(), N_RUNS);
+}
+
+#[test]
+fn budget_governs_worker_kernel_threads() {
+    // The planner's invariant on this machine: at every requested level
+    // the budget never oversubscribes (unless the request itself does).
+    for parallel in [1usize, 2, 4] {
+        let b = ThreadBudget::plan(parallel, N_RUNS);
+        assert_eq!(b.runs_parallel, parallel.min(N_RUNS));
+        if b.runs_parallel <= b.cores {
+            assert!(b.runs_parallel * b.kernel_threads <= b.cores, "{b:?}");
+        } else {
+            assert_eq!(b.kernel_threads, 1, "{b:?}");
+        }
+    }
+}
