@@ -1,0 +1,850 @@
+//! The job engine: one long-lived owner of backends, budget, and data
+//! that executes [`JobSpec`]s concurrently and streams typed [`Event`]s.
+//!
+//! [`Engine::submit`] assigns a job id, emits `queued`, and hands the job
+//! to a worker thread gated by the engine's slot budget (`job_slots`
+//! concurrent jobs; each job's native kernels get the
+//! [`ThreadBudget`]-planned core share so `job_slots x kernel_threads <=
+//! cores`, the PR 4 planner applied one level up). The caller gets a
+//! [`JobHandle`]: an event receiver plus a [`CancelToken`] that stops the
+//! job cooperatively at its next epoch / eval-batch / fleet-run boundary.
+//!
+//! What the engine owns **once**, across jobs:
+//! * the dataset cache — `(kind, sizes) -> (train, test)` built through
+//!   [`crate::experiments::make_data`], so concurrent jobs share data;
+//! * the resolved native backend cores
+//!   ([`crate::runtime::NativeShared`]) — a variant is resolved once per
+//!   engine and every job's workers are `Arc` clones (PJRT clients are
+//!   process-pinned and not `Send`, so PJRT jobs compile on their own job
+//!   thread — the factory seam hides the difference);
+//! * the PJRT availability probe, so `backend=auto` resolves identically
+//!   for every job.
+//!
+//! Determinism: the engine adds no RNG and the observers are passive, so
+//! a job's result is bit-identical to calling the coordinator directly
+//! with the same config — `tests/serve_api.rs` pins this.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::api::event::{validate_result, Event, JobId, JobResult};
+use crate::api::job::{BenchJob, EvalJob, FleetBenchJob, FleetJob, InfoJob, JobSpec, TrainJob};
+use crate::coordinator::observer::{Cancelled, Observer};
+use crate::coordinator::trainer::EpochLog;
+use crate::coordinator::{
+    evaluate_observed, fleet_budget, is_cancelled, run_fleet, run_fleet_parallel, train_run, warmup,
+};
+use crate::data::Dataset;
+use crate::experiments::{make_data, DataKind, Scale};
+use crate::runtime::native::available_cores;
+use crate::runtime::{
+    Backend, BackendFactory, BackendKind, EngineSpec, Manifest, ModelState, NativeShared,
+    PjrtStatus, ThreadBudget,
+};
+use crate::util::json::Json;
+
+/// Engine construction knobs.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Default dataset sizes / run counts for jobs that don't override
+    /// them (`AIRBENCH_TRAIN_N` etc. respected, like the CLI).
+    pub scale: Scale,
+    /// Where PJRT artifacts are looked up.
+    pub artifacts_dir: PathBuf,
+    /// Concurrent job slots. `1` (the default) gives each job the whole
+    /// machine — the one-shot CLI setting. `0` = auto: one slot per core
+    /// with single-threaded kernels, the serve-daemon setting. Values in
+    /// between split the cores evenly (`cores / job_slots` kernel threads
+    /// per job). Fleet jobs plan their *internal* parallelism against the
+    /// full machine, so fleet-heavy serving should keep `job_slots = 1`.
+    pub job_slots: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            scale: Scale::from_env(),
+            artifacts_dir: Manifest::default_dir(),
+            job_slots: 1,
+        }
+    }
+}
+
+/// Cooperative cancellation handle (cloneable; see
+/// [`JobHandle::cancel_token`]).
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    /// Request cancellation. The job stops at its next epoch /
+    /// eval-batch / fleet-run boundary and terminates with an `error`
+    /// event whose message is `"cancelled"`.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    /// Whether cancellation has been requested.
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A submitted job: the receiving end of its event stream plus its
+/// cancellation token. Dropping the handle detaches the job (it keeps
+/// running; its events are discarded).
+pub struct JobHandle {
+    id: JobId,
+    rx: Receiver<Event>,
+    cancel: CancelToken,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl JobHandle {
+    /// The engine-assigned job id (1-based).
+    pub fn id(&self) -> JobId {
+        self.id
+    }
+
+    /// A cloneable cancellation token for this job.
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
+    /// Request cooperative cancellation (see [`CancelToken::cancel`]).
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    /// Blocking iterator over the job's events, ending after the terminal
+    /// `result` / `error` event.
+    pub fn events(&self) -> std::sync::mpsc::Iter<'_, Event> {
+        self.rx.iter()
+    }
+
+    /// Drain the stream and return the terminal result (an `error` event
+    /// becomes an `Err` with its message).
+    pub fn wait(mut self) -> Result<JobResult> {
+        let mut terminal: Option<Result<JobResult>> = None;
+        for ev in self.rx.iter() {
+            match ev {
+                Event::Result { result, .. } => terminal = Some(Ok(*result)),
+                Event::Error { message, .. } => terminal = Some(Err(anyhow!("{message}"))),
+                _ => {}
+            }
+        }
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        terminal.unwrap_or_else(|| Err(anyhow!("job ended without a terminal event")))
+    }
+}
+
+struct Inner {
+    cfg: EngineConfig,
+    budget: ThreadBudget,
+    pjrt_available: bool,
+    next_id: AtomicU64,
+    active: Mutex<usize>,
+    gate: Condvar,
+    data: Mutex<BTreeMap<String, (Dataset, Dataset)>>,
+    shared: Mutex<BTreeMap<String, Arc<NativeShared>>>,
+}
+
+/// Releases a job slot even when the job panics.
+struct SlotGuard<'a>(&'a Inner);
+
+impl Drop for SlotGuard<'_> {
+    fn drop(&mut self) {
+        let mut active = self.0.active.lock().unwrap();
+        *active -= 1;
+        self.0.gate.notify_one();
+    }
+}
+
+/// Observer that forwards coordinator hooks onto the job's event channel
+/// and exposes the job's cancel token to the coordinator's polls.
+struct ChannelSink {
+    job: JobId,
+    tx: Sender<Event>,
+    cancel: CancelToken,
+}
+
+impl ChannelSink {
+    fn send(&self, ev: Event) {
+        // A dropped receiver means the client went away; the job finishes
+        // regardless (results may be written to disk), so ignore failures.
+        let _ = self.tx.send(ev);
+    }
+}
+
+impl Observer for ChannelSink {
+    fn on_epoch(&mut self, log: &EpochLog) {
+        self.send(Event::Epoch {
+            job: self.job,
+            epoch: log.epoch,
+            train_loss: log.train_loss,
+            train_acc: log.train_acc,
+            val_acc: log.val_acc,
+        });
+    }
+
+    fn on_run(&mut self, run: usize, accuracy: f64) {
+        self.send(Event::Run {
+            job: self.job,
+            run,
+            accuracy,
+        });
+    }
+
+    fn on_log(&mut self, line: &str) {
+        self.send(Event::Log {
+            job: self.job,
+            line: line.to_string(),
+        });
+    }
+
+    fn cancelled(&self) -> bool {
+        self.cancel.is_cancelled()
+    }
+}
+
+/// The long-lived job engine (cheaply cloneable; clones share all state).
+#[derive(Clone)]
+pub struct Engine {
+    inner: Arc<Inner>,
+}
+
+impl Engine {
+    /// Build an engine. Resolves the slot budget against this machine and
+    /// probes PJRT availability once so `backend=auto` is stable across
+    /// jobs.
+    pub fn new(cfg: EngineConfig) -> Engine {
+        let cores = available_cores();
+        let slots = if cfg.job_slots == 0 { cores } else { cfg.job_slots };
+        let budget = ThreadBudget::plan_on(slots, slots, cores);
+        let pjrt_available =
+            matches!(PjrtStatus::probe(&cfg.artifacts_dir), PjrtStatus::Available);
+        Engine {
+            inner: Arc::new(Inner {
+                cfg,
+                budget,
+                pjrt_available,
+                next_id: AtomicU64::new(0),
+                active: Mutex::new(0),
+                gate: Condvar::new(),
+                data: Mutex::new(BTreeMap::new()),
+                shared: Mutex::new(BTreeMap::new()),
+            }),
+        }
+    }
+
+    /// An engine with default configuration (one job slot).
+    pub fn with_defaults() -> Engine {
+        Engine::new(EngineConfig::default())
+    }
+
+    /// Resolved concurrent job slots.
+    pub fn job_slots(&self) -> usize {
+        self.inner.budget.runs_parallel
+    }
+
+    /// Submit a job. Infallible by design: every failure — bad variant,
+    /// missing checkpoint, cancelled run — arrives as a terminal `error`
+    /// event on the returned handle, so clients handle exactly one error
+    /// path. The event sequence is `queued -> started -> (epoch | run |
+    /// log)* -> result | error` (a job that fails before its backend
+    /// resolves skips `started`).
+    pub fn submit(&self, spec: JobSpec) -> JobHandle {
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let (tx, rx) = channel::<Event>();
+        let cancel = CancelToken::default();
+        let _ = tx.send(Event::Queued { job: id });
+        let inner = Arc::clone(&self.inner);
+        let token = cancel.clone();
+        let spawn_tx = tx.clone();
+        let join = std::thread::Builder::new()
+            .name(format!("airbench-job-{id}"))
+            .spawn(move || {
+                let mut sink = ChannelSink {
+                    job: id,
+                    tx,
+                    cancel: token,
+                };
+                let token = sink.cancel.clone();
+                let out = match inner.acquire_slot(&token) {
+                    Err(e) => Err(e),
+                    Ok(_guard) => exec(&inner, id, spec, &mut sink),
+                };
+                match out {
+                    Ok(result) => {
+                        let doc = result.to_json();
+                        match validate_result(&doc) {
+                            Ok(()) => sink.send(Event::Result {
+                                job: id,
+                                result: Box::new(result),
+                            }),
+                            Err(e) => sink.send(Event::Error {
+                                job: id,
+                                message: format!("engine produced a schema-invalid result: {e:#}"),
+                            }),
+                        }
+                    }
+                    Err(e) => {
+                        let message = if is_cancelled(&e) {
+                            "cancelled".to_string()
+                        } else {
+                            format!("{e:#}")
+                        };
+                        sink.send(Event::Error { job: id, message });
+                    }
+                }
+            });
+        // A spawn failure (thread exhaustion) is a job failure, not a
+        // panic: the handle still delivers a well-formed terminal event.
+        let join = match join {
+            Ok(j) => Some(j),
+            Err(e) => {
+                let _ = spawn_tx.send(Event::Error {
+                    job: id,
+                    message: format!("could not spawn a job thread: {e}"),
+                });
+                None
+            }
+        };
+        drop(spawn_tx);
+        JobHandle {
+            id,
+            rx,
+            cancel,
+            join,
+        }
+    }
+}
+
+impl Inner {
+    /// Wait for a job slot, polling the cancel token so a queued job can
+    /// be cancelled before it ever starts.
+    fn acquire_slot(&self, cancel: &CancelToken) -> Result<SlotGuard<'_>> {
+        let mut active = self.active.lock().unwrap();
+        loop {
+            if cancel.is_cancelled() {
+                return Err(Cancelled.into());
+            }
+            if *active < self.budget.runs_parallel {
+                *active += 1;
+                return Ok(SlotGuard(self));
+            }
+            let (guard, _) = self
+                .gate
+                .wait_timeout(active, Duration::from_millis(50))
+                .unwrap();
+            active = guard;
+        }
+    }
+
+    /// `(train, test)` datasets, cached across jobs.
+    fn data(
+        &self,
+        kind: DataKind,
+        train_n: Option<usize>,
+        test_n: Option<usize>,
+    ) -> (Dataset, Dataset) {
+        let n = train_n.unwrap_or(self.cfg.scale.n_train);
+        let m = test_n.unwrap_or(self.cfg.scale.n_test);
+        let key = format!("{}-{n}-{m}", kind.name());
+        if let Some(pair) = self.data.lock().unwrap().get(&key) {
+            return pair.clone();
+        }
+        let pair = make_data(kind, n, m);
+        self.data
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert(pair)
+            .clone()
+    }
+
+    /// A backend factory for `(kind, variant)`, reusing the engine's
+    /// resolved native cores across jobs.
+    fn factory(&self, kind: BackendKind, variant: &str) -> Result<BackendFactory> {
+        let spec = EngineSpec::new(kind, variant).with_artifacts_dir(&self.cfg.artifacts_dir);
+        match kind {
+            // The full auto path (PJRT with native fallback) only when the
+            // probe saw a usable PJRT; otherwise auto is native below.
+            BackendKind::Pjrt => return spec.factory(),
+            BackendKind::Auto if self.pjrt_available => return spec.factory(),
+            _ => {}
+        }
+        if let Some(shared) = self.shared.lock().unwrap().get(variant).cloned() {
+            return Ok(BackendFactory::from_native_shared(spec, shared));
+        }
+        let f = EngineSpec::new(BackendKind::Native, variant)
+            .with_artifacts_dir(&self.cfg.artifacts_dir)
+            .factory()?;
+        if let Some(shared) = f.native_shared() {
+            self.shared
+                .lock()
+                .unwrap()
+                .insert(variant.to_string(), shared);
+        }
+        Ok(f)
+    }
+
+    /// Kernel threads each job's native workers get. One slot keeps the
+    /// process default (whole machine / `AIRBENCH_NATIVE_THREADS`);
+    /// multiple slots take the planned per-slot share.
+    fn kernel_share(&self) -> usize {
+        if self.budget.runs_parallel <= 1 {
+            0
+        } else {
+            self.budget.kernel_threads
+        }
+    }
+
+    /// Spawn a worker under the engine's slot budget.
+    fn spawn_worker(&self, factory: &BackendFactory) -> Result<Box<dyn Backend>> {
+        if factory.supports_parallel() {
+            Ok(factory.spawn_send(self.kernel_share())?)
+        } else {
+            factory.spawn()
+        }
+    }
+}
+
+fn exec(inner: &Inner, id: JobId, spec: JobSpec, sink: &mut ChannelSink) -> Result<JobResult> {
+    match spec {
+        JobSpec::Train(job) => exec_train(inner, id, job, sink),
+        JobSpec::Eval(job) => exec_eval(inner, id, job, sink),
+        JobSpec::Fleet(job) => exec_fleet(inner, id, job, sink),
+        JobSpec::Bench(job) => exec_bench(inner, id, job, sink),
+        JobSpec::FleetBench(job) => exec_fleet_bench(inner, id, job, sink),
+        JobSpec::Info(job) => exec_info(inner, id, job, sink),
+    }
+}
+
+fn started(sink: &mut ChannelSink, id: JobId, kind: &str, backend: &str, variant: &str) {
+    sink.send(Event::Started {
+        job: id,
+        kind: kind.to_string(),
+        backend: backend.to_string(),
+        variant: variant.to_string(),
+    });
+}
+
+fn exec_train(
+    inner: &Inner,
+    id: JobId,
+    job: TrainJob,
+    sink: &mut ChannelSink,
+) -> Result<JobResult> {
+    let cfg = job.config;
+    let (train_ds, test_ds) = inner.data(job.data, job.train_n, job.test_n);
+    let factory = inner.factory(cfg.backend, &cfg.variant)?;
+    started(sink, id, "train", factory.kind().name(), &cfg.variant);
+    let mut engine = inner.spawn_worker(&factory)?;
+    sink.on_log(&format!(
+        "[airbench] backend={} variant={} params={} compile={:.2}s train_n={} test_n={}",
+        engine.name(),
+        cfg.variant,
+        engine.variant().param_count,
+        engine.stats().compile_secs,
+        train_ds.len(),
+        test_ds.len()
+    ));
+    if job.warmup {
+        warmup(engine.as_mut(), &train_ds, &cfg)?;
+    }
+    let (result, state) = train_run(engine.as_mut(), &train_ds, &test_ds, &cfg, sink)?;
+    let mut checkpoint = None;
+    if let Some(path) = &job.save {
+        state.save(path)?;
+        sink.on_log(&format!("checkpoint written to {}", path.display()));
+        checkpoint = Some(path.clone());
+    }
+    Ok(JobResult::Train {
+        result,
+        config: cfg,
+        backend: factory.kind().name().to_string(),
+        checkpoint,
+    })
+}
+
+fn exec_eval(inner: &Inner, id: JobId, job: EvalJob, sink: &mut ChannelSink) -> Result<JobResult> {
+    let cfg = job.config;
+    let state = ModelState::load(&job.load)
+        .with_context(|| format!("loading checkpoint {}", job.load.display()))?;
+    let (_, test_ds) = inner.data(job.data, None, job.test_n);
+    let factory = inner.factory(cfg.backend, &cfg.variant)?;
+    started(sink, id, "eval", factory.kind().name(), &cfg.variant);
+    let mut engine = inner.spawn_worker(&factory)?;
+    state.validate(engine.variant())?;
+    let out = evaluate_observed(engine.as_mut(), &state, &test_ds, cfg.tta, sink)?;
+    Ok(JobResult::Eval {
+        accuracy: out.accuracy,
+        accuracy_no_tta: out.accuracy_identity,
+        n_test: test_ds.len(),
+        checkpoint: job.load,
+        backend: factory.kind().name().to_string(),
+    })
+}
+
+fn exec_fleet(
+    inner: &Inner,
+    id: JobId,
+    job: FleetJob,
+    sink: &mut ChannelSink,
+) -> Result<JobResult> {
+    let cfg = job.config;
+    let runs = job.runs.unwrap_or(inner.cfg.scale.runs);
+    let parallel = job.parallel.unwrap_or(cfg.fleet_parallel);
+    let (train_ds, test_ds) = inner.data(job.data, job.train_n, job.test_n);
+    let factory = inner.factory(cfg.backend, &cfg.variant)?;
+    started(sink, id, "fleet", factory.kind().name(), &cfg.variant);
+    // The one resolver the scheduler itself uses — what we report is what
+    // runs (env override, auto, PJRT sequential collapse included).
+    let budget = fleet_budget(&factory, parallel, runs);
+    sink.on_log(&format!(
+        "[fleet] backend={} parallel={} kernel_threads={} cores={}",
+        factory.kind().name(),
+        budget.runs_parallel,
+        budget.kernel_threads,
+        budget.cores,
+    ));
+    let concurrent = budget.runs_parallel > 1 && runs > 1;
+    let fleet = if concurrent {
+        if job.warmup {
+            // Pay one-time costs (pool spawn, allocators) on a throwaway
+            // worker — native workers are an Arc clone, so this is free.
+            let mut w = factory.spawn()?;
+            warmup(w.as_mut(), &train_ds, &cfg)?;
+        }
+        run_fleet_parallel(
+            &factory,
+            &train_ds,
+            &test_ds,
+            &cfg,
+            runs,
+            parallel,
+            Some(&mut *sink as &mut dyn Observer),
+        )?
+    } else {
+        // Sequential: keep the (possibly compiled-once PJRT) worker alive
+        // across warmup and every run, on its budgeted kernel share.
+        let mut engine: Box<dyn Backend> = if factory.supports_parallel() {
+            factory.spawn_send(budget.kernel_threads)?
+        } else {
+            factory.spawn()?
+        };
+        if job.warmup {
+            warmup(engine.as_mut(), &train_ds, &cfg)?;
+        }
+        run_fleet(
+            engine.as_mut(),
+            &train_ds,
+            &test_ds,
+            &cfg,
+            runs,
+            Some(&mut *sink as &mut dyn Observer),
+        )?
+    };
+    let mut log_path = None;
+    if let Some(path) = &job.log {
+        std::fs::write(path, fleet.to_json(&cfg).to_string())
+            .with_context(|| format!("writing fleet log {}", path.display()))?;
+        sink.on_log(&format!("fleet log written to {}", path.display()));
+        log_path = Some(path.clone());
+    }
+    Ok(JobResult::Fleet {
+        result: fleet,
+        config: cfg,
+        backend: factory.kind().name().to_string(),
+        log: log_path,
+    })
+}
+
+fn exec_bench(
+    _inner: &Inner,
+    id: JobId,
+    job: BenchJob,
+    sink: &mut ChannelSink,
+) -> Result<JobResult> {
+    let c = &job.config;
+    started(sink, id, "bench", c.backend.name(), &c.variant);
+    sink.on_log(&format!(
+        "[bench] backend={} variant={} runs={} steps={} warmup={} (§3.7 protocol)",
+        c.backend.name(),
+        c.variant,
+        c.runs,
+        c.steps,
+        c.warmup_runs
+    ));
+    let report = crate::bench::run_observed(c, sink)?;
+    let path = if job.write {
+        Some(report.write(&c.out_dir)?)
+    } else {
+        None
+    };
+    Ok(JobResult::Bench { report, path })
+}
+
+fn exec_fleet_bench(
+    _inner: &Inner,
+    id: JobId,
+    job: FleetBenchJob,
+    sink: &mut ChannelSink,
+) -> Result<JobResult> {
+    let c = &job.config;
+    started(sink, id, "fleet_bench", c.backend.name(), &c.variant);
+    sink.on_log(&format!(
+        "[bench] fleet phase: backend={} variant={} n_runs={} levels={:?}",
+        c.backend.name(),
+        c.variant,
+        c.n_runs,
+        c.parallel_levels
+    ));
+    let report = crate::bench::run_fleet_bench_observed(c, sink)?;
+    let path = if job.write {
+        Some(report.write(&c.out_dir)?)
+    } else {
+        None
+    };
+    Ok(JobResult::FleetBench { report, path })
+}
+
+// ---- info --------------------------------------------------------------
+
+fn variant_row(name: &str, source: &str, v: &crate::runtime::Variant) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("source", Json::str(source)),
+        ("params", Json::num(v.param_count as f64)),
+        ("batch_train", Json::num(v.batch_train as f64)),
+        ("batch_eval", Json::num(v.batch_eval as f64)),
+        (
+            "fwd_mflops_per_example",
+            Json::num(v.fwd_flops_per_example as f64 / 1e6),
+        ),
+    ])
+}
+
+fn variant_detail(name: &str, source: &str, v: &crate::runtime::Variant) -> Json {
+    let mut j = variant_row(name, source, v);
+    if let Json::Obj(m) = &mut j {
+        m.insert(
+            "widths".to_string(),
+            Json::Arr(v.hyper.widths.iter().map(|&w| Json::num(w as f64)).collect()),
+        );
+        m.insert(
+            "convs_per_block".to_string(),
+            Json::num(v.hyper.convs_per_block as f64),
+        );
+        m.insert("residual".to_string(), Json::Bool(v.hyper.residual));
+        m.insert(
+            "tensors".to_string(),
+            Json::Arr(
+                v.tensors
+                    .iter()
+                    .map(|t| {
+                        Json::obj(vec![
+                            ("name", Json::str(&t.name)),
+                            (
+                                "shape",
+                                Json::Arr(
+                                    t.shape.iter().map(|&d| Json::num(d as f64)).collect(),
+                                ),
+                            ),
+                            ("role", Json::str(&format!("{:?}", t.role))),
+                            ("group", Json::str(&t.group)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+    }
+    j
+}
+
+fn exec_info(inner: &Inner, id: JobId, job: InfoJob, sink: &mut ChannelSink) -> Result<JobResult> {
+    started(sink, id, "info", "-", job.variant.as_deref().unwrap_or("*"));
+    let dir = &inner.cfg.artifacts_dir;
+    let manifest = Manifest::load(dir).ok();
+    let mut variants: Vec<Json> = Vec::new();
+    let mut extras: Vec<(&'static str, Json)> = Vec::new();
+    match &job.variant {
+        None => {
+            if let Some(m) = &manifest {
+                for (name, v) in &m.variants {
+                    variants.push(variant_row(name, "manifest", v));
+                }
+            }
+            for name in crate::runtime::native::builtin_names() {
+                let v = crate::runtime::native::builtin_variant(name)
+                    .expect("builtin name must resolve");
+                variants.push(variant_row(name, "native", &v));
+            }
+        }
+        Some(name) => {
+            let (source, v) = match &manifest {
+                Some(m) if m.variants.contains_key(name) => ("manifest", m.variant(name)?.clone()),
+                _ => (
+                    "native",
+                    crate::runtime::native::builtin_variant(name).ok_or_else(|| {
+                        anyhow!("variant '{name}' is neither in a manifest nor built-in")
+                    })?,
+                ),
+            };
+            variants.push(variant_detail(name, source, &v));
+            if job.hlo {
+                let Some(m) = &manifest else {
+                    anyhow::bail!("--hlo needs built AOT artifacts (run `make artifacts`)");
+                };
+                let mv = m.variant(name)?;
+                let mut hlo: Vec<(&'static str, Json)> = Vec::new();
+                for (tag, file) in [("train", &mv.train.file), ("eval", &mv.eval.file)] {
+                    let census = crate::util::hlo_census::census_file(&m.dir.join(file))?;
+                    hlo.push((
+                        tag,
+                        Json::obj(vec![
+                            ("instructions", Json::num(census.instructions as f64)),
+                            ("computations", Json::num(census.computations as f64)),
+                            (
+                                "top_ops",
+                                Json::Arr(
+                                    census
+                                        .top(12)
+                                        .into_iter()
+                                        .map(|(op, n)| {
+                                            Json::obj(vec![
+                                                ("op", Json::str(&op)),
+                                                ("count", Json::num(n as f64)),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ]),
+                    ));
+                }
+                extras.push(("hlo", Json::obj(hlo)));
+            }
+        }
+    }
+    let mut pairs = vec![
+        (
+            "artifacts_dir",
+            Json::str(&dir.display().to_string()),
+        ),
+        ("manifest", Json::Bool(manifest.is_some())),
+        ("variants", Json::Arr(variants)),
+    ];
+    pairs.append(&mut extras);
+    Ok(JobResult::Info {
+        data: Json::obj(pairs),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::job::TrainJob;
+    use crate::config::TrainConfig;
+
+    fn nano_train(seed: u64) -> JobSpec {
+        let mut cfg = TrainConfig::default();
+        for (k, v) in [
+            ("variant", "nano"),
+            ("backend", "native"),
+            ("epochs", "1"),
+            ("tta", "none"),
+            ("whiten_samples", "32"),
+        ] {
+            cfg.set(k, v).unwrap();
+        }
+        cfg.seed = seed;
+        JobSpec::Train(TrainJob {
+            config: cfg,
+            train_n: Some(64),
+            test_n: Some(32),
+            warmup: false,
+            ..TrainJob::default()
+        })
+    }
+
+    fn test_engine(slots: usize) -> Engine {
+        Engine::new(EngineConfig {
+            job_slots: slots,
+            ..EngineConfig::default()
+        })
+    }
+
+    #[test]
+    fn train_job_streams_a_wellformed_sequence() {
+        let engine = test_engine(1);
+        let handle = engine.submit(nano_train(3));
+        let events: Vec<Event> = handle.events().collect();
+        assert!(matches!(events.first(), Some(Event::Queued { .. })));
+        assert!(matches!(events.get(1), Some(Event::Started { .. })));
+        let terminal = events.last().expect("terminal event");
+        match terminal {
+            Event::Result { result, .. } => {
+                validate_result(&result.to_json()).expect("schema-valid result");
+                assert_eq!(result.kind_name(), "train");
+            }
+            other => panic!("expected result, got {other:?}"),
+        }
+        // Exactly one terminal, and it is last.
+        assert_eq!(events.iter().filter(|e| e.is_terminal()).count(), 1);
+        // eval_every_epoch is off, so epochs stream without val_acc.
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, Event::Epoch { val_acc: None, .. })));
+    }
+
+    #[test]
+    fn bad_jobs_fail_as_error_events() {
+        let engine = test_engine(1);
+        let mut cfg = TrainConfig::default();
+        cfg.variant = "no-such-variant".into();
+        cfg.backend = BackendKind::Native;
+        let handle = engine.submit(JobSpec::Train(TrainJob {
+            config: cfg,
+            ..TrainJob::default()
+        }));
+        let err = handle.wait().unwrap_err();
+        assert!(format!("{err:#}").contains("no-such-variant"), "{err:#}");
+    }
+
+    #[test]
+    fn cancelled_jobs_terminate_with_cancelled_error() {
+        let engine = test_engine(1);
+        let mut spec = nano_train(0);
+        if let JobSpec::Train(t) = &mut spec {
+            t.config.epochs = 10_000.0; // far longer than the test budget
+        }
+        let handle = engine.submit(spec);
+        handle.cancel();
+        let err = handle.wait().unwrap_err();
+        assert_eq!(format!("{err}"), "cancelled");
+    }
+
+    #[test]
+    fn info_job_lists_native_variants() {
+        let engine = test_engine(1);
+        let result = engine
+            .submit(JobSpec::Info(InfoJob::default()))
+            .wait()
+            .expect("info result");
+        let j = result.to_json();
+        validate_result(&j).unwrap();
+        let variants = j.get("data").unwrap().get("variants").unwrap().as_arr().unwrap();
+        assert!(variants
+            .iter()
+            .any(|v| v.get("name").unwrap().as_str().unwrap() == "nano"));
+    }
+}

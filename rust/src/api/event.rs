@@ -1,0 +1,495 @@
+//! Typed job events and results — the response half of the public API.
+//!
+//! Every submitted job streams a well-formed event sequence:
+//!
+//! ```text
+//! queued  ->  started  ->  (epoch | run | log)*  ->  result | error
+//! ```
+//!
+//! exactly one terminal event, always last. [`Event::to_json`] emits one
+//! NDJSON-able object per event (`{"type": ..., "job": N, ...}`), which is
+//! the serve wire protocol (DESIGN.md §9). [`JobResult`] is the uniform
+//! result envelope: `{"kind": "<job kind>", "data": {...}}` for every job
+//! kind, schema-checked by [`validate_result`] before the engine emits it
+//! — a rendering bug cannot silently ship a malformed document.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::bench::{FleetReport, Report};
+use crate::config::TrainConfig;
+use crate::coordinator::{FleetResult, TrainResult};
+use crate::util::json::Json;
+
+/// Engine-assigned job identifier (1-based; 0 is reserved for
+/// session-level serve errors that predate a job id).
+pub type JobId = u64;
+
+/// One moment in a job's lifecycle, streamed over the
+/// [`crate::api::JobHandle`] channel.
+#[derive(Debug)]
+pub enum Event {
+    /// The job was accepted and is waiting for a slot.
+    Queued {
+        /// Job this event belongs to.
+        job: JobId,
+    },
+    /// The job acquired a slot and resolved its backend.
+    Started {
+        /// Job this event belongs to.
+        job: JobId,
+        /// Job kind (`"train"`, `"fleet"`, ...).
+        kind: String,
+        /// Resolved backend name (`"native"` / `"pjrt"`; `"-"` for jobs
+        /// that execute no backend, like `info`).
+        backend: String,
+        /// Variant executed (`"-"` when not applicable).
+        variant: String,
+    },
+    /// One training epoch finished (train jobs; fleets report runs).
+    Epoch {
+        /// Job this event belongs to.
+        job: JobId,
+        /// Zero-based epoch index.
+        epoch: usize,
+        /// Per-example loss of the epoch's last batch.
+        train_loss: f64,
+        /// Accuracy of the epoch's last batch.
+        train_acc: f64,
+        /// End-of-epoch validation accuracy, when evaluated.
+        val_acc: Option<f64>,
+    },
+    /// One fleet run finished (completion order, not seed order).
+    Run {
+        /// Job this event belongs to.
+        job: JobId,
+        /// Run index in seed order.
+        run: usize,
+        /// Final accuracy of the run.
+        accuracy: f64,
+    },
+    /// A human-facing progress line.
+    Log {
+        /// Job this event belongs to.
+        job: JobId,
+        /// The line (no trailing newline).
+        line: String,
+    },
+    /// Terminal: the job finished and produced a schema-valid result.
+    Result {
+        /// Job this event belongs to.
+        job: JobId,
+        /// The typed result payload (boxed: results dwarf every other
+        /// event variant).
+        result: Box<JobResult>,
+    },
+    /// Terminal: the job failed (message `"cancelled"` for cooperative
+    /// cancellation via [`crate::api::JobHandle::cancel`]).
+    Error {
+        /// Job this event belongs to.
+        job: JobId,
+        /// Human-readable failure chain.
+        message: String,
+    },
+}
+
+impl Event {
+    /// The job this event belongs to.
+    pub fn job(&self) -> JobId {
+        match self {
+            Event::Queued { job }
+            | Event::Started { job, .. }
+            | Event::Epoch { job, .. }
+            | Event::Run { job, .. }
+            | Event::Log { job, .. }
+            | Event::Result { job, .. }
+            | Event::Error { job, .. } => *job,
+        }
+    }
+
+    /// The wire `"type"` tag.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Event::Queued { .. } => "queued",
+            Event::Started { .. } => "started",
+            Event::Epoch { .. } => "epoch",
+            Event::Run { .. } => "run",
+            Event::Log { .. } => "log",
+            Event::Result { .. } => "result",
+            Event::Error { .. } => "error",
+        }
+    }
+
+    /// Whether this event ends the job's stream.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, Event::Result { .. } | Event::Error { .. })
+    }
+
+    /// One NDJSON-able object (`{"type": ..., "job": N, ...}`).
+    pub fn to_json(&self) -> Json {
+        let mut p: Vec<(&'static str, Json)> = vec![
+            ("type", Json::str(self.type_name())),
+            ("job", Json::num(self.job() as f64)),
+        ];
+        match self {
+            Event::Queued { .. } => {}
+            Event::Started {
+                kind,
+                backend,
+                variant,
+                ..
+            } => {
+                p.push(("kind", Json::str(kind)));
+                p.push(("backend", Json::str(backend)));
+                p.push(("variant", Json::str(variant)));
+            }
+            Event::Epoch {
+                epoch,
+                train_loss,
+                train_acc,
+                val_acc,
+                ..
+            } => {
+                p.push(("epoch", Json::num(*epoch as f64)));
+                p.push(("train_loss", Json::num(*train_loss)));
+                p.push(("train_acc", Json::num(*train_acc)));
+                p.push(("val_acc", val_acc.map(Json::num).unwrap_or(Json::Null)));
+            }
+            Event::Run { run, accuracy, .. } => {
+                p.push(("run", Json::num(*run as f64)));
+                p.push(("accuracy", Json::num(*accuracy)));
+            }
+            Event::Log { line, .. } => {
+                p.push(("line", Json::str(line)));
+            }
+            Event::Result { result, .. } => {
+                p.push(("result", result.to_json()));
+            }
+            Event::Error { message, .. } => {
+                p.push(("message", Json::str(message)));
+            }
+        }
+        Json::obj(p)
+    }
+}
+
+/// The uniform typed result of a finished job. Every variant serializes
+/// to `{"kind": "<job kind>", "data": {...}}` ([`JobResult::to_json`])
+/// and passes [`validate_result`].
+#[derive(Debug)]
+pub enum JobResult {
+    /// A finished training run.
+    Train {
+        /// The trainer's full result (timing protocol, epoch log, eval).
+        result: TrainResult,
+        /// The exact config that ran.
+        config: TrainConfig,
+        /// Resolved backend name.
+        backend: String,
+        /// Where the final state was checkpointed, if requested.
+        checkpoint: Option<PathBuf>,
+    },
+    /// A finished checkpoint evaluation.
+    Eval {
+        /// Accuracy at the configured TTA level.
+        accuracy: f64,
+        /// Identity-view ("no TTA") accuracy.
+        accuracy_no_tta: f64,
+        /// Test examples evaluated.
+        n_test: usize,
+        /// The checkpoint that was loaded.
+        checkpoint: PathBuf,
+        /// Resolved backend name.
+        backend: String,
+    },
+    /// A finished fleet.
+    Fleet {
+        /// Per-run results + aggregates.
+        result: FleetResult,
+        /// The per-run config (seeds fork from `config.seed`).
+        config: TrainConfig,
+        /// Resolved backend name.
+        backend: String,
+        /// Where the structured fleet log was written, if requested.
+        log: Option<PathBuf>,
+    },
+    /// A finished §3.7 bench invocation.
+    Bench {
+        /// The measured report (its JSON is the `airbench.bench/1` schema).
+        report: Report,
+        /// Where `BENCH_<tag>.json` was written, if requested.
+        path: Option<PathBuf>,
+    },
+    /// A finished fleet-throughput bench phase.
+    FleetBench {
+        /// The measured report (`airbench.fleet-bench/1` schema).
+        report: FleetReport,
+        /// Where `BENCH_<tag>.json` was written, if requested.
+        path: Option<PathBuf>,
+    },
+    /// Variant / manifest inspection output.
+    Info {
+        /// The structured inspection document (see DESIGN.md §9).
+        data: Json,
+    },
+}
+
+fn opt_path_json(p: &Option<PathBuf>) -> Json {
+    p.as_ref()
+        .map(|p| Json::str(&p.display().to_string()))
+        .unwrap_or(Json::Null)
+}
+
+impl JobResult {
+    /// The `"kind"` discriminator (matches the submitting
+    /// [`crate::api::JobSpec::kind_name`]).
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            JobResult::Train { .. } => "train",
+            JobResult::Eval { .. } => "eval",
+            JobResult::Fleet { .. } => "fleet",
+            JobResult::Bench { .. } => "bench",
+            JobResult::FleetBench { .. } => "fleet_bench",
+            JobResult::Info { .. } => "info",
+        }
+    }
+
+    /// The uniform result envelope `{"kind": ..., "data": {...}}`.
+    pub fn to_json(&self) -> Json {
+        let data = match self {
+            JobResult::Train {
+                result,
+                config,
+                backend,
+                checkpoint,
+            } => {
+                let log: Vec<Json> = result
+                    .epoch_log
+                    .iter()
+                    .map(|l| {
+                        Json::obj(vec![
+                            ("epoch", Json::num(l.epoch as f64)),
+                            ("train_loss", Json::num(l.train_loss)),
+                            ("train_acc", Json::num(l.train_acc)),
+                            ("val_acc", l.val_acc.map(Json::num).unwrap_or(Json::Null)),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("backend", Json::str(backend)),
+                    ("config", config.to_json()),
+                    ("accuracy", Json::num(result.accuracy)),
+                    ("accuracy_no_tta", Json::num(result.accuracy_no_tta)),
+                    ("epochs_run", Json::num(result.epochs_run)),
+                    ("steps_run", Json::num(result.steps_run as f64)),
+                    ("time_seconds", Json::num(result.time_seconds)),
+                    (
+                        "phases",
+                        Json::obj(vec![
+                            ("setup_seconds", Json::num(result.phases.setup_seconds)),
+                            ("train_seconds", Json::num(result.phases.train_seconds)),
+                            ("eval_seconds", Json::num(result.phases.eval_seconds)),
+                        ]),
+                    ),
+                    (
+                        "epochs_to_target",
+                        result.epochs_to_target.map(Json::num).unwrap_or(Json::Null),
+                    ),
+                    ("flops", Json::num(result.flops as f64)),
+                    ("epoch_log", Json::Arr(log)),
+                    ("checkpoint", opt_path_json(checkpoint)),
+                ])
+            }
+            JobResult::Eval {
+                accuracy,
+                accuracy_no_tta,
+                n_test,
+                checkpoint,
+                backend,
+            } => Json::obj(vec![
+                ("backend", Json::str(backend)),
+                ("checkpoint", Json::str(&checkpoint.display().to_string())),
+                ("accuracy", Json::num(*accuracy)),
+                ("accuracy_no_tta", Json::num(*accuracy_no_tta)),
+                ("n_test", Json::num(*n_test as f64)),
+            ]),
+            JobResult::Fleet {
+                result,
+                config,
+                backend,
+                log,
+            } => {
+                // The established fleet-log document, plus envelope extras.
+                let mut j = result.to_json(config);
+                if let Json::Obj(m) = &mut j {
+                    m.insert("backend".to_string(), Json::str(backend));
+                    m.insert("log".to_string(), opt_path_json(log));
+                }
+                j
+            }
+            JobResult::Bench { report, path } => {
+                let mut j = report.to_json();
+                if let Json::Obj(m) = &mut j {
+                    m.insert("path".to_string(), opt_path_json(path));
+                }
+                j
+            }
+            JobResult::FleetBench { report, path } => {
+                let mut j = report.to_json();
+                if let Json::Obj(m) = &mut j {
+                    m.insert("path".to_string(), opt_path_json(path));
+                }
+                j
+            }
+            JobResult::Info { data } => data.clone(),
+        };
+        Json::obj(vec![("kind", Json::str(self.kind_name())), ("data", data)])
+    }
+}
+
+/// Validate a serialized [`JobResult`] envelope: the `kind` tag, required
+/// per-kind keys, finiteness of the headline numbers, and — for bench
+/// kinds — the full committed-baseline schemas
+/// ([`crate::bench::validate`] / [`crate::bench::validate_fleet`]). The
+/// engine runs this on every result before emitting it; the serve tests
+/// run it on everything that crosses the wire.
+pub fn validate_result(j: &Json) -> Result<()> {
+    let kind = j.get("kind")?.as_str()?;
+    let data = j.get("data")?;
+    let finite_unit = |key: &str| -> Result<()> {
+        let x = data.get(key)?.as_f64()?;
+        if !x.is_finite() || !(0.0..=1.0).contains(&x) {
+            bail!("'{key}' = {x} is not a finite accuracy in [0, 1]");
+        }
+        Ok(())
+    };
+    match kind {
+        "train" => {
+            finite_unit("accuracy")?;
+            finite_unit("accuracy_no_tta")?;
+            for key in ["epochs_run", "time_seconds", "steps_run", "flops"] {
+                let x = data.get(key)?.as_f64()?;
+                if !x.is_finite() || x < 0.0 {
+                    bail!("'{key}' = {x} must be finite and non-negative");
+                }
+            }
+            data.get("config")?.get("variant")?.as_str()?;
+            data.get("backend")?.as_str()?;
+            let phases = data.get("phases")?;
+            for key in ["setup_seconds", "train_seconds", "eval_seconds"] {
+                phases.get(key)?.as_f64()?;
+            }
+            let log = data.get("epoch_log")?.as_arr()?;
+            for l in log {
+                l.get("epoch")?.as_f64()?;
+                l.get("train_loss")?.as_f64()?;
+            }
+        }
+        "eval" => {
+            finite_unit("accuracy")?;
+            finite_unit("accuracy_no_tta")?;
+            if data.get("n_test")?.as_usize()? == 0 {
+                bail!("'n_test' must be >= 1");
+            }
+            data.get("checkpoint")?.as_str()?;
+            data.get("backend")?.as_str()?;
+        }
+        "fleet" => {
+            let n = data.get("n")?.as_usize()?;
+            if n == 0 {
+                bail!("fleet 'n' must be >= 1");
+            }
+            for key in ["mean", "std", "ci95"] {
+                let x = data.get(key)?.as_f64()?;
+                if !x.is_finite() {
+                    bail!("fleet '{key}' is not finite");
+                }
+            }
+            if data.get("accs")?.as_arr()?.len() != n {
+                bail!("fleet 'accs' length must equal 'n'");
+            }
+            data.get("config")?.get("variant")?.as_str()?;
+            data.get("backend")?.as_str()?;
+        }
+        "bench" => crate::bench::validate(data).context("bench result payload")?,
+        "fleet_bench" => {
+            crate::bench::validate_fleet(data).context("fleet-bench result payload")?
+        }
+        "info" => {
+            let variants = data.get("variants")?.as_arr()?;
+            if variants.is_empty() {
+                bail!("info 'variants' must be non-empty");
+            }
+            for v in variants {
+                v.get("name")?.as_str()?;
+            }
+        }
+        other => bail!("unknown result kind '{other}'"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn event_json_shapes() {
+        let e = Event::Queued { job: 3 };
+        assert_eq!(e.to_json().get("type").unwrap().as_str().unwrap(), "queued");
+        assert_eq!(e.to_json().get("job").unwrap().as_usize().unwrap(), 3);
+        assert!(!e.is_terminal());
+
+        let e = Event::Epoch {
+            job: 1,
+            epoch: 2,
+            train_loss: 1.5,
+            train_acc: 0.5,
+            val_acc: None,
+        };
+        let j = e.to_json();
+        assert_eq!(j.get("epoch").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("val_acc").unwrap(), &Json::Null);
+
+        let e = Event::Error {
+            job: 9,
+            message: "cancelled".into(),
+        };
+        assert!(e.is_terminal());
+        assert_eq!(e.job(), 9);
+        assert_eq!(
+            e.to_json().get("message").unwrap().as_str().unwrap(),
+            "cancelled"
+        );
+    }
+
+    #[test]
+    fn validate_rejects_malformed_results() {
+        assert!(validate_result(&parse("{}").unwrap()).is_err());
+        assert!(validate_result(&parse(r#"{"kind": "dance", "data": {}}"#).unwrap()).is_err());
+        assert!(validate_result(&parse(r#"{"kind": "train", "data": {}}"#).unwrap()).is_err());
+        // Accuracy outside [0, 1] must be rejected.
+        let bad = parse(
+            r#"{"kind": "eval", "data": {"backend": "native", "checkpoint": "c",
+                "accuracy": 1.5, "accuracy_no_tta": 0.5, "n_test": 10}}"#,
+        )
+        .unwrap();
+        assert!(validate_result(&bad).is_err());
+        let good = parse(
+            r#"{"kind": "eval", "data": {"backend": "native", "checkpoint": "c",
+                "accuracy": 0.9, "accuracy_no_tta": 0.8, "n_test": 10}}"#,
+        )
+        .unwrap();
+        validate_result(&good).unwrap();
+    }
+
+    #[test]
+    fn info_validation_requires_named_variants() {
+        let good = parse(r#"{"kind": "info", "data": {"variants": [{"name": "nano"}]}}"#).unwrap();
+        validate_result(&good).unwrap();
+        let empty = parse(r#"{"kind": "info", "data": {"variants": []}}"#).unwrap();
+        assert!(validate_result(&empty).is_err());
+    }
+}

@@ -1,0 +1,549 @@
+//! Typed job specifications — the request half of the public API.
+//!
+//! A [`JobSpec`] is everything needed to execute one unit of work against
+//! the engine: which workload ([`TrainJob`], [`EvalJob`], [`FleetJob`],
+//! [`BenchJob`], [`FleetBenchJob`], [`InfoJob`]), on which data, with
+//! which [`TrainConfig`]. Specs are plain data with a total JSON
+//! round trip ([`JobSpec::to_json`] / [`JobSpec::from_json`]) — the same
+//! document the CLI builds from flags is what `airbench serve` accepts as
+//! one NDJSON line (DESIGN.md §9).
+//!
+//! The JSON shape is `{"job": "<kind>", ...kind-specific keys}`. Optional
+//! keys may be absent or `null`; configs nest under `"config"` and go
+//! through [`TrainConfig::from_json`], so every `key=value` the CLI
+//! accepts works identically over the wire.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::bench::{BenchConfig, FleetBenchConfig};
+use crate::config::TrainConfig;
+use crate::experiments::DataKind;
+use crate::runtime::BackendKind;
+use crate::util::json::Json;
+
+/// One training run (the CLI's `train` command).
+#[derive(Clone, Debug)]
+pub struct TrainJob {
+    /// Fully resolved training configuration.
+    pub config: TrainConfig,
+    /// Dataset distribution to train on.
+    pub data: DataKind,
+    /// Training-set size override (engine scale default when `None`).
+    pub train_n: Option<usize>,
+    /// Test-set size override (engine scale default when `None`).
+    pub test_n: Option<usize>,
+    /// Pay one-time lazy costs on a dummy run before the timed training
+    /// (the paper's GPU-warmup analogue; CLI `--no-warmup` disables).
+    pub warmup: bool,
+    /// Write the final [`crate::runtime::ModelState`] here.
+    pub save: Option<PathBuf>,
+}
+
+impl Default for TrainJob {
+    fn default() -> Self {
+        TrainJob {
+            config: TrainConfig::default(),
+            data: DataKind::Cifar10,
+            train_n: None,
+            test_n: None,
+            warmup: true,
+            save: None,
+        }
+    }
+}
+
+/// Evaluate a saved checkpoint (the CLI's `eval` command).
+#[derive(Clone, Debug)]
+pub struct EvalJob {
+    /// Config supplying variant / backend / TTA level.
+    pub config: TrainConfig,
+    /// Dataset distribution whose test split is evaluated.
+    pub data: DataKind,
+    /// Checkpoint path to load.
+    pub load: PathBuf,
+    /// Test-set size override.
+    pub test_n: Option<usize>,
+}
+
+/// An n-run statistical experiment (the CLI's `fleet` command).
+#[derive(Clone, Debug)]
+pub struct FleetJob {
+    /// Per-run training configuration (seeds are forked from
+    /// `config.seed`).
+    pub config: TrainConfig,
+    /// Dataset distribution.
+    pub data: DataKind,
+    /// Runs in the fleet (engine scale default when `None`).
+    pub runs: Option<usize>,
+    /// Concurrent runs (`None` defers to `config.fleet_parallel`; 0 =
+    /// auto under the thread-budget planner, DESIGN.md §8).
+    pub parallel: Option<usize>,
+    /// Training-set size override.
+    pub train_n: Option<usize>,
+    /// Test-set size override.
+    pub test_n: Option<usize>,
+    /// Untimed warmup before the fleet.
+    pub warmup: bool,
+    /// Write the structured fleet log (`FleetResult::to_json`) here.
+    pub log: Option<PathBuf>,
+}
+
+impl Default for FleetJob {
+    fn default() -> Self {
+        FleetJob {
+            config: TrainConfig::default(),
+            data: DataKind::Cifar10,
+            runs: None,
+            parallel: None,
+            train_n: None,
+            test_n: None,
+            warmup: true,
+            log: None,
+        }
+    }
+}
+
+/// The §3.7 benchmark harness (the CLI's `bench` command).
+#[derive(Clone, Debug)]
+pub struct BenchJob {
+    /// Harness protocol knobs.
+    pub config: BenchConfig,
+    /// Whether to write `BENCH_<tag>.json` into `config.out_dir`.
+    pub write: bool,
+}
+
+/// The fleet-throughput phase (the CLI's `bench --fleet`).
+#[derive(Clone, Debug)]
+pub struct FleetBenchJob {
+    /// Phase protocol knobs.
+    pub config: FleetBenchConfig,
+    /// Whether to write `BENCH_<tag>.json` into `config.out_dir`.
+    pub write: bool,
+}
+
+/// Variant / manifest inspection (the CLI's `info` command).
+#[derive(Clone, Debug, Default)]
+pub struct InfoJob {
+    /// Detail one variant; `None` lists all known variants.
+    pub variant: Option<String>,
+    /// Include an HLO instruction census (needs built AOT artifacts).
+    pub hlo: bool,
+}
+
+/// A typed job specification — the one request shape every workload
+/// (train / eval / fleet / bench / fleet-bench / info) submits through
+/// [`crate::api::Engine::submit`], with a total JSON round trip for the
+/// serve protocol.
+#[derive(Clone, Debug)]
+pub enum JobSpec {
+    /// One training run.
+    Train(TrainJob),
+    /// Checkpoint evaluation.
+    Eval(EvalJob),
+    /// n-run statistical experiment.
+    Fleet(FleetJob),
+    /// §3.7 benchmark harness.
+    Bench(BenchJob),
+    /// Fleet-throughput bench phase.
+    FleetBench(FleetBenchJob),
+    /// Variant / manifest inspection.
+    Info(InfoJob),
+}
+
+// ---- optional-key helpers (absent and null are both "use the default") --
+
+fn opt_key<'a>(j: &'a Json, key: &str) -> Option<&'a Json> {
+    match j.opt(key) {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(v),
+    }
+}
+
+fn opt_usize(j: &Json, key: &str) -> Result<Option<usize>> {
+    opt_key(j, key)
+        .map(|v| v.as_usize())
+        .transpose()
+        .with_context(|| format!("job key '{key}'"))
+}
+
+fn opt_f64(j: &Json, key: &str) -> Result<Option<f64>> {
+    opt_key(j, key)
+        .map(|v| v.as_f64())
+        .transpose()
+        .with_context(|| format!("job key '{key}'"))
+}
+
+fn opt_str(j: &Json, key: &str) -> Result<Option<String>> {
+    opt_key(j, key)
+        .map(|v| v.as_str().map(str::to_string))
+        .transpose()
+        .with_context(|| format!("job key '{key}'"))
+}
+
+fn opt_bool(j: &Json, key: &str) -> Result<Option<bool>> {
+    opt_key(j, key)
+        .map(|v| v.as_bool())
+        .transpose()
+        .with_context(|| format!("job key '{key}'"))
+}
+
+fn opt_path(j: &Json, key: &str) -> Result<Option<PathBuf>> {
+    Ok(opt_str(j, key)?.map(PathBuf::from))
+}
+
+fn parse_config(j: &Json) -> Result<TrainConfig> {
+    match opt_key(j, "config") {
+        None => Ok(TrainConfig::default()),
+        Some(c) => TrainConfig::from_json(c).context("job key 'config'"),
+    }
+}
+
+fn parse_data(j: &Json) -> Result<DataKind> {
+    match opt_str(j, "data")? {
+        None => Ok(DataKind::Cifar10),
+        Some(s) => DataKind::parse(&s).ok_or_else(|| {
+            anyhow::anyhow!("unknown data '{s}' (cifar10|cifar100|imagenet|svhn|cinic)")
+        }),
+    }
+}
+
+fn parse_backend(j: &Json, default: BackendKind) -> Result<BackendKind> {
+    match opt_str(j, "backend")? {
+        None => Ok(default),
+        Some(s) => BackendKind::parse(&s)
+            .ok_or_else(|| anyhow::anyhow!("unknown backend '{s}' (auto|pjrt|native)")),
+    }
+}
+
+fn push_opt_num(pairs: &mut Vec<(&'static str, Json)>, key: &'static str, v: Option<usize>) {
+    if let Some(x) = v {
+        pairs.push((key, Json::num(x as f64)));
+    }
+}
+
+fn push_opt_path(pairs: &mut Vec<(&'static str, Json)>, key: &'static str, v: &Option<PathBuf>) {
+    if let Some(p) = v {
+        pairs.push((key, Json::str(&p.display().to_string())));
+    }
+}
+
+impl JobSpec {
+    /// The `"job"` discriminator this spec serializes with.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            JobSpec::Train(_) => "train",
+            JobSpec::Eval(_) => "eval",
+            JobSpec::Fleet(_) => "fleet",
+            JobSpec::Bench(_) => "bench",
+            JobSpec::FleetBench(_) => "fleet_bench",
+            JobSpec::Info(_) => "info",
+        }
+    }
+
+    /// Serialize to the wire shape (`{"job": kind, ...}`; optional unset
+    /// fields are omitted). Inverse of [`JobSpec::from_json`].
+    pub fn to_json(&self) -> Json {
+        let mut p: Vec<(&'static str, Json)> = vec![("job", Json::str(self.kind_name()))];
+        match self {
+            JobSpec::Train(t) => {
+                p.push(("data", Json::str(t.data.name())));
+                p.push(("config", t.config.to_json()));
+                push_opt_num(&mut p, "train_n", t.train_n);
+                push_opt_num(&mut p, "test_n", t.test_n);
+                p.push(("warmup", Json::Bool(t.warmup)));
+                push_opt_path(&mut p, "save", &t.save);
+            }
+            JobSpec::Eval(e) => {
+                p.push(("data", Json::str(e.data.name())));
+                p.push(("config", e.config.to_json()));
+                p.push(("load", Json::str(&e.load.display().to_string())));
+                push_opt_num(&mut p, "test_n", e.test_n);
+            }
+            JobSpec::Fleet(f) => {
+                p.push(("data", Json::str(f.data.name())));
+                p.push(("config", f.config.to_json()));
+                push_opt_num(&mut p, "runs", f.runs);
+                push_opt_num(&mut p, "parallel", f.parallel);
+                push_opt_num(&mut p, "train_n", f.train_n);
+                push_opt_num(&mut p, "test_n", f.test_n);
+                p.push(("warmup", Json::Bool(f.warmup)));
+                push_opt_path(&mut p, "log", &f.log);
+            }
+            JobSpec::Bench(b) => {
+                let c = &b.config;
+                p.push(("variant", Json::str(&c.variant)));
+                p.push(("backend", Json::str(c.backend.name())));
+                if let Some(t) = &c.tag {
+                    p.push(("tag", Json::str(t)));
+                }
+                p.push(("warmup_runs", Json::num(c.warmup_runs as f64)));
+                p.push(("runs", Json::num(c.runs as f64)));
+                p.push(("steps", Json::num(c.steps as f64)));
+                p.push(("epochs", Json::num(c.epochs)));
+                p.push(("train_n", Json::num(c.train_n as f64)));
+                p.push(("test_n", Json::num(c.test_n as f64)));
+                p.push(("workers", Json::num(c.workers as f64)));
+                p.push(("out", Json::str(&c.out_dir.display().to_string())));
+                p.push(("write", Json::Bool(b.write)));
+            }
+            JobSpec::FleetBench(b) => {
+                let c = &b.config;
+                p.push(("variant", Json::str(&c.variant)));
+                p.push(("backend", Json::str(c.backend.name())));
+                if let Some(t) = &c.tag {
+                    p.push(("tag", Json::str(t)));
+                }
+                p.push(("fleet_runs", Json::num(c.n_runs as f64)));
+                p.push((
+                    "parallel_levels",
+                    Json::Arr(c.parallel_levels.iter().map(|&x| Json::num(x as f64)).collect()),
+                ));
+                p.push(("epochs", Json::num(c.epochs)));
+                p.push(("train_n", Json::num(c.train_n as f64)));
+                p.push(("test_n", Json::num(c.test_n as f64)));
+                p.push(("out", Json::str(&c.out_dir.display().to_string())));
+                p.push(("write", Json::Bool(b.write)));
+            }
+            JobSpec::Info(i) => {
+                if let Some(v) = &i.variant {
+                    p.push(("variant", Json::str(v)));
+                }
+                p.push(("hlo", Json::Bool(i.hlo)));
+            }
+        }
+        Json::obj(p)
+    }
+
+    /// Parse a wire document (inverse of [`JobSpec::to_json`]; absent and
+    /// `null` optional keys mean "default").
+    pub fn from_json(j: &Json) -> Result<JobSpec> {
+        let kind = j
+            .get("job")
+            .context("a job spec needs a 'job' kind")?
+            .as_str()
+            .context("'job' must be a string")?;
+        Ok(match kind {
+            "train" => {
+                let d = TrainJob::default();
+                JobSpec::Train(TrainJob {
+                    config: parse_config(j)?,
+                    data: parse_data(j)?,
+                    train_n: opt_usize(j, "train_n")?,
+                    test_n: opt_usize(j, "test_n")?,
+                    warmup: opt_bool(j, "warmup")?.unwrap_or(d.warmup),
+                    save: opt_path(j, "save")?,
+                })
+            }
+            "eval" => JobSpec::Eval(EvalJob {
+                config: parse_config(j)?,
+                data: parse_data(j)?,
+                load: opt_path(j, "load")?
+                    .ok_or_else(|| anyhow::anyhow!("eval jobs need a 'load' checkpoint path"))?,
+                test_n: opt_usize(j, "test_n")?,
+            }),
+            "fleet" => {
+                let d = FleetJob::default();
+                JobSpec::Fleet(FleetJob {
+                    config: parse_config(j)?,
+                    data: parse_data(j)?,
+                    runs: opt_usize(j, "runs")?,
+                    parallel: opt_usize(j, "parallel")?,
+                    train_n: opt_usize(j, "train_n")?,
+                    test_n: opt_usize(j, "test_n")?,
+                    warmup: opt_bool(j, "warmup")?.unwrap_or(d.warmup),
+                    log: opt_path(j, "log")?,
+                })
+            }
+            "bench" => {
+                let d = BenchConfig::default();
+                JobSpec::Bench(BenchJob {
+                    config: BenchConfig {
+                        variant: opt_str(j, "variant")?.unwrap_or(d.variant),
+                        backend: parse_backend(j, d.backend)?,
+                        tag: opt_str(j, "tag")?,
+                        warmup_runs: opt_usize(j, "warmup_runs")?.unwrap_or(d.warmup_runs),
+                        runs: opt_usize(j, "runs")?.unwrap_or(d.runs).max(1),
+                        steps: opt_usize(j, "steps")?.unwrap_or(d.steps).max(1),
+                        epochs: opt_f64(j, "epochs")?.unwrap_or(d.epochs),
+                        train_n: opt_usize(j, "train_n")?.unwrap_or(d.train_n),
+                        test_n: opt_usize(j, "test_n")?.unwrap_or(d.test_n),
+                        workers: opt_usize(j, "workers")?.unwrap_or(d.workers),
+                        out_dir: opt_path(j, "out")?.unwrap_or(d.out_dir),
+                    },
+                    write: opt_bool(j, "write")?.unwrap_or(true),
+                })
+            }
+            "fleet_bench" => {
+                let d = FleetBenchConfig::default();
+                JobSpec::FleetBench(FleetBenchJob {
+                    config: FleetBenchConfig {
+                        variant: opt_str(j, "variant")?.unwrap_or(d.variant),
+                        backend: parse_backend(j, d.backend)?,
+                        tag: opt_str(j, "tag")?,
+                        n_runs: opt_usize(j, "fleet_runs")?.unwrap_or(d.n_runs).max(1),
+                        parallel_levels: match opt_key(j, "parallel_levels") {
+                            None => d.parallel_levels,
+                            Some(v) => v
+                                .as_usize_vec()
+                                .context("job key 'parallel_levels'")?,
+                        },
+                        epochs: opt_f64(j, "epochs")?.unwrap_or(d.epochs),
+                        train_n: opt_usize(j, "train_n")?.unwrap_or(d.train_n),
+                        test_n: opt_usize(j, "test_n")?.unwrap_or(d.test_n),
+                        out_dir: opt_path(j, "out")?.unwrap_or(d.out_dir),
+                    },
+                    write: opt_bool(j, "write")?.unwrap_or(true),
+                })
+            }
+            "info" => JobSpec::Info(InfoJob {
+                variant: opt_str(j, "variant")?,
+                hlo: opt_bool(j, "hlo")?.unwrap_or(false),
+            }),
+            other => bail!(
+                "unknown job kind '{other}' \
+                 (train|eval|fleet|bench|fleet_bench|info)"
+            ),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn round_trip(spec: &JobSpec) -> JobSpec {
+        let j = spec.to_json();
+        let back = JobSpec::from_json(&j).expect("round trip parse");
+        assert_eq!(back.to_json(), j, "JSON drifted through the round trip");
+        back
+    }
+
+    #[test]
+    fn train_spec_round_trips() {
+        let mut t = TrainJob {
+            train_n: Some(128),
+            save: Some(PathBuf::from("ckpt.bin")),
+            warmup: false,
+            ..TrainJob::default()
+        };
+        t.config.set("epochs", "2.5").unwrap();
+        t.config.set("seed", "7").unwrap();
+        let back = round_trip(&JobSpec::Train(t));
+        match back {
+            JobSpec::Train(t) => {
+                assert_eq!(t.config.epochs, 2.5);
+                assert_eq!(t.config.seed, 7);
+                assert_eq!(t.train_n, Some(128));
+                assert_eq!(t.test_n, None);
+                assert!(!t.warmup);
+                assert_eq!(t.save.as_deref(), Some(std::path::Path::new("ckpt.bin")));
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fleet_and_eval_specs_round_trip() {
+        let f = FleetJob {
+            runs: Some(12),
+            parallel: Some(3),
+            log: Some(PathBuf::from("fleet.json")),
+            data: DataKind::SvhnLike,
+            ..FleetJob::default()
+        };
+        match round_trip(&JobSpec::Fleet(f)) {
+            JobSpec::Fleet(f) => {
+                assert_eq!(f.runs, Some(12));
+                assert_eq!(f.parallel, Some(3));
+                assert_eq!(f.data, DataKind::SvhnLike);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        let e = EvalJob {
+            config: TrainConfig::default(),
+            data: DataKind::Cifar10,
+            load: PathBuf::from("model.bin"),
+            test_n: Some(64),
+        };
+        match round_trip(&JobSpec::Eval(e)) {
+            JobSpec::Eval(e) => assert_eq!(e.test_n, Some(64)),
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bench_specs_round_trip() {
+        let b = BenchJob {
+            config: BenchConfig {
+                runs: 3,
+                steps: 10,
+                tag: Some("t".into()),
+                ..BenchConfig::default()
+            },
+            write: false,
+        };
+        match round_trip(&JobSpec::Bench(b)) {
+            JobSpec::Bench(b) => {
+                assert_eq!(b.config.runs, 3);
+                assert_eq!(b.config.tag.as_deref(), Some("t"));
+                assert!(!b.write);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        let fb = FleetBenchJob {
+            config: FleetBenchConfig {
+                parallel_levels: vec![1, 4],
+                ..FleetBenchConfig::default()
+            },
+            write: true,
+        };
+        match round_trip(&JobSpec::FleetBench(fb)) {
+            JobSpec::FleetBench(fb) => assert_eq!(fb.config.parallel_levels, vec![1, 4]),
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn minimal_documents_fill_defaults() {
+        let spec = JobSpec::from_json(&parse(r#"{"job": "train"}"#).unwrap()).unwrap();
+        match spec {
+            JobSpec::Train(t) => {
+                assert_eq!(t.config, TrainConfig::default());
+                assert_eq!(t.data, DataKind::Cifar10);
+                assert!(t.warmup);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        let spec = JobSpec::from_json(
+            &parse(r#"{"job": "train", "config": {"epochs": 1, "variant": "nano"}, "test_n": null}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        match spec {
+            JobSpec::Train(t) => {
+                assert_eq!(t.config.epochs, 1.0);
+                assert_eq!(t.config.variant, "nano");
+                assert_eq!(t.test_n, None);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_documents_fail_loudly() {
+        assert!(JobSpec::from_json(&parse("{}").unwrap()).is_err());
+        assert!(JobSpec::from_json(&parse(r#"{"job": "dance"}"#).unwrap()).is_err());
+        assert!(JobSpec::from_json(&parse(r#"{"job": "eval"}"#).unwrap()).is_err());
+        assert!(JobSpec::from_json(
+            &parse(r#"{"job": "train", "config": {"epochs": "abc"}}"#).unwrap()
+        )
+        .is_err());
+        assert!(JobSpec::from_json(
+            &parse(r#"{"job": "fleet", "data": "mnist"}"#).unwrap()
+        )
+        .is_err());
+    }
+}

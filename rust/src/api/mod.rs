@@ -1,0 +1,49 @@
+//! The public job API: one engine surface for every workload.
+//!
+//! This layer is the programmatic face of the crate (DESIGN.md §9). A
+//! client — the CLI, the `airbench serve` daemon, a test, or library code
+//! — builds a typed [`JobSpec`] (train / eval / fleet / bench /
+//! fleet-bench / info), submits it to an [`Engine`], and consumes a typed
+//! [`Event`] stream from the returned [`JobHandle`]:
+//!
+//! ```text
+//! queued -> started -> (epoch | run | log)* -> result | error
+//! ```
+//!
+//! Every spec and event has a total JSON mapping, so the same documents
+//! drive the in-process API and the NDJSON serve protocol. Results are
+//! uniform `{"kind", "data"}` envelopes ([`JobResult`]) and are
+//! schema-checked ([`validate_result`]) before they are emitted.
+//!
+//! # Example
+//!
+//! Train the `nano` variant on synthetic data and read the result:
+//!
+//! ```
+//! use airbench::api::{Engine, EngineConfig, JobResult, JobSpec, TrainJob};
+//!
+//! let mut job = TrainJob::default();
+//! job.config.set("variant", "nano").unwrap();
+//! job.config.set("backend", "native").unwrap();
+//! job.config.set("epochs", "1").unwrap();
+//! job.config.set("tta", "none").unwrap();
+//! job.config.set("whiten_samples", "32").unwrap();
+//! job.train_n = Some(64);
+//! job.test_n = Some(32);
+//! job.warmup = false;
+//!
+//! let engine = Engine::new(EngineConfig::default());
+//! let result = engine.submit(JobSpec::Train(job)).wait().unwrap();
+//! match result {
+//!     JobResult::Train { result, .. } => assert!(result.accuracy >= 0.0),
+//!     other => panic!("unexpected result kind {other:?}"),
+//! }
+//! ```
+
+pub mod engine;
+pub mod event;
+pub mod job;
+
+pub use engine::{CancelToken, Engine, EngineConfig, JobHandle};
+pub use event::{validate_result, Event, JobId, JobResult};
+pub use job::{BenchJob, EvalJob, FleetBenchJob, FleetJob, InfoJob, JobSpec, TrainJob};

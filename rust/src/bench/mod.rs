@@ -27,6 +27,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::config::TrainConfig;
+use crate::coordinator::observer::{Cancelled, NullObserver, Observer};
 use crate::coordinator::trainer::PhaseTimes;
 use crate::coordinator::{evaluate, run_fleet_parallel, train_full, warmup};
 use crate::data::synthetic::{cifar_like, SynthConfig};
@@ -583,6 +584,16 @@ pub fn validate_any(j: &Json) -> Result<()> {
 /// compared bitwise across levels — the report records a measured
 /// determinism verdict next to the measured speedup.
 pub fn run_fleet_bench(cfg: &FleetBenchConfig) -> Result<FleetReport> {
+    run_fleet_bench_observed(cfg, &mut NullObserver)
+}
+
+/// [`run_fleet_bench`] with an observer: one log line per timed level,
+/// and a cancellation poll between levels (the job engine's progress
+/// feed). Observation is passive — the measured numbers are unchanged.
+pub fn run_fleet_bench_observed(
+    cfg: &FleetBenchConfig,
+    obs: &mut dyn Observer,
+) -> Result<FleetReport> {
     if cfg.parallel_levels.is_empty() {
         bail!("fleet bench needs at least one parallelism level");
     }
@@ -620,6 +631,9 @@ pub fn run_fleet_bench(cfg: &FleetBenchConfig) -> Result<FleetReport> {
     let mut levels: Vec<FleetLevel> = Vec::with_capacity(cfg.parallel_levels.len());
     let mut baseline: Option<(f64, Vec<f64>)> = None; // (wall_s, accs) of levels[0]
     for &parallel in &cfg.parallel_levels {
+        if obs.cancelled() {
+            return Err(Cancelled.into());
+        }
         // The budget the scheduler itself resolves — recorded == executed.
         let budget = crate::coordinator::fleet::fleet_budget(&factory, parallel.max(1), cfg.n_runs);
         let t0 = Instant::now();
@@ -664,6 +678,11 @@ pub fn run_fleet_bench(cfg: &FleetBenchConfig) -> Result<FleetReport> {
         if baseline.is_none() {
             baseline = Some((wall_s, fleet.accuracies.clone()));
         }
+        obs.on_log(&format!(
+            "[bench] fleet level parallel={} done in {wall_s:.2}s ({:.2} runs/s)",
+            budget.runs_parallel,
+            cfg.n_runs as f64 / wall_s
+        ));
         levels.push(FleetLevel {
             parallel: budget.runs_parallel,
             kernel_threads: budget.kernel_threads,
@@ -695,6 +714,13 @@ pub fn run_fleet_bench(cfg: &FleetBenchConfig) -> Result<FleetReport> {
 /// Run the full protocol described by `cfg` and return the report (the
 /// caller decides whether to [`Report::write`] it).
 pub fn run(cfg: &BenchConfig) -> Result<Report> {
+    run_observed(cfg, &mut NullObserver)
+}
+
+/// [`run`] with an observer: one log line per measured seed, and a
+/// cancellation poll between seeds (the job engine's progress feed).
+/// Observation is passive — the measured numbers are unchanged.
+pub fn run_observed(cfg: &BenchConfig, obs: &mut dyn Observer) -> Result<Report> {
     let mut engine = create_default_backend(cfg.backend, &cfg.variant)?;
     let engine = engine.as_mut();
     let batch = engine.batch_train();
@@ -762,6 +788,9 @@ pub fn run(cfg: &BenchConfig) -> Result<Report> {
         .collect();
 
     for run in 0..cfg.runs {
+        if obs.cancelled() {
+            return Err(Cancelled.into());
+        }
         let seed = run as u64;
         // ---- micro: init phase (state init + whitening stats) ----------
         let t0 = Instant::now();
@@ -799,6 +828,11 @@ pub fn run(cfg: &BenchConfig) -> Result<Report> {
         report.run_train_s.push(train_seconds);
         report.run_eval_s.push(eval_seconds);
         report.run_acc.push(result.accuracy);
+        obs.on_log(&format!(
+            "[bench] seed {run}: run {:.2}s, step median {:.2}ms",
+            result.time_seconds,
+            report.step_ms.per_run.last().copied().unwrap_or(0.0)
+        ));
     }
     report.stats = *engine.stats();
     Ok(report)

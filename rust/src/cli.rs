@@ -9,6 +9,24 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
+/// One entry of the CLI's command table. `usage()` text and `main()`
+/// dispatch are both generated from the same table row, so the help
+/// output and the dispatcher cannot diverge (the dispatch test in
+/// `main.rs` pins it).
+pub struct Command {
+    /// Subcommand name (`train`, `serve`, ...).
+    pub name: &'static str,
+    /// One-line summary printed by the generated usage text.
+    pub summary: &'static str,
+    /// Handler the dispatcher invokes.
+    pub run: fn(&Args) -> Result<()>,
+}
+
+/// Look up `name` in a command table — the single dispatch path.
+pub fn find_command<'a>(table: &'a [Command], name: &str) -> Option<&'a Command> {
+    table.iter().find(|c| c.name == name)
+}
+
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
 pub struct Args {

@@ -48,7 +48,7 @@ impl TtaLevel {
 }
 
 /// Full configuration of one training run.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TrainConfig {
     /// AOT variant to execute (must exist in the manifest). `bench` is the
     /// CPU-scale airbench; `bench_noscalebias` bakes bias_scaler=1 (Fig 4).
@@ -218,7 +218,10 @@ impl TrainConfig {
                     "none" => None,
                     "heavy" => Some(CropPolicy::HeavyRrc),
                     "light" => Some(CropPolicy::LightRrc),
-                    _ => return Err(bad()),
+                    v => match v.strip_prefix("center:").and_then(|r| r.parse().ok()) {
+                        Some(ratio_pct) => Some(CropPolicy::Center { ratio_pct }),
+                        None => return Err(bad()),
+                    },
                 }
             }
             "backend" => self.backend = BackendKind::parse(value).ok_or_else(bad)?,
@@ -235,10 +238,13 @@ impl TrainConfig {
         Ok(())
     }
 
-    /// Load from a JSON object `{ "key": value, ... }` (values may be
-    /// strings, numbers, or bools — everything funnels through [`set`]).
-    pub fn from_json(j: &Json) -> Result<TrainConfig> {
-        let mut cfg = TrainConfig::default();
+    /// Apply every key of a JSON object `{ "key": value, ... }` onto this
+    /// config (values may be strings, numbers, or bools — everything
+    /// funnels through [`set`](TrainConfig::set)). This is the "config
+    /// file" layer of [`TrainConfig::resolve`]: unlike
+    /// [`TrainConfig::from_json`] it layers onto the current values rather
+    /// than onto defaults.
+    pub fn apply_json(&mut self, j: &Json) -> Result<()> {
         for (k, v) in j.as_obj()? {
             let s = match v {
                 Json::Str(s) => s.clone(),
@@ -252,8 +258,15 @@ impl TrainConfig {
                 Json::Bool(b) => b.to_string(),
                 _ => bail!("config value for '{k}' must be scalar"),
             };
-            cfg.set(k, &s)?;
+            self.set(k, &s)?;
         }
+        Ok(())
+    }
+
+    /// Load from a JSON object (defaults + [`TrainConfig::apply_json`]).
+    pub fn from_json(j: &Json) -> Result<TrainConfig> {
+        let mut cfg = TrainConfig::default();
+        cfg.apply_json(j)?;
         Ok(cfg)
     }
 
@@ -264,27 +277,140 @@ impl TrainConfig {
         TrainConfig::from_json(&parse(&text)?)
     }
 
-    /// Serialize the feature-relevant fields (experiment logs).
+    /// Serialize to a JSON object holding **every** [`CONFIG_KEYS`] key
+    /// except `fleet_parallel` (a pure throughput knob — fleet logs taken
+    /// at different parallelism levels must compare equal, see the field
+    /// doc). The emitted values round-trip through
+    /// [`TrainConfig::from_json`] bit-exactly; the round-trip test pins
+    /// this for every key so the config cannot silently drift as it grows.
     pub fn to_json(&self) -> Json {
+        let crop = match self.crop {
+            None => "none".to_string(),
+            Some(CropPolicy::HeavyRrc) => "heavy".to_string(),
+            Some(CropPolicy::LightRrc) => "light".to_string(),
+            Some(CropPolicy::Center { ratio_pct }) => format!("center:{ratio_pct}"),
+        };
         Json::obj(vec![
             ("variant", Json::str(&self.variant)),
             ("epochs", Json::num(self.epochs)),
             ("lr", Json::num(self.lr)),
             ("weight_decay", Json::num(self.weight_decay)),
+            ("lr_start_frac", Json::num(self.lr_start_frac)),
+            ("lr_end_frac", Json::num(self.lr_end_frac)),
+            ("lr_peak_frac", Json::num(self.lr_peak_frac)),
+            ("whiten_bias_epochs", Json::num(self.whiten_bias_epochs)),
             ("whiten_init", Json::Bool(self.whiten_init)),
+            ("whiten_eps", Json::num(self.whiten_eps)),
+            ("whiten_samples", Json::num(self.whiten_samples as f64)),
             ("dirac_init", Json::Bool(self.dirac_init)),
             ("lookahead", Json::Bool(self.lookahead)),
+            ("lookahead_every", Json::num(self.lookahead_every as f64)),
             ("tta", Json::str(self.tta.name())),
             ("flip", Json::str(self.flip.name())),
+            ("order", Json::str(self.order.name())),
             ("translate", Json::num(self.translate as f64)),
             ("cutout", Json::num(self.cutout as f64)),
+            ("crop", Json::Str(crop)),
             ("backend", Json::str(self.backend.name())),
             ("workers", Json::num(self.workers as f64)),
             ("prefetch_depth", Json::num(self.prefetch_depth as f64)),
-            ("seed", Json::num(self.seed as f64)),
+            // Serialized as a string: JSON numbers are f64 and would
+            // silently corrupt seeds >= 2^53 (set() parses the full u64).
+            ("seed", Json::str(&self.seed.to_string())),
             ("target_acc", Json::num(self.target_acc)),
+            ("eval_every_epoch", Json::Bool(self.eval_every_epoch)),
         ])
     }
+
+    /// Resolve a config from layered sources with the documented
+    /// precedence **CLI > env > config file > default** (the one resolver
+    /// every `JobSpec` builder and CLI command uses — see
+    /// [`ConfigLayers`]).
+    pub fn resolve(layers: ConfigLayers<'_>) -> Result<TrainConfig> {
+        let mut cfg = layers.base;
+        if let Some(j) = layers.file {
+            cfg.apply_json(j).context("config file layer")?;
+        }
+        for (var, key) in ENV_KEYS {
+            if let Some(v) = (layers.env)(var) {
+                cfg.set(key, &v)
+                    .with_context(|| format!("env layer: {var}='{v}'"))?;
+            }
+        }
+        for (k, v) in layers.cli {
+            cfg.set(k, v).context("CLI layer")?;
+        }
+        Ok(cfg)
+    }
+}
+
+/// Every canonical `key=value` name [`TrainConfig::set`] accepts (aliases
+/// like `wd` excluded). [`TrainConfig::to_json`] emits exactly this set
+/// minus `fleet_parallel`; the round-trip test pins both directions.
+pub const CONFIG_KEYS: &[&str] = &[
+    "variant",
+    "epochs",
+    "lr",
+    "weight_decay",
+    "lr_start_frac",
+    "lr_end_frac",
+    "lr_peak_frac",
+    "whiten_bias_epochs",
+    "whiten_init",
+    "whiten_eps",
+    "whiten_samples",
+    "dirac_init",
+    "lookahead",
+    "lookahead_every",
+    "tta",
+    "flip",
+    "order",
+    "translate",
+    "cutout",
+    "crop",
+    "backend",
+    "workers",
+    "prefetch_depth",
+    "fleet_parallel",
+    "seed",
+    "target_acc",
+    "eval_every_epoch",
+];
+
+/// The environment layer of [`TrainConfig::resolve`]: `(env var, config
+/// key)` pairs, applied in this order between the config-file and CLI
+/// layers. (`AIRBENCH_EPOCHS` doubles as the bench-scale override in
+/// [`crate::experiments::Scale`]; here it carries the same meaning for a
+/// single resolved config.)
+pub const ENV_KEYS: &[(&str, &str)] = &[
+    ("AIRBENCH_VARIANT", "variant"),
+    ("AIRBENCH_BACKEND", "backend"),
+    ("AIRBENCH_EPOCHS", "epochs"),
+    ("AIRBENCH_WORKERS", "workers"),
+    ("AIRBENCH_PREFETCH_DEPTH", "prefetch_depth"),
+    ("AIRBENCH_FLEET_PARALLEL", "fleet_parallel"),
+    ("AIRBENCH_SEED", "seed"),
+];
+
+/// Layered sources feeding [`TrainConfig::resolve`], lowest precedence
+/// first: `base` (the default layer — callers customize e.g. the epoch
+/// budget), then `file`, then `env` ([`ENV_KEYS`]), then `cli`. The env
+/// lookup is injected as a closure so precedence tests need no
+/// process-global environment mutation.
+pub struct ConfigLayers<'a> {
+    /// The "default" layer the others override.
+    pub base: TrainConfig,
+    /// Parsed config-file JSON object, when a file was given.
+    pub file: Option<&'a Json>,
+    /// Environment lookup (use [`process_env`] outside tests).
+    pub env: &'a dyn Fn(&str) -> Option<String>,
+    /// CLI `key=value` overrides, applied last, in order.
+    pub cli: &'a [(String, String)],
+}
+
+/// The real process environment, in the shape [`ConfigLayers::env`] wants.
+pub fn process_env(var: &str) -> Option<String> {
+    std::env::var(var).ok()
 }
 
 fn parse_bool(s: &str) -> Option<bool> {
@@ -370,6 +496,167 @@ mod tests {
         assert!(c.set("nope", "1").is_err());
         assert!(c.set("epochs", "abc").is_err());
         assert!(c.set("flip", "diagonal").is_err());
+    }
+
+    /// A non-default, [`TrainConfig::set`]-valid sample value per key.
+    fn sample_value(key: &str) -> &'static str {
+        match key {
+            "variant" => "nano",
+            "epochs" => "3.25",
+            "lr" => "1.5",
+            "weight_decay" => "0.01",
+            "lr_start_frac" => "0.5",
+            "lr_end_frac" => "0.11",
+            "lr_peak_frac" => "0.4",
+            "whiten_bias_epochs" => "1.5",
+            "whiten_init" => "false",
+            "whiten_eps" => "0.001",
+            "whiten_samples" => "128",
+            "dirac_init" => "false",
+            "lookahead" => "false",
+            "lookahead_every" => "7",
+            "tta" => "mirror",
+            "flip" => "random",
+            "order" => "replacement",
+            "translate" => "3",
+            "cutout" => "12",
+            "crop" => "center:75",
+            "backend" => "native",
+            "workers" => "4",
+            "prefetch_depth" => "5",
+            "fleet_parallel" => "2",
+            // Above 2^53 on purpose: pins the string serialization of
+            // seeds (an f64 JSON number would corrupt it).
+            "seed" => "9007199254740995",
+            "target_acc" => "0.5",
+            "eval_every_epoch" => "true",
+            _ => panic!("no sample value for key '{key}' — extend the test"),
+        }
+    }
+
+    #[test]
+    fn every_config_key_survives_json_round_trip() {
+        // The anti-drift contract: every canonical key set() accepts must
+        // (a) be settable, and (b) survive to_json -> from_json bit-exactly
+        // — except fleet_parallel, which is deliberately never serialized.
+        for &key in CONFIG_KEYS {
+            let mut c = TrainConfig::default();
+            c.set(key, sample_value(key))
+                .unwrap_or_else(|e| panic!("set('{key}') rejected its sample value: {e}"));
+            let rt = TrainConfig::from_json(&c.to_json())
+                .unwrap_or_else(|e| panic!("round trip of '{key}' failed to parse: {e}"));
+            if key == "fleet_parallel" {
+                assert_eq!(rt, TrainConfig::default(), "fleet_parallel must not serialize");
+            } else {
+                assert_ne!(c, TrainConfig::default(), "sample for '{key}' is the default");
+                assert_eq!(rt, c, "key '{key}' drifted through the JSON round trip");
+            }
+        }
+    }
+
+    #[test]
+    fn to_json_emits_exactly_the_declared_keys() {
+        let j = TrainConfig::default().to_json();
+        let got: Vec<&str> = j.as_obj().unwrap().keys().map(|s| s.as_str()).collect();
+        let mut want: Vec<&str> = CONFIG_KEYS
+            .iter()
+            .copied()
+            .filter(|&k| k != "fleet_parallel")
+            .collect();
+        want.sort_unstable();
+        assert_eq!(got, want, "to_json keys diverged from CONFIG_KEYS");
+    }
+
+    #[test]
+    fn resolve_precedence_cli_over_env_over_file_over_default() {
+        fn env_layer(var: &str) -> Option<String> {
+            match var {
+                "AIRBENCH_EPOCHS" => Some("4".to_string()),
+                "AIRBENCH_BACKEND" => Some("native".to_string()),
+                _ => None,
+            }
+        }
+        fn no_env(_var: &str) -> Option<String> {
+            None
+        }
+        fn layers<'a>(
+            file: Option<&'a Json>,
+            env: &'a dyn Fn(&str) -> Option<String>,
+            cli: &'a [(String, String)],
+        ) -> ConfigLayers<'a> {
+            ConfigLayers {
+                base: TrainConfig::default(),
+                file,
+                env,
+                cli,
+            }
+        }
+        let file = parse(r#"{"epochs": 3, "lr": 5.0, "flip": "random"}"#).unwrap();
+        let cli = vec![("epochs".to_string(), "5.5".to_string())];
+
+        // All four layers: CLI wins epochs; env wins backend; file wins
+        // lr/flip; defaults fill the rest.
+        let c = TrainConfig::resolve(layers(Some(&file), &env_layer, &cli)).unwrap();
+        assert_eq!(c.epochs, 5.5, "CLI must beat env");
+        assert_eq!(c.backend, BackendKind::Native, "env must beat default");
+        assert_eq!(c.lr, 5.0, "file must beat default");
+        assert_eq!(c.flip, FlipMode::Random);
+        assert_eq!(c.weight_decay, TrainConfig::default().weight_decay);
+
+        // Peel the CLI layer: env wins epochs.
+        let c = TrainConfig::resolve(layers(Some(&file), &env_layer, &[])).unwrap();
+        assert_eq!(c.epochs, 4.0, "env must beat file");
+
+        // Peel env too: file wins epochs.
+        let c = TrainConfig::resolve(layers(Some(&file), &no_env, &[])).unwrap();
+        assert_eq!(c.epochs, 3.0, "file must beat default");
+        assert_eq!(c.backend, BackendKind::Auto);
+
+        // No layers: the base default.
+        let c = TrainConfig::resolve(layers(None, &no_env, &[])).unwrap();
+        assert_eq!(c, TrainConfig::default());
+    }
+
+    #[test]
+    fn resolve_surfaces_layer_in_errors() {
+        let bad_file = parse(r#"{"epochs": "abc"}"#).unwrap();
+        let e = TrainConfig::resolve(ConfigLayers {
+            base: TrainConfig::default(),
+            file: Some(&bad_file),
+            env: &|_| None,
+            cli: &[],
+        })
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("config file layer"), "{e:#}");
+
+        let cli = vec![("nope".to_string(), "1".to_string())];
+        let e = TrainConfig::resolve(ConfigLayers {
+            base: TrainConfig::default(),
+            file: None,
+            env: &|_| None,
+            cli: &cli,
+        })
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("CLI layer"), "{e:#}");
+
+        let e = TrainConfig::resolve(ConfigLayers {
+            base: TrainConfig::default(),
+            file: None,
+            env: &|var| (var == "AIRBENCH_BACKEND").then(|| "tpu".to_string()),
+            cli: &[],
+        })
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("AIRBENCH_BACKEND"), "{e:#}");
+    }
+
+    #[test]
+    fn crop_center_spelling_parses_and_serializes() {
+        let mut c = TrainConfig::default();
+        c.set("crop", "center:80").unwrap();
+        assert_eq!(c.crop, Some(CropPolicy::Center { ratio_pct: 80 }));
+        assert_eq!(c.to_json().get("crop").unwrap().as_str().unwrap(), "center:80");
+        assert!(c.set("crop", "center:").is_err());
+        assert!(c.set("crop", "diagonal").is_err());
     }
 
     #[test]

@@ -12,6 +12,7 @@
 use anyhow::Result;
 
 use crate::config::TtaLevel;
+use crate::coordinator::observer::{Cancelled, NullObserver, Observer};
 use crate::data::augment::{tta_view_into, AugConfig, TTA_VIEWS};
 use crate::data::loader::{Loader, OrderPolicy};
 use crate::data::pipeline::BatchSource;
@@ -78,6 +79,22 @@ pub fn evaluate(
     dataset: &Dataset,
     tta: TtaLevel,
 ) -> Result<EvalOutput> {
+    evaluate_observed(engine, state, dataset, tta, &mut NullObserver)
+}
+
+/// Like [`evaluate`], but polls [`Observer::cancelled`] before every eval
+/// batch, failing with the typed
+/// [`Cancelled`](crate::coordinator::observer::Cancelled) error when it
+/// trips — the hook the job engine uses to make long TTA evaluations
+/// responsive to [`crate::api::JobHandle::cancel`]. Observation is
+/// passive: results are bit-identical to [`evaluate`].
+pub fn evaluate_observed(
+    engine: &mut dyn Backend,
+    state: &ModelState,
+    dataset: &Dataset,
+    tta: TtaLevel,
+    obs: &mut dyn Observer,
+) -> Result<EvalOutput> {
     let hw = engine.variant().image_hw;
     let mut source = Loader::new(
         dataset,
@@ -88,7 +105,7 @@ pub fn evaluate(
         0,
     )
     .with_output_hw(hw);
-    evaluate_source(engine, state, &mut source, &dataset.labels, tta)
+    evaluate_source_observed(engine, state, &mut source, &dataset.labels, tta, obs)
 }
 
 /// Evaluate against batches drawn from any [`BatchSource`]. The source must
@@ -100,6 +117,19 @@ pub fn evaluate_source(
     source: &mut dyn BatchSource,
     labels: &[u16],
     tta: TtaLevel,
+) -> Result<EvalOutput> {
+    evaluate_source_observed(engine, state, source, labels, tta, &mut NullObserver)
+}
+
+/// [`evaluate_source`] with a cancellation poll before every batch (see
+/// [`evaluate_observed`]).
+pub fn evaluate_source_observed(
+    engine: &mut dyn Backend,
+    state: &ModelState,
+    source: &mut dyn BatchSource,
+    labels: &[u16],
+    tta: TtaLevel,
+    obs: &mut dyn Observer,
 ) -> Result<EvalOutput> {
     let b = engine.batch_eval();
     let n = labels.len();
@@ -114,6 +144,10 @@ pub fn evaluate_source(
     let mut result: Result<()> = Ok(());
 
     source.run_epoch(&mut |bt| {
+        if obs.cancelled() {
+            result = Err(Cancelled.into());
+            return false;
+        }
         let (take, c, h, w) = bt.images.dims4();
         let batch = batch.get_or_insert_with(|| Tensor::zeros(&[b, c, h, w]));
         let view_buf = view_buf.get_or_insert_with(|| Tensor::zeros(&[b, c, h, w]));

@@ -11,7 +11,7 @@
 //! seed-ordered slots. Summary aggregation is Welford-backed
 //! ([`Summary::of`] wraps the incremental accumulator in
 //! [`crate::stats::basic`]), and callers that only need aggregates can
-//! stream accuracies from the `progress` callback into a
+//! stream accuracies from the [`Observer::on_run`] hook into a
 //! [`crate::stats::basic::Welford`] in O(1) state; [`FleetResult`] itself
 //! still retains the per-run records the statistical suites consume.
 //!
@@ -30,7 +30,8 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use anyhow::{Context, Result};
 
 use crate::config::TrainConfig;
-use crate::coordinator::trainer::{train, TrainResult};
+use crate::coordinator::observer::{Cancelled, NullObserver, Observer, QuietRuns};
+use crate::coordinator::trainer::{train_run, TrainResult};
 use crate::data::Dataset;
 use crate::rng::Rng;
 use crate::runtime::native::{fleet_parallel_env, ThreadBudget};
@@ -195,25 +196,28 @@ pub fn fleet_budget(factory: &BackendFactory, parallel: usize, n: usize) -> Thre
 /// against one backend — the reference path the concurrent scheduler is
 /// bit-compared to (and the fallback for non-`Send` backends).
 ///
-/// `progress` (optional) is invoked after each run with (run_index,
-/// accuracy) — benches use it for live table output.
+/// `obs` (optional) receives [`Observer::on_run`] after each run with
+/// (run_index, accuracy) and is polled for cancellation at epoch and run
+/// boundaries — a tripped poll resolves to the typed
+/// [`Cancelled`](crate::coordinator::observer::Cancelled) error.
 pub fn run_fleet(
     engine: &mut dyn Backend,
     train_data: &Dataset,
     test_data: &Dataset,
     cfg: &TrainConfig,
     n: usize,
-    mut progress: Option<&mut dyn FnMut(usize, f64)>,
+    obs: Option<&mut dyn Observer>,
 ) -> Result<FleetResult> {
+    let mut null = NullObserver;
+    let obs = obs.unwrap_or(&mut null);
     let seeds = fleet_seeds(cfg, n);
     let mut runs = Vec::with_capacity(n);
     for (i, &seed) in seeds.iter().enumerate() {
         let mut run_cfg = cfg.clone();
         run_cfg.seed = seed;
-        let result = train(engine, train_data, test_data, &run_cfg)?;
-        if let Some(cb) = progress.as_deref_mut() {
-            cb(i, result.accuracy);
-        }
+        let mut quiet = QuietRuns::new(&mut *obs);
+        let (result, _state) = train_run(engine, train_data, test_data, &run_cfg, &mut quiet)?;
+        obs.on_run(i, result.accuracy);
         runs.push(result);
     }
     Ok(assemble(runs))
@@ -230,9 +234,12 @@ pub fn run_fleet(
 /// (PJRT) and plans that resolve to one run fall back to the sequential
 /// [`run_fleet`] path — same results either way, by construction.
 ///
-/// `progress` fires on the scheduler thread in completion order (run
+/// `obs` hooks fire on the scheduler thread in completion order (run
 /// indices arrive out of order under parallelism; the *results* are always
-/// assembled in seed order).
+/// assembled in seed order). Cancellation is polled on the scheduler
+/// thread and propagated to the workers, which notice at their own epoch
+/// boundaries — a cancelled fleet resolves to the typed
+/// [`Cancelled`](crate::coordinator::observer::Cancelled) error.
 pub fn run_fleet_parallel(
     factory: &BackendFactory,
     train_data: &Dataset,
@@ -240,8 +247,10 @@ pub fn run_fleet_parallel(
     cfg: &TrainConfig,
     n: usize,
     parallel: usize,
-    mut progress: Option<&mut dyn FnMut(usize, f64)>,
+    obs: Option<&mut dyn Observer>,
 ) -> Result<FleetResult> {
+    let mut null = NullObserver;
+    let obs = obs.unwrap_or(&mut null);
     let budget = fleet_budget(factory, parallel, n);
     if budget.runs_parallel <= 1 || n <= 1 {
         // Sequential fallback. Native engines still take their budgeted
@@ -252,7 +261,17 @@ pub fn run_fleet_parallel(
         } else {
             factory.spawn()?
         };
-        return run_fleet(engine.as_mut(), train_data, test_data, cfg, n, progress);
+        return run_fleet(engine.as_mut(), train_data, test_data, cfg, n, Some(obs));
+    }
+
+    // Worker-side cancellation poll: the scheduler owns the observer, so
+    // workers watch the shared stop flag (set on cancellation OR failure)
+    // at their epoch boundaries.
+    struct StopCheck<'a>(&'a AtomicBool);
+    impl Observer for StopCheck<'_> {
+        fn cancelled(&self) -> bool {
+            self.0.load(Ordering::Relaxed)
+        }
     }
 
     let seeds = fleet_seeds(cfg, n);
@@ -263,6 +282,7 @@ pub fn run_fleet_parallel(
 
     let next = AtomicUsize::new(0);
     let stop = AtomicBool::new(false);
+    let cancelled = AtomicBool::new(false);
     let (tx, rx) = std::sync::mpsc::channel::<(usize, Result<TrainResult>)>();
     let mut slots: Vec<Option<TrainResult>> = (0..n).map(|_| None).collect();
     let mut first_err: Option<(usize, anyhow::Error)> = None;
@@ -277,7 +297,14 @@ pub fn run_fleet_parallel(
                 }
                 let mut run_cfg = cfg.clone();
                 run_cfg.seed = seeds[i];
-                let res = train(worker.as_mut(), train_data, test_data, &run_cfg);
+                let res = train_run(
+                    worker.as_mut(),
+                    train_data,
+                    test_data,
+                    &run_cfg,
+                    &mut StopCheck(stop),
+                )
+                .map(|(r, _state)| r);
                 let failed = res.is_err();
                 if tx.send((i, res)).is_err() || failed {
                     break;
@@ -285,29 +312,46 @@ pub fn run_fleet_parallel(
             });
         }
         drop(tx);
-        // Stream results as they land: progress callback + ordered slots.
-        while let Ok((i, res)) = rx.recv() {
-            match res {
-                Ok(r) => {
-                    if let Some(cb) = progress.as_deref_mut() {
-                        cb(i, r.accuracy);
+        // Stream results as they land (observer hooks + ordered slots),
+        // polling the observer's cancellation flag between arrivals.
+        loop {
+            match rx.recv_timeout(std::time::Duration::from_millis(20)) {
+                Ok((i, res)) => match res {
+                    Ok(r) => {
+                        obs.on_run(i, r.accuracy);
+                        slots[i] = Some(r);
                     }
-                    slots[i] = Some(r);
-                }
-                Err(e) => {
-                    stop.store(true, Ordering::Relaxed);
-                    // Keep the failure of the lowest run index, like the
-                    // sequential path would have surfaced.
-                    let keep_existing = matches!(&first_err, Some((j, _)) if *j <= i);
-                    if !keep_existing {
-                        first_err = Some((i, e));
+                    Err(e) => {
+                        stop.store(true, Ordering::Relaxed);
+                        if crate::coordinator::observer::is_cancelled(&e) {
+                            // A worker noticing the stop flag is not a real
+                            // failure — record it as the cancellation it is.
+                            cancelled.store(true, Ordering::Relaxed);
+                            continue;
+                        }
+                        // Keep the failure of the lowest run index, like the
+                        // sequential path would have surfaced.
+                        let keep_existing = matches!(&first_err, Some((j, _)) if *j <= i);
+                        if !keep_existing {
+                            first_err = Some((i, e));
+                        }
+                    }
+                },
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    if obs.cancelled() {
+                        cancelled.store(true, Ordering::Relaxed);
+                        stop.store(true, Ordering::Relaxed);
                     }
                 }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
     });
     if let Some((i, e)) = first_err {
         return Err(e).with_context(|| format!("fleet run {i} failed"));
+    }
+    if cancelled.load(Ordering::Relaxed) || obs.cancelled() {
+        return Err(Cancelled.into());
     }
     let runs: Vec<TrainResult> = slots
         .into_iter()

@@ -4,16 +4,20 @@
 //! * [`lookahead`] — host-side Lookahead EMA (§3.4);
 //! * [`trainer`] — one training run under the paper's timing protocol (§2);
 //! * [`evaluator`] — multi-crop TTA inference (§3.5);
-//! * [`fleet`] — n-run statistical experiments (§5).
+//! * [`fleet`] — n-run statistical experiments (§5);
+//! * [`observer`] — typed lifecycle hooks + cooperative cancellation that
+//!   every entry point above reports through (the `api` job engine's feed).
 
 pub mod evaluator;
 pub mod fleet;
 pub mod lookahead;
+pub mod observer;
 pub mod schedule;
 pub mod trainer;
 
-pub use evaluator::{evaluate, evaluate_source, EvalOutput};
+pub use evaluator::{evaluate, evaluate_observed, evaluate_source, EvalOutput};
 pub use fleet::{fleet_budget, fleet_seeds, run_fleet, run_fleet_parallel, FleetResult};
 pub use lookahead::LookaheadState;
+pub use observer::{is_cancelled, Cancelled, NullObserver, Observer};
 pub use schedule::{AlphaSchedule, DecoupledHyper, Triangle};
-pub use trainer::{train, train_full, warmup, EpochLog, PhaseTimes, TrainResult};
+pub use trainer::{train, train_full, train_run, warmup, EpochLog, PhaseTimes, TrainResult};

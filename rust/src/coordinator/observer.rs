@@ -1,0 +1,158 @@
+//! Typed observation + cooperative cancellation for coordinator runs.
+//!
+//! The coordinator never prints: callers that want progress pass an
+//! [`Observer`] and the trainer/evaluator/fleet entry points report
+//! lifecycle moments through it — end-of-epoch logs, per-run fleet
+//! completions, human-facing log lines. The `api` layer's job engine
+//! forwards these hooks onto its typed event channel
+//! ([`crate::api::Event`]); the CLI renders that stream; benches and tests
+//! mostly pass [`NullObserver`].
+//!
+//! The same trait carries **cooperative cancellation**: long-running loops
+//! poll [`Observer::cancelled`] at their natural boundaries (epoch ends,
+//! eval batches, fleet run completions) and resolve to the typed
+//! [`Cancelled`] error, which the job engine maps to a terminal `error`
+//! event with message `"cancelled"`. Observation is passive — an observer
+//! must not influence RNG or numerics, so observed and unobserved runs are
+//! bit-identical.
+
+use crate::coordinator::trainer::EpochLog;
+
+/// Sink for coordinator lifecycle events plus a cancellation poll.
+///
+/// All hooks default to no-ops, so implementors opt into exactly the
+/// moments they care about. Hooks are invoked on the thread driving the
+/// run (for the concurrent fleet scheduler: the scheduler thread, in
+/// completion order).
+pub trait Observer {
+    /// One training epoch finished (fires per epoch, after any
+    /// end-of-epoch eval populated `log.val_acc`).
+    fn on_epoch(&mut self, log: &EpochLog) {
+        let _ = log;
+    }
+
+    /// One fleet run finished: `(run_index, final_accuracy)`. Run indices
+    /// arrive out of order under `--fleet-parallel`.
+    fn on_run(&mut self, run: usize, accuracy: f64) {
+        let _ = (run, accuracy);
+    }
+
+    /// A human-facing progress line (checkpoint written, budget banner).
+    fn on_log(&mut self, line: &str) {
+        let _ = line;
+    }
+
+    /// Cancellation poll — return `true` to stop the run at the next
+    /// epoch / eval-batch / fleet-run boundary. The run then fails with a
+    /// [`Cancelled`]-typed error.
+    fn cancelled(&self) -> bool {
+        false
+    }
+}
+
+/// The do-nothing observer (the default for benches, tests, examples).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullObserver;
+
+impl Observer for NullObserver {}
+
+/// Typed terminal error of a cancelled run: construct with
+/// `Err(Cancelled.into())`, detect with [`is_cancelled`] — so callers
+/// distinguish "the user asked us to stop" from real failures even after
+/// context layers were attached.
+#[derive(Clone, Copy, Debug)]
+pub struct Cancelled;
+
+/// The exact marker message [`Cancelled`] renders with. Deliberately
+/// distinctive (not plain `"cancelled"`) so [`is_cancelled`]'s chain scan
+/// cannot misclassify an unrelated error that happens to print
+/// "cancelled"; the job engine maps it to the wire message `"cancelled"`
+/// at the API boundary. (The vendored `anyhow` shim stores string chains,
+/// so a marker match is the strongest detection available — swap in real
+/// `anyhow` and this can become a `downcast_ref::<Cancelled>` scan.)
+pub const CANCELLED_MSG: &str = "airbench: job cancelled (cooperative)";
+
+impl std::fmt::Display for Cancelled {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(CANCELLED_MSG)
+    }
+}
+
+impl std::error::Error for Cancelled {}
+
+/// Whether `err` is (rooted in) a cooperative cancellation: some layer of
+/// its context chain is exactly the [`Cancelled`] marker.
+pub fn is_cancelled(err: &anyhow::Error) -> bool {
+    err.chain().any(|c| c == CANCELLED_MSG)
+}
+
+/// Adapter a fleet wraps around its observer when driving the per-run
+/// trainings: epoch-level events of individual runs are suppressed (a
+/// fleet reports per-*run* completions), log lines and the cancellation
+/// poll pass through.
+pub struct QuietRuns<'a> {
+    inner: &'a mut dyn Observer,
+}
+
+impl<'a> QuietRuns<'a> {
+    /// Wrap `inner` for the duration of one fleet run.
+    pub fn new(inner: &'a mut dyn Observer) -> QuietRuns<'a> {
+        QuietRuns { inner }
+    }
+}
+
+impl Observer for QuietRuns<'_> {
+    fn on_log(&mut self, line: &str) {
+        self.inner.on_log(line);
+    }
+
+    fn cancelled(&self) -> bool {
+        self.inner.cancelled()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cancelled_error_is_detectable() {
+        use anyhow::Context;
+        let r: anyhow::Result<()> = Err(Cancelled.into());
+        let e = r.context("fleet run 3 failed").unwrap_err();
+        assert!(is_cancelled(&e));
+        assert!(!is_cancelled(&anyhow::anyhow!("disk on fire")));
+    }
+
+    #[test]
+    fn quiet_runs_forwards_logs_and_cancellation_only() {
+        #[derive(Default)]
+        struct Probe {
+            epochs: usize,
+            logs: Vec<String>,
+        }
+        impl Observer for Probe {
+            fn on_epoch(&mut self, _log: &EpochLog) {
+                self.epochs += 1;
+            }
+            fn on_log(&mut self, line: &str) {
+                self.logs.push(line.to_string());
+            }
+            fn cancelled(&self) -> bool {
+                true
+            }
+        }
+        let mut p = Probe::default();
+        let mut q = QuietRuns::new(&mut p);
+        q.on_epoch(&EpochLog {
+            epoch: 0,
+            train_acc: 0.0,
+            train_loss: 0.0,
+            val_acc: None,
+        });
+        q.on_log("hello");
+        assert!(q.cancelled());
+        assert_eq!(p.epochs, 0, "epoch events must be suppressed");
+        assert_eq!(p.logs, vec!["hello".to_string()]);
+    }
+}

@@ -14,6 +14,7 @@ use anyhow::Result;
 use crate::config::TrainConfig;
 use crate::coordinator::evaluator::{evaluate, EvalOutput};
 use crate::coordinator::lookahead::LookaheadState;
+use crate::coordinator::observer::{Cancelled, NullObserver, Observer};
 use crate::coordinator::schedule::{AlphaSchedule, DecoupledHyper, Triangle};
 use crate::data::loader::Loader;
 use crate::data::pipeline::{BatchSource, Pipeline};
@@ -94,6 +95,21 @@ pub fn train_full(
     train_data: &Dataset,
     test_data: &Dataset,
     cfg: &TrainConfig,
+) -> Result<(TrainResult, ModelState)> {
+    train_run(engine, train_data, test_data, cfg, &mut NullObserver)
+}
+
+/// The observed trainer entry point: like [`train_full`], but reports each
+/// finished epoch through `obs` ([`Observer::on_epoch`]) and polls
+/// [`Observer::cancelled`] at every epoch boundary, failing with the typed
+/// [`Cancelled`] error when it trips. Observation is passive — results are
+/// bit-identical to the unobserved path.
+pub fn train_run(
+    engine: &mut dyn Backend,
+    train_data: &Dataset,
+    test_data: &Dataset,
+    cfg: &TrainConfig,
+    obs: &mut dyn Observer,
 ) -> Result<(TrainResult, ModelState)> {
     let t0 = Instant::now(); // first training-data access below
 
@@ -211,7 +227,11 @@ pub fn train_full(
                 epochs_to_target = Some((epoch + 1) as f64);
             }
         }
+        obs.on_epoch(&log);
         epoch_log.push(log);
+        if obs.cancelled() {
+            return Err(Cancelled.into());
+        }
         if step >= total_steps {
             break 'epochs;
         }

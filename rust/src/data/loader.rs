@@ -33,6 +33,15 @@ impl OrderPolicy {
             _ => None,
         }
     }
+
+    /// Canonical config spelling (inverse of [`OrderPolicy::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            OrderPolicy::Reshuffle => "reshuffle",
+            OrderPolicy::WithReplacement => "replacement",
+            OrderPolicy::Sequential => "sequential",
+        }
+    }
 }
 
 /// Batches per epoch under the drop-last policy — shared by [`Loader`] and

@@ -86,6 +86,72 @@ pub enum DataKind {
     CinicLike,
 }
 
+impl DataKind {
+    /// Parse a CLI / job spelling
+    /// (`cifar10|cifar100|imagenet|svhn|cinic`).
+    pub fn parse(s: &str) -> Option<DataKind> {
+        match s {
+            "cifar10" => Some(DataKind::Cifar10),
+            "cifar100" => Some(DataKind::Cifar100Like),
+            "imagenet" => Some(DataKind::ImagenetLike),
+            "svhn" => Some(DataKind::SvhnLike),
+            "cinic" => Some(DataKind::CinicLike),
+            _ => None,
+        }
+    }
+
+    /// Canonical spelling (inverse of [`DataKind::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DataKind::Cifar10 => "cifar10",
+            DataKind::Cifar100Like => "cifar100",
+            DataKind::ImagenetLike => "imagenet",
+            DataKind::SvhnLike => "svhn",
+            DataKind::CinicLike => "cinic",
+        }
+    }
+}
+
+/// Build the `(train, test)` datasets for `kind` at sizes `(n, m)` — the
+/// one dataset constructor [`Lab::data`] and the `api` job engine share,
+/// so a job submitted over the API trains on exactly the data the CLI
+/// would have used (real CIFAR-10 binaries when present on disk,
+/// deterministic synthetic distributions otherwise).
+pub fn make_data(kind: DataKind, n: usize, m: usize) -> (Dataset, Dataset) {
+    match kind {
+        DataKind::Cifar10 => {
+            if let (Some(tr), Some(te)) = (
+                cifar_bin::try_real_cifar10(true),
+                cifar_bin::try_real_cifar10(false),
+            ) {
+                (tr.head(n), te.head(m))
+            } else {
+                let cfg = synthetic::SynthConfig::default();
+                (
+                    synthetic::cifar_like(&cfg.clone().with_n(n), 0xC1FA, 0),
+                    synthetic::cifar_like(&cfg.with_n(m), 0xC1FA, 1),
+                )
+            }
+        }
+        DataKind::Cifar100Like => (
+            synthetic::cifar100_like(n, 0xC100, 0),
+            synthetic::cifar100_like(m, 0xC100, 1),
+        ),
+        DataKind::ImagenetLike => (
+            synthetic::imagenet_like(n, 0x1A6E, 0),
+            synthetic::imagenet_like(m, 0x1A6E, 1),
+        ),
+        DataKind::SvhnLike => (
+            synthetic::svhn_like(n, 0x54A8, 0),
+            synthetic::svhn_like(m, 0x54A8, 1),
+        ),
+        DataKind::CinicLike => (
+            synthetic::cinic_like(n, 0xC121, 0),
+            synthetic::cinic_like(m, 0xC121, 1),
+        ),
+    }
+}
+
 /// The experiment laboratory: backends + datasets behind one handle.
 pub struct Lab {
     /// Experiment scale knobs (`AIRBENCH_RUNS` / `AIRBENCH_TRAIN_N` /
@@ -200,39 +266,7 @@ impl Lab {
         if let Some(pair) = self.datasets.get(&key) {
             return pair.clone();
         }
-        let (n, m) = (self.scale.n_train, self.scale.n_test);
-        let pair = match kind {
-            DataKind::Cifar10 => {
-                if let (Some(tr), Some(te)) = (
-                    cifar_bin::try_real_cifar10(true),
-                    cifar_bin::try_real_cifar10(false),
-                ) {
-                    (tr.head(n), te.head(m))
-                } else {
-                    let cfg = synthetic::SynthConfig::default();
-                    (
-                        synthetic::cifar_like(&cfg.clone().with_n(n), 0xC1FA, 0),
-                        synthetic::cifar_like(&cfg.with_n(m), 0xC1FA, 1),
-                    )
-                }
-            }
-            DataKind::Cifar100Like => (
-                synthetic::cifar100_like(n, 0xC100, 0),
-                synthetic::cifar100_like(m, 0xC100, 1),
-            ),
-            DataKind::ImagenetLike => (
-                synthetic::imagenet_like(n, 0x1A6E, 0),
-                synthetic::imagenet_like(m, 0x1A6E, 1),
-            ),
-            DataKind::SvhnLike => (
-                synthetic::svhn_like(n, 0x54A8, 0),
-                synthetic::svhn_like(m, 0x54A8, 1),
-            ),
-            DataKind::CinicLike => (
-                synthetic::cinic_like(n, 0xC121, 0),
-                synthetic::cinic_like(m, 0xC121, 1),
-            ),
-        };
+        let pair = make_data(kind, self.scale.n_train, self.scale.n_test);
         self.datasets.insert(key, pair.clone());
         pair
     }
@@ -274,6 +308,20 @@ mod tests {
         let s = Scale::from_env();
         assert!(s.runs >= 1);
         assert!(s.n_train >= 1);
+    }
+
+    #[test]
+    fn data_kind_spellings_round_trip() {
+        for kind in [
+            DataKind::Cifar10,
+            DataKind::Cifar100Like,
+            DataKind::ImagenetLike,
+            DataKind::SvhnLike,
+            DataKind::CinicLike,
+        ] {
+            assert_eq!(DataKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(DataKind::parse("mnist"), None);
     }
 
     #[test]

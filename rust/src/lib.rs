@@ -23,6 +23,12 @@
 //! by `--backend auto|pjrt|native` (DESIGN.md §2). The [`bench`] module is
 //! the §3.7 measurement harness behind `airbench bench` (BENCHMARKS.md).
 //!
+//! The public programmatic surface is the [`api`] job layer (DESIGN.md
+//! §9): typed [`api::JobSpec`]s executed by an [`api::Engine`] that
+//! streams typed [`api::Event`]s with cancellation — the CLI is a thin
+//! client of it, and [`serve`] exposes the same surface as a
+//! newline-delimited-JSON daemon (`airbench serve`).
+//!
 //! # Quickstart
 //!
 //! Train the CPU-scale `bench` variant on the native backend (no
@@ -45,6 +51,7 @@
 
 #![warn(missing_docs)]
 
+pub mod api;
 pub mod bench;
 pub mod cli;
 pub mod config;
@@ -53,6 +60,7 @@ pub mod data;
 pub mod experiments;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod stats;
 pub mod tensor;
 pub mod util;

@@ -1,493 +1,125 @@
-//! `airbench` — CLI launcher for the Rust airbench stack.
+//! `airbench` — CLI launcher for the Rust airbench stack, as a **thin
+//! client of the job API** (DESIGN.md §9).
 //!
-//! Subcommands:
-//! * `train [key=value ...]` — one training run with per-epoch logging
-//!   (the paper's Listing 4 `main`), printing the final TTA accuracy and
-//!   the paper-protocol wall time.
-//! * `fleet --runs N [--parallel P] [key=value ...]` — an n-run
-//!   statistical experiment: mean/std/CI of final accuracy (paper §5
-//!   methodology). `--parallel` trains P runs concurrently on
-//!   factory-spawned workers under the global thread budget — per-run
-//!   results are bit-identical at every P (DESIGN.md §8).
-//! * `bench [--runs N] [--steps N] [--tag T]` — the §3.7 benchmark
-//!   harness: per-phase medians and seed-distribution stats, written as
-//!   `BENCH_<tag>.json` (see BENCHMARKS.md for protocol and schema).
-//!   `bench --fleet` times the same fleet at several parallelism levels
-//!   (the fleet-throughput phase, `airbench.fleet-bench/1` schema).
-//! * `info [--variant NAME]` — inspect the AOT manifest when artifacts are
-//!   built, else the native backend's built-in variant table.
+//! Every command builds a typed [`JobSpec`], submits it through
+//! [`Engine::submit`], and renders the resulting [`Event`] stream — as
+//! human-readable text by default, or as raw NDJSON with `--json` (one
+//! event object per line; the terminal `result` event carries the
+//! schema-validated `{"kind", "data"}` result envelope). The commands and
+//! the generated usage text come from one [`Command`] table, so help and
+//! dispatch cannot diverge.
 //!
-//! Config overrides are bare `key=value` pairs (see `config::TrainConfig`);
-//! `--config file.json` loads a base config first. `--data` picks the
-//! dataset distribution (cifar10 | cifar100 | imagenet | svhn | cinic).
-//! `--backend auto|pjrt|native` picks the execution backend (DESIGN.md §2):
-//! `auto` (default) uses the compiled PJRT path when artifacts + runtime
-//! exist and falls back to the pure-Rust native backend otherwise.
+//! Subcommands (see `airbench` with no arguments for the full flag list):
+//! * `train [key=value ...]` — one training run with per-epoch logging.
+//! * `eval --load ckpt.bin` — evaluate a saved checkpoint.
+//! * `fleet --runs N [--parallel P]` — an n-run statistical experiment.
+//! * `bench [--fleet]` — the §3.7 benchmark harness (BENCHMARKS.md).
+//! * `info [--variant NAME]` — inspect the AOT manifest / variant table.
+//! * `serve [--addr host:port] [--slots N]` — the long-lived job daemon:
+//!   newline-delimited JSON `JobSpec`s in, `Event` JSON out.
+//!
+//! Config resolution follows the documented precedence **CLI > env >
+//! config file > default** (`config::resolve`): bare `key=value` pairs
+//! and flag spellings (`--backend`, `--workers`, ...) form the CLI layer,
+//! `AIRBENCH_*` variables the env layer, `--config file.json` the file
+//! layer.
 
-use anyhow::{bail, Result};
+use std::path::PathBuf;
 
-use airbench::cli::Args;
-use airbench::config::TrainConfig;
-use airbench::coordinator::{evaluate, train_full, warmup};
-use airbench::experiments::{pct, DataKind, Lab};
-use airbench::runtime::Backend;
+use anyhow::{bail, Context, Result};
+
+use airbench::api::{
+    BenchJob, Engine, EngineConfig, EvalJob, Event, FleetBenchJob, FleetJob, InfoJob, JobResult,
+    JobSpec, TrainJob,
+};
+use airbench::cli::{find_command, Args, Command};
+use airbench::config::{process_env, ConfigLayers, TrainConfig};
+use airbench::experiments::{pct, DataKind, Scale};
+use airbench::util::json::{parse as parse_json, Json};
 use airbench::util::logging;
 
-fn parse_data_kind(s: &str) -> Result<DataKind> {
-    Ok(match s {
-        "cifar10" => DataKind::Cifar10,
-        "cifar100" => DataKind::Cifar100Like,
-        "imagenet" => DataKind::ImagenetLike,
-        "svhn" => DataKind::SvhnLike,
-        "cinic" => DataKind::CinicLike,
-        _ => bail!("unknown --data '{s}' (cifar10|cifar100|imagenet|svhn|cinic)"),
-    })
-}
+// ---------------------------------------------------------------------------
+// The command table: usage text AND dispatch are generated from these rows.
+// ---------------------------------------------------------------------------
 
-fn build_config(args: &Args, lab: &Lab) -> Result<TrainConfig> {
-    let mut cfg = match args.options.get("config") {
-        Some(path) => TrainConfig::load(std::path::Path::new(path))?,
-        None => TrainConfig {
-            epochs: lab.scale.epochs,
-            ..TrainConfig::default()
-        },
-    };
-    for (k, v) in &args.overrides {
-        cfg.set(k, v)?;
-    }
-    // Flag spellings of config keys:
-    // `--backend auto|pjrt|native` picks the execution backend;
-    // `--workers N` enables the parallel prefetching pipeline with N
-    // worker threads — bit-identical batches to the synchronous loader
-    // (DESIGN.md §5); `--prefetch-depth N` caps how many batches each
-    // worker runs ahead.
-    if let Some(b) = args.options.get("backend") {
-        cfg.set("backend", b)?;
-    }
-    if let Some(w) = args.options.get("workers") {
-        cfg.set("workers", w)?;
-    }
-    if let Some(d) = args.options.get("prefetch-depth") {
-        cfg.set("prefetch_depth", d)?;
-    }
-    Ok(cfg)
-}
+static COMMANDS: &[Command] = &[
+    Command {
+        name: "train",
+        summary: "one training run with per-epoch logging (paper Listing 4 main)",
+        run: cmd_train,
+    },
+    Command {
+        name: "eval",
+        summary: "evaluate a saved checkpoint (--load ckpt.bin; backend-portable)",
+        run: cmd_eval,
+    },
+    Command {
+        name: "fleet",
+        summary: "n-run statistical experiment (--runs N --parallel P; paper §5)",
+        run: cmd_fleet,
+    },
+    Command {
+        name: "bench",
+        summary: "§3.7 benchmark harness writing BENCH_<tag>.json (--fleet for the fleet phase)",
+        run: cmd_bench,
+    },
+    Command {
+        name: "info",
+        summary: "inspect the AOT manifest / built-in variant table (--variant NAME --hlo)",
+        run: cmd_info,
+    },
+    Command {
+        name: "serve",
+        summary: "job daemon: JobSpec JSON lines in (stdin or --addr), event JSON out",
+        run: cmd_serve,
+    },
+];
 
-fn lab_and_config(args: &Args) -> Result<(Lab, TrainConfig)> {
-    let mut lab = Lab::new()?;
-    let cfg = build_config(args, &lab)?;
-    // Precedence: an explicit `--backend`/`backend=` (anything but the
-    // `auto` default) beats AIRBENCH_BACKEND; plain `auto` defers to the
-    // env-derived kind Lab::new already read.
-    if cfg.backend != airbench::runtime::BackendKind::Auto {
-        lab.set_backend(cfg.backend);
-    }
-    Ok((lab, cfg))
-}
-
-fn cmd_train(args: &Args) -> Result<()> {
-    let (mut lab, mut cfg) = lab_and_config(args)?;
-    cfg.eval_every_epoch = true;
-    let kind = parse_data_kind(&args.opt("data", "cifar10"))?;
-    let (train_ds, test_ds) = lab.data(kind);
-    let engine = lab.backend(&cfg.variant)?;
-    eprintln!(
-        "[airbench] backend={} variant={} params={} compile={:.2}s train_n={} test_n={}",
-        engine.name(),
-        cfg.variant,
-        engine.variant().param_count,
-        engine.stats().compile_secs,
-        train_ds.len(),
-        test_ds.len()
-    );
-    if !args.flag("no-warmup") {
-        warmup(engine, &train_ds, &cfg)?;
-    }
-
-    logging::print_header(logging::TRAIN_COLUMNS);
-    let (result, state) = train_full(engine, &train_ds, &test_ds, &cfg)?;
-    for log in &result.epoch_log {
-        logging::print_row(
-            logging::TRAIN_COLUMNS,
-            &[
-                ("epoch", log.epoch.to_string()),
-                ("train_loss", logging::f4(log.train_loss as f32)),
-                ("train_acc", logging::f4(log.train_acc as f32)),
-                (
-                    "val_acc",
-                    log.val_acc.map(|a| logging::f4(a as f32)).unwrap_or_default(),
-                ),
-            ],
-            false,
-        );
-    }
-    logging::print_row(
-        logging::TRAIN_COLUMNS,
-        &[
-            ("epoch", "eval".to_string()),
-            ("tta_val_acc", logging::f4(result.accuracy as f32)),
-            ("total_time_seconds", format!("{:.3}", result.time_seconds)),
-        ],
-        true,
-    );
-    println!(
-        "final: acc={} (no-TTA {}), epochs={:.2}, steps={}, {:.3}s, {:.2} GFLOP",
-        pct(result.accuracy),
-        pct(result.accuracy_no_tta),
-        result.epochs_run,
-        result.steps_run,
-        result.time_seconds,
-        result.flops as f64 / 1e9,
-    );
-    if let Some(e) = result.epochs_to_target {
-        println!("epochs-to-target({}): {e:.1}", pct(cfg.target_acc));
-    }
-    if let Some(path) = args.options.get("save") {
-        state.save(std::path::Path::new(path))?;
-        println!("checkpoint written to {path}");
-    }
-    Ok(())
-}
-
-/// `airbench eval --load ckpt.bin [--data cifar10] [tta=2 ...]` —
-/// evaluate a saved checkpoint (checkpoint/hand-off workflow). Checkpoints
-/// are backend-portable: a model trained on pjrt evaluates on native and
-/// vice versa (shared `ModelState` layout, DESIGN.md §2).
-fn cmd_eval(args: &Args) -> Result<()> {
-    let (mut lab, cfg) = lab_and_config(args)?;
-    let kind = parse_data_kind(&args.opt("data", "cifar10"))?;
-    let Some(path) = args.options.get("load") else {
-        bail!("eval requires --load <checkpoint>");
-    };
-    let state = airbench::runtime::ModelState::load(std::path::Path::new(path))?;
-    let (_, test_ds) = lab.data(kind);
-    let engine = lab.backend(&cfg.variant)?;
-    state.validate(engine.variant())?;
-    let out = evaluate(engine, &state, &test_ds, cfg.tta)?;
-    println!(
-        "checkpoint {path}: acc={} (no-TTA {}) on {} test examples",
-        pct(out.accuracy),
-        pct(out.accuracy_identity),
-        test_ds.len()
-    );
-    Ok(())
-}
-
-fn cmd_fleet(args: &Args) -> Result<()> {
-    let (mut lab, cfg) = lab_and_config(args)?;
-    let kind = parse_data_kind(&args.opt("data", "cifar10"))?;
-    let runs = args.opt_usize("runs", lab.scale.runs)?;
-    // `--parallel N` / `--fleet-parallel N` (or the `fleet_parallel` config
-    // key / AIRBENCH_FLEET_PARALLEL env): concurrent runs. 0 = auto.
-    let parallel = match args
-        .options
-        .get("parallel")
-        .or_else(|| args.options.get("fleet-parallel"))
-    {
-        Some(v) => v
-            .parse()
-            .map_err(|_| anyhow::anyhow!("--parallel expects an integer, got '{v}'"))?,
-        None => cfg.fleet_parallel,
-    };
-    let (train_ds, test_ds) = lab.data(kind);
-    let factory = airbench::runtime::EngineSpec::new(lab.kind(), &cfg.variant)
-        .with_artifacts_dir(lab.artifacts_dir())
-        .factory()?;
-    // The one resolver the scheduler itself uses — what we print is what
-    // runs (env override, auto, PJRT sequential collapse included).
-    let budget = airbench::coordinator::fleet_budget(&factory, parallel, runs);
-    eprintln!(
-        "[fleet] backend={} parallel={} kernel_threads={} cores={}",
-        factory.kind().name(),
-        budget.runs_parallel,
-        budget.kernel_threads,
-        budget.cores,
-    );
-    let mut progress = |i: usize, acc: f64| {
-        eprintln!("[fleet] run {i}: {}", pct(acc));
-    };
-    let concurrent = budget.runs_parallel > 1 && runs > 1;
-    let fleet = if concurrent {
-        // Pay one-time costs (pool spawn, allocators) on a throwaway
-        // worker — native workers are an Arc clone, so this is free.
-        {
-            let mut w = factory.spawn()?;
-            warmup(w.as_mut(), &train_ds, &cfg)?;
-        }
-        airbench::coordinator::run_fleet_parallel(
-            &factory,
-            &train_ds,
-            &test_ds,
-            &cfg,
-            runs,
-            parallel,
-            Some(&mut progress),
-        )?
-    } else {
-        // Sequential: keep the (possibly compiled-once PJRT) worker alive
-        // across warmup and every run. Native engines take the budgeted
-        // kernel share so the banner above describes what actually runs.
-        let mut engine: Box<dyn airbench::runtime::Backend> = if factory.supports_parallel() {
-            factory.spawn_send(budget.kernel_threads)?
-        } else {
-            factory.spawn()?
-        };
-        warmup(engine.as_mut(), &train_ds, &cfg)?;
-        airbench::coordinator::run_fleet(
-            engine.as_mut(),
-            &train_ds,
-            &test_ds,
-            &cfg,
-            runs,
-            Some(&mut progress),
-        )?
-    };
-    let s = fleet.summary();
-    println!(
-        "fleet n={}: mean={} std={:.3}% ci95=±{:.3}% min={} max={} mean_time={:.2}s",
-        s.n,
-        pct(s.mean),
-        100.0 * s.std,
-        100.0 * s.ci95(),
-        pct(s.min),
-        pct(s.max),
-        fleet.mean_time_seconds(),
-    );
-    if let Some(path) = args.options.get("log") {
-        std::fs::write(path, fleet.to_json(&cfg).to_string())?;
-        println!("fleet log written to {path}");
-    }
-    Ok(())
-}
-
-/// `airbench bench [--backend B] [--variant V] [--runs N] [--steps N]
-/// [--warmup N] [--epochs E] [--workers N] [--tag T] [--out DIR]` — run the
-/// §3.7 harness and write `BENCH_<tag>.json` (BENCHMARKS.md).
-fn cmd_bench(args: &Args) -> Result<()> {
-    if args.flag("fleet") {
-        return cmd_bench_fleet(args);
-    }
-    let mut cfg = airbench::bench::BenchConfig::default();
-    if let Some(v) = args.options.get("variant") {
-        cfg.variant = v.clone();
-    }
-    let backend = args.opt("backend", "auto");
-    cfg.backend = airbench::runtime::BackendKind::parse(&backend)
-        .ok_or_else(|| anyhow::anyhow!("unknown --backend '{backend}' (auto|pjrt|native)"))?;
-    cfg.runs = args.opt_usize("runs", cfg.runs)?.max(1);
-    cfg.steps = args.opt_usize("steps", cfg.steps)?.max(1);
-    cfg.warmup_runs = args.opt_usize("warmup", cfg.warmup_runs)?;
-    cfg.epochs = args.opt_f64("epochs", cfg.epochs)?;
-    cfg.workers = args.opt_usize("workers", cfg.workers)?;
-    cfg.train_n = args.opt_usize("train-n", cfg.train_n)?;
-    cfg.test_n = args.opt_usize("test-n", cfg.test_n)?;
-    if let Some(t) = args.options.get("tag") {
-        cfg.tag = Some(t.clone());
-    }
-    if let Some(o) = args.options.get("out") {
-        cfg.out_dir = std::path::PathBuf::from(o);
-    }
-
-    eprintln!(
-        "[bench] backend={} variant={} runs={} steps={} warmup={} (§3.7 protocol)",
-        cfg.backend.name(),
-        cfg.variant,
-        cfg.runs,
-        cfg.steps,
-        cfg.warmup_runs
-    );
-    let report = airbench::bench::run(&cfg)?;
-    let row = |name: &str, d: &airbench::bench::Dist, unit: &str| {
-        let s = d.summary();
-        println!(
-            "  {name:<16} median {:>9.2}{unit}  mean {:>9.2}  std {:>7.2}  min {:>9.2}  max {:>9.2}  (n={})",
-            d.median(),
-            s.mean,
-            s.std,
-            s.min,
-            s.max,
-            s.n
-        );
-    };
-    println!(
-        "bench report: backend={} variant={} threads={} batch={}",
-        report.backend_name, report.variant, report.threads, report.batch_train
-    );
-    row("train_step_ms", &report.step_ms, "ms");
-    row("init_ms", &report.init_ms, "ms");
-    row("eval_ms", &report.eval_ms, "ms");
-    row("run_s", &report.run_s, "s");
-    row("run_train_s", &report.run_train_s, "s");
-    row("run_eval_s", &report.run_eval_s, "s");
-    println!(
-        "  step throughput: {:.2} GFLOP/s effective, {:.0} img/s",
-        report.train_gflops(),
-        report.batch_train as f64 / (report.step_ms.median() * 1e-3).max(1e-12),
-    );
-    let path = report.write(&cfg.out_dir)?;
-    println!("wrote {}", path.display());
-    Ok(())
-}
-
-/// `airbench bench --fleet [--fleet-runs N] [--parallel-levels 1,2,4]
-/// [--variant V] [--backend B] [--epochs E] [--tag T] [--out DIR]` — time
-/// the same n-run fleet at several `--fleet-parallel` levels and write a
-/// `BENCH_<tag>.json` with the `airbench.fleet-bench/1` schema.
-fn cmd_bench_fleet(args: &Args) -> Result<()> {
-    let d = airbench::bench::FleetBenchConfig::default();
-    let backend = args.opt("backend", "auto");
-    let cfg = airbench::bench::FleetBenchConfig {
-        variant: args.opt("variant", &d.variant),
-        backend: airbench::runtime::BackendKind::parse(&backend)
-            .ok_or_else(|| anyhow::anyhow!("unknown --backend '{backend}' (auto|pjrt|native)"))?,
-        tag: args.options.get("tag").cloned(),
-        n_runs: args.opt_usize("fleet-runs", d.n_runs)?.max(1),
-        parallel_levels: args.opt_usize_list("parallel-levels", &d.parallel_levels)?,
-        epochs: args.opt_f64("epochs", d.epochs)?,
-        train_n: args.opt_usize("train-n", d.train_n)?,
-        test_n: args.opt_usize("test-n", d.test_n)?,
-        out_dir: args
-            .options
-            .get("out")
-            .map(std::path::PathBuf::from)
-            .unwrap_or(d.out_dir),
-    };
-    eprintln!(
-        "[bench] fleet phase: backend={} variant={} n_runs={} levels={:?}",
-        cfg.backend.name(),
-        cfg.variant,
-        cfg.n_runs,
-        cfg.parallel_levels
-    );
-    let report = airbench::bench::run_fleet_bench(&cfg)?;
-    println!(
-        "fleet bench: backend={} variant={} n_runs={} cores={}",
-        report.backend_name, report.variant, cfg.n_runs, report.cores
-    );
-    for l in &report.levels {
-        println!(
-            "  parallel {:>2} (x{} kernel threads): {:>7.2}s wall, {:>6.2} runs/s, \
-             speedup {:>5.2}x, mean acc {:.4}, bit-identical: {}",
-            l.parallel,
-            l.kernel_threads,
-            l.wall_s,
-            l.runs_per_s,
-            l.speedup_vs_p1,
-            l.mean_acc,
-            l.bit_identical_to_p1
-        );
-    }
-    let path = report.write(&cfg.out_dir)?;
-    println!("wrote {}", path.display());
-    Ok(())
-}
-
-fn print_variant_row(name: &str, v: &airbench::runtime::Variant) {
-    println!(
-        "  {name:<20} params={:<9} batch={}x{} fwd={:.1} MFLOP/example",
-        v.param_count,
-        v.batch_train,
-        v.batch_eval,
-        v.fwd_flops_per_example as f64 / 1e6
-    );
-}
-
-fn cmd_info(args: &Args) -> Result<()> {
-    let dir = airbench::runtime::Manifest::default_dir();
-    let manifest = airbench::runtime::Manifest::load(&dir).ok();
-    match args.options.get("variant") {
-        None => {
-            match &manifest {
-                Some(m) => {
-                    println!("AOT variants in {:?}:", m.dir);
-                    for (name, v) in &m.variants {
-                        print_variant_row(name, v);
-                    }
-                }
-                None => {
-                    println!("no AOT artifacts in {dir:?} (run `make artifacts`)");
-                }
-            }
-            println!("native built-in variants (--backend native):");
-            for name in airbench::runtime::native::builtin_names() {
-                print_variant_row(
-                    name,
-                    &airbench::runtime::native::builtin_variant(name).unwrap(),
-                );
-            }
-        }
-        Some(name) => {
-            let v = match &manifest {
-                Some(m) if m.variants.contains_key(name) => m.variant(name)?.clone(),
-                _ => airbench::runtime::native::builtin_variant(name).ok_or_else(|| {
-                    anyhow::anyhow!("variant '{name}' is neither in a manifest nor built-in")
-                })?,
-            };
-            if args.flag("hlo") {
-                let Some(m) = &manifest else {
-                    bail!("--hlo needs built AOT artifacts (run `make artifacts`)");
-                };
-                let mv = m.variant(name)?;
-                for (tag, file) in [("train", &mv.train.file), ("eval", &mv.eval.file)] {
-                    let census = airbench::util::hlo_census::census_file(&m.dir.join(file))?;
-                    println!(
-                        "{tag} module: {} instructions, {} computations; top ops:",
-                        census.instructions, census.computations
-                    );
-                    for (op, n) in census.top(12) {
-                        println!("    {op:<24} {n}");
-                    }
-                }
-                return Ok(());
-            }
-            println!(
-                "variant {name}: widths={:?} convs_per_block={} residual={}",
-                v.hyper.widths, v.hyper.convs_per_block, v.hyper.residual
-            );
-            println!(
-                "  params={} fwd_flops/example={}",
-                v.param_count, v.fwd_flops_per_example
-            );
-            println!("  tensors:");
-            for t in &v.tensors {
-                println!(
-                    "    {:<20} {:?} role={:?} group={}",
-                    t.name, t.shape, t.role, t.group
-                );
-            }
-        }
-    }
-    Ok(())
-}
+const FLAG_HELP: &str = "\
+common flags:\n\
+  --json              emit the raw event stream as NDJSON (one JSON object\n\
+                      per line; the terminal `result` event carries the\n\
+                      schema-validated result envelope)\n\
+  --config file.json  config-file layer (precedence: CLI > env > config\n\
+                      file > default)\n\
+  --data KIND         dataset distribution (cifar10|cifar100|imagenet|svhn|cinic)\n\
+  --variant NAME      model variant (also config key `variant`)\n\
+  --backend KIND      execution backend (also config key `backend`):\n\
+                      auto = compiled PJRT when artifacts + runtime exist,\n\
+                      else the pure-Rust native backend; pjrt / native force one\n\
+  --workers N         augment batches on N background threads (0 = on the\n\
+                      train thread; output is bit-identical either way)\n\
+  --prefetch-depth N  batches each worker may run ahead (default 2)\n\
+  --seed N            RNG seed (config key `seed`)\n\
+\n\
+train:  --save ckpt.bin --no-warmup [key=value ...]\n\
+eval:   --load ckpt.bin\n\
+fleet:  --runs N --log fleet.json --parallel N (alias --fleet-parallel,\n\
+        config key `fleet_parallel`): concurrent runs budgeted so\n\
+        runs x kernel threads <= cores; 0 = auto. Per-run results are\n\
+        bit-identical at every value (DESIGN.md §8)\n\
+bench:  --runs --steps --warmup --epochs --tag --out --train-n --test-n\n\
+        (see BENCHMARKS.md); bench --fleet adds --fleet-runs N\n\
+        --parallel-levels 1,2,4\n\
+info:   --variant NAME --hlo\n\
+serve:  --addr host:port (TCP; default: stdin/stdout NDJSON session)\n\
+        --slots N concurrent job slots (default 0 = auto: one per core;\n\
+        each job's kernels get cores/slots threads)\n\
+\n\
+env:    AIRBENCH_BACKEND / AIRBENCH_VARIANT / AIRBENCH_EPOCHS /\n\
+        AIRBENCH_WORKERS / AIRBENCH_PREFETCH_DEPTH /\n\
+        AIRBENCH_FLEET_PARALLEL / AIRBENCH_SEED form the env layer;\n\
+        AIRBENCH_NATIVE_THREADS=N sets native kernel threads (outputs\n\
+        bit-identical at any value); AIRBENCH_TRAIN_N / AIRBENCH_TEST_N /\n\
+        AIRBENCH_RUNS scale the default datasets and fleet size";
 
 fn usage() {
-    eprintln!(
-        "usage: airbench <train|eval|fleet|bench|info> [--data cifar10] [--runs N] \
-         [--config file.json] [--backend auto|pjrt|native] [--workers N] \
-         [--prefetch-depth N] [--parallel N] [--save ckpt.bin] [--load ckpt.bin] \
-         [--log fleet.json] [--hlo] [key=value ...]\n       airbench --version\n\
-         \n\
-         bench               run the §3.7 benchmark harness and write \
-         BENCH_<tag>.json (options: --runs --steps --warmup --epochs \
-         --tag --out --train-n --test-n; see BENCHMARKS.md)\n\
-         bench --fleet       fleet-throughput phase: time the same n-run \
-         fleet at several parallelism levels (--fleet-runs N \
-         --parallel-levels 1,2,4) and write a fleet-schema BENCH_<tag>.json\n\
-         --backend KIND      execution backend (also config key `backend`): \
-         auto = compiled PJRT when artifacts + runtime exist, else the \
-         pure-Rust native backend; pjrt / native force one\n\
-         --workers N         augment batches on N background threads \
-         (0 = on the train thread; output is bit-identical either way)\n\
-         --prefetch-depth N  batches each worker may run ahead (default 2)\n\
-         --parallel N        (fleet; alias --fleet-parallel, config key \
-         `fleet_parallel`) concurrent runs, budgeted so runs x kernel \
-         threads <= cores; 0 = auto. Per-run results are bit-identical \
-         at every value\n\
-         \n\
-         env: AIRBENCH_BACKEND=auto|pjrt|native, AIRBENCH_NATIVE_THREADS=N \
-         (native kernel threads; outputs bit-identical at any value), \
-         AIRBENCH_FLEET_PARALLEL=N (fleet auto-parallelism override)"
-    );
+    eprintln!("usage: airbench <command> [--flags] [key=value ...]\n       airbench --version\n");
+    eprintln!("commands:");
+    for c in COMMANDS {
+        eprintln!("  {:<8} {}", c.name, c.summary);
+    }
+    eprintln!("\n{FLAG_HELP}");
 }
 
 fn main() -> Result<()> {
@@ -496,15 +128,500 @@ fn main() -> Result<()> {
         println!("airbench {}", airbench::version());
         return Ok(());
     }
-    match args.command.as_deref() {
-        Some("train") => cmd_train(&args),
-        Some("eval") => cmd_eval(&args),
-        Some("fleet") => cmd_fleet(&args),
-        Some("bench") => cmd_bench(&args),
-        Some("info") => cmd_info(&args),
-        _ => {
+    match args.command.as_deref().and_then(|name| find_command(COMMANDS, name)) {
+        Some(cmd) => (cmd.run)(&args),
+        None => {
             usage();
             std::process::exit(2);
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spec building (the one config resolver + flag spellings)
+// ---------------------------------------------------------------------------
+
+/// Resolve the run config for this invocation: defaults (epoch budget from
+/// the env scale) < `--config file.json` < `AIRBENCH_*` env < CLI
+/// (`key=value` overrides, then flag spellings — the flag wins when both
+/// are given).
+fn resolved_config(args: &Args) -> Result<TrainConfig> {
+    let scale = Scale::from_env();
+    let base = TrainConfig {
+        epochs: scale.epochs,
+        ..TrainConfig::default()
+    };
+    let file_json = match args.options.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading config file {path}"))?;
+            Some(parse_json(&text).with_context(|| format!("parsing config file {path}"))?)
+        }
+        None => None,
+    };
+    let mut cli: Vec<(String, String)> = args.overrides.clone();
+    for (flag, key) in [
+        ("variant", "variant"),
+        ("backend", "backend"),
+        ("epochs", "epochs"),
+        ("workers", "workers"),
+        ("prefetch-depth", "prefetch_depth"),
+        ("parallel", "fleet_parallel"),
+        ("fleet-parallel", "fleet_parallel"),
+        ("seed", "seed"),
+    ] {
+        if let Some(v) = args.options.get(flag) {
+            cli.push((key.to_string(), v.clone()));
+        }
+    }
+    TrainConfig::resolve(ConfigLayers {
+        base,
+        file: file_json.as_ref(),
+        env: &process_env,
+        cli: &cli,
+    })
+}
+
+fn data_kind(args: &Args) -> Result<DataKind> {
+    let s = args.opt("data", "cifar10");
+    DataKind::parse(&s)
+        .ok_or_else(|| anyhow::anyhow!("unknown --data '{s}' (cifar10|cifar100|imagenet|svhn|cinic)"))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = resolved_config(args)?;
+    cfg.eval_every_epoch = true;
+    let spec = JobSpec::Train(TrainJob {
+        config: cfg,
+        data: data_kind(args)?,
+        train_n: None,
+        test_n: None,
+        warmup: !args.flag("no-warmup"),
+        save: args.options.get("save").map(PathBuf::from),
+    });
+    run_and_render(args, spec)
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = resolved_config(args)?;
+    let Some(path) = args.options.get("load") else {
+        bail!("eval requires --load <checkpoint>");
+    };
+    let spec = JobSpec::Eval(EvalJob {
+        config: cfg,
+        data: data_kind(args)?,
+        load: PathBuf::from(path),
+        test_n: None,
+    });
+    run_and_render(args, spec)
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let cfg = resolved_config(args)?;
+    let runs = args.opt_usize("runs", Scale::from_env().runs)?;
+    let spec = JobSpec::Fleet(FleetJob {
+        config: cfg,
+        data: data_kind(args)?,
+        runs: Some(runs),
+        parallel: None, // the resolver already folded --parallel into the config
+        train_n: None,
+        test_n: None,
+        warmup: true,
+        log: args.options.get("log").map(PathBuf::from),
+    });
+    run_and_render(args, spec)
+}
+
+fn parse_backend_flag(args: &Args) -> Result<airbench::runtime::BackendKind> {
+    let backend = args.opt("backend", "auto");
+    airbench::runtime::BackendKind::parse(&backend)
+        .ok_or_else(|| anyhow::anyhow!("unknown --backend '{backend}' (auto|pjrt|native)"))
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    if args.flag("fleet") {
+        return cmd_bench_fleet(args);
+    }
+    let d = airbench::bench::BenchConfig::default();
+    let config = airbench::bench::BenchConfig {
+        variant: args.opt("variant", &d.variant),
+        backend: parse_backend_flag(args)?,
+        tag: args.options.get("tag").cloned(),
+        warmup_runs: args.opt_usize("warmup", d.warmup_runs)?,
+        runs: args.opt_usize("runs", d.runs)?.max(1),
+        steps: args.opt_usize("steps", d.steps)?.max(1),
+        epochs: args.opt_f64("epochs", d.epochs)?,
+        train_n: args.opt_usize("train-n", d.train_n)?,
+        test_n: args.opt_usize("test-n", d.test_n)?,
+        workers: args.opt_usize("workers", d.workers)?,
+        out_dir: args.options.get("out").map(PathBuf::from).unwrap_or(d.out_dir),
+    };
+    run_and_render(args, JobSpec::Bench(BenchJob { config, write: true }))
+}
+
+fn cmd_bench_fleet(args: &Args) -> Result<()> {
+    let d = airbench::bench::FleetBenchConfig::default();
+    let config = airbench::bench::FleetBenchConfig {
+        variant: args.opt("variant", &d.variant),
+        backend: parse_backend_flag(args)?,
+        tag: args.options.get("tag").cloned(),
+        n_runs: args.opt_usize("fleet-runs", d.n_runs)?.max(1),
+        parallel_levels: args.opt_usize_list("parallel-levels", &d.parallel_levels)?,
+        epochs: args.opt_f64("epochs", d.epochs)?,
+        train_n: args.opt_usize("train-n", d.train_n)?,
+        test_n: args.opt_usize("test-n", d.test_n)?,
+        out_dir: args.options.get("out").map(PathBuf::from).unwrap_or(d.out_dir),
+    };
+    run_and_render(args, JobSpec::FleetBench(FleetBenchJob { config, write: true }))
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let spec = JobSpec::Info(InfoJob {
+        variant: args.options.get("variant").cloned(),
+        hlo: args.flag("hlo"),
+    });
+    run_and_render(args, spec)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let engine = Engine::new(EngineConfig {
+        job_slots: args.opt_usize("slots", 0)?,
+        ..EngineConfig::default()
+    });
+    if let Some(addr) = args.options.get("addr") {
+        let listener = std::net::TcpListener::bind(addr)
+            .with_context(|| format!("binding serve address {addr}"))?;
+        eprintln!(
+            "[serve] listening on {} ({} job slots)",
+            listener.local_addr()?,
+            engine.job_slots()
+        );
+        airbench::serve::serve_tcp(&engine, listener)
+    } else {
+        eprintln!(
+            "[serve] reading newline-delimited JobSpec JSON from stdin ({} job slots)",
+            engine.job_slots()
+        );
+        let stats = airbench::serve::serve_stdin(&engine)?;
+        eprintln!(
+            "[serve] session done: {} submitted, {} rejected, {} cancelled",
+            stats.submitted, stats.rejected, stats.cancelled
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Event rendering (the thin-client half: no coordinator calls anywhere here)
+// ---------------------------------------------------------------------------
+
+/// Submit `spec` on a fresh one-slot engine and render its event stream.
+fn run_and_render(args: &Args, spec: JobSpec) -> Result<()> {
+    let engine = Engine::new(EngineConfig::default());
+    let handle = engine.submit(spec);
+    let json = args.flag("json");
+    let mut header_printed = false;
+    let mut failure: Option<String> = None;
+    for ev in handle.events() {
+        if json {
+            println!("{}", ev.to_json().to_string());
+            if let Event::Error { message, .. } = &ev {
+                failure = Some(message.clone());
+            }
+            continue;
+        }
+        match &ev {
+            Event::Queued { .. } | Event::Started { .. } => {}
+            // Same stream split as the pre-API CLI: bracketed banner /
+            // progress lines ("[airbench] ...", "[fleet] ...") go to
+            // stderr; result confirmations ("checkpoint written to ...",
+            // "fleet log written to ...") go to stdout.
+            Event::Log { line, .. } => {
+                if line.starts_with('[') {
+                    eprintln!("{line}");
+                } else {
+                    println!("{line}");
+                }
+            }
+            Event::Epoch {
+                epoch,
+                train_loss,
+                train_acc,
+                val_acc,
+                ..
+            } => {
+                if !header_printed {
+                    logging::print_header(logging::TRAIN_COLUMNS);
+                    header_printed = true;
+                }
+                logging::print_row(
+                    logging::TRAIN_COLUMNS,
+                    &[
+                        ("epoch", epoch.to_string()),
+                        ("train_loss", logging::f4(*train_loss as f32)),
+                        ("train_acc", logging::f4(*train_acc as f32)),
+                        (
+                            "val_acc",
+                            val_acc.map(|a| logging::f4(a as f32)).unwrap_or_default(),
+                        ),
+                    ],
+                    false,
+                );
+            }
+            Event::Run { run, accuracy, .. } => {
+                eprintln!("[fleet] run {run}: {}", pct(*accuracy));
+            }
+            Event::Result { result, .. } => render_result(result),
+            Event::Error { message, .. } => failure = Some(message.clone()),
+        }
+    }
+    match failure {
+        Some(m) => bail!("{m}"),
+        None => Ok(()),
+    }
+}
+
+fn render_result(result: &JobResult) {
+    match result {
+        JobResult::Train { result, config, .. } => {
+            logging::print_row(
+                logging::TRAIN_COLUMNS,
+                &[
+                    ("epoch", "eval".to_string()),
+                    ("tta_val_acc", logging::f4(result.accuracy as f32)),
+                    ("total_time_seconds", format!("{:.3}", result.time_seconds)),
+                ],
+                true,
+            );
+            println!(
+                "final: acc={} (no-TTA {}), epochs={:.2}, steps={}, {:.3}s, {:.2} GFLOP",
+                pct(result.accuracy),
+                pct(result.accuracy_no_tta),
+                result.epochs_run,
+                result.steps_run,
+                result.time_seconds,
+                result.flops as f64 / 1e9,
+            );
+            if let Some(e) = result.epochs_to_target {
+                println!("epochs-to-target({}): {e:.1}", pct(config.target_acc));
+            }
+        }
+        JobResult::Eval {
+            accuracy,
+            accuracy_no_tta,
+            n_test,
+            checkpoint,
+            ..
+        } => {
+            println!(
+                "checkpoint {}: acc={} (no-TTA {}) on {} test examples",
+                checkpoint.display(),
+                pct(*accuracy),
+                pct(*accuracy_no_tta),
+                n_test
+            );
+        }
+        JobResult::Fleet { result, .. } => {
+            let s = result.summary();
+            println!(
+                "fleet n={}: mean={} std={:.3}% ci95=±{:.3}% min={} max={} mean_time={:.2}s",
+                s.n,
+                pct(s.mean),
+                100.0 * s.std,
+                100.0 * s.ci95(),
+                pct(s.min),
+                pct(s.max),
+                result.mean_time_seconds(),
+            );
+        }
+        JobResult::Bench { report, path } => {
+            let row = |name: &str, d: &airbench::bench::Dist, unit: &str| {
+                let s = d.summary();
+                println!(
+                    "  {name:<16} median {:>9.2}{unit}  mean {:>9.2}  std {:>7.2}  min {:>9.2}  max {:>9.2}  (n={})",
+                    d.median(),
+                    s.mean,
+                    s.std,
+                    s.min,
+                    s.max,
+                    s.n
+                );
+            };
+            println!(
+                "bench report: backend={} variant={} threads={} batch={}",
+                report.backend_name, report.variant, report.threads, report.batch_train
+            );
+            row("train_step_ms", &report.step_ms, "ms");
+            row("init_ms", &report.init_ms, "ms");
+            row("eval_ms", &report.eval_ms, "ms");
+            row("run_s", &report.run_s, "s");
+            row("run_train_s", &report.run_train_s, "s");
+            row("run_eval_s", &report.run_eval_s, "s");
+            println!(
+                "  step throughput: {:.2} GFLOP/s effective, {:.0} img/s",
+                report.train_gflops(),
+                report.batch_train as f64 / (report.step_ms.median() * 1e-3).max(1e-12),
+            );
+            if let Some(p) = path {
+                println!("wrote {}", p.display());
+            }
+        }
+        JobResult::FleetBench { report, path } => {
+            println!(
+                "fleet bench: backend={} variant={} n_runs={} cores={}",
+                report.backend_name, report.variant, report.config.n_runs, report.cores
+            );
+            for l in &report.levels {
+                println!(
+                    "  parallel {:>2} (x{} kernel threads): {:>7.2}s wall, {:>6.2} runs/s, \
+                     speedup {:>5.2}x, mean acc {:.4}, bit-identical: {}",
+                    l.parallel,
+                    l.kernel_threads,
+                    l.wall_s,
+                    l.runs_per_s,
+                    l.speedup_vs_p1,
+                    l.mean_acc,
+                    l.bit_identical_to_p1
+                );
+            }
+            if let Some(p) = path {
+                println!("wrote {}", p.display());
+            }
+        }
+        JobResult::Info { data } => render_info(data),
+    }
+}
+
+fn jstr<'a>(j: &'a Json, key: &str) -> &'a str {
+    j.get(key).and_then(|v| v.as_str()).unwrap_or("?")
+}
+
+fn jnum(j: &Json, key: &str) -> f64 {
+    j.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0)
+}
+
+fn render_info(data: &Json) {
+    let manifest = data.get("manifest").and_then(|v| v.as_bool()).unwrap_or(false);
+    let variants: &[Json] = data.get("variants").and_then(|v| v.as_arr()).unwrap_or(&[]);
+    // A single entry carrying "widths" is the detail shape.
+    if variants.len() == 1 && variants[0].opt("widths").is_some() {
+        let v = &variants[0];
+        println!(
+            "variant {}: widths={:?} convs_per_block={} residual={}",
+            jstr(v, "name"),
+            v.get("widths").and_then(|w| w.as_usize_vec()).unwrap_or_default(),
+            jnum(v, "convs_per_block") as usize,
+            v.get("residual").and_then(|b| b.as_bool()).unwrap_or(false)
+        );
+        println!(
+            "  params={} fwd_mflops/example={:.1}",
+            jnum(v, "params") as u64,
+            jnum(v, "fwd_mflops_per_example")
+        );
+        println!("  tensors:");
+        for t in v.get("tensors").and_then(|t| t.as_arr()).unwrap_or(&[]) {
+            println!(
+                "    {:<20} {:?} role={} group={}",
+                jstr(t, "name"),
+                t.get("shape").and_then(|s| s.as_usize_vec()).unwrap_or_default(),
+                jstr(t, "role"),
+                jstr(t, "group")
+            );
+        }
+        if let Some(hlo) = data.opt("hlo") {
+            for tag in ["train", "eval"] {
+                if let Some(m) = hlo.opt(tag) {
+                    println!(
+                        "{tag} module: {} instructions, {} computations; top ops:",
+                        jnum(m, "instructions") as u64,
+                        jnum(m, "computations") as u64
+                    );
+                    for op in m.get("top_ops").and_then(|t| t.as_arr()).unwrap_or(&[]) {
+                        println!("    {:<24} {}", jstr(op, "op"), jnum(op, "count") as u64);
+                    }
+                }
+            }
+        }
+        return;
+    }
+    let print_rows = |source: &str| {
+        for v in variants.iter().filter(|v| jstr(v, "source") == source) {
+            println!(
+                "  {:<20} params={:<9} batch={}x{} fwd={:.1} MFLOP/example",
+                jstr(v, "name"),
+                jnum(v, "params") as u64,
+                jnum(v, "batch_train") as u64,
+                jnum(v, "batch_eval") as u64,
+                jnum(v, "fwd_mflops_per_example")
+            );
+        }
+    };
+    if manifest {
+        println!("AOT variants in {}:", jstr(data, "artifacts_dir"));
+        print_rows("manifest");
+    } else {
+        println!(
+            "no AOT artifacts in {} (run `make artifacts`)",
+            jstr(data, "artifacts_dir")
+        );
+    }
+    println!("native built-in variants (--backend native):");
+    print_rows("native");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_listed_command_dispatches() {
+        assert!(!COMMANDS.is_empty());
+        for c in COMMANDS {
+            let found = find_command(COMMANDS, c.name)
+                .unwrap_or_else(|| panic!("listed command '{}' does not dispatch", c.name));
+            assert!(
+                std::ptr::eq(found, c),
+                "dispatch for '{}' resolves to a different entry",
+                c.name
+            );
+            assert!(!c.summary.is_empty(), "'{}' has no usage summary", c.name);
+        }
+        assert!(find_command(COMMANDS, "frobnicate").is_none());
+    }
+
+    #[test]
+    fn command_names_are_unique() {
+        let mut names: Vec<&str> = COMMANDS.iter().map(|c| c.name).collect();
+        names.sort_unstable();
+        let before = names.len();
+        names.dedup();
+        assert_eq!(names.len(), before, "duplicate command names in the table");
+    }
+
+    #[test]
+    fn flag_spellings_resolve_into_the_config() {
+        let args = Args::parse(
+            "train --backend native --workers 3 --seed 9 epochs=2"
+                .split_whitespace()
+                .map(str::to_string),
+        )
+        .unwrap();
+        let cfg = resolved_config(&args).unwrap();
+        assert_eq!(cfg.backend, airbench::runtime::BackendKind::Native);
+        assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.epochs, 2.0);
+    }
+
+    #[test]
+    fn flag_beats_bare_override() {
+        let args = Args::parse(
+            "train --backend native backend=pjrt"
+                .split_whitespace()
+                .map(str::to_string),
+        )
+        .unwrap();
+        let cfg = resolved_config(&args).unwrap();
+        assert_eq!(cfg.backend, airbench::runtime::BackendKind::Native);
     }
 }

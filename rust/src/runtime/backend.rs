@@ -370,6 +370,26 @@ impl BackendFactory {
         self.kind == BackendKind::Native
     }
 
+    /// The resolved native core (`None` for PJRT factories) — the handle
+    /// the `api` job engine caches across jobs, so a variant is resolved
+    /// once per engine rather than once per submitted job.
+    pub fn native_shared(&self) -> Option<Arc<NativeShared>> {
+        self.shared.clone()
+    }
+
+    /// Rebuild a native factory from a previously resolved core (inverse
+    /// of [`BackendFactory::native_shared`]): resolve once, spawn many —
+    /// across jobs, not just within one fleet.
+    pub fn from_native_shared(spec: EngineSpec, shared: Arc<NativeShared>) -> BackendFactory {
+        BackendFactory {
+            kind: BackendKind::Native,
+            variant: shared.variant().clone(),
+            spec,
+            shared: Some(shared),
+            cached_pjrt: RefCell::new(None),
+        }
+    }
+
     /// A backend worker for same-thread use.
     pub fn spawn(&self) -> Result<Box<dyn Backend>> {
         match self.kind {

@@ -1,0 +1,233 @@
+//! `airbench serve` — the long-lived job daemon.
+//!
+//! A serve session is a line protocol over any byte stream (DESIGN.md §9):
+//! the client writes one JSON [`JobSpec`] per line (NDJSON) and reads one
+//! JSON [`Event`] per line back. Events of concurrent jobs interleave on
+//! the output — each carries its `"job"` id — and every job's own events
+//! keep their `queued -> started -> ... -> result | error` order. Two
+//! transports share the implementation:
+//!
+//! * **stdin/stdout** ([`serve_stdin`]) — `airbench serve` with no
+//!   `--addr`; the session ends when stdin closes and all jobs drained
+//!   (the CI smoke leg pipes one job through this path);
+//! * **TCP** ([`serve_tcp`]) — `airbench serve --addr host:port`; one
+//!   session per connection, all sharing the engine's slot budget.
+//!
+//! Besides job specs, a session accepts one control message:
+//! `{"job": "cancel", "id": N}` requests cooperative cancellation of job
+//! `N` (acknowledged with a `log` event; the job then terminates with an
+//! `error` event whose message is `"cancelled"`). Malformed lines are
+//! answered with an `error` event carrying `"job": 0` (the reserved
+//! session-level id) — the session itself keeps going.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::api::{CancelToken, Engine, Event, JobSpec};
+use crate::util::json::{parse, Json};
+
+/// What one serve session processed.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SessionStats {
+    /// Jobs accepted and submitted to the engine.
+    pub submitted: usize,
+    /// Lines rejected (malformed JSON, unknown job kind, bad cancel id).
+    pub rejected: usize,
+    /// Cancel control messages honored.
+    pub cancelled: usize,
+}
+
+/// Write one JSON line, best-effort (a gone client must not kill the job).
+fn write_line<W: Write>(out: &Mutex<W>, j: &Json) {
+    let mut g = out.lock().unwrap();
+    let _ = writeln!(g, "{}", j.to_string());
+    let _ = g.flush();
+}
+
+fn session_error<W: Write>(out: &Mutex<W>, job: u64, message: &str) {
+    write_line(
+        out,
+        &Event::Error {
+            job,
+            message: message.to_string(),
+        }
+        .to_json(),
+    );
+}
+
+/// Reap forwarder threads whose job already terminated, dropping their
+/// cancel-token entries — keeps a long-lived session's bookkeeping
+/// proportional to in-flight jobs, not to jobs ever served.
+fn reap_finished(
+    forwarders: &mut Vec<(u64, std::thread::JoinHandle<()>)>,
+    cancels: &mut BTreeMap<u64, CancelToken>,
+) {
+    let mut i = 0;
+    while i < forwarders.len() {
+        if forwarders[i].1.is_finished() {
+            let (id, handle) = forwarders.swap_remove(i);
+            let _ = handle.join();
+            cancels.remove(&id);
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Run one serve session: read newline-delimited [`JobSpec`] JSON from
+/// `input`, submit each to `engine`, and stream every job's [`Event`]s as
+/// JSON lines to `output` (shared with per-job forwarder threads, hence
+/// the `Arc<Mutex<W>>`). Returns when `input` is exhausted **and** every
+/// submitted job has terminated.
+///
+/// In-flight jobs per session are bounded (a multiple of the engine's job
+/// slots): beyond the bound the session stops reading — natural
+/// backpressure on the stream — until jobs drain, so a client flooding
+/// specs cannot accumulate unbounded queued-job threads.
+pub fn run_session<R: BufRead, W: Write + Send + 'static>(
+    engine: &Engine,
+    input: R,
+    output: Arc<Mutex<W>>,
+) -> Result<SessionStats> {
+    let mut stats = SessionStats::default();
+    let mut forwarders: Vec<(u64, std::thread::JoinHandle<()>)> = Vec::new();
+    let mut cancels: BTreeMap<u64, CancelToken> = BTreeMap::new();
+    let max_in_flight = engine.job_slots().saturating_mul(8).max(32);
+
+    for line in input.lines() {
+        let line = line.context("reading the job stream")?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = match parse(line) {
+            Ok(j) => j,
+            Err(e) => {
+                stats.rejected += 1;
+                session_error(&output, 0, &format!("invalid JSON line: {e:#}"));
+                continue;
+            }
+        };
+        // Control message: {"job": "cancel", "id": N}.
+        if j.opt("job").and_then(|v| v.as_str().ok()) == Some("cancel") {
+            let id = j.opt("id").and_then(|v| v.as_f64().ok()).map(|x| x as u64);
+            match id.and_then(|id| cancels.get(&id).map(|t| (id, t.clone()))) {
+                Some((id, token)) => {
+                    token.cancel();
+                    stats.cancelled += 1;
+                    write_line(
+                        &output,
+                        &Event::Log {
+                            job: id,
+                            line: "cancel requested".to_string(),
+                        }
+                        .to_json(),
+                    );
+                }
+                None => {
+                    // Rejections always answer on the reserved session id 0
+                    // — never on a client-supplied id, which may collide
+                    // with a real (or future) job's event stream.
+                    stats.rejected += 1;
+                    session_error(
+                        &output,
+                        0,
+                        "cancel needs the 'id' of a job submitted in this session",
+                    );
+                }
+            }
+            continue;
+        }
+        match JobSpec::from_json(&j) {
+            Err(e) => {
+                stats.rejected += 1;
+                session_error(&output, 0, &format!("bad job spec: {e:#}"));
+            }
+            Ok(spec) => {
+                // Backpressure: stop reading until in-flight jobs drain.
+                reap_finished(&mut forwarders, &mut cancels);
+                while forwarders.len() >= max_in_flight {
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                    reap_finished(&mut forwarders, &mut cancels);
+                }
+                let handle = engine.submit(spec);
+                let id = handle.id();
+                cancels.insert(id, handle.cancel_token());
+                stats.submitted += 1;
+                let out = Arc::clone(&output);
+                forwarders.push((
+                    id,
+                    std::thread::spawn(move || {
+                        for ev in handle.events() {
+                            write_line(&out, &ev.to_json());
+                        }
+                    }),
+                ));
+            }
+        }
+    }
+    // Input closed: drain every job before returning.
+    for (_id, f) in forwarders {
+        let _ = f.join();
+    }
+    Ok(stats)
+}
+
+/// Serve on stdin/stdout until stdin closes and all jobs drain.
+pub fn serve_stdin(engine: &Engine) -> Result<SessionStats> {
+    let stdin = std::io::stdin();
+    let output = Arc::new(Mutex::new(std::io::stdout()));
+    run_session(engine, stdin.lock(), output)
+}
+
+/// Serve on a TCP listener, one session per connection, forever. Sessions
+/// share `engine` (and therefore its job slots and caches); per-connection
+/// failures are logged to stderr and do not stop the daemon.
+pub fn serve_tcp(engine: &Engine, listener: TcpListener) -> Result<()> {
+    std::thread::scope(|s| {
+        for conn in listener.incoming() {
+            let stream = match conn {
+                Ok(st) => st,
+                Err(e) => {
+                    eprintln!("[serve] accept failed: {e}");
+                    continue;
+                }
+            };
+            let peer = stream
+                .peer_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "?".to_string());
+            let engine = &*engine;
+            s.spawn(move || {
+                eprintln!("[serve] client connected: {peer}");
+                let reader = match stream.try_clone() {
+                    Ok(r) => BufReader::new(r),
+                    Err(e) => {
+                        eprintln!("[serve] {peer}: cannot clone stream: {e}");
+                        return;
+                    }
+                };
+                let writer = Arc::new(Mutex::new(stream));
+                match run_session(engine, reader, writer) {
+                    Ok(st) => eprintln!(
+                        "[serve] {peer}: session done ({} submitted, {} rejected, {} cancelled)",
+                        st.submitted, st.rejected, st.cancelled
+                    ),
+                    Err(e) => eprintln!("[serve] {peer}: session failed: {e:#}"),
+                }
+            });
+        }
+    });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    // The end-to-end session tests (concurrent jobs, event sequencing,
+    // schema-valid results, cancellation) live in tests/serve_api.rs —
+    // they train real nano jobs through a full in-process session.
+}

@@ -112,19 +112,55 @@ fn parallel_levels_are_bit_identical_and_match_sequential() {
 }
 
 #[test]
-fn progress_reports_every_run_exactly_once() {
+fn observer_reports_every_run_exactly_once() {
+    use airbench::coordinator::Observer;
+
+    #[derive(Default)]
+    struct RunCounter {
+        seen: Vec<usize>,
+    }
+    impl Observer for RunCounter {
+        fn on_run(&mut self, run: usize, accuracy: f64) {
+            self.seen[run] += 1;
+            assert!(accuracy.is_finite());
+        }
+    }
+
     let (train_ds, test_ds) = tiny_data();
     let cfg = fleet_config();
     let f = factory();
-    let mut seen = vec![0usize; 4];
-    let mut progress = |i: usize, acc: f64| {
-        seen[i] += 1;
-        assert!(acc.is_finite());
-    };
+    let mut obs = RunCounter { seen: vec![0; 4] };
     let fleet =
-        run_fleet_parallel(&f, &train_ds, &test_ds, &cfg, 4, 2, Some(&mut progress)).unwrap();
+        run_fleet_parallel(&f, &train_ds, &test_ds, &cfg, 4, 2, Some(&mut obs)).unwrap();
     assert_eq!(fleet.runs.len(), 4);
-    assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+    assert!(obs.seen.iter().all(|&c| c == 1), "{:?}", obs.seen);
+}
+
+#[test]
+fn cancelled_fleet_resolves_to_the_typed_error() {
+    use airbench::coordinator::{is_cancelled, Observer};
+
+    /// Cancels after the first completed run.
+    #[derive(Default)]
+    struct CancelAfterOne {
+        runs_seen: usize,
+    }
+    impl Observer for CancelAfterOne {
+        fn on_run(&mut self, _run: usize, _accuracy: f64) {
+            self.runs_seen += 1;
+        }
+        fn cancelled(&self) -> bool {
+            self.runs_seen >= 1
+        }
+    }
+
+    let (train_ds, test_ds) = tiny_data();
+    let cfg = fleet_config();
+    let f = factory();
+    let mut obs = CancelAfterOne::default();
+    let err = run_fleet_parallel(&f, &train_ds, &test_ds, &cfg, N_RUNS, 2, Some(&mut obs))
+        .unwrap_err();
+    assert!(is_cancelled(&err), "{err:#}");
 }
 
 #[test]
