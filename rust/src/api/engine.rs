@@ -31,10 +31,14 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::api::event::{validate_result, Event, JobId, JobResult};
-use crate::api::job::{BenchJob, EvalJob, FleetBenchJob, FleetJob, InfoJob, JobSpec, TrainJob};
+use crate::api::job::{
+    BenchJob, EvalJob, FleetBenchJob, FleetJob, InfoJob, JobSpec, LoadJob, PredictJob, SaveJob,
+    TrainJob,
+};
+use crate::api::registry::{Registry, WarmModel};
 use crate::coordinator::observer::{Cancelled, Observer};
 use crate::coordinator::trainer::EpochLog;
 use crate::coordinator::{
@@ -42,6 +46,7 @@ use crate::coordinator::{
 };
 use crate::data::Dataset;
 use crate::experiments::{make_data, DataKind, Scale};
+use crate::runtime::checkpoint;
 use crate::runtime::native::available_cores;
 use crate::runtime::{
     Backend, BackendFactory, BackendKind, EngineSpec, Manifest, ModelState, NativeShared,
@@ -154,6 +159,7 @@ struct Inner {
     gate: Condvar,
     data: Mutex<BTreeMap<String, (Dataset, Dataset)>>,
     shared: Mutex<BTreeMap<String, Arc<NativeShared>>>,
+    registry: Registry,
 }
 
 /// Releases a job slot even when the job panics.
@@ -240,6 +246,7 @@ impl Engine {
                 gate: Condvar::new(),
                 data: Mutex::new(BTreeMap::new()),
                 shared: Mutex::new(BTreeMap::new()),
+                registry: Registry::default(),
             }),
         }
     }
@@ -252,6 +259,12 @@ impl Engine {
     /// Resolved concurrent job slots.
     pub fn job_slots(&self) -> usize {
         self.inner.budget.runs_parallel
+    }
+
+    /// The engine's warm-model registry (shared by every clone): models
+    /// parked by `load` jobs, served by `predict` jobs.
+    pub fn registry(&self) -> &Registry {
+        &self.inner.registry
     }
 
     /// Submit a job. Infallible by design: every failure — bad variant,
@@ -425,6 +438,9 @@ fn exec(inner: &Inner, id: JobId, spec: JobSpec, sink: &mut ChannelSink) -> Resu
         JobSpec::Bench(job) => exec_bench(inner, id, job, sink),
         JobSpec::FleetBench(job) => exec_fleet_bench(inner, id, job, sink),
         JobSpec::Info(job) => exec_info(inner, id, job, sink),
+        JobSpec::Save(job) => exec_save(inner, id, job, sink),
+        JobSpec::Load(job) => exec_load(inner, id, job, sink),
+        JobSpec::Predict(job) => exec_predict(inner, id, job, sink),
     }
 }
 
@@ -463,8 +479,14 @@ fn exec_train(
     let (result, state) = train_run(engine.as_mut(), &train_ds, &test_ds, &cfg, sink)?;
     let mut checkpoint = None;
     if let Some(path) = &job.save {
-        state.save(path)?;
-        sink.on_log(&format!("checkpoint written to {}", path.display()));
+        let saved = checkpoint::save(&state, engine.variant(), Some(&cfg.to_json()), path)
+            .with_context(|| format!("saving checkpoint {}", path.display()))?;
+        sink.on_log(&format!(
+            "checkpoint written to {} (payload {}, md5 {})",
+            path.display(),
+            saved.payload_path.display(),
+            saved.content_hash
+        ));
         checkpoint = Some(path.clone());
     }
     Ok(JobResult::Train {
@@ -477,8 +499,16 @@ fn exec_train(
 
 fn exec_eval(inner: &Inner, id: JobId, job: EvalJob, sink: &mut ChannelSink) -> Result<JobResult> {
     let cfg = job.config;
-    let state = ModelState::load(&job.load)
-        .with_context(|| format!("loading checkpoint {}", job.load.display()))?;
+    // Either checkpoint format: the versioned manifest+payload, or the
+    // legacy ABCK1 state file.
+    let state = if checkpoint::is_checkpoint(&job.load) {
+        checkpoint::load(&job.load, &inner.cfg.artifacts_dir)
+            .with_context(|| format!("loading checkpoint {}", job.load.display()))?
+            .state
+    } else {
+        ModelState::load(&job.load)
+            .with_context(|| format!("loading checkpoint {}", job.load.display()))?
+    };
     let (_, test_ds) = inner.data(job.data, None, job.test_n);
     let factory = inner.factory(cfg.backend, &cfg.variant)?;
     started(sink, id, "eval", factory.kind().name(), &cfg.variant);
@@ -615,6 +645,164 @@ fn exec_fleet_bench(
         None
     };
     Ok(JobResult::FleetBench { report, path })
+}
+
+// ---- artifact lifecycle: save / load / predict --------------------------
+
+fn exec_save(inner: &Inner, id: JobId, job: SaveJob, sink: &mut ChannelSink) -> Result<JobResult> {
+    // Resolve the source model: a warm registry entry, a versioned
+    // checkpoint to re-serialize, or a legacy ABCK1 file to convert.
+    let (state, shared, provenance): (Arc<ModelState>, Arc<NativeShared>, Json) =
+        if let Some(key) = &job.model {
+            let warm = inner.registry.get(key).ok_or_else(|| {
+                anyhow!(
+                    "no warm model '{key}' — submit a load job first (loaded: {:?})",
+                    inner.registry.ids()
+                )
+            })?;
+            (
+                Arc::clone(&warm.state),
+                Arc::clone(&warm.shared),
+                warm.config.clone(),
+            )
+        } else if let Some(path) = &job.load {
+            if checkpoint::is_checkpoint(path) {
+                let loaded = checkpoint::load(path, &inner.cfg.artifacts_dir)
+                    .with_context(|| format!("loading checkpoint {}", path.display()))?;
+                (Arc::new(loaded.state), loaded.shared, loaded.config)
+            } else {
+                let state = ModelState::load(path)
+                    .with_context(|| format!("loading legacy state {}", path.display()))?;
+                let factory = inner.factory(BackendKind::Native, &job.config.variant)?;
+                let shared = factory
+                    .native_shared()
+                    .ok_or_else(|| anyhow!("legacy conversion needs a native variant"))?;
+                state.validate(shared.variant())?;
+                (Arc::new(state), shared, job.config.to_json())
+            }
+        } else {
+            bail!("save jobs need a 'model' registry id or a 'load' source path");
+        };
+    let variant = shared.variant();
+    started(sink, id, "save", "-", &variant.name);
+    let prov = match &provenance {
+        Json::Null => None,
+        j => Some(j),
+    };
+    let saved = checkpoint::save(&state, variant, prov, &job.out)
+        .with_context(|| format!("saving checkpoint {}", job.out.display()))?;
+    sink.on_log(&format!(
+        "checkpoint written to {} (payload {}, md5 {})",
+        saved.manifest_path.display(),
+        saved.payload_path.display(),
+        saved.content_hash
+    ));
+    Ok(JobResult::Save {
+        path: saved.manifest_path,
+        payload: saved.payload_path,
+        content_hash: saved.content_hash,
+        bytes: saved.payload_bytes,
+        variant: variant.name.clone(),
+    })
+}
+
+fn exec_load(inner: &Inner, id: JobId, job: LoadJob, sink: &mut ChannelSink) -> Result<JobResult> {
+    // Verify the full chain (schema, length, hash, variant plan) BEFORE
+    // touching the registry: a failed load leaves it exactly as it was.
+    let loaded = checkpoint::load(&job.path, &inner.cfg.artifacts_dir)
+        .with_context(|| format!("loading checkpoint {}", job.path.display()))?;
+    let variant_name = loaded.shared.variant().name.clone();
+    started(sink, id, "load", "-", &variant_name);
+    let reg_id = job
+        .id
+        .clone()
+        .unwrap_or_else(|| format!("m{}", &loaded.content_hash[..12]));
+    let params = loaded.shared.variant().param_count;
+    let tensors = loaded.state.tensors.len();
+    let momenta = loaded.state.momenta.len();
+    let warm = inner.registry.insert(WarmModel {
+        id: reg_id,
+        content_hash: loaded.content_hash,
+        variant_name: variant_name.clone(),
+        params,
+        path: job.path.clone(),
+        config: loaded.config,
+        seed: loaded.seed,
+        state: Arc::new(loaded.state),
+        shared: loaded.shared,
+    });
+    sink.on_log(&format!(
+        "model '{}' warm (variant {}, {} params, md5 {})",
+        warm.id, warm.variant_name, warm.params, warm.content_hash
+    ));
+    Ok(JobResult::Load {
+        id: warm.id.clone(),
+        content_hash: warm.content_hash.clone(),
+        variant: variant_name,
+        params,
+        path: job.path,
+        tensors,
+        momenta,
+    })
+}
+
+fn exec_predict(
+    inner: &Inner,
+    id: JobId,
+    job: PredictJob,
+    sink: &mut ChannelSink,
+) -> Result<JobResult> {
+    // Source: a warm registry entry (Arc clones, no IO) or an ad-hoc
+    // checkpoint load (verified but not registered).
+    let (state, shared, label, content_hash): (Arc<ModelState>, Arc<NativeShared>, String, String) =
+        if let Some(key) = &job.model {
+            let warm = inner.registry.get(key).ok_or_else(|| {
+                anyhow!(
+                    "no warm model '{key}' — submit a load job first (loaded: {:?})",
+                    inner.registry.ids()
+                )
+            })?;
+            (
+                Arc::clone(&warm.state),
+                Arc::clone(&warm.shared),
+                warm.id.clone(),
+                warm.content_hash.clone(),
+            )
+        } else if let Some(path) = &job.load {
+            let loaded = checkpoint::load(path, &inner.cfg.artifacts_dir)
+                .with_context(|| format!("loading checkpoint {}", path.display()))?;
+            let hash = loaded.content_hash.clone();
+            (
+                Arc::new(loaded.state),
+                loaded.shared,
+                path.display().to_string(),
+                hash,
+            )
+        } else {
+            bail!("predict jobs need a 'model' registry id or a 'load' checkpoint path");
+        };
+    let variant_name = shared.variant().name.clone();
+    // The loaded core IS the factory seam: every concurrent predict worker
+    // on this model is an Arc clone of one resolved NativeShared.
+    let spec = EngineSpec::new(BackendKind::Native, &variant_name)
+        .with_artifacts_dir(&inner.cfg.artifacts_dir);
+    let factory = BackendFactory::from_native_shared(spec, Arc::clone(&shared));
+    started(sink, id, "predict", factory.kind().name(), &variant_name);
+    let mut engine = inner.spawn_worker(&factory)?;
+    state.validate(engine.variant())?;
+    let (_, test_ds) = inner.data(job.data, None, job.test_n);
+    let out = evaluate_observed(engine.as_mut(), &state, &test_ds, job.tta, sink)?;
+    Ok(JobResult::Predict {
+        accuracy: out.accuracy,
+        accuracy_no_tta: out.accuracy_identity,
+        n_test: test_ds.len(),
+        predictions: out.predictions,
+        probs_md5: checkpoint::f32_md5(out.probs.data()),
+        model: label,
+        content_hash,
+        variant: variant_name,
+        backend: factory.kind().name().to_string(),
+    })
 }
 
 // ---- info --------------------------------------------------------------

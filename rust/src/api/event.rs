@@ -233,6 +233,58 @@ pub enum JobResult {
         /// The structured inspection document (see DESIGN.md §9).
         data: Json,
     },
+    /// A finished checkpoint write (DESIGN.md §10).
+    Save {
+        /// Manifest path written.
+        path: PathBuf,
+        /// Payload path written next to the manifest.
+        payload: PathBuf,
+        /// Lowercase MD5 of the payload bytes — the model's content hash.
+        content_hash: String,
+        /// Payload size in bytes.
+        bytes: usize,
+        /// Variant the weights belong to.
+        variant: String,
+    },
+    /// A checkpoint verified into the warm-model registry.
+    Load {
+        /// Registry id the model is warm under.
+        id: String,
+        /// Content hash of the verified payload.
+        content_hash: String,
+        /// Variant the weights belong to.
+        variant: String,
+        /// Parameter count from the variant plan.
+        params: usize,
+        /// Manifest path the model was loaded from.
+        path: PathBuf,
+        /// State tensors in the checkpoint.
+        tensors: usize,
+        /// Momentum buffers in the checkpoint.
+        momenta: usize,
+    },
+    /// A finished training-free prediction pass.
+    Predict {
+        /// Accuracy at the requested TTA level.
+        accuracy: f64,
+        /// Identity-view ("no TTA") accuracy.
+        accuracy_no_tta: f64,
+        /// Test examples predicted.
+        n_test: usize,
+        /// Argmax class per test example, dataset order.
+        predictions: Vec<u16>,
+        /// Lowercase MD5 of the probability tensor (f32 LE bytes) — the
+        /// bit-identity witness across threads and processes.
+        probs_md5: String,
+        /// Which model ran: registry id or checkpoint path.
+        model: String,
+        /// Content hash of the model that ran.
+        content_hash: String,
+        /// Variant evaluated.
+        variant: String,
+        /// Resolved backend name.
+        backend: String,
+    },
 }
 
 fn opt_path_json(p: &Option<PathBuf>) -> Json {
@@ -252,6 +304,9 @@ impl JobResult {
             JobResult::Bench { .. } => "bench",
             JobResult::FleetBench { .. } => "fleet_bench",
             JobResult::Info { .. } => "info",
+            JobResult::Save { .. } => "save",
+            JobResult::Load { .. } => "load",
+            JobResult::Predict { .. } => "predict",
         }
     }
 
@@ -343,6 +398,60 @@ impl JobResult {
                 j
             }
             JobResult::Info { data } => data.clone(),
+            JobResult::Save {
+                path,
+                payload,
+                content_hash,
+                bytes,
+                variant,
+            } => Json::obj(vec![
+                ("path", Json::str(&path.display().to_string())),
+                ("payload", Json::str(&payload.display().to_string())),
+                ("content_hash", Json::str(content_hash)),
+                ("bytes", Json::num(*bytes as f64)),
+                ("variant", Json::str(variant)),
+            ]),
+            JobResult::Load {
+                id,
+                content_hash,
+                variant,
+                params,
+                path,
+                tensors,
+                momenta,
+            } => Json::obj(vec![
+                ("id", Json::str(id)),
+                ("content_hash", Json::str(content_hash)),
+                ("variant", Json::str(variant)),
+                ("params", Json::num(*params as f64)),
+                ("path", Json::str(&path.display().to_string())),
+                ("tensors", Json::num(*tensors as f64)),
+                ("momenta", Json::num(*momenta as f64)),
+            ]),
+            JobResult::Predict {
+                accuracy,
+                accuracy_no_tta,
+                n_test,
+                predictions,
+                probs_md5,
+                model,
+                content_hash,
+                variant,
+                backend,
+            } => Json::obj(vec![
+                ("backend", Json::str(backend)),
+                ("model", Json::str(model)),
+                ("content_hash", Json::str(content_hash)),
+                ("variant", Json::str(variant)),
+                ("accuracy", Json::num(*accuracy)),
+                ("accuracy_no_tta", Json::num(*accuracy_no_tta)),
+                ("n_test", Json::num(*n_test as f64)),
+                (
+                    "predictions",
+                    Json::Arr(predictions.iter().map(|&c| Json::num(c as f64)).collect()),
+                ),
+                ("probs_md5", Json::str(probs_md5)),
+            ]),
         };
         Json::obj(vec![("kind", Json::str(self.kind_name())), ("data", data)])
     }
@@ -361,6 +470,13 @@ pub fn validate_result(j: &Json) -> Result<()> {
         let x = data.get(key)?.as_f64()?;
         if !x.is_finite() || !(0.0..=1.0).contains(&x) {
             bail!("'{key}' = {x} is not a finite accuracy in [0, 1]");
+        }
+        Ok(())
+    };
+    let md5_hex_key = |key: &str| -> Result<()> {
+        let s = data.get(key)?.as_str()?;
+        if s.len() != 32 || !s.bytes().all(|b| matches!(b, b'0'..=b'9' | b'a'..=b'f')) {
+            bail!("'{key}' = '{s}' is not a lowercase 32-hex md5");
         }
         Ok(())
     };
@@ -425,6 +541,46 @@ pub fn validate_result(j: &Json) -> Result<()> {
                 v.get("name")?.as_str()?;
             }
         }
+        "save" => {
+            data.get("path")?.as_str()?;
+            data.get("payload")?.as_str()?;
+            md5_hex_key("content_hash")?;
+            if data.get("bytes")?.as_usize()? == 0 {
+                bail!("save 'bytes' must be >= 1");
+            }
+            data.get("variant")?.as_str()?;
+        }
+        "load" => {
+            if data.get("id")?.as_str()?.is_empty() {
+                bail!("load 'id' must be non-empty");
+            }
+            md5_hex_key("content_hash")?;
+            data.get("variant")?.as_str()?;
+            data.get("path")?.as_str()?;
+            if data.get("params")?.as_usize()? == 0 {
+                bail!("load 'params' must be >= 1");
+            }
+            if data.get("tensors")?.as_usize()? == 0 {
+                bail!("load 'tensors' must be >= 1");
+            }
+            data.get("momenta")?.as_usize()?;
+        }
+        "predict" => {
+            finite_unit("accuracy")?;
+            finite_unit("accuracy_no_tta")?;
+            let n = data.get("n_test")?.as_usize()?;
+            if n == 0 {
+                bail!("predict 'n_test' must be >= 1");
+            }
+            if data.get("predictions")?.as_arr()?.len() != n {
+                bail!("predict 'predictions' length must equal 'n_test'");
+            }
+            md5_hex_key("probs_md5")?;
+            md5_hex_key("content_hash")?;
+            data.get("model")?.as_str()?;
+            data.get("variant")?.as_str()?;
+            data.get("backend")?.as_str()?;
+        }
         other => bail!("unknown result kind '{other}'"),
     }
     Ok(())
@@ -483,6 +639,78 @@ mod tests {
         )
         .unwrap();
         validate_result(&good).unwrap();
+    }
+
+    #[test]
+    fn artifact_results_round_trip_through_validation() {
+        // to_json of each artifact result must pass its own schema check.
+        let save = JobResult::Save {
+            path: PathBuf::from("model.ckpt"),
+            payload: PathBuf::from("model.ckpt.bin"),
+            content_hash: "0123456789abcdef0123456789abcdef".into(),
+            bytes: 512,
+            variant: "nano".into(),
+        };
+        validate_result(&save.to_json()).unwrap();
+        assert_eq!(save.kind_name(), "save");
+
+        let load = JobResult::Load {
+            id: "m0123456789ab".into(),
+            content_hash: "0123456789abcdef0123456789abcdef".into(),
+            variant: "nano".into(),
+            params: 2000,
+            path: PathBuf::from("model.ckpt"),
+            tensors: 12,
+            momenta: 8,
+        };
+        validate_result(&load.to_json()).unwrap();
+
+        let predict = JobResult::Predict {
+            accuracy: 0.5,
+            accuracy_no_tta: 0.5,
+            n_test: 3,
+            predictions: vec![1, 0, 9],
+            probs_md5: "0123456789abcdef0123456789abcdef".into(),
+            model: "m1".into(),
+            content_hash: "0123456789abcdef0123456789abcdef".into(),
+            variant: "nano".into(),
+            backend: "native".into(),
+        };
+        let j = predict.to_json();
+        validate_result(&j).unwrap();
+        assert_eq!(
+            j.get("data").unwrap().get("predictions").unwrap().as_arr().unwrap().len(),
+            3
+        );
+    }
+
+    #[test]
+    fn artifact_validation_rejects_malformed_documents() {
+        // Uppercase / short hashes are not content hashes.
+        let bad_hash = parse(
+            r#"{"kind": "save", "data": {"path": "m.ckpt", "payload": "m.ckpt.bin",
+                "content_hash": "DEADBEEF", "bytes": 10, "variant": "nano"}}"#,
+        )
+        .unwrap();
+        assert!(validate_result(&bad_hash).is_err());
+        // predictions length must match n_test.
+        let bad_preds = parse(
+            r#"{"kind": "predict", "data": {"backend": "native", "model": "m1",
+                "content_hash": "0123456789abcdef0123456789abcdef", "variant": "nano",
+                "accuracy": 0.5, "accuracy_no_tta": 0.5, "n_test": 2,
+                "predictions": [1],
+                "probs_md5": "0123456789abcdef0123456789abcdef"}}"#,
+        )
+        .unwrap();
+        assert!(validate_result(&bad_preds).is_err());
+        // Empty registry id is meaningless.
+        let bad_id = parse(
+            r#"{"kind": "load", "data": {"id": "", "path": "m.ckpt",
+                "content_hash": "0123456789abcdef0123456789abcdef", "variant": "nano",
+                "params": 10, "tensors": 2, "momenta": 1}}"#,
+        )
+        .unwrap();
+        assert!(validate_result(&bad_id).is_err());
     }
 
     #[test]

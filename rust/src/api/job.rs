@@ -2,8 +2,9 @@
 //!
 //! A [`JobSpec`] is everything needed to execute one unit of work against
 //! the engine: which workload ([`TrainJob`], [`EvalJob`], [`FleetJob`],
-//! [`BenchJob`], [`FleetBenchJob`], [`InfoJob`]), on which data, with
-//! which [`TrainConfig`]. Specs are plain data with a total JSON
+//! [`BenchJob`], [`FleetBenchJob`], [`InfoJob`], and the artifact
+//! lifecycle [`SaveJob`], [`LoadJob`], [`PredictJob`]), on which data,
+//! with which [`TrainConfig`]. Specs are plain data with a total JSON
 //! round trip ([`JobSpec::to_json`] / [`JobSpec::from_json`]) — the same
 //! document the CLI builds from flags is what `airbench serve` accepts as
 //! one NDJSON line (DESIGN.md §9).
@@ -18,7 +19,7 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use crate::bench::{BenchConfig, FleetBenchConfig};
-use crate::config::TrainConfig;
+use crate::config::{TrainConfig, TtaLevel};
 use crate::experiments::DataKind;
 use crate::runtime::BackendKind;
 use crate::util::json::Json;
@@ -123,6 +124,74 @@ pub struct FleetBenchJob {
     pub write: bool,
 }
 
+/// Persist a model as a versioned checkpoint (the CLI's `save` command).
+///
+/// The source is either a warm registry entry (`model`) or a file on disk
+/// (`load` — a versioned checkpoint to re-serialize, or a legacy `ABCK1`
+/// state file to convert, in which case `config` supplies the variant).
+#[derive(Clone, Debug)]
+pub struct SaveJob {
+    /// Warm registry model to save (id or content hash).
+    pub model: Option<String>,
+    /// Model file to read instead of the registry.
+    pub load: Option<PathBuf>,
+    /// Manifest path to write (the payload lands next to it as
+    /// `<file name>.bin`).
+    pub out: PathBuf,
+    /// Variant source for legacy inputs + config provenance for the
+    /// manifest.
+    pub config: TrainConfig,
+}
+
+impl Default for SaveJob {
+    fn default() -> Self {
+        SaveJob {
+            model: None,
+            load: None,
+            out: PathBuf::from("model.ckpt"),
+            config: TrainConfig::default(),
+        }
+    }
+}
+
+/// Verify a checkpoint and park it in the engine's warm-model registry
+/// (the CLI's `load` command).
+#[derive(Clone, Debug)]
+pub struct LoadJob {
+    /// Checkpoint manifest path.
+    pub path: PathBuf,
+    /// Registry id to store under (default `m<content-hash prefix>`).
+    pub id: Option<String>,
+}
+
+/// Evaluate a saved or warm model without training (the CLI's `predict`
+/// command).
+#[derive(Clone, Debug)]
+pub struct PredictJob {
+    /// Warm registry model to evaluate (id or content hash).
+    pub model: Option<String>,
+    /// Checkpoint to load ad hoc instead (verified but not registered).
+    pub load: Option<PathBuf>,
+    /// Dataset distribution whose test split is predicted.
+    pub data: DataKind,
+    /// Test-set size override.
+    pub test_n: Option<usize>,
+    /// Test-time-augmentation level for the prediction pass.
+    pub tta: TtaLevel,
+}
+
+impl Default for PredictJob {
+    fn default() -> Self {
+        PredictJob {
+            model: None,
+            load: None,
+            data: DataKind::Cifar10,
+            test_n: None,
+            tta: TtaLevel::None,
+        }
+    }
+}
+
 /// Variant / manifest inspection (the CLI's `info` command).
 #[derive(Clone, Debug, Default)]
 pub struct InfoJob {
@@ -150,6 +219,12 @@ pub enum JobSpec {
     FleetBench(FleetBenchJob),
     /// Variant / manifest inspection.
     Info(InfoJob),
+    /// Checkpoint write (registry model or file conversion).
+    Save(SaveJob),
+    /// Checkpoint verification into the warm-model registry.
+    Load(LoadJob),
+    /// Training-free evaluation of a saved or warm model.
+    Predict(PredictJob),
 }
 
 // ---- optional-key helpers (absent and null are both "use the default") --
@@ -239,6 +314,9 @@ impl JobSpec {
             JobSpec::Bench(_) => "bench",
             JobSpec::FleetBench(_) => "fleet_bench",
             JobSpec::Info(_) => "info",
+            JobSpec::Save(_) => "save",
+            JobSpec::Load(_) => "load",
+            JobSpec::Predict(_) => "predict",
         }
     }
 
@@ -311,6 +389,29 @@ impl JobSpec {
                     p.push(("variant", Json::str(v)));
                 }
                 p.push(("hlo", Json::Bool(i.hlo)));
+            }
+            JobSpec::Save(s) => {
+                if let Some(m) = &s.model {
+                    p.push(("model", Json::str(m)));
+                }
+                push_opt_path(&mut p, "load", &s.load);
+                p.push(("out", Json::str(&s.out.display().to_string())));
+                p.push(("config", s.config.to_json()));
+            }
+            JobSpec::Load(l) => {
+                p.push(("path", Json::str(&l.path.display().to_string())));
+                if let Some(id) = &l.id {
+                    p.push(("id", Json::str(id)));
+                }
+            }
+            JobSpec::Predict(pr) => {
+                if let Some(m) = &pr.model {
+                    p.push(("model", Json::str(m)));
+                }
+                push_opt_path(&mut p, "load", &pr.load);
+                p.push(("data", Json::str(pr.data.name())));
+                push_opt_num(&mut p, "test_n", pr.test_n);
+                p.push(("tta", Json::str(pr.tta.name())));
             }
         }
         Json::obj(p)
@@ -401,9 +502,34 @@ impl JobSpec {
                 variant: opt_str(j, "variant")?,
                 hlo: opt_bool(j, "hlo")?.unwrap_or(false),
             }),
+            "save" => JobSpec::Save(SaveJob {
+                model: opt_str(j, "model")?,
+                load: opt_path(j, "load")?,
+                out: opt_path(j, "out")?
+                    .ok_or_else(|| anyhow::anyhow!("save jobs need an 'out' manifest path"))?,
+                config: parse_config(j)?,
+            }),
+            "load" => JobSpec::Load(LoadJob {
+                path: opt_path(j, "path")?.ok_or_else(|| {
+                    anyhow::anyhow!("load jobs need a 'path' checkpoint manifest")
+                })?,
+                id: opt_str(j, "id")?,
+            }),
+            "predict" => JobSpec::Predict(PredictJob {
+                model: opt_str(j, "model")?,
+                load: opt_path(j, "load")?,
+                data: parse_data(j)?,
+                test_n: opt_usize(j, "test_n")?,
+                tta: match opt_str(j, "tta")? {
+                    None => TtaLevel::None,
+                    Some(s) => TtaLevel::parse(&s).ok_or_else(|| {
+                        anyhow::anyhow!("unknown tta '{s}' (0|none|1|mirror|2|multicrop)")
+                    })?,
+                },
+            }),
             other => bail!(
                 "unknown job kind '{other}' \
-                 (train|eval|fleet|bench|fleet_bench|info)"
+                 (train|eval|fleet|bench|fleet_bench|info|save|load|predict)"
             ),
         })
     }
@@ -530,6 +656,69 @@ mod tests {
             }
             other => panic!("wrong kind: {other:?}"),
         }
+    }
+
+    #[test]
+    fn artifact_specs_round_trip() {
+        let s = SaveJob {
+            model: Some("m1".into()),
+            out: PathBuf::from("out/model.ckpt"),
+            ..SaveJob::default()
+        };
+        match round_trip(&JobSpec::Save(s)) {
+            JobSpec::Save(s) => {
+                assert_eq!(s.model.as_deref(), Some("m1"));
+                assert_eq!(s.load, None);
+                assert_eq!(s.out, PathBuf::from("out/model.ckpt"));
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        let l = LoadJob {
+            path: PathBuf::from("model.ckpt"),
+            id: Some("warm".into()),
+        };
+        match round_trip(&JobSpec::Load(l)) {
+            JobSpec::Load(l) => {
+                assert_eq!(l.path, PathBuf::from("model.ckpt"));
+                assert_eq!(l.id.as_deref(), Some("warm"));
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        let p = PredictJob {
+            load: Some(PathBuf::from("model.ckpt")),
+            test_n: Some(64),
+            tta: TtaLevel::Mirror,
+            ..PredictJob::default()
+        };
+        match round_trip(&JobSpec::Predict(p)) {
+            JobSpec::Predict(p) => {
+                assert_eq!(p.load.as_deref(), Some(std::path::Path::new("model.ckpt")));
+                assert_eq!(p.test_n, Some(64));
+                assert_eq!(p.tta, TtaLevel::Mirror);
+                assert_eq!(p.model, None);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        // Minimal documents fill defaults.
+        match JobSpec::from_json(&parse(r#"{"job": "predict", "model": "m1"}"#).unwrap()).unwrap() {
+            JobSpec::Predict(p) => {
+                assert_eq!(p.tta, TtaLevel::None);
+                assert_eq!(p.data, DataKind::Cifar10);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn artifact_specs_reject_missing_and_bad_keys() {
+        // save without an output path, load without a source path.
+        assert!(JobSpec::from_json(&parse(r#"{"job": "save"}"#).unwrap()).is_err());
+        assert!(JobSpec::from_json(&parse(r#"{"job": "load"}"#).unwrap()).is_err());
+        // bad tta level is a parse error, not a silent default.
+        assert!(JobSpec::from_json(
+            &parse(r#"{"job": "predict", "load": "m.ckpt", "tta": "crops9"}"#).unwrap()
+        )
+        .is_err());
     }
 
     #[test]

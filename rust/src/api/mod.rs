@@ -3,8 +3,9 @@
 //! This layer is the programmatic face of the crate (DESIGN.md §9). A
 //! client — the CLI, the `airbench serve` daemon, a test, or library code
 //! — builds a typed [`JobSpec`] (train / eval / fleet / bench /
-//! fleet-bench / info), submits it to an [`Engine`], and consumes a typed
-//! [`Event`] stream from the returned [`JobHandle`]:
+//! fleet-bench / info, plus the artifact lifecycle save / load /
+//! predict, DESIGN.md §10), submits it to an [`Engine`], and consumes a
+//! typed [`Event`] stream from the returned [`JobHandle`]:
 //!
 //! ```text
 //! queued -> started -> (epoch | run | log)* -> result | error
@@ -43,7 +44,12 @@
 pub mod engine;
 pub mod event;
 pub mod job;
+pub mod registry;
 
 pub use engine::{CancelToken, Engine, EngineConfig, JobHandle};
 pub use event::{validate_result, Event, JobId, JobResult};
-pub use job::{BenchJob, EvalJob, FleetBenchJob, FleetJob, InfoJob, JobSpec, TrainJob};
+pub use job::{
+    BenchJob, EvalJob, FleetBenchJob, FleetJob, InfoJob, JobSpec, LoadJob, PredictJob, SaveJob,
+    TrainJob,
+};
+pub use registry::{Registry, WarmModel};

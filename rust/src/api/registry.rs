@@ -1,0 +1,130 @@
+//! Engine-level registry of warm models.
+//!
+//! A `load` job verifies a checkpoint once and parks it here as a
+//! [`WarmModel`]: the weights behind an `Arc`, plus the resolved
+//! [`NativeShared`] core — so every subsequent `predict` job is an
+//! Arc-clone spawn (no file IO, no re-verification, no plan rebuild) and
+//! any number of them can run concurrently under the engine's `job_slots`
+//! budget against the same immutable weights.
+//!
+//! Models are keyed by a client-chosen id (default `m<hash prefix>`) and
+//! are also addressable by their full content hash, so a client that only
+//! knows *what* model it wants (the payload MD5) need not know what the
+//! loader called it. Failed loads never touch the registry.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use crate::runtime::{ModelState, NativeShared};
+use crate::util::json::Json;
+
+/// One verified, loaded model held warm by the engine.
+pub struct WarmModel {
+    /// Registry key the model is addressed by.
+    pub id: String,
+    /// Lowercase MD5 of the checkpoint payload — the model's identity.
+    pub content_hash: String,
+    /// Variant the weights belong to.
+    pub variant_name: String,
+    /// Parameter count from the variant plan.
+    pub params: usize,
+    /// Manifest path the model was loaded from.
+    pub path: PathBuf,
+    /// Config provenance from the checkpoint (`Json::Null` when unknown).
+    pub config: Json,
+    /// Seed provenance from the checkpoint (`""` when unknown).
+    pub seed: String,
+    /// The weights, shared read-only by every predict worker.
+    pub state: Arc<ModelState>,
+    /// The resolved native core — what makes a predict spawn Arc-cheap.
+    pub shared: Arc<NativeShared>,
+}
+
+/// Warm models keyed by id, also addressable by content hash.
+#[derive(Default)]
+pub struct Registry {
+    models: Mutex<BTreeMap<String, Arc<WarmModel>>>,
+}
+
+impl Registry {
+    /// Insert (or replace) a model under its id; returns the shared handle.
+    pub fn insert(&self, model: WarmModel) -> Arc<WarmModel> {
+        let arc = Arc::new(model);
+        self.models
+            .lock()
+            .unwrap()
+            .insert(arc.id.clone(), Arc::clone(&arc));
+        arc
+    }
+
+    /// Look up by exact id first, then by exact content hash.
+    pub fn get(&self, key: &str) -> Option<Arc<WarmModel>> {
+        let models = self.models.lock().unwrap();
+        if let Some(m) = models.get(key) {
+            return Some(Arc::clone(m));
+        }
+        models.values().find(|m| m.content_hash == key).map(Arc::clone)
+    }
+
+    /// Registered ids, sorted.
+    pub fn ids(&self) -> Vec<String> {
+        self.models.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Number of warm models.
+    pub fn len(&self) -> usize {
+        self.models.lock().unwrap().len()
+    }
+
+    /// Whether no model is warm.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::builtin_variant;
+    use crate::runtime::{InitConfig, ModelState};
+
+    fn warm(id: &str, hash: &str) -> WarmModel {
+        let variant = builtin_variant("nano").unwrap();
+        let state = ModelState::init(&variant, &InitConfig::default());
+        WarmModel {
+            id: id.to_string(),
+            content_hash: hash.to_string(),
+            variant_name: "nano".to_string(),
+            params: variant.param_count,
+            path: PathBuf::from("model.ckpt"),
+            config: Json::Null,
+            seed: String::new(),
+            state: Arc::new(state),
+            shared: Arc::new(NativeShared::new(variant)),
+        }
+    }
+
+    #[test]
+    fn lookup_by_id_and_by_content_hash() {
+        let reg = Registry::default();
+        assert!(reg.is_empty());
+        reg.insert(warm("a", "00000000000000000000000000000001"));
+        reg.insert(warm("b", "00000000000000000000000000000002"));
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.ids(), vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(reg.get("a").unwrap().content_hash, "00000000000000000000000000000001");
+        let by_hash = reg.get("00000000000000000000000000000002").unwrap();
+        assert_eq!(by_hash.id, "b");
+        assert!(reg.get("missing").is_none());
+    }
+
+    #[test]
+    fn reinsert_replaces_under_the_same_id() {
+        let reg = Registry::default();
+        reg.insert(warm("m", "00000000000000000000000000000001"));
+        reg.insert(warm("m", "00000000000000000000000000000002"));
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.get("m").unwrap().content_hash, "00000000000000000000000000000002");
+    }
+}

@@ -12,6 +12,10 @@
 //! Subcommands (see `airbench` with no arguments for the full flag list):
 //! * `train [key=value ...]` — one training run with per-epoch logging.
 //! * `eval --load ckpt.bin` — evaluate a saved checkpoint.
+//! * `predict --model ID | --load model.ckpt` — logits/accuracy from a
+//!   warm or on-disk model (DESIGN.md §10).
+//! * `save` / `load` — write / register versioned checkpoint artifacts
+//!   (content-hashed payload + schema-validated manifest).
 //! * `fleet --runs N [--parallel P]` — an n-run statistical experiment.
 //! * `bench [--fleet]` — the §3.7 benchmark harness (BENCHMARKS.md).
 //! * `info [--variant NAME]` — inspect the AOT manifest / variant table.
@@ -30,10 +34,10 @@ use anyhow::{bail, Context, Result};
 
 use airbench::api::{
     BenchJob, Engine, EngineConfig, EvalJob, Event, FleetBenchJob, FleetJob, InfoJob, JobResult,
-    JobSpec, TrainJob,
+    JobSpec, LoadJob, PredictJob, SaveJob, TrainJob,
 };
 use airbench::cli::{find_command, Args, Command};
-use airbench::config::{process_env, ConfigLayers, TrainConfig};
+use airbench::config::{process_env, ConfigLayers, TrainConfig, TtaLevel};
 use airbench::experiments::{pct, DataKind, Scale};
 use airbench::util::json::{parse as parse_json, Json};
 use airbench::util::logging;
@@ -52,6 +56,21 @@ static COMMANDS: &[Command] = &[
         name: "eval",
         summary: "evaluate a saved checkpoint (--load ckpt.bin; backend-portable)",
         run: cmd_eval,
+    },
+    Command {
+        name: "predict",
+        summary: "logits/accuracy from a warm model id or checkpoint (--model ID | --load ckpt)",
+        run: cmd_predict,
+    },
+    Command {
+        name: "save",
+        summary: "write a versioned checkpoint artifact (--out model.ckpt; manifest + payload)",
+        run: cmd_save,
+    },
+    Command {
+        name: "load",
+        summary: "load + verify a checkpoint into the warm-model registry (--path model.ckpt)",
+        run: cmd_load,
     },
     Command {
         name: "fleet",
@@ -92,8 +111,13 @@ common flags:\n\
   --prefetch-depth N  batches each worker may run ahead (default 2)\n\
   --seed N            RNG seed (config key `seed`)\n\
 \n\
-train:  --save ckpt.bin --no-warmup [key=value ...]\n\
-eval:   --load ckpt.bin\n\
+train:  --save model.ckpt --no-warmup [key=value ...] (writes the\n\
+        versioned manifest + payload pair, DESIGN.md §10)\n\
+eval:   --load ckpt (versioned model.ckpt or legacy ckpt.bin)\n\
+predict: --model ID | --load model.ckpt, --tta none|mirror|multicrop,\n\
+        --test-n N\n\
+save:   --out model.ckpt, source: --model ID | --load ckpt\n\
+load:   --path model.ckpt --id NAME (default id m<hash12>)\n\
 fleet:  --runs N --log fleet.json --parallel N (alias --fleet-parallel,\n\
         config key `fleet_parallel`): concurrent runs budgeted so\n\
         runs x kernel threads <= cores; 0 = auto. Per-run results are\n\
@@ -212,6 +236,59 @@ fn cmd_eval(args: &Args) -> Result<()> {
         data: data_kind(args)?,
         load: PathBuf::from(path),
         test_n: None,
+    });
+    run_and_render(args, spec)
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let model = args.options.get("model").cloned();
+    let load = args.options.get("load").map(PathBuf::from);
+    if model.is_none() && load.is_none() {
+        bail!("predict requires --model <registry id> or --load <checkpoint>");
+    }
+    let tta_s = args.opt("tta", "none");
+    let Some(tta) = TtaLevel::parse(&tta_s) else {
+        bail!("unknown --tta '{tta_s}' (0|none|1|mirror|2|multicrop)");
+    };
+    let test_n = match args.options.get("test-n") {
+        Some(_) => Some(args.opt_usize("test-n", 0)?),
+        None => None,
+    };
+    let spec = JobSpec::Predict(PredictJob {
+        model,
+        load,
+        data: data_kind(args)?,
+        test_n,
+        tta,
+    });
+    run_and_render(args, spec)
+}
+
+fn cmd_save(args: &Args) -> Result<()> {
+    let Some(out) = args.options.get("out") else {
+        bail!("save requires --out <manifest path> (e.g. --out model.ckpt)");
+    };
+    let model = args.options.get("model").cloned();
+    let load = args.options.get("load").map(PathBuf::from);
+    if model.is_none() && load.is_none() {
+        bail!("save requires a source: --model <registry id> or --load <checkpoint>");
+    }
+    let spec = JobSpec::Save(SaveJob {
+        model,
+        load,
+        out: PathBuf::from(out),
+        config: resolved_config(args)?,
+    });
+    run_and_render(args, spec)
+}
+
+fn cmd_load(args: &Args) -> Result<()> {
+    let Some(path) = args.options.get("path").or_else(|| args.options.get("load")) else {
+        bail!("load requires --path <checkpoint manifest> (alias --load)");
+    };
+    let spec = JobSpec::Load(LoadJob {
+        path: PathBuf::from(path),
+        id: args.options.get("id").cloned(),
     });
     run_and_render(args, spec)
 }
@@ -487,6 +564,48 @@ fn render_result(result: &JobResult) {
             if let Some(p) = path {
                 println!("wrote {}", p.display());
             }
+        }
+        JobResult::Save {
+            path,
+            payload,
+            content_hash,
+            bytes,
+            variant,
+        } => {
+            println!(
+                "saved {variant} model to {} (payload {}, {bytes} bytes, md5 {content_hash})",
+                path.display(),
+                payload.display(),
+            );
+        }
+        JobResult::Load {
+            id,
+            content_hash,
+            variant,
+            params,
+            path,
+            tensors,
+            momenta,
+        } => {
+            println!(
+                "loaded {} as '{id}' ({params} params, variant {variant}, \
+                 {tensors} tensors + {momenta} momenta, md5 {content_hash})",
+                path.display(),
+            );
+        }
+        JobResult::Predict {
+            accuracy,
+            accuracy_no_tta,
+            n_test,
+            model,
+            probs_md5,
+            ..
+        } => {
+            println!(
+                "predict[{model}]: acc={} (no-TTA {}) on {n_test} test examples (probs md5 {probs_md5})",
+                pct(*accuracy),
+                pct(*accuracy_no_tta),
+            );
         }
         JobResult::Info { data } => render_info(data),
     }

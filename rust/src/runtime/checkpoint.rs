@@ -1,0 +1,611 @@
+//! Versioned weight serialization: content-hashed payload + JSON manifest.
+//!
+//! A checkpoint is two files next to each other:
+//!
+//! * **manifest** (the path the user names, e.g. `model.ckpt`) — pretty JSON
+//!   with the format version, variant name, tensor plan (names, shapes,
+//!   dtype, byte offsets), seed/config provenance, and the payload's MD5;
+//! * **payload** (`<manifest file name>.bin`, e.g. `model.ckpt.bin`) — the
+//!   raw `f32` little-endian tensor data, tensors then momenta, each
+//!   section in `BTreeMap` (byte-sorted name) order.
+//!
+//! Determinism is the design center: the same [`ModelState`] always
+//! serializes to the same bytes (sorted maps, fixed key set, pretty printer
+//! with stable layout), so save→load→save is byte-identical and the
+//! payload MD5 doubles as a model *content hash* — the identity key the
+//! engine's warm-model registry and the `predict` job report on the wire.
+//!
+//! Failure behavior is the other half of the contract: every malformed
+//! input is a typed [`CheckpointError`] (never a panic, never a
+//! silently-wrong model), and each corruption mode has a distinct
+//! [`CheckpointError::kind`] so tests and clients can tell truncation from
+//! bit rot from schema drift. The fault-injection suite
+//! (`tests/checkpoint_corruption.rs`) pins one error kind per mode.
+//!
+//! The legacy `ABCK1` binary format ([`ModelState::save`]) remains readable
+//! for old files; [`is_checkpoint`] sniffs which format a path holds.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::runtime::manifest::{Role, Variant};
+use crate::runtime::native::NativeShared;
+use crate::runtime::state::ModelState;
+use crate::tensor::Tensor;
+use crate::util::json::{parse, Json};
+use crate::util::md5::md5_hex;
+
+/// Manifest format identifier. Any change to the manifest key set, entry
+/// layout, or payload encoding is a deliberate version bump here *and* in
+/// the golden fixture (`tests/fixtures/checkpoint_manifest_v1.json`).
+pub const FORMAT: &str = "airbench.checkpoint/1";
+
+/// Typed checkpoint failure. Every malformed input maps to exactly one
+/// variant — [`kind`](CheckpointError::kind) is the stable string tests
+/// and wire clients match on.
+#[derive(Debug)]
+pub enum CheckpointError {
+    /// Filesystem failure reading or writing a checkpoint file.
+    Io {
+        /// File the operation failed on.
+        path: PathBuf,
+        /// The underlying filesystem error.
+        source: std::io::Error,
+    },
+    /// Manifest is not valid JSON or violates the schema.
+    Malformed(String),
+    /// Manifest declares a format version this build cannot read.
+    UnsupportedFormat(String),
+    /// Payload file length disagrees with the manifest's `payload_bytes`.
+    Truncated {
+        /// Bytes the manifest declares.
+        want: usize,
+        /// Bytes actually on disk.
+        got: usize,
+    },
+    /// Payload MD5 disagrees with the manifest's `payload_md5` (bit rot).
+    HashMismatch {
+        /// Hash the manifest declares.
+        want: String,
+        /// Hash of the bytes on disk.
+        got: String,
+    },
+    /// Manifest-internal shape/byte-count/offset disagreement.
+    ShapeMismatch(String),
+    /// Manifest names a variant that is neither built-in nor on disk.
+    UnknownVariant(String),
+    /// Checkpoint tensors do not match the named variant's tensor plan.
+    VariantMismatch(String),
+}
+
+impl CheckpointError {
+    /// Stable machine-readable discriminant, one per corruption mode.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            CheckpointError::Io { .. } => "io",
+            CheckpointError::Malformed(_) => "malformed",
+            CheckpointError::UnsupportedFormat(_) => "unsupported_format",
+            CheckpointError::Truncated { .. } => "truncated",
+            CheckpointError::HashMismatch { .. } => "hash_mismatch",
+            CheckpointError::ShapeMismatch(_) => "shape_mismatch",
+            CheckpointError::UnknownVariant(_) => "unknown_variant",
+            CheckpointError::VariantMismatch(_) => "variant_mismatch",
+        }
+    }
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "checkpoint error ({}): ", self.kind())?;
+        match self {
+            CheckpointError::Io { path, source } => {
+                write!(f, "{}: {source}", path.display())
+            }
+            CheckpointError::Malformed(m)
+            | CheckpointError::ShapeMismatch(m)
+            | CheckpointError::VariantMismatch(m) => write!(f, "{m}"),
+            CheckpointError::UnsupportedFormat(found) => {
+                write!(f, "manifest declares '{found}', this build reads '{FORMAT}'")
+            }
+            CheckpointError::Truncated { want, got } => {
+                write!(f, "payload is {got} bytes, manifest declares {want}")
+            }
+            CheckpointError::HashMismatch { want, got } => {
+                write!(f, "payload md5 is {got}, manifest declares {want}")
+            }
+            CheckpointError::UnknownVariant(name) => {
+                write!(f, "variant '{name}' is neither built-in nor in the artifacts manifest")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CheckpointError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+/// What [`save`] wrote.
+#[derive(Clone, Debug)]
+pub struct Saved {
+    /// Manifest path (the path the caller named).
+    pub manifest_path: PathBuf,
+    /// Payload path (`<manifest file name>.bin` next to the manifest).
+    pub payload_path: PathBuf,
+    /// Lowercase MD5 of the payload bytes — the model's content hash.
+    pub content_hash: String,
+    /// Payload size in bytes.
+    pub payload_bytes: usize,
+}
+
+/// What [`load`] verified and reconstructed.
+pub struct Loaded {
+    /// The model/optimizer tensors, bit-identical to what was saved.
+    pub state: ModelState,
+    /// Resolved native core for the manifest's variant — an Arc-cheap
+    /// handle ready for [`NativeBackend::from_shared`] warm spawns.
+    ///
+    /// [`NativeBackend::from_shared`]: crate::runtime::NativeBackend::from_shared
+    pub shared: Arc<NativeShared>,
+    /// Lowercase MD5 of the payload bytes (verified against the manifest).
+    pub content_hash: String,
+    /// Seed provenance recorded at save time (`""` when unknown).
+    pub seed: String,
+    /// Config provenance recorded at save time (`Json::Null` when unknown).
+    pub config: Json,
+    /// Payload size in bytes.
+    pub payload_bytes: usize,
+    /// The full parsed manifest, for callers that want the raw document.
+    pub manifest: Json,
+}
+
+/// Serialize `state` as a versioned checkpoint at `path` (manifest) plus
+/// `<path file name>.bin` (payload) in the same directory.
+///
+/// `provenance` is the training config echo stored under the manifest's
+/// `config` key (its `seed` field, when present as a string, also becomes
+/// the manifest's top-level `seed`); pass `None` when unknown. The write
+/// is schema-self-checked: a manifest this function emits always passes
+/// [`validate_manifest`].
+pub fn save(
+    state: &ModelState,
+    variant: &Variant,
+    provenance: Option<&Json>,
+    path: &Path,
+) -> Result<Saved, CheckpointError> {
+    let file_name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .ok_or_else(|| {
+            CheckpointError::Malformed(format!(
+                "checkpoint path '{}' has no usable file name",
+                path.display()
+            ))
+        })?;
+    let payload_file = format!("{file_name}.bin");
+    let payload_path = path.with_file_name(&payload_file);
+
+    let mut payload: Vec<u8> = Vec::new();
+    let mut tensors: Vec<Json> = Vec::new();
+    let mut momenta: Vec<Json> = Vec::new();
+    for (section, entries) in [(&state.tensors, &mut tensors), (&state.momenta, &mut momenta)] {
+        for (name, t) in section.iter() {
+            let offset = payload.len();
+            for v in t.data() {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+            entries.push(Json::obj(vec![
+                ("name", Json::str(name)),
+                (
+                    "shape",
+                    Json::Arr(t.shape().iter().map(|&d| Json::num(d as f64)).collect()),
+                ),
+                ("dtype", Json::str("f32")),
+                ("offset", Json::num(offset as f64)),
+                ("bytes", Json::num((payload.len() - offset) as f64)),
+            ]));
+        }
+    }
+
+    let content_hash = md5_hex(&payload);
+    let seed = provenance
+        .and_then(|c| c.opt("seed"))
+        .and_then(|v| v.as_str().ok())
+        .unwrap_or("")
+        .to_string();
+    let manifest = Json::obj(vec![
+        ("format", Json::str(FORMAT)),
+        ("variant", Json::str(&variant.name)),
+        ("seed", Json::str(&seed)),
+        ("config", provenance.cloned().unwrap_or(Json::Null)),
+        ("payload_file", Json::str(&payload_file)),
+        ("payload_bytes", Json::num(payload.len() as f64)),
+        ("payload_md5", Json::str(&content_hash)),
+        ("tensors", Json::Arr(tensors)),
+        ("momenta", Json::Arr(momenta)),
+    ]);
+    validate_manifest(&manifest)?;
+
+    std::fs::write(&payload_path, &payload).map_err(|e| CheckpointError::Io {
+        path: payload_path.clone(),
+        source: e,
+    })?;
+    std::fs::write(path, manifest.to_pretty_string()).map_err(|e| CheckpointError::Io {
+        path: path.to_path_buf(),
+        source: e,
+    })?;
+    Ok(Saved {
+        manifest_path: path.to_path_buf(),
+        payload_path,
+        content_hash,
+        payload_bytes: payload.len(),
+    })
+}
+
+/// Read, verify, and reconstruct a checkpoint saved by [`save`].
+///
+/// Verification order gives each corruption mode its own error kind:
+/// manifest schema (including format version and manifest-internal shape
+/// consistency), then payload length vs `payload_bytes`
+/// ([`CheckpointError::Truncated`]), then payload MD5
+/// ([`CheckpointError::HashMismatch`]), then variant resolution against
+/// the builtin table / `artifacts_dir` manifest, then the tensor
+/// inventory vs the variant's plan ([`CheckpointError::VariantMismatch`]).
+pub fn load(path: &Path, artifacts_dir: &Path) -> Result<Loaded, CheckpointError> {
+    let text = std::fs::read_to_string(path).map_err(|e| CheckpointError::Io {
+        path: path.to_path_buf(),
+        source: e,
+    })?;
+    let manifest = parse(&text)
+        .map_err(|e| CheckpointError::Malformed(format!("manifest does not parse: {e:#}")))?;
+    validate_manifest(&manifest)?;
+
+    let declared = usize_key(&manifest, "payload_bytes")?;
+    let payload_path = path.with_file_name(str_key(&manifest, "payload_file")?);
+    let payload = std::fs::read(&payload_path).map_err(|e| CheckpointError::Io {
+        path: payload_path.clone(),
+        source: e,
+    })?;
+    if payload.len() != declared {
+        return Err(CheckpointError::Truncated {
+            want: declared,
+            got: payload.len(),
+        });
+    }
+    let content_hash = md5_hex(&payload);
+    let want_md5 = str_key(&manifest, "payload_md5")?;
+    if content_hash != want_md5 {
+        return Err(CheckpointError::HashMismatch {
+            want: want_md5.to_string(),
+            got: content_hash,
+        });
+    }
+
+    let mut sections: Vec<BTreeMap<String, Tensor>> = Vec::new();
+    for section in ["tensors", "momenta"] {
+        let mut map: BTreeMap<String, Tensor> = BTreeMap::new();
+        for e in entries(&manifest, section)? {
+            let name = str_key(e, "name")?.to_string();
+            let shape = e.get("shape").and_then(|v| v.as_usize_vec()).map_err(|err| {
+                CheckpointError::Malformed(format!("entry '{name}' shape: {err:#}"))
+            })?;
+            let offset = usize_key(e, "offset")?;
+            let bytes = usize_key(e, "bytes")?;
+            let data: Vec<f32> = payload[offset..offset + bytes]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let tensor = Tensor::from_vec(&shape, data).map_err(|err| {
+                CheckpointError::Malformed(format!("entry '{name}': {err:#}"))
+            })?;
+            if map.insert(name.clone(), tensor).is_some() {
+                return Err(CheckpointError::Malformed(format!(
+                    "duplicate {section} entry '{name}'"
+                )));
+            }
+        }
+        sections.push(map);
+    }
+    let momenta = sections.pop().expect("momenta section");
+    let tensors = sections.pop().expect("tensors section");
+    let state = ModelState { tensors, momenta };
+
+    let variant_name = str_key(&manifest, "variant")?.to_string();
+    let shared = NativeShared::resolve(&variant_name, artifacts_dir)
+        .map_err(|_| CheckpointError::UnknownVariant(variant_name.clone()))?;
+    check_inventory(&state, shared.variant())?;
+
+    let seed = str_key(&manifest, "seed")?.to_string();
+    let config = manifest.opt("config").cloned().unwrap_or(Json::Null);
+    Ok(Loaded {
+        state,
+        shared: Arc::new(shared),
+        content_hash,
+        seed,
+        config,
+        payload_bytes: declared,
+        manifest,
+    })
+}
+
+/// Structural schema check for a v1 manifest document. Pure — no
+/// filesystem access, so golden-fixture tests can call it directly.
+///
+/// Enforces: exact top-level key set, supported `format`, non-empty
+/// `variant`/`payload_file`, `config` object-or-null, 32-hex lowercase
+/// `payload_md5`, and per-entry consistency — dtype `f32`, `bytes` equal
+/// to `4 × Π(shape)` ([`CheckpointError::ShapeMismatch`] otherwise),
+/// contiguous offsets covering exactly `payload_bytes`.
+pub fn validate_manifest(j: &Json) -> Result<(), CheckpointError> {
+    let obj = j
+        .as_obj()
+        .map_err(|e| CheckpointError::Malformed(format!("manifest: {e:#}")))?;
+    let format = str_key(j, "format")?;
+    if format != FORMAT {
+        return Err(CheckpointError::UnsupportedFormat(format.to_string()));
+    }
+    // Exact key set: an extra or missing key is schema drift, which is a
+    // format version bump, not a silent extension.
+    const WANT_KEYS: [&str; 9] = [
+        "config",
+        "format",
+        "momenta",
+        "payload_bytes",
+        "payload_file",
+        "payload_md5",
+        "seed",
+        "tensors",
+        "variant",
+    ];
+    let keys: Vec<&str> = obj.keys().map(|s| s.as_str()).collect();
+    if keys != WANT_KEYS {
+        return Err(CheckpointError::Malformed(format!(
+            "manifest keys {keys:?}, schema v1 wants {WANT_KEYS:?}"
+        )));
+    }
+    if str_key(j, "variant")?.is_empty() {
+        return Err(CheckpointError::Malformed("empty 'variant'".into()));
+    }
+    if str_key(j, "payload_file")?.is_empty() {
+        return Err(CheckpointError::Malformed("empty 'payload_file'".into()));
+    }
+    str_key(j, "seed")?;
+    if !matches!(j.get("config").unwrap_or(&Json::Null), Json::Null | Json::Obj(_)) {
+        return Err(CheckpointError::Malformed(
+            "'config' must be an object or null".into(),
+        ));
+    }
+    let payload_bytes = usize_key(j, "payload_bytes")?;
+    let md5 = str_key(j, "payload_md5")?;
+    if md5.len() != 32 || !md5.bytes().all(|b| matches!(b, b'0'..=b'9' | b'a'..=b'f')) {
+        return Err(CheckpointError::Malformed(format!(
+            "'payload_md5' = '{md5}' is not a lowercase 32-hex digest"
+        )));
+    }
+
+    let mut offset = 0usize;
+    for section in ["tensors", "momenta"] {
+        let arr = entries(j, section)?;
+        if section == "tensors" && arr.is_empty() {
+            return Err(CheckpointError::Malformed("empty 'tensors' section".into()));
+        }
+        for e in arr {
+            let name = str_key(e, "name")?;
+            if name.is_empty() {
+                return Err(CheckpointError::Malformed(format!(
+                    "{section} entry with an empty name"
+                )));
+            }
+            let dtype = str_key(e, "dtype")?;
+            if dtype != "f32" {
+                return Err(CheckpointError::Malformed(format!(
+                    "entry '{name}' dtype '{dtype}' (only f32 in format v1)"
+                )));
+            }
+            let shape = e.get("shape").and_then(|v| v.as_usize_vec()).map_err(|err| {
+                CheckpointError::Malformed(format!("entry '{name}' shape: {err:#}"))
+            })?;
+            let bytes = usize_key(e, "bytes")?;
+            let off = usize_key(e, "offset")?;
+            let numel: usize = shape.iter().product();
+            if bytes != 4 * numel {
+                return Err(CheckpointError::ShapeMismatch(format!(
+                    "entry '{name}' declares shape {shape:?} ({numel} f32 values) \
+                     but {bytes} payload bytes"
+                )));
+            }
+            if off != offset {
+                return Err(CheckpointError::ShapeMismatch(format!(
+                    "entry '{name}' at offset {off}, expected {offset} \
+                     (sections must be contiguous, tensors then momenta)"
+                )));
+            }
+            offset += bytes;
+        }
+    }
+    if offset != payload_bytes {
+        return Err(CheckpointError::ShapeMismatch(format!(
+            "entries cover {offset} bytes, manifest declares payload_bytes={payload_bytes}"
+        )));
+    }
+    Ok(())
+}
+
+/// Whether `path` holds a versioned checkpoint manifest (JSON text) rather
+/// than a legacy `ABCK1` binary state file. Sniffs the first non-whitespace
+/// byte; unreadable paths read as `false`.
+pub fn is_checkpoint(path: &Path) -> bool {
+    let Ok(mut f) = std::fs::File::open(path) else {
+        return false;
+    };
+    let mut buf = [0u8; 64];
+    let n = std::io::Read::read(&mut f, &mut buf).unwrap_or(0);
+    buf[..n]
+        .iter()
+        .find(|&&b| !b.is_ascii_whitespace())
+        .is_some_and(|&b| b == b'{')
+}
+
+/// Lowercase MD5 of `values` as little-endian f32 bytes — the hashing rule
+/// the payload uses, reused to fingerprint eval probability tensors so
+/// bit-identity is checkable across threads, processes, and the wire.
+pub fn f32_md5(values: &[f32]) -> String {
+    let mut bytes = Vec::with_capacity(4 * values.len());
+    for v in values {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    md5_hex(&bytes)
+}
+
+/// Content hash of an in-memory state: the MD5 its payload *would* have if
+/// saved now. Format-independent — a legacy-loaded model and its re-saved
+/// checkpoint hash identically.
+pub fn state_md5(state: &ModelState) -> String {
+    let mut bytes = Vec::new();
+    for section in [&state.tensors, &state.momenta] {
+        for t in section.values() {
+            for v in t.data() {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+    md5_hex(&bytes)
+}
+
+fn str_key<'a>(j: &'a Json, key: &str) -> Result<&'a str, CheckpointError> {
+    j.get(key)
+        .and_then(|v| v.as_str())
+        .map_err(|e| CheckpointError::Malformed(format!("manifest key '{key}': {e:#}")))
+}
+
+fn usize_key(j: &Json, key: &str) -> Result<usize, CheckpointError> {
+    let x = j
+        .get(key)
+        .and_then(|v| v.as_f64())
+        .map_err(|e| CheckpointError::Malformed(format!("manifest key '{key}': {e:#}")))?;
+    if !(x.is_finite() && x >= 0.0 && x.fract() == 0.0 && x <= usize::MAX as f64) {
+        return Err(CheckpointError::Malformed(format!(
+            "manifest key '{key}' = {x} is not a non-negative integer"
+        )));
+    }
+    Ok(x as usize)
+}
+
+fn entries<'a>(j: &'a Json, key: &str) -> Result<&'a [Json], CheckpointError> {
+    j.get(key)
+        .and_then(|v| v.as_arr())
+        .map_err(|e| CheckpointError::Malformed(format!("manifest key '{key}': {e:#}")))
+}
+
+/// The loaded tensors must match the variant's plan exactly: every planned
+/// tensor present with its planned shape, no extras, and one momentum
+/// buffer per trainable tensor.
+fn check_inventory(state: &ModelState, variant: &Variant) -> Result<(), CheckpointError> {
+    for spec in &variant.tensors {
+        let Some(t) = state.tensors.get(&spec.name) else {
+            return Err(CheckpointError::VariantMismatch(format!(
+                "variant '{}' plans tensor '{}', checkpoint has none",
+                variant.name, spec.name
+            )));
+        };
+        if t.shape() != &spec.shape[..] {
+            return Err(CheckpointError::VariantMismatch(format!(
+                "tensor '{}' has shape {:?}, variant '{}' plans {:?}",
+                spec.name,
+                t.shape(),
+                variant.name,
+                spec.shape
+            )));
+        }
+    }
+    if state.tensors.len() != variant.tensors.len() {
+        return Err(CheckpointError::VariantMismatch(format!(
+            "checkpoint has {} tensors, variant '{}' plans {}",
+            state.tensors.len(),
+            variant.name,
+            variant.tensors.len()
+        )));
+    }
+    let trainable = variant
+        .tensors
+        .iter()
+        .filter(|t| t.role == Role::Trainable)
+        .count();
+    if state.momenta.len() != trainable {
+        return Err(CheckpointError::VariantMismatch(format!(
+            "checkpoint has {} momentum buffers, variant '{}' has {} trainable tensors",
+            state.momenta.len(),
+            variant.name,
+            trainable
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::builtin_variant;
+    use crate::runtime::state::InitConfig;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("airbench_ckpt_unit_{tag}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn save_load_preserves_every_bit() {
+        let v = builtin_variant("nano").unwrap();
+        let state = ModelState::init(&v, &InitConfig { dirac: true, seed: 3 });
+        let path = tmp("bits").join("model.ckpt");
+        let saved = save(&state, &v, None, &path).unwrap();
+        assert_eq!(saved.content_hash, state_md5(&state));
+        let loaded = load(&path, Path::new("artifacts")).unwrap();
+        assert_eq!(loaded.content_hash, saved.content_hash);
+        assert_eq!(loaded.state.tensors.len(), state.tensors.len());
+        for (name, t) in &state.tensors {
+            assert_eq!(loaded.state.tensors[name].data(), t.data(), "{name}");
+        }
+        for (name, m) in &state.momenta {
+            assert_eq!(loaded.state.momenta[name].data(), m.data(), "{name}");
+        }
+    }
+
+    #[test]
+    fn own_manifest_passes_validation_and_carries_provenance() {
+        let v = builtin_variant("nano").unwrap();
+        let state = ModelState::init(&v, &InitConfig { dirac: true, seed: 9 });
+        let prov = Json::obj(vec![("seed", Json::str("9")), ("variant", Json::str("nano"))]);
+        let path = tmp("prov").join("model.ckpt");
+        save(&state, &v, Some(&prov), &path).unwrap();
+        let j = parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        validate_manifest(&j).unwrap();
+        assert_eq!(j.get("seed").unwrap().as_str().unwrap(), "9");
+        assert_eq!(
+            j.get("config").unwrap().get("variant").unwrap().as_str().unwrap(),
+            "nano"
+        );
+        let loaded = load(&path, Path::new("artifacts")).unwrap();
+        assert_eq!(loaded.seed, "9");
+    }
+
+    #[test]
+    fn format_sniffing_tells_the_two_formats_apart() {
+        let v = builtin_variant("nano").unwrap();
+        let state = ModelState::init(&v, &InitConfig::default());
+        let dir = tmp("sniff");
+        let versioned = dir.join("model.ckpt");
+        let legacy = dir.join("legacy.bin");
+        save(&state, &v, None, &versioned).unwrap();
+        state.save(&legacy).unwrap();
+        assert!(is_checkpoint(&versioned));
+        assert!(!is_checkpoint(&legacy));
+        assert!(!is_checkpoint(&dir.join("missing.ckpt")));
+    }
+}

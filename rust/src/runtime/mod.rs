@@ -7,9 +7,12 @@
 //! `manifest` parses the JSON contract written by `python/compile/aot.py`
 //! (the native backend builds the same [`Variant`] structure from its
 //! built-in table); `state` owns the model/optimizer tensors host-side,
-//! shared by both backends.
+//! shared by both backends; `checkpoint` serializes that state as a
+//! versioned, content-hashed artifact (manifest + payload) with typed
+//! failure modes.
 
 pub mod backend;
+pub mod checkpoint;
 pub mod manifest;
 pub mod native;
 pub mod pjrt;
@@ -19,6 +22,7 @@ pub use backend::{
     create_backend, create_default_backend, Backend, BackendFactory, BackendKind, BackendStats,
     EngineSpec, PjrtStatus, StepOutput,
 };
+pub use checkpoint::{CheckpointError, Loaded, Saved};
 pub use manifest::{Manifest, ModuleSpec, Role, TensorSpec, Variant};
 pub use native::{NativeBackend, NativeShared, ThreadBudget};
 pub use pjrt::{cpu_client, PjrtBackend};

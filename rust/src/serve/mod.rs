@@ -13,6 +13,12 @@
 //! * **TCP** ([`serve_tcp`]) — `airbench serve --addr host:port`; one
 //!   session per connection, all sharing the engine's slot budget.
 //!
+//! The protocol is kind-agnostic: any [`JobSpec`] round-trips through a
+//! session unchanged, so the artifact lifecycle (`save` / `load` /
+//! `predict`, DESIGN.md §10) works over the same wire — a `load` warms a
+//! model in the engine's registry and later `predict` lines (same session
+//! or a later one on the same engine) hit it by id.
+//!
 //! Besides job specs, a session accepts one control message:
 //! `{"job": "cancel", "id": N}` requests cooperative cancellation of job
 //! `N` (acknowledged with a `log` event; the job then terminates with an

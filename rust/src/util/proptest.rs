@@ -31,6 +31,17 @@ pub fn check<T: std::fmt::Debug>(
     }
 }
 
+/// Case-count knob: `PROP_CASES=<n>` overrides `default` so CI can dial a
+/// property suite up (soak) or down (smoke) without a rebuild. Values that
+/// fail to parse, or parse to zero, fall back to `default`.
+pub fn cases_from_env(default: usize) -> usize {
+    std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(default)
+}
+
 /// Like [`check`] but the property returns `Result`, so `?` works inside.
 pub fn check_result<T: std::fmt::Debug, E: std::fmt::Debug>(
     name: &str,
@@ -62,5 +73,14 @@ mod tests {
     #[should_panic(expected = "property 'always_false' failed")]
     fn failing_property_panics_with_seed() {
         check("always_false", 5, |r| r.below(10), |_| false);
+    }
+
+    #[test]
+    fn cases_from_env_falls_back_to_the_default() {
+        // The suite does not set PROP_CASES, so the default must win; a
+        // zero or garbage value would also land here by the filter.
+        if std::env::var("PROP_CASES").is_err() {
+            assert_eq!(cases_from_env(7), 7);
+        }
     }
 }

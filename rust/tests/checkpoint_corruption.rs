@@ -1,0 +1,163 @@
+//! Corruption battery for the versioned checkpoint format (DESIGN.md §10).
+//!
+//! Every distinct way a checkpoint can be damaged must surface as its own
+//! typed [`CheckpointError`] kind — never a panic, never a misdiagnosis —
+//! and a failed engine-level `load` must leave the warm-model registry
+//! untouched.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use airbench::api::{Engine, EngineConfig, JobSpec, LoadJob};
+use airbench::runtime::checkpoint;
+use airbench::runtime::native::builtin_variant;
+use airbench::runtime::{InitConfig, ModelState};
+use airbench::util::json::{parse, Json};
+
+fn artifacts() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// A fresh, valid nano checkpoint in an isolated temp directory; each test
+/// corrupts its own copy.
+fn fresh_checkpoint(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("airbench_ckpt_corrupt_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let v = builtin_variant("nano").unwrap();
+    let state = ModelState::init(&v, &InitConfig { dirac: true, seed: 7 });
+    let path = dir.join("model.ckpt");
+    checkpoint::save(&state, &v, None, &path).unwrap();
+    path
+}
+
+/// Load must fail; return the typed error's kind discriminant.
+fn kind_of(path: &Path) -> &'static str {
+    match checkpoint::load(path, &artifacts()) {
+        Ok(_) => panic!("load of {} unexpectedly succeeded", path.display()),
+        Err(e) => e.kind(),
+    }
+}
+
+/// Parse the manifest, hand its top-level object to `f`, write it back.
+fn edit_manifest(path: &Path, f: impl FnOnce(&mut BTreeMap<String, Json>)) {
+    let mut j = parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+    let Json::Obj(map) = &mut j else {
+        panic!("manifest at {} is not a JSON object", path.display());
+    };
+    f(map);
+    std::fs::write(path, j.to_pretty_string()).unwrap();
+}
+
+#[test]
+fn truncated_payload_is_truncated_not_hash_mismatch() {
+    let path = fresh_checkpoint("truncate");
+    let payload_path = path.with_file_name("model.ckpt.bin");
+    let bytes = std::fs::read(&payload_path).unwrap();
+    std::fs::write(&payload_path, &bytes[..bytes.len() / 2]).unwrap();
+    assert_eq!(kind_of(&path), "truncated");
+}
+
+#[test]
+fn bit_flipped_payload_is_hash_mismatch() {
+    let path = fresh_checkpoint("bitflip");
+    let payload_path = path.with_file_name("model.ckpt.bin");
+    let mut bytes = std::fs::read(&payload_path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&payload_path, &bytes).unwrap();
+    assert_eq!(kind_of(&path), "hash_mismatch");
+}
+
+#[test]
+fn manifest_payload_shape_disagreement_is_shape_mismatch() {
+    let path = fresh_checkpoint("shape");
+    // Rewrite the first tensor entry's shape while leaving its byte count:
+    // the manifest now disagrees with itself about the payload layout.
+    edit_manifest(&path, |map| {
+        let Some(Json::Arr(tensors)) = map.get_mut("tensors") else {
+            panic!("manifest has no tensors array");
+        };
+        let Json::Obj(entry) = &mut tensors[0] else {
+            panic!("tensor entry is not an object");
+        };
+        entry.insert("shape".into(), Json::Arr(vec![Json::num(999.0)]));
+    });
+    assert_eq!(kind_of(&path), "shape_mismatch");
+}
+
+#[test]
+fn unknown_format_version_is_unsupported_format() {
+    let path = fresh_checkpoint("format");
+    edit_manifest(&path, |map| {
+        map.insert("format".into(), Json::str("airbench.checkpoint/99"));
+    });
+    assert_eq!(kind_of(&path), "unsupported_format");
+}
+
+#[test]
+fn wrong_variant_load_is_variant_mismatch() {
+    let path = fresh_checkpoint("variant");
+    // bench_tiny exists, but its tensor plan (widths 16/32/32) disagrees
+    // with the nano weights in the payload.
+    edit_manifest(&path, |map| {
+        map.insert("variant".into(), Json::str("bench_tiny"));
+    });
+    assert_eq!(kind_of(&path), "variant_mismatch");
+}
+
+#[test]
+fn nonexistent_variant_is_unknown_variant() {
+    let path = fresh_checkpoint("novariant");
+    edit_manifest(&path, |map| {
+        map.insert("variant".into(), Json::str("no_such_variant"));
+    });
+    assert_eq!(kind_of(&path), "unknown_variant");
+}
+
+#[test]
+fn manifest_that_is_not_json_is_malformed() {
+    let path = fresh_checkpoint("notjson");
+    std::fs::write(&path, "{ this is not json").unwrap();
+    assert_eq!(kind_of(&path), "malformed");
+}
+
+#[test]
+fn engine_load_failures_are_typed_errors_and_leave_the_registry_empty() {
+    let corrupted = fresh_checkpoint("engine");
+    let payload_path = corrupted.with_file_name("model.ckpt.bin");
+    let mut bytes = std::fs::read(&payload_path).unwrap();
+    bytes[0] ^= 0x01;
+    std::fs::write(&payload_path, &bytes).unwrap();
+
+    let engine = Engine::new(EngineConfig::default());
+    let err = engine
+        .submit(JobSpec::Load(LoadJob {
+            path: corrupted,
+            id: None,
+        }))
+        .wait()
+        .unwrap_err()
+        .to_string();
+    assert!(
+        err.contains("checkpoint error (hash_mismatch)"),
+        "corrupted load error should carry the typed kind, got: {err}"
+    );
+
+    let err = engine
+        .submit(JobSpec::Load(LoadJob {
+            path: PathBuf::from("/no/such/dir/model.ckpt"),
+            id: None,
+        }))
+        .wait()
+        .unwrap_err()
+        .to_string();
+    assert!(
+        err.contains("checkpoint error (io)"),
+        "missing-file load error should carry the typed kind, got: {err}"
+    );
+
+    assert!(
+        engine.registry().is_empty(),
+        "failed loads must not register warm models"
+    );
+}

@@ -1,0 +1,79 @@
+//! Golden-manifest pin for checkpoint format v1 (DESIGN.md §10).
+//!
+//! `tests/fixtures/checkpoint_manifest_v1.json` is the committed witness
+//! of the on-disk schema: it must stay valid under [`validate_manifest`],
+//! and what [`save`] emits must carry exactly the golden key sets. Any
+//! schema drift is a deliberate format-version bump — update the fixture,
+//! the `FORMAT` constant, and the pin below together.
+//!
+//! [`validate_manifest`]: airbench::runtime::checkpoint::validate_manifest
+//! [`save`]: airbench::runtime::checkpoint::save
+
+use std::path::{Path, PathBuf};
+
+use airbench::runtime::checkpoint;
+use airbench::runtime::native::builtin_variant;
+use airbench::runtime::{InitConfig, ModelState};
+use airbench::util::json::{parse, Json};
+
+fn golden() -> Json {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/checkpoint_manifest_v1.json");
+    parse(&std::fs::read_to_string(&path).unwrap()).unwrap()
+}
+
+fn top_keys(j: &Json) -> Vec<String> {
+    j.as_obj().unwrap().keys().cloned().collect()
+}
+
+fn entry_keys(j: &Json, section: &str) -> Vec<String> {
+    top_keys(&j.get(section).unwrap().as_arr().unwrap()[0])
+}
+
+#[test]
+fn golden_manifest_is_schema_valid_and_pins_format_v1() {
+    let j = golden();
+    checkpoint::validate_manifest(&j).unwrap();
+    assert_eq!(j.get("format").unwrap().as_str().unwrap(), checkpoint::FORMAT);
+    assert_eq!(
+        checkpoint::FORMAT,
+        "airbench.checkpoint/1",
+        "changing the format string is a version bump: update the golden \
+         fixture and this pin in the same change"
+    );
+    for section in ["tensors", "momenta"] {
+        for e in j.get(section).unwrap().as_arr().unwrap() {
+            assert_eq!(
+                e.get("dtype").unwrap().as_str().unwrap(),
+                "f32",
+                "format v1 payloads are f32-only"
+            );
+        }
+    }
+}
+
+#[test]
+fn a_fresh_save_carries_exactly_the_golden_key_sets() {
+    let v = builtin_variant("nano").unwrap();
+    let state = ModelState::init(&v, &InitConfig::default());
+    let dir: PathBuf = std::env::temp_dir().join("airbench_ckpt_golden");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.ckpt");
+    checkpoint::save(&state, &v, None, &path).unwrap();
+
+    let fresh = parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    checkpoint::validate_manifest(&fresh).unwrap();
+    let j = golden();
+    assert_eq!(
+        top_keys(&fresh),
+        top_keys(&j),
+        "fresh manifests and the golden fixture must agree on the top-level schema"
+    );
+    for section in ["tensors", "momenta"] {
+        assert_eq!(
+            entry_keys(&fresh, section),
+            entry_keys(&j, section),
+            "{section} entry schema drifted from the golden fixture"
+        );
+    }
+}

@@ -1,0 +1,121 @@
+//! Round-trip determinism contract for versioned checkpoints
+//! (DESIGN.md §10): save → load → save is byte-identical, and a loaded
+//! model's eval logits match the source bit-exactly at every kernel
+//! thread count.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::ensure;
+
+use airbench::config::TtaLevel;
+use airbench::coordinator::evaluate;
+use airbench::data::synthetic::{cifar_like, SynthConfig};
+use airbench::runtime::checkpoint;
+use airbench::runtime::native::builtin_variant;
+use airbench::runtime::{InitConfig, ModelState, NativeBackend};
+use airbench::util::proptest::{cases_from_env, check_result};
+
+fn artifacts() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("airbench_ckpt_rt_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn save_load_save_is_byte_identical() {
+    check_result(
+        "checkpoint_round_trip",
+        cases_from_env(4),
+        |rng| rng.below(1 << 30) as u64,
+        |&seed| -> anyhow::Result<()> {
+            let v = builtin_variant("nano").unwrap();
+            let state = ModelState::init(&v, &InitConfig { dirac: true, seed });
+            let dir = tmp(&format!("prop_{seed}"));
+            let (dir_a, dir_b) = (dir.join("a"), dir.join("b"));
+            std::fs::create_dir_all(&dir_a)?;
+            std::fs::create_dir_all(&dir_b)?;
+
+            // Same manifest file name in both directories so the manifests
+            // (which embed the payload file name) can be byte-compared.
+            let a = checkpoint::save(&state, &v, None, &dir_a.join("model.ckpt"))?;
+            let loaded = checkpoint::load(&a.manifest_path, &artifacts())?;
+            ensure!(
+                loaded.content_hash == a.content_hash,
+                "content hash drifted across load"
+            );
+            for (name, t) in &state.tensors {
+                ensure!(
+                    loaded.state.tensors[name].data() == t.data(),
+                    "tensor '{name}' not bit-identical after load"
+                );
+            }
+            for (name, m) in &state.momenta {
+                ensure!(
+                    loaded.state.momenta[name].data() == m.data(),
+                    "momentum '{name}' not bit-identical after load"
+                );
+            }
+
+            let b = checkpoint::save(
+                &loaded.state,
+                loaded.shared.variant(),
+                None,
+                &dir_b.join("model.ckpt"),
+            )?;
+            ensure!(
+                b.content_hash == a.content_hash,
+                "re-save changed the content hash"
+            );
+            ensure!(
+                std::fs::read(&a.payload_path)? == std::fs::read(&b.payload_path)?,
+                "re-saved payload is not byte-identical"
+            );
+            ensure!(
+                std::fs::read(&a.manifest_path)? == std::fs::read(&b.manifest_path)?,
+                "re-saved manifest is not byte-identical"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn loaded_model_logits_bit_identical_across_thread_counts() {
+    let v = builtin_variant("nano").unwrap();
+    let state = ModelState::init(&v, &InitConfig { dirac: true, seed: 11 });
+    let path = tmp("logits").join("model.ckpt");
+    checkpoint::save(&state, &v, None, &path).unwrap();
+    let loaded = checkpoint::load(&path, &artifacts()).unwrap();
+
+    let ds = cifar_like(&SynthConfig::default().with_n(32), 0xC0FFEE, 1);
+    let mut fingerprints: Vec<String> = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let mut source = NativeBackend::from_variant(v.clone()).with_threads(threads);
+        let source_out = evaluate(&mut source, &state, &ds, TtaLevel::None).unwrap();
+
+        let mut warm =
+            NativeBackend::from_shared(Arc::clone(&loaded.shared)).with_threads(threads);
+        let warm_out = evaluate(&mut warm, &loaded.state, &ds, TtaLevel::None).unwrap();
+
+        let source_md5 = checkpoint::f32_md5(source_out.probs.data());
+        let warm_md5 = checkpoint::f32_md5(warm_out.probs.data());
+        assert_eq!(
+            source_md5, warm_md5,
+            "loaded logits diverge from source at threads={threads}"
+        );
+        assert_eq!(
+            source_out.predictions, warm_out.predictions,
+            "predictions diverge at threads={threads}"
+        );
+        fingerprints.push(source_md5);
+    }
+    assert!(
+        fingerprints.windows(2).all(|w| w[0] == w[1]),
+        "logits are thread-count dependent: {fingerprints:?}"
+    );
+}

@@ -9,15 +9,22 @@
 //!   terminal`), and every `result` event is schema-valid;
 //! * the cancel control message terminates a job with the `"cancelled"`
 //!   error; malformed lines are rejected without killing the session.
+//!
+//! Plus the PR 6 artifact contract: a `load` warms a model in the engine
+//! registry, concurrent `predict` jobs against it are bit-identical to a
+//! direct eval, and a bad `load` is a typed error the session survives.
 
 use std::io::Cursor;
 use std::sync::{Arc, Mutex};
 
-use airbench::api::{validate_result, Engine, EngineConfig, JobResult, JobSpec, TrainJob};
-use airbench::config::TrainConfig;
-use airbench::coordinator::{run_fleet, train, warmup};
+use airbench::api::{
+    validate_result, Engine, EngineConfig, JobResult, JobSpec, LoadJob, PredictJob, TrainJob,
+};
+use airbench::config::{TrainConfig, TtaLevel};
+use airbench::coordinator::{evaluate, run_fleet, train, warmup};
 use airbench::experiments::{make_data, DataKind};
-use airbench::runtime::{BackendKind, EngineSpec};
+use airbench::runtime::native::builtin_variant;
+use airbench::runtime::{checkpoint, BackendKind, EngineSpec, InitConfig, ModelState};
 use airbench::serve::run_session;
 use airbench::util::json::{parse, Json};
 
@@ -257,6 +264,107 @@ fn serve_cancel_control_message_stops_a_job() {
         "cancelled",
         "cancelled jobs must terminate with the 'cancelled' error"
     );
+}
+
+#[test]
+fn serve_predict_on_a_warm_model_matches_the_direct_eval() {
+    // A known model on disk, evaluated directly as the reference.
+    let variant = builtin_variant("nano").unwrap();
+    let state = ModelState::init(&variant, &InitConfig { dirac: true, seed: 21 });
+    let dir = std::env::temp_dir().join("airbench_serve_predict");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("model.ckpt");
+    checkpoint::save(&state, &variant, None, &ckpt).unwrap();
+
+    let (_train_ds, test_ds) = make_data(DataKind::Cifar10, TRAIN_N, TEST_N);
+    let f = EngineSpec::new(BackendKind::Native, "nano").factory().unwrap();
+    let mut worker = f.spawn().unwrap();
+    let direct = evaluate(worker.as_mut(), &state, &test_ds, TtaLevel::None).unwrap();
+    let direct_md5 = checkpoint::f32_md5(direct.probs.data());
+    let direct_preds: Vec<usize> = direct.predictions.iter().map(|&p| p as usize).collect();
+
+    // Session 1 warms the model into the registry; session 2 (same
+    // engine, as with a TCP daemon serving two connections) runs two
+    // concurrent predicts against the warm entry.
+    let engine = engine_with_slots(2);
+    let load_spec = JobSpec::Load(LoadJob {
+        path: ckpt,
+        id: Some("warm".to_string()),
+    })
+    .to_json()
+    .to_string();
+    let (stats, events) = run_serve(&engine, &format!("{load_spec}\n"));
+    assert_eq!(stats.submitted, 1);
+    let seq = events_for(&events, 1);
+    let last = assert_wellformed(&seq);
+    assert_eq!(event_type(last), "result", "load failed: {last:?}");
+    let result = last.get("result").unwrap();
+    validate_result(result).expect("schema-valid load result");
+    assert_eq!(result.get("kind").unwrap().as_str().unwrap(), "load");
+    assert_eq!(engine.registry().len(), 1, "load must warm exactly one model");
+
+    let predict_spec = JobSpec::Predict(PredictJob {
+        model: Some("warm".to_string()),
+        load: None,
+        data: DataKind::Cifar10,
+        test_n: Some(TEST_N),
+        tta: TtaLevel::None,
+    })
+    .to_json()
+    .to_string();
+    let (stats, events) = run_serve(&engine, &format!("{predict_spec}\n{predict_spec}\n"));
+    assert_eq!(stats.submitted, 2);
+    for job in 2..=3u64 {
+        let seq = events_for(&events, job);
+        let last = assert_wellformed(&seq);
+        assert_eq!(event_type(last), "result", "predict job {job} failed: {last:?}");
+        let result = last.get("result").unwrap();
+        validate_result(result).expect("schema-valid predict result");
+        assert_eq!(result.get("kind").unwrap().as_str().unwrap(), "predict");
+        let data = result.get("data").unwrap();
+        assert_eq!(
+            data.get("probs_md5").unwrap().as_str().unwrap(),
+            direct_md5,
+            "served predict logits are not bit-identical to the direct eval"
+        );
+        assert_eq!(
+            data.get("predictions").unwrap().as_usize_vec().unwrap(),
+            direct_preds,
+            "served predictions differ from the direct eval"
+        );
+    }
+}
+
+#[test]
+fn serve_load_of_a_bad_path_is_a_typed_error_and_the_session_survives() {
+    let engine = engine_with_slots(1);
+    let load_spec = JobSpec::Load(LoadJob {
+        path: "/no/such/checkpoint.ckpt".into(),
+        id: None,
+    })
+    .to_json()
+    .to_string();
+    let input = format!("{load_spec}\n{{\"job\": \"info\"}}\n");
+    let (stats, events) = run_serve(&engine, &input);
+    assert_eq!(stats.submitted, 2);
+
+    let seq = events_for(&events, 1);
+    let last = assert_wellformed(&seq);
+    assert_eq!(event_type(last), "error", "bad-path load must fail: {last:?}");
+    let message = last.get("message").unwrap().as_str().unwrap();
+    assert!(
+        message.contains("checkpoint error (io)"),
+        "wire error must carry the typed kind, got: {message}"
+    );
+    assert!(
+        engine.registry().is_empty(),
+        "a failed load must leave the registry untouched"
+    );
+
+    // The session survived: the follow-up info job completed normally.
+    let seq = events_for(&events, 2);
+    let last = assert_wellformed(&seq);
+    assert_eq!(event_type(last), "result");
 }
 
 #[test]
