@@ -28,7 +28,7 @@ use airbench::data::synthetic::{cifar_like, SynthConfig};
 use airbench::experiments::{DataKind, Lab};
 use airbench::rng::Rng;
 use airbench::runtime::native::ops;
-use airbench::runtime::{Backend, InitConfig, ModelState, PjrtStatus};
+use airbench::runtime::{Backend, EvalPrecision, InitConfig, ModelState, PjrtStatus};
 use airbench::tensor::Tensor;
 use airbench::util::benchmark::Bench;
 use airbench::whitening::whitening_weights;
@@ -145,11 +145,12 @@ fn bench_conv_kernels() {
             }
             out
         });
+        let kern = airbench::runtime::native::simd::selected();
         let blocked = bench.run(&format!("blocked conv cin={cin:<2} h={h:<2} cout={cout}"), || {
-            let out = ops::conv2d_fwd(&x, &wt, pad, threads);
+            let out = ops::conv2d_fwd(&x, &wt, pad, threads, kern, EvalPrecision::F32);
             if has_bwd {
-                let dx = ops::conv2d_bwd_data(&dy, &wt, pad, h, h, threads);
-                let dw = ops::conv2d_bwd_weights(&x, &dy, pad, k, k, threads);
+                let dx = ops::conv2d_bwd_data(&dy, &wt, pad, h, h, threads, kern);
+                let dw = ops::conv2d_bwd_weights(&x, &dy, pad, k, k, threads, kern);
                 std::hint::black_box((dx, dw));
             }
             out

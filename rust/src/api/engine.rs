@@ -49,8 +49,8 @@ use crate::experiments::{make_data, DataKind, Scale};
 use crate::runtime::checkpoint;
 use crate::runtime::native::available_cores;
 use crate::runtime::{
-    Backend, BackendFactory, BackendKind, EngineSpec, Manifest, ModelState, NativeShared,
-    PjrtStatus, ThreadBudget,
+    Backend, BackendFactory, BackendKind, EngineSpec, EvalPrecision, Manifest, ModelState,
+    NativeShared, PjrtStatus, ThreadBudget,
 };
 use crate::util::json::Json;
 
@@ -514,6 +514,12 @@ fn exec_eval(inner: &Inner, id: JobId, job: EvalJob, sink: &mut ChannelSink) -> 
     started(sink, id, "eval", factory.kind().name(), &cfg.variant);
     let mut engine = inner.spawn_worker(&factory)?;
     state.validate(engine.variant())?;
+    if job.precision != EvalPrecision::F32 {
+        // Non-default precision must be honored or refused — never
+        // silently evaluated at f32 (the trait default rejects bf16).
+        engine.set_eval_precision(job.precision)?;
+        sink.on_log(&format!("[eval] precision={}", job.precision.name()));
+    }
     let out = evaluate_observed(engine.as_mut(), &state, &test_ds, cfg.tta, sink)?;
     Ok(JobResult::Eval {
         accuracy: out.accuracy,
@@ -790,6 +796,10 @@ fn exec_predict(
     started(sink, id, "predict", factory.kind().name(), &variant_name);
     let mut engine = inner.spawn_worker(&factory)?;
     state.validate(engine.variant())?;
+    if job.precision != EvalPrecision::F32 {
+        engine.set_eval_precision(job.precision)?;
+        sink.on_log(&format!("[predict] precision={}", job.precision.name()));
+    }
     let (_, test_ds) = inner.data(job.data, None, job.test_n);
     let out = evaluate_observed(engine.as_mut(), &state, &test_ds, job.tta, sink)?;
     Ok(JobResult::Predict {
@@ -923,12 +933,36 @@ fn exec_info(inner: &Inner, id: JobId, job: InfoJob, sink: &mut ChannelSink) -> 
             }
         }
     }
+    // What the native GEMM will run on this machine: the selected register
+    // tile, the detected SIMD features, and the kernel thread default —
+    // the same facts a BENCH env block records (schema v2).
+    let simd = crate::runtime::native::simd::selected();
+    let cpu = Json::obj(vec![
+        ("arch", Json::str(std::env::consts::ARCH)),
+        ("os", Json::str(std::env::consts::OS)),
+        ("kernel", Json::str(simd.name())),
+        (
+            "features",
+            Json::Arr(
+                crate::runtime::native::simd::cpu_features()
+                    .iter()
+                    .map(|f| Json::str(f))
+                    .collect(),
+            ),
+        ),
+        (
+            "threads",
+            Json::num(crate::runtime::native::default_threads() as f64),
+        ),
+        ("cores", Json::num(available_cores() as f64)),
+    ]);
     let mut pairs = vec![
         (
             "artifacts_dir",
             Json::str(&dir.display().to_string()),
         ),
         ("manifest", Json::Bool(manifest.is_some())),
+        ("cpu", cpu),
         ("variants", Json::Arr(variants)),
     ];
     pairs.append(&mut extras);

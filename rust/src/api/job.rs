@@ -21,7 +21,7 @@ use anyhow::{bail, Context, Result};
 use crate::bench::{BenchConfig, FleetBenchConfig};
 use crate::config::{TrainConfig, TtaLevel};
 use crate::experiments::DataKind;
-use crate::runtime::BackendKind;
+use crate::runtime::{BackendKind, EvalPrecision};
 use crate::util::json::Json;
 
 /// One training run (the CLI's `train` command).
@@ -66,6 +66,9 @@ pub struct EvalJob {
     pub load: PathBuf,
     /// Test-set size override.
     pub test_n: Option<usize>,
+    /// Storage precision of the eval forward pass (`bf16` rounds the GEMM
+    /// B panels to bf16, f32 accumulate — native backend only).
+    pub precision: EvalPrecision,
 }
 
 /// An n-run statistical experiment (the CLI's `fleet` command).
@@ -178,6 +181,9 @@ pub struct PredictJob {
     pub test_n: Option<usize>,
     /// Test-time-augmentation level for the prediction pass.
     pub tta: TtaLevel,
+    /// Storage precision of the prediction forward pass (see
+    /// [`EvalJob::precision`]).
+    pub precision: EvalPrecision,
 }
 
 impl Default for PredictJob {
@@ -188,6 +194,7 @@ impl Default for PredictJob {
             data: DataKind::Cifar10,
             test_n: None,
             tta: TtaLevel::None,
+            precision: EvalPrecision::F32,
         }
     }
 }
@@ -292,6 +299,22 @@ fn parse_backend(j: &Json, default: BackendKind) -> Result<BackendKind> {
     }
 }
 
+fn parse_precision(j: &Json) -> Result<EvalPrecision> {
+    match opt_str(j, "precision")? {
+        None => Ok(EvalPrecision::F32),
+        Some(s) => EvalPrecision::parse(&s)
+            .ok_or_else(|| anyhow::anyhow!("unknown precision '{s}' (f32|bf16)")),
+    }
+}
+
+fn push_precision(pairs: &mut Vec<(&'static str, Json)>, p: EvalPrecision) {
+    // f32 is the default: omit it so v-next documents stay readable by
+    // pre-PR 7 parsers that reject unknown keys.
+    if p != EvalPrecision::F32 {
+        pairs.push(("precision", Json::str(p.name())));
+    }
+}
+
 fn push_opt_num(pairs: &mut Vec<(&'static str, Json)>, key: &'static str, v: Option<usize>) {
     if let Some(x) = v {
         pairs.push((key, Json::num(x as f64)));
@@ -338,6 +361,7 @@ impl JobSpec {
                 p.push(("config", e.config.to_json()));
                 p.push(("load", Json::str(&e.load.display().to_string())));
                 push_opt_num(&mut p, "test_n", e.test_n);
+                push_precision(&mut p, e.precision);
             }
             JobSpec::Fleet(f) => {
                 p.push(("data", Json::str(f.data.name())));
@@ -412,6 +436,7 @@ impl JobSpec {
                 p.push(("data", Json::str(pr.data.name())));
                 push_opt_num(&mut p, "test_n", pr.test_n);
                 p.push(("tta", Json::str(pr.tta.name())));
+                push_precision(&mut p, pr.precision);
             }
         }
         Json::obj(p)
@@ -443,6 +468,7 @@ impl JobSpec {
                 load: opt_path(j, "load")?
                     .ok_or_else(|| anyhow::anyhow!("eval jobs need a 'load' checkpoint path"))?,
                 test_n: opt_usize(j, "test_n")?,
+                precision: parse_precision(j)?,
             }),
             "fleet" => {
                 let d = FleetJob::default();
@@ -526,6 +552,7 @@ impl JobSpec {
                         anyhow::anyhow!("unknown tta '{s}' (0|none|1|mirror|2|multicrop)")
                     })?,
                 },
+                precision: parse_precision(j)?,
             }),
             other => bail!(
                 "unknown job kind '{other}' \
@@ -593,11 +620,24 @@ mod tests {
             data: DataKind::Cifar10,
             load: PathBuf::from("model.bin"),
             test_n: Some(64),
+            precision: EvalPrecision::Bf16,
         };
         match round_trip(&JobSpec::Eval(e)) {
-            JobSpec::Eval(e) => assert_eq!(e.test_n, Some(64)),
+            JobSpec::Eval(e) => {
+                assert_eq!(e.test_n, Some(64));
+                assert_eq!(e.precision, EvalPrecision::Bf16);
+            }
             other => panic!("wrong kind: {other:?}"),
         }
+        // Absent precision is f32; bad precision is a parse error.
+        match JobSpec::from_json(&parse(r#"{"job": "eval", "load": "m.bin"}"#).unwrap()).unwrap() {
+            JobSpec::Eval(e) => assert_eq!(e.precision, EvalPrecision::F32),
+            other => panic!("wrong kind: {other:?}"),
+        }
+        assert!(JobSpec::from_json(
+            &parse(r#"{"job": "eval", "load": "m.bin", "precision": "fp8"}"#).unwrap()
+        )
+        .is_err());
     }
 
     #[test]
@@ -704,7 +744,16 @@ mod tests {
             JobSpec::Predict(p) => {
                 assert_eq!(p.tta, TtaLevel::None);
                 assert_eq!(p.data, DataKind::Cifar10);
+                assert_eq!(p.precision, EvalPrecision::F32);
             }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        match JobSpec::from_json(
+            &parse(r#"{"job": "predict", "model": "m1", "precision": "bf16"}"#).unwrap(),
+        )
+        .unwrap()
+        {
+            JobSpec::Predict(p) => assert_eq!(p.precision, EvalPrecision::Bf16),
             other => panic!("wrong kind: {other:?}"),
         }
     }

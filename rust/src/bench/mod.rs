@@ -36,9 +36,17 @@ use crate::runtime::{create_default_backend, Backend, BackendKind, EngineSpec, I
 use crate::stats::basic::{Summary, Welford};
 use crate::util::json::Json;
 
-/// Schema identifier written into (and required from) every single-run
-/// `BENCH_*.json` (the fleet phase uses [`FLEET_SCHEMA`]).
-pub const SCHEMA: &str = "airbench.bench/1";
+/// Schema identifier written into every single-run `BENCH_*.json` (the
+/// fleet phase uses [`FLEET_SCHEMA`]). Version 2 adds the `env.kernel` and
+/// `env.cpu_features` fields so baselines measured on different ISAs (or
+/// different GEMM register tiles) can't be silently compared — see
+/// [`comparable`].
+pub const SCHEMA: &str = "airbench.bench/2";
+
+/// Previous single-run schema (PR 3–PR 6 baselines). Still validated so
+/// committed history stays checkable; [`comparable`] treats its missing
+/// kernel field as "unknown" and refuses cross-version perf comparison.
+pub const SCHEMA_V1: &str = "airbench.bench/1";
 
 /// Schema identifier of fleet-throughput reports (`airbench bench --fleet`).
 pub const FLEET_SCHEMA: &str = "airbench.fleet-bench/1";
@@ -152,9 +160,15 @@ pub struct Report {
     pub batch_train: usize,
     /// Protocol knobs, echoed for reproducibility.
     pub config: BenchConfig,
-    /// Native kernel threads in effect during the measurement (0 when the
-    /// measured backend is not the native one — the knob does not apply).
+    /// Kernel threads the measured backend actually used (reported by
+    /// [`Backend::kernel_threads`]; 0 when the knob does not apply — PJRT
+    /// owns its own threading).
     pub threads: usize,
+    /// GEMM register tile the measured backend ran ([`Backend::kernel_name`];
+    /// `"-"` for backends without a dispatchable kernel).
+    pub kernel: String,
+    /// SIMD features detected on the measuring CPU (empty on non-x86).
+    pub cpu_features: Vec<String>,
     /// Micro phase: per-run *median* train-step milliseconds.
     pub step_ms: Dist,
     /// Micro phase: state init + whitening milliseconds.
@@ -225,6 +239,11 @@ impl Report {
                     ("workers", Json::num(c.workers as f64)),
                     ("os", Json::str(std::env::consts::OS)),
                     ("arch", Json::str(std::env::consts::ARCH)),
+                    ("kernel", Json::str(&self.kernel)),
+                    (
+                        "cpu_features",
+                        Json::Arr(self.cpu_features.iter().map(|f| Json::str(f)).collect()),
+                    ),
                 ]),
             ),
             (
@@ -293,8 +312,8 @@ impl Report {
 /// writing and by the schema smoke test on committed baselines.
 pub fn validate(j: &Json) -> Result<()> {
     let schema = j.get("schema")?.as_str()?;
-    if schema != SCHEMA {
-        bail!("unknown bench schema '{schema}' (want '{SCHEMA}')");
+    if schema != SCHEMA && schema != SCHEMA_V1 {
+        bail!("unknown bench schema '{schema}' (want '{SCHEMA}' or '{SCHEMA_V1}')");
     }
     for key in ["tag", "backend", "variant"] {
         let s = j.get(key)?.as_str()?;
@@ -318,6 +337,15 @@ pub fn validate(j: &Json) -> Result<()> {
     env.get("threads")?.as_usize()?;
     env.get("os")?.as_str()?;
     env.get("arch")?.as_str()?;
+    if schema == SCHEMA {
+        // v2: the measuring ISA must be on the record.
+        if env.get("kernel")?.as_str()?.is_empty() {
+            bail!("env.kernel must be a non-empty string (v2)");
+        }
+        for f in env.get("cpu_features")?.as_arr()? {
+            f.as_str()?;
+        }
+    }
     let phases = j.get("phases")?.as_obj()?;
     for key in [
         "train_step_ms",
@@ -358,6 +386,38 @@ pub fn validate(j: &Json) -> Result<()> {
         bs.get(key)?.as_f64()?;
     }
     Ok(())
+}
+
+/// Whether two single-run bench reports are a fair perf comparison: same
+/// backend, same variant, same arch, and — when both documents record one
+/// (schema v2) — the same GEMM kernel. A v1 document's kernel is unknown,
+/// so v1-vs-v2 refuses rather than silently comparing a scalar baseline
+/// against an AVX2 run. Errors name the mismatched field.
+pub fn comparable(a: &Json, b: &Json) -> Result<()> {
+    validate(a)?;
+    validate(b)?;
+    for key in ["backend", "variant"] {
+        let (x, y) = (a.get(key)?.as_str()?, b.get(key)?.as_str()?);
+        if x != y {
+            bail!("reports are not comparable: {key} '{x}' vs '{y}'");
+        }
+    }
+    let (ea, eb) = (a.get("env")?, b.get("env")?);
+    let (xa, xb) = (ea.get("arch")?.as_str()?, eb.get("arch")?.as_str()?);
+    if xa != xb {
+        bail!("reports are not comparable: env.arch '{xa}' vs '{xb}'");
+    }
+    let kernel = |e: &Json| e.get("kernel").and_then(|k| k.as_str().map(str::to_string)).ok();
+    match (kernel(ea), kernel(eb)) {
+        (Some(ka), Some(kb)) if ka == kb => Ok(()),
+        (Some(ka), Some(kb)) => {
+            bail!("reports are not comparable: env.kernel '{ka}' vs '{kb}'")
+        }
+        _ => bail!(
+            "reports are not comparable: at least one predates schema v2 and does \
+             not record env.kernel (re-run `airbench bench` to regenerate it)"
+        ),
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -757,11 +817,14 @@ pub fn run_observed(cfg: &BenchConfig, obs: &mut dyn Observer) -> Result<Report>
         variant: cfg.variant.clone(),
         batch_train: batch,
         config: cfg.clone(),
-        threads: if engine.name() == "native" {
-            crate::runtime::native::default_threads()
-        } else {
-            0
-        },
+        // The engine reports the thread count its kernels actually use —
+        // not the process default, which a builder override may differ from.
+        threads: engine.kernel_threads(),
+        kernel: engine.kernel_name().to_string(),
+        cpu_features: crate::runtime::native::simd::cpu_features()
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
         step_ms: Dist::default(),
         init_ms: Dist::default(),
         eval_ms: Dist::default(),
@@ -860,5 +923,55 @@ mod tests {
         // structural damage.
         assert!(validate(&parse("{}").unwrap()).is_err());
         assert!(validate(&parse(r#"{"schema": "nope"}"#).unwrap()).is_err());
+    }
+
+    /// The smallest document [`validate`] accepts, with the fields the
+    /// ISA-comparability guard dispatches on left substitutable.
+    fn minimal_doc(schema: &str, arch: &str, kernel_field: &str) -> crate::util::json::Json {
+        let phase = r#"{"n": 1, "mean": 1.0, "std": 0.0, "min": 1.0, "max": 1.0, "median": 1.0, "per_run": [1.0]}"#;
+        let s = format!(
+            r#"{{
+              "schema": "{schema}", "tag": "t", "backend": "native", "variant": "nano",
+              "created_unix": 0,
+              "protocol": {{"warmup_runs": 1, "runs": 1, "seeds": [0], "steps_per_run": 1,
+                            "epochs": 1.0, "train_n": 1, "test_n": 1, "batch_train": 1}},
+              "env": {{"threads": 1, "workers": 0, "os": "linux", "arch": "{arch}"{kernel_field}}},
+              "phases": {{"train_step_ms": {phase}, "init_ms": {phase}, "eval_ms": {phase},
+                          "run_s": {phase}, "run_train_s": {phase}, "run_eval_s": {phase},
+                          "run_acc": {phase}}},
+              "derived": {{"flops_per_step": 1.0, "train_gflops": 1.0}},
+              "backend_stats": {{"train_steps": 1, "train_exec_secs": 1.0, "compile_secs": 0.0}}
+            }}"#
+        );
+        crate::util::json::parse(&s).unwrap()
+    }
+
+    const V2_KERNEL: &str = r#", "kernel": "scalar_4x8", "cpu_features": ["sse2"]"#;
+
+    #[test]
+    fn validate_accepts_both_schema_versions() {
+        validate(&minimal_doc(SCHEMA, "x86_64", V2_KERNEL)).unwrap();
+        // v1 (no kernel fields) must stay checkable — committed baselines.
+        validate(&minimal_doc(SCHEMA_V1, "x86_64", "")).unwrap();
+        // v2 without the kernel record is invalid.
+        assert!(validate(&minimal_doc(SCHEMA, "x86_64", "")).is_err());
+    }
+
+    #[test]
+    fn comparable_refuses_cross_isa_and_cross_kernel() {
+        let base = minimal_doc(SCHEMA, "x86_64", V2_KERNEL);
+        comparable(&base, &base).unwrap();
+        // Different arch: not comparable even with equal kernels.
+        let arm = minimal_doc(SCHEMA, "aarch64", V2_KERNEL);
+        let e = comparable(&base, &arm).unwrap_err();
+        assert!(format!("{e:#}").contains("env.arch"), "{e:#}");
+        // Same arch, different register tile.
+        let avx = minimal_doc(SCHEMA, "x86_64", r#", "kernel": "avx2_6x16", "cpu_features": ["avx2"]"#);
+        let e = comparable(&base, &avx).unwrap_err();
+        assert!(format!("{e:#}").contains("env.kernel"), "{e:#}");
+        // v1 partner: kernel unknown, refuse rather than guess.
+        let v1 = minimal_doc(SCHEMA_V1, "x86_64", "");
+        let e = comparable(&base, &v1).unwrap_err();
+        assert!(format!("{e:#}").contains("schema v2"), "{e:#}");
     }
 }

@@ -39,6 +39,7 @@ use airbench::api::{
 use airbench::cli::{find_command, Args, Command};
 use airbench::config::{process_env, ConfigLayers, TrainConfig, TtaLevel};
 use airbench::experiments::{pct, DataKind, Scale};
+use airbench::runtime::EvalPrecision;
 use airbench::util::json::{parse as parse_json, Json};
 use airbench::util::logging;
 
@@ -113,9 +114,11 @@ common flags:\n\
 \n\
 train:  --save model.ckpt --no-warmup [key=value ...] (writes the\n\
         versioned manifest + payload pair, DESIGN.md §10)\n\
-eval:   --load ckpt (versioned model.ckpt or legacy ckpt.bin)\n\
+eval:   --load ckpt (versioned model.ckpt or legacy ckpt.bin),\n\
+        --precision f32|bf16 (bf16: half-storage GEMM operands,\n\
+        f32 accumulate — eval only, native backend)\n\
 predict: --model ID | --load model.ckpt, --tta none|mirror|multicrop,\n\
-        --test-n N\n\
+        --test-n N, --precision f32|bf16\n\
 save:   --out model.ckpt, source: --model ID | --load ckpt\n\
 load:   --path model.ckpt --id NAME (default id m<hash12>)\n\
 fleet:  --runs N --log fleet.json --parallel N (alias --fleet-parallel,\n\
@@ -134,7 +137,9 @@ env:    AIRBENCH_BACKEND / AIRBENCH_VARIANT / AIRBENCH_EPOCHS /\n\
         AIRBENCH_WORKERS / AIRBENCH_PREFETCH_DEPTH /\n\
         AIRBENCH_FLEET_PARALLEL / AIRBENCH_SEED form the env layer;\n\
         AIRBENCH_NATIVE_THREADS=N sets native kernel threads (outputs\n\
-        bit-identical at any value); AIRBENCH_TRAIN_N / AIRBENCH_TEST_N /\n\
+        bit-identical at any value); AIRBENCH_FORCE_SCALAR=1 pins the\n\
+        portable scalar GEMM tile (skips AVX2 dispatch);\n\
+        AIRBENCH_TRAIN_N / AIRBENCH_TEST_N /\n\
         AIRBENCH_RUNS scale the default datasets and fleet size";
 
 fn usage() {
@@ -226,6 +231,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     run_and_render(args, spec)
 }
 
+fn eval_precision(args: &Args) -> Result<EvalPrecision> {
+    let s = args.opt("precision", "f32");
+    EvalPrecision::parse(&s).ok_or_else(|| anyhow::anyhow!("unknown --precision '{s}' (f32|bf16)"))
+}
+
 fn cmd_eval(args: &Args) -> Result<()> {
     let cfg = resolved_config(args)?;
     let Some(path) = args.options.get("load") else {
@@ -236,6 +246,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
         data: data_kind(args)?,
         load: PathBuf::from(path),
         test_n: None,
+        precision: eval_precision(args)?,
     });
     run_and_render(args, spec)
 }
@@ -260,6 +271,7 @@ fn cmd_predict(args: &Args) -> Result<()> {
         data: data_kind(args)?,
         test_n,
         tta,
+        precision: eval_precision(args)?,
     });
     run_and_render(args, spec)
 }
@@ -525,8 +537,12 @@ fn render_result(result: &JobResult) {
                 );
             };
             println!(
-                "bench report: backend={} variant={} threads={} batch={}",
-                report.backend_name, report.variant, report.threads, report.batch_train
+                "bench report: backend={} variant={} threads={} kernel={} batch={}",
+                report.backend_name,
+                report.variant,
+                report.threads,
+                report.kernel,
+                report.batch_train
             );
             row("train_step_ms", &report.step_ms, "ms");
             row("init_ms", &report.init_ms, "ms");
@@ -622,6 +638,24 @@ fn jnum(j: &Json, key: &str) -> f64 {
 fn render_info(data: &Json) {
     let manifest = data.get("manifest").and_then(|v| v.as_bool()).unwrap_or(false);
     let variants: &[Json] = data.get("variants").and_then(|v| v.as_arr()).unwrap_or(&[]);
+    if let Some(cpu) = data.opt("cpu") {
+        let features = cpu
+            .get("features")
+            .and_then(|f| f.as_arr().map(|a| a.to_vec()))
+            .unwrap_or_default()
+            .iter()
+            .filter_map(|f| f.as_str().ok().map(str::to_string))
+            .collect::<Vec<_>>()
+            .join(",");
+        println!(
+            "cpu: {}/{} kernel={} threads={} cores={} features=[{features}]",
+            jstr(cpu, "arch"),
+            jstr(cpu, "os"),
+            jstr(cpu, "kernel"),
+            jnum(cpu, "threads") as u64,
+            jnum(cpu, "cores") as u64,
+        );
+    }
     // A single entry carrying "widths" is the detail shape.
     if variants.len() == 1 && variants[0].opt("widths").is_some() {
         let v = &variants[0];

@@ -25,7 +25,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::runtime::manifest::{Manifest, Variant};
-use crate::runtime::native::NativeShared;
+use crate::runtime::native::{EvalPrecision, NativeShared};
 use crate::runtime::state::{InitConfig, ModelState};
 use crate::tensor::Tensor;
 
@@ -132,6 +132,34 @@ pub trait Backend {
     /// shared across backends; persistence is `ModelState::{save, load}`).
     fn init_state(&self, cfg: &InitConfig) -> ModelState {
         ModelState::init(self.variant(), cfg)
+    }
+
+    /// Stable name of the GEMM register tile this backend runs (recorded
+    /// in bench `env` blocks and `airbench info`). `"-"` for substrates
+    /// without a dispatchable kernel (PJRT owns its own codegen).
+    fn kernel_name(&self) -> &'static str {
+        "-"
+    }
+
+    /// Threads the backend's kernels actually use (`0` = not applicable) —
+    /// the value the bench `threads` field reports.
+    fn kernel_threads(&self) -> usize {
+        0
+    }
+
+    /// Select the storage precision of the eval/TTA forward pass. Only the
+    /// native backend implements [`EvalPrecision::Bf16`]; the default
+    /// rejects anything but f32 so callers fail loudly instead of silently
+    /// evaluating at the wrong precision.
+    fn set_eval_precision(&mut self, precision: EvalPrecision) -> Result<()> {
+        if precision != EvalPrecision::F32 {
+            bail!(
+                "backend '{}' does not support eval precision '{}'",
+                self.name(),
+                precision.name()
+            );
+        }
+        Ok(())
     }
 }
 
@@ -531,10 +559,16 @@ mod tests {
         assert_eq!(f.kind(), BackendKind::Native);
         assert!(f.supports_parallel());
         assert_eq!(f.variant().name, "nano");
-        let a = f.spawn().unwrap();
+        let mut a = f.spawn().unwrap();
         let b = f.spawn_send(2).unwrap();
         assert_eq!(a.variant().name, "nano");
         assert_eq!(b.variant().name, "nano");
+        // Native workers expose their selected GEMM tile and real thread
+        // count, and accept both eval precisions.
+        assert_ne!(a.kernel_name(), "-");
+        assert_eq!(b.kernel_threads(), 2);
+        a.set_eval_precision(EvalPrecision::Bf16).unwrap();
+        a.set_eval_precision(EvalPrecision::F32).unwrap();
         // An unknown variant fails at factory() time, not at spawn time.
         assert!(EngineSpec::new(BackendKind::Native, "zzz").factory().is_err());
     }

@@ -24,6 +24,6 @@ pub use backend::{
 };
 pub use checkpoint::{CheckpointError, Loaded, Saved};
 pub use manifest::{Manifest, ModuleSpec, Role, TensorSpec, Variant};
-pub use native::{NativeBackend, NativeShared, ThreadBudget};
+pub use native::{EvalPrecision, Kernel, NativeBackend, NativeShared, ThreadBudget};
 pub use pjrt::{cpu_client, PjrtBackend};
 pub use state::{InitConfig, ModelState};

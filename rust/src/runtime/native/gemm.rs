@@ -8,53 +8,96 @@
 //! regime airbench lives in (reduction depths of 12–4608, output panels of
 //! 9–961 columns):
 //!
-//! * **Microkernel** — an [`MR`]`×`[`NR`] register tile. Per reduction step
-//!   it broadcasts `MR` packed A values against one `NR`-wide packed B row
-//!   and accumulates into `MR*NR` local scalars the compiler keeps in
-//!   vector registers. The loop body is branch-free with constant bounds,
-//!   which is what lets LLVM autovectorize it into broadcast-multiply-add
-//!   form on any target (SSE2 baseline included — no intrinsics, no
-//!   `unsafe`).
+//! * **Microkernel** — an `MR×NR` register tile chosen at runtime by
+//!   [`Kernel`] (see [`super::simd`]): the portable scalar 4x8 tile whose
+//!   constant-bound, branch-free loops LLVM autovectorizes on any target,
+//!   or the hand-written AVX2+FMA 6x16 tile (twelve `__m256` accumulators,
+//!   one broadcast-FMA pair per packed A value per reduction step) on
+//!   x86-64 CPUs that support it. Per reduction step the tile broadcasts
+//!   `MR` packed A values against one `NR`-wide packed B row.
 //! * **Packing** — A is packed once per call into `MR`-row column-major
 //!   strips ([`pack_a`] / [`pack_a_t`]) and is then *reused across every
 //!   example in the batch* (the weights of a conv layer are the A operand
 //!   of all `N` per-example GEMMs). B panels are packed per [`KC`]`x`[`NC`]
 //!   block into the caller's scratch buffer, which each worker thread
 //!   reuses across every example it processes — the panel footprint is a
-//!   bounded 512 KB per thread instead of a per-example column matrix.
+//!   bounded ~1 MB per thread instead of a per-example column matrix.
+//!   Both layouts are parameterized by the same [`Kernel`], so packing and
+//!   microkernel can never disagree about the tile shape.
 //! * **Implicit im2col** — for convolutions, B is never materialized as the
 //!   full `(cin*kh*kw, oh*ow)` im2col matrix (PR 2 built that buffer per
 //!   example per layer). Instead [`BSrc::Im2col`] / [`BSrc::Im2colT`] pack
 //!   each `KC×NC` panel straight from the source image, applying the
 //!   padding clip on the fly. The big intermediate — ~830 KB per example
 //!   for the first bench-variant conv — disappears from the hot path.
+//! * **bf16 storage for eval** — [`gemm_bf16`] is the same driver with the
+//!   packed B panels rounded to bf16 ([`super::half`]) and widened back
+//!   per reduction step; A and the accumulators stay f32. Eval/TTA and
+//!   Predict opt into it via `--precision bf16`; training never does.
 //!
-//! # Determinism contract
+//! # Determinism contract (per kernel)
 //!
 //! For one output element, additions happen in a fixed order: `KC` blocks
 //! ascending, and reduction indices ascending within a block. Nothing in
 //! this module inspects the thread count, and callers only parallelize
 //! over disjoint per-example output slices — so results are **bit-identical
-//! for every `AIRBENCH_NATIVE_THREADS` value**, which is what keeps native
-//! training seed-reproducible on any machine (DESIGN.md §5). Results are
-//! *not* bit-identical to the naive [`super::ops::matmul_acc`] reference
-//! (f32 addition is non-associative); the parity tests bound the relative
-//! difference at the measured reorder-noise level (~1e-6 per unit of
-//! reduction depth) instead.
+//! for every `AIRBENCH_NATIVE_THREADS` value within a fixed [`Kernel`]**,
+//! which is what keeps native training seed-reproducible on any machine
+//! (DESIGN.md §5). *Across* kernels bits differ (the AVX2 tile contracts
+//! multiply-add pairs through FMA; f32 addition is non-associative), and
+//! neither kernel matches the naive [`super::ops::matmul_acc`] reference
+//! bit-for-bit; the parity tests bound the relative difference at the
+//! measured reorder-noise level (~1e-6 per unit of reduction depth)
+//! instead.
 
+use std::cell::Cell;
+
+use super::half;
 use super::ops::conv_out_hw;
+pub use super::simd::Kernel;
 
-/// Rows of one microkernel tile (values of A broadcast per reduction step).
+/// Rows of the **scalar** microkernel tile ([`Kernel::Scalar`]'s
+/// [`Kernel::mr`]); the AVX2 tile uses 6.
 pub const MR: usize = 4;
-/// Columns of one microkernel tile (width of one packed B row).
+/// Columns of the **scalar** microkernel tile ([`Kernel::Scalar`]'s
+/// [`Kernel::nr`]); the AVX2 tile uses 16.
 pub const NR: usize = 8;
+/// Widest supported packed-B panel (the AVX2 tile's `NR`) — bounds the
+/// per-panel column decode in [`BSrc::Im2colT`] packing.
+pub const MAX_NR: usize = 16;
 /// Reduction-dimension block size: one packed B panel covers `KC` reduction
 /// steps, so a panel stays cache-resident while every A row strip streams
 /// over it.
 pub const KC: usize = 256;
 /// Output-column block size: bounds the packed-B scratch footprint at
-/// `KC * NC * 4` bytes (512 KB), roughly an L2 way on the machines we run.
+/// `KC * NC * 4` bytes (512 KB) for the scalar tile, roughly an L2 way on
+/// the machines we run (the 16-wide AVX2 tile rounds this up by < 4%).
 pub const NC: usize = 512;
+
+thread_local! {
+    /// Scratch-buffer growth events on this thread (see [`scratch_grows`]).
+    static SCRATCH_GROWS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// How many times a GEMM scratch buffer had to *allocate* (capacity grew)
+/// on the calling thread. A warmed-up eval loop must not bump this between
+/// batches — the no-per-batch-allocation tests snapshot it around a second
+/// pass. Thread-local so concurrently running tests can't interfere.
+pub fn scratch_grows() -> u64 {
+    SCRATCH_GROWS.with(|c| c.get())
+}
+
+/// Grow `v` to at least `n` elements, counting real allocations (capacity
+/// growth) in the thread-local [`scratch_grows`] counter. Resizing within
+/// existing capacity is free and uncounted.
+pub(crate) fn ensure<T: Copy + Default>(v: &mut Vec<T>, n: usize) {
+    if v.capacity() < n {
+        SCRATCH_GROWS.with(|c| c.set(c.get() + 1));
+    }
+    if v.len() < n {
+        v.resize(n, T::default());
+    }
+}
 
 /// The B operand of one GEMM call: either a real matrix or a virtual
 /// im2col view of an image that is packed panel-by-panel on demand.
@@ -109,23 +152,27 @@ pub enum BSrc<'a> {
     },
 }
 
-/// Length in floats of the packed-A buffer for an `(m, k)` A operand:
-/// `ceil(m / MR)` strips of `k * MR` floats (rows padded with zeros).
-pub fn packed_a_len(m: usize, k: usize) -> usize {
-    m.div_ceil(MR) * k * MR
+/// Length in floats of the packed-A buffer for an `(m, k)` A operand under
+/// `kernel`'s tile: `ceil(m / MR)` strips of `k * MR` floats (rows padded
+/// with zeros), `MR = kernel.mr()`.
+pub fn packed_a_len(kernel: Kernel, m: usize, k: usize) -> usize {
+    let mr = kernel.mr();
+    m.div_ceil(mr) * k * mr
 }
 
 /// Pack a row-major `(m, k)` matrix into `MR`-row strips, column-major
-/// within each strip: `out[strip][kk * MR + i] = a[(strip*MR + i) * k + kk]`.
-/// Rows beyond `m` are zero-filled, so edge microtiles need no branches.
-pub fn pack_a(a: &[f32], m: usize, k: usize, out: &mut [f32]) {
+/// within each strip: `out[strip][kk * MR + i] = a[(strip*MR + i) * k + kk]`
+/// with `MR = kernel.mr()`. Rows beyond `m` are zero-filled, so edge
+/// microtiles need no branches.
+pub fn pack_a(kernel: Kernel, a: &[f32], m: usize, k: usize, out: &mut [f32]) {
+    let mr = kernel.mr();
     debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(out.len(), packed_a_len(m, k));
-    for (ip, strip) in out.chunks_exact_mut(k * MR).enumerate() {
+    debug_assert_eq!(out.len(), packed_a_len(kernel, m, k));
+    for (ip, strip) in out.chunks_exact_mut(k * mr).enumerate() {
         for kk in 0..k {
-            for i in 0..MR {
-                let r = ip * MR + i;
-                strip[kk * MR + i] = if r < m { a[r * k + kk] } else { 0.0 };
+            for i in 0..mr {
+                let r = ip * mr + i;
+                strip[kk * mr + i] = if r < m { a[r * k + kk] } else { 0.0 };
             }
         }
     }
@@ -135,14 +182,15 @@ pub fn pack_a(a: &[f32], m: usize, k: usize, out: &mut [f32]) {
 /// `(k, m)` and the logical A is `aᵀ` with shape `(m, k)` — used for the
 /// `head_inᵀ · dlogits` weight-gradient GEMM without materializing the
 /// transpose.
-pub fn pack_a_t(a: &[f32], m: usize, k: usize, out: &mut [f32]) {
+pub fn pack_a_t(kernel: Kernel, a: &[f32], m: usize, k: usize, out: &mut [f32]) {
+    let mr = kernel.mr();
     debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(out.len(), packed_a_len(m, k));
-    for (ip, strip) in out.chunks_exact_mut(k * MR).enumerate() {
+    debug_assert_eq!(out.len(), packed_a_len(kernel, m, k));
+    for (ip, strip) in out.chunks_exact_mut(k * mr).enumerate() {
         for kk in 0..k {
-            for i in 0..MR {
-                let r = ip * MR + i;
-                strip[kk * MR + i] = if r < m { a[kk * m + r] } else { 0.0 };
+            for i in 0..mr {
+                let r = ip * mr + i;
+                strip[kk * mr + i] = if r < m { a[kk * m + r] } else { 0.0 };
             }
         }
     }
@@ -170,27 +218,39 @@ fn check_b_dims(b: &BSrc<'_>, k: usize, n: usize) {
 
 /// Pack one `(kc × nc)` block of B starting at `(k0, j0)` into `dst` as
 /// `ceil(nc / NR)` panels of `kc * NR` floats (reduction-major within each
-/// panel). Columns beyond `nc` are zero-filled.
+/// panel), `NR = kernel.nr()`. Columns beyond `nc` are zero-filled.
 #[allow(clippy::too_many_arguments)]
-fn pack_b(b: &BSrc<'_>, k: usize, n: usize, k0: usize, kc: usize, j0: usize, nc: usize, dst: &mut [f32]) {
-    let npan = nc.div_ceil(NR);
-    debug_assert!(dst.len() >= npan * kc * NR);
+fn pack_b(
+    kernel: Kernel,
+    b: &BSrc<'_>,
+    k: usize,
+    n: usize,
+    k0: usize,
+    kc: usize,
+    j0: usize,
+    nc: usize,
+    dst: &mut [f32],
+) {
+    let nr = kernel.nr();
+    debug_assert!(nr <= MAX_NR);
+    let npan = nc.div_ceil(nr);
+    debug_assert!(dst.len() >= npan * kc * nr);
     for jp in 0..npan {
-        let jb = j0 + jp * NR;
-        let cols = NR.min(nc - jp * NR);
-        let pan = &mut dst[jp * kc * NR..(jp + 1) * kc * NR];
+        let jb = j0 + jp * nr;
+        let cols = nr.min(nc - jp * nr);
+        let pan = &mut dst[jp * kc * nr..(jp + 1) * kc * nr];
         match b {
             BSrc::Mat(bm) => {
                 for kk in 0..kc {
                     let src = &bm[(k0 + kk) * n + jb..(k0 + kk) * n + jb + cols];
-                    let row = &mut pan[kk * NR..kk * NR + NR];
+                    let row = &mut pan[kk * nr..kk * nr + nr];
                     row[..cols].copy_from_slice(src);
                     row[cols..].fill(0.0);
                 }
             }
             BSrc::MatT(bm) => {
                 for kk in 0..kc {
-                    let row = &mut pan[kk * NR..kk * NR + NR];
+                    let row = &mut pan[kk * nr..kk * nr + nr];
                     for (j, rv) in row[..cols].iter_mut().enumerate() {
                         *rv = bm[(jb + j) * k + (k0 + kk)];
                     }
@@ -210,7 +270,7 @@ fn pack_b(b: &BSrc<'_>, k: usize, n: usize, k0: usize, kc: usize, j0: usize, nc:
                     let xc = &x[ci * h * w..(ci + 1) * h * w];
                     let mut oy = jb / ow;
                     let mut ox = jb % ow;
-                    let row = &mut pan[kk * NR..kk * NR + NR];
+                    let row = &mut pan[kk * nr..kk * nr + nr];
                     for (j, rv) in row.iter_mut().enumerate() {
                         let mut v = 0.0f32;
                         if j < cols {
@@ -233,8 +293,8 @@ fn pack_b(b: &BSrc<'_>, k: usize, n: usize, k0: usize, kc: usize, j0: usize, nc:
                 let (h, w, kh, kw, pad) = (*h, *w, *kh, *kw, *pad);
                 let khw = kh * kw;
                 let ow = conv_out_hw(w, kw, pad);
-                // Decode the NR kernel-position columns of this panel once.
-                let mut dec = [(0usize, 0isize, 0isize); NR];
+                // Decode the nr kernel-position columns of this panel once.
+                let mut dec = [(0usize, 0isize, 0isize); MAX_NR];
                 for (j, d) in dec.iter_mut().take(cols).enumerate() {
                     let kabs = jb + j;
                     *d = (
@@ -246,7 +306,7 @@ fn pack_b(b: &BSrc<'_>, k: usize, n: usize, k0: usize, kc: usize, j0: usize, nc:
                 let mut oy = k0 / ow;
                 let mut ox = k0 % ow;
                 for kk in 0..kc {
-                    let row = &mut pan[kk * NR..kk * NR + NR];
+                    let row = &mut pan[kk * nr..kk * nr + nr];
                     for (j, rv) in row.iter_mut().enumerate() {
                         let mut v = 0.0f32;
                         if j < cols {
@@ -270,11 +330,13 @@ fn pack_b(b: &BSrc<'_>, k: usize, n: usize, k0: usize, kc: usize, j0: usize, nc:
     }
 }
 
-/// The register tile: `acc[i][j] += Σ_kk a[kk][i] * b[kk][j]` over `kc`
-/// reduction steps, in ascending `kk` order. `a` is one packed A strip
-/// (`kc * MR`, k-major), `b` one packed B panel (`kc * NR`, k-major). The
-/// constant-bound inner loops over a local accumulator array are what LLVM
-/// turns into broadcast-multiply-add vector code.
+/// The scalar register tile: `acc[i][j] += Σ_kk a[kk][i] * b[kk][j]` over
+/// `kc` reduction steps, in ascending `kk` order. `a` is one packed A
+/// strip (`kc * MR`, k-major), `b` one packed B panel (`kc * NR`,
+/// k-major). The constant-bound inner loops over a local accumulator array
+/// are what LLVM turns into broadcast-multiply-add vector code. Kept
+/// byte-identical to the PR 3 kernel so [`Kernel::Scalar`] results stay
+/// bit-stable across releases.
 #[inline(always)]
 fn micro(kc: usize, a: &[f32], b: &[f32]) -> [[f32; NR]; MR] {
     let mut acc = [[0.0f32; NR]; MR];
@@ -289,41 +351,240 @@ fn micro(kc: usize, a: &[f32], b: &[f32]) -> [[f32; NR]; MR] {
     acc
 }
 
+/// Scalar tile over a bf16-stored packed B panel: each `b` value is
+/// widened to f32 before the multiply, accumulation stays f32. Same
+/// reduction order as [`micro`], so bf16 results are bit-deterministic
+/// per kernel too.
+#[inline(always)]
+fn micro_bf16(kc: usize, a: &[f32], b: &[u16]) -> [[f32; NR]; MR] {
+    let mut acc = [[0.0f32; NR]; MR];
+    for (av, bv) in a.chunks_exact(MR).zip(b.chunks_exact(NR)).take(kc) {
+        for i in 0..MR {
+            let ai = av[i];
+            for j in 0..NR {
+                acc[i][j] += ai * half::bf16_to_f32(bv[j]);
+            }
+        }
+    }
+    acc
+}
+
+/// The AVX2+FMA 6x16 register tile: twelve `__m256` accumulators, per
+/// reduction step two 8-wide B loads and six broadcast-FMA pairs.
+///
+/// # Safety
+///
+/// Requires the `avx2` and `fma` CPU features. The only [`Kernel::Avx2`]
+/// values the dispatcher constructs are gated on
+/// `is_x86_feature_detected!`, which is what makes the call sites sound.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn micro_avx2(kc: usize, a: &[f32], b: &[f32]) -> [[f32; 16]; 6] {
+    use std::arch::x86_64::*;
+    debug_assert!(a.len() >= kc * 6 && b.len() >= kc * 16);
+    let mut acc = [[_mm256_setzero_ps(); 2]; 6];
+    let mut ap = a.as_ptr();
+    let mut bp = b.as_ptr();
+    for _ in 0..kc {
+        let b0 = _mm256_loadu_ps(bp);
+        let b1 = _mm256_loadu_ps(bp.add(8));
+        for (i, row) in acc.iter_mut().enumerate() {
+            let ai = _mm256_set1_ps(*ap.add(i));
+            row[0] = _mm256_fmadd_ps(ai, b0, row[0]);
+            row[1] = _mm256_fmadd_ps(ai, b1, row[1]);
+        }
+        ap = ap.add(6);
+        bp = bp.add(16);
+    }
+    let mut out = [[0.0f32; 16]; 6];
+    for (o, row) in out.iter_mut().zip(&acc) {
+        _mm256_storeu_ps(o.as_mut_ptr(), row[0]);
+        _mm256_storeu_ps(o.as_mut_ptr().add(8), row[1]);
+    }
+    out
+}
+
+/// [`micro_avx2`] over a bf16-stored packed B panel: one 256-bit integer
+/// load yields sixteen bf16 values, widened to two f32 vectors by zero
+/// extension plus a 16-bit left shift (bf16 is the high half of f32).
+///
+/// # Safety
+///
+/// Same contract as [`micro_avx2`]: `avx2` + `fma` must be present.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn micro_avx2_bf16(kc: usize, a: &[f32], b: &[u16]) -> [[f32; 16]; 6] {
+    use std::arch::x86_64::*;
+    debug_assert!(a.len() >= kc * 6 && b.len() >= kc * 16);
+    let mut acc = [[_mm256_setzero_ps(); 2]; 6];
+    let mut ap = a.as_ptr();
+    let mut bp = b.as_ptr();
+    for _ in 0..kc {
+        let raw = _mm256_loadu_si256(bp as *const __m256i);
+        let lo = _mm256_castsi256_si128(raw);
+        let hi = _mm256_extracti128_si256::<1>(raw);
+        let b0 = _mm256_castsi256_ps(_mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(lo)));
+        let b1 = _mm256_castsi256_ps(_mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(hi)));
+        for (i, row) in acc.iter_mut().enumerate() {
+            let ai = _mm256_set1_ps(*ap.add(i));
+            row[0] = _mm256_fmadd_ps(ai, b0, row[0]);
+            row[1] = _mm256_fmadd_ps(ai, b1, row[1]);
+        }
+        ap = ap.add(6);
+        bp = bp.add(16);
+    }
+    let mut out = [[0.0f32; 16]; 6];
+    for (o, row) in out.iter_mut().zip(&acc) {
+        _mm256_storeu_ps(o.as_mut_ptr(), row[0]);
+        _mm256_storeu_ps(o.as_mut_ptr().add(8), row[1]);
+    }
+    out
+}
+
+/// Accumulate one microtile into the `rows × cols` clipped window of `c`
+/// at `(row0, jbase)` — the store order is identical for every tile shape,
+/// so the scalar path stays bit-identical to the pre-dispatch kernel.
+#[inline(always)]
+fn store_tile<const TM: usize, const TN: usize>(
+    acc: &[[f32; TN]; TM],
+    c: &mut [f32],
+    n: usize,
+    row0: usize,
+    jbase: usize,
+    rows: usize,
+    cols: usize,
+) {
+    for (i, arow) in acc.iter().enumerate().take(rows) {
+        let crow = &mut c[(row0 + i) * n + jbase..(row0 + i) * n + jbase + cols];
+        for (cv, av) in crow.iter_mut().zip(arow.iter()) {
+            *cv += av;
+        }
+    }
+}
+
 /// `c (m, n) += A (m, k) · B (k, n)` with A pre-packed by [`pack_a`] /
-/// [`pack_a_t`] and B described by a [`BSrc`].
+/// [`pack_a_t`] (under the same `kernel`) and B described by a [`BSrc`].
 ///
 /// `scratch` is the caller's packed-B buffer; it is grown to at most
-/// `KC * NC` floats on first use and reused across calls made with the
+/// `~KC * NC` floats on first use and reused across calls made with the
 /// same buffer (the conv drivers hand each worker thread one scratch that
 /// it reuses for every example it processes within the call). Accumulation
 /// into `c` happens in a fixed, thread-independent order — see the module
 /// docs for the determinism argument.
-pub fn gemm(c: &mut [f32], m: usize, n: usize, k: usize, apack: &[f32], b: &BSrc<'_>, scratch: &mut Vec<f32>) {
+#[allow(clippy::too_many_arguments)]
+pub fn gemm(
+    kernel: Kernel,
+    c: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    apack: &[f32],
+    b: &BSrc<'_>,
+    scratch: &mut Vec<f32>,
+) {
     debug_assert_eq!(c.len(), m * n);
-    debug_assert_eq!(apack.len(), packed_a_len(m, k));
+    debug_assert_eq!(apack.len(), packed_a_len(kernel, m, k));
     check_b_dims(b, k, n);
+    let (mr, nr) = (kernel.mr(), kernel.nr());
     let mut j0 = 0usize;
     while j0 < n {
         let nc = NC.min(n - j0);
-        let npan = nc.div_ceil(NR);
+        let npan = nc.div_ceil(nr);
         let mut k0 = 0usize;
         while k0 < k {
             let kc = KC.min(k - k0);
-            if scratch.len() < npan * kc * NR {
-                scratch.resize(npan * kc * NR, 0.0);
-            }
-            pack_b(b, k, n, k0, kc, j0, nc, scratch);
-            for ip in 0..m.div_ceil(MR) {
-                let astrip = &apack[ip * k * MR + k0 * MR..ip * k * MR + (k0 + kc) * MR];
-                let rows = MR.min(m - ip * MR);
+            ensure(scratch, npan * kc * nr);
+            pack_b(kernel, b, k, n, k0, kc, j0, nc, scratch);
+            for ip in 0..m.div_ceil(mr) {
+                let astrip = &apack[(ip * k + k0) * mr..(ip * k + k0 + kc) * mr];
+                let rows = mr.min(m - ip * mr);
                 for jp in 0..npan {
-                    let acc = micro(kc, astrip, &scratch[jp * kc * NR..(jp + 1) * kc * NR]);
-                    let cols = NR.min(nc - jp * NR);
-                    let jbase = j0 + jp * NR;
-                    for (i, arow) in acc.iter().enumerate().take(rows) {
-                        let crow = &mut c[(ip * MR + i) * n + jbase..(ip * MR + i) * n + jbase + cols];
-                        for (cv, av) in crow.iter_mut().zip(arow.iter()) {
-                            *cv += av;
+                    let pan = &scratch[jp * kc * nr..(jp + 1) * kc * nr];
+                    let cols = nr.min(nc - jp * nr);
+                    let jbase = j0 + jp * nr;
+                    match kernel {
+                        Kernel::Scalar => {
+                            store_tile(&micro(kc, astrip, pan), c, n, ip * mr, jbase, rows, cols);
+                        }
+                        #[cfg(target_arch = "x86_64")]
+                        Kernel::Avx2 => {
+                            // SAFETY: Kernel::Avx2 is only constructed when
+                            // is_x86_feature_detected! confirmed avx2+fma
+                            // (super::simd::detect / all_supported).
+                            let acc = unsafe { micro_avx2(kc, astrip, pan) };
+                            store_tile(&acc, c, n, ip * mr, jbase, rows, cols);
+                        }
+                    }
+                }
+            }
+            k0 += kc;
+        }
+        j0 += nc;
+    }
+}
+
+/// [`gemm`] with bf16-*storage* B panels and f32 accumulation: panels are
+/// packed in f32 exactly as [`gemm`] would (`fscratch`), rounded to bf16
+/// once per panel (`bscratch`, round-to-nearest-even), and widened back
+/// per reduction step inside the microkernel. A, C, and every add stay
+/// f32. Per-element relative storage error is ≤ 2⁻⁸; the reduction order —
+/// hence per-kernel bit-determinism — is identical to [`gemm`].
+///
+/// Wired into the eval/TTA and Predict paths only; training always uses
+/// [`gemm`].
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bf16(
+    kernel: Kernel,
+    c: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    apack: &[f32],
+    b: &BSrc<'_>,
+    fscratch: &mut Vec<f32>,
+    bscratch: &mut Vec<u16>,
+) {
+    debug_assert_eq!(c.len(), m * n);
+    debug_assert_eq!(apack.len(), packed_a_len(kernel, m, k));
+    check_b_dims(b, k, n);
+    let (mr, nr) = (kernel.mr(), kernel.nr());
+    let mut j0 = 0usize;
+    while j0 < n {
+        let nc = NC.min(n - j0);
+        let npan = nc.div_ceil(nr);
+        let mut k0 = 0usize;
+        while k0 < k {
+            let kc = KC.min(k - k0);
+            let plen = npan * kc * nr;
+            ensure(fscratch, plen);
+            ensure(bscratch, plen);
+            pack_b(kernel, b, k, n, k0, kc, j0, nc, fscratch);
+            half::narrow_slice(&fscratch[..plen], &mut bscratch[..plen]);
+            for ip in 0..m.div_ceil(mr) {
+                let astrip = &apack[(ip * k + k0) * mr..(ip * k + k0 + kc) * mr];
+                let rows = mr.min(m - ip * mr);
+                for jp in 0..npan {
+                    let pan = &bscratch[jp * kc * nr..(jp + 1) * kc * nr];
+                    let cols = nr.min(nc - jp * nr);
+                    let jbase = j0 + jp * nr;
+                    match kernel {
+                        Kernel::Scalar => {
+                            store_tile(
+                                &micro_bf16(kc, astrip, pan),
+                                c,
+                                n,
+                                ip * mr,
+                                jbase,
+                                rows,
+                                cols,
+                            );
+                        }
+                        #[cfg(target_arch = "x86_64")]
+                        Kernel::Avx2 => {
+                            // SAFETY: see `gemm` — Avx2 implies detected
+                            // avx2+fma.
+                            let acc = unsafe { micro_avx2_bf16(kc, astrip, pan) };
+                            store_tile(&acc, c, n, ip * mr, jbase, rows, cols);
                         }
                     }
                 }
@@ -353,142 +614,192 @@ mod tests {
 
     #[test]
     fn gemm_matches_naive_reference_awkward_shapes() {
-        // Sizes straddle every blocking edge: m % MR, n % NR, k % KC, and
-        // multi-block k (700 > 2*KC is two full blocks + remainder).
-        let mut rng = Rng::new(0x6E33);
-        for &(m, n, k) in &[
-            (5usize, 13usize, 700usize),
-            (4, 8, 256),
-            (17, 31, 300),
-            (1, 1, 1),
-            (64, 10, 32),
-            (33, 961, 216),
-            (3, 600, 12),
-        ] {
+        // Sizes straddle every blocking edge for BOTH tiles: m % mr, n % nr,
+        // k % KC, and multi-block k (700 > 2*KC is two full blocks +
+        // remainder). Parameterized over every hardware-supported kernel.
+        for kern in Kernel::all_supported() {
+            let mut rng = Rng::new(0x6E33);
+            for &(m, n, k) in &[
+                (5usize, 13usize, 700usize),
+                (4, 8, 256),
+                (6, 16, 256),
+                (17, 31, 300),
+                (1, 1, 1),
+                (64, 10, 32),
+                (33, 961, 216),
+                (3, 600, 12),
+            ] {
+                let a = rand_vec(&mut rng, m * k);
+                let b = rand_vec(&mut rng, k * n);
+                let mut want = vec![0.0f32; m * n];
+                ops::matmul_acc(&a, &b, m, k, n, &mut want);
+
+                let mut apack = vec![0.0f32; packed_a_len(kern, m, k)];
+                pack_a(kern, &a, m, k, &mut apack);
+                let mut scratch = Vec::new();
+                let mut got = vec![0.0f32; m * n];
+                gemm(kern, &mut got, m, n, k, &apack, &BSrc::Mat(&b), &mut scratch);
+                let rel = max_rel(&want, &got);
+                // f32 addition is not associative: the blocked reduction
+                // order (and the AVX2 tile's FMA contractions) legitimately
+                // differ from the running sum by O(k * eps) on
+                // cancellation-heavy elements (measured ~6e-5 at k=300), so
+                // the bound scales with the reduction depth. A real indexing
+                // bug produces O(1) relative error and still fails loudly.
+                let tol = (1e-6 * k as f32).max(1e-5);
+                assert!(
+                    rel < tol,
+                    "{} nn m={m} n={n} k={k}: rel {rel} (tol {tol})",
+                    kern.name()
+                );
+
+                // Aᵀ path: store A as (k, m) and pack transposed.
+                let mut at = vec![0.0f32; m * k];
+                for r in 0..m {
+                    for kk in 0..k {
+                        at[kk * m + r] = a[r * k + kk];
+                    }
+                }
+                pack_a_t(kern, &at, m, k, &mut apack);
+                let mut got_t = vec![0.0f32; m * n];
+                gemm(kern, &mut got_t, m, n, k, &apack, &BSrc::Mat(&b), &mut scratch);
+                // Same packed panels, same order: bit-identical to nn.
+                assert_eq!(got, got_t, "tn differs from nn at m={m} n={n} k={k}");
+
+                // Bᵀ path: store B as (n, k).
+                let mut bt = vec![0.0f32; k * n];
+                for kk in 0..k {
+                    for j in 0..n {
+                        bt[j * k + kk] = b[kk * n + j];
+                    }
+                }
+                pack_a(kern, &a, m, k, &mut apack);
+                let mut got_bt = vec![0.0f32; m * n];
+                gemm(kern, &mut got_bt, m, n, k, &apack, &BSrc::MatT(&bt), &mut scratch);
+                assert_eq!(got, got_bt, "nt differs from nn at m={m} n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn kernels_agree_within_tolerance() {
+        // Scalar vs AVX2 on the same inputs: never bit-compared (FMA
+        // contracts rounding), always within the reorder-noise bound.
+        let kernels = Kernel::all_supported();
+        if kernels.len() < 2 {
+            return; // only one kernel on this hardware — nothing to compare
+        }
+        let mut rng = Rng::new(0x51D);
+        for &(m, n, k) in &[(13usize, 29usize, 500usize), (6, 16, 64), (33, 961, 216)] {
             let a = rand_vec(&mut rng, m * k);
             let b = rand_vec(&mut rng, k * n);
-            let mut want = vec![0.0f32; m * n];
-            ops::matmul_acc(&a, &b, m, k, n, &mut want);
-
-            let mut apack = vec![0.0f32; packed_a_len(m, k)];
-            pack_a(&a, m, k, &mut apack);
-            let mut scratch = Vec::new();
-            let mut got = vec![0.0f32; m * n];
-            gemm(&mut got, m, n, k, &apack, &BSrc::Mat(&b), &mut scratch);
-            let rel = max_rel(&want, &got);
-            // f32 addition is not associative: the blocked reduction order
-            // legitimately differs from the running sum by O(k * eps) on
-            // cancellation-heavy elements (measured ~6e-5 at k=300), so the
-            // bound scales with the reduction depth. A real indexing bug
-            // produces O(1) relative error and still fails loudly.
+            let mut per_kernel = Vec::new();
+            for &kern in &kernels {
+                let mut apack = vec![0.0f32; packed_a_len(kern, m, k)];
+                pack_a(kern, &a, m, k, &mut apack);
+                let mut c = vec![0.0f32; m * n];
+                gemm(kern, &mut c, m, n, k, &apack, &BSrc::Mat(&b), &mut Vec::new());
+                per_kernel.push(c);
+            }
             let tol = (1e-6 * k as f32).max(1e-5);
-            assert!(rel < tol, "nn m={m} n={n} k={k}: rel {rel} (tol {tol})");
-
-            // Aᵀ path: store A as (k, m) and pack transposed.
-            let mut at = vec![0.0f32; m * k];
-            for r in 0..m {
-                for kk in 0..k {
-                    at[kk * m + r] = a[r * k + kk];
-                }
+            for pair in per_kernel.windows(2) {
+                let rel = max_rel(&pair[0], &pair[1]);
+                assert!(rel < tol, "cross-kernel rel {rel} at m={m} n={n} k={k}");
             }
-            pack_a_t(&at, m, k, &mut apack);
-            let mut got_t = vec![0.0f32; m * n];
-            gemm(&mut got_t, m, n, k, &apack, &BSrc::Mat(&b), &mut scratch);
-            // Same packed panels, same order: bit-identical to the nn path.
-            assert_eq!(got, got_t, "tn differs from nn at m={m} n={n} k={k}");
-
-            // Bᵀ path: store B as (n, k).
-            let mut bt = vec![0.0f32; k * n];
-            for kk in 0..k {
-                for j in 0..n {
-                    bt[j * k + kk] = b[kk * n + j];
-                }
-            }
-            pack_a(&a, m, k, &mut apack);
-            let mut got_bt = vec![0.0f32; m * n];
-            gemm(&mut got_bt, m, n, k, &apack, &BSrc::MatT(&bt), &mut scratch);
-            assert_eq!(got, got_bt, "nt differs from nn at m={m} n={n} k={k}");
         }
     }
 
     #[test]
     fn gemm_accumulates_into_c() {
         // C += A·B semantics: a second call doubles the result.
-        let mut rng = Rng::new(0xACC);
-        let (m, n, k) = (6usize, 20usize, 40usize);
-        let a = rand_vec(&mut rng, m * k);
-        let b = rand_vec(&mut rng, k * n);
-        let mut apack = vec![0.0f32; packed_a_len(m, k)];
-        pack_a(&a, m, k, &mut apack);
-        let mut scratch = Vec::new();
-        let mut c = vec![0.0f32; m * n];
-        gemm(&mut c, m, n, k, &apack, &BSrc::Mat(&b), &mut scratch);
-        let once = c.clone();
-        gemm(&mut c, m, n, k, &apack, &BSrc::Mat(&b), &mut scratch);
-        for (twice, one) in c.iter().zip(&once) {
-            assert_eq!(*twice, 2.0 * one);
+        for kern in Kernel::all_supported() {
+            let mut rng = Rng::new(0xACC);
+            let (m, n, k) = (6usize, 20usize, 40usize);
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let mut apack = vec![0.0f32; packed_a_len(kern, m, k)];
+            pack_a(kern, &a, m, k, &mut apack);
+            let mut scratch = Vec::new();
+            let mut c = vec![0.0f32; m * n];
+            gemm(kern, &mut c, m, n, k, &apack, &BSrc::Mat(&b), &mut scratch);
+            let once = c.clone();
+            gemm(kern, &mut c, m, n, k, &apack, &BSrc::Mat(&b), &mut scratch);
+            for (twice, one) in c.iter().zip(&once) {
+                assert_eq!(*twice, 2.0 * one);
+            }
         }
     }
 
     #[test]
     fn implicit_im2col_matches_materialized() {
         // Packing straight from the image must equal im2col-then-Mat —
-        // bit-for-bit, since the packed panels are identical.
-        let mut rng = Rng::new(0x1337);
-        for &(cin, h, w, cout, kh, pad) in &[
-            (3usize, 32usize, 32usize, 24usize, 2usize, 0usize),
-            (24, 31, 31, 16, 3, 1),
-            (16, 15, 15, 32, 3, 1),
-            (32, 3, 3, 32, 3, 1),
-            (2, 5, 4, 3, 3, 1),
-        ] {
-            let (oh, ow) = (conv_out_hw(h, kh, pad), conv_out_hw(w, kh, pad));
-            let (k, p) = (cin * kh * kh, oh * ow);
-            let x = rand_vec(&mut rng, cin * h * w);
-            let wt = rand_vec(&mut rng, cout * k);
-            let mut cols = vec![0.0f32; k * p];
-            ops::im2col(&x, cin, h, w, kh, kh, pad, &mut cols);
+        // bit-for-bit, since the packed panels are identical. Holds for
+        // every tile width (the panel decode is nr-parameterized).
+        for kern in Kernel::all_supported() {
+            let mut rng = Rng::new(0x1337);
+            for &(cin, h, w, cout, kh, pad) in &[
+                (3usize, 32usize, 32usize, 24usize, 2usize, 0usize),
+                (24, 31, 31, 16, 3, 1),
+                (16, 15, 15, 32, 3, 1),
+                (32, 3, 3, 32, 3, 1),
+                (2, 5, 4, 3, 3, 1),
+            ] {
+                let (oh, ow) = (conv_out_hw(h, kh, pad), conv_out_hw(w, kh, pad));
+                let (k, p) = (cin * kh * kh, oh * ow);
+                let x = rand_vec(&mut rng, cin * h * w);
+                let wt = rand_vec(&mut rng, cout * k);
+                let mut cols = vec![0.0f32; k * p];
+                ops::im2col(&x, cin, h, w, kh, kh, pad, &mut cols);
 
-            let mut apack = vec![0.0f32; packed_a_len(cout, k)];
-            pack_a(&wt, cout, k, &mut apack);
-            let mut scratch = Vec::new();
-            let mut via_mat = vec![0.0f32; cout * p];
-            gemm(&mut via_mat, cout, p, k, &apack, &BSrc::Mat(&cols), &mut scratch);
-            let mut via_img = vec![0.0f32; cout * p];
-            gemm(
-                &mut via_img,
-                cout,
-                p,
-                k,
-                &apack,
-                &BSrc::Im2col { x: &x, cin, h, w, kh, kw: kh, pad },
-                &mut scratch,
-            );
-            assert_eq!(via_mat, via_img, "cin={cin} h={h} cout={cout} kh={kh}");
+                let mut apack = vec![0.0f32; packed_a_len(kern, cout, k)];
+                pack_a(kern, &wt, cout, k, &mut apack);
+                let mut scratch = Vec::new();
+                let mut via_mat = vec![0.0f32; cout * p];
+                gemm(kern, &mut via_mat, cout, p, k, &apack, &BSrc::Mat(&cols), &mut scratch);
+                let mut via_img = vec![0.0f32; cout * p];
+                gemm(
+                    kern,
+                    &mut via_img,
+                    cout,
+                    p,
+                    k,
+                    &apack,
+                    &BSrc::Im2col { x: &x, cin, h, w, kh, kw: kh, pad },
+                    &mut scratch,
+                );
+                assert_eq!(
+                    via_mat,
+                    via_img,
+                    "{} cin={cin} h={h} cout={cout} kh={kh}",
+                    kern.name()
+                );
 
-            // Transposed: dW-style GEMM against im2colᵀ vs materialized colsᵀ.
-            let dy = rand_vec(&mut rng, cout * p);
-            let mut colst = vec![0.0f32; k * p];
-            for kk in 0..k {
-                for j in 0..p {
-                    colst[j * k + kk] = cols[kk * p + j];
+                // Transposed: dW-style GEMM against im2colᵀ vs materialized
+                // colsᵀ.
+                let dy = rand_vec(&mut rng, cout * p);
+                let mut colst = vec![0.0f32; k * p];
+                for kk in 0..k {
+                    for j in 0..p {
+                        colst[j * k + kk] = cols[kk * p + j];
+                    }
                 }
+                let mut apy = vec![0.0f32; packed_a_len(kern, cout, p)];
+                pack_a(kern, &dy, cout, p, &mut apy);
+                let mut dw_mat = vec![0.0f32; cout * k];
+                gemm(kern, &mut dw_mat, cout, k, p, &apy, &BSrc::Mat(&colst), &mut scratch);
+                let mut dw_img = vec![0.0f32; cout * k];
+                gemm(
+                    kern,
+                    &mut dw_img,
+                    cout,
+                    k,
+                    p,
+                    &apy,
+                    &BSrc::Im2colT { x: &x, cin, h, w, kh, kw: kh, pad },
+                    &mut scratch,
+                );
+                assert_eq!(dw_mat, dw_img, "{} im2colT cin={cin} h={h}", kern.name());
             }
-            let mut apy = vec![0.0f32; packed_a_len(cout, p)];
-            pack_a(&dy, cout, p, &mut apy);
-            let mut dw_mat = vec![0.0f32; cout * k];
-            gemm(&mut dw_mat, cout, k, p, &apy, &BSrc::Mat(&colst), &mut scratch);
-            let mut dw_img = vec![0.0f32; cout * k];
-            gemm(
-                &mut dw_img,
-                cout,
-                k,
-                p,
-                &apy,
-                &BSrc::Im2colT { x: &x, cin, h, w, kh, kw: kh, pad },
-                &mut scratch,
-            );
-            assert_eq!(dw_mat, dw_img, "im2colT cin={cin} h={h}");
         }
     }
 
@@ -496,31 +807,125 @@ mod tests {
     fn gemm_is_deterministic_across_scratch_states() {
         // A dirty or pre-grown scratch buffer must not change a single bit
         // (panels are fully overwritten, edges zero-filled).
-        let mut rng = Rng::new(0xD17);
-        let (m, n, k) = (10usize, 100usize, 50usize);
+        for kern in Kernel::all_supported() {
+            let mut rng = Rng::new(0xD17);
+            let (m, n, k) = (10usize, 100usize, 50usize);
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let mut apack = vec![0.0f32; packed_a_len(kern, m, k)];
+            pack_a(kern, &a, m, k, &mut apack);
+            let run = |scratch: &mut Vec<f32>| {
+                let mut c = vec![0.0f32; m * n];
+                gemm(kern, &mut c, m, n, k, &apack, &BSrc::Mat(&b), scratch);
+                c
+            };
+            let clean = run(&mut Vec::new());
+            let mut dirty = vec![f32::NAN; KC * NC * 2];
+            assert_eq!(clean, run(&mut dirty));
+            let mut grown = vec![7.5f32; 8];
+            assert_eq!(clean, run(&mut grown));
+        }
+    }
+
+    #[test]
+    fn bf16_gemm_is_exact_on_bf16_representable_operands() {
+        // When every B value is already exactly bf16-representable, the
+        // rounding step is the identity and gemm_bf16 must match the f32
+        // gemm BIT-FOR-BIT per kernel (same values, same reduction order).
+        for kern in Kernel::all_supported() {
+            let mut rng = Rng::new(0xBF16);
+            let (m, n, k) = (9usize, 37usize, 300usize);
+            let a = rand_vec(&mut rng, m * k);
+            let b: Vec<f32> = rand_vec(&mut rng, k * n)
+                .into_iter()
+                .map(|v| half::bf16_to_f32(half::f32_to_bf16(v)))
+                .collect();
+            let mut apack = vec![0.0f32; packed_a_len(kern, m, k)];
+            pack_a(kern, &a, m, k, &mut apack);
+            let mut want = vec![0.0f32; m * n];
+            gemm(kern, &mut want, m, n, k, &apack, &BSrc::Mat(&b), &mut Vec::new());
+            let mut got = vec![0.0f32; m * n];
+            gemm_bf16(
+                kern,
+                &mut got,
+                m,
+                n,
+                k,
+                &apack,
+                &BSrc::Mat(&b),
+                &mut Vec::new(),
+                &mut Vec::new(),
+            );
+            assert_eq!(want, got, "{} bf16 path drifted on exact operands", kern.name());
+        }
+    }
+
+    #[test]
+    fn bf16_gemm_tracks_f32_within_storage_error() {
+        // General operands: B is rounded to 8-bit-mantissa storage, so the
+        // result may differ from f32 by ~2^-8 relative per loaded value.
+        for kern in Kernel::all_supported() {
+            let mut rng = Rng::new(0xB16B);
+            let (m, n, k) = (7usize, 50usize, 128usize);
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let mut apack = vec![0.0f32; packed_a_len(kern, m, k)];
+            pack_a(kern, &a, m, k, &mut apack);
+            let mut f32_out = vec![0.0f32; m * n];
+            gemm(kern, &mut f32_out, m, n, k, &apack, &BSrc::Mat(&b), &mut Vec::new());
+            let mut bf_out = vec![0.0f32; m * n];
+            gemm_bf16(
+                kern,
+                &mut bf_out,
+                m,
+                n,
+                k,
+                &apack,
+                &BSrc::Mat(&b),
+                &mut Vec::new(),
+                &mut Vec::new(),
+            );
+            // |Σ a_i (b_i+e_i) − Σ a_i b_i| ≤ 2⁻⁸ Σ |a_i b_i|; with
+            // |a|,|b| ≤ 1 uniform and k = 128 an absolute 0.05 bound is
+            // ~3x the expected worst case, while any indexing bug lands
+            // O(1) off.
+            for (f, bf) in f32_out.iter().zip(&bf_out) {
+                assert!((f - bf).abs() < 0.05, "{}: {f} vs {bf}", kern.name());
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_does_not_count_regrows() {
+        // Second call with the same (now big-enough) scratch must not bump
+        // the thread-local allocation counter — the invariant behind the
+        // no-per-batch-allocation eval test.
+        let kern = Kernel::Scalar;
+        let (m, n, k) = (8usize, 300usize, 100usize);
+        let mut rng = Rng::new(0x5C4A);
         let a = rand_vec(&mut rng, m * k);
         let b = rand_vec(&mut rng, k * n);
-        let mut apack = vec![0.0f32; packed_a_len(m, k)];
-        pack_a(&a, m, k, &mut apack);
-        let run = |scratch: &mut Vec<f32>| {
-            let mut c = vec![0.0f32; m * n];
-            gemm(&mut c, m, n, k, &apack, &BSrc::Mat(&b), scratch);
-            c
-        };
-        let clean = run(&mut Vec::new());
-        let mut dirty = vec![f32::NAN; KC * NC];
-        assert_eq!(clean, run(&mut dirty));
-        let mut grown = vec![7.5f32; 8];
-        assert_eq!(clean, run(&mut grown));
+        let mut apack = vec![0.0f32; packed_a_len(kern, m, k)];
+        pack_a(kern, &a, m, k, &mut apack);
+        let mut scratch = Vec::new();
+        let mut c = vec![0.0f32; m * n];
+        gemm(kern, &mut c, m, n, k, &apack, &BSrc::Mat(&b), &mut scratch);
+        let warm = scratch_grows();
+        for _ in 0..3 {
+            gemm(kern, &mut c, m, n, k, &apack, &BSrc::Mat(&b), &mut scratch);
+        }
+        assert_eq!(scratch_grows(), warm, "warm gemm reallocated its scratch");
     }
 
     #[test]
     fn pack_a_zero_pads_edge_rows() {
-        // m = 5 -> two strips; rows 5..7 of strip 1 must be zero.
+        // Layout-pinned to the scalar tile: m = 5 -> two strips; rows 5..7
+        // of strip 1 must be zero.
+        let kern = Kernel::Scalar;
         let (m, k) = (5usize, 3usize);
         let a: Vec<f32> = (0..m * k).map(|i| i as f32 + 1.0).collect();
-        let mut out = vec![f32::NAN; packed_a_len(m, k)];
-        pack_a(&a, m, k, &mut out);
+        let mut out = vec![f32::NAN; packed_a_len(kern, m, k)];
+        pack_a(kern, &a, m, k, &mut out);
         for kk in 0..k {
             assert_eq!(out[kk * MR], a[kk]); // row 0
             let strip1 = &out[k * MR..];

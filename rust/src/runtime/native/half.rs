@@ -1,0 +1,135 @@
+//! Software `f32 ↔ bf16` conversion (no hardware bf16 required).
+//!
+//! bf16 is the top 16 bits of an IEEE-754 f32: same 8-bit exponent, the
+//! mantissa truncated from 23 to 7 bits. That makes conversion pure bit
+//! arithmetic — widening is a shift, narrowing is round-to-nearest-even on
+//! the dropped 16 bits — and every bf16 value is exactly representable as
+//! an f32 (the round trip `bf16 → f32 → bf16` is the identity).
+//!
+//! The eval/TTA GEMM variant ([`super::gemm::gemm_bf16`]) stores its
+//! packed B panels in this format and accumulates in f32: storage halves,
+//! relative rounding error per loaded value is at most `2^-8`, and the
+//! reduction order — hence per-kernel bit-determinism — is unchanged.
+
+/// Narrow an f32 to bf16 with round-to-nearest-even on the dropped 16
+/// mantissa bits. NaN stays NaN (a quiet bit is forced so the payload
+/// can't round to infinity); infinities and zeros map exactly; values
+/// above the bf16 finite range round to infinity, as IEEE rounding
+/// prescribes.
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // Round-to-nearest-even: add 0x7FFF plus the LSB of the kept part.
+    let round = 0x7FFF + ((bits >> 16) & 1);
+    (bits.wrapping_add(round) >> 16) as u16
+}
+
+/// Widen a bf16 to f32 exactly (shift into the high half; every bf16
+/// value is an f32).
+#[inline]
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Narrow a slice elementwise ([`f32_to_bf16`] per value); `dst` supplies
+/// the length.
+pub fn narrow_slice(src: &[f32], dst: &mut [u16]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = f32_to_bf16(s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{cases_from_env, check};
+
+    #[test]
+    fn round_trip_is_identity_for_every_bf16_value() {
+        // Exhaustive over all 65536 bf16 patterns: widening then narrowing
+        // must reproduce the pattern (NaNs stay NaN; payloads may gain the
+        // quiet bit, which the NaN-input check below covers separately).
+        for h in 0..=u16::MAX {
+            let f = bf16_to_f32(h);
+            if f.is_nan() {
+                assert!(bf16_to_f32(f32_to_bf16(f)).is_nan(), "NaN lost at {h:#06x}");
+            } else {
+                assert_eq!(f32_to_bf16(f), h, "round trip broke at {h:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn special_values_map_exactly() {
+        assert_eq!(f32_to_bf16(0.0), 0x0000);
+        assert_eq!(f32_to_bf16(-0.0), 0x8000);
+        assert_eq!(f32_to_bf16(1.0), 0x3F80);
+        assert_eq!(f32_to_bf16(f32::INFINITY), 0x7F80);
+        assert_eq!(f32_to_bf16(f32::NEG_INFINITY), 0xFF80);
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        // Max finite f32 overflows the 7-bit mantissa: rounds to +inf.
+        assert_eq!(f32_to_bf16(f32::MAX), 0x7F80);
+    }
+
+    #[test]
+    fn rounding_error_is_bounded_for_normals() {
+        // RNE to a 7-bit mantissa: |bf16(x) - x| <= 2^-8 * |x| for every
+        // normal x (half an ulp at 7 mantissa bits is 2^-8 relative).
+        check(
+            "bf16_rel_error",
+            cases_from_env(4000),
+            |rng| {
+                let x = f32::from_bits(rng.next_u64() as u32);
+                if x.is_normal() {
+                    x
+                } else {
+                    rng.uniform_in(-1e6, 1e6)
+                }
+            },
+            |&x| {
+                let y = bf16_to_f32(f32_to_bf16(x));
+                if !x.is_normal() || !y.is_finite() {
+                    return true; // overflow-to-inf near f32::MAX is correct RNE
+                }
+                (y - x).abs() <= x.abs() * (1.0 / 256.0)
+            },
+        );
+    }
+
+    #[test]
+    fn exact_midpoints_round_to_even() {
+        // x exactly halfway between two adjacent bf16 values must round to
+        // the one with an even (zero) low mantissa bit.
+        check(
+            "bf16_ties_to_even",
+            cases_from_env(4000),
+            |rng| rng.next_u64() as u16,
+            |&h| {
+                if bf16_to_f32(h).is_nan() || bf16_to_f32(h).is_infinite() {
+                    return true;
+                }
+                let mid = f32::from_bits(((h as u32) << 16) | 0x8000);
+                if mid.is_nan() {
+                    return true; // h = max finite + tie crosses into NaN space? (never: goes to inf)
+                }
+                let r = f32_to_bf16(mid);
+                // Ties resolve to an even result that is h or h+1.
+                r & 1 == 0 && (r == h || r == h.wrapping_add(1))
+            },
+        );
+    }
+
+    #[test]
+    fn narrow_slice_matches_scalar_conversion() {
+        let src: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 0.37).collect();
+        let mut dst = vec![0u16; src.len()];
+        narrow_slice(&src, &mut dst);
+        for (&d, &s) in dst.iter().zip(&src) {
+            assert_eq!(d, f32_to_bf16(s));
+        }
+    }
+}

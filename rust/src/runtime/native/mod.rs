@@ -25,8 +25,10 @@
 //! fleet worker) and the per-run mutable [`NativeBackend`].
 
 pub mod gemm;
+pub mod half;
 pub mod ops;
 pub mod pool;
+pub mod simd;
 pub mod variants;
 
 use std::collections::BTreeMap;
@@ -44,6 +46,7 @@ use crate::runtime::state::ModelState;
 use crate::tensor::Tensor;
 
 pub use pool::{available_cores, fleet_parallel_env, ThreadBudget};
+pub use simd::{EvalPrecision, Kernel};
 pub use variants::{builtin_names, builtin_variant};
 
 /// Thread count for the native kernels: `AIRBENCH_NATIVE_THREADS` or the
@@ -135,6 +138,20 @@ impl NativeShared {
 pub struct NativeBackend {
     shared: Arc<NativeShared>,
     threads: usize,
+    /// Register tile every GEMM of this backend runs ([`simd::selected`]
+    /// at construction; never changes mid-run, so the per-kernel
+    /// determinism contract holds for the whole training run).
+    kernel: Kernel,
+    /// Storage precision of the *eval* forward pass only — training is
+    /// always f32 regardless of this setting.
+    eval_precision: EvalPrecision,
+    /// Persistent packed-A buffer for the eval head GEMM (reused across
+    /// eval batches — no per-batch allocation once warm).
+    eval_apack: Vec<f32>,
+    /// Persistent packed-B panel scratch for the eval head GEMM.
+    eval_scratch: Vec<f32>,
+    /// Persistent bf16 panel scratch for the reduced-precision eval path.
+    eval_bscratch: Vec<u16>,
     /// Wall-clock accounting (public so benches can reset between sections).
     pub stats: BackendStats,
 }
@@ -215,6 +232,11 @@ impl NativeBackend {
         NativeBackend {
             shared,
             threads: default_threads(),
+            kernel: simd::selected(),
+            eval_precision: EvalPrecision::default(),
+            eval_apack: Vec::new(),
+            eval_scratch: Vec::new(),
+            eval_bscratch: Vec::new(),
             stats: BackendStats::default(),
         }
     }
@@ -222,6 +244,13 @@ impl NativeBackend {
     /// Override the kernel thread count (bit-identical at any value).
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
+        self
+    }
+
+    /// Pin the register tile explicitly (tests; production uses the
+    /// process-wide [`simd::selected`] choice).
+    pub fn with_kernel(mut self, kernel: Kernel) -> Self {
+        self.kernel = kernel;
         self
     }
 
@@ -257,8 +286,11 @@ impl NativeBackend {
         let cpb = hy.convs_per_block;
         let n = images.shape()[0];
 
+        let kern = self.kernel;
+
         // ---- forward ----------------------------------------------------
-        let mut pre = ops::conv2d_fwd(images, state.get("whiten_w")?, 0, t);
+        let mut pre =
+            ops::conv2d_fwd(images, state.get("whiten_w")?, 0, t, kern, EvalPrecision::F32);
         add_channel_bias(&mut pre, state.get("whiten_b")?.data());
         let whiten_pre = pre;
         let (mut x, whiten_phi) = ops::gelu_fwd_cache(&whiten_pre);
@@ -272,7 +304,7 @@ impl NativeBackend {
                 let lp = self.shared.layer(b, j);
                 let w = state.get(&lp.conv_w)?;
                 let conv_in = x;
-                let conv_out = ops::conv2d_fwd(&conv_in, w, 1, t);
+                let conv_out = ops::conv2d_fwd(&conv_in, w, 1, t, kern, EvalPrecision::F32);
                 let conv_out_shape = conv_out.shape().to_vec();
                 let (bn_in, pool_idx) = if j == 1 {
                     let (p, idx) = ops::maxpool_fwd(&conv_out, 2);
@@ -332,18 +364,19 @@ impl NativeBackend {
         // as the convolutions; one packed-A buffer and one panel scratch
         // are reused across the three head GEMMs of the step.
         let mut scratch = Vec::new();
-        let apack_len = gemm::packed_a_len(n, f)
-            .max(gemm::packed_a_len(f, n))
-            .max(gemm::packed_a_len(n, k));
+        let apack_len = gemm::packed_a_len(kern, n, f)
+            .max(gemm::packed_a_len(kern, f, n))
+            .max(gemm::packed_a_len(kern, n, k));
         let mut apack = vec![0.0f32; apack_len];
         let mut logits = Tensor::zeros(&[n, k]);
-        gemm::pack_a(head_in.data(), n, f, &mut apack[..gemm::packed_a_len(n, f)]);
+        gemm::pack_a(kern, head_in.data(), n, f, &mut apack[..gemm::packed_a_len(kern, n, f)]);
         gemm::gemm(
+            kern,
             logits.data_mut(),
             n,
             k,
             f,
-            &apack[..gemm::packed_a_len(n, f)],
+            &apack[..gemm::packed_a_len(kern, n, f)],
             &gemm::BSrc::Mat(head_w.data()),
             &mut scratch,
         );
@@ -355,13 +388,14 @@ impl NativeBackend {
 
         // dW (f, k) = head_in^T (f, n) @ dlogits (n, k)
         let mut dhead_w = Tensor::zeros(&[f, k]);
-        gemm::pack_a_t(head_in.data(), f, n, &mut apack[..gemm::packed_a_len(f, n)]);
+        gemm::pack_a_t(kern, head_in.data(), f, n, &mut apack[..gemm::packed_a_len(kern, f, n)]);
         gemm::gemm(
+            kern,
             dhead_w.data_mut(),
             f,
             k,
             n,
-            &apack[..gemm::packed_a_len(f, n)],
+            &apack[..gemm::packed_a_len(kern, f, n)],
             &gemm::BSrc::Mat(dlogits.data()),
             &mut scratch,
         );
@@ -370,13 +404,14 @@ impl NativeBackend {
 
         // dhead_in (n, f) = dlogits (n, k) @ head_w^T (k, f)
         let mut dhead_in = Tensor::zeros(&[n, f]);
-        gemm::pack_a(dlogits.data(), n, k, &mut apack[..gemm::packed_a_len(n, k)]);
+        gemm::pack_a(kern, dlogits.data(), n, k, &mut apack[..gemm::packed_a_len(kern, n, k)]);
         gemm::gemm(
+            kern,
             dhead_in.data_mut(),
             n,
             f,
             k,
-            &apack[..gemm::packed_a_len(n, k)],
+            &apack[..gemm::packed_a_len(kern, n, k)],
             &gemm::BSrc::MatT(head_w.data()),
             &mut scratch,
         );
@@ -405,11 +440,11 @@ impl NativeBackend {
                 };
                 grads.insert(
                     lp.conv_w.clone(),
-                    ops::conv2d_bwd_weights(&cache.conv_in, &dconv_out, 1, 3, 3, t),
+                    ops::conv2d_bwd_weights(&cache.conv_in, &dconv_out, 1, 3, 3, t, kern),
                 );
                 let w = state.get(&lp.conv_w)?;
                 let (_, _, ih, iw) = cache.conv_in.dims4();
-                dx = ops::conv2d_bwd_data(&dconv_out, w, 1, ih, iw, t);
+                dx = ops::conv2d_bwd_data(&dconv_out, w, 1, ih, iw, t, kern);
             }
         }
         // Whitening layer: frozen weights, trainable bias only — no
@@ -492,15 +527,23 @@ impl NativeBackend {
     /// validated against `model.py` (`train_step` / `eval_step`). Any
     /// topology change must be applied to BOTH (the pjrt/native parity
     /// test catches divergence whenever the compiled path is available).
-    fn eval_math(&self, state: &ModelState, images: &Tensor) -> Result<Tensor> {
+    ///
+    /// This is the only path that honors [`Self::eval_precision`]: with
+    /// `Bf16`, every GEMM stores its packed B panels in bf16 and
+    /// accumulates in f32. `&mut self` because the head GEMM's packing
+    /// and panel buffers persist on the backend across eval batches (the
+    /// no-per-batch-allocation contract).
+    fn eval_math(&mut self, state: &ModelState, images: &Tensor) -> Result<Tensor> {
         let v = &self.shared.variant;
         let hy = &v.hyper;
         let t = self.threads;
+        let kern = self.kernel;
+        let precision = self.eval_precision;
         let eps = hy.bn_eps as f32;
         let cpb = hy.convs_per_block;
         let n = images.shape()[0];
 
-        let mut pre = ops::conv2d_fwd(images, state.get("whiten_w")?, 0, t);
+        let mut pre = ops::conv2d_fwd(images, state.get("whiten_w")?, 0, t, kern, precision);
         add_channel_bias(&mut pre, state.get("whiten_b")?.data());
         let mut x = ops::gelu_map(&pre);
         for b in 1..=3usize {
@@ -508,7 +551,7 @@ impl NativeBackend {
             for j in 1..=cpb {
                 let lp = self.shared.layer(b, j);
                 let w = state.get(&lp.conv_w)?;
-                let conv_out = ops::conv2d_fwd(&x, w, 1, t);
+                let conv_out = ops::conv2d_fwd(&x, w, 1, t, kern, precision);
                 let bn_in = if j == 1 {
                     ops::maxpool_fwd(&conv_out, 2).0
                 } else {
@@ -539,18 +582,32 @@ impl NativeBackend {
         let k = v.num_classes;
         let head_in = pool3.reshape(&[n, f])?;
         let mut logits = Tensor::zeros(&[n, k]);
-        let mut apack = vec![0.0f32; gemm::packed_a_len(n, f)];
-        gemm::pack_a(head_in.data(), n, f, &mut apack);
-        let mut scratch = Vec::new();
-        gemm::gemm(
-            logits.data_mut(),
-            n,
-            k,
-            f,
-            &apack,
-            &gemm::BSrc::Mat(head_w.data()),
-            &mut scratch,
-        );
+        let alen = gemm::packed_a_len(kern, n, f);
+        gemm::ensure(&mut self.eval_apack, alen);
+        gemm::pack_a(kern, head_in.data(), n, f, &mut self.eval_apack[..alen]);
+        match precision {
+            EvalPrecision::F32 => gemm::gemm(
+                kern,
+                logits.data_mut(),
+                n,
+                k,
+                f,
+                &self.eval_apack[..alen],
+                &gemm::BSrc::Mat(head_w.data()),
+                &mut self.eval_scratch,
+            ),
+            EvalPrecision::Bf16 => gemm::gemm_bf16(
+                kern,
+                logits.data_mut(),
+                n,
+                k,
+                f,
+                &self.eval_apack[..alen],
+                &gemm::BSrc::Mat(head_w.data()),
+                &mut self.eval_scratch,
+                &mut self.eval_bscratch,
+            ),
+        }
         logits.scale(hy.scaling_factor as f32);
         Ok(logits)
     }
@@ -608,6 +665,19 @@ impl Backend for NativeBackend {
 
     fn stats_mut(&mut self) -> &mut BackendStats {
         &mut self.stats
+    }
+
+    fn kernel_name(&self) -> &'static str {
+        self.kernel.name()
+    }
+
+    fn kernel_threads(&self) -> usize {
+        self.threads
+    }
+
+    fn set_eval_precision(&mut self, precision: EvalPrecision) -> Result<()> {
+        self.eval_precision = precision;
+        Ok(())
     }
 }
 
@@ -705,6 +775,81 @@ mod tests {
         assert_eq!(a.data(), c.data());
         assert!(a.data().iter().all(|v| v.is_finite()));
         assert_eq!(b.stats().eval_calls, 2);
+    }
+
+    #[test]
+    fn bf16_eval_tracks_f32_and_agrees_on_argmax() {
+        // Train a couple of steps so the weights are non-trivial, then
+        // compare the bf16-storage eval pass against f32 on the same
+        // images: logits close in absolute terms, and the predicted class
+        // identical wherever f32's top-2 margin exceeds the bf16 noise.
+        let mut b = backend();
+        let mut state = b.init_state(&InitConfig::default());
+        for split in 0..2 {
+            let (images, labels) = batch(&b, 10 + split);
+            b.train_step(&mut state, &images, &labels, 2e-3, 0.1, true)
+                .unwrap();
+        }
+        let n = b.batch_eval();
+        let ds = cifar_like(&SynthConfig::default().with_n(n), 0xBF16, 0);
+        let f32_logits = b.eval_logits(&state, &ds.images).unwrap();
+        b.set_eval_precision(EvalPrecision::Bf16).unwrap();
+        let bf16_logits = b.eval_logits(&state, &ds.images).unwrap();
+        // Measure the actual per-logit drift, bound it in absolute terms,
+        // then use it as the argmax-stability margin: wherever f32's top-2
+        // gap exceeds twice the worst drift, bf16 cannot have flipped the
+        // prediction. (2 * max-drift is exact: each of the two competing
+        // logits moved by at most max-drift.)
+        let mut drift = 0.0f32;
+        for (a, c) in f32_logits.data().iter().zip(bf16_logits.data()) {
+            drift = drift.max((a - c).abs());
+        }
+        assert!(drift < 0.05, "bf16 logit drift {drift} exceeds bound");
+        let margin = 2.0 * drift + 1e-6;
+        let mut checked = 0usize;
+        for i in 0..n {
+            let f = &f32_logits.data()[i * 10..(i + 1) * 10];
+            let h = &bf16_logits.data()[i * 10..(i + 1) * 10];
+            let argmax = |row: &[f32]| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|x, y| x.1.total_cmp(y.1))
+                    .unwrap()
+                    .0
+            };
+            let mut sorted: Vec<f32> = f.to_vec();
+            sorted.sort_by(|a, c| c.total_cmp(a));
+            if sorted[0] - sorted[1] > margin {
+                assert_eq!(argmax(f), argmax(h), "argmax flipped at row {i}");
+                checked += 1;
+            }
+        }
+        assert!(checked > 0, "no row had a decisive top-2 margin");
+        // bf16 eval is still deterministic per kernel.
+        let again = b.eval_logits(&state, &ds.images).unwrap();
+        assert_eq!(bf16_logits.data(), again.data());
+    }
+
+    #[test]
+    fn eval_scratch_is_reused_across_batches() {
+        // After one warm eval, further batches of the same shape must not
+        // regrow any GEMM scratch buffer (per-batch allocation is the PR 7
+        // satellite fix). threads=1 keeps all GEMM calls on this thread so
+        // the thread-local regrow counter sees them.
+        let mut b = backend().with_threads(1);
+        let state = b.init_state(&InitConfig::default());
+        let n = b.batch_eval();
+        let ds = cifar_like(&SynthConfig::default().with_n(n), 0x5C2A, 0);
+        b.eval_logits(&state, &ds.images).unwrap();
+        let warm = gemm::scratch_grows();
+        for _ in 0..2 {
+            b.eval_logits(&state, &ds.images).unwrap();
+        }
+        assert_eq!(
+            gemm::scratch_grows(),
+            warm,
+            "eval regrew GEMM scratch after the warm batch"
+        );
     }
 
     #[test]

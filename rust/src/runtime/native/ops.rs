@@ -18,8 +18,11 @@
 //! training possible on any machine (DESIGN.md §5 extends this argument to
 //! the data pipeline).
 
+use std::cell::RefCell;
+
 use crate::runtime::native::gemm::{self, BSrc};
 use crate::runtime::native::pool;
+use crate::runtime::native::simd::{EvalPrecision, Kernel};
 use crate::tensor::Tensor;
 
 /// Baseline examples per weight-gradient partial. Never derived from the
@@ -302,15 +305,32 @@ pub fn col2im_acc(
 // ---------------------------------------------------------------------------
 
 /// Per-thread scratch buffers a worker reuses across every example it
-/// processes within one conv call: `a` holds a packed GEMM A operand (the
-/// weight-gradient path packs one per example), `b` holds the packed B
-/// panels of the blocked GEMM. Buffers are allocated per call, not
-/// persisted across steps — the per-step allocation cost is a handful of
-/// bounded buffers, amortized over a whole batch of GEMMs.
+/// processes: `a` holds a packed GEMM A operand (the weight-gradient path
+/// packs one per example), `b` holds the packed f32 B panels of the
+/// blocked GEMM, and `bb` the bf16-narrowed panels of the reduced-precision
+/// eval path. Since PR 7 the buffers live in a `thread_local` and persist
+/// across calls and steps: the [`pool`] worker threads are themselves
+/// persistent, so a warmed-up train/eval loop does **zero** per-batch
+/// scratch allocation (asserted via [`gemm::scratch_grows`]).
 #[derive(Default)]
 struct Scratch {
     a: Vec<f32>,
     b: Vec<f32>,
+    bb: Vec<u16>,
+}
+
+thread_local! {
+    /// The calling thread's persistent GEMM scratch. Workers in the
+    /// persistent [`pool`] each get their own copy that lives as long as
+    /// the thread — buffer capacity carries over between batches.
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::default());
+}
+
+/// Run `f` with the thread's persistent [`Scratch`]. Never re-entered:
+/// the conv work closures do all their scratch use inside one invocation
+/// and never call back into another conv from there.
+fn with_scratch<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
 }
 
 /// Run `work(example, out_slice, scratch)` for every example, writing each
@@ -326,10 +346,11 @@ where
     debug_assert_eq!(out.len(), n * item);
     let t = threads.clamp(1, n.max(1));
     if t <= 1 {
-        let mut scratch = Scratch::default();
-        for (i, slice) in out.chunks_mut(item).enumerate() {
-            work(i, slice, &mut scratch);
-        }
+        with_scratch(|scratch| {
+            for (i, slice) in out.chunks_mut(item).enumerate() {
+                work(i, slice, scratch);
+            }
+        });
         return;
     }
     let per = n.div_ceil(t);
@@ -342,10 +363,11 @@ where
             rest = tail;
             let s0 = start;
             s.spawn(move || {
-                let mut scratch = Scratch::default();
-                for (j, slice) in mine.chunks_mut(item).enumerate() {
-                    work(s0 + j, slice, &mut scratch);
-                }
+                with_scratch(|scratch| {
+                    for (j, slice) in mine.chunks_mut(item).enumerate() {
+                        work(s0 + j, slice, scratch);
+                    }
+                });
             });
             start += cnt;
         }
@@ -366,12 +388,13 @@ where
     let mut partials = vec![0.0f32; n_chunks * plen];
     let t = threads.clamp(1, n_chunks);
     if t <= 1 {
-        let mut scratch = Scratch::default();
-        for (c, part) in partials.chunks_mut(plen).enumerate() {
-            for i in c * chunk..(c * chunk + chunk).min(n) {
-                work(i, part, &mut scratch);
+        with_scratch(|scratch| {
+            for (c, part) in partials.chunks_mut(plen).enumerate() {
+                for i in c * chunk..(c * chunk + chunk).min(n) {
+                    work(i, part, scratch);
+                }
             }
-        }
+        });
     } else {
         let per = n_chunks.div_ceil(t);
         pool::scope(|s| {
@@ -383,13 +406,14 @@ where
                 rest = tail;
                 let first = c0;
                 s.spawn(move || {
-                    let mut scratch = Scratch::default();
-                    for (jc, part) in mine.chunks_mut(plen).enumerate() {
-                        let c = first + jc;
-                        for i in c * chunk..(c * chunk + chunk).min(n) {
-                            work(i, part, &mut scratch);
+                    with_scratch(|scratch| {
+                        for (jc, part) in mine.chunks_mut(plen).enumerate() {
+                            let c = first + jc;
+                            for i in c * chunk..(c * chunk + chunk).min(n) {
+                                work(i, part, scratch);
+                            }
                         }
-                    }
+                    });
                 });
                 c0 += cnt;
             }
@@ -416,7 +440,19 @@ where
 /// operand shared by every example's GEMM), and each example's im2col
 /// operand is packed panel-by-panel straight from the image — the full
 /// column matrix is never materialized.
-pub fn conv2d_fwd(x: &Tensor, weight: &Tensor, pad: usize, threads: usize) -> Tensor {
+///
+/// `kernel` picks the register tile ([`super::simd::selected`] in production;
+/// tests pin specific kernels). `precision` selects between the full-f32
+/// GEMM and the bf16-storage eval variant — the training path always
+/// passes [`EvalPrecision::F32`].
+pub fn conv2d_fwd(
+    x: &Tensor,
+    weight: &Tensor,
+    pad: usize,
+    threads: usize,
+    kernel: Kernel,
+    precision: EvalPrecision,
+) -> Tensor {
     let (n, cin, h, w) = x.dims4();
     let (cout, cin2, kh, kw) = weight.dims4();
     debug_assert_eq!(cin, cin2, "conv channel mismatch");
@@ -425,19 +461,19 @@ pub fn conv2d_fwd(x: &Tensor, weight: &Tensor, pad: usize, threads: usize) -> Te
     let mut out = Tensor::zeros(&[n, cout, oh, ow]);
     let xd = x.data();
     let xsz = cin * h * w;
-    let mut apack = vec![0.0f32; gemm::packed_a_len(cout, k)];
-    gemm::pack_a(weight.data(), cout, k, &mut apack);
+    let mut apack = vec![0.0f32; gemm::packed_a_len(kernel, cout, k)];
+    gemm::pack_a(kernel, weight.data(), cout, k, &mut apack);
     let apack = &apack;
     par_examples(n, cout * p, out.data_mut(), threads, &|i, oslice, s| {
-        gemm::gemm(
-            oslice,
-            cout,
-            p,
-            k,
-            apack,
-            &BSrc::Im2col { x: &xd[i * xsz..(i + 1) * xsz], cin, h, w, kh, kw, pad },
-            &mut s.b,
-        );
+        let bsrc = BSrc::Im2col { x: &xd[i * xsz..(i + 1) * xsz], cin, h, w, kh, kw, pad };
+        match precision {
+            EvalPrecision::F32 => {
+                gemm::gemm(kernel, oslice, cout, p, k, apack, &bsrc, &mut s.b);
+            }
+            EvalPrecision::Bf16 => {
+                gemm::gemm_bf16(kernel, oslice, cout, p, k, apack, &bsrc, &mut s.b, &mut s.bb);
+            }
+        }
     });
     out
 }
@@ -460,6 +496,7 @@ pub fn conv2d_bwd_data(
     in_h: usize,
     in_w: usize,
     threads: usize,
+    kernel: Kernel,
 ) -> Tensor {
     let (n, cout, oh, ow) = dy.dims4();
     let (cout2, cin, kh, kw) = weight.dims4();
@@ -473,10 +510,10 @@ pub fn conv2d_bwd_data(
         let dyd = dy.data();
         let (dysz, xsz) = (cout * p, cin * in_h * in_w);
         par_examples(n, xsz, dx.data_mut(), threads, &|i, xslice, s| {
-            s.b.resize(k * p, 0.0);
-            s.b.fill(0.0);
-            matmul_at_acc(wd, &dyd[i * dysz..(i + 1) * dysz], cout, k, p, &mut s.b);
-            col2im_acc(&s.b, cin, in_h, in_w, kh, kw, pad, xslice);
+            gemm::ensure(&mut s.b, k * p);
+            s.b[..k * p].fill(0.0);
+            matmul_at_acc(wd, &dyd[i * dysz..(i + 1) * dysz], cout, k, p, &mut s.b[..k * p]);
+            col2im_acc(&s.b[..k * p], cin, in_h, in_w, kh, kw, pad, xslice);
         });
         return dx;
     }
@@ -496,14 +533,15 @@ pub fn conv2d_bwd_data(
     debug_assert_eq!(conv_out_hw(oh, kh, padr), in_h);
     let kdim = cout * kh * kw;
     let p = in_h * in_w;
-    let mut apack = vec![0.0f32; gemm::packed_a_len(cin, kdim)];
-    gemm::pack_a(&wrot, cin, kdim, &mut apack);
+    let mut apack = vec![0.0f32; gemm::packed_a_len(kernel, cin, kdim)];
+    gemm::pack_a(kernel, &wrot, cin, kdim, &mut apack);
     let apack = &apack;
     let mut dx = Tensor::zeros(&[n, cin, in_h, in_w]);
     let dyd = dy.data();
     let dysz = cout * oh * ow;
     par_examples(n, cin * p, dx.data_mut(), threads, &|i, xslice, s| {
         gemm::gemm(
+            kernel,
             xslice,
             cin,
             p,
@@ -537,6 +575,7 @@ pub fn conv2d_bwd_weights(
     kh: usize,
     kw: usize,
     threads: usize,
+    kernel: Kernel,
 ) -> Tensor {
     let (n, cin, h, w) = x.dims4();
     let (n2, cout, oh, ow) = dy.dims4();
@@ -545,16 +584,17 @@ pub fn conv2d_bwd_weights(
     let (k, p) = (cin * kh * kw, oh * ow);
     let (xd, dyd) = (x.data(), dy.data());
     let (xsz, dysz) = (cin * h * w, cout * p);
-    let alen = gemm::packed_a_len(cout, p);
+    let alen = gemm::packed_a_len(kernel, cout, p);
     let dw = par_chunk_reduce(n, cout * k, threads, &|i, partial, s| {
-        s.a.resize(alen, 0.0);
-        gemm::pack_a(&dyd[i * dysz..(i + 1) * dysz], cout, p, &mut s.a);
+        gemm::ensure(&mut s.a, alen);
+        gemm::pack_a(kernel, &dyd[i * dysz..(i + 1) * dysz], cout, p, &mut s.a[..alen]);
         gemm::gemm(
+            kernel,
             partial,
             cout,
             k,
             p,
-            &s.a,
+            &s.a[..alen],
             &BSrc::Im2colT { x: &xd[i * xsz..(i + 1) * xsz], cin, h, w, kh, kw, pad },
             &mut s.b,
         );
@@ -815,6 +855,7 @@ pub fn ce_loss_grad(logits: &Tensor, labels: &[i32], smoothing: f32) -> (f32, f3
 mod tests {
     use super::*;
     use crate::rng::Rng;
+    use crate::runtime::native::simd;
 
     fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
         let mut t = Tensor::zeros(shape);
@@ -901,8 +942,10 @@ mod tests {
         let mut rng = Rng::new(3);
         let x = rand_tensor(&mut rng, &[2, 1, 4, 4]);
         let w = Tensor::full(&[1, 1, 1, 1], 1.0);
-        let y = conv2d_fwd(&x, &w, 0, 1);
-        assert_eq!(y.data(), x.data());
+        for kern in Kernel::all_supported() {
+            let y = conv2d_fwd(&x, &w, 0, 1, kern, EvalPrecision::F32);
+            assert_eq!(y.data(), x.data(), "{}", kern.name());
+        }
     }
 
     #[test]
@@ -911,7 +954,7 @@ mod tests {
         let (n, cin, h, w, cout, k, pad) = (2usize, 3usize, 5usize, 5usize, 4usize, 3usize, 1usize);
         let x = rand_tensor(&mut rng, &[n, cin, h, w]);
         let wt = rand_tensor(&mut rng, &[cout, cin, k, k]);
-        let y = conv2d_fwd(&x, &wt, pad, 1);
+        let y = conv2d_fwd(&x, &wt, pad, 1, simd::selected(), EvalPrecision::F32);
         let (oh, ow) = (conv_out_hw(h, k, pad), conv_out_hw(w, k, pad));
         for ni in 0..n {
             for co in 0..cout {
@@ -966,7 +1009,7 @@ mod tests {
             let (oh, ow) = (conv_out_hw(h, k, pad), conv_out_hw(w, k, pad));
             let wt = rand_tensor(&mut rng, &[cout, cin, k, k]);
             let dy = rand_tensor(&mut rng, &[n, cout, oh, ow]);
-            let got = conv2d_bwd_data(&dy, &wt, pad, h, w, 1);
+            let got = conv2d_bwd_data(&dy, &wt, pad, h, w, 1, simd::selected());
             // reference: per example, dcols = W^T @ dy_i, then col2im
             let (kd, p) = (cin * k * k, oh * ow);
             let mut want = Tensor::zeros(&[n, cin, h, w]);
@@ -995,7 +1038,7 @@ mod tests {
         let (oh, ow) = (conv_out_hw(h, k, pad), conv_out_hw(w, k, pad));
         let x = rand_tensor(&mut rng, &[n, cin, h, w]);
         let dy = rand_tensor(&mut rng, &[n, cout, oh, ow]);
-        let got = conv2d_bwd_weights(&x, &dy, pad, k, k, 1);
+        let got = conv2d_bwd_weights(&x, &dy, pad, k, k, 1, simd::selected());
         // reference: im2col + dy @ cols^T summed over examples
         let (kd, p) = (cin * k * k, oh * ow);
         let mut want = vec![0.0f32; cout * kd];
@@ -1033,8 +1076,8 @@ mod tests {
             for v in dy.data_mut() {
                 *v = rng.uniform_in(-1.0, 1.0);
             }
-            let y = conv2d_fwd(&x, &wt, pad, 1);
-            let dx = conv2d_bwd_data(&dy, &wt, pad, h, w, 1);
+            let y = conv2d_fwd(&x, &wt, pad, 1, simd::selected(), EvalPrecision::F32);
+            let dx = conv2d_bwd_data(&dy, &wt, pad, h, w, 1, simd::selected());
             let lhs: f32 = y.data().iter().zip(dy.data()).map(|(a, b)| a * b).sum();
             let rhs: f32 = x.data().iter().zip(dx.data()).map(|(a, b)| a * b).sum();
             assert!(
@@ -1062,23 +1105,54 @@ mod tests {
 
     #[test]
     fn conv_threading_is_bit_identical() {
+        // Per-kernel determinism contract: for a FIXED kernel, every thread
+        // count yields the same bits (fwd, bwd_weights, bwd_data).
         let mut rng = Rng::new(23);
         let x = rand_tensor(&mut rng, &[9, 3, 8, 8]);
         let wt = rand_tensor(&mut rng, &[5, 3, 3, 3]);
         let dy = rand_tensor(&mut rng, &[9, 5, 8, 8]);
-        let y1 = conv2d_fwd(&x, &wt, 1, 1);
-        let dw1 = conv2d_bwd_weights(&x, &dy, 1, 3, 3, 1);
-        let dx1 = conv2d_bwd_data(&dy, &wt, 1, 8, 8, 1);
-        for threads in [2usize, 3, 8] {
-            assert_eq!(y1.data(), conv2d_fwd(&x, &wt, 1, threads).data());
-            assert_eq!(
-                dw1.data(),
-                conv2d_bwd_weights(&x, &dy, 1, 3, 3, threads).data()
-            );
-            assert_eq!(
-                dx1.data(),
-                conv2d_bwd_data(&dy, &wt, 1, 8, 8, threads).data()
-            );
+        for kern in Kernel::all_supported() {
+            let y1 = conv2d_fwd(&x, &wt, 1, 1, kern, EvalPrecision::F32);
+            let dw1 = conv2d_bwd_weights(&x, &dy, 1, 3, 3, 1, kern);
+            let dx1 = conv2d_bwd_data(&dy, &wt, 1, 8, 8, 1, kern);
+            for threads in [2usize, 3, 8] {
+                assert_eq!(
+                    y1.data(),
+                    conv2d_fwd(&x, &wt, 1, threads, kern, EvalPrecision::F32).data(),
+                    "{} fwd t={threads}",
+                    kern.name()
+                );
+                assert_eq!(
+                    dw1.data(),
+                    conv2d_bwd_weights(&x, &dy, 1, 3, 3, threads, kern).data(),
+                    "{} dw t={threads}",
+                    kern.name()
+                );
+                assert_eq!(
+                    dx1.data(),
+                    conv2d_bwd_data(&dy, &wt, 1, 8, 8, threads, kern).data(),
+                    "{} dx t={threads}",
+                    kern.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn conv_fwd_bf16_tracks_f32() {
+        // The bf16-storage forward conv stays within the 2^-8 storage
+        // error of the f32 path and is itself thread-count deterministic.
+        let mut rng = Rng::new(0xBF);
+        let x = rand_tensor(&mut rng, &[4, 3, 8, 8]);
+        let wt = rand_tensor(&mut rng, &[5, 3, 3, 3]);
+        for kern in Kernel::all_supported() {
+            let f = conv2d_fwd(&x, &wt, 1, 1, kern, EvalPrecision::F32);
+            let b = conv2d_fwd(&x, &wt, 1, 1, kern, EvalPrecision::Bf16);
+            for (fv, bv) in f.data().iter().zip(b.data()) {
+                assert!((fv - bv).abs() < 0.05, "{}: {fv} vs {bv}", kern.name());
+            }
+            let b2 = conv2d_fwd(&x, &wt, 1, 3, kern, EvalPrecision::Bf16);
+            assert_eq!(b.data(), b2.data(), "{} bf16 thread determinism", kern.name());
         }
     }
 

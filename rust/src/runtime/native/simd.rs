@@ -1,0 +1,212 @@
+//! Runtime kernel dispatch for the native GEMM microkernel.
+//!
+//! The blocked GEMM in [`super::gemm`] has two interchangeable register
+//! tiles: the portable scalar 4x8 tile (constant-bound safe-Rust loops
+//! LLVM autovectorizes on any target) and a hand-written AVX2+FMA 6x16
+//! tile on `std::arch` intrinsics for x86-64. Which one runs is decided
+//! **once per process** by [`selected`]: `AIRBENCH_FORCE_SCALAR` pins the
+//! scalar tile (tests/CI), otherwise `is_x86_feature_detected!` picks the
+//! widest tile the CPU supports. The choice is a [`Kernel`] value threaded
+//! through packing, the microkernel driver, and the conv/classifier call
+//! sites — packing layout and tile shape always agree because both are
+//! derived from the same enum.
+//!
+//! # Determinism contract (per kernel)
+//!
+//! Results are **bit-identical within one `(kernel, thread-count-free)`
+//! configuration**: for a fixed kernel, every `AIRBENCH_NATIVE_THREADS`
+//! value produces the same bits (the reduction order is a pure function of
+//! the shapes — DESIGN.md §2.1/§5). *Across* kernels bits legitimately
+//! differ (the AVX2 tile contracts multiply-add pairs through FMA), so
+//! cross-kernel agreement is tolerance-checked against the naive
+//! reference, never bit-compared.
+
+use std::sync::OnceLock;
+
+/// Which register tile the blocked GEMM runs — selected once per process
+/// by [`selected`], or pinned explicitly by tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable 4x8 scalar tile (autovectorized safe Rust) — the PR 3
+    /// kernel, bit-for-bit.
+    Scalar,
+    /// 6x16 AVX2+FMA tile: twelve `__m256` accumulators, one broadcast
+    /// FMA pair per packed A value per reduction step.
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+}
+
+impl Kernel {
+    /// Microtile rows (packed-A strip height).
+    #[inline]
+    pub fn mr(self) -> usize {
+        match self {
+            Kernel::Scalar => 4,
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => 6,
+        }
+    }
+
+    /// Microtile columns (packed-B panel width).
+    #[inline]
+    pub fn nr(self) -> usize {
+        match self {
+            Kernel::Scalar => 8,
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => 16,
+        }
+    }
+
+    /// Stable name recorded in bench `env` blocks and `airbench info`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar_4x8",
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => "avx2_6x16",
+        }
+    }
+
+    /// Every kernel the *hardware* supports (ignores the force-scalar
+    /// override) — parity tests parameterize over this list.
+    pub fn all_supported() -> Vec<Kernel> {
+        #[allow(unused_mut)]
+        let mut v = vec![Kernel::Scalar];
+        #[cfg(target_arch = "x86_64")]
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            v.push(Kernel::Avx2);
+        }
+        v
+    }
+}
+
+/// True when `AIRBENCH_FORCE_SCALAR` is set to a non-empty value other
+/// than `"0"` — pins [`selected`] to the portable scalar tile.
+pub fn force_scalar() -> bool {
+    std::env::var("AIRBENCH_FORCE_SCALAR")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false)
+}
+
+fn detect() -> Kernel {
+    if force_scalar() {
+        return Kernel::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        return Kernel::Avx2;
+    }
+    Kernel::Scalar
+}
+
+/// The kernel this process runs, decided once (first call) and cached:
+/// scalar when forced or on non-x86 targets, AVX2 when the CPU has
+/// avx2+fma.
+pub fn selected() -> Kernel {
+    static SEL: OnceLock<Kernel> = OnceLock::new();
+    *SEL.get_or_init(detect)
+}
+
+/// The SIMD feature set detected on this CPU (empty on non-x86 targets) —
+/// recorded in bench `env` blocks so baselines from different ISAs can't
+/// be silently compared.
+pub fn cpu_features() -> Vec<&'static str> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        let mut f = Vec::new();
+        for (name, up) in [
+            ("sse2", is_x86_feature_detected!("sse2")),
+            ("sse4.1", is_x86_feature_detected!("sse4.1")),
+            ("avx", is_x86_feature_detected!("avx")),
+            ("avx2", is_x86_feature_detected!("avx2")),
+            ("fma", is_x86_feature_detected!("fma")),
+            ("avx512f", is_x86_feature_detected!("avx512f")),
+        ] {
+            if up {
+                f.push(name);
+            }
+        }
+        f
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        Vec::new()
+    }
+}
+
+/// Storage precision of the eval/TTA forward pass. Training always runs
+/// [`EvalPrecision::F32`]; [`EvalPrecision::Bf16`] rounds the packed GEMM
+/// B panels to bf16 storage while accumulating in f32 (DESIGN.md §2.1).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EvalPrecision {
+    /// Full f32 storage — bit-identical to the training forward pass.
+    #[default]
+    F32,
+    /// bf16-storage / f32-accumulate GEMM operands (eval/predict only).
+    Bf16,
+}
+
+impl EvalPrecision {
+    /// Parse the CLI/wire spelling (`"f32"` / `"bf16"`).
+    pub fn parse(s: &str) -> Option<EvalPrecision> {
+        match s {
+            "f32" => Some(EvalPrecision::F32),
+            "bf16" => Some(EvalPrecision::Bf16),
+            _ => None,
+        }
+    }
+
+    /// Wire name, inverse of [`EvalPrecision::parse`].
+    pub fn name(self) -> &'static str {
+        match self {
+            EvalPrecision::F32 => "f32",
+            EvalPrecision::Bf16 => "bf16",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selected_is_supported_and_stable() {
+        let sel = selected();
+        // Under AIRBENCH_FORCE_SCALAR the selection must be scalar; either
+        // way it is one of the hardware-supported kernels.
+        if force_scalar() {
+            assert_eq!(sel, Kernel::Scalar);
+        }
+        assert!(Kernel::all_supported().contains(&sel));
+        assert_eq!(sel, selected(), "selection must be cached");
+    }
+
+    #[test]
+    fn kernel_names_and_tiles_are_consistent() {
+        for k in Kernel::all_supported() {
+            assert!(k.mr() >= 4 && k.nr() >= 8);
+            assert!(k.name().contains(&format!("{}x{}", k.mr(), k.nr())));
+        }
+        assert_eq!(Kernel::Scalar.name(), "scalar_4x8");
+    }
+
+    #[test]
+    fn cpu_features_are_plausible() {
+        let f = cpu_features();
+        // On x86-64, sse2 is architecturally guaranteed; elsewhere the
+        // list is empty. Either way every entry is a known spelling.
+        #[cfg(target_arch = "x86_64")]
+        assert!(f.contains(&"sse2"));
+        for feat in &f {
+            assert!(["sse2", "sse4.1", "avx", "avx2", "fma", "avx512f"].contains(feat));
+        }
+    }
+
+    #[test]
+    fn precision_parse_round_trips() {
+        for p in [EvalPrecision::F32, EvalPrecision::Bf16] {
+            assert_eq!(EvalPrecision::parse(p.name()), Some(p));
+        }
+        assert_eq!(EvalPrecision::parse("fp64"), None);
+        assert_eq!(EvalPrecision::default(), EvalPrecision::F32);
+    }
+}

@@ -180,5 +180,5 @@ fn committed_baseline_is_schema_valid() {
             found += 1;
         }
     }
-    assert!(found >= 2, "expected both the pr3 and pr4 baselines at the repo root");
+    assert!(found >= 3, "expected the pr3, pr4, and pr7 baselines at the repo root");
 }

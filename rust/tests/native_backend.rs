@@ -13,7 +13,7 @@ use airbench::data::synthetic::{cifar_like, SynthConfig};
 use airbench::rng::Rng;
 use airbench::runtime::native::{ops, NativeBackend};
 use airbench::runtime::{
-    cpu_client, Backend, InitConfig, Manifest, ModelState, PjrtBackend, PjrtStatus,
+    cpu_client, Backend, EvalPrecision, InitConfig, Manifest, ModelState, PjrtBackend, PjrtStatus,
 };
 use airbench::tensor::Tensor;
 
@@ -45,12 +45,13 @@ fn conv_gradients_match_finite_difference() {
     let x = rand_tensor(&mut rng, &[2, 2, 5, 5], 1.0);
     let w = rand_tensor(&mut rng, &[3, 2, 3, 3], 0.5);
     let r = rand_tensor(&mut rng, &[2, 3, 5, 5], 1.0); // pad=1 keeps 5x5
+    let kern = airbench::runtime::native::simd::selected();
     let probe = |x: &Tensor, w: &Tensor| -> f32 {
-        let y = ops::conv2d_fwd(x, w, 1, 1);
+        let y = ops::conv2d_fwd(x, w, 1, 1, kern, EvalPrecision::F32);
         y.data().iter().zip(r.data()).map(|(a, b)| a * b).sum()
     };
-    let dx = ops::conv2d_bwd_data(&r, &w, 1, 5, 5, 1);
-    let dw = ops::conv2d_bwd_weights(&x, &r, 1, 3, 3, 1);
+    let dx = ops::conv2d_bwd_data(&r, &w, 1, 5, 5, 1, kern);
+    let dw = ops::conv2d_bwd_weights(&x, &r, 1, 3, 3, 1, kern);
     let h = 1e-2f32;
     for &i in &[0usize, 7, 33, 49, 99] {
         let mut xp = x.clone();

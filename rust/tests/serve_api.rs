@@ -24,7 +24,7 @@ use airbench::config::{TrainConfig, TtaLevel};
 use airbench::coordinator::{evaluate, run_fleet, train, warmup};
 use airbench::experiments::{make_data, DataKind};
 use airbench::runtime::native::builtin_variant;
-use airbench::runtime::{checkpoint, BackendKind, EngineSpec, InitConfig, ModelState};
+use airbench::runtime::{checkpoint, BackendKind, EngineSpec, EvalPrecision, InitConfig, ModelState};
 use airbench::serve::run_session;
 use airbench::util::json::{parse, Json};
 
@@ -309,6 +309,7 @@ fn serve_predict_on_a_warm_model_matches_the_direct_eval() {
         data: DataKind::Cifar10,
         test_n: Some(TEST_N),
         tta: TtaLevel::None,
+        precision: EvalPrecision::F32,
     })
     .to_json()
     .to_string();
