@@ -36,13 +36,14 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::api::event::{validate_result, Event, JobId, JobResult};
 use crate::api::job::{
     BenchJob, EvalJob, FleetBenchJob, FleetJob, InfoJob, JobSpec, LoadJob, PredictJob, SaveJob,
-    TrainJob,
+    StudyJob, TrainJob,
 };
 use crate::api::registry::{Registry, WarmModel};
 use crate::coordinator::observer::{Cancelled, Observer};
 use crate::coordinator::trainer::EpochLog;
 use crate::coordinator::{
-    evaluate_observed, fleet_budget, is_cancelled, run_fleet, run_fleet_parallel, train_run, warmup,
+    evaluate_observed, fleet_budget, is_cancelled, run_fleet, run_fleet_parallel, run_study,
+    train_run, warmup,
 };
 use crate::data::Dataset;
 use crate::experiments::{make_data, DataKind, Scale};
@@ -435,6 +436,7 @@ fn exec(inner: &Inner, id: JobId, spec: JobSpec, sink: &mut ChannelSink) -> Resu
         JobSpec::Train(job) => exec_train(inner, id, job, sink),
         JobSpec::Eval(job) => exec_eval(inner, id, job, sink),
         JobSpec::Fleet(job) => exec_fleet(inner, id, job, sink),
+        JobSpec::Study(job) => exec_study(inner, id, job, sink),
         JobSpec::Bench(job) => exec_bench(inner, id, job, sink),
         JobSpec::FleetBench(job) => exec_fleet_bench(inner, id, job, sink),
         JobSpec::Info(job) => exec_info(inner, id, job, sink),
@@ -598,6 +600,58 @@ fn exec_fleet(
     }
     Ok(JobResult::Fleet {
         result: fleet,
+        config: cfg,
+        backend: factory.kind().name().to_string(),
+        log: log_path,
+    })
+}
+
+fn exec_study(
+    inner: &Inner,
+    id: JobId,
+    job: StudyJob,
+    sink: &mut ChannelSink,
+) -> Result<JobResult> {
+    let cfg = job.config;
+    let runs = job.runs.unwrap_or(inner.cfg.scale.runs);
+    let parallel = job.parallel.unwrap_or(cfg.fleet_parallel);
+    let (train_ds, test_ds) = inner.data(job.data, job.train_n, job.test_n);
+    let factory = inner.factory(cfg.backend, &cfg.variant)?;
+    started(sink, id, "study", factory.kind().name(), &cfg.variant);
+    let budget = fleet_budget(&factory, parallel, runs);
+    sink.on_log(&format!(
+        "[study] backend={} cells={} runs={} parallel={} kernel_threads={}",
+        factory.kind().name(),
+        job.policies.len(),
+        runs,
+        budget.runs_parallel,
+        budget.kernel_threads,
+    ));
+    if job.warmup {
+        // Pay one-time costs once for the whole grid — every cell shares
+        // the same resolved cores.
+        let mut w = factory.spawn()?;
+        warmup(w.as_mut(), &train_ds, &cfg)?;
+    }
+    let result = run_study(
+        &factory,
+        &train_ds,
+        &test_ds,
+        &cfg,
+        &job.policies,
+        runs,
+        parallel,
+        Some(&mut *sink as &mut dyn Observer),
+    )?;
+    let mut log_path = None;
+    if let Some(path) = &job.log {
+        std::fs::write(path, result.to_json(&cfg, factory.kind().name()).to_string())
+            .with_context(|| format!("writing study report {}", path.display()))?;
+        sink.on_log(&format!("study report written to {}", path.display()));
+        log_path = Some(path.clone());
+    }
+    Ok(JobResult::Study {
+        result,
         config: cfg,
         backend: factory.kind().name().to_string(),
         log: log_path,

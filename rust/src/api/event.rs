@@ -20,6 +20,7 @@ use anyhow::{bail, Context, Result};
 use crate::bench::{FleetReport, Report};
 use crate::config::TrainConfig;
 use crate::coordinator::{FleetResult, TrainResult};
+use crate::stats::StudyResult;
 use crate::util::json::Json;
 
 /// Engine-assigned job identifier (1-based; 0 is reserved for
@@ -214,6 +215,17 @@ pub enum JobResult {
         /// Where the structured fleet log was written, if requested.
         log: Option<PathBuf>,
     },
+    /// A finished policy × seed study grid.
+    Study {
+        /// Per-cell fleets + seed table (its JSON is `airbench.study/1`).
+        result: StudyResult,
+        /// The base config every cell derives from.
+        config: TrainConfig,
+        /// Resolved backend name.
+        backend: String,
+        /// Where the structured study report was written, if requested.
+        log: Option<PathBuf>,
+    },
     /// A finished §3.7 bench invocation.
     Bench {
         /// The measured report (its JSON is the `airbench.bench/1` schema).
@@ -301,6 +313,7 @@ impl JobResult {
             JobResult::Train { .. } => "train",
             JobResult::Eval { .. } => "eval",
             JobResult::Fleet { .. } => "fleet",
+            JobResult::Study { .. } => "study",
             JobResult::Bench { .. } => "bench",
             JobResult::FleetBench { .. } => "fleet_bench",
             JobResult::Info { .. } => "info",
@@ -379,6 +392,19 @@ impl JobResult {
                 let mut j = result.to_json(config);
                 if let Json::Obj(m) = &mut j {
                     m.insert("backend".to_string(), Json::str(backend));
+                    m.insert("log".to_string(), opt_path_json(log));
+                }
+                j
+            }
+            JobResult::Study {
+                result,
+                config,
+                backend,
+                log,
+            } => {
+                // The `airbench.study/1` document, plus the log pointer.
+                let mut j = result.to_json(config, backend);
+                if let Json::Obj(m) = &mut j {
                     m.insert("log".to_string(), opt_path_json(log));
                 }
                 j
@@ -528,6 +554,7 @@ pub fn validate_result(j: &Json) -> Result<()> {
             data.get("config")?.get("variant")?.as_str()?;
             data.get("backend")?.as_str()?;
         }
+        "study" => crate::stats::study::validate(data).context("study result payload")?,
         "bench" => crate::bench::validate(data).context("bench result payload")?,
         "fleet_bench" => {
             crate::bench::validate_fleet(data).context("fleet-bench result payload")?

@@ -20,6 +20,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::bench::{BenchConfig, FleetBenchConfig};
 use crate::config::{TrainConfig, TtaLevel};
+use crate::data::augment::{FlipMode, Policy};
 use crate::experiments::DataKind;
 use crate::runtime::{BackendKind, EvalPrecision};
 use crate::util::json::Json;
@@ -99,6 +100,53 @@ impl Default for FleetJob {
         FleetJob {
             config: TrainConfig::default(),
             data: DataKind::Cifar10,
+            runs: None,
+            parallel: None,
+            train_n: None,
+            test_n: None,
+            warmup: true,
+            log: None,
+        }
+    }
+}
+
+/// An augmentation-policy × seed grid (the CLI's `study` command,
+/// DESIGN.md §11): one fleet per policy, all cells under the same base
+/// config and seed table, reported with per-cell CIs and seed-paired
+/// comparisons as an `airbench.study/1` document.
+#[derive(Clone, Debug)]
+pub struct StudyJob {
+    /// Base per-run training configuration every policy is layered onto
+    /// (cells fork the same per-run seeds from `config.seed`).
+    pub config: TrainConfig,
+    /// Dataset distribution.
+    pub data: DataKind,
+    /// The grid's policy axis, in cell order (must be non-empty).
+    pub policies: Vec<Policy>,
+    /// Runs (seeds) per cell (engine scale default when `None`).
+    pub runs: Option<usize>,
+    /// Concurrent runs within a cell (`None` defers to
+    /// `config.fleet_parallel`; 0 = auto, DESIGN.md §8).
+    pub parallel: Option<usize>,
+    /// Training-set size override.
+    pub train_n: Option<usize>,
+    /// Test-set size override.
+    pub test_n: Option<usize>,
+    /// Untimed warmup before the grid.
+    pub warmup: bool,
+    /// Write the `airbench.study/1` report here.
+    pub log: Option<PathBuf>,
+}
+
+impl Default for StudyJob {
+    fn default() -> Self {
+        StudyJob {
+            config: TrainConfig::default(),
+            data: DataKind::Cifar10,
+            policies: vec![
+                Policy::flip_only(FlipMode::Random),
+                Policy::flip_only(FlipMode::Alternating),
+            ],
             runs: None,
             parallel: None,
             train_n: None,
@@ -220,6 +268,8 @@ pub enum JobSpec {
     Eval(EvalJob),
     /// n-run statistical experiment.
     Fleet(FleetJob),
+    /// Augmentation-policy × seed grid with paired-comparison stats.
+    Study(StudyJob),
     /// §3.7 benchmark harness.
     Bench(BenchJob),
     /// Fleet-throughput bench phase.
@@ -334,6 +384,7 @@ impl JobSpec {
             JobSpec::Train(_) => "train",
             JobSpec::Eval(_) => "eval",
             JobSpec::Fleet(_) => "fleet",
+            JobSpec::Study(_) => "study",
             JobSpec::Bench(_) => "bench",
             JobSpec::FleetBench(_) => "fleet_bench",
             JobSpec::Info(_) => "info",
@@ -372,6 +423,20 @@ impl JobSpec {
                 push_opt_num(&mut p, "test_n", f.test_n);
                 p.push(("warmup", Json::Bool(f.warmup)));
                 push_opt_path(&mut p, "log", &f.log);
+            }
+            JobSpec::Study(s) => {
+                p.push(("data", Json::str(s.data.name())));
+                p.push(("config", s.config.to_json()));
+                p.push((
+                    "policies",
+                    Json::Arr(s.policies.iter().map(|pol| pol.to_json()).collect()),
+                ));
+                push_opt_num(&mut p, "runs", s.runs);
+                push_opt_num(&mut p, "parallel", s.parallel);
+                push_opt_num(&mut p, "train_n", s.train_n);
+                push_opt_num(&mut p, "test_n", s.test_n);
+                p.push(("warmup", Json::Bool(s.warmup)));
+                push_opt_path(&mut p, "log", &s.log);
             }
             JobSpec::Bench(b) => {
                 let c = &b.config;
@@ -483,6 +548,39 @@ impl JobSpec {
                     log: opt_path(j, "log")?,
                 })
             }
+            "study" => {
+                let d = StudyJob::default();
+                let policies = match opt_key(j, "policies") {
+                    None => d.policies,
+                    Some(v) => {
+                        let arr = v.as_arr().context("job key 'policies'")?;
+                        if arr.is_empty() {
+                            bail!("study jobs need at least one policy");
+                        }
+                        arr.iter()
+                            .map(|pol| match pol {
+                                // Compact spellings are accepted on the wire
+                                // for hand-written serve lines; the canonical
+                                // form is the policy object.
+                                Json::Str(s) => Policy::parse(s),
+                                other => Policy::from_json(other),
+                            })
+                            .collect::<Result<Vec<_>>>()
+                            .context("job key 'policies'")?
+                    }
+                };
+                JobSpec::Study(StudyJob {
+                    config: parse_config(j)?,
+                    data: parse_data(j)?,
+                    policies,
+                    runs: opt_usize(j, "runs")?,
+                    parallel: opt_usize(j, "parallel")?,
+                    train_n: opt_usize(j, "train_n")?,
+                    test_n: opt_usize(j, "test_n")?,
+                    warmup: opt_bool(j, "warmup")?.unwrap_or(d.warmup),
+                    log: opt_path(j, "log")?,
+                })
+            }
             "bench" => {
                 let d = BenchConfig::default();
                 JobSpec::Bench(BenchJob {
@@ -556,7 +654,7 @@ impl JobSpec {
             }),
             other => bail!(
                 "unknown job kind '{other}' \
-                 (train|eval|fleet|bench|fleet_bench|info|save|load|predict)"
+                 (train|eval|fleet|study|bench|fleet_bench|info|save|load|predict)"
             ),
         })
     }
@@ -636,6 +734,51 @@ mod tests {
         }
         assert!(JobSpec::from_json(
             &parse(r#"{"job": "eval", "load": "m.bin", "precision": "fp8"}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn study_specs_round_trip() {
+        let s = StudyJob {
+            runs: Some(4),
+            parallel: Some(2),
+            policies: vec![
+                Policy::parse("alternating").unwrap(),
+                Policy::parse("random+crop=heavy+sub=rcut:6").unwrap(),
+            ],
+            log: Some(PathBuf::from("study.json")),
+            ..StudyJob::default()
+        };
+        match round_trip(&JobSpec::Study(s)) {
+            JobSpec::Study(s) => {
+                assert_eq!(s.runs, Some(4));
+                assert_eq!(s.parallel, Some(2));
+                assert_eq!(s.policies.len(), 2);
+                assert_eq!(s.policies[1].name(), "random+crop=heavy+sub=rcut:6");
+                assert_eq!(s.log.as_deref(), Some(std::path::Path::new("study.json")));
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        // Compact string spellings are accepted in the policies array, and the
+        // default grid kicks in when the key is absent entirely.
+        let wire = r#"{"job": "study", "policies": ["none", "alternating+cutout=8"]}"#;
+        match JobSpec::from_json(&parse(wire).unwrap()).unwrap() {
+            JobSpec::Study(s) => {
+                assert_eq!(s.policies[0].name(), "none");
+                assert_eq!(s.policies[1].name(), "alternating+cutout=8");
+                assert!(s.warmup);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        match JobSpec::from_json(&parse(r#"{"job": "study"}"#).unwrap()).unwrap() {
+            JobSpec::Study(s) => assert_eq!(s.policies, StudyJob::default().policies),
+            other => panic!("wrong kind: {other:?}"),
+        }
+        // An explicit empty grid is an error, as is a malformed policy.
+        assert!(JobSpec::from_json(&parse(r#"{"job": "study", "policies": []}"#).unwrap()).is_err());
+        assert!(JobSpec::from_json(
+            &parse(r#"{"job": "study", "policies": ["random+bogus=1"]}"#).unwrap()
         )
         .is_err());
     }

@@ -2,7 +2,7 @@
 //!
 //! This layer is the programmatic face of the crate (DESIGN.md §9). A
 //! client — the CLI, the `airbench serve` daemon, a test, or library code
-//! — builds a typed [`JobSpec`] (train / eval / fleet / bench /
+//! — builds a typed [`JobSpec`] (train / eval / fleet / study / bench /
 //! fleet-bench / info, plus the artifact lifecycle save / load /
 //! predict, DESIGN.md §10), submits it to an [`Engine`], and consumes a
 //! typed [`Event`] stream from the returned [`JobHandle`]:
@@ -50,6 +50,6 @@ pub use engine::{CancelToken, Engine, EngineConfig, JobHandle};
 pub use event::{validate_result, Event, JobId, JobResult};
 pub use job::{
     BenchJob, EvalJob, FleetBenchJob, FleetJob, InfoJob, JobSpec, LoadJob, PredictJob, SaveJob,
-    TrainJob,
+    StudyJob, TrainJob,
 };
 pub use registry::{Registry, WarmModel};

@@ -630,12 +630,16 @@ pub fn validate_fleet(j: &Json) -> Result<()> {
     Ok(())
 }
 
-/// Validate any committed `BENCH_*.json`, dispatching on its `schema` key
-/// ([`SCHEMA`] or [`FLEET_SCHEMA`]).
+/// Validate any committed report document, dispatching on its `schema`
+/// key ([`SCHEMA`], [`FLEET_SCHEMA`], or [`crate::stats::study::SCHEMA`]).
 pub fn validate_any(j: &Json) -> Result<()> {
-    match j.get("schema")?.as_str()? {
-        FLEET_SCHEMA => validate_fleet(j),
-        _ => validate(j),
+    let schema = j.get("schema")?.as_str()?;
+    if schema == FLEET_SCHEMA {
+        validate_fleet(j)
+    } else if schema == crate::stats::study::SCHEMA {
+        crate::stats::study::validate(j)
+    } else {
+        validate(j)
     }
 }
 

@@ -10,7 +10,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::data::augment::{AugConfig, CropPolicy, FlipMode};
+use crate::data::augment::{AugConfig, CropPolicy, FlipMode, SubPolicy};
 use crate::data::loader::OrderPolicy;
 use crate::runtime::backend::BackendKind;
 use crate::util::json::{parse, Json};
@@ -93,6 +93,9 @@ pub struct TrainConfig {
     pub cutout: usize,
     /// Optional ImageNet-style crop policy (replaces translate; §5.2).
     pub crop: Option<CropPolicy>,
+    /// Optional AutoAugment-style per-image sub-policy, drawn from the
+    /// counter-based row stream (`wide|rcut:N`; DESIGN.md §11).
+    pub sub: Option<SubPolicy>,
     /// Execution backend: `auto` (PJRT when artifacts + runtime exist,
     /// else native), `pjrt`, or `native` (DESIGN.md §2).
     pub backend: BackendKind,
@@ -143,6 +146,7 @@ impl Default for TrainConfig {
             translate: 2,
             cutout: 0,
             crop: None,
+            sub: None,
             backend: BackendKind::Auto,
             workers: 0,
             prefetch_depth: 2,
@@ -184,6 +188,7 @@ impl TrainConfig {
             translate: self.translate,
             cutout: self.cutout,
             crop: self.crop,
+            sub: self.sub,
             flip_seed: 42 ^ self.seed, // per-run flip hash, like re-seeding md5
         }
     }
@@ -220,6 +225,15 @@ impl TrainConfig {
                     "light" => Some(CropPolicy::LightRrc),
                     v => match v.strip_prefix("center:").and_then(|r| r.parse().ok()) {
                         Some(ratio_pct) => Some(CropPolicy::Center { ratio_pct }),
+                        None => return Err(bad()),
+                    },
+                }
+            }
+            "sub" => {
+                self.sub = match value {
+                    "none" => None,
+                    v => match SubPolicy::parse(v) {
+                        Some(sp) => Some(sp),
                         None => return Err(bad()),
                     },
                 }
@@ -311,6 +325,10 @@ impl TrainConfig {
             ("translate", Json::num(self.translate as f64)),
             ("cutout", Json::num(self.cutout as f64)),
             ("crop", Json::Str(crop)),
+            (
+                "sub",
+                Json::Str(self.sub.map_or("none".to_string(), |sp| sp.spelling())),
+            ),
             ("backend", Json::str(self.backend.name())),
             ("workers", Json::num(self.workers as f64)),
             ("prefetch_depth", Json::num(self.prefetch_depth as f64)),
@@ -368,6 +386,7 @@ pub const CONFIG_KEYS: &[&str] = &[
     "translate",
     "cutout",
     "crop",
+    "sub",
     "backend",
     "workers",
     "prefetch_depth",
@@ -521,6 +540,7 @@ mod tests {
             "translate" => "3",
             "cutout" => "12",
             "crop" => "center:75",
+            "sub" => "rcut:6",
             "backend" => "native",
             "workers" => "4",
             "prefetch_depth" => "5",
@@ -657,6 +677,20 @@ mod tests {
         assert_eq!(c.to_json().get("crop").unwrap().as_str().unwrap(), "center:80");
         assert!(c.set("crop", "center:").is_err());
         assert!(c.set("crop", "diagonal").is_err());
+    }
+
+    #[test]
+    fn sub_policy_spelling_parses_and_serializes() {
+        let mut c = TrainConfig::default();
+        c.set("sub", "wide").unwrap();
+        assert_eq!(c.sub, Some(SubPolicy::WideTranslate));
+        c.set("sub", "rcut:8").unwrap();
+        assert_eq!(c.sub, Some(SubPolicy::RandCutout { size: 8 }));
+        assert_eq!(c.to_json().get("sub").unwrap().as_str().unwrap(), "rcut:8");
+        assert_eq!(c.aug().sub, Some(SubPolicy::RandCutout { size: 8 }));
+        c.set("sub", "none").unwrap();
+        assert_eq!(c.sub, None);
+        assert!(c.set("sub", "sideways").is_err());
     }
 
     #[test]

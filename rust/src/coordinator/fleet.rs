@@ -27,16 +27,18 @@
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::TrainConfig;
-use crate::coordinator::observer::{Cancelled, NullObserver, Observer, QuietRuns};
+use crate::coordinator::observer::{Cancelled, NullObserver, Observer, OffsetRuns, QuietRuns};
 use crate::coordinator::trainer::{train_run, TrainResult};
+use crate::data::augment::Policy;
 use crate::data::Dataset;
 use crate::rng::Rng;
 use crate::runtime::native::{fleet_parallel_env, ThreadBudget};
 use crate::runtime::{Backend, BackendFactory};
 use crate::stats::basic::Summary;
+use crate::stats::study::{StudyCell, StudyResult};
 use crate::util::json::Json;
 
 /// Aggregated results of one fleet.
@@ -359,6 +361,76 @@ pub fn run_fleet_parallel(
         .map(|(i, r)| r.with_context(|| format!("fleet run {i} produced no result")))
         .collect::<Result<_>>()?;
     Ok(assemble(runs))
+}
+
+/// Run a policy × seed study: one fleet per policy cell, every cell under
+/// the **same** base config and therefore the same [`fleet_seeds`] table
+/// (a [`Policy`] never touches the seed). Cell `c`'s per-run accuracies
+/// are bit-identical to a standalone [`run_fleet_parallel`] of
+/// `policy.apply(cfg)` at any parallelism level — the study adds pairing,
+/// not new numerics (`tests/study_grid.rs` pins this).
+///
+/// Cells run sequentially in grid order through the concurrent fleet
+/// scheduler (parallelism lives *inside* a cell, where it cannot perturb
+/// results). Cancellation is polled between cells on top of the fleet's
+/// own polls; a tripped poll resolves to the typed [`Cancelled`] error. A
+/// failing cell — including a policy that parses but is not executable,
+/// which [`Policy::apply`] rejects lazily at cell start — aborts the study
+/// with the cell index and policy name in the error context; earlier
+/// cells' completed fleets are unaffected (they simply are not reported,
+/// the job fails as a unit).
+#[allow(clippy::too_many_arguments)]
+pub fn run_study(
+    factory: &BackendFactory,
+    train_data: &Dataset,
+    test_data: &Dataset,
+    cfg: &TrainConfig,
+    policies: &[Policy],
+    runs: usize,
+    parallel: usize,
+    obs: Option<&mut dyn Observer>,
+) -> Result<StudyResult> {
+    let mut null = NullObserver;
+    let obs = obs.unwrap_or(&mut null);
+    if policies.is_empty() {
+        bail!("study needs at least one policy");
+    }
+    if runs == 0 {
+        bail!("study needs at least one run per cell");
+    }
+    let seeds = fleet_seeds(cfg, runs);
+    let mut cells = Vec::with_capacity(policies.len());
+    for (ci, policy) in policies.iter().enumerate() {
+        if obs.cancelled() {
+            return Err(Cancelled.into());
+        }
+        let cell = (|| -> Result<StudyCell> {
+            let cell_cfg = policy.apply(cfg)?;
+            obs.on_log(&format!(
+                "[study] cell {}/{}: policy {}",
+                ci + 1,
+                policies.len(),
+                policy.name()
+            ));
+            let mut offset = OffsetRuns::new(&mut *obs, ci * runs);
+            let fleet = run_fleet_parallel(
+                factory,
+                train_data,
+                test_data,
+                &cell_cfg,
+                runs,
+                parallel,
+                Some(&mut offset),
+            )?;
+            Ok(StudyCell {
+                policy: policy.clone(),
+                fleet,
+            })
+        })()
+        .with_context(|| format!("study cell {ci} ('{}') failed", policy.name()))?;
+        cells.push(cell);
+    }
+    Ok(StudyResult { runs, seeds, cells })
 }
 
 #[cfg(test)]

@@ -16,7 +16,7 @@ pub mod schedule;
 pub mod trainer;
 
 pub use evaluator::{evaluate, evaluate_observed, evaluate_source, EvalOutput};
-pub use fleet::{fleet_budget, fleet_seeds, run_fleet, run_fleet_parallel, FleetResult};
+pub use fleet::{fleet_budget, fleet_seeds, run_fleet, run_fleet_parallel, run_study, FleetResult};
 pub use lookahead::LookaheadState;
 pub use observer::{is_cancelled, Cancelled, NullObserver, Observer};
 pub use schedule::{AlphaSchedule, DecoupledHyper, Triangle};

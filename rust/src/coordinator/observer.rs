@@ -111,6 +111,41 @@ impl Observer for QuietRuns<'_> {
     }
 }
 
+/// Adapter a study wraps around its observer while one grid cell's fleet
+/// runs: run indices are offset by `cell_index * runs`, so the flat `run`
+/// stream stays globally distinguishable across cells (cell 1's run 0
+/// reports as `runs + 0`). Everything else passes through — observation
+/// stays passive.
+pub struct OffsetRuns<'a> {
+    inner: &'a mut dyn Observer,
+    offset: usize,
+}
+
+impl<'a> OffsetRuns<'a> {
+    /// Wrap `inner`, offsetting run indices by `offset`.
+    pub fn new(inner: &'a mut dyn Observer, offset: usize) -> OffsetRuns<'a> {
+        OffsetRuns { inner, offset }
+    }
+}
+
+impl Observer for OffsetRuns<'_> {
+    fn on_epoch(&mut self, log: &EpochLog) {
+        self.inner.on_epoch(log);
+    }
+
+    fn on_run(&mut self, run: usize, accuracy: f64) {
+        self.inner.on_run(self.offset + run, accuracy);
+    }
+
+    fn on_log(&mut self, line: &str) {
+        self.inner.on_log(line);
+    }
+
+    fn cancelled(&self) -> bool {
+        self.inner.cancelled()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,5 +189,30 @@ mod tests {
         assert!(q.cancelled());
         assert_eq!(p.epochs, 0, "epoch events must be suppressed");
         assert_eq!(p.logs, vec!["hello".to_string()]);
+    }
+
+    #[test]
+    fn offset_runs_shifts_indices_and_forwards_the_rest() {
+        #[derive(Default)]
+        struct Probe {
+            runs: Vec<(usize, f64)>,
+            logs: usize,
+        }
+        impl Observer for Probe {
+            fn on_run(&mut self, run: usize, accuracy: f64) {
+                self.runs.push((run, accuracy));
+            }
+            fn on_log(&mut self, _line: &str) {
+                self.logs += 1;
+            }
+        }
+        let mut p = Probe::default();
+        let mut o = OffsetRuns::new(&mut p, 8);
+        o.on_run(0, 0.5);
+        o.on_run(3, 0.75);
+        o.on_log("line");
+        assert!(!o.cancelled());
+        assert_eq!(p.runs, vec![(8, 0.5), (11, 0.75)]);
+        assert_eq!(p.logs, 1);
     }
 }

@@ -7,8 +7,11 @@
 //! All transforms write into caller-owned buffers; the batch hot path
 //! (`apply_batch`) does no allocation per image.
 
+use anyhow::{bail, Result};
+
 use crate::rng::{hash_index, Rng};
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 
 /// Horizontal-flip policy (paper Table 1 / §3.6 / §5.2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -279,6 +282,246 @@ impl CropPolicy {
     }
 }
 
+impl CropPolicy {
+    /// Parse a config / policy spelling (`heavy|light|center:N`). Accepts
+    /// any `N` (including out-of-range ratios) — executability is checked
+    /// at [`Policy::apply`] time, so an invalid grid cell is a *runtime*
+    /// cell failure, not a parse error.
+    pub fn parse(s: &str) -> Option<CropPolicy> {
+        match s {
+            "heavy" => Some(CropPolicy::HeavyRrc),
+            "light" => Some(CropPolicy::LightRrc),
+            _ => {
+                let n = s.strip_prefix("center:")?;
+                n.parse::<u32>().ok().map(|ratio_pct| CropPolicy::Center { ratio_pct })
+            }
+        }
+    }
+
+    /// Canonical spelling (inverse of [`CropPolicy::parse`]).
+    pub fn spelling(&self) -> String {
+        match self {
+            CropPolicy::HeavyRrc => "heavy".to_string(),
+            CropPolicy::LightRrc => "light".to_string(),
+            CropPolicy::Center { ratio_pct } => format!("center:{ratio_pct}"),
+        }
+    }
+}
+
+/// AutoAugment-style per-image sub-policy: one extra op whose per-image
+/// coin comes from the *same* counter-based row stream as every other
+/// augmentation draw — no new RNG state, so `apply_batch` stays a pure
+/// function of `(seed, epoch, epoch_pos + row)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubPolicy {
+    /// With p=0.5 per image, double the translate window.
+    WideTranslate,
+    /// With p=0.5 per image, apply an extra cutout of the given size.
+    RandCutout {
+        /// Side of the extra cutout square, in pixels.
+        size: u32,
+    },
+}
+
+impl SubPolicy {
+    /// Parse a config / policy spelling (`wide|rcut:N`).
+    pub fn parse(s: &str) -> Option<SubPolicy> {
+        match s {
+            "wide" => Some(SubPolicy::WideTranslate),
+            _ => {
+                let n = s.strip_prefix("rcut:")?;
+                n.parse::<u32>().ok().map(|size| SubPolicy::RandCutout { size })
+            }
+        }
+    }
+
+    /// Canonical spelling (inverse of [`SubPolicy::parse`]).
+    pub fn spelling(&self) -> String {
+        match self {
+            SubPolicy::WideTranslate => "wide".to_string(),
+            SubPolicy::RandCutout { size } => format!("rcut:{size}"),
+        }
+    }
+}
+
+/// A composable augmentation policy: one cell of a `Study` grid
+/// (DESIGN.md §11). `flip` is mandatory; every other field is an override
+/// layered onto the base [`crate::config::TrainConfig`] by
+/// [`Policy::apply`] — `None` inherits the base value. A `Policy` never
+/// touches the seed, which is what makes study cells seed-paired.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Policy {
+    /// Horizontal-flip mode of the cell.
+    pub flip: FlipMode,
+    /// Crop-policy override (`None` = inherit base config).
+    pub crop: Option<CropPolicy>,
+    /// Translate override in pixels (`None` = inherit base config).
+    pub translate: Option<usize>,
+    /// Cutout-size override (`None` = inherit base config).
+    pub cutout: Option<usize>,
+    /// Per-image sub-policy (`None` = inherit base config).
+    pub sub: Option<SubPolicy>,
+}
+
+impl Policy {
+    /// A flip-only policy (the paper's Table 3 columns).
+    pub fn flip_only(flip: FlipMode) -> Policy {
+        Policy {
+            flip,
+            crop: None,
+            translate: None,
+            cutout: None,
+            sub: None,
+        }
+    }
+
+    /// Parse the compact `+`-joined spelling used on the CLI
+    /// (`--policies random,alternating+cutout=8`): the first segment is a
+    /// flip mode, later segments are `crop=`/`translate=`/`cutout=`/`sub=`
+    /// overrides. Total inverse of [`Policy::name`].
+    pub fn parse(s: &str) -> Result<Policy> {
+        let mut parts = s.split('+');
+        let flip_s = parts.next().unwrap_or("");
+        let Some(flip) = FlipMode::parse(flip_s) else {
+            bail!("policy '{s}': unknown flip mode '{flip_s}' (none|random|alternating|md5)");
+        };
+        let mut p = Policy::flip_only(flip);
+        for seg in parts {
+            let Some((key, value)) = seg.split_once('=') else {
+                bail!("policy '{s}': segment '{seg}' is not key=value");
+            };
+            match key {
+                "crop" => match CropPolicy::parse(value) {
+                    Some(c) => p.crop = Some(c),
+                    None => bail!("policy '{s}': bad crop '{value}' (heavy|light|center:N)"),
+                },
+                "translate" => match value.parse::<usize>() {
+                    Ok(t) => p.translate = Some(t),
+                    Err(_) => bail!("policy '{s}': bad translate '{value}'"),
+                },
+                "cutout" => match value.parse::<usize>() {
+                    Ok(c) => p.cutout = Some(c),
+                    Err(_) => bail!("policy '{s}': bad cutout '{value}'"),
+                },
+                "sub" => match SubPolicy::parse(value) {
+                    Some(sp) => p.sub = Some(sp),
+                    None => bail!("policy '{s}': bad sub-policy '{value}' (wide|rcut:N)"),
+                },
+                other => bail!("policy '{s}': unknown segment key '{other}'"),
+            }
+        }
+        Ok(p)
+    }
+
+    /// Canonical compact spelling (inverse of [`Policy::parse`]); also the
+    /// cell label in `airbench.study/1` reports.
+    pub fn name(&self) -> String {
+        let mut s = self.flip.name().to_string();
+        if let Some(c) = &self.crop {
+            s.push_str(&format!("+crop={}", c.spelling()));
+        }
+        if let Some(t) = self.translate {
+            s.push_str(&format!("+translate={t}"));
+        }
+        if let Some(c) = self.cutout {
+            s.push_str(&format!("+cutout={c}"));
+        }
+        if let Some(sp) = &self.sub {
+            s.push_str(&format!("+sub={}", sp.spelling()));
+        }
+        s
+    }
+
+    /// Serialize to the wire form used inside `StudyJob` specs and study
+    /// reports: `{"flip": ..., ...}` with inherit-`None` keys omitted.
+    pub fn to_json(&self) -> Json {
+        let mut p: Vec<(&'static str, Json)> = vec![("flip", Json::str(self.flip.name()))];
+        if let Some(c) = &self.crop {
+            p.push(("crop", Json::str(&c.spelling())));
+        }
+        if let Some(t) = self.translate {
+            p.push(("translate", Json::num(t as f64)));
+        }
+        if let Some(c) = self.cutout {
+            p.push(("cutout", Json::num(c as f64)));
+        }
+        if let Some(sp) = &self.sub {
+            p.push(("sub", Json::str(&sp.spelling())));
+        }
+        Json::obj(p)
+    }
+
+    /// Parse the wire form. Total round trip: `from_json(to_json(p)) == p`
+    /// for every policy, and unknown keys are rejected so a misspelled
+    /// override can never silently become "inherit".
+    pub fn from_json(j: &Json) -> Result<Policy> {
+        let obj = j.as_obj()?;
+        for key in obj.keys() {
+            if !matches!(key.as_str(), "flip" | "crop" | "translate" | "cutout" | "sub") {
+                bail!("policy object: unknown key '{key}'");
+            }
+        }
+        let flip_s = j.get("flip")?.as_str()?;
+        let Some(flip) = FlipMode::parse(flip_s) else {
+            bail!("policy object: unknown flip mode '{flip_s}'");
+        };
+        let mut p = Policy::flip_only(flip);
+        if let Some(c) = j.opt("crop") {
+            let s = c.as_str()?;
+            match CropPolicy::parse(s) {
+                Some(c) => p.crop = Some(c),
+                None => bail!("policy object: bad crop '{s}'"),
+            }
+        }
+        if let Some(t) = j.opt("translate") {
+            p.translate = Some(t.as_usize()?);
+        }
+        if let Some(c) = j.opt("cutout") {
+            p.cutout = Some(c.as_usize()?);
+        }
+        if let Some(sp) = j.opt("sub") {
+            let s = sp.as_str()?;
+            match SubPolicy::parse(s) {
+                Some(sp) => p.sub = Some(sp),
+                None => bail!("policy object: bad sub-policy '{s}'"),
+            }
+        }
+        Ok(p)
+    }
+
+    /// Layer this policy onto a base config, producing the cell's exact
+    /// per-run config. Never touches `seed` (seed pairing: every cell of a
+    /// study forks the same per-run seed table). Validates executability —
+    /// a policy that parses but cannot run (e.g. `crop=center:0`) fails
+    /// *here*, at cell-execution time, which is what isolates a bad cell
+    /// from the rest of the grid.
+    pub fn apply(&self, base: &crate::config::TrainConfig) -> Result<crate::config::TrainConfig> {
+        if let Some(CropPolicy::Center { ratio_pct }) = self.crop {
+            if !(1..=100).contains(&ratio_pct) {
+                bail!(
+                    "policy '{}': center-crop ratio {ratio_pct}% not executable (must be 1..=100)",
+                    self.name()
+                );
+            }
+        }
+        let mut cfg = base.clone();
+        cfg.flip = self.flip;
+        if let Some(c) = self.crop {
+            cfg.crop = Some(c);
+        }
+        if let Some(t) = self.translate {
+            cfg.translate = t;
+        }
+        if let Some(c) = self.cutout {
+            cfg.cutout = c;
+        }
+        if let Some(sp) = self.sub {
+            cfg.sub = Some(sp);
+        }
+        Ok(cfg)
+    }
+}
+
 /// Batch augmentation settings (the paper's `hyp['aug']` plus policy
 /// extensions used by the §5.2 harness).
 #[derive(Clone, Debug)]
@@ -292,6 +535,10 @@ pub struct AugConfig {
     /// Optional resized-crop policy (ImageNet-style experiments). When set,
     /// it replaces the translate step.
     pub crop: Option<CropPolicy>,
+    /// Optional per-image sub-policy. `None` draws nothing extra from the
+    /// row stream, keeping the pipeline byte-identical to the pre-policy
+    /// behaviour.
+    pub sub: Option<SubPolicy>,
     /// Seed for the alternating-flip hash (paper Listing 2 `seed=42`).
     pub flip_seed: u64,
 }
@@ -303,6 +550,7 @@ impl Default for AugConfig {
             translate: 2,
             cutout: 0,
             crop: None,
+            sub: None,
             flip_seed: 42,
         }
     }
@@ -316,6 +564,7 @@ impl AugConfig {
             translate: 0,
             cutout: 0,
             crop: None,
+            sub: None,
             flip_seed: 42,
         }
     }
@@ -357,6 +606,20 @@ pub fn apply_batch(
         let dst = out.image_mut(row);
         let flipped = flip_decision(cfg.flip, idx as u64, epoch, cfg.flip_seed, rng);
 
+        // Sub-policy coin (one draw, from the same row stream). With no
+        // sub-policy the stream is consumed exactly as before.
+        let (translate, extra_cut) = match cfg.sub {
+            None => (cfg.translate, 0usize),
+            Some(SubPolicy::WideTranslate) => {
+                let wide = rng.coin(0.5);
+                (if wide { cfg.translate * 2 } else { cfg.translate }, 0)
+            }
+            Some(SubPolicy::RandCutout { size }) => {
+                let cut = rng.coin(0.5);
+                (cfg.translate, if cut { size as usize } else { 0 })
+            }
+        };
+
         // Stage 1: flip (into scratch if any geometric stage follows).
         let geo_src: &[f32] = if flipped {
             flip_into(scratch, src, c, h, w);
@@ -373,8 +636,8 @@ pub fn apply_batch(
         } else if (oh, ow) != (h, w) {
             CropPolicy::Center { ratio_pct: 100 }
                 .apply_into(dst, geo_src, c, h, w, oh, rng);
-        } else if cfg.translate > 0 {
-            let t = cfg.translate as i64;
+        } else if translate > 0 {
+            let t = translate as i64;
             let dy = rng.int_in(-t, t);
             let dx = rng.int_in(-t, t);
             translate_reflect_into(dst, geo_src, c, h, w, dy, dx);
@@ -382,9 +645,12 @@ pub fn apply_batch(
             dst.copy_from_slice(geo_src);
         }
 
-        // Stage 3: cutout.
+        // Stage 3: cutout, plus the sub-policy's extra cut when drawn.
         if cfg.cutout > 0 {
             cutout_inplace(dst, c, oh, ow, cfg.cutout, rng);
+        }
+        if extra_cut > 0 {
+            cutout_inplace(dst, c, oh, ow, extra_cut, rng);
         }
     }
 }
@@ -758,6 +1024,96 @@ mod tests {
         apply_batch(&mut out_b, &ds, &[3, 2], 5, 6, &cfg, 999, &mut scratch);
         assert_eq!(out_a.image(0), out_b.image(1));
         assert_eq!(out_a.image(1), out_b.image(0));
+    }
+
+    #[test]
+    fn policy_spelling_round_trips() {
+        let policies = [
+            Policy::flip_only(FlipMode::Alternating),
+            Policy {
+                flip: FlipMode::Random,
+                crop: Some(CropPolicy::HeavyRrc),
+                translate: Some(4),
+                cutout: Some(8),
+                sub: Some(SubPolicy::WideTranslate),
+            },
+            Policy {
+                flip: FlipMode::None,
+                crop: Some(CropPolicy::Center { ratio_pct: 87 }),
+                translate: None,
+                cutout: None,
+                sub: Some(SubPolicy::RandCutout { size: 6 }),
+            },
+        ];
+        for p in &policies {
+            assert_eq!(&Policy::parse(&p.name()).unwrap(), p, "{}", p.name());
+            assert_eq!(&Policy::from_json(&p.to_json()).unwrap(), p, "{}", p.name());
+        }
+        assert!(Policy::parse("bogus").is_err());
+        assert!(Policy::parse("random+crop=diagonal").is_err());
+        assert!(Policy::parse("random+lr=3").is_err());
+    }
+
+    #[test]
+    fn policy_json_rejects_unknown_keys() {
+        let j = crate::util::json::parse(r#"{"flip": "random", "crops": "heavy"}"#).unwrap();
+        assert!(Policy::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn policy_apply_validates_executability_not_parse() {
+        // center:0 parses and round-trips but must fail at apply() time —
+        // the lazy-cell-failure hook the study error-isolation tests use.
+        let p = Policy::parse("random+crop=center:0").unwrap();
+        assert_eq!(Policy::from_json(&p.to_json()).unwrap(), p);
+        let base = crate::config::TrainConfig::default();
+        assert!(p.apply(&base).is_err());
+        let ok = Policy::parse("random+crop=center:75").unwrap();
+        let cfg = ok.apply(&base).unwrap();
+        assert_eq!(cfg.crop, Some(CropPolicy::Center { ratio_pct: 75 }));
+        assert_eq!(cfg.seed, base.seed, "a policy must never touch the seed");
+    }
+
+    #[test]
+    fn sub_policy_none_is_byte_identical_to_pre_policy_pipeline() {
+        // AugConfig { sub: None } must consume the row stream exactly as
+        // before the sub-policy field existed.
+        let mut rng = Rng::new(0xAB);
+        let data: Vec<f32> = (0..4 * 3 * 8 * 8).map(|_| rng.uniform()).collect();
+        let ds = Tensor::from_vec(&[4, 3, 8, 8], data).unwrap();
+        let cfg = AugConfig {
+            flip: FlipMode::Random,
+            translate: 2,
+            cutout: 4,
+            ..AugConfig::default()
+        };
+        assert!(cfg.sub.is_none());
+        let mut scratch = Vec::new();
+        let mut a = Tensor::zeros(&[4, 3, 8, 8]);
+        let mut b = Tensor::zeros(&[4, 3, 8, 8]);
+        apply_batch(&mut a, &ds, &[0, 1, 2, 3], 1, 0, &cfg, 9, &mut scratch);
+        apply_batch(&mut b, &ds, &[0, 1, 2, 3], 1, 0, &cfg, 9, &mut scratch);
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn sub_policy_rand_cutout_cuts_some_images() {
+        let ds = Tensor::from_vec(&[8, 1, 8, 8], vec![1.0; 8 * 64]).unwrap();
+        let cfg = AugConfig {
+            flip: FlipMode::None,
+            translate: 0,
+            cutout: 0,
+            sub: Some(SubPolicy::RandCutout { size: 4 }),
+            ..AugConfig::default()
+        };
+        let mut scratch = Vec::new();
+        let mut out = Tensor::zeros(&[8, 1, 8, 8]);
+        apply_batch(&mut out, &ds, &[0, 1, 2, 3, 4, 5, 6, 7], 0, 0, &cfg, 3, &mut scratch);
+        let cut_rows = (0..8)
+            .filter(|&i| out.image(i).iter().any(|&v| v == 0.0))
+            .count();
+        assert!(cut_rows > 0, "p=0.5 coin never cut any of 8 images");
+        assert!(cut_rows < 8, "p=0.5 coin cut all 8 images");
     }
 
     #[test]

@@ -17,6 +17,8 @@
 //! * `save` / `load` — write / register versioned checkpoint artifacts
 //!   (content-hashed payload + schema-validated manifest).
 //! * `fleet --runs N [--parallel P]` — an n-run statistical experiment.
+//! * `study --policies a,b [--runs N]` — an augmentation-policy × seed
+//!   grid with per-cell CIs and seed-paired comparisons (DESIGN.md §11).
 //! * `bench [--fleet]` — the §3.7 benchmark harness (BENCHMARKS.md).
 //! * `info [--variant NAME]` — inspect the AOT manifest / variant table.
 //! * `serve [--addr host:port] [--slots N]` — the long-lived job daemon:
@@ -34,10 +36,11 @@ use anyhow::{bail, Context, Result};
 
 use airbench::api::{
     BenchJob, Engine, EngineConfig, EvalJob, Event, FleetBenchJob, FleetJob, InfoJob, JobResult,
-    JobSpec, LoadJob, PredictJob, SaveJob, TrainJob,
+    JobSpec, LoadJob, PredictJob, SaveJob, StudyJob, TrainJob,
 };
 use airbench::cli::{find_command, Args, Command};
 use airbench::config::{process_env, ConfigLayers, TrainConfig, TtaLevel};
+use airbench::data::augment::Policy;
 use airbench::experiments::{pct, DataKind, Scale};
 use airbench::runtime::EvalPrecision;
 use airbench::util::json::{parse as parse_json, Json};
@@ -77,6 +80,11 @@ static COMMANDS: &[Command] = &[
         name: "fleet",
         summary: "n-run statistical experiment (--runs N --parallel P; paper §5)",
         run: cmd_fleet,
+    },
+    Command {
+        name: "study",
+        summary: "augmentation-policy x seed grid with paired comparisons (--policies a,b --runs N)",
+        run: cmd_study,
     },
     Command {
         name: "bench",
@@ -125,6 +133,12 @@ fleet:  --runs N --log fleet.json --parallel N (alias --fleet-parallel,\n\
         config key `fleet_parallel`): concurrent runs budgeted so\n\
         runs x kernel threads <= cores; 0 = auto. Per-run results are\n\
         bit-identical at every value (DESIGN.md §8)\n\
+study:  --policies a,b,... (comma-separated compact spellings: flip mode\n\
+        [none|random|alternating|alternating_md5] then key=value\n\
+        segments crop=heavy|light|center:N, translate=N, cutout=N,\n\
+        sub=wide|rcut:N; e.g. 'random+crop=light+sub=rcut:6'),\n\
+        --runs N --log study.json --parallel N. Every cell runs the SAME\n\
+        forked seed table, so comparisons are seed-paired (DESIGN.md §11)\n\
 bench:  --runs --steps --warmup --epochs --tag --out --train-n --test-n\n\
         (see BENCHMARKS.md); bench --fleet adds --fleet-runs N\n\
         --parallel-levels 1,2,4\n\
@@ -311,6 +325,29 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let spec = JobSpec::Fleet(FleetJob {
         config: cfg,
         data: data_kind(args)?,
+        runs: Some(runs),
+        parallel: None, // the resolver already folded --parallel into the config
+        train_n: None,
+        test_n: None,
+        warmup: true,
+        log: args.options.get("log").map(PathBuf::from),
+    });
+    run_and_render(args, spec)
+}
+
+fn cmd_study(args: &Args) -> Result<()> {
+    let cfg = resolved_config(args)?;
+    let runs = args.opt_usize("runs", Scale::from_env().runs)?;
+    let spelled = args.opt("policies", "random,alternating");
+    let policies = spelled
+        .split(',')
+        .map(|s| Policy::parse(s.trim()))
+        .collect::<Result<Vec<_>>>()
+        .context("parsing --policies")?;
+    let spec = JobSpec::Study(StudyJob {
+        config: cfg,
+        data: data_kind(args)?,
+        policies,
         runs: Some(runs),
         parallel: None, // the resolver already folded --parallel into the config
         train_n: None,
@@ -522,6 +559,35 @@ fn render_result(result: &JobResult) {
                 pct(s.max),
                 result.mean_time_seconds(),
             );
+        }
+        JobResult::Study { result, .. } => {
+            println!("study: {} cells x {} seed-paired runs", result.cells.len(), result.runs);
+            for cell in &result.cells {
+                let s = cell.fleet.summary();
+                println!(
+                    "  {:<32} mean={} std={:.3}% ci95=±{:.3}% min={} max={}",
+                    cell.policy.name(),
+                    pct(s.mean),
+                    100.0 * s.std,
+                    100.0 * s.ci95(),
+                    pct(s.min),
+                    pct(s.max),
+                );
+            }
+            for i in 0..result.cells.len() {
+                for k in (i + 1)..result.cells.len() {
+                    if let Ok(c) = result.comparison(i, k) {
+                        println!(
+                            "  {} vs {}: mean_diff={:+.3}% ci95=±{:.3}% win_frac={:.2}",
+                            result.cells[i].policy.name(),
+                            result.cells[k].policy.name(),
+                            100.0 * c.mean_diff,
+                            100.0 * c.ci95_diff,
+                            c.win_frac,
+                        );
+                    }
+                }
+            }
         }
         JobResult::Bench { report, path } => {
             let row = |name: &str, d: &airbench::bench::Dist, unit: &str| {

@@ -58,6 +58,32 @@ impl Welford {
         self.m2 += delta * (x - self.mean);
     }
 
+    /// Merge another accumulator into this one (Chan et al.'s parallel
+    /// variance combination). `a.merge(&b)` summarizes the concatenation of
+    /// both streams: `n`/`min`/`max` combine exactly; `mean`/`m2` combine
+    /// up to floating-point rounding (the merge is associative and
+    /// commutative only to ~1e-12 — the property tests pin the tolerance).
+    /// Distributed studies (ROADMAP) reduce per-worker accumulators
+    /// through this.
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = *other;
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let delta = other.mean - self.mean;
+        let n = n1 + n2;
+        self.mean += delta * n2 / n;
+        self.m2 += other.m2 + delta * delta * n1 * n2 / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
     /// Snapshot as a [`Summary`] (all-zeros when nothing was pushed, like
     /// `Summary::of(&[])`).
     pub fn summary(&self) -> Summary {
@@ -208,6 +234,124 @@ mod tests {
         // Empty accumulator mirrors Summary::of(&[]).
         let e = Welford::new().summary();
         assert_eq!((e.n, e.mean, e.std, e.min, e.max), (0, 0.0, 0.0, 0.0, 0.0));
+    }
+
+    fn accumulate(xs: &[f64]) -> Welford {
+        let mut w = Welford::new();
+        for &x in xs {
+            w.push(x);
+        }
+        w
+    }
+
+    fn summaries_close(a: &Summary, b: &Summary, tol: f64) -> bool {
+        // n/min/max combine exactly under merge; mean/std only to FP
+        // rounding.
+        a.n == b.n
+            && a.min == b.min
+            && a.max == b.max
+            && (a.mean - b.mean).abs() <= tol * (1.0 + a.mean.abs())
+            && (a.std - b.std).abs() <= tol * (1.0 + a.std)
+    }
+
+    fn random_stream(r: &mut crate::rng::Rng, max_len: usize) -> Vec<f64> {
+        let len = r.below(max_len + 1);
+        (0..len)
+            .map(|_| (r.uniform() as f64 - 0.5) * 200.0)
+            .collect()
+    }
+
+    #[test]
+    fn prop_welford_merge_matches_two_pass() {
+        // merge(A, B) must agree with the naive two-pass mean/variance of
+        // the concatenated stream.
+        crate::util::proptest::check(
+            "welford_merge_two_pass",
+            crate::util::proptest::cases_from_env(100),
+            |r| (random_stream(r, 40), random_stream(r, 40)),
+            |(xs, ys)| {
+                let mut merged = accumulate(xs);
+                merged.merge(&accumulate(ys));
+                let concat: Vec<f64> = xs.iter().chain(ys).copied().collect();
+                summaries_close(&merged.summary(), &Summary::of(&concat), 1e-10)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_welford_merge_is_commutative() {
+        crate::util::proptest::check(
+            "welford_merge_commutative",
+            crate::util::proptest::cases_from_env(100),
+            |r| (random_stream(r, 40), random_stream(r, 40)),
+            |(xs, ys)| {
+                let mut ab = accumulate(xs);
+                ab.merge(&accumulate(ys));
+                let mut ba = accumulate(ys);
+                ba.merge(&accumulate(xs));
+                summaries_close(&ab.summary(), &ba.summary(), 1e-12)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_welford_merge_is_associative() {
+        crate::util::proptest::check(
+            "welford_merge_associative",
+            crate::util::proptest::cases_from_env(100),
+            |r| {
+                (
+                    random_stream(r, 30),
+                    random_stream(r, 30),
+                    random_stream(r, 30),
+                )
+            },
+            |(xs, ys, zs)| {
+                // (A + B) + C
+                let mut left = accumulate(xs);
+                left.merge(&accumulate(ys));
+                left.merge(&accumulate(zs));
+                // A + (B + C)
+                let mut bc = accumulate(ys);
+                bc.merge(&accumulate(zs));
+                let mut right = accumulate(xs);
+                right.merge(&bc);
+                summaries_close(&left.summary(), &right.summary(), 1e-12)
+            },
+        );
+    }
+
+    #[test]
+    fn welford_merge_edge_cases() {
+        // empty + empty
+        let mut w = Welford::new();
+        w.merge(&Welford::new());
+        assert_eq!(w.n(), 0);
+        let s = w.summary();
+        assert_eq!((s.mean, s.std, s.min, s.max), (0.0, 0.0, 0.0, 0.0));
+
+        // empty + X and X + empty both equal X, bit-exactly.
+        let x = accumulate(&[1.5, -2.0, 7.25]);
+        let mut le = Welford::new();
+        le.merge(&x);
+        let mut re = x;
+        re.merge(&Welford::new());
+        for w in [&le, &re] {
+            let s = w.summary();
+            let want = Summary::of(&[1.5, -2.0, 7.25]);
+            assert_eq!(s.n, want.n);
+            assert_eq!(s.mean.to_bits(), want.mean.to_bits());
+            assert_eq!(s.std.to_bits(), want.std.to_bits());
+        }
+
+        // singleton + singleton matches a two-element sample.
+        let mut a = accumulate(&[3.0]);
+        a.merge(&accumulate(&[5.0]));
+        let s = a.summary();
+        assert_eq!(s.n, 2);
+        assert!((s.mean - 4.0).abs() < 1e-15);
+        assert!((s.std - std::f64::consts::SQRT_2).abs() < 1e-12);
+        assert_eq!((s.min, s.max), (3.0, 5.0));
     }
 
     #[test]

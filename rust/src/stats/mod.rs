@@ -3,14 +3,18 @@
 //! * [`basic`] — means, CIs, histograms (all tables; Fig 5/6);
 //! * [`powerlaw`] — epochs-to-error fits + effective speedup (§5.2, Table 2);
 //! * [`calibration`] — CACE (§5.3, Table 4);
-//! * [`variance`] — distribution-wise variance decomposition (§5.3, Table 4).
+//! * [`variance`] — distribution-wise variance decomposition (§5.3, Table 4);
+//! * [`study`] — policy × seed grid summaries and seed-paired comparisons
+//!   (`airbench.study/1`, DESIGN.md §11).
 
 pub mod basic;
 pub mod calibration;
 pub mod powerlaw;
+pub mod study;
 pub mod variance;
 
 pub use basic::{histogram, welch_t, Summary};
 pub use calibration::cace;
 pub use powerlaw::{effective_speedup, fit_power_law, PowerLaw};
+pub use study::{paired, PairedComparison, StudyCell, StudyResult};
 pub use variance::{decompose_variance, VarianceDecomposition};

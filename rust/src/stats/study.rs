@@ -1,0 +1,422 @@
+//! Study statistics: per-cell summaries and seed-paired comparisons for
+//! augmentation-policy × seed grids (DESIGN.md §11).
+//!
+//! A study runs the same per-run seed table (`fleet_seeds`) under every
+//! policy cell, so run `k` of cell A and run `k` of cell B trained with the
+//! *same* seed — cells are paired samples, and the right comparison is the
+//! paired one: statistics of the per-seed differences `a_k - b_k`, not of
+//! two independent means. That is how the paper can claim "alternating ≥
+//! random in every case where flipping helps" (Table 2/6): under common
+//! seeds the win fraction is a sharp, computable predicate instead of a
+//! noisy two-sample test (Picard's *seed(3407)* regime, PAPERS.md).
+//!
+//! The wire form is the `airbench.study/1` document ([`SCHEMA`]); the
+//! [`validate`] function is the strict schema check — exact key sets
+//! (unknown keys rejected) and grid arity (`cells × runs` accuracies,
+//! `C(P,2)` comparisons in canonical order) — run by the engine on every
+//! study result and by `bench::validate_any` on committed report files.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::coordinator::fleet::FleetResult;
+use crate::data::augment::Policy;
+use crate::stats::basic::Summary;
+use crate::util::json::Json;
+
+/// Schema tag of the study report document.
+pub const SCHEMA: &str = "airbench.study/1";
+
+/// Seed-paired comparison of two study cells over a common seed table.
+#[derive(Clone, Copy, Debug)]
+pub struct PairedComparison {
+    /// Number of seed pairs.
+    pub n: usize,
+    /// Mean of the per-seed differences `a_k - b_k`.
+    pub mean_diff: f64,
+    /// Sample (n-1) standard deviation of the differences.
+    pub std_diff: f64,
+    /// Half-width of the normal-approximation 95% CI on `mean_diff`.
+    pub ci95_diff: f64,
+    /// Fraction of seeds where `a_k >= b_k`.
+    pub win_frac: f64,
+}
+
+impl PairedComparison {
+    /// The paper's Table-style dominance predicate: A was at least as good
+    /// as B under *every* common seed.
+    pub fn a_never_loses(&self) -> bool {
+        self.win_frac >= 1.0
+    }
+}
+
+/// Compute the paired statistics of two equal-length, seed-aligned
+/// accuracy vectors (`a[k]` and `b[k]` trained with the same seed).
+pub fn paired(a: &[f64], b: &[f64]) -> Result<PairedComparison> {
+    if a.is_empty() {
+        bail!("paired comparison needs at least one seed pair");
+    }
+    if a.len() != b.len() {
+        bail!(
+            "paired comparison needs seed-aligned samples (got {} vs {})",
+            a.len(),
+            b.len()
+        );
+    }
+    let diffs: Vec<f64> = a.iter().zip(b).map(|(x, y)| x - y).collect();
+    let s = Summary::of(&diffs);
+    let wins = a.iter().zip(b).filter(|(x, y)| x >= y).count();
+    Ok(PairedComparison {
+        n: a.len(),
+        mean_diff: s.mean,
+        std_diff: s.std,
+        ci95_diff: s.ci95(),
+        win_frac: wins as f64 / a.len() as f64,
+    })
+}
+
+/// One grid cell: a policy and the fleet it ran.
+#[derive(Clone, Debug)]
+pub struct StudyCell {
+    /// The augmentation policy of the cell.
+    pub policy: Policy,
+    /// The cell's fleet result (per-run accuracies in seed order,
+    /// bit-identical to a standalone fleet of the same config).
+    pub fleet: FleetResult,
+}
+
+/// The result of one study: every cell of the policy × seed grid.
+#[derive(Clone, Debug)]
+pub struct StudyResult {
+    /// Runs per cell (the seed-table length).
+    pub runs: usize,
+    /// The common per-run seed table every cell trained under.
+    pub seeds: Vec<u64>,
+    /// One entry per policy, in grid order.
+    pub cells: Vec<StudyCell>,
+}
+
+impl StudyResult {
+    /// Seed-paired comparison of cell `a` against cell `b`.
+    pub fn comparison(&self, a: usize, b: usize) -> Result<PairedComparison> {
+        let get = |i: usize| -> Result<&StudyCell> {
+            self.cells
+                .get(i)
+                .ok_or_else(|| anyhow::anyhow!("no study cell {i} (have {})", self.cells.len()))
+        };
+        paired(&get(a)?.fleet.accuracies, &get(b)?.fleet.accuracies)
+    }
+
+    /// The `airbench.study/1` report document: base config echo, the
+    /// common seed table (seeds as strings — JSON numbers are f64 and
+    /// would corrupt u64 seeds), per-cell Welford summaries, and all
+    /// `C(P,2)` pairwise comparisons in canonical `(i, j), i < j` order.
+    pub fn to_json(&self, cfg: &TrainConfig, backend: &str) -> Json {
+        let cells: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|cell| {
+                let s = cell.fleet.summary();
+                Json::obj(vec![
+                    ("policy", cell.policy.to_json()),
+                    ("name", Json::Str(cell.policy.name())),
+                    ("n", Json::num(s.n as f64)),
+                    ("mean", Json::num(s.mean)),
+                    ("std", Json::num(s.std)),
+                    ("ci95", Json::num(s.ci95())),
+                    ("min", Json::num(s.min)),
+                    ("max", Json::num(s.max)),
+                    (
+                        "accs",
+                        Json::Arr(cell.fleet.accuracies.iter().map(|&a| Json::num(a)).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        let mut comparisons = Vec::new();
+        for i in 0..self.cells.len() {
+            for j in i + 1..self.cells.len() {
+                // Both cells completed, so the pairing cannot fail.
+                let c = self
+                    .comparison(i, j)
+                    .expect("completed cells have aligned accuracy vectors");
+                comparisons.push(Json::obj(vec![
+                    ("a", Json::num(i as f64)),
+                    ("b", Json::num(j as f64)),
+                    ("a_name", Json::Str(self.cells[i].policy.name())),
+                    ("b_name", Json::Str(self.cells[j].policy.name())),
+                    ("n", Json::num(c.n as f64)),
+                    ("mean_diff", Json::num(c.mean_diff)),
+                    ("std_diff", Json::num(c.std_diff)),
+                    ("ci95_diff", Json::num(c.ci95_diff)),
+                    ("win_frac", Json::num(c.win_frac)),
+                ]));
+            }
+        }
+        Json::obj(vec![
+            ("schema", Json::str(SCHEMA)),
+            ("config", cfg.to_json()),
+            ("backend", Json::str(backend)),
+            ("runs", Json::num(self.runs as f64)),
+            (
+                "seeds",
+                Json::Arr(self.seeds.iter().map(|s| Json::str(&s.to_string())).collect()),
+            ),
+            ("cells", Json::Arr(cells)),
+            ("comparisons", Json::Arr(comparisons)),
+        ])
+    }
+}
+
+/// Exact-key-set check: every present key must be declared, every required
+/// key must be present.
+fn exact_keys(j: &Json, what: &str, required: &[&str], optional: &[&str]) -> Result<()> {
+    let obj = j.as_obj().with_context(|| format!("{what} must be an object"))?;
+    for k in obj.keys() {
+        if !required.contains(&k.as_str()) && !optional.contains(&k.as_str()) {
+            bail!("{what}: unknown key '{k}'");
+        }
+    }
+    for r in required {
+        if !obj.contains_key(*r) {
+            bail!("{what}: missing key '{r}'");
+        }
+    }
+    Ok(())
+}
+
+fn finite(j: &Json, what: &str, key: &str) -> Result<f64> {
+    let x = j.get(key)?.as_f64()?;
+    if !x.is_finite() {
+        bail!("{what}: '{key}' = {x} is not finite");
+    }
+    Ok(x)
+}
+
+fn finite_unit(j: &Json, what: &str, key: &str) -> Result<f64> {
+    let x = finite(j, what, key)?;
+    if !(0.0..=1.0).contains(&x) {
+        bail!("{what}: '{key}' = {x} is outside [0, 1]");
+    }
+    Ok(x)
+}
+
+/// Strict `airbench.study/1` validator: schema tag, exact key sets at
+/// every level (unknown keys rejected), and grid arity — `seeds` and every
+/// cell's `accs` are `runs` long, and `comparisons` is exactly the
+/// `C(cells, 2)` enumeration in `(i, j), i < j` order with names matching
+/// the cells they index.
+pub fn validate(j: &Json) -> Result<()> {
+    exact_keys(
+        j,
+        "study report",
+        &["schema", "config", "backend", "runs", "seeds", "cells", "comparisons"],
+        &["log"],
+    )?;
+    let schema = j.get("schema")?.as_str()?;
+    if schema != SCHEMA {
+        bail!("study report: schema '{schema}' != '{SCHEMA}'");
+    }
+    j.get("config")?.get("variant")?.as_str()?;
+    j.get("backend")?.as_str()?;
+    let runs = j.get("runs")?.as_usize()?;
+    if runs == 0 {
+        bail!("study report: 'runs' must be >= 1");
+    }
+    let seeds = j.get("seeds")?.as_arr()?;
+    if seeds.len() != runs {
+        bail!("study report: {} seeds for runs={runs}", seeds.len());
+    }
+    for s in seeds {
+        let s = s.as_str()?;
+        if s.parse::<u64>().is_err() {
+            bail!("study report: seed '{s}' is not a u64 string");
+        }
+    }
+    let cells = j.get("cells")?.as_arr()?;
+    if cells.is_empty() {
+        bail!("study report: 'cells' must be non-empty");
+    }
+    let mut names = Vec::with_capacity(cells.len());
+    for (i, cell) in cells.iter().enumerate() {
+        let what = format!("study cell {i}");
+        exact_keys(
+            cell,
+            &what,
+            &["policy", "name", "n", "mean", "std", "ci95", "min", "max", "accs"],
+            &[],
+        )?;
+        let policy = Policy::from_json(cell.get("policy")?)
+            .with_context(|| format!("{what}: bad policy"))?;
+        let name = cell.get("name")?.as_str()?;
+        if name != policy.name() {
+            bail!("{what}: name '{name}' != policy spelling '{}'", policy.name());
+        }
+        if cell.get("n")?.as_usize()? != runs {
+            bail!("{what}: 'n' != runs={runs}");
+        }
+        for key in ["mean", "std", "ci95", "min", "max"] {
+            finite(cell, &what, key)?;
+        }
+        let accs = cell.get("accs")?.as_arr()?;
+        if accs.len() != runs {
+            bail!("{what}: {} accs for runs={runs}", accs.len());
+        }
+        for (k, a) in accs.iter().enumerate() {
+            let a = a.as_f64()?;
+            if !a.is_finite() || !(0.0..=1.0).contains(&a) {
+                bail!("{what}: accs[{k}] = {a} is not an accuracy in [0, 1]");
+            }
+        }
+        names.push(name.to_string());
+    }
+    let comparisons = j.get("comparisons")?.as_arr()?;
+    let expected = cells.len() * (cells.len() - 1) / 2;
+    if comparisons.len() != expected {
+        bail!(
+            "study report: {} comparisons for {} cells (want C({}, 2) = {expected})",
+            comparisons.len(),
+            cells.len(),
+            cells.len()
+        );
+    }
+    let mut it = comparisons.iter();
+    for i in 0..cells.len() {
+        for jx in i + 1..cells.len() {
+            let c = it.next().expect("length checked above");
+            let what = format!("study comparison ({i}, {jx})");
+            exact_keys(
+                c,
+                &what,
+                &["a", "b", "a_name", "b_name", "n", "mean_diff", "std_diff", "ci95_diff", "win_frac"],
+                &[],
+            )?;
+            if c.get("a")?.as_usize()? != i || c.get("b")?.as_usize()? != jx {
+                bail!("{what}: out of canonical (i, j) i<j order");
+            }
+            if c.get("a_name")?.as_str()? != names[i] || c.get("b_name")?.as_str()? != names[jx] {
+                bail!("{what}: names do not match the cells they index");
+            }
+            if c.get("n")?.as_usize()? != runs {
+                bail!("{what}: 'n' != runs={runs}");
+            }
+            for key in ["mean_diff", "std_diff", "ci95_diff"] {
+                finite(c, &what, key)?;
+            }
+            finite_unit(c, &what, "win_frac")?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::augment::FlipMode;
+
+    fn fake_cell(flip: FlipMode, accs: &[f64]) -> StudyCell {
+        // The report reads only the accuracy vectors; per-run records can
+        // stay empty in a synthetic cell.
+        StudyCell {
+            policy: Policy::flip_only(flip),
+            fleet: FleetResult {
+                runs: Vec::new(),
+                accuracies: accs.to_vec(),
+                accuracies_no_tta: accs.to_vec(),
+            },
+        }
+    }
+
+    fn fake_study() -> StudyResult {
+        StudyResult {
+            runs: 4,
+            seeds: vec![11, 22, 33, 44],
+            cells: vec![
+                fake_cell(FlipMode::Alternating, &[0.75, 0.5, 0.875, 0.625]),
+                fake_cell(FlipMode::Random, &[0.5, 0.5, 0.75, 0.75]),
+            ],
+        }
+    }
+
+    #[test]
+    fn paired_known_values() {
+        let c = paired(&[0.75, 0.5, 0.875, 0.625], &[0.5, 0.5, 0.75, 0.75]).unwrap();
+        assert_eq!(c.n, 4);
+        // diffs: [0.25, 0, 0.125, -0.125] — dyadic, so mean is exact.
+        assert_eq!(c.mean_diff, 0.0625);
+        assert_eq!(c.win_frac, 0.75);
+        assert!((c.std_diff - (0.078125f64 / 3.0).sqrt()).abs() < 1e-15);
+        assert!((c.ci95_diff - 1.96 * c.std_diff / 2.0).abs() < 1e-15);
+        assert!(!c.a_never_loses());
+        assert!(paired(&[0.5, 0.5], &[0.25, 0.5]).unwrap().a_never_loses());
+    }
+
+    #[test]
+    fn paired_rejects_misaligned_or_empty() {
+        assert!(paired(&[], &[]).is_err());
+        assert!(paired(&[0.5], &[0.5, 0.6]).is_err());
+    }
+
+    #[test]
+    fn report_round_trips_through_its_own_validator() {
+        let study = fake_study();
+        let cfg = TrainConfig::default();
+        let j = study.to_json(&cfg, "native");
+        validate(&j).unwrap();
+        // With the optional 'log' key (as the engine envelope adds it).
+        let mut with_log = j.clone();
+        if let Json::Obj(m) = &mut with_log {
+            m.insert("log".to_string(), Json::Null);
+        }
+        validate(&with_log).unwrap();
+    }
+
+    #[test]
+    fn validator_rejects_unknown_keys_and_wrong_arity() {
+        let study = fake_study();
+        let cfg = TrainConfig::default();
+        let good = study.to_json(&cfg, "native");
+
+        // Unknown top-level key.
+        let mut j = good.clone();
+        if let Json::Obj(m) = &mut j {
+            m.insert("extra".to_string(), Json::num(1.0));
+        }
+        assert!(validate(&j).is_err());
+
+        // Wrong-arity grid: a cell with a truncated accuracy vector.
+        let mut j = good.clone();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Arr(cells)) = m.get_mut("cells") {
+                if let Json::Obj(cell) = &mut cells[0] {
+                    cell.insert("accs".to_string(), Json::Arr(vec![Json::num(0.5)]));
+                }
+            }
+        }
+        assert!(validate(&j).is_err());
+
+        // Missing comparisons for the number of cells.
+        let mut j = good.clone();
+        if let Json::Obj(m) = &mut j {
+            m.insert("comparisons".to_string(), Json::Arr(vec![]));
+        }
+        assert!(validate(&j).is_err());
+
+        // Wrong schema tag.
+        let mut j = good;
+        if let Json::Obj(m) = &mut j {
+            m.insert("schema".to_string(), Json::str("airbench.study/9"));
+        }
+        assert!(validate(&j).is_err());
+    }
+
+    #[test]
+    fn comparison_indexes_cells() {
+        let study = fake_study();
+        let c = study.comparison(0, 1).unwrap();
+        assert_eq!(c.mean_diff, 0.0625);
+        let r = study.comparison(1, 0).unwrap();
+        assert_eq!(r.mean_diff, -0.0625);
+        assert!(study.comparison(0, 2).is_err());
+    }
+}

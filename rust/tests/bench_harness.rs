@@ -159,6 +159,67 @@ fn fleet_log_carries_full_field_set() {
 }
 
 #[test]
+fn validate_any_dispatches_study_reports() {
+    // The dispatching validator must route `airbench.study/1` documents
+    // to the study validator: accept a well-formed report, reject an
+    // unknown top-level key, reject a wrong-arity grid (accs shorter
+    // than the declared runs), and the bench/fleet validators must NOT
+    // accept a study document.
+    use airbench::config::TrainConfig;
+    use airbench::coordinator::FleetResult;
+    use airbench::data::augment::Policy;
+    use airbench::stats::{StudyCell, StudyResult};
+    use airbench::util::json::Json;
+
+    let cell = |policy: &str, accuracies: Vec<f64>| StudyCell {
+        policy: Policy::parse(policy).unwrap(),
+        fleet: FleetResult {
+            runs: Vec::new(),
+            accuracies: accuracies.clone(),
+            accuracies_no_tta: accuracies,
+        },
+    };
+    let good = StudyResult {
+        runs: 2,
+        seeds: vec![1, 2],
+        cells: vec![cell("random", vec![0.5, 0.75]), cell("alternating", vec![0.5, 0.5])],
+    };
+    let cfg = TrainConfig::default();
+    let report = good.to_json(&cfg, "native");
+    validate_any(&report).expect("dispatching validator accepts a study report");
+    assert!(validate(&report).is_err(), "bench validator must reject a study doc");
+    assert!(validate_fleet(&report).is_err(), "fleet validator must reject a study doc");
+
+    // Unknown top-level key.
+    let mut with_extra = report.clone();
+    if let Json::Obj(m) = &mut with_extra {
+        m.insert("surprise".to_string(), Json::Bool(true));
+    }
+    assert!(
+        validate_any(&with_extra).is_err(),
+        "an unknown top-level key must be rejected"
+    );
+
+    // Wrong-arity grid: a cell with fewer accuracies than declared runs.
+    let short = StudyResult {
+        runs: 2,
+        seeds: vec![1, 2],
+        cells: vec![cell("random", vec![0.5]), cell("alternating", vec![0.5, 0.5])],
+    };
+    assert!(
+        validate_any(&short.to_json(&cfg, "native")).is_err(),
+        "a cell with accs.len() != runs must be rejected"
+    );
+
+    // Unknown schema tags still fall through to a clear error.
+    let mut wrong_tag = report;
+    if let Json::Obj(m) = &mut wrong_tag {
+        m.insert("schema".to_string(), Json::Str("airbench.study/99".to_string()));
+    }
+    assert!(validate_any(&wrong_tag).is_err());
+}
+
+#[test]
 fn committed_baseline_is_schema_valid() {
     // BENCH_*.json files live at the repository root (one level above the
     // crate). Every committed baseline must parse and validate against its

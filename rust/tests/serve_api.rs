@@ -13,15 +13,23 @@
 //! Plus the PR 6 artifact contract: a `load` warms a model in the engine
 //! registry, concurrent `predict` jobs against it are bit-identical to a
 //! direct eval, and a bad `load` is a typed error the session survives.
+//!
+//! Plus the PR 8 study contract: cancelling a study mid-grid yields
+//! exactly one terminal `"cancelled"` event even through cell-context
+//! error wrapping, and a cell whose policy is rejected at apply time
+//! fails the job with the cell index + policy name in the message while
+//! the session survives to run a clean follow-up study.
 
 use std::io::Cursor;
 use std::sync::{Arc, Mutex};
 
 use airbench::api::{
-    validate_result, Engine, EngineConfig, JobResult, JobSpec, LoadJob, PredictJob, TrainJob,
+    validate_result, Engine, EngineConfig, JobResult, JobSpec, LoadJob, PredictJob, StudyJob,
+    TrainJob,
 };
 use airbench::config::{TrainConfig, TtaLevel};
 use airbench::coordinator::{evaluate, run_fleet, train, warmup};
+use airbench::data::augment::Policy;
 use airbench::experiments::{make_data, DataKind};
 use airbench::runtime::native::builtin_variant;
 use airbench::runtime::{checkpoint, BackendKind, EngineSpec, EvalPrecision, InitConfig, ModelState};
@@ -264,6 +272,121 @@ fn serve_cancel_control_message_stops_a_job() {
         "cancelled",
         "cancelled jobs must terminate with the 'cancelled' error"
     );
+}
+
+#[test]
+fn serve_cancel_stops_a_study_mid_grid_with_one_terminal_cancelled_event() {
+    // A study whose first cell alone exceeds any test budget, then an
+    // immediate cancel: the fleet inside the cell notices the tripped
+    // poll, the study wraps it in cell context, and the engine must
+    // still classify the chained error as a cancellation — exactly one
+    // terminal event, message "cancelled".
+    let mut cfg = nano_config(0, 10_000.0);
+    cfg.eval_every_epoch = false;
+    let spec = JobSpec::Study(StudyJob {
+        config: cfg,
+        policies: vec![
+            Policy::parse("random").unwrap(),
+            Policy::parse("alternating").unwrap(),
+        ],
+        runs: Some(2),
+        train_n: Some(TRAIN_N),
+        test_n: Some(TEST_N),
+        warmup: false,
+        ..StudyJob::default()
+    })
+    .to_json()
+    .to_string();
+    let input = format!("{spec}\n{{\"job\": \"cancel\", \"id\": 1}}\n");
+
+    let engine = engine_with_slots(1);
+    let (stats, events) = run_serve(&engine, &input);
+    assert_eq!(stats.submitted, 1);
+    assert_eq!(stats.cancelled, 1);
+    let seq = events_for(&events, 1);
+    let terminals: Vec<&Json> = seq
+        .iter()
+        .filter(|e| matches!(event_type(e), "result" | "error"))
+        .collect();
+    assert_eq!(
+        terminals.len(),
+        1,
+        "a cancelled study must emit exactly one terminal event: {seq:?}"
+    );
+    assert_eq!(event_type(terminals[0]), "error", "{seq:?}");
+    assert_eq!(
+        terminals[0].get("message").unwrap().as_str().unwrap(),
+        "cancelled",
+        "cell-context wrapping must not hide the cancellation from the wire"
+    );
+}
+
+#[test]
+fn serve_study_cell_failure_names_the_cell_and_the_session_survives() {
+    // `random+crop=center:0` parses (and round-trips) but Policy::apply
+    // rejects it at cell start, so the grid fails at index 1 *after*
+    // cell 0's fleet completed. The error must carry the failing cell's
+    // index and policy name (lowest-index-error semantics), and the
+    // session must survive to run a clean follow-up study whose result
+    // is schema-valid — the earlier failure corrupts nothing.
+    let failing = JobSpec::Study(StudyJob {
+        config: nano_config(3, 1.0),
+        policies: vec![
+            Policy::parse("random").unwrap(),
+            Policy::parse("random+crop=center:0").unwrap(),
+        ],
+        runs: Some(1),
+        train_n: Some(TRAIN_N),
+        test_n: Some(TEST_N),
+        warmup: false,
+        ..StudyJob::default()
+    })
+    .to_json()
+    .to_string();
+    let clean = JobSpec::Study(StudyJob {
+        config: nano_config(3, 1.0),
+        policies: vec![Policy::parse("none").unwrap(), Policy::parse("random").unwrap()],
+        runs: Some(1),
+        train_n: Some(TRAIN_N),
+        test_n: Some(TEST_N),
+        warmup: false,
+        ..StudyJob::default()
+    })
+    .to_json()
+    .to_string();
+    let input = format!("{failing}\n{clean}\n");
+
+    let engine = engine_with_slots(1);
+    let (stats, events) = run_serve(&engine, &input);
+    assert_eq!(stats.submitted, 2);
+    assert_eq!(stats.rejected, 0);
+
+    let seq = events_for(&events, 1);
+    let last = assert_wellformed(&seq);
+    assert_eq!(event_type(last), "error", "the bad cell must fail the job: {last:?}");
+    let message = last.get("message").unwrap().as_str().unwrap();
+    assert!(
+        message.contains("study cell 1") && message.contains("random+crop=center:0"),
+        "error must name the failing cell index and policy, got: {message}"
+    );
+    assert!(
+        message.contains("center-crop ratio 0% not executable"),
+        "error must carry the root cause, got: {message}"
+    );
+
+    let seq = events_for(&events, 2);
+    let last = assert_wellformed(&seq);
+    assert_eq!(event_type(last), "result", "follow-up study failed: {last:?}");
+    let result = last.get("result").unwrap();
+    validate_result(result).expect("schema-valid study result on the wire");
+    assert_eq!(result.get("kind").unwrap().as_str().unwrap(), "study");
+    let data = result.get("data").unwrap();
+    assert_eq!(
+        data.get("schema").unwrap().as_str().unwrap(),
+        "airbench.study/1"
+    );
+    assert_eq!(data.get("cells").unwrap().as_arr().unwrap().len(), 2);
+    assert_eq!(data.get("comparisons").unwrap().as_arr().unwrap().len(), 1);
 }
 
 #[test]

@@ -1,0 +1,186 @@
+//! Study determinism + paired-stats golden suite (DESIGN.md §11).
+//!
+//! The tentpole contract: a study is *exactly* a grid of fleets. Every
+//! cell runs the same `fleet_seeds` table as a standalone fleet of the
+//! cell's derived config, so per-cell per-run accuracies must be
+//! bit-identical to those fleets — and, like fleets, invariant across
+//! `--fleet-parallel` levels. The paired-comparison numerics are pinned
+//! bit-exactly by the committed `tests/fixtures/study_paired_v1.json`.
+
+use std::path::Path;
+
+use airbench::config::{TrainConfig, TtaLevel};
+use airbench::coordinator::{run_fleet_parallel, run_study};
+use airbench::data::augment::Policy;
+use airbench::data::synthetic::{cifar_like, SynthConfig};
+use airbench::data::Dataset;
+use airbench::runtime::{BackendKind, EngineSpec};
+use airbench::stats::paired;
+use airbench::util::json::parse;
+
+const RUNS: usize = 2;
+
+fn study_config() -> TrainConfig {
+    TrainConfig {
+        variant: "nano".into(),
+        epochs: 2.0,
+        tta: TtaLevel::None,
+        whiten_samples: 32,
+        seed: 7,
+        ..TrainConfig::default()
+    }
+}
+
+fn tiny_data() -> (Dataset, Dataset) {
+    let cfg = SynthConfig::default();
+    (
+        cifar_like(&cfg.clone().with_n(64), 0xF1EE, 0),
+        cifar_like(&cfg.with_n(32), 0xF1EE, 1),
+    )
+}
+
+fn factory() -> airbench::runtime::BackendFactory {
+    EngineSpec::new(BackendKind::Native, "nano").factory().unwrap()
+}
+
+fn grid() -> Vec<Policy> {
+    vec![
+        Policy::parse("random").unwrap(),
+        Policy::parse("alternating+cutout=4").unwrap(),
+    ]
+}
+
+#[test]
+fn study_cells_are_bit_identical_to_standalone_fleets_at_every_parallel_level() {
+    let (train_ds, test_ds) = tiny_data();
+    let cfg = study_config();
+    let f = factory();
+    let policies = grid();
+
+    // The reference: each cell as a standalone fleet of the derived config.
+    let fleets: Vec<_> = policies
+        .iter()
+        .map(|p| {
+            let cell_cfg = p.apply(&cfg).unwrap();
+            run_fleet_parallel(&f, &train_ds, &test_ds, &cell_cfg, RUNS, 1, None).unwrap()
+        })
+        .collect();
+    // The grid is not degenerate: the two policies train differently.
+    // (Compared on the continuous per-epoch loss, not the coarse accuracy
+    // over 32 test examples, so the check cannot collide by chance.)
+    let losses = |f: &airbench::coordinator::FleetResult| -> Vec<u64> {
+        f.runs[0].epoch_log.iter().map(|l| l.train_loss.to_bits()).collect()
+    };
+    assert_ne!(
+        losses(&fleets[0]),
+        losses(&fleets[1]),
+        "policies must actually change training for the pairing to mean anything"
+    );
+
+    for parallel in [1usize, 2, 4] {
+        let study =
+            run_study(&f, &train_ds, &test_ds, &cfg, &policies, RUNS, parallel, None).unwrap();
+        assert_eq!(study.runs, RUNS);
+        assert_eq!(study.cells.len(), policies.len());
+        for (ci, cell) in study.cells.iter().enumerate() {
+            assert_eq!(cell.policy, policies[ci]);
+            for k in 0..RUNS {
+                assert_eq!(
+                    cell.fleet.accuracies[k].to_bits(),
+                    fleets[ci].accuracies[k].to_bits(),
+                    "cell {ci} run {k} differs from its standalone fleet at parallel={parallel}"
+                );
+                assert_eq!(
+                    cell.fleet.accuracies_no_tta[k].to_bits(),
+                    fleets[ci].accuracies_no_tta[k].to_bits(),
+                    "cell {ci} run {k} (no-TTA) differs at parallel={parallel}"
+                );
+            }
+        }
+        // The report is schema-valid under both the study validator and the
+        // any-report dispatcher.
+        let report = study.to_json(&cfg, "native");
+        airbench::stats::study::validate(&report).unwrap();
+        airbench::bench::validate_any(&report).unwrap();
+    }
+}
+
+fn fixture() -> airbench::util::json::Json {
+    let path =
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/study_paired_v1.json");
+    parse(&std::fs::read_to_string(&path).unwrap()).unwrap()
+}
+
+#[test]
+fn paired_comparison_matches_the_committed_golden_fixture_bit_exactly() {
+    let j = fixture();
+    let vec_of = |key: &str| -> Vec<f64> {
+        j.get(key)
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect()
+    };
+    let (a, b) = (vec_of("a"), vec_of("b"));
+    let c = paired(&a, &b).unwrap();
+    let expect = j.get("expect").unwrap();
+    assert_eq!(c.n, expect.get("n").unwrap().as_usize().unwrap());
+    for (key, got) in [
+        ("mean_diff", c.mean_diff),
+        ("std_diff", c.std_diff),
+        ("ci95_diff", c.ci95_diff),
+        ("win_frac", c.win_frac),
+    ] {
+        let want = expect.get(key).unwrap().as_f64().unwrap();
+        assert_eq!(
+            got.to_bits(),
+            want.to_bits(),
+            "'{key}': computed {got:.17e} != fixture {want:.17e}"
+        );
+    }
+}
+
+#[test]
+fn study_report_carries_the_fixture_numerics() {
+    // End-to-end: a synthetic StudyResult over the fixture vectors must
+    // emit exactly the fixture's comparison numbers in its report.
+    use airbench::coordinator::FleetResult;
+    use airbench::stats::{StudyCell, StudyResult};
+
+    let j = fixture();
+    let accs = |key: &str| -> Vec<f64> {
+        j.get(key)
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect()
+    };
+    let cell = |policy: &str, accuracies: Vec<f64>| StudyCell {
+        policy: Policy::parse(policy).unwrap(),
+        fleet: FleetResult {
+            runs: Vec::new(),
+            accuracies: accuracies.clone(),
+            accuracies_no_tta: accuracies,
+        },
+    };
+    let study = StudyResult {
+        runs: 4,
+        seeds: vec![1, 2, 3, 4],
+        cells: vec![cell("alternating", accs("a")), cell("random", accs("b"))],
+    };
+    let report = study.to_json(&study_config(), "native");
+    airbench::stats::study::validate(&report).unwrap();
+    let cmp = &report.get("comparisons").unwrap().as_arr().unwrap()[0];
+    let expect = j.get("expect").unwrap();
+    for key in ["mean_diff", "std_diff", "ci95_diff", "win_frac"] {
+        assert_eq!(
+            cmp.get(key).unwrap().as_f64().unwrap().to_bits(),
+            expect.get(key).unwrap().as_f64().unwrap().to_bits(),
+            "report '{key}' drifted from the golden fixture"
+        );
+    }
+}
