@@ -27,23 +27,23 @@
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::api::event::{validate_result, Event, JobId, JobResult};
 use crate::api::job::{
-    BenchJob, EvalJob, FleetBenchJob, FleetJob, InfoJob, JobSpec, LoadJob, PredictJob, SaveJob,
-    StudyJob, TrainJob,
+    BenchJob, EvalJob, FleetBenchJob, FleetJob, InfoJob, JobSpec, LoadJob, MetricsJob,
+    PredictJob, PredictOneJob, SaveJob, ServeBenchJob, StudyJob, TrainJob,
 };
 use crate::api::registry::{Registry, WarmModel};
 use crate::coordinator::observer::{Cancelled, Observer};
 use crate::coordinator::trainer::EpochLog;
 use crate::coordinator::{
-    evaluate_observed, fleet_budget, is_cancelled, run_fleet, run_fleet_parallel, run_study,
-    train_run, warmup,
+    evaluate_observed, fleet_budget, is_cancelled, is_overloaded, run_fleet, run_fleet_parallel,
+    run_study, train_run, warmup,
 };
 use crate::data::Dataset;
 use crate::experiments::{make_data, DataKind, Scale};
@@ -53,6 +53,8 @@ use crate::runtime::{
     Backend, BackendFactory, BackendKind, EngineSpec, EvalPrecision, Manifest, ModelState,
     NativeShared, PjrtStatus, ThreadBudget,
 };
+use crate::serve::batcher::{Batcher, BatcherConfig};
+use crate::serve::metrics::ServeMetrics;
 use crate::util::json::Json;
 
 /// Engine construction knobs.
@@ -70,6 +72,11 @@ pub struct EngineConfig {
     /// per job). Fleet jobs plan their *internal* parallelism against the
     /// full machine, so fleet-heavy serving should keep `job_slots = 1`.
     pub job_slots: usize,
+    /// Micro-batching knobs for `predict_one` serving (DESIGN.md §12):
+    /// flush size / deadline of the per-model [`Batcher`] and the bound of
+    /// its admission queue. `kernel_threads` is overridden by the engine's
+    /// own [`ThreadBudget`] share.
+    pub batcher: BatcherConfig,
 }
 
 impl Default for EngineConfig {
@@ -78,6 +85,7 @@ impl Default for EngineConfig {
             scale: Scale::from_env(),
             artifacts_dir: Manifest::default_dir(),
             job_slots: 1,
+            batcher: BatcherConfig::default(),
         }
     }
 }
@@ -161,6 +169,13 @@ struct Inner {
     data: Mutex<BTreeMap<String, (Dataset, Dataset)>>,
     shared: Mutex<BTreeMap<String, Arc<NativeShared>>>,
     registry: Registry,
+    /// Per-warm-model request batchers, created on the first `predict_one`
+    /// that hits the model (keyed by `id@content_hash`, so a model
+    /// re-loaded under the same id gets a fresh batcher).
+    batchers: Mutex<BTreeMap<String, Arc<Batcher>>>,
+    /// Serving counters and latency histograms, shared by every batcher
+    /// (the `metrics` job's snapshot source).
+    metrics: Arc<ServeMetrics>,
 }
 
 /// Releases a job slot even when the job panics.
@@ -248,6 +263,8 @@ impl Engine {
                 data: Mutex::new(BTreeMap::new()),
                 shared: Mutex::new(BTreeMap::new()),
                 registry: Registry::default(),
+                batchers: Mutex::new(BTreeMap::new()),
+                metrics: Arc::new(ServeMetrics::new()),
             }),
         }
     }
@@ -273,8 +290,22 @@ impl Engine {
     /// event on the returned handle, so clients handle exactly one error
     /// path. The event sequence is `queued -> started -> (epoch | run |
     /// log)* -> result | error` (a job that fails before its backend
-    /// resolves skips `started`).
+    /// resolves skips `started`). Equivalent to [`Engine::submit_from`]
+    /// with tenant 0 (the CLI / stdin default).
     pub fn submit(&self, spec: JobSpec) -> JobHandle {
+        self.submit_from(0, spec)
+    }
+
+    /// [`Engine::submit`] on behalf of a batcher tenant: `predict_one`
+    /// requests from this submission are admitted under `tenant` in the
+    /// fair FIFO-per-tenant scheduler (DESIGN.md §12). Serve transports
+    /// assign tenants per session; every other job kind ignores it.
+    ///
+    /// `predict_one` and `metrics` jobs bypass the engine's slot gate: the
+    /// batcher's bounded admission queue (typed `overloaded` rejection) is
+    /// their admission control, and parking a whole job slot per queued
+    /// single-image request would let serving starve training jobs.
+    pub fn submit_from(&self, tenant: u64, spec: JobSpec) -> JobHandle {
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed) + 1;
         let (tx, rx) = channel::<Event>();
         let cancel = CancelToken::default();
@@ -291,9 +322,15 @@ impl Engine {
                     cancel: token,
                 };
                 let token = sink.cancel.clone();
-                let out = match inner.acquire_slot(&token) {
-                    Err(e) => Err(e),
-                    Ok(_guard) => exec(&inner, id, spec, &mut sink),
+                let lightweight =
+                    matches!(spec, JobSpec::PredictOne(_) | JobSpec::Metrics(_));
+                let out = if lightweight {
+                    exec(&inner, id, tenant, spec, &mut sink)
+                } else {
+                    match inner.acquire_slot(&token) {
+                        Err(e) => Err(e),
+                        Ok(_guard) => exec(&inner, id, tenant, spec, &mut sink),
+                    }
                 };
                 match out {
                     Ok(result) => {
@@ -312,6 +349,8 @@ impl Engine {
                     Err(e) => {
                         let message = if is_cancelled(&e) {
                             "cancelled".to_string()
+                        } else if is_overloaded(&e) {
+                            "overloaded".to_string()
                         } else {
                             format!("{e:#}")
                         };
@@ -429,9 +468,42 @@ impl Inner {
             factory.spawn()
         }
     }
+
+    /// The request batcher of a warm model, created on first use. Keyed by
+    /// `id@content_hash`: re-loading different weights under the same id
+    /// gets a fresh batcher (the stale one is dropped — its worker drains
+    /// and exits), while every `predict_one` against the same weights
+    /// shares one coalescing queue.
+    fn batcher(&self, warm: &WarmModel) -> Result<Arc<Batcher>> {
+        let key = format!("{}@{}", warm.id, warm.content_hash);
+        let mut batchers = self.batchers.lock().unwrap();
+        if let Some(b) = batchers.get(&key) {
+            return Ok(Arc::clone(b));
+        }
+        let mut cfg = self.cfg.batcher;
+        cfg.kernel_threads = self.kernel_share();
+        let b = Arc::new(Batcher::new(
+            Arc::clone(&warm.shared),
+            Arc::clone(&warm.state),
+            cfg,
+            Arc::clone(&self.metrics),
+        )?);
+        // One batcher per live (id, weights) pair: a replaced entry under
+        // the same id is evicted so the map stays proportional to warm
+        // models, not to load history.
+        batchers.retain(|k, _| !k.starts_with(&format!("{}@", warm.id)) || k == &key);
+        batchers.insert(key, Arc::clone(&b));
+        Ok(b)
+    }
 }
 
-fn exec(inner: &Inner, id: JobId, spec: JobSpec, sink: &mut ChannelSink) -> Result<JobResult> {
+fn exec(
+    inner: &Inner,
+    id: JobId,
+    tenant: u64,
+    spec: JobSpec,
+    sink: &mut ChannelSink,
+) -> Result<JobResult> {
     match spec {
         JobSpec::Train(job) => exec_train(inner, id, job, sink),
         JobSpec::Eval(job) => exec_eval(inner, id, job, sink),
@@ -443,6 +515,9 @@ fn exec(inner: &Inner, id: JobId, spec: JobSpec, sink: &mut ChannelSink) -> Resu
         JobSpec::Save(job) => exec_save(inner, id, job, sink),
         JobSpec::Load(job) => exec_load(inner, id, job, sink),
         JobSpec::Predict(job) => exec_predict(inner, id, job, sink),
+        JobSpec::PredictOne(job) => exec_predict_one(inner, id, tenant, job, sink),
+        JobSpec::Metrics(job) => exec_metrics(inner, id, job, sink),
+        JobSpec::ServeBench(job) => exec_serve_bench(inner, id, job, sink),
     }
 }
 
@@ -812,6 +887,9 @@ fn exec_predict(
     job: PredictJob,
     sink: &mut ChannelSink,
 ) -> Result<JobResult> {
+    if !job.models.is_empty() {
+        return exec_predict_ensemble(inner, id, job, sink);
+    }
     // Source: a warm registry entry (Arc clones, no IO) or an ad-hoc
     // checkpoint load (verified but not registered).
     let (state, shared, label, content_hash): (Arc<ModelState>, Arc<NativeShared>, String, String) =
@@ -867,6 +945,241 @@ fn exec_predict(
         variant: variant_name,
         backend: factory.kind().name().to_string(),
     })
+}
+
+/// Ensemble predict: probability-average two or more warm registry models
+/// of the same variant. Each member runs its own full TTA pass; the
+/// per-member softmax probabilities (and identity-view probabilities, for
+/// the no-TTA readout) are averaged element-wise in f32, then argmaxed.
+/// An ensemble of identical members is therefore *bitwise* equal to the
+/// single model — `(p + p) / 2` is exact in f32 — which the parity test
+/// pins.
+fn exec_predict_ensemble(
+    inner: &Inner,
+    id: JobId,
+    job: PredictJob,
+    sink: &mut ChannelSink,
+) -> Result<JobResult> {
+    if job.model.is_some() || job.load.is_some() {
+        bail!("predict takes either 'models' (ensemble) or a single 'model'/'load' source");
+    }
+    if job.models.len() < 2 {
+        bail!("ensemble predict needs at least two 'models' entries");
+    }
+    let mut members = Vec::with_capacity(job.models.len());
+    for key in &job.models {
+        let warm = inner.registry.get(key).ok_or_else(|| {
+            anyhow!(
+                "no warm model '{key}' — submit a load job first (loaded: {:?})",
+                inner.registry.ids()
+            )
+        })?;
+        members.push(warm);
+    }
+    let variant_name = members[0].variant_name.clone();
+    for m in &members[1..] {
+        if m.variant_name != variant_name {
+            bail!(
+                "ensemble members must share a variant ('{}' is {}, '{}' is {})",
+                members[0].id,
+                variant_name,
+                m.id,
+                m.variant_name
+            );
+        }
+    }
+    started(sink, id, "predict", "native", &variant_name);
+    let (_, test_ds) = inner.data(job.data, None, job.test_n);
+    let n = test_ds.len();
+    let k = test_ds.num_classes;
+    let mut sum_probs = crate::tensor::Tensor::zeros(&[n, k]);
+    let mut sum_identity = crate::tensor::Tensor::zeros(&[n, k]);
+    for warm in &members {
+        let spec = EngineSpec::new(BackendKind::Native, &variant_name)
+            .with_artifacts_dir(&inner.cfg.artifacts_dir);
+        let factory = BackendFactory::from_native_shared(spec, Arc::clone(&warm.shared));
+        let mut engine = inner.spawn_worker(&factory)?;
+        warm.state.validate(engine.variant())?;
+        if job.precision != EvalPrecision::F32 {
+            engine.set_eval_precision(job.precision)?;
+        }
+        let out = evaluate_observed(engine.as_mut(), &warm.state, &test_ds, job.tta, sink)?;
+        sink.on_log(&format!(
+            "[ensemble] member '{}' acc {:.4} (md5 {})",
+            warm.id,
+            out.accuracy,
+            checkpoint::f32_md5(out.probs.data())
+        ));
+        for (dst, &src) in sum_probs.data_mut().iter_mut().zip(out.probs.data()) {
+            *dst += src;
+        }
+        for (dst, &src) in sum_identity.data_mut().iter_mut().zip(out.probs_identity.data()) {
+            *dst += src;
+        }
+    }
+    let scale = 1.0 / members.len() as f32;
+    for v in sum_probs.data_mut() {
+        *v *= scale;
+    }
+    for v in sum_identity.data_mut() {
+        *v *= scale;
+    }
+    let argmax_acc = |probs: &crate::tensor::Tensor| -> (Vec<u16>, f64) {
+        let data = probs.data();
+        let mut correct = 0usize;
+        let mut preds = Vec::with_capacity(n);
+        for i in 0..n {
+            let row = &data[i * k..(i + 1) * k];
+            let mut best = 0usize;
+            for j in 1..k {
+                if row[j] > row[best] {
+                    best = j;
+                }
+            }
+            preds.push(best as u16);
+            if best == test_ds.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        (preds, correct as f64 / n as f64)
+    };
+    let (predictions, accuracy) = argmax_acc(&sum_probs);
+    let (_, accuracy_no_tta) = argmax_acc(&sum_identity);
+    // The ensemble's identity is the hash of its members' hashes, in
+    // request order — same members, same order, same hash.
+    let joined = members
+        .iter()
+        .map(|m| m.content_hash.as_str())
+        .collect::<Vec<_>>()
+        .join(",");
+    Ok(JobResult::Predict {
+        accuracy,
+        accuracy_no_tta,
+        n_test: n,
+        predictions,
+        probs_md5: checkpoint::f32_md5(sum_probs.data()),
+        model: job.models.join(","),
+        content_hash: crate::util::md5::md5_hex(joined.as_bytes()),
+        variant: variant_name,
+        backend: "native".to_string(),
+    })
+}
+
+// ---- serving tier: predict_one / metrics / serve_bench -------------------
+
+/// One softmax row with the *same* f32 operation sequence as the
+/// evaluator's `softmax_rows` — the `predict_one` probability row of an
+/// image must be bit-identical to the row the unbatched predict path
+/// computes for it.
+fn softmax_row(row: &mut [f32]) {
+    let max = row.iter().cloned().fold(f32::MIN, f32::max);
+    let mut sum = 0f32;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    for v in row.iter_mut() {
+        *v /= sum;
+    }
+}
+
+fn exec_predict_one(
+    inner: &Inner,
+    id: JobId,
+    tenant: u64,
+    job: PredictOneJob,
+    sink: &mut ChannelSink,
+) -> Result<JobResult> {
+    let warm = inner.registry.get(&job.model).ok_or_else(|| {
+        anyhow!(
+            "no warm model '{}' — submit a load job first (loaded: {:?})",
+            job.model,
+            inner.registry.ids()
+        )
+    })?;
+    started(sink, id, "predict_one", "native", &warm.variant_name);
+    let batcher = inner.batcher(&warm)?;
+    let (_, test_ds) = inner.data(job.data, None, job.test_n);
+    if job.index >= test_ds.len() {
+        bail!(
+            "predict_one index {} is out of range (test split has {} images)",
+            job.index,
+            test_ds.len()
+        );
+    }
+    let image = test_ds.images.image(job.index).to_vec();
+    let t0 = Instant::now();
+    let rx = batcher.submit(tenant, image)?;
+    // The reply wait polls the cancel token: an admitted request cannot be
+    // withdrawn from the batch (the batcher replies into a dropped
+    // receiver, harmlessly), but the *job* stops promptly.
+    let logits = loop {
+        match rx.recv_timeout(Duration::from_millis(10)) {
+            Ok(reply) => break reply?,
+            Err(RecvTimeoutError::Timeout) => {
+                if sink.cancelled() {
+                    return Err(Cancelled.into());
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                bail!("the batcher shut down before replying")
+            }
+        }
+    };
+    let latency_us = t0.elapsed().as_secs_f64() * 1e6;
+    inner.metrics.observe_request(latency_us);
+    let mut probs = logits;
+    softmax_row(&mut probs);
+    let mut best = 0usize;
+    for j in 1..probs.len() {
+        if probs[j] > probs[best] {
+            best = j;
+        }
+    }
+    Ok(JobResult::PredictOne {
+        model: warm.id.clone(),
+        content_hash: warm.content_hash.clone(),
+        variant: warm.variant_name.clone(),
+        backend: "native".to_string(),
+        index: job.index,
+        prediction: best as u16,
+        probs_md5: checkpoint::f32_md5(&probs),
+        probs,
+        latency_us,
+    })
+}
+
+fn exec_metrics(
+    inner: &Inner,
+    id: JobId,
+    _job: MetricsJob,
+    sink: &mut ChannelSink,
+) -> Result<JobResult> {
+    started(sink, id, "metrics", "-", "*");
+    Ok(JobResult::Metrics {
+        data: inner.metrics.snapshot(),
+    })
+}
+
+fn exec_serve_bench(
+    _inner: &Inner,
+    id: JobId,
+    job: ServeBenchJob,
+    sink: &mut ChannelSink,
+) -> Result<JobResult> {
+    let c = &job.config;
+    started(sink, id, "serve_bench", "native", &c.variant);
+    sink.on_log(&format!(
+        "[bench] serve phase: variant={} clients={} requests={} levels={:?} max_wait_us={}",
+        c.variant, c.clients, c.requests, c.max_batch_levels, c.max_wait_us
+    ));
+    let report = crate::bench::run_serve_bench_observed(c, sink)?;
+    let path = if job.write {
+        Some(report.write(&c.out_dir)?)
+    } else {
+        None
+    };
+    Ok(JobResult::ServeBench { report, path })
 }
 
 // ---- info --------------------------------------------------------------

@@ -17,7 +17,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
-use crate::bench::{FleetReport, Report};
+use crate::bench::{FleetReport, Report, ServeReport};
 use crate::config::TrainConfig;
 use crate::coordinator::{FleetResult, TrainResult};
 use crate::stats::StudyResult;
@@ -297,6 +297,42 @@ pub enum JobResult {
         /// Resolved backend name.
         backend: String,
     },
+    /// A finished single-image prediction through the serve batcher
+    /// (DESIGN.md §12).
+    PredictOne {
+        /// Warm registry id the request hit.
+        model: String,
+        /// Content hash of the model that ran.
+        content_hash: String,
+        /// Variant evaluated.
+        variant: String,
+        /// Resolved backend name.
+        backend: String,
+        /// Test-split index of the predicted image.
+        index: usize,
+        /// Argmax class.
+        prediction: u16,
+        /// Softmax probabilities of the single image (`num_classes`
+        /// values).
+        probs: Vec<f32>,
+        /// Lowercase MD5 of `probs` (f32 LE bytes) — bit-identity witness
+        /// against the unbatched predict path.
+        probs_md5: String,
+        /// End-to-end submit → reply latency, µs.
+        latency_us: f64,
+    },
+    /// A serving-metrics snapshot (DESIGN.md §12).
+    Metrics {
+        /// The [`crate::serve::metrics::ServeMetrics::snapshot`] document.
+        data: Json,
+    },
+    /// A finished serve load phase.
+    ServeBench {
+        /// The measured report (`airbench.serve-bench/1` schema).
+        report: ServeReport,
+        /// Where `BENCH_<tag>.json` was written, if requested.
+        path: Option<PathBuf>,
+    },
 }
 
 fn opt_path_json(p: &Option<PathBuf>) -> Json {
@@ -320,6 +356,9 @@ impl JobResult {
             JobResult::Save { .. } => "save",
             JobResult::Load { .. } => "load",
             JobResult::Predict { .. } => "predict",
+            JobResult::PredictOne { .. } => "predict_one",
+            JobResult::Metrics { .. } => "metrics",
+            JobResult::ServeBench { .. } => "serve_bench",
         }
     }
 
@@ -478,6 +517,38 @@ impl JobResult {
                 ),
                 ("probs_md5", Json::str(probs_md5)),
             ]),
+            JobResult::PredictOne {
+                model,
+                content_hash,
+                variant,
+                backend,
+                index,
+                prediction,
+                probs,
+                probs_md5,
+                latency_us,
+            } => Json::obj(vec![
+                ("backend", Json::str(backend)),
+                ("model", Json::str(model)),
+                ("content_hash", Json::str(content_hash)),
+                ("variant", Json::str(variant)),
+                ("index", Json::num(*index as f64)),
+                ("prediction", Json::num(*prediction as f64)),
+                (
+                    "probs",
+                    Json::Arr(probs.iter().map(|&p| Json::num(p as f64)).collect()),
+                ),
+                ("probs_md5", Json::str(probs_md5)),
+                ("latency_us", Json::num(*latency_us)),
+            ]),
+            JobResult::Metrics { data } => data.clone(),
+            JobResult::ServeBench { report, path } => {
+                let mut j = report.to_json();
+                if let Json::Obj(m) = &mut j {
+                    m.insert("path".to_string(), opt_path_json(path));
+                }
+                j
+            }
         };
         Json::obj(vec![("kind", Json::str(self.kind_name())), ("data", data)])
     }
@@ -607,6 +678,52 @@ pub fn validate_result(j: &Json) -> Result<()> {
             data.get("model")?.as_str()?;
             data.get("variant")?.as_str()?;
             data.get("backend")?.as_str()?;
+        }
+        "predict_one" => {
+            md5_hex_key("probs_md5")?;
+            md5_hex_key("content_hash")?;
+            data.get("model")?.as_str()?;
+            data.get("variant")?.as_str()?;
+            data.get("backend")?.as_str()?;
+            data.get("index")?.as_usize()?;
+            let probs = data.get("probs")?.as_arr()?;
+            if probs.is_empty() {
+                bail!("predict_one 'probs' must be non-empty");
+            }
+            let mut sum = 0.0;
+            for p in probs {
+                let x = p.as_f64()?;
+                if !x.is_finite() || !(0.0..=1.0).contains(&x) {
+                    bail!("predict_one prob {x} is not a finite probability");
+                }
+                sum += x;
+            }
+            if (sum - 1.0).abs() > 1e-3 {
+                bail!("predict_one 'probs' sum {sum} is not ~1");
+            }
+            if data.get("prediction")?.as_usize()? >= probs.len() {
+                bail!("predict_one 'prediction' must index into 'probs'");
+            }
+            let lat = data.get("latency_us")?.as_f64()?;
+            if !lat.is_finite() || lat < 0.0 {
+                bail!("predict_one 'latency_us' = {lat} must be finite and >= 0");
+            }
+        }
+        "metrics" => {
+            for key in ["requests", "rejected", "batches", "coalesced", "queue_depth"] {
+                data.get(key)?.as_usize()?;
+            }
+            let mb = data.get("mean_batch")?.as_f64()?;
+            if !mb.is_finite() || mb < 0.0 {
+                bail!("metrics 'mean_batch' = {mb} must be finite and >= 0");
+            }
+            let lat = data.get("latency")?;
+            for key in ["queue_us", "exec_us", "request_us"] {
+                lat.get(key)?.get("n")?.as_usize()?;
+            }
+        }
+        "serve_bench" => {
+            crate::bench::validate_serve(data).context("serve-bench result payload")?
         }
         other => bail!("unknown result kind '{other}'"),
     }
@@ -738,6 +855,48 @@ mod tests {
         )
         .unwrap();
         assert!(validate_result(&bad_id).is_err());
+    }
+
+    #[test]
+    fn serving_results_round_trip_through_validation() {
+        let one = JobResult::PredictOne {
+            model: "m1".into(),
+            content_hash: "0123456789abcdef0123456789abcdef".into(),
+            variant: "nano".into(),
+            backend: "native".into(),
+            index: 7,
+            prediction: 2,
+            probs: vec![0.1, 0.2, 0.7],
+            probs_md5: "0123456789abcdef0123456789abcdef".into(),
+            latency_us: 1234.5,
+        };
+        let j = one.to_json();
+        assert_eq!(one.kind_name(), "predict_one");
+        validate_result(&j).unwrap();
+        // prediction out of range of probs is rejected.
+        let bad = parse(
+            r#"{"kind": "predict_one", "data": {"backend": "native", "model": "m1",
+                "content_hash": "0123456789abcdef0123456789abcdef", "variant": "nano",
+                "index": 0, "prediction": 3, "probs": [0.5, 0.25, 0.25],
+                "probs_md5": "0123456789abcdef0123456789abcdef",
+                "latency_us": 10.0}}"#,
+        )
+        .unwrap();
+        assert!(validate_result(&bad).is_err());
+
+        let metrics = JobResult::Metrics {
+            data: crate::serve::metrics::ServeMetrics::new().snapshot(),
+        };
+        assert_eq!(metrics.kind_name(), "metrics");
+        validate_result(&metrics.to_json()).unwrap();
+        // Missing latency block is rejected.
+        let bad = parse(
+            r#"{"kind": "metrics", "data": {"requests": 1, "rejected": 0,
+                "batches": 1, "coalesced": 1, "mean_batch": 1.0,
+                "queue_depth": 0}}"#,
+        )
+        .unwrap();
+        assert!(validate_result(&bad).is_err());
     }
 
     #[test]

@@ -2,8 +2,9 @@
 //!
 //! A [`JobSpec`] is everything needed to execute one unit of work against
 //! the engine: which workload ([`TrainJob`], [`EvalJob`], [`FleetJob`],
-//! [`BenchJob`], [`FleetBenchJob`], [`InfoJob`], and the artifact
-//! lifecycle [`SaveJob`], [`LoadJob`], [`PredictJob`]), on which data,
+//! [`BenchJob`], [`FleetBenchJob`], [`ServeBenchJob`], [`InfoJob`], the
+//! artifact lifecycle [`SaveJob`], [`LoadJob`], [`PredictJob`], and the
+//! serving tier [`PredictOneJob`], [`MetricsJob`]), on which data,
 //! with which [`TrainConfig`]. Specs are plain data with a total JSON
 //! round trip ([`JobSpec::to_json`] / [`JobSpec::from_json`]) — the same
 //! document the CLI builds from flags is what `airbench serve` accepts as
@@ -18,7 +19,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
-use crate::bench::{BenchConfig, FleetBenchConfig};
+use crate::bench::{BenchConfig, FleetBenchConfig, ServeBenchConfig};
 use crate::config::{TrainConfig, TtaLevel};
 use crate::data::augment::{FlipMode, Policy};
 use crate::experiments::DataKind;
@@ -223,6 +224,10 @@ pub struct PredictJob {
     pub model: Option<String>,
     /// Checkpoint to load ad hoc instead (verified but not registered).
     pub load: Option<PathBuf>,
+    /// Ensemble members: two or more warm registry models (same variant)
+    /// whose softmax probabilities are averaged before the argmax (CLI
+    /// `predict --models a,b,c`). Mutually exclusive with `model`/`load`.
+    pub models: Vec<String>,
     /// Dataset distribution whose test split is predicted.
     pub data: DataKind,
     /// Test-set size override.
@@ -239,12 +244,58 @@ impl Default for PredictJob {
         PredictJob {
             model: None,
             load: None,
+            models: Vec::new(),
             data: DataKind::Cifar10,
             test_n: None,
             tta: TtaLevel::None,
             precision: EvalPrecision::F32,
         }
     }
+}
+
+/// One single-image prediction against a warm model, admitted through the
+/// serve batcher (DESIGN.md §12): coalesced with concurrent requests into
+/// one batched eval under the engine's latency SLO, bit-identical to an
+/// unbatched predict of the same image.
+#[derive(Clone, Debug)]
+pub struct PredictOneJob {
+    /// Warm registry model to hit (id or content hash) — `predict_one`
+    /// never loads from disk; submit a `load` job first.
+    pub model: String,
+    /// Index into the engine's cached test split of `data`.
+    pub index: usize,
+    /// Dataset distribution whose test split supplies the image.
+    pub data: DataKind,
+    /// Test-set size override (must exceed `index`).
+    pub test_n: Option<usize>,
+}
+
+impl Default for PredictOneJob {
+    fn default() -> Self {
+        PredictOneJob {
+            model: String::new(),
+            index: 0,
+            data: DataKind::Cifar10,
+            test_n: None,
+        }
+    }
+}
+
+/// Snapshot the engine's serving metrics (counters, gauges, latency
+/// quantiles — DESIGN.md §12). The CLI's `metrics` command; over a serve
+/// session: `{"job": "metrics"}`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MetricsJob;
+
+/// The serve load phase (the CLI's `bench --serve`): N concurrent
+/// synthetic clients driving single-image predicts against an in-process
+/// engine at several `max_batch` levels.
+#[derive(Clone, Debug)]
+pub struct ServeBenchJob {
+    /// Phase protocol knobs.
+    pub config: ServeBenchConfig,
+    /// Whether to write `BENCH_<tag>.json` into `config.out_dir`.
+    pub write: bool,
 }
 
 /// Variant / manifest inspection (the CLI's `info` command).
@@ -282,6 +333,12 @@ pub enum JobSpec {
     Load(LoadJob),
     /// Training-free evaluation of a saved or warm model.
     Predict(PredictJob),
+    /// One single-image prediction through the serve batcher.
+    PredictOne(PredictOneJob),
+    /// Serving-metrics snapshot.
+    Metrics(MetricsJob),
+    /// Serve load phase (micro-batched predict throughput).
+    ServeBench(ServeBenchJob),
 }
 
 // ---- optional-key helpers (absent and null are both "use the default") --
@@ -391,6 +448,9 @@ impl JobSpec {
             JobSpec::Save(_) => "save",
             JobSpec::Load(_) => "load",
             JobSpec::Predict(_) => "predict",
+            JobSpec::PredictOne(_) => "predict_one",
+            JobSpec::Metrics(_) => "metrics",
+            JobSpec::ServeBench(_) => "serve_bench",
         }
     }
 
@@ -498,10 +558,46 @@ impl JobSpec {
                     p.push(("model", Json::str(m)));
                 }
                 push_opt_path(&mut p, "load", &pr.load);
+                if !pr.models.is_empty() {
+                    p.push((
+                        "models",
+                        Json::Arr(pr.models.iter().map(|m| Json::str(m)).collect()),
+                    ));
+                }
                 p.push(("data", Json::str(pr.data.name())));
                 push_opt_num(&mut p, "test_n", pr.test_n);
                 p.push(("tta", Json::str(pr.tta.name())));
                 push_precision(&mut p, pr.precision);
+            }
+            JobSpec::PredictOne(po) => {
+                p.push(("model", Json::str(&po.model)));
+                p.push(("index", Json::num(po.index as f64)));
+                p.push(("data", Json::str(po.data.name())));
+                push_opt_num(&mut p, "test_n", po.test_n);
+            }
+            JobSpec::Metrics(MetricsJob) => {}
+            JobSpec::ServeBench(sb) => {
+                let c = &sb.config;
+                p.push(("variant", Json::str(&c.variant)));
+                if let Some(t) = &c.tag {
+                    p.push(("tag", Json::str(t)));
+                }
+                p.push(("clients", Json::num(c.clients as f64)));
+                p.push(("requests", Json::num(c.requests as f64)));
+                p.push((
+                    "max_batch_levels",
+                    Json::Arr(
+                        c.max_batch_levels
+                            .iter()
+                            .map(|&x| Json::num(x as f64))
+                            .collect(),
+                    ),
+                ));
+                p.push(("max_wait_us", Json::num(c.max_wait_us as f64)));
+                p.push(("queue_cap", Json::num(c.queue_cap as f64)));
+                p.push(("test_n", Json::num(c.test_n as f64)));
+                p.push(("out", Json::str(&c.out_dir.display().to_string())));
+                p.push(("write", Json::Bool(sb.write)));
             }
         }
         Json::obj(p)
@@ -642,6 +738,16 @@ impl JobSpec {
             "predict" => JobSpec::Predict(PredictJob {
                 model: opt_str(j, "model")?,
                 load: opt_path(j, "load")?,
+                models: match opt_key(j, "models") {
+                    None => Vec::new(),
+                    Some(v) => v
+                        .as_arr()
+                        .context("job key 'models'")?
+                        .iter()
+                        .map(|m| m.as_str().map(str::to_string))
+                        .collect::<Result<Vec<_>>>()
+                        .context("job key 'models'")?,
+                },
                 data: parse_data(j)?,
                 test_n: opt_usize(j, "test_n")?,
                 tta: match opt_str(j, "tta")? {
@@ -652,9 +758,43 @@ impl JobSpec {
                 },
                 precision: parse_precision(j)?,
             }),
+            "predict_one" => JobSpec::PredictOne(PredictOneJob {
+                model: opt_str(j, "model")?.ok_or_else(|| {
+                    anyhow::anyhow!("predict_one jobs need the 'model' id of a warm model")
+                })?,
+                index: opt_usize(j, "index")?.unwrap_or(0),
+                data: parse_data(j)?,
+                test_n: opt_usize(j, "test_n")?,
+            }),
+            "metrics" => JobSpec::Metrics(MetricsJob),
+            "serve_bench" => {
+                let d = ServeBenchConfig::default();
+                JobSpec::ServeBench(ServeBenchJob {
+                    config: ServeBenchConfig {
+                        variant: opt_str(j, "variant")?.unwrap_or(d.variant),
+                        tag: opt_str(j, "tag")?,
+                        clients: opt_usize(j, "clients")?.unwrap_or(d.clients).max(1),
+                        requests: opt_usize(j, "requests")?.unwrap_or(d.requests).max(1),
+                        max_batch_levels: match opt_key(j, "max_batch_levels") {
+                            None => d.max_batch_levels,
+                            Some(v) => {
+                                v.as_usize_vec().context("job key 'max_batch_levels'")?
+                            }
+                        },
+                        max_wait_us: opt_usize(j, "max_wait_us")?
+                            .map(|x| x as u64)
+                            .unwrap_or(d.max_wait_us),
+                        queue_cap: opt_usize(j, "queue_cap")?.unwrap_or(d.queue_cap),
+                        test_n: opt_usize(j, "test_n")?.unwrap_or(d.test_n),
+                        out_dir: opt_path(j, "out")?.unwrap_or(d.out_dir),
+                    },
+                    write: opt_bool(j, "write")?.unwrap_or(true),
+                })
+            }
             other => bail!(
                 "unknown job kind '{other}' \
-                 (train|eval|fleet|study|bench|fleet_bench|info|save|load|predict)"
+                 (train|eval|fleet|study|bench|fleet_bench|serve_bench|info|save|load|predict|\
+                 predict_one|metrics)"
             ),
         })
     }
@@ -897,6 +1037,84 @@ mod tests {
         .unwrap()
         {
             JobSpec::Predict(p) => assert_eq!(p.precision, EvalPrecision::Bf16),
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn serving_specs_round_trip() {
+        // Ensemble predict: the models array survives the trip.
+        let p = PredictJob {
+            models: vec!["a".into(), "b".into(), "c".into()],
+            ..PredictJob::default()
+        };
+        match round_trip(&JobSpec::Predict(p)) {
+            JobSpec::Predict(p) => {
+                assert_eq!(p.models, vec!["a", "b", "c"]);
+                assert_eq!(p.model, None);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        // Plain predicts keep omitting the key entirely (pre-PR 9 readers).
+        let solo = JobSpec::Predict(PredictJob {
+            model: Some("m1".into()),
+            ..PredictJob::default()
+        });
+        assert!(solo.to_json().opt("models").is_none());
+
+        let po = PredictOneJob {
+            model: "m1".into(),
+            index: 17,
+            test_n: Some(64),
+            ..PredictOneJob::default()
+        };
+        match round_trip(&JobSpec::PredictOne(po)) {
+            JobSpec::PredictOne(po) => {
+                assert_eq!(po.model, "m1");
+                assert_eq!(po.index, 17);
+                assert_eq!(po.test_n, Some(64));
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        // predict_one requires a warm model id; index defaults to 0.
+        assert!(JobSpec::from_json(&parse(r#"{"job": "predict_one"}"#).unwrap()).is_err());
+        match JobSpec::from_json(&parse(r#"{"job": "predict_one", "model": "m1"}"#).unwrap())
+            .unwrap()
+        {
+            JobSpec::PredictOne(po) => assert_eq!(po.index, 0),
+            other => panic!("wrong kind: {other:?}"),
+        }
+
+        match round_trip(&JobSpec::Metrics(MetricsJob)) {
+            JobSpec::Metrics(MetricsJob) => {}
+            other => panic!("wrong kind: {other:?}"),
+        }
+
+        let sb = ServeBenchJob {
+            config: ServeBenchConfig {
+                clients: 4,
+                requests: 16,
+                max_batch_levels: vec![1, 8],
+                tag: Some("t".into()),
+                ..ServeBenchConfig::default()
+            },
+            write: false,
+        };
+        match round_trip(&JobSpec::ServeBench(sb)) {
+            JobSpec::ServeBench(sb) => {
+                assert_eq!(sb.config.clients, 4);
+                assert_eq!(sb.config.max_batch_levels, vec![1, 8]);
+                assert_eq!(sb.config.tag.as_deref(), Some("t"));
+                assert!(!sb.write);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        // Minimal serve_bench fills defaults.
+        match JobSpec::from_json(&parse(r#"{"job": "serve_bench"}"#).unwrap()).unwrap() {
+            JobSpec::ServeBench(sb) => {
+                assert_eq!(sb.config, ServeBenchConfig::default());
+                assert!(sb.write);
+            }
             other => panic!("wrong kind: {other:?}"),
         }
     }

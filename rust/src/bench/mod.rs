@@ -21,6 +21,13 @@
 //! deterministic synthetic CIFAR proxy, so the harness needs no artifacts,
 //! no downloads, and produces comparable numbers on any machine.
 
+pub mod serve;
+
+pub use serve::{
+    run_serve_bench, run_serve_bench_observed, validate_serve, ServeBenchConfig, ServeLevel,
+    ServeReport, SERVE_SCHEMA,
+};
+
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
@@ -631,11 +638,14 @@ pub fn validate_fleet(j: &Json) -> Result<()> {
 }
 
 /// Validate any committed report document, dispatching on its `schema`
-/// key ([`SCHEMA`], [`FLEET_SCHEMA`], or [`crate::stats::study::SCHEMA`]).
+/// key ([`SCHEMA`], [`FLEET_SCHEMA`], [`SERVE_SCHEMA`], or
+/// [`crate::stats::study::SCHEMA`]).
 pub fn validate_any(j: &Json) -> Result<()> {
     let schema = j.get("schema")?.as_str()?;
     if schema == FLEET_SCHEMA {
         validate_fleet(j)
+    } else if schema == SERVE_SCHEMA {
+        validate_serve(j)
     } else if schema == crate::stats::study::SCHEMA {
         crate::stats::study::validate(j)
     } else {

@@ -1,0 +1,480 @@
+//! The serve load phase (`airbench bench --serve`): closed-loop synthetic
+//! clients driving single-image `predict_one` jobs through an in-process
+//! [`Engine`](crate::api::Engine), timed once per requested `--max-batch`
+//! level, so the committed `BENCH_*.json` trajectory records what request
+//! coalescing (DESIGN.md §12) actually buys on this machine.
+//!
+//! Protocol per level: a fresh engine with the level's
+//! [`BatcherConfig`](crate::serve::batcher::BatcherConfig), a synthetic
+//! warm model inserted into its registry (no checkpoint IO — the phase
+//! measures serving, not loading), one untimed warmup request, then
+//! `clients` threads each issuing `requests` sequential predicts (closed
+//! loop: a client's next request waits for its previous reply). Latencies
+//! stream into per-client [`Histogram`]s merged per level; batch counters
+//! come from a `metrics` job diffed around the timed window.
+//!
+//! Determinism is measured, not assumed: every request's `probs_md5` is
+//! collected in (client, request) order and compared bitwise against the
+//! first level's — `bit_identical_to_b1` next to `speedup_vs_b1`, exactly
+//! like the fleet phase's determinism verdict.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::api::{Engine, EngineConfig, JobResult, JobSpec, MetricsJob, PredictOneJob, WarmModel};
+use crate::coordinator::observer::{Cancelled, NullObserver, Observer};
+use crate::experiments::DataKind;
+use crate::runtime::checkpoint::state_md5;
+use crate::runtime::native::{available_cores, builtin_variant};
+use crate::runtime::{InitConfig, ModelState, NativeShared};
+use crate::serve::batcher::BatcherConfig;
+use crate::stats::basic::Histogram;
+use crate::util::json::Json;
+
+/// Schema identifier of serve load reports (`airbench bench --serve`).
+pub const SERVE_SCHEMA: &str = "airbench.serve-bench/1";
+
+/// Configuration of the serve load phase.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeBenchConfig {
+    /// Variant to serve (native built-ins only — the batcher is a native
+    /// worker).
+    pub variant: String,
+    /// Tag for `BENCH_<tag>.json`; defaults to `native_serve`.
+    pub tag: Option<String>,
+    /// Concurrent closed-loop clients.
+    pub clients: usize,
+    /// Requests per client (total per level = `clients x requests`).
+    pub requests: usize,
+    /// `max_batch` levels to time, in order; `max_batch_levels[0]` is the
+    /// speedup baseline (conventionally 1 = unbatched).
+    pub max_batch_levels: Vec<usize>,
+    /// Batcher flush deadline (µs a queued request may wait for company).
+    pub max_wait_us: u64,
+    /// Admission-queue bound (requests beyond it are rejected
+    /// `overloaded`).
+    pub queue_cap: usize,
+    /// Test-split size requests index into.
+    pub test_n: usize,
+    /// Directory the JSON report is written to (repo root by convention).
+    pub out_dir: PathBuf,
+}
+
+impl Default for ServeBenchConfig {
+    fn default() -> Self {
+        ServeBenchConfig {
+            variant: "nano".into(),
+            tag: None,
+            clients: 8,
+            requests: 32,
+            max_batch_levels: vec![1, 8, 32],
+            max_wait_us: 2_000,
+            queue_cap: 256,
+            test_n: 256,
+            out_dir: PathBuf::from("."),
+        }
+    }
+}
+
+/// One timed `max_batch` level of the serve phase.
+#[derive(Clone, Debug)]
+pub struct ServeLevel {
+    /// Batcher flush size this level ran with.
+    pub max_batch: usize,
+    /// Wall-clock seconds for all `clients x requests` predicts.
+    pub wall_s: f64,
+    /// Throughput: total requests / `wall_s`.
+    pub req_per_s: f64,
+    /// `eval_logits` calls the batcher issued inside the timed window.
+    pub batches: usize,
+    /// Mean coalesced requests per batch inside the timed window.
+    pub mean_batch: f64,
+    /// Requests rejected `overloaded` inside the timed window.
+    pub rejected: usize,
+    /// End-to-end request latencies (merged across clients).
+    pub latency: Histogram,
+    /// `wall_s(levels[0]) / wall_s(this)`.
+    pub speedup_vs_b1: f64,
+    /// Whether every request's `probs_md5` matched the first level's, in
+    /// (client, request) order — the batcher's bit-identity contract,
+    /// measured.
+    pub bit_identical_to_b1: bool,
+}
+
+/// Everything one serve-phase invocation measured.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// File tag (`BENCH_<tag>.json`).
+    pub tag: String,
+    /// Backend the batcher worker ran (always `"native"`).
+    pub backend_name: String,
+    /// Variant served.
+    pub variant: String,
+    /// Cores of the measuring machine.
+    pub cores: usize,
+    /// Protocol knobs, echoed for reproducibility.
+    pub config: ServeBenchConfig,
+    /// One entry per `max_batch_levels` element, in order.
+    pub levels: Vec<ServeLevel>,
+}
+
+impl ServeReport {
+    /// The machine-readable report (schema documented in BENCHMARKS.md).
+    pub fn to_json(&self) -> Json {
+        let c = &self.config;
+        Json::obj(vec![
+            ("schema", Json::str(SERVE_SCHEMA)),
+            ("tag", Json::str(&self.tag)),
+            ("backend", Json::str(&self.backend_name)),
+            ("variant", Json::str(&self.variant)),
+            (
+                "created_unix",
+                Json::num(
+                    std::time::SystemTime::now()
+                        .duration_since(std::time::UNIX_EPOCH)
+                        .map(|d| d.as_secs() as f64)
+                        .unwrap_or(0.0),
+                ),
+            ),
+            (
+                "protocol",
+                Json::obj(vec![
+                    ("clients", Json::num(c.clients as f64)),
+                    ("requests_per_client", Json::num(c.requests as f64)),
+                    (
+                        "max_batch_levels",
+                        Json::Arr(
+                            c.max_batch_levels.iter().map(|&x| Json::num(x as f64)).collect(),
+                        ),
+                    ),
+                    ("max_wait_us", Json::num(c.max_wait_us as f64)),
+                    ("queue_cap", Json::num(c.queue_cap as f64)),
+                    ("test_n", Json::num(c.test_n as f64)),
+                    ("data", Json::str("synthetic-cifar")),
+                ]),
+            ),
+            (
+                "env",
+                Json::obj(vec![
+                    ("cores", Json::num(self.cores as f64)),
+                    ("os", Json::str(std::env::consts::OS)),
+                    ("arch", Json::str(std::env::consts::ARCH)),
+                ]),
+            ),
+            (
+                "levels",
+                Json::Arr(
+                    self.levels
+                        .iter()
+                        .map(|l| {
+                            Json::obj(vec![
+                                ("max_batch", Json::num(l.max_batch as f64)),
+                                ("wall_s", Json::num(l.wall_s)),
+                                ("req_per_s", Json::num(l.req_per_s)),
+                                ("batches", Json::num(l.batches as f64)),
+                                ("mean_batch", Json::num(l.mean_batch)),
+                                ("rejected", Json::num(l.rejected as f64)),
+                                ("latency", l.latency.to_json()),
+                                ("speedup_vs_b1", Json::num(l.speedup_vs_b1)),
+                                ("bit_identical_to_b1", Json::Bool(l.bit_identical_to_b1)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write `BENCH_<tag>.json` into `dir` (schema-validated first).
+    pub fn write(&self, dir: &Path) -> Result<PathBuf> {
+        let j = self.to_json();
+        validate_serve(&j).context("serve phase produced a schema-invalid report")?;
+        let path = dir.join(format!("BENCH_{}.json", self.tag));
+        std::fs::write(&path, j.to_pretty_string())
+            .with_context(|| format!("writing {path:?}"))?;
+        Ok(path)
+    }
+}
+
+/// Validate a serve load `BENCH_*.json` against [`SERVE_SCHEMA`].
+pub fn validate_serve(j: &Json) -> Result<()> {
+    let schema = j.get("schema")?.as_str()?;
+    if schema != SERVE_SCHEMA {
+        bail!("unknown serve-bench schema '{schema}' (want '{SERVE_SCHEMA}')");
+    }
+    for key in ["tag", "backend", "variant"] {
+        if j.get(key)?.as_str()?.is_empty() {
+            bail!("'{key}' must be a non-empty string");
+        }
+    }
+    j.get("created_unix")?.as_f64()?;
+    let proto = j.get("protocol")?;
+    if proto.get("clients")?.as_usize()? == 0 {
+        bail!("protocol.clients must be >= 1");
+    }
+    if proto.get("requests_per_client")?.as_usize()? == 0 {
+        bail!("protocol.requests_per_client must be >= 1");
+    }
+    let levels_decl = proto.get("max_batch_levels")?.as_arr()?.len();
+    for key in ["max_wait_us", "queue_cap", "test_n"] {
+        proto.get(key)?.as_f64()?;
+    }
+    let env = j.get("env")?;
+    if env.get("cores")?.as_usize()? == 0 {
+        bail!("env.cores must be >= 1");
+    }
+    env.get("os")?.as_str()?;
+    env.get("arch")?.as_str()?;
+    let levels = j.get("levels")?.as_arr()?;
+    if levels.is_empty() || levels.len() != levels_decl {
+        bail!(
+            "levels length {} must match protocol.max_batch_levels length {levels_decl} (and be >= 1)",
+            levels.len()
+        );
+    }
+    for (i, l) in levels.iter().enumerate() {
+        if l.get("max_batch")?.as_usize()? == 0 {
+            bail!("levels[{i}].max_batch must be >= 1");
+        }
+        for key in ["wall_s", "req_per_s", "mean_batch", "speedup_vs_b1"] {
+            let x = l.get(key)?.as_f64()?;
+            if !x.is_finite() {
+                bail!("levels[{i}].{key} is not finite");
+            }
+        }
+        if l.get("wall_s")?.as_f64()? <= 0.0 {
+            bail!("levels[{i}].wall_s must be positive");
+        }
+        if l.get("mean_batch")?.as_f64()? < 0.0 {
+            bail!("levels[{i}].mean_batch must be >= 0");
+        }
+        l.get("batches")?.as_usize()?;
+        l.get("rejected")?.as_usize()?;
+        l.get("bit_identical_to_b1")?.as_bool()?;
+        let lat = l.get("latency")?;
+        if lat.get("n")?.as_usize()? == 0 {
+            bail!("levels[{i}].latency.n must be >= 1");
+        }
+        for key in ["mean_us", "min_us", "max_us", "p50_us", "p90_us", "p99_us"] {
+            let x = lat.get(key)?.as_f64()?;
+            if !x.is_finite() || x < 0.0 {
+                bail!("levels[{i}].latency.{key} must be finite and >= 0");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Counters a level diffs around its timed window (from a `metrics` job).
+#[derive(Clone, Copy, Debug, Default)]
+struct Counters {
+    batches: usize,
+    coalesced: usize,
+    rejected: usize,
+}
+
+fn counters(engine: &Engine) -> Result<Counters> {
+    match engine.submit(JobSpec::Metrics(MetricsJob)).wait()? {
+        JobResult::Metrics { data } => Ok(Counters {
+            batches: data.get("batches")?.as_usize()?,
+            coalesced: data.get("coalesced")?.as_usize()?,
+            rejected: data.get("rejected")?.as_usize()?,
+        }),
+        other => bail!("metrics job returned a {} result", other.kind_name()),
+    }
+}
+
+/// Run the serve load phase and return the report.
+pub fn run_serve_bench(cfg: &ServeBenchConfig) -> Result<ServeReport> {
+    run_serve_bench_observed(cfg, &mut NullObserver)
+}
+
+/// [`run_serve_bench`] with an observer: one log line per timed level, and
+/// a cancellation poll between levels (the job engine's progress feed).
+/// Observation is passive — the measured numbers are unchanged.
+pub fn run_serve_bench_observed(
+    cfg: &ServeBenchConfig,
+    obs: &mut dyn Observer,
+) -> Result<ServeReport> {
+    if cfg.max_batch_levels.is_empty() {
+        bail!("serve bench needs at least one max_batch level");
+    }
+    let clients = cfg.clients.max(1);
+    let requests = cfg.requests.max(1);
+    let test_n = cfg.test_n.max(1);
+
+    // One synthetic warm model shared (Arc) by every level's engine: the
+    // phase measures serving, not checkpoint IO, so the registry entry is
+    // built directly — same seam a `load` job fills.
+    let variant = builtin_variant(&cfg.variant)
+        .ok_or_else(|| anyhow!("serve bench needs a native built-in variant, not '{}'", cfg.variant))?;
+    let params = variant.param_count;
+    let state = Arc::new(ModelState::init(&variant, &InitConfig { dirac: true, seed: 0 }));
+    let content_hash = state_md5(&state);
+    let core = Arc::new(NativeShared::new(variant));
+
+    let mut levels: Vec<ServeLevel> = Vec::with_capacity(cfg.max_batch_levels.len());
+    let mut baseline: Option<(f64, Vec<String>)> = None; // (wall_s, md5s) of levels[0]
+    for &max_batch in &cfg.max_batch_levels {
+        if obs.cancelled() {
+            return Err(Cancelled.into());
+        }
+        let engine = Engine::new(EngineConfig {
+            job_slots: 1,
+            batcher: BatcherConfig {
+                max_batch,
+                max_wait_us: cfg.max_wait_us,
+                queue_cap: cfg.queue_cap,
+                kernel_threads: 0,
+            },
+            ..EngineConfig::default()
+        });
+        engine.registry().insert(WarmModel {
+            id: "bench".into(),
+            content_hash: content_hash.clone(),
+            variant_name: cfg.variant.clone(),
+            params,
+            path: PathBuf::from("synthetic"),
+            config: Json::Null,
+            seed: String::new(),
+            state: Arc::clone(&state),
+            shared: Arc::clone(&core),
+        });
+        let spec = |index: usize| {
+            JobSpec::PredictOne(PredictOneJob {
+                model: "bench".into(),
+                index,
+                data: DataKind::Cifar10,
+                test_n: Some(test_n),
+            })
+        };
+        // Untimed warmup: batcher thread spawn, dataset generation, first
+        // touch of the eval plan — §3.7 applied to serving.
+        engine.submit(spec(0)).wait().context("serve warmup request")?;
+
+        let before = counters(&engine)?;
+        let t0 = Instant::now();
+        let per_client: Vec<Result<(Histogram, Vec<String>)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    let engine = &engine;
+                    let spec = &spec;
+                    s.spawn(move || -> Result<(Histogram, Vec<String>)> {
+                        let mut hist = Histogram::new();
+                        let mut md5s = Vec::with_capacity(requests);
+                        for r in 0..requests {
+                            let index = (c * requests + r) % test_n;
+                            let result =
+                                engine.submit_from(c as u64 + 1, spec(index)).wait()?;
+                            match result {
+                                JobResult::PredictOne { probs_md5, latency_us, .. } => {
+                                    hist.record(latency_us);
+                                    md5s.push(probs_md5);
+                                }
+                                other => {
+                                    bail!("predict_one returned a {} result", other.kind_name())
+                                }
+                            }
+                        }
+                        Ok((hist, md5s))
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("serve client thread panicked"))
+                .collect()
+        });
+        let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+        let after = counters(&engine)?;
+
+        let mut latency = Histogram::new();
+        let mut md5s: Vec<String> = Vec::with_capacity(clients * requests);
+        for r in per_client {
+            let (h, m) = r?;
+            latency.merge(&h);
+            md5s.extend(m);
+        }
+        let batches = after.batches.saturating_sub(before.batches);
+        let coalesced = after.coalesced.saturating_sub(before.coalesced);
+        let total = clients * requests;
+        let (base_wall, bit_identical) = match &baseline {
+            None => (wall_s, true),
+            Some((w0, m0)) => (*w0, *m0 == md5s),
+        };
+        if baseline.is_none() {
+            baseline = Some((wall_s, md5s));
+        }
+        let level = ServeLevel {
+            max_batch,
+            wall_s,
+            req_per_s: total as f64 / wall_s,
+            batches,
+            mean_batch: if batches > 0 { coalesced as f64 / batches as f64 } else { 0.0 },
+            rejected: after.rejected.saturating_sub(before.rejected),
+            latency,
+            speedup_vs_b1: base_wall / wall_s,
+            bit_identical_to_b1: bit_identical,
+        };
+        obs.on_log(&format!(
+            "[bench] serve level max_batch={max_batch} done in {wall_s:.2}s \
+             ({:.0} req/s, mean batch {:.2}, p99 {:.0}µs)",
+            level.req_per_s,
+            level.mean_batch,
+            level.latency.quantile(0.99),
+        ));
+        levels.push(level);
+    }
+    let mut effective = cfg.clone();
+    effective.clients = clients;
+    effective.requests = requests;
+    effective.test_n = test_n;
+    Ok(ServeReport {
+        tag: cfg.tag.clone().unwrap_or_else(|| "native_serve".into()),
+        backend_name: "native".into(),
+        variant: cfg.variant.clone(),
+        cores: available_cores(),
+        config: effective,
+        levels,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn minimal_doc(schema: &str, wall: f64) -> Json {
+        let lat = r#"{"n": 4, "mean_us": 100.0, "min_us": 50.0, "max_us": 200.0,
+                      "p50_us": 100.0, "p90_us": 180.0, "p99_us": 200.0}"#;
+        let s = format!(
+            r#"{{
+              "schema": "{schema}", "tag": "t", "backend": "native", "variant": "nano",
+              "created_unix": 0,
+              "protocol": {{"clients": 2, "requests_per_client": 2,
+                            "max_batch_levels": [1], "max_wait_us": 2000,
+                            "queue_cap": 256, "test_n": 4, "data": "synthetic-cifar"}},
+              "env": {{"cores": 4, "os": "linux", "arch": "x86_64"}},
+              "levels": [{{"max_batch": 1, "wall_s": {wall}, "req_per_s": 4.0,
+                           "batches": 4, "mean_batch": 1.0, "rejected": 0,
+                           "latency": {lat},
+                           "speedup_vs_b1": 1.0, "bit_identical_to_b1": true}}]
+            }}"#
+        );
+        parse(&s).unwrap()
+    }
+
+    #[test]
+    fn validate_serve_accepts_minimal_and_rejects_damage() {
+        validate_serve(&minimal_doc(SERVE_SCHEMA, 1.0)).unwrap();
+        assert!(validate_serve(&minimal_doc("airbench.bench/2", 1.0)).is_err());
+        assert!(validate_serve(&minimal_doc(SERVE_SCHEMA, 0.0)).is_err());
+        assert!(validate_serve(&parse("{}").unwrap()).is_err());
+    }
+
+    // run_serve_bench itself is covered end-to-end (tiny protocol) by
+    // tests/serve_batch.rs — it needs a compiled engine.
+}

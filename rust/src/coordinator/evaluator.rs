@@ -36,6 +36,10 @@ pub struct EvalOutput {
     /// view is always one of the evaluated views — so it costs nothing
     /// (EXPERIMENTS.md §Perf iteration 4).
     pub accuracy_identity: f64,
+    /// (N, num_classes) softmax probabilities of the identity view alone —
+    /// the no-TTA counterpart of `probs`. Ensemble predicts average these
+    /// across members to report an ensemble `accuracy_no_tta`.
+    pub probs_identity: Tensor,
 }
 
 /// Which TTA views a level evaluates (subset of [`TTA_VIEWS`], with
@@ -209,11 +213,14 @@ pub fn evaluate_source_observed(
     let (_, accuracy_identity) = argmax_acc(&identity_logits);
     let mut probs = logits_sum;
     softmax_rows(&mut probs);
+    let mut probs_identity = identity_logits;
+    softmax_rows(&mut probs_identity);
     Ok(EvalOutput {
         probs,
         predictions,
         accuracy,
         accuracy_identity,
+        probs_identity,
     })
 }
 

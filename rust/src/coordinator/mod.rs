@@ -18,6 +18,6 @@ pub mod trainer;
 pub use evaluator::{evaluate, evaluate_observed, evaluate_source, EvalOutput};
 pub use fleet::{fleet_budget, fleet_seeds, run_fleet, run_fleet_parallel, run_study, FleetResult};
 pub use lookahead::LookaheadState;
-pub use observer::{is_cancelled, Cancelled, NullObserver, Observer};
+pub use observer::{is_cancelled, is_overloaded, Cancelled, NullObserver, Observer, Overloaded};
 pub use schedule::{AlphaSchedule, DecoupledHyper, Triangle};
 pub use trainer::{train, train_full, train_run, warmup, EpochLog, PhaseTimes, TrainResult};

@@ -86,6 +86,32 @@ pub fn is_cancelled(err: &anyhow::Error) -> bool {
     err.chain().any(|c| c == CANCELLED_MSG)
 }
 
+/// Typed rejection of an admission-controlled request: the serve batcher's
+/// bounded queue is full, so the request was refused *instead of* growing
+/// memory without bound (DESIGN.md §12). Same marker-message pattern as
+/// [`Cancelled`]: construct with `Err(Overloaded.into())`, detect with
+/// [`is_overloaded`] after context layers were attached.
+#[derive(Clone, Copy, Debug)]
+pub struct Overloaded;
+
+/// The exact marker message [`Overloaded`] renders with — distinctive for
+/// the same reason as [`CANCELLED_MSG`]; the job engine maps it to the wire
+/// message `"overloaded"` at the API boundary.
+pub const OVERLOADED_MSG: &str = "airbench: request rejected (admission queue full)";
+
+impl std::fmt::Display for Overloaded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(OVERLOADED_MSG)
+    }
+}
+
+impl std::error::Error for Overloaded {}
+
+/// Whether `err` is (rooted in) an admission-control rejection.
+pub fn is_overloaded(err: &anyhow::Error) -> bool {
+    err.chain().any(|c| c == OVERLOADED_MSG)
+}
+
 /// Adapter a fleet wraps around its observer when driving the per-run
 /// trainings: epoch-level events of individual runs are suppressed (a
 /// fleet reports per-*run* completions), log lines and the cancellation
@@ -157,6 +183,19 @@ mod tests {
         let e = r.context("fleet run 3 failed").unwrap_err();
         assert!(is_cancelled(&e));
         assert!(!is_cancelled(&anyhow::anyhow!("disk on fire")));
+    }
+
+    #[test]
+    fn overloaded_error_is_detectable_and_distinct() {
+        use anyhow::Context;
+        let r: anyhow::Result<()> = Err(Overloaded.into());
+        let e = r.context("predict_one admission").unwrap_err();
+        assert!(is_overloaded(&e));
+        assert!(!is_cancelled(&e), "overloaded must not read as cancelled");
+        assert!(!is_overloaded(&anyhow::anyhow!("disk on fire")));
+        assert!(!is_overloaded(
+            &anyhow::Error::from(Cancelled).context("ctx")
+        ));
     }
 
     #[test]

@@ -22,7 +22,11 @@
 //! * `bench [--fleet]` — the §3.7 benchmark harness (BENCHMARKS.md).
 //! * `info [--variant NAME]` — inspect the AOT manifest / variant table.
 //! * `serve [--addr host:port] [--slots N]` — the long-lived job daemon:
-//!   newline-delimited JSON `JobSpec`s in, `Event` JSON out.
+//!   newline-delimited JSON `JobSpec`s in, `Event` JSON out. `--max-batch`
+//!   / `--max-wait-us` / `--queue-cap` shape the predict micro-batcher
+//!   (DESIGN.md §12).
+//! * `metrics` — the serving counters/latency snapshot (the CLI face of
+//!   the serve-protocol `{"job":"metrics"}` endpoint).
 //!
 //! Config resolution follows the documented precedence **CLI > env >
 //! config file > default** (`config::resolve`): bare `key=value` pairs
@@ -36,7 +40,7 @@ use anyhow::{bail, Context, Result};
 
 use airbench::api::{
     BenchJob, Engine, EngineConfig, EvalJob, Event, FleetBenchJob, FleetJob, InfoJob, JobResult,
-    JobSpec, LoadJob, PredictJob, SaveJob, StudyJob, TrainJob,
+    JobSpec, LoadJob, MetricsJob, PredictJob, SaveJob, ServeBenchJob, StudyJob, TrainJob,
 };
 use airbench::cli::{find_command, Args, Command};
 use airbench::config::{process_env, ConfigLayers, TrainConfig, TtaLevel};
@@ -88,7 +92,7 @@ static COMMANDS: &[Command] = &[
     },
     Command {
         name: "bench",
-        summary: "§3.7 benchmark harness writing BENCH_<tag>.json (--fleet for the fleet phase)",
+        summary: "§3.7 benchmark harness writing BENCH_<tag>.json (--fleet | --serve phases)",
         run: cmd_bench,
     },
     Command {
@@ -100,6 +104,11 @@ static COMMANDS: &[Command] = &[
         name: "serve",
         summary: "job daemon: JobSpec JSON lines in (stdin or --addr), event JSON out",
         run: cmd_serve,
+    },
+    Command {
+        name: "metrics",
+        summary: "serving counters + latency quantiles from an engine ({\"job\":\"metrics\"})",
+        run: cmd_metrics,
     },
 ];
 
@@ -125,8 +134,9 @@ train:  --save model.ckpt --no-warmup [key=value ...] (writes the\n\
 eval:   --load ckpt (versioned model.ckpt or legacy ckpt.bin),\n\
         --precision f32|bf16 (bf16: half-storage GEMM operands,\n\
         f32 accumulate — eval only, native backend)\n\
-predict: --model ID | --load model.ckpt, --tta none|mirror|multicrop,\n\
-        --test-n N, --precision f32|bf16\n\
+predict: --model ID | --load model.ckpt | --models a,b,c (ensemble:\n\
+        probability-average over warm registry entries),\n\
+        --tta none|mirror|multicrop, --test-n N, --precision f32|bf16\n\
 save:   --out model.ckpt, source: --model ID | --load ckpt\n\
 load:   --path model.ckpt --id NAME (default id m<hash12>)\n\
 fleet:  --runs N --log fleet.json --parallel N (alias --fleet-parallel,\n\
@@ -141,11 +151,18 @@ study:  --policies a,b,... (comma-separated compact spellings: flip mode\n\
         forked seed table, so comparisons are seed-paired (DESIGN.md §11)\n\
 bench:  --runs --steps --warmup --epochs --tag --out --train-n --test-n\n\
         (see BENCHMARKS.md); bench --fleet adds --fleet-runs N\n\
-        --parallel-levels 1,2,4\n\
+        --parallel-levels 1,2,4; bench --serve adds --clients N\n\
+        --requests N --max-batch-levels 1,8,32 --max-wait-us T\n\
+        --queue-cap N (serve-bench load phase, BENCHMARKS.md)\n\
 info:   --variant NAME --hlo\n\
 serve:  --addr host:port (TCP; default: stdin/stdout NDJSON session)\n\
         --slots N concurrent job slots (default 0 = auto: one per core;\n\
         each job's kernels get cores/slots threads)\n\
+        --max-batch N coalesce up to N predict_one requests per batched\n\
+        eval call (0 = model eval batch), --max-wait-us T flush deadline\n\
+        (latency SLO, default 2000), --queue-cap N admission queue bound\n\
+        (overfull submissions get a typed `overloaded` rejection)\n\
+metrics: (in-process snapshot; over serve, send {\"job\":\"metrics\"})\n\
 \n\
 env:    AIRBENCH_BACKEND / AIRBENCH_VARIANT / AIRBENCH_EPOCHS /\n\
         AIRBENCH_WORKERS / AIRBENCH_PREFETCH_DEPTH /\n\
@@ -268,8 +285,16 @@ fn cmd_eval(args: &Args) -> Result<()> {
 fn cmd_predict(args: &Args) -> Result<()> {
     let model = args.options.get("model").cloned();
     let load = args.options.get("load").map(PathBuf::from);
-    if model.is_none() && load.is_none() {
-        bail!("predict requires --model <registry id> or --load <checkpoint>");
+    let models: Vec<String> = args
+        .options
+        .get("models")
+        .map(|s| s.split(',').map(|m| m.trim().to_string()).filter(|m| !m.is_empty()).collect())
+        .unwrap_or_default();
+    if model.is_none() && load.is_none() && models.is_empty() {
+        bail!(
+            "predict requires --model <registry id>, --load <checkpoint>, \
+             or --models <id,id,...> (ensemble)"
+        );
     }
     let tta_s = args.opt("tta", "none");
     let Some(tta) = TtaLevel::parse(&tta_s) else {
@@ -282,6 +307,7 @@ fn cmd_predict(args: &Args) -> Result<()> {
     let spec = JobSpec::Predict(PredictJob {
         model,
         load,
+        models,
         data: data_kind(args)?,
         test_n,
         tta,
@@ -368,6 +394,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     if args.flag("fleet") {
         return cmd_bench_fleet(args);
     }
+    if args.flag("serve") {
+        return cmd_bench_serve(args);
+    }
     let d = airbench::bench::BenchConfig::default();
     let config = airbench::bench::BenchConfig {
         variant: args.opt("variant", &d.variant),
@@ -401,6 +430,22 @@ fn cmd_bench_fleet(args: &Args) -> Result<()> {
     run_and_render(args, JobSpec::FleetBench(FleetBenchJob { config, write: true }))
 }
 
+fn cmd_bench_serve(args: &Args) -> Result<()> {
+    let d = airbench::bench::ServeBenchConfig::default();
+    let config = airbench::bench::ServeBenchConfig {
+        variant: args.opt("variant", &d.variant),
+        tag: args.options.get("tag").cloned(),
+        clients: args.opt_usize("clients", d.clients)?.max(1),
+        requests: args.opt_usize("requests", d.requests)?.max(1),
+        max_batch_levels: args.opt_usize_list("max-batch-levels", &d.max_batch_levels)?,
+        max_wait_us: args.opt_u64("max-wait-us", d.max_wait_us)?,
+        queue_cap: args.opt_usize("queue-cap", d.queue_cap)?.max(1),
+        test_n: args.opt_usize("test-n", d.test_n)?.max(1),
+        out_dir: args.options.get("out").map(PathBuf::from).unwrap_or(d.out_dir),
+    };
+    run_and_render(args, JobSpec::ServeBench(ServeBenchJob { config, write: true }))
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     let spec = JobSpec::Info(InfoJob {
         variant: args.options.get("variant").cloned(),
@@ -410,8 +455,15 @@ fn cmd_info(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    let bd = airbench::serve::batcher::BatcherConfig::default();
     let engine = Engine::new(EngineConfig {
         job_slots: args.opt_usize("slots", 0)?,
+        batcher: airbench::serve::batcher::BatcherConfig {
+            max_batch: args.opt_usize("max-batch", bd.max_batch)?,
+            max_wait_us: args.opt_u64("max-wait-us", bd.max_wait_us)?,
+            queue_cap: args.opt_usize("queue-cap", bd.queue_cap)?.max(1),
+            ..bd
+        },
         ..EngineConfig::default()
     });
     if let Some(addr) = args.options.get("addr") {
@@ -435,6 +487,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
         Ok(())
     }
+}
+
+fn cmd_metrics(args: &Args) -> Result<()> {
+    // An in-process engine starts with zeroed counters; the command exists
+    // so the CLI mirrors the serve-protocol `{"job":"metrics"}` endpoint
+    // (and so `--json` shows the exact snapshot schema).
+    run_and_render(args, JobSpec::Metrics(MetricsJob))
 }
 
 // ---------------------------------------------------------------------------
@@ -688,6 +747,78 @@ fn render_result(result: &JobResult) {
                 pct(*accuracy),
                 pct(*accuracy_no_tta),
             );
+        }
+        JobResult::PredictOne {
+            model,
+            index,
+            prediction,
+            probs,
+            probs_md5,
+            latency_us,
+            ..
+        } => {
+            let confidence = probs.get(*prediction as usize).copied().unwrap_or(0.0);
+            println!(
+                "predict_one[{model}] example {index}: class {prediction} \
+                 (p={confidence:.4}, {latency_us:.0}us, probs md5 {probs_md5})"
+            );
+        }
+        JobResult::Metrics { data } => {
+            println!(
+                "serve metrics: {} requests ({} rejected), {} batches \
+                 ({} coalesced, mean batch {:.2}), queue depth {}",
+                jnum(data, "requests") as u64,
+                jnum(data, "rejected") as u64,
+                jnum(data, "batches") as u64,
+                jnum(data, "coalesced") as u64,
+                jnum(data, "mean_batch"),
+                jnum(data, "queue_depth") as u64,
+            );
+            if let Some(latency) = data.opt("latency") {
+                for phase in ["queue_us", "exec_us", "request_us"] {
+                    if let Some(h) = latency.opt(phase) {
+                        println!(
+                            "  {phase:<12} n={:<6} mean {:>9.1}  p50 {:>9.1}  \
+                             p90 {:>9.1}  p99 {:>9.1}  max {:>9.1}",
+                            jnum(h, "n") as u64,
+                            jnum(h, "mean_us"),
+                            jnum(h, "p50_us"),
+                            jnum(h, "p90_us"),
+                            jnum(h, "p99_us"),
+                            jnum(h, "max_us"),
+                        );
+                    }
+                }
+            }
+        }
+        JobResult::ServeBench { report, path } => {
+            println!(
+                "serve bench: backend={} variant={} clients={} x {} requests, cores={}",
+                report.backend_name,
+                report.variant,
+                report.config.clients,
+                report.config.requests,
+                report.cores
+            );
+            for l in &report.levels {
+                println!(
+                    "  max_batch {:>3}: {:>7.2}s wall, {:>8.1} req/s, mean batch {:>5.2}, \
+                     p50 {:>7.1}us p99 {:>8.1}us, speedup {:>5.2}x, rejected {}, \
+                     bit-identical: {}",
+                    l.max_batch,
+                    l.wall_s,
+                    l.req_per_s,
+                    l.mean_batch,
+                    l.latency.quantile(0.50),
+                    l.latency.quantile(0.99),
+                    l.speedup_vs_b1,
+                    l.rejected,
+                    l.bit_identical_to_b1,
+                );
+            }
+            if let Some(p) = path {
+                println!("wrote {}", p.display());
+            }
         }
         JobResult::Info { data } => render_info(data),
     }

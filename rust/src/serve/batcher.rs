@@ -1,0 +1,397 @@
+//! Request coalescing for single-image Predict serving (DESIGN.md §12).
+//!
+//! A [`Batcher`] owns one warm model plus one dedicated worker thread. Serve
+//! sessions [`Batcher::submit`] single images; the worker coalesces queued
+//! requests into one zero-padded `[batch_eval, 3, hw, hw]` tensor and issues
+//! a single [`crate::runtime::Backend::eval_logits`] call, then de-interleaves
+//! the logits rows back to the requesters. Two flush triggers implement the
+//! latency SLO:
+//!
+//! * **size** — `max_batch` requests are queued (a full GEMM-friendly batch);
+//! * **deadline** — the *oldest* queued request has waited `max_wait_us`
+//!   microseconds, so a lone request never stalls longer than the SLO waiting
+//!   for company.
+//!
+//! **Bit-identity.** Eval is per-example independent: BN uses running stats,
+//! every per-example reduction has a fixed order, and the evaluator's own
+//! partial-batch contract already guarantees a row's logits do not depend on
+//! the other rows (padding rows are zero there too). The batcher packs rows
+//! exactly like [`crate::coordinator::evaluate`] packs a partial final batch,
+//! so a request's logits are bit-identical at every `max_batch`, `max_wait_us`
+//! and kernel-thread setting — pinned by `tests/serve_batch.rs`.
+//!
+//! **Admission control.** The queue is bounded (`queue_cap`): beyond it,
+//! [`Batcher::submit`] fails with the typed
+//! [`Overloaded`](crate::coordinator::observer::Overloaded) rejection instead
+//! of growing memory without bound. Within the queue, scheduling is fair:
+//! one FIFO per tenant (serve session / synthetic client), drained
+//! round-robin one request at a time, so a flooding tenant cannot starve a
+//! polite one — it can only fill its own FIFO.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::observer::Overloaded;
+use crate::runtime::native::{NativeBackend, NativeShared};
+use crate::runtime::{Backend, ModelState};
+use crate::serve::metrics::ServeMetrics;
+use crate::tensor::Tensor;
+
+/// Knobs of one batcher (CLI: `serve --max-batch --max-wait-us`).
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Flush when this many requests are queued. `0` = the model's lowered
+    /// `batch_eval` (the largest batch one eval call can carry); larger
+    /// values are clamped down to it.
+    pub max_batch: usize,
+    /// Flush when the oldest queued request has waited this long (µs). The
+    /// worst-case queueing delay a request can pay to help fill a batch.
+    pub max_wait_us: u64,
+    /// Bounded admission queue across all tenants; beyond it `submit`
+    /// rejects with `Overloaded`.
+    pub queue_cap: usize,
+    /// Kernel threads for the worker's backend (`0` = process default).
+    pub kernel_threads: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> BatcherConfig {
+        BatcherConfig {
+            max_batch: 0,
+            max_wait_us: 2_000,
+            queue_cap: 256,
+            kernel_threads: 0,
+        }
+    }
+}
+
+/// A coalesced reply: the request's raw logits row (`num_classes` floats),
+/// bit-identical to an unbatched eval of the same image.
+pub type LogitsReply = Result<Vec<f32>>;
+
+struct Pending {
+    image: Vec<f32>,
+    enqueued: Instant,
+    tx: Sender<LogitsReply>,
+}
+
+#[derive(Default)]
+struct Queues {
+    /// FIFO per tenant (only tenants with queued work have an entry).
+    per_tenant: BTreeMap<u64, VecDeque<Pending>>,
+    /// Round-robin rotation over tenants in `per_tenant`.
+    rr: VecDeque<u64>,
+    /// Total queued requests across tenants.
+    len: usize,
+    shutdown: bool,
+}
+
+impl Queues {
+    /// Enqueue arrival instant of the oldest queued request (each tenant
+    /// FIFO's front is its oldest, so the minimum over fronts is global).
+    fn oldest(&self) -> Instant {
+        self.per_tenant
+            .values()
+            .map(|q| q.front().expect("tenant queues are never empty").enqueued)
+            .min()
+            .expect("oldest() is only called with queued work")
+    }
+
+    /// Dequeue up to `max` requests: round-robin across tenants, FIFO
+    /// within each — one request per tenant per rotation.
+    fn take_round_robin(&mut self, max: usize) -> Vec<Pending> {
+        let mut out = Vec::with_capacity(max.min(self.len));
+        while out.len() < max && self.len > 0 {
+            let t = self.rr.pop_front().expect("rr tracks queued tenants");
+            let q = self.per_tenant.get_mut(&t).expect("rr entry has a queue");
+            out.push(q.pop_front().expect("tracked queues are non-empty"));
+            self.len -= 1;
+            if q.is_empty() {
+                self.per_tenant.remove(&t);
+            } else {
+                self.rr.push_back(t);
+            }
+        }
+        out
+    }
+}
+
+struct Shared {
+    queues: Mutex<Queues>,
+    wake: Condvar,
+    max_batch: usize,
+    max_wait: Duration,
+    queue_cap: usize,
+    metrics: Arc<ServeMetrics>,
+}
+
+/// One warm model's coalescing front-end: bounded fair admission, a worker
+/// thread flushing on size or deadline, and per-request de-interleaved
+/// replies. Dropping the batcher drains the queue and joins the worker.
+pub struct Batcher {
+    shared: Arc<Shared>,
+    image_len: usize,
+    image_hw: usize,
+    num_classes: usize,
+    max_batch: usize,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Batcher {
+    /// Spawn a batcher for a warm model: `core` is the model's resolved
+    /// native variant (an `Arc` clone of the registry entry's), `state` its
+    /// weights. Fails if `state` does not match the core's variant.
+    pub fn new(
+        core: Arc<NativeShared>,
+        state: Arc<ModelState>,
+        cfg: BatcherConfig,
+        metrics: Arc<ServeMetrics>,
+    ) -> Result<Batcher> {
+        let variant = core.variant().clone();
+        state
+            .validate(&variant)
+            .context("batcher warm-model state")?;
+        let max_batch = match cfg.max_batch {
+            0 => variant.batch_eval,
+            m => m.min(variant.batch_eval),
+        }
+        .max(1);
+        let shared = Arc::new(Shared {
+            queues: Mutex::new(Queues::default()),
+            wake: Condvar::new(),
+            max_batch,
+            max_wait: Duration::from_micros(cfg.max_wait_us),
+            queue_cap: cfg.queue_cap.max(1),
+            metrics,
+        });
+        let mut backend = NativeBackend::from_shared(core);
+        if cfg.kernel_threads > 0 {
+            backend = backend.with_threads(cfg.kernel_threads);
+        }
+        let worker = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("airbench-batcher".to_string())
+                .spawn(move || worker_loop(&shared, backend, &state))
+                .context("spawning the batcher worker thread")?
+        };
+        Ok(Batcher {
+            shared,
+            image_len: 3 * variant.image_hw * variant.image_hw,
+            image_hw: variant.image_hw,
+            num_classes: variant.num_classes,
+            max_batch,
+            worker: Some(worker),
+        })
+    }
+
+    /// The resolved flush size (config clamped into `1..=batch_eval`).
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Classifier output count of the served model (reply row length).
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    /// Enqueue one `[3, hw, hw]` image for `tenant`; the reply arrives on
+    /// the returned channel once its batch flushes. Fails fast with the
+    /// typed `Overloaded` rejection when the bounded queue is full.
+    pub fn submit(&self, tenant: u64, image: Vec<f32>) -> Result<Receiver<LogitsReply>> {
+        if image.len() != self.image_len {
+            bail!(
+                "predict_one image must be 3x{hw}x{hw} = {} floats, got {}",
+                self.image_len,
+                image.len(),
+                hw = self.image_hw,
+            );
+        }
+        let (tx, rx) = channel();
+        {
+            let mut g = self.shared.queues.lock().unwrap();
+            if g.shutdown {
+                bail!("batcher is shutting down");
+            }
+            if g.len >= self.shared.queue_cap {
+                self.shared.metrics.inc_rejected();
+                return Err(Overloaded.into());
+            }
+            let q = g.per_tenant.entry(tenant).or_default();
+            if q.is_empty() {
+                g.rr.push_back(tenant);
+            }
+            q.push_back(Pending {
+                image,
+                enqueued: Instant::now(),
+                tx,
+            });
+            g.len += 1;
+            self.shared.metrics.inc_request();
+            self.shared.metrics.set_queue_depth(g.len as u64);
+        }
+        self.shared.wake.notify_all();
+        Ok(rx)
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.shared.queues.lock().unwrap().shutdown = true;
+        self.shared.wake.notify_all();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The flush loop: wait for work, then for `max_batch` requests or the
+/// oldest request's deadline (whichever first), collect round-robin, pack,
+/// eval once, de-interleave. On shutdown the queue is drained — every
+/// already-admitted request still gets its reply.
+fn worker_loop(shared: &Shared, mut backend: NativeBackend, state: &ModelState) {
+    let b = backend.batch_eval();
+    let (hw, k) = {
+        let v = backend.variant();
+        (v.image_hw, v.num_classes)
+    };
+    let row = 3 * hw * hw;
+    let mut batch = Tensor::zeros(&[b, 3, hw, hw]);
+    loop {
+        let taken = {
+            let mut g = shared.queues.lock().unwrap();
+            loop {
+                if g.len == 0 {
+                    if g.shutdown {
+                        return;
+                    }
+                    g = shared.wake.wait(g).unwrap();
+                    continue;
+                }
+                if g.len >= shared.max_batch || g.shutdown {
+                    break;
+                }
+                let deadline = g.oldest() + shared.max_wait;
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                g = shared.wake.wait_timeout(g, deadline - now).unwrap().0;
+            }
+            let taken = g.take_round_robin(shared.max_batch);
+            shared.metrics.set_queue_depth(g.len as u64);
+            taken
+        };
+        let m = taken.len();
+        let collected = Instant::now();
+        for p in &taken {
+            shared
+                .metrics
+                .observe_queue_wait((collected - p.enqueued).as_secs_f64() * 1e6);
+        }
+        for (i, p) in taken.iter().enumerate() {
+            batch.data_mut()[i * row..(i + 1) * row].copy_from_slice(&p.image);
+        }
+        for r in m..b {
+            batch.image_mut(r).fill(0.0);
+        }
+        let t0 = Instant::now();
+        let out = backend.eval_logits(state, &batch);
+        shared
+            .metrics
+            .observe_exec(t0.elapsed().as_secs_f64() * 1e6);
+        shared.metrics.inc_batch(m as u64);
+        match out {
+            Ok(logits) => {
+                let src = logits.data();
+                for (i, p) in taken.into_iter().enumerate() {
+                    let _ = p.tx.send(Ok(src[i * k..(i + 1) * k].to_vec()));
+                }
+            }
+            Err(e) => {
+                let msg = format!("batched eval failed: {e:#}");
+                for p in taken {
+                    let _ = p.tx.send(Err(anyhow::anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pending(tag: f32) -> Pending {
+        let (tx, _rx) = channel();
+        // Leak the receiver side deliberately: these queue-logic tests never
+        // flush, and a dropped rx only makes `send` a no-op.
+        std::mem::forget(_rx);
+        Pending {
+            image: vec![tag],
+            enqueued: Instant::now(),
+            tx,
+        }
+    }
+
+    fn enqueue(g: &mut Queues, tenant: u64, tag: f32) {
+        let q = g.per_tenant.entry(tenant).or_default();
+        if q.is_empty() {
+            g.rr.push_back(tenant);
+        }
+        q.push_back(pending(tag));
+        g.len += 1;
+    }
+
+    #[test]
+    fn round_robin_is_fair_across_tenants_fifo_within() {
+        let mut g = Queues::default();
+        // Tenant 1 floods 4 requests before tenant 2's single and tenant
+        // 3's pair arrive.
+        for tag in [10.0, 11.0, 12.0, 13.0] {
+            enqueue(&mut g, 1, tag);
+        }
+        enqueue(&mut g, 2, 20.0);
+        enqueue(&mut g, 3, 30.0);
+        enqueue(&mut g, 3, 31.0);
+
+        let taken = g.take_round_robin(5);
+        let tags: Vec<f32> = taken.iter().map(|p| p.image[0]).collect();
+        // One per tenant per rotation (1, 2, 3, then 1, 3 — tenant 2 is
+        // drained), FIFO inside each tenant.
+        assert_eq!(tags, vec![10.0, 20.0, 30.0, 11.0, 31.0]);
+        assert_eq!(g.len, 2);
+
+        // The flooding tenant's remainder comes out FIFO.
+        let rest = g.take_round_robin(10);
+        let tags: Vec<f32> = rest.iter().map(|p| p.image[0]).collect();
+        assert_eq!(tags, vec![12.0, 13.0]);
+        assert_eq!(g.len, 0);
+        assert!(g.per_tenant.is_empty());
+        assert!(g.rr.is_empty());
+    }
+
+    #[test]
+    fn oldest_scans_tenant_fronts() {
+        let mut g = Queues::default();
+        enqueue(&mut g, 7, 1.0);
+        std::thread::sleep(Duration::from_millis(2));
+        enqueue(&mut g, 3, 2.0);
+        let oldest = g.oldest();
+        // Tenant 7's front arrived first even though tenant 3 sorts first
+        // in the BTreeMap.
+        assert_eq!(
+            oldest,
+            g.per_tenant.get(&7).unwrap().front().unwrap().enqueued
+        );
+    }
+
+    // End-to-end batcher behavior (bit-identity vs the unbatched path,
+    // flush-on-size vs flush-on-deadline, Overloaded rejection) runs a real
+    // nano model in tests/serve_batch.rs.
+}

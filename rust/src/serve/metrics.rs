@@ -1,0 +1,160 @@
+//! Serving-tier observability: lock-cheap counters, gauges, and latency
+//! histograms shared by every batcher on an engine (DESIGN.md §12).
+//!
+//! One [`ServeMetrics`] lives on the job engine; every
+//! [`crate::serve::batcher::Batcher`] holds an `Arc` to it and the
+//! `{"job": "metrics"}` endpoint snapshots it. Counters and gauges are
+//! atomics (hot path: one `fetch_add` per request); the three latency
+//! distributions are [`crate::stats::Histogram`]s behind short-critical-
+//! section mutexes, giving streaming p50/p90/p99 without retaining samples.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::stats::Histogram;
+use crate::util::json::Json;
+
+/// Counters, gauges, and latency histograms for micro-batched serving.
+///
+/// All methods take `&self`; the struct is shared as `Arc<ServeMetrics>`
+/// across batcher workers, submitting sessions, and the metrics endpoint.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    /// Requests admitted into a batcher queue.
+    requests: AtomicU64,
+    /// Requests refused with the typed `Overloaded` rejection.
+    rejected: AtomicU64,
+    /// Batched `eval_logits` calls issued.
+    batches: AtomicU64,
+    /// Total requests served across all batches (`coalesced / batches` =
+    /// mean batch size).
+    coalesced: AtomicU64,
+    /// Current total queued requests across tenants (gauge).
+    queue_depth: AtomicU64,
+    /// Admission → batch-collection wait per request, µs.
+    queue_wait_us: Mutex<Histogram>,
+    /// Batched `eval_logits` wall time per flush, µs.
+    exec_us: Mutex<Histogram>,
+    /// End-to-end submit → reply latency per request, µs.
+    request_us: Mutex<Histogram>,
+}
+
+impl ServeMetrics {
+    /// Fresh all-zero metrics.
+    pub fn new() -> ServeMetrics {
+        ServeMetrics::default()
+    }
+
+    /// One request admitted.
+    pub fn inc_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request refused by admission control.
+    pub fn inc_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One batched eval flushed, serving `size` coalesced requests.
+    pub fn inc_batch(&self, size: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.coalesced.fetch_add(size, Ordering::Relaxed);
+    }
+
+    /// Update the queued-requests gauge.
+    pub fn set_queue_depth(&self, depth: u64) {
+        self.queue_depth.store(depth, Ordering::Relaxed);
+    }
+
+    /// Record one request's queue wait (admission → collection), µs.
+    pub fn observe_queue_wait(&self, us: f64) {
+        self.queue_wait_us.lock().unwrap().record(us);
+    }
+
+    /// Record one flush's batched eval wall time, µs.
+    pub fn observe_exec(&self, us: f64) {
+        self.exec_us.lock().unwrap().record(us);
+    }
+
+    /// Record one request's end-to-end latency (submit → reply), µs.
+    pub fn observe_request(&self, us: f64) {
+        self.request_us.lock().unwrap().record(us);
+    }
+
+    /// Requests refused so far (the CI load-smoke leg asserts 0).
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot as the metrics-result wire object: counters (`requests`,
+    /// `rejected`, `batches`, `coalesced`), the derived `mean_batch`, the
+    /// `queue_depth` gauge, and a `latency` block of three histogram
+    /// summaries (`queue_us`, `exec_us`, `request_us`), each
+    /// `{n, mean_us, min_us, max_us, p50_us, p90_us, p99_us}`.
+    pub fn snapshot(&self) -> Json {
+        let requests = self.requests.load(Ordering::Relaxed);
+        let rejected = self.rejected.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let coalesced = self.coalesced.load(Ordering::Relaxed);
+        let mean_batch = if batches == 0 {
+            0.0
+        } else {
+            coalesced as f64 / batches as f64
+        };
+        Json::obj(vec![
+            ("requests", Json::num(requests as f64)),
+            ("rejected", Json::num(rejected as f64)),
+            ("batches", Json::num(batches as f64)),
+            ("coalesced", Json::num(coalesced as f64)),
+            ("mean_batch", Json::num(mean_batch)),
+            (
+                "queue_depth",
+                Json::num(self.queue_depth.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "latency",
+                Json::obj(vec![
+                    ("queue_us", self.queue_wait_us.lock().unwrap().to_json()),
+                    ("exec_us", self.exec_us.lock().unwrap().to_json()),
+                    ("request_us", self.request_us.lock().unwrap().to_json()),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_counters_and_mean_batch() {
+        let m = ServeMetrics::new();
+        let empty = m.snapshot();
+        assert_eq!(empty.get("requests").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(empty.get("mean_batch").unwrap().as_f64().unwrap(), 0.0);
+
+        for _ in 0..6 {
+            m.inc_request();
+        }
+        m.inc_rejected();
+        m.inc_batch(4);
+        m.inc_batch(2);
+        m.set_queue_depth(3);
+        m.observe_queue_wait(120.0);
+        m.observe_exec(800.0);
+        m.observe_request(950.0);
+
+        let s = m.snapshot();
+        assert_eq!(s.get("requests").unwrap().as_f64().unwrap(), 6.0);
+        assert_eq!(s.get("rejected").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(s.get("batches").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(s.get("mean_batch").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(s.get("queue_depth").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(m.rejected(), 1);
+        let lat = s.get("latency").unwrap();
+        for key in ["queue_us", "exec_us", "request_us"] {
+            assert_eq!(lat.get(key).unwrap().get("n").unwrap().as_f64().unwrap(), 1.0);
+        }
+    }
+}

@@ -25,16 +25,35 @@
 //! `error` event whose message is `"cancelled"`). Malformed lines are
 //! answered with an `error` event carrying `"job": 0` (the reserved
 //! session-level id) — the session itself keeps going.
+//!
+//! The two transports differ in one deliberate way (DESIGN.md §12): a
+//! **TCP** session whose input ends — the peer closed or dropped the
+//! connection — cancels its still-running jobs through their
+//! [`CancelToken`]s before joining the forwarders, so a vanished client
+//! cannot leave the engine training into a closed socket. A **stdin**
+//! session keeps the original drain semantics (EOF then wait for results):
+//! that is the documented one-shot batch mode the CI smoke legs pipe jobs
+//! through. TCP clients must therefore hold their connection open until
+//! the results they want have arrived.
+//!
+//! Micro-batched single-image predicts live in [`batcher`] (request
+//! coalescing under a latency SLO) with shared [`metrics`] — every TCP/
+//! stdin session is a batcher *tenant* (fair FIFO-per-tenant admission,
+//! keyed by the session id the transport assigns).
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpListener;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
 use crate::api::{CancelToken, Engine, Event, JobSpec};
 use crate::util::json::{parse, Json};
+
+pub mod batcher;
+pub mod metrics;
 
 /// What one serve session processed.
 #[derive(Clone, Copy, Debug, Default)]
@@ -84,11 +103,25 @@ fn reap_finished(
     }
 }
 
+/// Per-session knobs of [`run_session_opts`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SessionOptions {
+    /// Tenant id this session's `predict_one` requests are admitted under
+    /// (fair FIFO-per-tenant batcher scheduling). The transport assigns it:
+    /// stdin uses 0, TCP a per-connection counter.
+    pub tenant: u64,
+    /// Cancel in-flight jobs when the input ends (TCP semantics: an ended
+    /// input means the peer is gone). `false` keeps drain semantics (stdin
+    /// one-shot batch mode).
+    pub cancel_on_disconnect: bool,
+}
+
 /// Run one serve session: read newline-delimited [`JobSpec`] JSON from
 /// `input`, submit each to `engine`, and stream every job's [`Event`]s as
 /// JSON lines to `output` (shared with per-job forwarder threads, hence
 /// the `Arc<Mutex<W>>`). Returns when `input` is exhausted **and** every
-/// submitted job has terminated.
+/// submitted job has terminated. Equivalent to [`run_session_opts`] with
+/// default options (tenant 0, drain on EOF).
 ///
 /// In-flight jobs per session are bounded (a multiple of the engine's job
 /// slots): beyond the bound the session stops reading — natural
@@ -99,13 +132,39 @@ pub fn run_session<R: BufRead, W: Write + Send + 'static>(
     input: R,
     output: Arc<Mutex<W>>,
 ) -> Result<SessionStats> {
+    run_session_opts(engine, input, output, SessionOptions::default())
+}
+
+/// [`run_session`] with explicit [`SessionOptions`]. With
+/// `cancel_on_disconnect`, an ended input (EOF *or* read error) cancels
+/// every still-running job of this session via its [`CancelToken`] before
+/// the forwarders are joined — each such job terminates promptly with its
+/// usual `"cancelled"` error event (written best-effort to the possibly
+/// gone client).
+pub fn run_session_opts<R: BufRead, W: Write + Send + 'static>(
+    engine: &Engine,
+    input: R,
+    output: Arc<Mutex<W>>,
+    opts: SessionOptions,
+) -> Result<SessionStats> {
     let mut stats = SessionStats::default();
     let mut forwarders: Vec<(u64, std::thread::JoinHandle<()>)> = Vec::new();
     let mut cancels: BTreeMap<u64, CancelToken> = BTreeMap::new();
     let max_in_flight = engine.job_slots().saturating_mul(8).max(32);
+    let mut read_error: Option<anyhow::Error> = None;
 
     for line in input.lines() {
-        let line = line.context("reading the job stream")?;
+        let line = match line {
+            Ok(l) => l,
+            Err(e) => {
+                // The stream died mid-session (a dropped TCP connection
+                // lands here): stop reading, then run the same disconnect
+                // epilogue as EOF so in-flight jobs are not orphaned.
+                let err: Result<()> = Err(e.into());
+                read_error = Some(err.context("reading the job stream").unwrap_err());
+                break;
+            }
+        };
         let line = line.trim();
         if line.is_empty() {
             continue;
@@ -160,7 +219,7 @@ pub fn run_session<R: BufRead, W: Write + Send + 'static>(
                     std::thread::sleep(std::time::Duration::from_millis(10));
                     reap_finished(&mut forwarders, &mut cancels);
                 }
-                let handle = engine.submit(spec);
+                let handle = engine.submit_from(opts.tenant, spec);
                 let id = handle.id();
                 cancels.insert(id, handle.cancel_token());
                 stats.submitted += 1;
@@ -176,11 +235,23 @@ pub fn run_session<R: BufRead, W: Write + Send + 'static>(
             }
         }
     }
-    // Input closed: drain every job before returning.
+    // Input closed. TCP semantics: the peer is gone, so cancel everything
+    // still in flight (each job then terminates with its normal
+    // "cancelled" error event). Stdin semantics: drain — every job
+    // finishes and reports before the session returns.
+    if opts.cancel_on_disconnect {
+        reap_finished(&mut forwarders, &mut cancels);
+        for token in cancels.values() {
+            token.cancel();
+        }
+    }
     for (_id, f) in forwarders {
         let _ = f.join();
     }
-    Ok(stats)
+    match read_error {
+        Some(e) => Err(e),
+        None => Ok(stats),
+    }
 }
 
 /// Serve on stdin/stdout until stdin closes and all jobs drain.
@@ -192,8 +263,12 @@ pub fn serve_stdin(engine: &Engine) -> Result<SessionStats> {
 
 /// Serve on a TCP listener, one session per connection, forever. Sessions
 /// share `engine` (and therefore its job slots and caches); per-connection
-/// failures are logged to stderr and do not stop the daemon.
+/// failures are logged to stderr and do not stop the daemon. Each
+/// connection is its own batcher tenant (ids from a per-listener counter,
+/// starting at 1 so tenant 0 stays the stdin/CLI default), and a dropped
+/// connection cancels its in-flight jobs (see [`SessionOptions`]).
 pub fn serve_tcp(engine: &Engine, listener: TcpListener) -> Result<()> {
+    let next_tenant = AtomicU64::new(1);
     std::thread::scope(|s| {
         for conn in listener.incoming() {
             let stream = match conn {
@@ -203,6 +278,7 @@ pub fn serve_tcp(engine: &Engine, listener: TcpListener) -> Result<()> {
                     continue;
                 }
             };
+            let tenant = next_tenant.fetch_add(1, Ordering::Relaxed);
             let peer = stream
                 .peer_addr()
                 .map(|a| a.to_string())
@@ -218,7 +294,11 @@ pub fn serve_tcp(engine: &Engine, listener: TcpListener) -> Result<()> {
                     }
                 };
                 let writer = Arc::new(Mutex::new(stream));
-                match run_session(engine, reader, writer) {
+                let opts = SessionOptions {
+                    tenant,
+                    cancel_on_disconnect: true,
+                };
+                match run_session_opts(engine, reader, writer, opts) {
                     Ok(st) => eprintln!(
                         "[serve] {peer}: session done ({} submitted, {} rejected, {} cancelled)",
                         st.submitted, st.rejected, st.cancelled

@@ -148,6 +148,171 @@ pub fn welch_t(a: &Summary, b: &Summary) -> f64 {
     }
 }
 
+/// Streaming latency histogram with fixed log-spaced buckets.
+///
+/// Built for the serving tier (DESIGN.md §12): every request latency is
+/// `record`ed in O(1) and p50/p90/p99 are read at any time without holding
+/// the samples. Bucket `i` covers `(2^((i-1)/4), 2^(i/4)]` microseconds
+/// (bucket 0 is everything at or below 1 µs, the last bucket is open-ended),
+/// so [`Histogram::quantile`] returns the *upper edge* of the bucket holding
+/// the exact order statistic: it never under-reports, and over-reports by at
+/// most a factor of [`Histogram::RATIO`] (= 2^(1/4) ≈ 1.19) down to the 1 µs
+/// resolution floor — the property tests pin both bounds against exact
+/// sorted quantiles. Exact `n`/`mean`/`min`/`max` are tracked on the side,
+/// and quantiles are clamped into `[min, max]`.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// Number of buckets: quarter-powers of two from 1 µs up to
+    /// 2^(95/4) µs ≈ 14.1 s, plus the open-ended tail.
+    pub const BUCKETS: usize = 96;
+
+    /// Worst-case multiplicative over-report of a quantile (one bucket
+    /// width): 2^(1/4).
+    pub const RATIO: f64 = 1.189_207_115_002_721_1;
+
+    /// Empty histogram.
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: vec![0; Histogram::BUCKETS],
+            n: 0,
+            sum: 0.0,
+            min: 0.0,
+            max: 0.0,
+        }
+    }
+
+    /// Upper bucket edge in µs: `2^(i/4)` (the last bucket is open-ended;
+    /// its nominal edge only matters as a quantile fallback before the
+    /// min/max clamp).
+    fn edge(i: usize) -> f64 {
+        (2.0f64).powf(i as f64 / 4.0)
+    }
+
+    fn bucket(x: f64) -> usize {
+        if x <= 1.0 {
+            0
+        } else {
+            ((x.log2() * 4.0).ceil() as usize).min(Histogram::BUCKETS - 1)
+        }
+    }
+
+    /// Record one latency in microseconds. Negative and NaN values are
+    /// dropped (they can only come from clock bugs, and one bad sample
+    /// must not poison `sum`/`min`).
+    pub fn record(&mut self, x: f64) {
+        if !x.is_finite() || x < 0.0 {
+            return;
+        }
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.n += 1;
+        self.sum += x;
+        self.counts[Histogram::bucket(x)] += 1;
+    }
+
+    /// Number of recorded values.
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Exact mean of the recorded values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// Exact smallest recorded value (0 when empty).
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Exact largest recorded value (0 when empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// The q-quantile (q in `(0, 1]`): upper edge of the bucket holding the
+    /// `ceil(q*n)`-th smallest value, clamped into `[min, max]`. Returns 0
+    /// when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.n as f64).ceil() as u64).clamp(1, self.n);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                // The open-ended tail has no honest upper edge: report the
+                // exact max rather than a nominal bound below it.
+                if i + 1 == Histogram::BUCKETS {
+                    return self.max;
+                }
+                return Histogram::edge(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram into this one (exact: bucket counts and the
+    /// side statistics all combine losslessly). Per-client latency
+    /// recorders in `bench --serve` reduce through this.
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            self.min = other.min;
+            self.max = other.max;
+        } else {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+    }
+
+    /// Snapshot as the metrics-wire latency block:
+    /// `{"n", "mean_us", "min_us", "max_us", "p50_us", "p90_us", "p99_us"}`.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("n", Json::num(self.n as f64)),
+            ("mean_us", Json::num(self.mean())),
+            ("min_us", Json::num(self.min)),
+            ("max_us", Json::num(self.max)),
+            ("p50_us", Json::num(self.quantile(0.5))),
+            ("p90_us", Json::num(self.quantile(0.9))),
+            ("p99_us", Json::num(self.quantile(0.99))),
+        ])
+    }
+}
+
 /// Histogram with fixed-width bins over `[lo, hi)` (Fig 6's accuracy
 /// distributions).
 pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
@@ -352,6 +517,148 @@ mod tests {
         assert!((s.mean - 4.0).abs() < 1e-15);
         assert!((s.std - std::f64::consts::SQRT_2).abs() < 1e-12);
         assert_eq!((s.min, s.max), (3.0, 5.0));
+    }
+
+    /// Exact q-quantile of a sample: smallest value whose cumulative
+    /// fraction reaches q (the definition `Histogram::quantile` bounds).
+    fn exact_quantile(xs: &[f64], q: f64) -> f64 {
+        let mut s = xs.to_vec();
+        s.sort_by(f64::total_cmp);
+        let rank = ((q * s.len() as f64).ceil() as usize).clamp(1, s.len());
+        s[rank - 1]
+    }
+
+    #[test]
+    fn latency_histogram_basics() {
+        let mut h = Histogram::new();
+        assert_eq!(h.n(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!((h.mean(), h.min(), h.max()), (0.0, 0.0, 0.0));
+
+        for x in [100.0, 200.0, 400.0, 800.0] {
+            h.record(x);
+        }
+        assert_eq!(h.n(), 4);
+        assert_eq!(h.mean(), 375.0);
+        assert_eq!((h.min(), h.max()), (100.0, 800.0));
+        // p50 falls in the bucket holding 200.0; the upper edge can
+        // over-report by at most one bucket ratio.
+        let p50 = h.quantile(0.5);
+        assert!((200.0..=200.0 * Histogram::RATIO).contains(&p50));
+        // p100 is clamped to the exact max.
+        assert_eq!(h.quantile(1.0), 800.0);
+
+        // NaN / negative samples are dropped, not poisoning the stats.
+        h.record(f64::NAN);
+        h.record(-5.0);
+        assert_eq!(h.n(), 4);
+
+        // Sub-resolution values land in bucket 0 and clamp to exact max.
+        let mut tiny = Histogram::new();
+        tiny.record(0.25);
+        tiny.record(0.5);
+        assert_eq!(tiny.quantile(0.99), 0.5);
+
+        // The open-ended tail bucket reports the exact max (no nominal
+        // edge to bound it) — the RATIO bound only holds below ~8 s.
+        let mut big = Histogram::new();
+        big.record(1.0e9);
+        big.record(2.0e9);
+        assert_eq!(big.quantile(0.5), 2.0e9);
+    }
+
+    #[test]
+    fn latency_histogram_merge_matches_single_stream() {
+        let xs = [3.0, 17.0, 90_000.0, 1.0, 250.0, 0.75];
+        let ys = [42.0, 42.0, 7.5e7, 600.0];
+        let mut merged = Histogram::new();
+        for &x in &xs {
+            merged.record(x);
+        }
+        let mut other = Histogram::new();
+        for &y in &ys {
+            other.record(y);
+        }
+        merged.merge(&other);
+        let mut single = Histogram::new();
+        for &v in xs.iter().chain(&ys) {
+            single.record(v);
+        }
+        assert_eq!(merged.n(), single.n());
+        assert_eq!(merged.mean().to_bits(), single.mean().to_bits());
+        for q in [0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(merged.quantile(q).to_bits(), single.quantile(q).to_bits());
+        }
+        // Merging an empty histogram is the identity.
+        let before = merged.to_json().to_string();
+        merged.merge(&Histogram::new());
+        assert_eq!(merged.to_json().to_string(), before);
+    }
+
+    #[test]
+    fn prop_histogram_quantile_bounds_vs_exact() {
+        // For every q, the histogram quantile must sit within one bucket of
+        // the exact sorted quantile: exact <= hist <= max(exact * RATIO, 1µs
+        // resolution floor). This is the accuracy contract the serve
+        // metrics p50/p90/p99 rely on.
+        crate::util::proptest::check(
+            "histogram_quantile_bounds",
+            crate::util::proptest::cases_from_env(100),
+            |r| {
+                let len = r.below(60) + 1;
+                // Latencies spanning sub-µs to ~8 s, log-uniform-ish —
+                // below the open-ended tail, whose max-reporting behavior
+                // is pinned separately in `latency_histogram_basics`.
+                (0..len)
+                    .map(|_| (2.0f64).powf((r.uniform() as f64) * 24.0 - 1.0))
+                    .collect::<Vec<f64>>()
+            },
+            |xs| {
+                let mut h = Histogram::new();
+                for &x in xs {
+                    h.record(x);
+                }
+                [0.5, 0.9, 0.99].iter().all(|&q| {
+                    let exact = exact_quantile(xs, q);
+                    let hist = h.quantile(q);
+                    exact <= hist && hist <= (exact * Histogram::RATIO).max(1.0)
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn prop_histogram_merge_is_commutative() {
+        crate::util::proptest::check(
+            "histogram_merge_commutative",
+            crate::util::proptest::cases_from_env(100),
+            |r| {
+                let stream = |r: &mut crate::rng::Rng| {
+                    let len = r.below(30);
+                    (0..len)
+                        .map(|_| (r.uniform() as f64) * 1e6)
+                        .collect::<Vec<f64>>()
+                };
+                (stream(r), stream(r))
+            },
+            |(xs, ys)| {
+                let acc = |vals: &[f64]| {
+                    let mut h = Histogram::new();
+                    for &v in vals {
+                        h.record(v);
+                    }
+                    h
+                };
+                let mut ab = acc(xs);
+                ab.merge(&acc(ys));
+                let mut ba = acc(ys);
+                ba.merge(&acc(xs));
+                ab.n() == ba.n()
+                    && ab.quantile(0.9).to_bits() == ba.quantile(0.9).to_bits()
+                    && ab.min().to_bits() == ba.min().to_bits()
+                    && ab.max().to_bits() == ba.max().to_bits()
+            },
+        );
     }
 
     #[test]

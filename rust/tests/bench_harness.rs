@@ -241,5 +241,50 @@ fn committed_baseline_is_schema_valid() {
             found += 1;
         }
     }
-    assert!(found >= 3, "expected the pr3, pr4, and pr7 baselines at the repo root");
+    assert!(
+        found >= 4,
+        "expected the pr3, pr4, pr7, and pr9 baselines at the repo root"
+    );
+}
+
+#[test]
+fn validate_any_dispatches_serve_reports() {
+    // A minimal airbench.serve-bench/1 document must route to the serve
+    // validator (accepted), and damaging the schema-specific invariant —
+    // levels shorter than protocol.max_batch_levels — must be caught by
+    // that validator, not the bench/fleet fallback.
+    let doc = r#"{
+      "schema": "airbench.serve-bench/1", "tag": "t", "backend": "native",
+      "variant": "nano", "created_unix": 0,
+      "protocol": {"clients": 2, "requests_per_client": 2,
+                   "max_batch_levels": [1, 8], "max_wait_us": 2000,
+                   "queue_cap": 256, "test_n": 4, "data": "synthetic-cifar"},
+      "env": {"cores": 4, "os": "linux", "arch": "x86_64"},
+      "levels": [
+        {"max_batch": 1, "wall_s": 1.0, "req_per_s": 4.0, "batches": 4,
+         "mean_batch": 1.0, "rejected": 0,
+         "latency": {"n": 4, "mean_us": 100.0, "min_us": 50.0, "max_us": 200.0,
+                     "p50_us": 100.0, "p90_us": 180.0, "p99_us": 200.0},
+         "speedup_vs_b1": 1.0, "bit_identical_to_b1": true},
+        {"max_batch": 8, "wall_s": 0.5, "req_per_s": 8.0, "batches": 1,
+         "mean_batch": 4.0, "rejected": 0,
+         "latency": {"n": 4, "mean_us": 120.0, "min_us": 60.0, "max_us": 240.0,
+                     "p50_us": 120.0, "p90_us": 200.0, "p99_us": 240.0},
+         "speedup_vs_b1": 2.0, "bit_identical_to_b1": true}
+      ]
+    }"#;
+    let j = parse(doc).unwrap();
+    validate_any(&j).expect("dispatching validator accepts a serve report");
+
+    let mut damaged = parse(doc).unwrap();
+    if let airbench::util::json::Json::Obj(m) = &mut damaged {
+        if let Some(airbench::util::json::Json::Arr(levels)) = m.get_mut("levels") {
+            levels.pop();
+        }
+    }
+    let err = validate_any(&damaged).expect_err("level/declaration mismatch must fail");
+    assert!(
+        format!("{err:#}").contains("max_batch_levels"),
+        "the serve validator must report the mismatch, got: {err:#}"
+    );
 }

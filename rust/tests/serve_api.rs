@@ -19,6 +19,11 @@
 //! error wrapping, and a cell whose policy is rejected at apply time
 //! fails the job with the cell index + policy name in the message while
 //! the session survives to run a clean follow-up study.
+//!
+//! Plus the PR 9 disconnect contract: a TCP-style session
+//! (`cancel_on_disconnect`) whose input ends mid-job cancels the orphaned
+//! job promptly instead of draining it (batching itself is covered by
+//! `tests/serve_batch.rs`).
 
 use std::io::Cursor;
 use std::sync::{Arc, Mutex};
@@ -33,7 +38,7 @@ use airbench::data::augment::Policy;
 use airbench::experiments::{make_data, DataKind};
 use airbench::runtime::native::builtin_variant;
 use airbench::runtime::{checkpoint, BackendKind, EngineSpec, EvalPrecision, InitConfig, ModelState};
-use airbench::serve::run_session;
+use airbench::serve::{run_session, run_session_opts, SessionOptions};
 use airbench::util::json::{parse, Json};
 
 const TRAIN_N: usize = 64;
@@ -429,6 +434,7 @@ fn serve_predict_on_a_warm_model_matches_the_direct_eval() {
     let predict_spec = JobSpec::Predict(PredictJob {
         model: Some("warm".to_string()),
         load: None,
+        models: Vec::new(),
         data: DataKind::Cifar10,
         test_n: Some(TEST_N),
         tta: TtaLevel::None,
@@ -489,6 +495,69 @@ fn serve_load_of_a_bad_path_is_a_typed_error_and_the_session_survives() {
     let seq = events_for(&events, 2);
     let last = assert_wellformed(&seq);
     assert_eq!(event_type(last), "result");
+}
+
+#[test]
+fn disconnect_cancels_in_flight_jobs_on_a_tcp_style_session() {
+    // TCP semantics (PR 9 regression): a session whose input ends while a
+    // job is still running — the peer dropped mid-job — must cancel it
+    // through its CancelToken instead of training into a closed socket.
+    // The job below would run for minutes if the disconnect epilogue were
+    // missing; EOF arrives immediately after the submit, so a prompt
+    // return with the usual "cancelled" terminal proves the cancel fired.
+    let mut cfg = nano_config(0, 10_000.0);
+    cfg.eval_every_epoch = false;
+    let spec = JobSpec::Train(TrainJob {
+        config: cfg,
+        train_n: Some(TRAIN_N),
+        test_n: Some(TEST_N),
+        warmup: false,
+        ..TrainJob::default()
+    })
+    .to_json()
+    .to_string();
+    let input = format!("{spec}\n"); // no cancel control message — just EOF
+
+    let engine = engine_with_slots(1);
+    let out = Arc::new(Mutex::new(Vec::<u8>::new()));
+    let t0 = std::time::Instant::now();
+    let stats = run_session_opts(
+        &engine,
+        Cursor::new(input.into_bytes()),
+        Arc::clone(&out),
+        SessionOptions {
+            tenant: 7,
+            cancel_on_disconnect: true,
+        },
+    )
+    .expect("a disconnect epilogue is not a session error");
+    assert_eq!(stats.submitted, 1);
+    assert_eq!(
+        stats.cancelled, 0,
+        "disconnect cancellation is not a counted control message"
+    );
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(120),
+        "the session must not drain a multi-minute job after a disconnect"
+    );
+
+    let text = String::from_utf8(out.lock().unwrap().clone()).expect("utf8 output");
+    let events: Vec<Json> = text
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| parse(l).expect("every output line is JSON"))
+        .collect();
+    let seq = events_for(&events, 1);
+    let terminal = seq
+        .iter()
+        .find(|e| matches!(event_type(e), "result" | "error"))
+        .expect("the orphaned job produced a terminal event");
+    assert_eq!(event_type(terminal), "error", "{seq:?}");
+    assert_eq!(
+        terminal.get("message").unwrap().as_str().unwrap(),
+        "cancelled",
+        "a disconnected session's jobs must terminate with the 'cancelled' error"
+    );
 }
 
 #[test]

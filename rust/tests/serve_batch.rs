@@ -1,0 +1,473 @@
+//! Micro-batched predict serving suite (PR 9, DESIGN.md §12).
+//!
+//! Pins the batching acceptance contract:
+//! * a request's logits from a coalesced batch are **bit-identical** to the
+//!   unbatched single-image eval at every `max_batch`, `max_wait_us`, and
+//!   kernel-thread setting;
+//! * full batches flush on **size** (long before a far-away deadline) and
+//!   partial batches flush on the **deadline** (`max_batch` out of reach),
+//!   with the metrics counters pinning which trigger fired;
+//! * admission control is a bounded queue with the typed `Overloaded`
+//!   rejection — surfaced on the wire as the `"overloaded"` error — and a
+//!   shutdown drains already-admitted requests;
+//! * `predict_one` through the engine matches the direct evaluator row
+//!   bitwise, and the `metrics` job's snapshot validates and reflects the
+//!   traffic;
+//! * an ensemble predict of identical members is **bitwise** the single
+//!   model (`(p + p) / 2` is exact in f32);
+//! * a tiny `bench --serve` run produces a schema-valid
+//!   `airbench.serve-bench/1` report with zero rejections and
+//!   bit-identical levels.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use airbench::api::{
+    Engine, EngineConfig, JobResult, JobSpec, LoadJob, MetricsJob, PredictJob, PredictOneJob,
+    ServeBenchJob,
+};
+use airbench::bench::{validate_any, ServeBenchConfig};
+use airbench::config::TtaLevel;
+use airbench::coordinator::{evaluate, is_overloaded};
+use airbench::experiments::{make_data, DataKind};
+use airbench::runtime::native::{builtin_variant, NativeBackend, NativeShared};
+use airbench::runtime::{checkpoint, Backend, BackendKind, EngineSpec, EvalPrecision, InitConfig, ModelState};
+use airbench::serve::batcher::{Batcher, BatcherConfig};
+use airbench::serve::metrics::ServeMetrics;
+use airbench::tensor::Tensor;
+
+const TEST_N: usize = 16;
+
+fn nano_setup(seed: u64) -> (Arc<NativeShared>, Arc<ModelState>, Vec<Vec<f32>>) {
+    let variant = builtin_variant("nano").unwrap();
+    let state = Arc::new(ModelState::init(&variant, &InitConfig { dirac: true, seed }));
+    let shared = Arc::new(NativeShared::new(variant));
+    let (_train_ds, test_ds) = make_data(DataKind::Cifar10, TEST_N, TEST_N);
+    let images = (0..TEST_N).map(|i| test_ds.images.image(i).to_vec()).collect();
+    (shared, state, images)
+}
+
+/// The unbatched reference: each image alone in a zero-padded eval batch,
+/// row 0 of the logits — exactly what `max_batch = 1` serving computes.
+fn reference_logits(
+    shared: &Arc<NativeShared>,
+    state: &ModelState,
+    images: &[Vec<f32>],
+) -> Vec<Vec<f32>> {
+    let mut backend = NativeBackend::from_shared(Arc::clone(shared));
+    let b = backend.batch_eval();
+    let (hw, k) = {
+        let v = backend.variant();
+        (v.image_hw, v.num_classes)
+    };
+    let mut out = Vec::with_capacity(images.len());
+    for img in images {
+        let mut batch = Tensor::zeros(&[b, 3, hw, hw]);
+        batch.data_mut()[..img.len()].copy_from_slice(img);
+        let logits = backend.eval_logits(state, &batch).unwrap();
+        out.push(logits.data()[..k].to_vec());
+    }
+    out
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: row length");
+    for (j, (a, b)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{what}: logit {j} differs ({a} vs {b})"
+        );
+    }
+}
+
+#[test]
+fn coalesced_logits_are_bit_identical_at_every_batching_setting() {
+    let (shared, state, images) = nano_setup(7);
+    let reference = reference_logits(&shared, &state, &images);
+
+    // (max_batch, max_wait_us, kernel_threads): unbatched, small batches
+    // under a generous deadline (max coalescing), the full lowered
+    // batch_eval (max_batch = 0), and an immediate-flush threaded worker.
+    for (max_batch, max_wait_us, kernel_threads) in
+        [(1, 0, 0), (4, 50_000, 0), (0, 2_000, 3), (32, 0, 2)]
+    {
+        let cfg = BatcherConfig {
+            max_batch,
+            max_wait_us,
+            queue_cap: 256,
+            kernel_threads,
+        };
+        let batcher = Batcher::new(
+            Arc::clone(&shared),
+            Arc::clone(&state),
+            cfg,
+            Arc::new(ServeMetrics::new()),
+        )
+        .unwrap();
+        // Interleave three tenants so round-robin collection reorders
+        // requests within batches — replies must still route correctly.
+        let rxs: Vec<_> = images
+            .iter()
+            .enumerate()
+            .map(|(i, img)| (i, batcher.submit((i % 3) as u64, img.clone()).unwrap()))
+            .collect();
+        for (i, rx) in rxs {
+            let logits = rx
+                .recv_timeout(Duration::from_secs(60))
+                .expect("reply within the test budget")
+                .expect("batched eval succeeded");
+            assert_bits_eq(
+                &logits,
+                &reference[i],
+                &format!("image {i} at max_batch={max_batch} wait={max_wait_us}us threads={kernel_threads}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn full_batches_flush_on_size_long_before_the_deadline() {
+    let (shared, state, images) = nano_setup(3);
+    let reference = reference_logits(&shared, &state, &images);
+    let metrics = Arc::new(ServeMetrics::new());
+    // A deadline far beyond the test budget: replies can only arrive via
+    // the size trigger.
+    let cfg = BatcherConfig {
+        max_batch: 2,
+        max_wait_us: 120_000_000,
+        queue_cap: 256,
+        kernel_threads: 0,
+    };
+    let batcher =
+        Batcher::new(Arc::clone(&shared), Arc::clone(&state), cfg, Arc::clone(&metrics)).unwrap();
+    let rxs: Vec<_> = images[..4]
+        .iter()
+        .map(|img| batcher.submit(0, img.clone()).unwrap())
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let logits = rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("size-triggered flush within the test budget")
+            .unwrap();
+        assert_bits_eq(&logits, &reference[i], &format!("image {i} in a size-flushed pair"));
+    }
+    // The worker only ever takes full pairs here (partial flushes would
+    // need the 2-minute deadline or a shutdown): exactly 2 batches of 2.
+    let s = metrics.snapshot();
+    assert_eq!(s.get("requests").unwrap().as_f64().unwrap(), 4.0);
+    assert_eq!(s.get("batches").unwrap().as_f64().unwrap(), 2.0);
+    assert_eq!(s.get("mean_batch").unwrap().as_f64().unwrap(), 2.0);
+}
+
+#[test]
+fn partial_batches_flush_on_the_deadline() {
+    let (shared, state, images) = nano_setup(5);
+    let reference = reference_logits(&shared, &state, &images);
+    let metrics = Arc::new(ServeMetrics::new());
+    // max_batch is out of reach (3 requests, flush size 32): any reply at
+    // all proves the deadline path fired.
+    let cfg = BatcherConfig {
+        max_batch: 32,
+        max_wait_us: 10_000,
+        queue_cap: 256,
+        kernel_threads: 0,
+    };
+    let batcher =
+        Batcher::new(Arc::clone(&shared), Arc::clone(&state), cfg, Arc::clone(&metrics)).unwrap();
+    let rxs: Vec<_> = images[..3]
+        .iter()
+        .enumerate()
+        .map(|(i, img)| batcher.submit(i as u64, img.clone()).unwrap())
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let logits = rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("deadline-triggered flush within the test budget")
+            .unwrap();
+        assert_bits_eq(&logits, &reference[i], &format!("image {i} in a deadline flush"));
+    }
+    let s = metrics.snapshot();
+    assert_eq!(s.get("requests").unwrap().as_f64().unwrap(), 3.0);
+    assert_eq!(s.get("coalesced").unwrap().as_f64().unwrap(), 3.0);
+    assert!(s.get("batches").unwrap().as_f64().unwrap() >= 1.0);
+}
+
+#[test]
+fn the_bounded_queue_rejects_with_the_typed_overloaded_error() {
+    let (shared, state, images) = nano_setup(11);
+    let reference = reference_logits(&shared, &state, &images);
+    let metrics = Arc::new(ServeMetrics::new());
+    // The worker cannot drain (flush size 32, deadline 1 minute), so the
+    // two-slot queue stays full deterministically.
+    let cfg = BatcherConfig {
+        max_batch: 32,
+        max_wait_us: 60_000_000,
+        queue_cap: 2,
+        kernel_threads: 0,
+    };
+    let batcher =
+        Batcher::new(Arc::clone(&shared), Arc::clone(&state), cfg, Arc::clone(&metrics)).unwrap();
+    let rx0 = batcher.submit(1, images[0].clone()).unwrap();
+    let rx1 = batcher.submit(2, images[1].clone()).unwrap();
+    let err = batcher
+        .submit(3, images[2].clone())
+        .expect_err("the third request must be refused by the two-slot queue");
+    assert!(
+        is_overloaded(&err),
+        "rejection must be the typed Overloaded error, got: {err:#}"
+    );
+    assert_eq!(metrics.rejected(), 1);
+    // Shutdown drains: both *admitted* requests still get bit-identical
+    // replies (drop joins the worker, so the replies are already buffered).
+    drop(batcher);
+    for (i, rx) in [rx0, rx1].into_iter().enumerate() {
+        let logits = rx
+            .recv_timeout(Duration::from_secs(1))
+            .expect("admitted requests are served on shutdown")
+            .unwrap();
+        assert_bits_eq(&logits, &reference[i], &format!("image {i} drained at shutdown"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine-level serving: predict_one, the metrics job, the overloaded wire
+// message, and ensemble predict.
+// ---------------------------------------------------------------------------
+
+fn save_nano_checkpoint(dir_tag: &str, seed: u64) -> std::path::PathBuf {
+    let variant = builtin_variant("nano").unwrap();
+    let state = ModelState::init(&variant, &InitConfig { dirac: true, seed });
+    let dir = std::env::temp_dir().join(dir_tag);
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("model.ckpt");
+    checkpoint::save(&state, &variant, None, &ckpt).unwrap();
+    ckpt
+}
+
+fn load_warm(engine: &Engine, path: &std::path::Path, id: &str) {
+    let result = engine
+        .submit(JobSpec::Load(LoadJob {
+            path: path.to_path_buf(),
+            id: Some(id.to_string()),
+        }))
+        .wait()
+        .expect("load job");
+    assert!(matches!(result, JobResult::Load { .. }));
+}
+
+#[test]
+fn predict_one_through_the_engine_matches_the_unbatched_predict_row() {
+    let ckpt = save_nano_checkpoint("airbench_serve_batch_one", 21);
+    let engine = Engine::new(EngineConfig::default());
+    load_warm(&engine, &ckpt, "warm");
+
+    // The direct evaluator is the reference: its softmax rows are the
+    // per-example probabilities the batched path must reproduce bitwise.
+    let variant = builtin_variant("nano").unwrap();
+    let state = ModelState::init(&variant, &InitConfig { dirac: true, seed: 21 });
+    let (_train_ds, test_ds) = make_data(DataKind::Cifar10, TEST_N, TEST_N);
+    let f = EngineSpec::new(BackendKind::Native, "nano").factory().unwrap();
+    let mut worker = f.spawn().unwrap();
+    let direct = evaluate(worker.as_mut(), &state, &test_ds, TtaLevel::None).unwrap();
+    let k = test_ds.num_classes;
+
+    for index in [0usize, 5, TEST_N - 1] {
+        let result = engine
+            .submit(JobSpec::PredictOne(PredictOneJob {
+                model: "warm".to_string(),
+                index,
+                data: DataKind::Cifar10,
+                test_n: Some(TEST_N),
+            }))
+            .wait()
+            .expect("predict_one job");
+        match result {
+            JobResult::PredictOne {
+                index: got_index,
+                prediction,
+                probs,
+                probs_md5,
+                latency_us,
+                ..
+            } => {
+                assert_eq!(got_index, index);
+                assert_eq!(prediction, direct.predictions[index]);
+                let row = &direct.probs.data()[index * k..(index + 1) * k];
+                assert_bits_eq(&probs, row, &format!("predict_one probs row {index}"));
+                assert_eq!(probs_md5, checkpoint::f32_md5(row));
+                assert!(latency_us.is_finite() && latency_us >= 0.0);
+            }
+            other => panic!("expected a predict_one result, got {other:?}"),
+        }
+    }
+
+    // The metrics job reflects the traffic and validates on the wire.
+    let result = engine.submit(JobSpec::Metrics(MetricsJob)).wait().expect("metrics job");
+    match result {
+        JobResult::Metrics { data } => {
+            assert!(data.get("requests").unwrap().as_f64().unwrap() >= 3.0);
+            assert_eq!(data.get("rejected").unwrap().as_f64().unwrap(), 0.0);
+            assert!(data.get("batches").unwrap().as_f64().unwrap() >= 1.0);
+            let request_us = data.get("latency").unwrap().get("request_us").unwrap();
+            assert!(request_us.get("n").unwrap().as_f64().unwrap() >= 3.0);
+        }
+        other => panic!("expected a metrics result, got {other:?}"),
+    }
+}
+
+#[test]
+fn an_overfull_admission_queue_rejects_on_the_wire_as_overloaded() {
+    let ckpt = save_nano_checkpoint("airbench_serve_batch_overload", 9);
+    // One queue slot, flush size out of reach, 2 s deadline: whichever
+    // request is admitted second finds the queue full and must surface the
+    // "overloaded" wire message; the admitted one completes at the
+    // deadline flush.
+    let engine = Engine::new(EngineConfig {
+        batcher: BatcherConfig {
+            max_batch: 32,
+            max_wait_us: 2_000_000,
+            queue_cap: 1,
+            kernel_threads: 0,
+        },
+        ..EngineConfig::default()
+    });
+    load_warm(&engine, &ckpt, "warm");
+    let job = |index: usize| {
+        JobSpec::PredictOne(PredictOneJob {
+            model: "warm".to_string(),
+            index,
+            data: DataKind::Cifar10,
+            test_n: Some(TEST_N),
+        })
+    };
+    let h1 = engine.submit(job(0));
+    // Give the first job time to reach the batcher queue before racing it.
+    std::thread::sleep(Duration::from_millis(500));
+    let h2 = engine.submit(job(1));
+    let outcomes = [h1.wait(), h2.wait()];
+    let rejected: Vec<&anyhow::Error> =
+        outcomes.iter().filter_map(|r| r.as_ref().err()).collect();
+    assert_eq!(
+        rejected.len(),
+        1,
+        "exactly one of two racing requests fits the one-slot queue: {outcomes:?}"
+    );
+    assert_eq!(
+        format!("{}", rejected[0]),
+        "overloaded",
+        "the wire message for an admission rejection is the typed 'overloaded'"
+    );
+    assert_eq!(
+        outcomes.iter().filter(|r| r.is_ok()).count(),
+        1,
+        "the admitted request must still complete at the deadline flush"
+    );
+}
+
+#[test]
+fn an_ensemble_of_identical_members_is_bitwise_the_single_model() {
+    let ckpt = save_nano_checkpoint("airbench_serve_batch_ensemble", 13);
+    let engine = Engine::new(EngineConfig::default());
+    load_warm(&engine, &ckpt, "a");
+    load_warm(&engine, &ckpt, "b");
+
+    let predict = |model: Option<&str>, models: &[&str]| {
+        engine
+            .submit(JobSpec::Predict(PredictJob {
+                model: model.map(str::to_string),
+                load: None,
+                models: models.iter().map(|s| s.to_string()).collect(),
+                data: DataKind::Cifar10,
+                test_n: Some(TEST_N),
+                tta: TtaLevel::None,
+                precision: EvalPrecision::F32,
+            }))
+            .wait()
+            .expect("predict job")
+    };
+    let (single_md5, single_preds, single_acc) = match predict(Some("a"), &[]) {
+        JobResult::Predict {
+            probs_md5,
+            predictions,
+            accuracy,
+            ..
+        } => (probs_md5, predictions, accuracy),
+        other => panic!("expected a predict result, got {other:?}"),
+    };
+    match predict(None, &["a", "b"]) {
+        JobResult::Predict {
+            probs_md5,
+            predictions,
+            accuracy,
+            model,
+            ..
+        } => {
+            // (p + p) / 2 is exact in f32, so identical members average to
+            // the member bitwise — md5 equality pins the whole matrix.
+            assert_eq!(probs_md5, single_md5, "ensemble probs differ from the member");
+            assert_eq!(predictions, single_preds);
+            assert_eq!(accuracy.to_bits(), single_acc.to_bits());
+            assert_eq!(model, "a,b");
+        }
+        other => panic!("expected a predict result, got {other:?}"),
+    }
+
+    // Guard rails: an ensemble needs >= 2 members and a single source.
+    let err = engine
+        .submit(JobSpec::Predict(PredictJob {
+            model: None,
+            load: None,
+            models: vec!["a".to_string()],
+            data: DataKind::Cifar10,
+            test_n: Some(TEST_N),
+            tta: TtaLevel::None,
+            precision: EvalPrecision::F32,
+        }))
+        .wait()
+        .expect_err("a one-member ensemble is rejected");
+    assert!(format!("{err:#}").contains("at least two"), "got: {err:#}");
+}
+
+#[test]
+fn serve_bench_smoke_produces_a_schema_valid_bit_identical_report() {
+    let dir = std::env::temp_dir().join("airbench_serve_bench_smoke");
+    std::fs::create_dir_all(&dir).unwrap();
+    let config = ServeBenchConfig {
+        variant: "nano".to_string(),
+        tag: Some("smoke".to_string()),
+        clients: 2,
+        requests: 3,
+        max_batch_levels: vec![1, 4],
+        max_wait_us: 2_000,
+        queue_cap: 64,
+        test_n: 8,
+        out_dir: dir,
+    };
+    let engine = Engine::new(EngineConfig::default());
+    let result = engine
+        .submit(JobSpec::ServeBench(ServeBenchJob { config, write: false }))
+        .wait()
+        .expect("serve bench job");
+    match result {
+        JobResult::ServeBench { report, path } => {
+            assert!(path.is_none(), "write: false must not touch the disk");
+            let j = report.to_json();
+            validate_any(&j).expect("serve-bench report validates through validate_any");
+            assert_eq!(
+                j.get("schema").unwrap().as_str().unwrap(),
+                "airbench.serve-bench/1"
+            );
+            assert_eq!(report.levels.len(), 2);
+            for l in &report.levels {
+                assert_eq!(l.rejected, 0, "no rejections at default limits");
+                assert!(
+                    l.bit_identical_to_b1,
+                    "every level must match the unbatched baseline bitwise"
+                );
+                assert_eq!(l.latency.n(), 6, "clients x requests samples per level");
+            }
+        }
+        other => panic!("expected a serve_bench result, got {other:?}"),
+    }
+}
