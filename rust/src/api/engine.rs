@@ -35,15 +35,18 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::api::event::{validate_result, Event, JobId, JobResult};
 use crate::api::job::{
-    BenchJob, EvalJob, FleetBenchJob, FleetJob, InfoJob, JobSpec, LoadJob, MetricsJob,
-    PredictJob, PredictOneJob, SaveJob, ServeBenchJob, StudyJob, TrainJob,
+    BenchJob, EvalJob, FleetBenchJob, FleetJob, FleetShardJob, HealthJob, InfoJob, JobSpec,
+    LoadJob, MetricsJob, PredictJob, PredictOneJob, SaveJob, ServeBenchJob, StudyJob, TrainJob,
 };
 use crate::api::registry::{Registry, WarmModel};
-use crate::coordinator::observer::{Cancelled, Observer};
+use crate::coordinator::observer::{retry_after_ms, Cancelled, Observer};
+use crate::coordinator::remote::{
+    dataset_fingerprint, run_fleet_remote, run_study_remote, RemoteError, RemoteJob, WorkerPool,
+};
 use crate::coordinator::trainer::EpochLog;
 use crate::coordinator::{
     evaluate_observed, fleet_budget, is_cancelled, is_overloaded, run_fleet, run_fleet_parallel,
-    run_study, train_run, warmup,
+    run_fleet_parallel_seeded, run_study, train_run, warmup,
 };
 use crate::data::Dataset;
 use crate::experiments::{make_data, DataKind, Scale};
@@ -322,8 +325,10 @@ impl Engine {
                     cancel: token,
                 };
                 let token = sink.cancel.clone();
-                let lightweight =
-                    matches!(spec, JobSpec::PredictOne(_) | JobSpec::Metrics(_));
+                let lightweight = matches!(
+                    spec,
+                    JobSpec::PredictOne(_) | JobSpec::Metrics(_) | JobSpec::Health(_)
+                );
                 let out = if lightweight {
                     exec(&inner, id, tenant, spec, &mut sink)
                 } else {
@@ -343,10 +348,12 @@ impl Engine {
                             Err(e) => sink.send(Event::Error {
                                 job: id,
                                 message: format!("engine produced a schema-invalid result: {e:#}"),
+                                retry_after_ms: None,
                             }),
                         }
                     }
                     Err(e) => {
+                        let retry = retry_after_ms(&e);
                         let message = if is_cancelled(&e) {
                             "cancelled".to_string()
                         } else if is_overloaded(&e) {
@@ -354,7 +361,11 @@ impl Engine {
                         } else {
                             format!("{e:#}")
                         };
-                        sink.send(Event::Error { job: id, message });
+                        sink.send(Event::Error {
+                            job: id,
+                            message,
+                            retry_after_ms: retry,
+                        });
                     }
                 }
             });
@@ -366,6 +377,7 @@ impl Engine {
                 let _ = spawn_tx.send(Event::Error {
                     job: id,
                     message: format!("could not spawn a job thread: {e}"),
+                    retry_after_ms: None,
                 });
                 None
             }
@@ -509,6 +521,8 @@ fn exec(
         JobSpec::Eval(job) => exec_eval(inner, id, job, sink),
         JobSpec::Fleet(job) => exec_fleet(inner, id, job, sink),
         JobSpec::Study(job) => exec_study(inner, id, job, sink),
+        JobSpec::FleetShard(job) => exec_fleet_shard(inner, id, job, sink),
+        JobSpec::Health(job) => exec_health(inner, id, job, sink),
         JobSpec::Bench(job) => exec_bench(inner, id, job, sink),
         JobSpec::FleetBench(job) => exec_fleet_bench(inner, id, job, sink),
         JobSpec::Info(job) => exec_info(inner, id, job, sink),
@@ -619,6 +633,41 @@ fn exec_fleet(
     let (train_ds, test_ds) = inner.data(job.data, job.train_n, job.test_n);
     let factory = inner.factory(cfg.backend, &cfg.variant)?;
     started(sink, id, "fleet", factory.kind().name(), &cfg.variant);
+    // Coordinator mode (dist_workers set): shard the seed table across the
+    // remote serve workers instead of training here. The merged result is
+    // bit-identical to the local paths below — same seeds, seed-ordered
+    // merge (DESIGN.md §13).
+    if !cfg.dist_workers.is_empty() {
+        let pool = WorkerPool::parse(&cfg.dist_workers, cfg.dist_timeout_s)?;
+        sink.on_log(&format!(
+            "[fleet] distributed: workers={} runs={} shard_timeout={:.0}s",
+            pool.addrs.len(),
+            runs,
+            pool.timeout.as_secs_f64(),
+        ));
+        let remote = RemoteJob {
+            cfg: &cfg,
+            data: job.data,
+            train_n: job.train_n,
+            test_n: job.test_n,
+            data_hash: Some(dataset_fingerprint(&train_ds, &test_ds)),
+        };
+        let fleet =
+            run_fleet_remote(&pool, &remote, runs, Some(&mut *sink as &mut dyn Observer))?;
+        let mut log_path = None;
+        if let Some(path) = &job.log {
+            std::fs::write(path, fleet.to_json(&cfg).to_string())
+                .with_context(|| format!("writing fleet log {}", path.display()))?;
+            sink.on_log(&format!("fleet log written to {}", path.display()));
+            log_path = Some(path.clone());
+        }
+        return Ok(JobResult::Fleet {
+            result: fleet,
+            config: cfg,
+            backend: factory.kind().name().to_string(),
+            log: log_path,
+        });
+    }
     // The one resolver the scheduler itself uses — what we report is what
     // runs (env override, auto, PJRT sequential collapse included).
     let budget = fleet_budget(&factory, parallel, runs);
@@ -693,6 +742,46 @@ fn exec_study(
     let (train_ds, test_ds) = inner.data(job.data, job.train_n, job.test_n);
     let factory = inner.factory(cfg.backend, &cfg.variant)?;
     started(sink, id, "study", factory.kind().name(), &cfg.variant);
+    // Coordinator mode: shard every cell's fleet across the remote serve
+    // workers; the merged grid (and the written report) is byte-identical
+    // to the local path below (DESIGN.md §13).
+    if !cfg.dist_workers.is_empty() {
+        let pool = WorkerPool::parse(&cfg.dist_workers, cfg.dist_timeout_s)?;
+        sink.on_log(&format!(
+            "[study] distributed: workers={} cells={} runs={} shard_timeout={:.0}s",
+            pool.addrs.len(),
+            job.policies.len(),
+            runs,
+            pool.timeout.as_secs_f64(),
+        ));
+        let remote = RemoteJob {
+            cfg: &cfg,
+            data: job.data,
+            train_n: job.train_n,
+            test_n: job.test_n,
+            data_hash: Some(dataset_fingerprint(&train_ds, &test_ds)),
+        };
+        let result = run_study_remote(
+            &pool,
+            &remote,
+            &job.policies,
+            runs,
+            Some(&mut *sink as &mut dyn Observer),
+        )?;
+        let mut log_path = None;
+        if let Some(path) = &job.log {
+            std::fs::write(path, result.to_json(&cfg, factory.kind().name()).to_string())
+                .with_context(|| format!("writing study report {}", path.display()))?;
+            sink.on_log(&format!("study report written to {}", path.display()));
+            log_path = Some(path.clone());
+        }
+        return Ok(JobResult::Study {
+            result,
+            config: cfg,
+            backend: factory.kind().name().to_string(),
+            log: log_path,
+        });
+    }
     let budget = fleet_budget(&factory, parallel, runs);
     sink.on_log(&format!(
         "[study] backend={} cells={} runs={} parallel={} kernel_threads={}",
@@ -730,6 +819,82 @@ fn exec_study(
         config: cfg,
         backend: factory.kind().name().to_string(),
         log: log_path,
+    })
+}
+
+/// Worker side of a distributed fleet/study (DESIGN.md §13): train exactly
+/// the coordinator-shipped seed slice and return the per-run scalar
+/// vectors in slice order. The coordinator already applied any policy, so
+/// the config is a plain fleet config; the dataset is verified against the
+/// coordinator's content fingerprint *before* any training, failing with
+/// the typed [`RemoteError::DataMismatch`] — a mismatched worker must
+/// never contribute runs.
+fn exec_fleet_shard(
+    inner: &Inner,
+    id: JobId,
+    job: FleetShardJob,
+    sink: &mut ChannelSink,
+) -> Result<JobResult> {
+    let cfg = job.config;
+    let (train_ds, test_ds) = inner.data(job.data, job.train_n, job.test_n);
+    if let Some(expect) = &job.data_hash {
+        let got = dataset_fingerprint(&train_ds, &test_ds);
+        if &got != expect {
+            let base: Result<()> = Err(RemoteError::DataMismatch.err());
+            return Err(base
+                .context(format!(
+                    "this worker's dataset fingerprint {got} does not match the \
+                     coordinator's {expect} (check the data kind and \
+                     AIRBENCH_TRAIN_N/AIRBENCH_TEST_N on both sides)"
+                ))
+                .unwrap_err());
+        }
+    }
+    let factory = inner.factory(cfg.backend, &cfg.variant)?;
+    started(sink, id, "fleet_shard", factory.kind().name(), &cfg.variant);
+    let parallel = job.parallel.unwrap_or(cfg.fleet_parallel);
+    let budget = fleet_budget(&factory, parallel, job.seeds.len());
+    sink.on_log(&format!(
+        "[shard {}] backend={} runs={} start={} parallel={} kernel_threads={}",
+        job.shard,
+        factory.kind().name(),
+        job.seeds.len(),
+        job.start,
+        budget.runs_parallel,
+        budget.kernel_threads,
+    ));
+    let fleet = run_fleet_parallel_seeded(
+        &factory,
+        &train_ds,
+        &test_ds,
+        &cfg,
+        &job.seeds,
+        parallel,
+        Some(&mut *sink as &mut dyn Observer),
+    )?;
+    Ok(JobResult::FleetShard {
+        shard: job.shard,
+        start: job.start,
+        accs: fleet.accuracies,
+        accs_no_tta: fleet.accuracies_no_tta,
+        times: fleet.times,
+        epochs_to_target: fleet.epochs_to_target,
+    })
+}
+
+/// `{"job": "health"}` — rolling-window serving health: p50/p90/p99
+/// request latency over (at most) the last `window_s` seconds, unlike the
+/// cumulative `metrics` snapshot. Lightweight (bypasses the slot gate)
+/// so health checks stay responsive while training jobs hold every slot.
+fn exec_health(
+    inner: &Inner,
+    id: JobId,
+    job: HealthJob,
+    sink: &mut ChannelSink,
+) -> Result<JobResult> {
+    started(sink, id, "health", "-", "*");
+    Ok(JobResult::Health {
+        data: inner.metrics.health(job.window_s.unwrap_or(10)),
     })
 }
 

@@ -92,6 +92,11 @@ pub enum Event {
         job: JobId,
         /// Human-readable failure chain.
         message: String,
+        /// Backpressure hint on `"overloaded"` rejections: suggested
+        /// client wait before retrying, derived from live queue depth and
+        /// recent exec latency (DESIGN.md §12). Omitted from the wire
+        /// when absent.
+        retry_after_ms: Option<u64>,
     },
 }
 
@@ -167,8 +172,15 @@ impl Event {
             Event::Result { result, .. } => {
                 p.push(("result", result.to_json()));
             }
-            Event::Error { message, .. } => {
+            Event::Error {
+                message,
+                retry_after_ms,
+                ..
+            } => {
                 p.push(("message", Json::str(message)));
+                if let Some(ms) = retry_after_ms {
+                    p.push(("retry_after_ms", Json::num(*ms as f64)));
+                }
             }
         }
         Json::obj(p)
@@ -321,9 +333,33 @@ pub enum JobResult {
         /// End-to-end submit → reply latency, µs.
         latency_us: f64,
     },
+    /// A finished seed-range shard of a distributed fleet (DESIGN.md
+    /// §13): bare per-run scalars in shard-local seed order — exactly
+    /// what the coordinator's merger needs, small enough to stream.
+    FleetShard {
+        /// Shard id (echoes the spec; the coordinator's at-most-once
+        /// application key).
+        shard: usize,
+        /// First run index of the shard in the fleet's seed table.
+        start: usize,
+        /// Final per-run accuracies, shard-local seed order.
+        accs: Vec<f64>,
+        /// Identity-view ("no TTA") per-run accuracies.
+        accs_no_tta: Vec<f64>,
+        /// Per-run wall-clock training times, seconds.
+        times: Vec<f64>,
+        /// Per-run fractional epochs to the target accuracy (`null` when
+        /// never reached).
+        epochs_to_target: Vec<Option<f64>>,
+    },
     /// A serving-metrics snapshot (DESIGN.md §12).
     Metrics {
         /// The [`crate::serve::metrics::ServeMetrics::snapshot`] document.
+        data: Json,
+    },
+    /// A rolling-window serving health snapshot (DESIGN.md §12).
+    Health {
+        /// The [`crate::serve::metrics::ServeMetrics::health`] document.
         data: Json,
     },
     /// A finished serve load phase.
@@ -357,7 +393,9 @@ impl JobResult {
             JobResult::Load { .. } => "load",
             JobResult::Predict { .. } => "predict",
             JobResult::PredictOne { .. } => "predict_one",
+            JobResult::FleetShard { .. } => "fleet_shard",
             JobResult::Metrics { .. } => "metrics",
+            JobResult::Health { .. } => "health",
             JobResult::ServeBench { .. } => "serve_bench",
         }
     }
@@ -541,7 +579,35 @@ impl JobResult {
                 ("probs_md5", Json::str(probs_md5)),
                 ("latency_us", Json::num(*latency_us)),
             ]),
+            JobResult::FleetShard {
+                shard,
+                start,
+                accs,
+                accs_no_tta,
+                times,
+                epochs_to_target,
+            } => {
+                let nums = |xs: &[f64]| Json::Arr(xs.iter().map(|&x| Json::num(x)).collect());
+                Json::obj(vec![
+                    ("shard", Json::num(*shard as f64)),
+                    ("start", Json::num(*start as f64)),
+                    ("n", Json::num(accs.len() as f64)),
+                    ("accs", nums(accs)),
+                    ("accs_no_tta", nums(accs_no_tta)),
+                    ("times", nums(times)),
+                    (
+                        "epochs_to_target",
+                        Json::Arr(
+                            epochs_to_target
+                                .iter()
+                                .map(|e| e.map(Json::num).unwrap_or(Json::Null))
+                                .collect(),
+                        ),
+                    ),
+                ])
+            }
             JobResult::Metrics { data } => data.clone(),
+            JobResult::Health { data } => data.clone(),
             JobResult::ServeBench { report, path } => {
                 let mut j = report.to_json();
                 if let Json::Obj(m) = &mut j {
@@ -709,6 +775,38 @@ pub fn validate_result(j: &Json) -> Result<()> {
                 bail!("predict_one 'latency_us' = {lat} must be finite and >= 0");
             }
         }
+        "fleet_shard" => {
+            let n = data.get("n")?.as_usize()?;
+            if n == 0 {
+                bail!("fleet_shard 'n' must be >= 1");
+            }
+            data.get("shard")?.as_usize()?;
+            data.get("start")?.as_usize()?;
+            for key in ["accs", "accs_no_tta", "times", "epochs_to_target"] {
+                if data.get(key)?.as_arr()?.len() != n {
+                    bail!("fleet_shard '{key}' length must equal 'n'");
+                }
+            }
+            for a in data.get("accs")?.as_arr()? {
+                let x = a.as_f64()?;
+                if !x.is_finite() || !(0.0..=1.0).contains(&x) {
+                    bail!("fleet_shard acc {x} is not a finite accuracy in [0, 1]");
+                }
+            }
+            for t in data.get("times")?.as_arr()? {
+                let x = t.as_f64()?;
+                if !x.is_finite() || x < 0.0 {
+                    bail!("fleet_shard time {x} must be finite and >= 0");
+                }
+            }
+        }
+        "health" => {
+            if data.get("window_s")?.as_usize()? == 0 {
+                bail!("health 'window_s' must be >= 1");
+            }
+            data.get("requests")?.as_usize()?;
+            data.get("latency")?.get("n")?.as_usize()?;
+        }
         "metrics" => {
             for key in ["requests", "rejected", "batches", "coalesced", "queue_depth"] {
                 data.get(key)?.as_usize()?;
@@ -756,12 +854,24 @@ mod tests {
         let e = Event::Error {
             job: 9,
             message: "cancelled".into(),
+            retry_after_ms: None,
         };
         assert!(e.is_terminal());
         assert_eq!(e.job(), 9);
         assert_eq!(
             e.to_json().get("message").unwrap().as_str().unwrap(),
             "cancelled"
+        );
+        // No hint, no key — pre-PR 10 readers keep parsing error events.
+        assert!(e.to_json().opt("retry_after_ms").is_none());
+        let e = Event::Error {
+            job: 9,
+            message: "overloaded".into(),
+            retry_after_ms: Some(40),
+        };
+        assert_eq!(
+            e.to_json().get("retry_after_ms").unwrap().as_usize().unwrap(),
+            40
         );
     }
 
@@ -896,6 +1006,45 @@ mod tests {
                 "queue_depth": 0}}"#,
         )
         .unwrap();
+        assert!(validate_result(&bad).is_err());
+    }
+
+    #[test]
+    fn distributed_results_round_trip_through_validation() {
+        let shard = JobResult::FleetShard {
+            shard: 1,
+            start: 4,
+            accs: vec![0.5, 0.625],
+            accs_no_tta: vec![0.5, 0.5],
+            times: vec![0.01, 0.02],
+            epochs_to_target: vec![None, Some(3.5)],
+        };
+        assert_eq!(shard.kind_name(), "fleet_shard");
+        let j = shard.to_json();
+        validate_result(&j).unwrap();
+        assert_eq!(j.get("data").unwrap().get("n").unwrap().as_usize().unwrap(), 2);
+        // Arity mismatches and out-of-range accuracies are rejected.
+        let bad = parse(
+            r#"{"kind": "fleet_shard", "data": {"shard": 0, "start": 0, "n": 2,
+                "accs": [0.5], "accs_no_tta": [0.5, 0.5], "times": [0.1, 0.1],
+                "epochs_to_target": [null, null]}}"#,
+        )
+        .unwrap();
+        assert!(validate_result(&bad).is_err());
+        let bad = parse(
+            r#"{"kind": "fleet_shard", "data": {"shard": 0, "start": 0, "n": 1,
+                "accs": [1.5], "accs_no_tta": [0.5], "times": [0.1],
+                "epochs_to_target": [null]}}"#,
+        )
+        .unwrap();
+        assert!(validate_result(&bad).is_err());
+
+        let health = JobResult::Health {
+            data: crate::serve::metrics::ServeMetrics::new().health(10),
+        };
+        assert_eq!(health.kind_name(), "health");
+        validate_result(&health.to_json()).unwrap();
+        let bad = parse(r#"{"kind": "health", "data": {"window_s": 0}}"#).unwrap();
         assert!(validate_result(&bad).is_err());
     }
 

@@ -8,7 +8,9 @@
 //! with which [`TrainConfig`]. Specs are plain data with a total JSON
 //! round trip ([`JobSpec::to_json`] / [`JobSpec::from_json`]) — the same
 //! document the CLI builds from flags is what `airbench serve` accepts as
-//! one NDJSON line (DESIGN.md §9).
+//! one NDJSON line (DESIGN.md §9). The distributed coordinator ships
+//! seed-range shards as [`FleetShardJob`]s over the same wire (DESIGN.md
+//! §13), and serving health probes ride along as [`HealthJob`]s.
 //!
 //! The JSON shape is `{"job": "<kind>", ...kind-specific keys}`. Optional
 //! keys may be absent or `null`; configs nest under `"config"` and go
@@ -156,6 +158,53 @@ impl Default for StudyJob {
             log: None,
         }
     }
+}
+
+/// One seed-range shard of a distributed fleet (DESIGN.md §13): the
+/// coordinator's `fleet_shard` wire job. Carries the **exact** per-run
+/// seed sub-slice from the coordinator's `fleet_seeds` table, so the
+/// worker trains precisely the runs a local fleet would — the merged
+/// result is bit-identical at any shard count. Never built by the CLI;
+/// only [`crate::coordinator::remote`] dispatches these.
+#[derive(Clone, Debug)]
+pub struct FleetShardJob {
+    /// Fully resolved per-run config (policies already applied by the
+    /// coordinator; its JSON never carries distributed keys, so a worker
+    /// cannot recurse into coordinator mode).
+    pub config: TrainConfig,
+    /// Dataset distribution.
+    pub data: DataKind,
+    /// The exact per-run seeds of this shard, in seed-table order
+    /// (strings on the wire — u64 seeds exceed JSON's 2^53 integers).
+    pub seeds: Vec<u64>,
+    /// First run index of the shard in the whole fleet's seed table
+    /// (provenance / progress labeling).
+    pub start: usize,
+    /// Shard id — the coordinator's at-most-once application key.
+    pub shard: usize,
+    /// Concurrent runs on the worker (`None` defers to
+    /// `config.fleet_parallel`; 0 = auto, DESIGN.md §8).
+    pub parallel: Option<usize>,
+    /// Training-set size override.
+    pub train_n: Option<usize>,
+    /// Test-set size override.
+    pub test_n: Option<usize>,
+    /// Coordinator's canonical dataset fingerprint
+    /// ([`crate::coordinator::remote::dataset_fingerprint`]); when set,
+    /// the worker verifies its own data and rejects mismatches with the
+    /// typed data-mismatch error.
+    pub data_hash: Option<String>,
+}
+
+/// A serving health probe (`{"job": "health"}`): rolling-window request
+/// latency quantiles over the last `window_s` seconds — a liveness /
+/// recent-latency check that, unlike `metrics`, is not diluted by
+/// history (DESIGN.md §12).
+#[derive(Clone, Debug, Default)]
+pub struct HealthJob {
+    /// Window length in seconds (server default when `None`; clamped to
+    /// the rolling buffer's capacity).
+    pub window_s: Option<u64>,
 }
 
 /// The §3.7 benchmark harness (the CLI's `bench` command).
@@ -321,6 +370,8 @@ pub enum JobSpec {
     Fleet(FleetJob),
     /// Augmentation-policy × seed grid with paired-comparison stats.
     Study(StudyJob),
+    /// One seed-range shard of a distributed fleet (DESIGN.md §13).
+    FleetShard(FleetShardJob),
     /// §3.7 benchmark harness.
     Bench(BenchJob),
     /// Fleet-throughput bench phase.
@@ -337,6 +388,8 @@ pub enum JobSpec {
     PredictOne(PredictOneJob),
     /// Serving-metrics snapshot.
     Metrics(MetricsJob),
+    /// Rolling-window serving health probe.
+    Health(HealthJob),
     /// Serve load phase (micro-batched predict throughput).
     ServeBench(ServeBenchJob),
 }
@@ -442,6 +495,7 @@ impl JobSpec {
             JobSpec::Eval(_) => "eval",
             JobSpec::Fleet(_) => "fleet",
             JobSpec::Study(_) => "study",
+            JobSpec::FleetShard(_) => "fleet_shard",
             JobSpec::Bench(_) => "bench",
             JobSpec::FleetBench(_) => "fleet_bench",
             JobSpec::Info(_) => "info",
@@ -450,6 +504,7 @@ impl JobSpec {
             JobSpec::Predict(_) => "predict",
             JobSpec::PredictOne(_) => "predict_one",
             JobSpec::Metrics(_) => "metrics",
+            JobSpec::Health(_) => "health",
             JobSpec::ServeBench(_) => "serve_bench",
         }
     }
@@ -497,6 +552,22 @@ impl JobSpec {
                 push_opt_num(&mut p, "test_n", s.test_n);
                 p.push(("warmup", Json::Bool(s.warmup)));
                 push_opt_path(&mut p, "log", &s.log);
+            }
+            JobSpec::FleetShard(f) => {
+                p.push(("data", Json::str(f.data.name())));
+                p.push(("config", f.config.to_json()));
+                p.push((
+                    "seeds",
+                    Json::Arr(f.seeds.iter().map(|s| Json::str(&s.to_string())).collect()),
+                ));
+                p.push(("start", Json::num(f.start as f64)));
+                p.push(("shard", Json::num(f.shard as f64)));
+                push_opt_num(&mut p, "parallel", f.parallel);
+                push_opt_num(&mut p, "train_n", f.train_n);
+                push_opt_num(&mut p, "test_n", f.test_n);
+                if let Some(h) = &f.data_hash {
+                    p.push(("data_hash", Json::str(h)));
+                }
             }
             JobSpec::Bench(b) => {
                 let c = &b.config;
@@ -576,6 +647,9 @@ impl JobSpec {
                 push_opt_num(&mut p, "test_n", po.test_n);
             }
             JobSpec::Metrics(MetricsJob) => {}
+            JobSpec::Health(h) => {
+                push_opt_num(&mut p, "window_s", h.window_s.map(|x| x as usize));
+            }
             JobSpec::ServeBench(sb) => {
                 let c = &sb.config;
                 p.push(("variant", Json::str(&c.variant)));
@@ -677,6 +751,38 @@ impl JobSpec {
                     log: opt_path(j, "log")?,
                 })
             }
+            "fleet_shard" => {
+                let seeds = j
+                    .get("seeds")
+                    .context("fleet_shard jobs need a 'seeds' array")?
+                    .as_arr()
+                    .context("job key 'seeds'")?
+                    .iter()
+                    .map(|s| match s {
+                        // Canonical form: decimal strings (u64 seeds exceed
+                        // JSON's exact-integer range).
+                        Json::Str(t) => t
+                            .parse::<u64>()
+                            .map_err(|e| anyhow::anyhow!("bad seed '{t}': {e}")),
+                        other => Ok(other.as_f64()? as u64),
+                    })
+                    .collect::<Result<Vec<_>>>()
+                    .context("job key 'seeds'")?;
+                if seeds.is_empty() {
+                    bail!("fleet_shard jobs need at least one seed");
+                }
+                JobSpec::FleetShard(FleetShardJob {
+                    config: parse_config(j)?,
+                    data: parse_data(j)?,
+                    seeds,
+                    start: opt_usize(j, "start")?.unwrap_or(0),
+                    shard: opt_usize(j, "shard")?.unwrap_or(0),
+                    parallel: opt_usize(j, "parallel")?,
+                    train_n: opt_usize(j, "train_n")?,
+                    test_n: opt_usize(j, "test_n")?,
+                    data_hash: opt_str(j, "data_hash")?,
+                })
+            }
             "bench" => {
                 let d = BenchConfig::default();
                 JobSpec::Bench(BenchJob {
@@ -767,6 +873,9 @@ impl JobSpec {
                 test_n: opt_usize(j, "test_n")?,
             }),
             "metrics" => JobSpec::Metrics(MetricsJob),
+            "health" => JobSpec::Health(HealthJob {
+                window_s: opt_usize(j, "window_s")?.map(|x| x as u64),
+            }),
             "serve_bench" => {
                 let d = ServeBenchConfig::default();
                 JobSpec::ServeBench(ServeBenchJob {
@@ -793,8 +902,8 @@ impl JobSpec {
             }
             other => bail!(
                 "unknown job kind '{other}' \
-                 (train|eval|fleet|study|bench|fleet_bench|serve_bench|info|save|load|predict|\
-                 predict_one|metrics)"
+                 (train|eval|fleet|study|fleet_shard|bench|fleet_bench|serve_bench|info|save|load|\
+                 predict|predict_one|metrics|health)"
             ),
         })
     }
@@ -921,6 +1030,59 @@ mod tests {
             &parse(r#"{"job": "study", "policies": ["random+bogus=1"]}"#).unwrap()
         )
         .is_err());
+    }
+
+    #[test]
+    fn fleet_shard_and_health_specs_round_trip() {
+        // u64 seeds above 2^53 must survive the trip exactly (strings on
+        // the wire).
+        let big = u64::MAX - 7;
+        let f = FleetShardJob {
+            config: TrainConfig::default(),
+            data: DataKind::Cifar10,
+            seeds: vec![3, big, 17],
+            start: 4,
+            shard: 1,
+            parallel: Some(2),
+            train_n: Some(64),
+            test_n: Some(32),
+            data_hash: Some("0123456789abcdef0123456789abcdef".into()),
+        };
+        match round_trip(&JobSpec::FleetShard(f)) {
+            JobSpec::FleetShard(f) => {
+                assert_eq!(f.seeds, vec![3, big, 17]);
+                assert_eq!(f.start, 4);
+                assert_eq!(f.shard, 1);
+                assert_eq!(f.parallel, Some(2));
+                assert_eq!(f.data_hash.as_deref(), Some("0123456789abcdef0123456789abcdef"));
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        // Seeds are mandatory and non-empty; numeric spellings are accepted.
+        assert!(JobSpec::from_json(&parse(r#"{"job": "fleet_shard"}"#).unwrap()).is_err());
+        assert!(
+            JobSpec::from_json(&parse(r#"{"job": "fleet_shard", "seeds": []}"#).unwrap()).is_err()
+        );
+        match JobSpec::from_json(&parse(r#"{"job": "fleet_shard", "seeds": [5, "9"]}"#).unwrap())
+            .unwrap()
+        {
+            JobSpec::FleetShard(f) => {
+                assert_eq!(f.seeds, vec![5, 9]);
+                assert_eq!(f.start, 0);
+                assert_eq!(f.data_hash, None);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+
+        let h = HealthJob { window_s: Some(10) };
+        match round_trip(&JobSpec::Health(h)) {
+            JobSpec::Health(h) => assert_eq!(h.window_s, Some(10)),
+            other => panic!("wrong kind: {other:?}"),
+        }
+        match JobSpec::from_json(&parse(r#"{"job": "health"}"#).unwrap()).unwrap() {
+            JobSpec::Health(h) => assert_eq!(h.window_s, None),
+            other => panic!("wrong kind: {other:?}"),
+        }
     }
 
     #[test]

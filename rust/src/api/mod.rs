@@ -49,7 +49,7 @@ pub mod registry;
 pub use engine::{CancelToken, Engine, EngineConfig, JobHandle};
 pub use event::{validate_result, Event, JobId, JobResult};
 pub use job::{
-    BenchJob, EvalJob, FleetBenchJob, FleetJob, InfoJob, JobSpec, LoadJob, MetricsJob,
-    PredictJob, PredictOneJob, SaveJob, ServeBenchJob, StudyJob, TrainJob,
+    BenchJob, EvalJob, FleetBenchJob, FleetJob, FleetShardJob, HealthJob, InfoJob, JobSpec,
+    LoadJob, MetricsJob, PredictJob, PredictOneJob, SaveJob, ServeBenchJob, StudyJob, TrainJob,
 };
 pub use registry::{Registry, WarmModel};

@@ -113,6 +113,17 @@ pub struct TrainConfig {
     /// taken at different parallelism levels must compare equal modulo
     /// times.
     pub fleet_parallel: usize,
+    /// Remote serve workers a fleet/study is sharded across, as a
+    /// comma-separated `host:port,host:port` pool (empty = run locally).
+    /// Like `fleet_parallel` this is a pure scheduling knob — merged
+    /// remote results are bit-identical to local runs (DESIGN.md §13) —
+    /// so it is deliberately NOT serialized by [`TrainConfig::to_json`]:
+    /// reports taken distributed and local must compare byte-equal, and a
+    /// config shipped to a worker must never make the worker recurse.
+    pub dist_workers: String,
+    /// Per-shard deadline in seconds for distributed fleets (`0` = the
+    /// 600 s default). Not serialized, same reasoning as `dist_workers`.
+    pub dist_timeout_s: f64,
     /// RNG seed of the run (fleets fork per-run seeds from this).
     pub seed: u64,
     /// Target accuracy for time-to-target / epochs-to-target reporting
@@ -151,6 +162,8 @@ impl Default for TrainConfig {
             workers: 0,
             prefetch_depth: 2,
             fleet_parallel: 0,
+            dist_workers: String::new(),
+            dist_timeout_s: 600.0,
             seed: 0,
             target_acc: 0.70,
             eval_every_epoch: false,
@@ -242,6 +255,8 @@ impl TrainConfig {
             "workers" => self.workers = value.parse().map_err(|_| bad())?,
             "prefetch_depth" => self.prefetch_depth = value.parse().map_err(|_| bad())?,
             "fleet_parallel" => self.fleet_parallel = value.parse().map_err(|_| bad())?,
+            "dist_workers" => self.dist_workers = value.to_string(),
+            "dist_timeout_s" => self.dist_timeout_s = value.parse().map_err(|_| bad())?,
             "seed" => self.seed = value.parse().map_err(|_| bad())?,
             "target_acc" | "target" => self.target_acc = value.parse().map_err(|_| bad())?,
             "eval_every_epoch" => {
@@ -292,9 +307,10 @@ impl TrainConfig {
     }
 
     /// Serialize to a JSON object holding **every** [`CONFIG_KEYS`] key
-    /// except `fleet_parallel` (a pure throughput knob — fleet logs taken
-    /// at different parallelism levels must compare equal, see the field
-    /// doc). The emitted values round-trip through
+    /// except the pure scheduling knobs `fleet_parallel`, `dist_workers`,
+    /// and `dist_timeout_s` (fleet logs taken at different parallelism
+    /// levels — or distributed vs local — must compare equal, see the
+    /// field docs). The emitted values round-trip through
     /// [`TrainConfig::from_json`] bit-exactly; the round-trip test pins
     /// this for every key so the config cannot silently drift as it grows.
     pub fn to_json(&self) -> Json {
@@ -391,6 +407,8 @@ pub const CONFIG_KEYS: &[&str] = &[
     "workers",
     "prefetch_depth",
     "fleet_parallel",
+    "dist_workers",
+    "dist_timeout_s",
     "seed",
     "target_acc",
     "eval_every_epoch",
@@ -408,6 +426,8 @@ pub const ENV_KEYS: &[(&str, &str)] = &[
     ("AIRBENCH_WORKERS", "workers"),
     ("AIRBENCH_PREFETCH_DEPTH", "prefetch_depth"),
     ("AIRBENCH_FLEET_PARALLEL", "fleet_parallel"),
+    ("AIRBENCH_DIST_WORKERS", "dist_workers"),
+    ("AIRBENCH_DIST_TIMEOUT_S", "dist_timeout_s"),
     ("AIRBENCH_SEED", "seed"),
 ];
 
@@ -510,6 +530,20 @@ mod tests {
     }
 
     #[test]
+    fn dist_keys_set_but_never_serialize() {
+        let mut c = TrainConfig::default();
+        c.set("dist_workers", "127.0.0.1:7601,127.0.0.1:7602").unwrap();
+        c.set("dist_timeout_s", "45").unwrap();
+        assert_eq!(c.dist_workers, "127.0.0.1:7601,127.0.0.1:7602");
+        assert_eq!(c.dist_timeout_s, 45.0);
+        assert!(c.set("dist_timeout_s", "soon").is_err());
+        // Scheduling knobs only: a distributed run's report must serialize
+        // identically to a local one, and a config shipped to a worker
+        // must not carry the pool (the worker would recurse).
+        assert_eq!(c.to_json(), TrainConfig::default().to_json());
+    }
+
+    #[test]
     fn set_rejects_unknown_key_and_bad_value() {
         let mut c = TrainConfig::default();
         assert!(c.set("nope", "1").is_err());
@@ -545,6 +579,8 @@ mod tests {
             "workers" => "4",
             "prefetch_depth" => "5",
             "fleet_parallel" => "2",
+            "dist_workers" => "127.0.0.1:7601",
+            "dist_timeout_s" => "45",
             // Above 2^53 on purpose: pins the string serialization of
             // seeds (an f64 JSON number would corrupt it).
             "seed" => "9007199254740995",
@@ -558,15 +594,16 @@ mod tests {
     fn every_config_key_survives_json_round_trip() {
         // The anti-drift contract: every canonical key set() accepts must
         // (a) be settable, and (b) survive to_json -> from_json bit-exactly
-        // — except fleet_parallel, which is deliberately never serialized.
+        // — except the scheduling knobs (fleet_parallel, dist_*), which are
+        // deliberately never serialized.
         for &key in CONFIG_KEYS {
             let mut c = TrainConfig::default();
             c.set(key, sample_value(key))
                 .unwrap_or_else(|e| panic!("set('{key}') rejected its sample value: {e}"));
             let rt = TrainConfig::from_json(&c.to_json())
                 .unwrap_or_else(|e| panic!("round trip of '{key}' failed to parse: {e}"));
-            if key == "fleet_parallel" {
-                assert_eq!(rt, TrainConfig::default(), "fleet_parallel must not serialize");
+            if matches!(key, "fleet_parallel" | "dist_workers" | "dist_timeout_s") {
+                assert_eq!(rt, TrainConfig::default(), "'{key}' must not serialize");
             } else {
                 assert_ne!(c, TrainConfig::default(), "sample for '{key}' is the default");
                 assert_eq!(rt, c, "key '{key}' drifted through the JSON round trip");
@@ -581,7 +618,7 @@ mod tests {
         let mut want: Vec<&str> = CONFIG_KEYS
             .iter()
             .copied()
-            .filter(|&k| k != "fleet_parallel")
+            .filter(|&k| !matches!(k, "fleet_parallel" | "dist_workers" | "dist_timeout_s"))
             .collect();
         want.sort_unstable();
         assert_eq!(got, want, "to_json keys diverged from CONFIG_KEYS");

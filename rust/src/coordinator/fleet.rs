@@ -42,17 +42,52 @@ use crate::stats::study::{StudyCell, StudyResult};
 use crate::util::json::Json;
 
 /// Aggregated results of one fleet.
+///
+/// The scalar per-run vectors (`accuracies`, `accuracies_no_tta`, `times`,
+/// `epochs_to_target`) are the report-bearing state: everything
+/// [`FleetResult::to_json`] emits derives from them, so a fleet merged
+/// from remote shard results (which ship only these vectors over the wire
+/// — see [`crate::coordinator::remote`]) reports identically to a local
+/// one. `runs` carries the full [`TrainResult`] records when the fleet ran
+/// in-process and is empty for merged remote fleets.
 #[derive(Clone, Debug)]
 pub struct FleetResult {
-    /// Full per-run results, in seed order.
+    /// Full per-run results, in seed order (empty for remote-merged
+    /// fleets — the wire ships scalars, not whole `TrainResult`s).
     pub runs: Vec<TrainResult>,
     /// Final accuracies (configured TTA), one per run.
     pub accuracies: Vec<f64>,
     /// Final identity-view accuracies, one per run.
     pub accuracies_no_tta: Vec<f64>,
+    /// Paper-protocol wall time per run, in seed order.
+    pub times: Vec<f64>,
+    /// First epoch crossing `target_acc` per run (`None` = never hit).
+    pub epochs_to_target: Vec<Option<f64>>,
 }
 
 impl FleetResult {
+    /// Build a fleet purely from per-run scalars in seed order (the
+    /// remote-merge constructor; `runs` stays empty).
+    pub fn from_scalars(
+        accuracies: Vec<f64>,
+        accuracies_no_tta: Vec<f64>,
+        times: Vec<f64>,
+        epochs_to_target: Vec<Option<f64>>,
+    ) -> FleetResult {
+        FleetResult {
+            runs: Vec::new(),
+            accuracies,
+            accuracies_no_tta,
+            times,
+            epochs_to_target,
+        }
+    }
+
+    /// Number of runs in the fleet.
+    pub fn n(&self) -> usize {
+        self.accuracies.len()
+    }
+
     /// Mean/std/CI of the TTA accuracies (built incrementally — see
     /// [`crate::stats::basic::Welford`]).
     pub fn summary(&self) -> Summary {
@@ -66,16 +101,16 @@ impl FleetResult {
 
     /// Mean paper-protocol wall time per run.
     pub fn mean_time_seconds(&self) -> f64 {
-        if self.runs.is_empty() {
+        if self.times.is_empty() {
             return 0.0;
         }
-        self.runs.iter().map(|r| r.time_seconds).sum::<f64>() / self.runs.len() as f64
+        self.times.iter().sum::<f64>() / self.times.len() as f64
     }
 
     /// Mean of the first-crossing epochs among runs that hit the target;
     /// `None` when no run did.
     pub fn mean_epochs_to_target(&self) -> Option<f64> {
-        let hits: Vec<f64> = self.runs.iter().filter_map(|r| r.epochs_to_target).collect();
+        let hits: Vec<f64> = self.epochs_to_target.iter().filter_map(|&e| e).collect();
         if hits.is_empty() {
             None
         } else {
@@ -95,11 +130,11 @@ impl FleetResult {
     pub fn to_json(&self, cfg: &crate::config::TrainConfig) -> Json {
         let s = self.summary();
         let s_no = self.summary_no_tta();
-        let times: Vec<f64> = self.runs.iter().map(|r| r.time_seconds).collect();
-        let ts = Summary::of(&times);
+        let times = &self.times;
+        let ts = Summary::of(times);
         Json::obj(vec![
             ("config", cfg.to_json()),
-            ("n", Json::num(self.runs.len() as f64)),
+            ("n", Json::num(self.n() as f64)),
             ("mean", Json::num(s.mean)),
             ("std", Json::num(s.std)),
             ("ci95", Json::num(s.ci95())),
@@ -122,9 +157,9 @@ impl FleetResult {
             (
                 "epochs_to_target",
                 Json::Arr(
-                    self.runs
+                    self.epochs_to_target
                         .iter()
-                        .map(|r| r.epochs_to_target.map(Json::num).unwrap_or(Json::Null))
+                        .map(|e| e.map(Json::num).unwrap_or(Json::Null))
                         .collect(),
                 ),
             ),
@@ -164,10 +199,14 @@ pub fn fleet_seeds(cfg: &TrainConfig, n: usize) -> Vec<u64> {
 fn assemble(runs: Vec<TrainResult>) -> FleetResult {
     let accuracies = runs.iter().map(|r| r.accuracy).collect();
     let accuracies_no_tta = runs.iter().map(|r| r.accuracy_no_tta).collect();
+    let times = runs.iter().map(|r| r.time_seconds).collect();
+    let epochs_to_target = runs.iter().map(|r| r.epochs_to_target).collect();
     FleetResult {
         runs,
         accuracies,
         accuracies_no_tta,
+        times,
+        epochs_to_target,
     }
 }
 
@@ -210,9 +249,27 @@ pub fn run_fleet(
     n: usize,
     obs: Option<&mut dyn Observer>,
 ) -> Result<FleetResult> {
+    run_fleet_seeded(engine, train_data, test_data, cfg, &fleet_seeds(cfg, n), obs)
+}
+
+/// [`run_fleet`] over an **explicit** per-run seed slice instead of the
+/// locally forked [`fleet_seeds`] table. This is the worker half of the
+/// distributed path (DESIGN.md §13): a remote coordinator ships each
+/// shard its exact sub-slice of the seed table, so run `i` of the shard
+/// trains with precisely the seed run `start + i` of the whole fleet
+/// would have used locally — bit-identity follows from the per-seed
+/// reproducibility contract, not from where the run executed.
+pub fn run_fleet_seeded(
+    engine: &mut dyn Backend,
+    train_data: &Dataset,
+    test_data: &Dataset,
+    cfg: &TrainConfig,
+    seeds: &[u64],
+    obs: Option<&mut dyn Observer>,
+) -> Result<FleetResult> {
     let mut null = NullObserver;
     let obs = obs.unwrap_or(&mut null);
-    let seeds = fleet_seeds(cfg, n);
+    let n = seeds.len();
     let mut runs = Vec::with_capacity(n);
     for (i, &seed) in seeds.iter().enumerate() {
         let mut run_cfg = cfg.clone();
@@ -251,8 +308,31 @@ pub fn run_fleet_parallel(
     parallel: usize,
     obs: Option<&mut dyn Observer>,
 ) -> Result<FleetResult> {
+    run_fleet_parallel_seeded(
+        factory,
+        train_data,
+        test_data,
+        cfg,
+        &fleet_seeds(cfg, n),
+        parallel,
+        obs,
+    )
+}
+
+/// [`run_fleet_parallel`] over an **explicit** per-run seed slice (the
+/// shard-execution path — see [`run_fleet_seeded`] for the contract).
+pub fn run_fleet_parallel_seeded(
+    factory: &BackendFactory,
+    train_data: &Dataset,
+    test_data: &Dataset,
+    cfg: &TrainConfig,
+    seeds: &[u64],
+    parallel: usize,
+    obs: Option<&mut dyn Observer>,
+) -> Result<FleetResult> {
     let mut null = NullObserver;
     let obs = obs.unwrap_or(&mut null);
+    let n = seeds.len();
     let budget = fleet_budget(factory, parallel, n);
     if budget.runs_parallel <= 1 || n <= 1 {
         // Sequential fallback. Native engines still take their budgeted
@@ -263,7 +343,7 @@ pub fn run_fleet_parallel(
         } else {
             factory.spawn()?
         };
-        return run_fleet(engine.as_mut(), train_data, test_data, cfg, n, Some(obs));
+        return run_fleet_seeded(engine.as_mut(), train_data, test_data, cfg, seeds, Some(obs));
     }
 
     // Worker-side cancellation poll: the scheduler owns the observer, so
@@ -276,7 +356,6 @@ pub fn run_fleet_parallel(
         }
     }
 
-    let seeds = fleet_seeds(cfg, n);
     let mut workers = Vec::with_capacity(budget.runs_parallel);
     for _ in 0..budget.runs_parallel {
         workers.push(factory.spawn_send(budget.kernel_threads)?);
@@ -291,7 +370,7 @@ pub fn run_fleet_parallel(
     std::thread::scope(|s| {
         for mut worker in workers {
             let tx = tx.clone();
-            let (next, stop, seeds) = (&next, &stop, &seeds);
+            let (next, stop) = (&next, &stop);
             s.spawn(move || loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n || stop.load(Ordering::Relaxed) {

@@ -5,6 +5,9 @@
 //! * [`trainer`] — one training run under the paper's timing protocol (§2);
 //! * [`evaluator`] — multi-crop TTA inference (§3.5);
 //! * [`fleet`] — n-run statistical experiments (§5);
+//! * [`remote`] — the distributed fleet coordinator: seed-range shards
+//!   dispatched to remote `airbench serve` workers over the NDJSON
+//!   protocol, merged bit-identically (DESIGN.md §13);
 //! * [`observer`] — typed lifecycle hooks + cooperative cancellation that
 //!   every entry point above reports through (the `api` job engine's feed).
 
@@ -12,12 +15,17 @@ pub mod evaluator;
 pub mod fleet;
 pub mod lookahead;
 pub mod observer;
+pub mod remote;
 pub mod schedule;
 pub mod trainer;
 
 pub use evaluator::{evaluate, evaluate_observed, evaluate_source, EvalOutput};
-pub use fleet::{fleet_budget, fleet_seeds, run_fleet, run_fleet_parallel, run_study, FleetResult};
+pub use fleet::{
+    fleet_budget, fleet_seeds, run_fleet, run_fleet_parallel, run_fleet_parallel_seeded,
+    run_fleet_seeded, run_study, FleetResult,
+};
 pub use lookahead::LookaheadState;
 pub use observer::{is_cancelled, is_overloaded, Cancelled, NullObserver, Observer, Overloaded};
+pub use remote::{is_remote_error, plan_shards, RemoteError, Shard, WorkerPool};
 pub use schedule::{AlphaSchedule, DecoupledHyper, Triangle};
 pub use trainer::{train, train_full, train_run, warmup, EpochLog, PhaseTimes, TrainResult};

@@ -112,6 +112,27 @@ pub fn is_overloaded(err: &anyhow::Error) -> bool {
     err.chain().any(|c| c == OVERLOADED_MSG)
 }
 
+/// Prefix of the structured backpressure hint an [`Overloaded`] rejection
+/// may carry as a context layer: `airbench: retry_after_ms=<N>`. The
+/// batcher derives `N` from its live queue depth and recent exec latency
+/// and attaches it with [`retry_after_hint`]; the job engine recovers it
+/// with [`retry_after_ms`] and surfaces it as the `retry_after_ms` key of
+/// the wire `error` event (DESIGN.md §12).
+pub const RETRY_AFTER_PREFIX: &str = "airbench: retry_after_ms=";
+
+/// Render the context layer carrying a retry-after hint of `ms`
+/// milliseconds (attach over an [`Overloaded`] error with `.context(..)`).
+pub fn retry_after_hint(ms: u64) -> String {
+    format!("{RETRY_AFTER_PREFIX}{ms}")
+}
+
+/// Recover the retry-after hint from an error chain, if any layer carries
+/// one (see [`RETRY_AFTER_PREFIX`]).
+pub fn retry_after_ms(err: &anyhow::Error) -> Option<u64> {
+    err.chain()
+        .find_map(|c| c.strip_prefix(RETRY_AFTER_PREFIX)?.parse().ok())
+}
+
 /// Adapter a fleet wraps around its observer when driving the per-run
 /// trainings: epoch-level events of individual runs are suppressed (a
 /// fleet reports per-*run* completions), log lines and the cancellation
@@ -196,6 +217,22 @@ mod tests {
         assert!(!is_overloaded(
             &anyhow::Error::from(Cancelled).context("ctx")
         ));
+    }
+
+    #[test]
+    fn retry_after_hint_round_trips_through_a_context_chain() {
+        use anyhow::Context;
+        let r: anyhow::Result<()> = Err(Overloaded.into());
+        let e = r
+            .context(retry_after_hint(125))
+            .context("predict_one admission")
+            .unwrap_err();
+        assert!(is_overloaded(&e));
+        assert_eq!(retry_after_ms(&e), Some(125));
+        // A bare rejection (no hint layer) parses to None, not garbage.
+        let bare: anyhow::Error = Overloaded.into();
+        assert!(is_overloaded(&bare));
+        assert_eq!(retry_after_ms(&bare), None);
     }
 
     #[test]

@@ -1,0 +1,918 @@
+//! Distributed fleet coordinator: seed-range shards over remote workers.
+//!
+//! One engine acts as **coordinator** for a pool of remote `airbench
+//! serve` workers (DESIGN.md §13): a Fleet or Study of `n` runs is split
+//! into contiguous seed-range [`Shard`]s ([`plan_shards`]), each shipped
+//! as a typed `fleet_shard` JobSpec over the existing NDJSON serve
+//! protocol, executed remotely by the seeded fleet scheduler
+//! ([`crate::coordinator::fleet::run_fleet_parallel_seeded`]), and merged
+//! back into seed-ordered per-run vectors.
+//!
+//! **Determinism.** The coordinator forks the per-run seed table once
+//! ([`crate::coordinator::fleet::fleet_seeds`]) and ships each shard its
+//! exact sub-slice, so run `start + i` trains with precisely the seed it
+//! would have used locally — on any worker, at any shard count, in any
+//! arrival order. Accuracies cross the wire as JSON numbers serialized
+//! shortest-round-trip exact, and the merged [`FleetResult`] feeds the
+//! same report builders a local run feeds, so the merged
+//! `airbench.study/1` report is **byte-identical** to a single-machine
+//! run (`tests/remote_shard.rs` pins this, including through a
+//! mid-shard worker kill). Streamed progress is merged through the
+//! exact-n [`Welford`] accumulator as shards land; the final statistics
+//! are recomputed from the seed-ordered vectors through the identical
+//! Welford-backed `Summary::of` path.
+//!
+//! **Unreliable networks.** Every failure mode is a typed [`RemoteError`]
+//! (marker-message pattern, like `Cancelled`/`Overloaded`): a connect
+//! failure, protocol violation, lost worker (EOF / IO error mid-shard),
+//! or per-shard timeout. A dead worker's shard is **re-queued** to the
+//! survivors; result application is **at-most-once**, keyed by shard id,
+//! so a retried shard can never double-count. Cooperative cancellation
+//! fans out as `{"job":"cancel","id":N}` control lines to every worker
+//! (and the serve-side disconnect epilogue cancels whatever a vanished
+//! coordinator left running). Workers verify the canonical dataset by
+//! content hash before training a shard and reject mismatches with the
+//! typed data-mismatch marker, which the coordinator treats as fatal —
+//! retrying a wrong dataset elsewhere cannot help.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{RecvTimeoutError, Sender};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::coordinator::fleet::{fleet_seeds, FleetResult};
+use crate::coordinator::observer::{Cancelled, NullObserver, Observer};
+use crate::data::augment::Policy;
+use crate::data::Dataset;
+use crate::experiments::DataKind;
+use crate::stats::basic::Welford;
+use crate::stats::study::{StudyCell, StudyResult};
+use crate::util::json::{parse, Json};
+
+// ---------------------------------------------------------------------------
+// Typed failure modes
+// ---------------------------------------------------------------------------
+
+/// Failure modes of the distributed path, one marker message each (the
+/// `Cancelled` pattern: construct with `Err(kind.err())`, detect with
+/// [`is_remote_error`] after context layers were attached — the vendored
+/// `anyhow` shim stores string chains, so a distinctive marker match is
+/// the strongest detection available).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RemoteError {
+    /// A worker address refused or failed the TCP connect.
+    Connect,
+    /// A worker spoke something that is not the serve protocol (bad JSON,
+    /// a rejected job spec, a result of the wrong kind or arity).
+    Protocol,
+    /// A connected worker vanished mid-shard (EOF or IO error).
+    WorkerLost,
+    /// A shard exceeded the per-shard deadline (`dist_timeout_s`).
+    ShardTimeout,
+    /// The worker's canonical dataset hash does not match the
+    /// coordinator's (raised worker-side, detected in the wire message).
+    DataMismatch,
+}
+
+impl RemoteError {
+    /// The exact marker message this failure mode renders with.
+    pub const fn marker(self) -> &'static str {
+        match self {
+            RemoteError::Connect => "airbench: remote connect failed",
+            RemoteError::Protocol => "airbench: remote protocol violation",
+            RemoteError::WorkerLost => "airbench: remote worker lost",
+            RemoteError::ShardTimeout => "airbench: remote shard timeout",
+            RemoteError::DataMismatch => "airbench: worker dataset mismatch",
+        }
+    }
+
+    /// Wrap this failure mode as an error value (`Err(kind.err())`).
+    pub fn err(self) -> anyhow::Error {
+        anyhow::Error::from(self)
+    }
+}
+
+impl std::fmt::Display for RemoteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.marker())
+    }
+}
+
+impl std::error::Error for RemoteError {}
+
+/// Whether `err` is (rooted in) the given distributed failure mode: some
+/// layer of its context chain is exactly that mode's marker.
+pub fn is_remote_error(err: &anyhow::Error, kind: RemoteError) -> bool {
+    err.chain().any(|c| c == kind.marker())
+}
+
+/// Attach one context layer to an already-built error value (the vendored
+/// shim's `Context` trait lives on `Result`/`Option`, not on `Error`).
+fn layer(e: anyhow::Error, ctx: impl std::fmt::Display + Send + Sync + 'static) -> anyhow::Error {
+    Err::<(), anyhow::Error>(e).context(ctx).unwrap_err()
+}
+
+// ---------------------------------------------------------------------------
+// Shard planning
+// ---------------------------------------------------------------------------
+
+/// One contiguous seed-range shard of a fleet: runs `start ..
+/// start + len` of the coordinator's [`fleet_seeds`] table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    /// Stable shard id — the key of at-most-once result application.
+    pub id: usize,
+    /// First run index (into the whole fleet's seed table).
+    pub start: usize,
+    /// Number of runs in the shard (always > 0 in a plan).
+    pub len: usize,
+}
+
+/// Split `runs` into one contiguous shard per worker, balanced to within
+/// one run: the first `runs % workers` shards get `runs / workers + 1`
+/// runs, the rest `runs / workers`; would-be empty shards (more workers
+/// than runs) are dropped. Shard ids are assigned in seed order, so the
+/// plan is a pure function of `(runs, workers)` — the golden fixture in
+/// `tests/remote_shard.rs` pins representative shapes, and a property
+/// test proves shard unions reconstruct the seed table exactly with no
+/// overlap.
+pub fn plan_shards(runs: usize, workers: usize) -> Vec<Shard> {
+    if runs == 0 || workers == 0 {
+        return Vec::new();
+    }
+    let base = runs / workers;
+    let extra = runs % workers;
+    let mut shards = Vec::new();
+    let mut start = 0;
+    for w in 0..workers {
+        let len = base + usize::from(w < extra);
+        if len == 0 {
+            break;
+        }
+        shards.push(Shard {
+            id: shards.len(),
+            start,
+            len,
+        });
+        start += len;
+    }
+    shards
+}
+
+/// Content fingerprint of the canonical (train, test) dataset pair:
+/// md5 over each split's image-buffer hash, labels, and class count. The
+/// coordinator stamps it into every shard spec; workers recompute it over
+/// their own copy and reject mismatches with the typed
+/// [`RemoteError::DataMismatch`] marker — a worker holding different data
+/// would silently break bit-identity, the one thing the distributed path
+/// must never do.
+pub fn dataset_fingerprint(train: &Dataset, test: &Dataset) -> String {
+    let mut bytes = Vec::new();
+    for ds in [train, test] {
+        bytes.extend_from_slice(crate::runtime::checkpoint::f32_md5(ds.images.data()).as_bytes());
+        for &l in &ds.labels {
+            bytes.extend_from_slice(&l.to_le_bytes());
+        }
+        bytes.extend_from_slice(&(ds.num_classes as u64).to_le_bytes());
+    }
+    crate::util::md5::md5_hex(&bytes)
+}
+
+// ---------------------------------------------------------------------------
+// The worker pool
+// ---------------------------------------------------------------------------
+
+/// A parsed pool of remote serve workers plus the per-shard deadline.
+#[derive(Clone, Debug)]
+pub struct WorkerPool {
+    /// Worker addresses (`host:port`), one coordinator connection each.
+    pub addrs: Vec<String>,
+    /// Per-shard deadline: a shard not terminal within this window marks
+    /// its worker lost and re-queues the shard to the survivors.
+    pub timeout: Duration,
+}
+
+impl WorkerPool {
+    /// Parse a comma-separated `host:port,host:port` pool spec (the
+    /// `--workers` / `dist_workers` value) and a per-shard timeout in
+    /// seconds (`dist_timeout_s`; `0` falls back to the 600 s default).
+    pub fn parse(spec: &str, timeout_s: f64) -> Result<WorkerPool> {
+        let addrs: Vec<String> = spec
+            .split(',')
+            .map(str::trim)
+            .filter(|a| !a.is_empty())
+            .map(str::to_string)
+            .collect();
+        if addrs.is_empty() {
+            bail!("worker pool spec '{spec}' names no workers");
+        }
+        for a in &addrs {
+            if !a.contains(':') {
+                bail!("worker address '{a}' is not host:port");
+            }
+        }
+        let secs = if timeout_s > 0.0 { timeout_s } else { 600.0 };
+        Ok(WorkerPool {
+            addrs,
+            timeout: Duration::from_secs_f64(secs),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Remote entry points (what the job engine dispatches to)
+// ---------------------------------------------------------------------------
+
+/// What a shard job needs besides the seed slice: the resolved config and
+/// the dataset identity the workers must verify.
+pub struct RemoteJob<'a> {
+    /// Resolved run config (the coordinator applies policies — workers
+    /// only ever see plain fleet-shard configs).
+    pub cfg: &'a TrainConfig,
+    /// Dataset distribution under test.
+    pub data: DataKind,
+    /// Train-set size override (`None` = the worker's env scale).
+    pub train_n: Option<usize>,
+    /// Test-set size override.
+    pub test_n: Option<usize>,
+    /// Canonical dataset fingerprint ([`dataset_fingerprint`]); workers
+    /// verify their copy against it before training.
+    pub data_hash: Option<String>,
+}
+
+/// Run an `n`-run fleet sharded across `pool`, merged bit-identically to
+/// the local [`crate::coordinator::fleet::run_fleet_parallel`] (the
+/// merged result carries the per-run scalar vectors in seed order; full
+/// `TrainResult` records stay on the workers).
+pub fn run_fleet_remote(
+    pool: &WorkerPool,
+    job: &RemoteJob<'_>,
+    runs: usize,
+    obs: Option<&mut dyn Observer>,
+) -> Result<FleetResult> {
+    let mut null = NullObserver;
+    let obs = obs.unwrap_or(&mut null);
+    if runs == 0 {
+        bail!("remote fleet needs at least one run");
+    }
+    let seeds = fleet_seeds(job.cfg, runs);
+    dispatch_cell(pool, job, job.cfg, &seeds, 0, obs)
+}
+
+/// Run a policy × seed study sharded across `pool`: cells run in grid
+/// order (like the local [`crate::coordinator::fleet::run_study`]), each
+/// cell's fleet sharded across every live worker under the **same**
+/// coordinator-forked seed table — the coordinator applies the policy and
+/// ships plain configs, so pairing semantics are exactly the local ones.
+pub fn run_study_remote(
+    pool: &WorkerPool,
+    job: &RemoteJob<'_>,
+    policies: &[Policy],
+    runs: usize,
+    obs: Option<&mut dyn Observer>,
+) -> Result<StudyResult> {
+    let mut null = NullObserver;
+    let obs = obs.unwrap_or(&mut null);
+    if policies.is_empty() {
+        bail!("study needs at least one policy");
+    }
+    if runs == 0 {
+        bail!("study needs at least one run per cell");
+    }
+    let seeds = fleet_seeds(job.cfg, runs);
+    let mut cells = Vec::with_capacity(policies.len());
+    for (ci, policy) in policies.iter().enumerate() {
+        if obs.cancelled() {
+            return Err(Cancelled.into());
+        }
+        let cell = (|| -> Result<StudyCell> {
+            let cell_cfg = policy.apply(job.cfg)?;
+            obs.on_log(&format!(
+                "[study] cell {}/{}: policy {}",
+                ci + 1,
+                policies.len(),
+                policy.name()
+            ));
+            let fleet = dispatch_cell(pool, job, &cell_cfg, &seeds, ci * runs, obs)?;
+            Ok(StudyCell {
+                policy: policy.clone(),
+                fleet,
+            })
+        })()
+        .with_context(|| format!("study cell {ci} ('{}') failed", policy.name()))?;
+        cells.push(cell);
+    }
+    Ok(StudyResult { runs, seeds, cells })
+}
+
+// ---------------------------------------------------------------------------
+// The dispatcher
+// ---------------------------------------------------------------------------
+
+/// Per-shard result scalars as they come back over the wire, in shard-
+/// local run order.
+struct ShardOutcome {
+    accs: Vec<f64>,
+    accs_no_tta: Vec<f64>,
+    times: Vec<f64>,
+    epochs_to_target: Vec<Option<f64>>,
+}
+
+/// Shard one cell's seed table across the pool and merge the outcomes
+/// into a seed-ordered [`FleetResult`].
+fn dispatch_cell(
+    pool: &WorkerPool,
+    job: &RemoteJob<'_>,
+    cfg: &TrainConfig,
+    seeds: &[u64],
+    run_offset: usize,
+    obs: &mut dyn Observer,
+) -> Result<FleetResult> {
+    let shards = plan_shards(seeds.len(), pool.addrs.len());
+    let spec_for = |shard: &Shard| -> Json {
+        // The wire spec: the same typed JobSpec round trip every other
+        // serve client uses. `cfg.to_json()` never emits the distributed
+        // keys, so a worker can never recurse into coordinator mode.
+        crate::api::JobSpec::FleetShard(crate::api::FleetShardJob {
+            config: cfg.clone(),
+            data: job.data,
+            seeds: shard_seeds(seeds, shard),
+            start: shard.start,
+            shard: shard.id,
+            parallel: None,
+            train_n: job.train_n,
+            test_n: job.test_n,
+            data_hash: job.data_hash.clone(),
+        })
+        .to_json()
+    };
+    let outcomes = dispatch_shards(pool, &shards, &spec_for, run_offset, obs)?;
+    // Place each shard's scalars into its seed-ordered slots. Every shard
+    // id is present exactly once (the dispatcher only returns complete
+    // plans), so the merged vectors are bit-identical to a local run's.
+    let n = seeds.len();
+    let mut accs = vec![0.0f64; n];
+    let mut accs_no = vec![0.0f64; n];
+    let mut times = vec![0.0f64; n];
+    let mut epochs = vec![None; n];
+    for shard in &shards {
+        let o = outcomes
+            .get(&shard.id)
+            .with_context(|| format!("shard {} missing from a complete dispatch", shard.id))?;
+        accs[shard.start..shard.start + shard.len].copy_from_slice(&o.accs);
+        accs_no[shard.start..shard.start + shard.len].copy_from_slice(&o.accs_no_tta);
+        times[shard.start..shard.start + shard.len].copy_from_slice(&o.times);
+        epochs[shard.start..shard.start + shard.len].copy_from_slice(&o.epochs_to_target);
+    }
+    Ok(FleetResult::from_scalars(accs, accs_no, times, epochs))
+}
+
+fn shard_seeds(seeds: &[u64], shard: &Shard) -> Vec<u64> {
+    seeds[shard.start..shard.start + shard.len].to_vec()
+}
+
+/// Messages the per-worker client threads stream to the merging loop.
+enum Msg {
+    /// A remote run finished (`global` is the fleet/study-wide index).
+    Run { global: usize, accuracy: f64 },
+    /// A shard landed on `addr` — apply at-most-once by `shard.id`.
+    ShardDone {
+        shard: Shard,
+        addr: String,
+        outcome: ShardOutcome,
+    },
+    /// `addr` is gone (connect/EOF/IO/timeout): `shard`, if any, was in
+    /// flight there and needs re-queueing.
+    WorkerDead {
+        addr: String,
+        shard: Option<Shard>,
+        err: anyhow::Error,
+    },
+    /// Unrecoverable: abort the whole distributed run.
+    Fatal { err: anyhow::Error },
+}
+
+/// How one shard attempt ended, from the driving worker thread's view.
+enum ShardErr {
+    /// The worker is gone; the shard should retry on a survivor.
+    Lost(anyhow::Error),
+    /// Retrying elsewhere cannot help (protocol violation, dataset
+    /// mismatch, a healthy worker reporting a real job failure).
+    Fatal(anyhow::Error),
+    /// The coordinator's own cancellation tripped mid-shard.
+    Cancelled,
+}
+
+/// Drive `shards` across the pool: one client thread per worker, a shared
+/// re-queue, at-most-once application keyed by shard id, streamed Welford
+/// merging for progress, cancellation fan-out. Returns one outcome per
+/// planned shard or the typed error that stopped the run.
+fn dispatch_shards(
+    pool: &WorkerPool,
+    shards: &[Shard],
+    spec_for: &(dyn Fn(&Shard) -> Json + Sync),
+    run_offset: usize,
+    obs: &mut dyn Observer,
+) -> Result<BTreeMap<usize, ShardOutcome>> {
+    let total = shards.len();
+    let queue: Mutex<Vec<Shard>> = Mutex::new(shards.iter().rev().copied().collect());
+    let done_count = AtomicUsize::new(0);
+    let abort = AtomicBool::new(false);
+    let (tx, rx) = std::sync::mpsc::channel::<Msg>();
+
+    let mut done: BTreeMap<usize, ShardOutcome> = BTreeMap::new();
+    let mut merged = Welford::new();
+    let mut live = pool.addrs.len();
+    let mut failure: Option<anyhow::Error> = None;
+    let mut cancelled = false;
+
+    std::thread::scope(|s| {
+        for addr in &pool.addrs {
+            let tx = tx.clone();
+            let (queue, done_count, abort) = (&queue, &done_count, &abort);
+            let timeout = pool.timeout;
+            s.spawn(move || {
+                worker_client(addr, timeout, queue, done_count, total, abort, spec_for, &tx, run_offset);
+            });
+        }
+        drop(tx);
+
+        // The merging loop: apply results at-most-once, re-queue the
+        // shards of dead workers, poll our own cancellation, and stream
+        // progress through the exact-n Welford merge as shards land.
+        loop {
+            if done.len() == total {
+                break;
+            }
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(Msg::Run { global, accuracy }) => obs.on_run(global, accuracy),
+                Ok(Msg::ShardDone {
+                    shard,
+                    addr,
+                    outcome,
+                }) => {
+                    if done.contains_key(&shard.id) {
+                        // At-most-once: a retried shard's duplicate (or a
+                        // straggler's late result) must never double-count.
+                        continue;
+                    }
+                    let mut part = Welford::new();
+                    for &a in &outcome.accs {
+                        part.push(a);
+                    }
+                    merged.merge(&part);
+                    let s = merged.summary();
+                    obs.on_log(&format!(
+                        "[remote] shard {} (runs {}..{}) done on {addr}: merged mean {:.4} over {}/{} runs",
+                        shard.id,
+                        shard.start,
+                        shard.start + shard.len,
+                        s.mean,
+                        s.n,
+                        shards.iter().map(|sh| sh.len).sum::<usize>(),
+                    ));
+                    done.insert(shard.id, outcome);
+                    done_count.store(done.len(), Ordering::Relaxed);
+                }
+                Ok(Msg::WorkerDead { addr, shard, err }) => {
+                    live -= 1;
+                    obs.on_log(&format!(
+                        "[remote] worker {addr} lost ({} live): {err:#}",
+                        live
+                    ));
+                    if let Some(sh) = shard {
+                        if !done.contains_key(&sh.id) {
+                            queue.lock().unwrap().push(sh);
+                        }
+                    }
+                    if live == 0 && done.len() < total {
+                        failure = Some(layer(err, "distributed run failed: all workers lost"));
+                        abort.store(true, Ordering::Relaxed);
+                        break;
+                    }
+                }
+                Ok(Msg::Fatal { err }) => {
+                    failure = Some(err);
+                    abort.store(true, Ordering::Relaxed);
+                    break;
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if obs.cancelled() {
+                        cancelled = true;
+                        abort.store(true, Ordering::Relaxed);
+                        break;
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        abort.store(true, Ordering::Relaxed);
+        done_count.store(total, Ordering::Relaxed);
+    });
+
+    if let Some(e) = failure {
+        return Err(e);
+    }
+    if cancelled || obs.cancelled() {
+        return Err(Cancelled.into());
+    }
+    if done.len() != total {
+        bail!("distributed run ended with {}/{} shards", done.len(), total);
+    }
+    Ok(done)
+}
+
+/// One worker's client loop: connect once, then claim shards from the
+/// shared queue until the plan completes, the run aborts, or this worker
+/// dies. A dying worker reports its in-flight shard for re-queueing and
+/// exits; idle workers linger (sleeping) while shards are outstanding, so
+/// a shard re-queued by a later death still finds a survivor.
+#[allow(clippy::too_many_arguments)]
+fn worker_client(
+    addr: &str,
+    timeout: Duration,
+    queue: &Mutex<Vec<Shard>>,
+    done_count: &AtomicUsize,
+    total: usize,
+    abort: &AtomicBool,
+    spec_for: &(dyn Fn(&Shard) -> Json + Sync),
+    tx: &Sender<Msg>,
+    run_offset: usize,
+) {
+    let mut conn: Option<WorkerConn> = None;
+    loop {
+        if abort.load(Ordering::Relaxed) || done_count.load(Ordering::Relaxed) >= total {
+            return;
+        }
+        let shard = queue.lock().unwrap().pop();
+        let Some(shard) = shard else {
+            std::thread::sleep(Duration::from_millis(20));
+            continue;
+        };
+        // Lazy connect: a worker that is down fails its first claim and
+        // the shard retries on a survivor.
+        if conn.is_none() {
+            match WorkerConn::connect(addr) {
+                Ok(c) => conn = Some(c),
+                Err(e) => {
+                    let _ = tx.send(Msg::WorkerDead {
+                        addr: addr.to_string(),
+                        shard: Some(shard),
+                        err: e,
+                    });
+                    return;
+                }
+            }
+        }
+        let res = run_shard(conn.as_mut().unwrap(), &shard, timeout, abort, spec_for, tx, run_offset);
+        match res {
+            Ok(outcome) => {
+                let _ = tx.send(Msg::ShardDone {
+                    shard,
+                    addr: addr.to_string(),
+                    outcome,
+                });
+            }
+            Err(ShardErr::Lost(e)) => {
+                let _ = tx.send(Msg::WorkerDead {
+                    addr: addr.to_string(),
+                    shard: Some(shard),
+                    err: e,
+                });
+                return;
+            }
+            Err(ShardErr::Fatal(e)) => {
+                let _ = tx.send(Msg::Fatal { err: e });
+                return;
+            }
+            Err(ShardErr::Cancelled) => return,
+        }
+    }
+}
+
+/// One NDJSON serve connection, read in timeout slices so cancellation
+/// and deadlines are polled between lines.
+struct WorkerConn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl WorkerConn {
+    fn connect(addr: &str) -> Result<WorkerConn> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting worker {addr}"))
+            .context(RemoteError::Connect.marker())?;
+        stream
+            .set_read_timeout(Some(Duration::from_millis(100)))
+            .context(RemoteError::Connect.marker())?;
+        let reader = BufReader::new(stream.try_clone().context(RemoteError::Connect.marker())?);
+        Ok(WorkerConn {
+            reader,
+            writer: stream,
+        })
+    }
+
+    fn send_line(&mut self, j: &Json) -> std::io::Result<()> {
+        writeln!(self.writer, "{}", j.to_string())?;
+        self.writer.flush()
+    }
+}
+
+/// Submit one shard spec on `conn` and read its event stream to the
+/// terminal result. IO failures and EOF are [`ShardErr::Lost`]; protocol
+/// violations, dataset mismatches, and real remote job failures are
+/// [`ShardErr::Fatal`].
+fn run_shard(
+    conn: &mut WorkerConn,
+    shard: &Shard,
+    timeout: Duration,
+    abort: &AtomicBool,
+    spec_for: &(dyn Fn(&Shard) -> Json + Sync),
+    tx: &Sender<Msg>,
+    run_offset: usize,
+) -> Result<ShardOutcome, ShardErr> {
+    let lost = |e: anyhow::Error| ShardErr::Lost(layer(e, RemoteError::WorkerLost.marker()));
+    let proto = |e: anyhow::Error| ShardErr::Fatal(layer(e, RemoteError::Protocol.marker()));
+    if conn.send_line(&spec_for(shard)).is_err() {
+        return Err(lost(anyhow::anyhow!("writing shard {} spec", shard.id)));
+    }
+    let deadline = Instant::now() + timeout;
+    let mut job_id: Option<u64> = None;
+    let mut cancel_sent = false;
+    let mut buf = String::new();
+    loop {
+        // Cooperative cancellation fan-out: one control line, then keep
+        // draining until the worker confirms (or we give up and let the
+        // disconnect epilogue clean it up).
+        if abort.load(Ordering::Relaxed) && !cancel_sent {
+            cancel_sent = true;
+            if let Some(id) = job_id {
+                let cancel = Json::obj(vec![
+                    ("job", Json::str("cancel")),
+                    ("id", Json::num(id as f64)),
+                ]);
+                let _ = conn.send_line(&cancel);
+            }
+            return Err(ShardErr::Cancelled);
+        }
+        buf.clear();
+        let line = match read_line_slice(&mut conn.reader, &mut buf, deadline) {
+            ReadOutcome::Line => buf.trim().to_string(),
+            ReadOutcome::Slice => continue,
+            ReadOutcome::Eof => {
+                return Err(lost(anyhow::anyhow!(
+                    "worker closed the connection mid-shard {}",
+                    shard.id
+                )))
+            }
+            ReadOutcome::IoError(e) => {
+                return Err(lost(
+                    anyhow::Error::from(e).context(format!("reading shard {} events", shard.id)),
+                ))
+            }
+            ReadOutcome::Deadline => {
+                // Best-effort cancel so the (possibly just slow) worker
+                // stops burning cores on a shard we are re-dispatching.
+                if let Some(id) = job_id {
+                    let cancel = Json::obj(vec![
+                        ("job", Json::str("cancel")),
+                        ("id", Json::num(id as f64)),
+                    ]);
+                    let _ = conn.send_line(&cancel);
+                }
+                return Err(ShardErr::Lost(layer(
+                    anyhow::anyhow!("shard {} exceeded its {:.0?} deadline", shard.id, timeout),
+                    RemoteError::ShardTimeout.marker(),
+                )));
+            }
+        };
+        if line.is_empty() {
+            continue;
+        }
+        let ev = match parse(&line) {
+            Ok(j) => j,
+            Err(e) => return Err(proto(anyhow::anyhow!("unparseable event line: {e:#}"))),
+        };
+        let ev_type = ev.get("type").and_then(|t| t.as_str()).unwrap_or("?");
+        let ev_job = ev.get("job").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        if ev_job == 0 && ev_type == "error" {
+            // Session-level rejection: our spec did not parse over there.
+            let msg = ev.get("message").and_then(|m| m.as_str()).unwrap_or("?");
+            return Err(proto(anyhow::anyhow!("worker rejected the shard spec: {msg}")));
+        }
+        if job_id.is_none() {
+            job_id = Some(ev_job);
+        }
+        if job_id != Some(ev_job) {
+            continue; // another job's stray event (cancel ack of a prior shard)
+        }
+        match ev_type {
+            "run" => {
+                let run = ev.get("run").and_then(|v| v.as_f64()).unwrap_or(0.0) as usize;
+                let acc = ev.get("accuracy").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                let _ = tx.send(Msg::Run {
+                    global: run_offset + shard.start + run,
+                    accuracy: acc,
+                });
+            }
+            "result" => {
+                let data = ev
+                    .opt("result")
+                    .filter(|r| {
+                        r.opt("kind").and_then(|k| k.as_str().ok()) == Some("fleet_shard")
+                    })
+                    .and_then(|r| r.opt("data"))
+                    .ok_or_else(|| {
+                        proto(anyhow::anyhow!("terminal result is not a fleet_shard envelope"))
+                    })?;
+                return parse_outcome(data, shard).map_err(proto);
+            }
+            "error" => {
+                let msg = ev.get("message").and_then(|m| m.as_str()).unwrap_or("?");
+                if msg.contains(RemoteError::DataMismatch.marker()) {
+                    return Err(ShardErr::Fatal(layer(
+                        anyhow::anyhow!("worker refused shard {}: {msg}", shard.id),
+                        RemoteError::DataMismatch.marker(),
+                    )));
+                }
+                if msg == "cancelled" {
+                    // We did not ask for this (our own cancel path returns
+                    // before reading): the worker is going away — retry.
+                    return Err(lost(anyhow::anyhow!("worker cancelled shard {}", shard.id)));
+                }
+                return Err(ShardErr::Fatal(anyhow::anyhow!(
+                    "worker failed shard {}: {msg}",
+                    shard.id
+                )));
+            }
+            _ => {} // queued / started / log / epoch: progress only
+        }
+    }
+}
+
+enum ReadOutcome {
+    /// A full line landed in `buf`.
+    Line,
+    /// The 100 ms read slice elapsed — poll flags and try again.
+    Slice,
+    Eof,
+    Deadline,
+    IoError(std::io::Error),
+}
+
+/// Read one `\n`-terminated line in 100 ms slices (the stream's read
+/// timeout), preserving partial data in `buf` across slices, until the
+/// per-shard `deadline`.
+fn read_line_slice(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut String,
+    deadline: Instant,
+) -> ReadOutcome {
+    loop {
+        match reader.read_line(buf) {
+            Ok(0) => return ReadOutcome::Eof,
+            Ok(_) => {
+                if buf.ends_with('\n') {
+                    return ReadOutcome::Line;
+                }
+                // Data without a terminator means EOF mid-line.
+                return ReadOutcome::Eof;
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if Instant::now() >= deadline {
+                    return ReadOutcome::Deadline;
+                }
+                return ReadOutcome::Slice;
+            }
+            Err(e) => return ReadOutcome::IoError(e),
+        }
+    }
+}
+
+/// Parse a `fleet_shard` result envelope's data into shard-local scalar
+/// vectors, checking id and arity (wrong shapes are protocol errors).
+fn parse_outcome(data: &Json, shard: &Shard) -> Result<ShardOutcome> {
+    let id = data.get("shard")?.as_usize()?;
+    if id != shard.id {
+        bail!("result names shard {id}, expected {}", shard.id);
+    }
+    let nums = |key: &str| -> Result<Vec<f64>> {
+        let arr = data.get(key)?.as_arr()?;
+        if arr.len() != shard.len {
+            bail!("'{key}' has {} entries, expected {}", arr.len(), shard.len);
+        }
+        arr.iter().map(|v| v.as_f64()).collect()
+    };
+    let accs = nums("accs")?;
+    let accs_no_tta = nums("accs_no_tta")?;
+    let times = nums("times")?;
+    let epochs_arr = data.get("epochs_to_target")?.as_arr()?;
+    if epochs_arr.len() != shard.len {
+        bail!(
+            "'epochs_to_target' has {} entries, expected {}",
+            epochs_arr.len(),
+            shard.len
+        );
+    }
+    let epochs_to_target = epochs_arr
+        .iter()
+        .map(|v| match v {
+            Json::Null => Ok(None),
+            other => other.as_f64().map(Some),
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ShardOutcome {
+        accs,
+        accs_no_tta,
+        times,
+        epochs_to_target,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_shards_is_balanced_contiguous_and_complete() {
+        let shards = plan_shards(10, 3);
+        assert_eq!(
+            shards,
+            vec![
+                Shard { id: 0, start: 0, len: 4 },
+                Shard { id: 1, start: 4, len: 3 },
+                Shard { id: 2, start: 7, len: 3 },
+            ]
+        );
+        // More workers than runs: empty shards are dropped.
+        let shards = plan_shards(2, 5);
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0], Shard { id: 0, start: 0, len: 1 });
+        assert_eq!(shards[1], Shard { id: 1, start: 1, len: 1 });
+        assert!(plan_shards(0, 3).is_empty());
+        assert!(plan_shards(3, 0).is_empty());
+    }
+
+    #[test]
+    fn remote_error_markers_are_detectable_and_distinct() {
+        use anyhow::Context;
+        let kinds = [
+            RemoteError::Connect,
+            RemoteError::Protocol,
+            RemoteError::WorkerLost,
+            RemoteError::ShardTimeout,
+            RemoteError::DataMismatch,
+        ];
+        for &kind in &kinds {
+            let e = Err::<(), _>(kind.err())
+                .context("shard 2 on 127.0.0.1:9")
+                .unwrap_err();
+            assert!(is_remote_error(&e, kind), "{kind:?} lost its marker");
+            for &other in &kinds {
+                if other != kind {
+                    assert!(!is_remote_error(&e, other), "{kind:?} reads as {other:?}");
+                }
+            }
+            assert!(!crate::coordinator::observer::is_cancelled(&e));
+        }
+        assert!(!is_remote_error(
+            &anyhow::anyhow!("disk on fire"),
+            RemoteError::WorkerLost
+        ));
+    }
+
+    #[test]
+    fn worker_pool_parses_and_rejects() {
+        let p = WorkerPool::parse("a:1, b:2 ,c:3", 12.5).unwrap();
+        assert_eq!(p.addrs, vec!["a:1", "b:2", "c:3"]);
+        assert_eq!(p.timeout, Duration::from_secs_f64(12.5));
+        // 0 falls back to the default deadline.
+        assert_eq!(WorkerPool::parse("a:1", 0.0).unwrap().timeout, Duration::from_secs(600));
+        assert!(WorkerPool::parse("", 1.0).is_err());
+        assert!(WorkerPool::parse(" , ", 1.0).is_err());
+        assert!(WorkerPool::parse("nocolon", 1.0).is_err());
+    }
+
+    #[test]
+    fn dataset_fingerprint_separates_data_and_matches_itself() {
+        use crate::data::synthetic::{cifar_like, SynthConfig};
+        let a_train = cifar_like(&SynthConfig::default().with_n(8), 7, 0);
+        let a_test = cifar_like(&SynthConfig::default().with_n(4), 7, 1);
+        let b_train = cifar_like(&SynthConfig::default().with_n(8), 8, 0);
+        let h = dataset_fingerprint(&a_train, &a_test);
+        assert_eq!(h, dataset_fingerprint(&a_train, &a_test));
+        assert_eq!(h.len(), 32);
+        assert_ne!(h, dataset_fingerprint(&b_train, &a_test));
+        // Swapping the splits changes the fingerprint too.
+        assert_ne!(h, dataset_fingerprint(&a_test, &a_train));
+    }
+}

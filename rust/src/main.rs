@@ -16,7 +16,9 @@
 //!   warm or on-disk model (DESIGN.md §10).
 //! * `save` / `load` — write / register versioned checkpoint artifacts
 //!   (content-hashed payload + schema-validated manifest).
-//! * `fleet --runs N [--parallel P]` — an n-run statistical experiment.
+//! * `fleet --runs N [--parallel P]` — an n-run statistical experiment
+//!   (`--workers host:port,...` shards it across remote serve workers
+//!   with a bit-identical merged result, DESIGN.md §13).
 //! * `study --policies a,b [--runs N]` — an augmentation-policy × seed
 //!   grid with per-cell CIs and seed-paired comparisons (DESIGN.md §11).
 //! * `bench [--fleet]` — the §3.7 benchmark harness (BENCHMARKS.md).
@@ -27,6 +29,8 @@
 //!   (DESIGN.md §12).
 //! * `metrics` — the serving counters/latency snapshot (the CLI face of
 //!   the serve-protocol `{"job":"metrics"}` endpoint).
+//! * `health` — rolling-window request-latency view over the last N
+//!   seconds (`{"job":"health"}`).
 //!
 //! Config resolution follows the documented precedence **CLI > env >
 //! config file > default** (`config::resolve`): bare `key=value` pairs
@@ -39,8 +43,9 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use airbench::api::{
-    BenchJob, Engine, EngineConfig, EvalJob, Event, FleetBenchJob, FleetJob, InfoJob, JobResult,
-    JobSpec, LoadJob, MetricsJob, PredictJob, SaveJob, ServeBenchJob, StudyJob, TrainJob,
+    BenchJob, Engine, EngineConfig, EvalJob, Event, FleetBenchJob, FleetJob, HealthJob, InfoJob,
+    JobResult, JobSpec, LoadJob, MetricsJob, PredictJob, SaveJob, ServeBenchJob, StudyJob,
+    TrainJob,
 };
 use airbench::cli::{find_command, Args, Command};
 use airbench::config::{process_env, ConfigLayers, TrainConfig, TtaLevel};
@@ -110,6 +115,11 @@ static COMMANDS: &[Command] = &[
         summary: "serving counters + latency quantiles from an engine ({\"job\":\"metrics\"})",
         run: cmd_metrics,
     },
+    Command {
+        name: "health",
+        summary: "rolling-window serve latency over the last N seconds ({\"job\":\"health\"})",
+        run: cmd_health,
+    },
 ];
 
 const FLAG_HELP: &str = "\
@@ -142,13 +152,18 @@ load:   --path model.ckpt --id NAME (default id m<hash12>)\n\
 fleet:  --runs N --log fleet.json --parallel N (alias --fleet-parallel,\n\
         config key `fleet_parallel`): concurrent runs budgeted so\n\
         runs x kernel threads <= cores; 0 = auto. Per-run results are\n\
-        bit-identical at every value (DESIGN.md §8)\n\
+        bit-identical at every value (DESIGN.md §8).\n\
+        --workers host:port,host:port shards the runs across remote\n\
+        `serve --addr` workers (config key `dist_workers`; merged result\n\
+        bit-identical to local, DESIGN.md §13); --dist-timeout-s T sets\n\
+        the per-shard deadline (default 600)\n\
 study:  --policies a,b,... (comma-separated compact spellings: flip mode\n\
         [none|random|alternating|alternating_md5] then key=value\n\
         segments crop=heavy|light|center:N, translate=N, cutout=N,\n\
         sub=wide|rcut:N; e.g. 'random+crop=light+sub=rcut:6'),\n\
         --runs N --log study.json --parallel N. Every cell runs the SAME\n\
-        forked seed table, so comparisons are seed-paired (DESIGN.md §11)\n\
+        forked seed table, so comparisons are seed-paired (DESIGN.md §11).\n\
+        --workers host:port,... distributes cells shard-wise like fleet\n\
 bench:  --runs --steps --warmup --epochs --tag --out --train-n --test-n\n\
         (see BENCHMARKS.md); bench --fleet adds --fleet-runs N\n\
         --parallel-levels 1,2,4; bench --serve adds --clients N\n\
@@ -163,10 +178,13 @@ serve:  --addr host:port (TCP; default: stdin/stdout NDJSON session)\n\
         (latency SLO, default 2000), --queue-cap N admission queue bound\n\
         (overfull submissions get a typed `overloaded` rejection)\n\
 metrics: (in-process snapshot; over serve, send {\"job\":\"metrics\"})\n\
+health: --window-s N rolling latency window in seconds (default 10;\n\
+        over serve, send {\"job\":\"health\",\"window_s\":N})\n\
 \n\
 env:    AIRBENCH_BACKEND / AIRBENCH_VARIANT / AIRBENCH_EPOCHS /\n\
         AIRBENCH_WORKERS / AIRBENCH_PREFETCH_DEPTH /\n\
-        AIRBENCH_FLEET_PARALLEL / AIRBENCH_SEED form the env layer;\n\
+        AIRBENCH_FLEET_PARALLEL / AIRBENCH_DIST_WORKERS /\n\
+        AIRBENCH_DIST_TIMEOUT_S / AIRBENCH_SEED form the env layer;\n\
         AIRBENCH_NATIVE_THREADS=N sets native kernel threads (outputs\n\
         bit-identical at any value); AIRBENCH_FORCE_SCALAR=1 pins the\n\
         portable scalar GEMM tile (skips AVX2 dispatch);\n\
@@ -224,15 +242,23 @@ fn resolved_config(args: &Args) -> Result<TrainConfig> {
         ("variant", "variant"),
         ("backend", "backend"),
         ("epochs", "epochs"),
-        ("workers", "workers"),
         ("prefetch-depth", "prefetch_depth"),
         ("parallel", "fleet_parallel"),
         ("fleet-parallel", "fleet_parallel"),
+        ("dist-timeout-s", "dist_timeout_s"),
         ("seed", "seed"),
     ] {
         if let Some(v) = args.options.get(flag) {
             cli.push((key.to_string(), v.clone()));
         }
+    }
+    // `--workers` is overloaded by value: `host:port[,host:port]` names a
+    // remote serve-worker pool (config key `dist_workers` — the distributed
+    // coordinator, DESIGN.md §13), while a plain integer keeps the original
+    // meaning of data-pipeline threads (config key `workers`).
+    if let Some(v) = args.options.get("workers") {
+        let key = if v.contains(':') { "dist_workers" } else { "workers" };
+        cli.push((key.to_string(), v.clone()));
     }
     TrainConfig::resolve(ConfigLayers {
         base,
@@ -496,6 +522,16 @@ fn cmd_metrics(args: &Args) -> Result<()> {
     run_and_render(args, JobSpec::Metrics(MetricsJob))
 }
 
+fn cmd_health(args: &Args) -> Result<()> {
+    // Same role as `metrics` for the `{"job":"health"}` endpoint: the
+    // rolling-window latency view (last N seconds, not since start).
+    let window_s = match args.options.get("window-s") {
+        Some(_) => Some(args.opt_u64("window-s", 10)?),
+        None => None,
+    };
+    run_and_render(args, JobSpec::Health(HealthJob { window_s }))
+}
+
 // ---------------------------------------------------------------------------
 // Event rendering (the thin-client half: no coordinator calls anywhere here)
 // ---------------------------------------------------------------------------
@@ -557,7 +593,16 @@ fn run_and_render(args: &Args, spec: JobSpec) -> Result<()> {
                 eprintln!("[fleet] run {run}: {}", pct(*accuracy));
             }
             Event::Result { result, .. } => render_result(result),
-            Event::Error { message, .. } => failure = Some(message.clone()),
+            Event::Error {
+                message,
+                retry_after_ms,
+                ..
+            } => {
+                if let Some(ms) = retry_after_ms {
+                    eprintln!("[serve] overloaded — retry in {ms} ms");
+                }
+                failure = Some(message.clone());
+            }
         }
     }
     match failure {
@@ -762,6 +807,39 @@ fn render_result(result: &JobResult) {
                 "predict_one[{model}] example {index}: class {prediction} \
                  (p={confidence:.4}, {latency_us:.0}us, probs md5 {probs_md5})"
             );
+        }
+        JobResult::FleetShard {
+            shard,
+            start,
+            accs,
+            ..
+        } => {
+            // Normally consumed by a remote coordinator, not a human; keep
+            // the rendering minimal but complete.
+            println!(
+                "fleet shard {shard}: {} runs starting at global run {start}",
+                accs.len()
+            );
+        }
+        JobResult::Health { data } => {
+            println!(
+                "serve health (last {}s): {} requests, queue depth {}",
+                jnum(data, "window_s") as u64,
+                jnum(data, "requests") as u64,
+                jnum(data, "queue_depth") as u64,
+            );
+            if let Some(h) = data.opt("latency") {
+                println!(
+                    "  request_us   n={:<6} mean {:>9.1}  p50 {:>9.1}  \
+                     p90 {:>9.1}  p99 {:>9.1}  max {:>9.1}",
+                    jnum(h, "n") as u64,
+                    jnum(h, "mean_us"),
+                    jnum(h, "p50_us"),
+                    jnum(h, "p90_us"),
+                    jnum(h, "p99_us"),
+                    jnum(h, "max_us"),
+                );
+            }
         }
         JobResult::Metrics { data } => {
             println!(

@@ -36,7 +36,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::observer::Overloaded;
+use crate::coordinator::observer::{retry_after_hint, Overloaded};
 use crate::runtime::native::{NativeBackend, NativeShared};
 use crate::runtime::{Backend, ModelState};
 use crate::serve::metrics::ServeMetrics;
@@ -220,7 +220,19 @@ impl Batcher {
             }
             if g.len >= self.shared.queue_cap {
                 self.shared.metrics.inc_rejected();
-                return Err(Overloaded.into());
+                // Backpressure hint: the queue ahead of a retrying client is
+                // `len / max_batch` flushes deep, each costing roughly the
+                // mean exec latency observed so far (the SLO wait before the
+                // first flush when nothing has executed yet). Clamped so a
+                // cold or pathological estimate still yields a sane hint.
+                let batches_ahead = (g.len / self.shared.max_batch) as f64 + 1.0;
+                let exec_us = match self.shared.metrics.mean_exec_us() {
+                    us if us > 0.0 => us,
+                    _ => self.shared.max_wait.as_micros() as f64,
+                };
+                let ms = ((batches_ahead * exec_us) / 1000.0).ceil() as u64;
+                return Err::<_, anyhow::Error>(Overloaded.into())
+                    .context(retry_after_hint(ms.clamp(1, 10_000)));
             }
             let q = g.per_tenant.entry(tenant).or_default();
             if q.is_empty() {

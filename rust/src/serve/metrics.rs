@@ -10,15 +10,20 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
-use crate::stats::Histogram;
+use crate::stats::{Histogram, RollingHistogram};
 use crate::util::json::Json;
+
+/// Seconds of per-second latency slots the rolling request-latency window
+/// retains — the upper bound a `health` query's `window_s` is clamped to.
+pub const HEALTH_WINDOW_CAP_S: usize = 60;
 
 /// Counters, gauges, and latency histograms for micro-batched serving.
 ///
 /// All methods take `&self`; the struct is shared as `Arc<ServeMetrics>`
 /// across batcher workers, submitting sessions, and the metrics endpoint.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct ServeMetrics {
     /// Requests admitted into a batcher queue.
     requests: AtomicU64,
@@ -37,12 +42,34 @@ pub struct ServeMetrics {
     exec_us: Mutex<Histogram>,
     /// End-to-end submit → reply latency per request, µs.
     request_us: Mutex<Histogram>,
+    /// Per-second rolling slots of `request_us` for the `health` endpoint's
+    /// last-N-seconds view (the cumulative histograms above never reset).
+    rolling_request_us: Mutex<RollingHistogram>,
+    /// Construction instant — the clock the rolling slots are keyed by.
+    t0: Instant,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> ServeMetrics {
+        ServeMetrics::new()
+    }
 }
 
 impl ServeMetrics {
     /// Fresh all-zero metrics.
     pub fn new() -> ServeMetrics {
-        ServeMetrics::default()
+        ServeMetrics {
+            requests: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            queue_wait_us: Mutex::new(Histogram::new()),
+            exec_us: Mutex::new(Histogram::new()),
+            request_us: Mutex::new(Histogram::new()),
+            rolling_request_us: Mutex::new(RollingHistogram::new(HEALTH_WINDOW_CAP_S)),
+            t0: Instant::now(),
+        }
     }
 
     /// One request admitted.
@@ -79,11 +106,48 @@ impl ServeMetrics {
     /// Record one request's end-to-end latency (submit → reply), µs.
     pub fn observe_request(&self, us: f64) {
         self.request_us.lock().unwrap().record(us);
+        self.rolling_request_us
+            .lock()
+            .unwrap()
+            .record(self.t0.elapsed().as_secs(), us);
     }
 
     /// Requests refused so far (the CI load-smoke leg asserts 0).
     pub fn rejected(&self) -> u64 {
         self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Mean batched-eval wall time so far, µs (0 before the first flush).
+    /// The batcher's `retry_after_ms` backpressure hint scales with this.
+    pub fn mean_exec_us(&self) -> f64 {
+        let g = self.exec_us.lock().unwrap();
+        if g.n() == 0 {
+            0.0
+        } else {
+            g.mean()
+        }
+    }
+
+    /// The `health`-result wire object: request latency over (at most) the
+    /// last `window_s` seconds, not since process start. `window_s` is
+    /// clamped into `1..=`[`HEALTH_WINDOW_CAP_S`]; the echoed value is the
+    /// clamped one. `requests` counts only requests inside the window.
+    pub fn health(&self, window_s: u64) -> Json {
+        let window = (window_s.max(1) as usize).min(HEALTH_WINDOW_CAP_S) as u64;
+        let hist = self
+            .rolling_request_us
+            .lock()
+            .unwrap()
+            .snapshot(self.t0.elapsed().as_secs(), window);
+        Json::obj(vec![
+            ("window_s", Json::num(window as f64)),
+            ("requests", Json::num(hist.n() as f64)),
+            (
+                "queue_depth",
+                Json::num(self.queue_depth.load(Ordering::Relaxed) as f64),
+            ),
+            ("latency", hist.to_json()),
+        ])
     }
 
     /// Snapshot as the metrics-result wire object: counters (`requests`,
@@ -156,5 +220,56 @@ mod tests {
         for key in ["queue_us", "exec_us", "request_us"] {
             assert_eq!(lat.get(key).unwrap().get("n").unwrap().as_f64().unwrap(), 1.0);
         }
+        assert_eq!(m.mean_exec_us(), 800.0);
+    }
+
+    #[test]
+    fn health_reports_the_rolling_window_and_clamps() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.mean_exec_us(), 0.0, "no flushes yet");
+        let empty = m.health(10);
+        assert_eq!(empty.get("window_s").unwrap().as_usize().unwrap(), 10);
+        assert_eq!(empty.get("requests").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(
+            empty.get("latency").unwrap().get("n").unwrap().as_usize().unwrap(),
+            0
+        );
+
+        m.observe_request(500.0);
+        m.observe_request(700.0);
+        m.set_queue_depth(2);
+        let h = m.health(10);
+        assert_eq!(h.get("requests").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(h.get("queue_depth").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(
+            h.get("latency").unwrap().get("n").unwrap().as_usize().unwrap(),
+            2
+        );
+
+        // window_s is clamped into 1..=HEALTH_WINDOW_CAP_S, echoed clamped.
+        assert_eq!(m.health(0).get("window_s").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(
+            m.health(10_000).get("window_s").unwrap().as_usize().unwrap(),
+            HEALTH_WINDOW_CAP_S
+        );
+        // The rolling view is windowed, so its count can only ever lag the
+        // cumulative request_us histogram, never exceed it.
+        let cumulative = m.snapshot();
+        let cum_n = cumulative
+            .get("latency")
+            .unwrap()
+            .get("request_us")
+            .unwrap()
+            .get("n")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        let win_n = m
+            .health(HEALTH_WINDOW_CAP_S as u64)
+            .get("requests")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        assert!(win_n <= cum_n);
     }
 }

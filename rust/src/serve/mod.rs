@@ -79,6 +79,7 @@ fn session_error<W: Write>(out: &Mutex<W>, job: u64, message: &str) {
         &Event::Error {
             job,
             message: message.to_string(),
+            retry_after_ms: None,
         }
         .to_json(),
     );

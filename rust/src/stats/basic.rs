@@ -313,6 +313,60 @@ impl Histogram {
     }
 }
 
+/// Rolling-window wrapper over [`Histogram`]: a ring of per-second
+/// histograms, so recent-latency quantiles (the serve `health` endpoint,
+/// DESIGN.md §12) reflect only the last N seconds instead of being
+/// diluted by cumulative history. The caller supplies time as whole
+/// seconds from its own monotonic epoch (keeping the type clock-free and
+/// testable); a slot is lazily reset when its second comes around again,
+/// so idle periods cost nothing.
+#[derive(Clone, Debug)]
+pub struct RollingHistogram {
+    /// `(second tag, that second's histogram)` per ring slot. The tag
+    /// starts at `u64::MAX` ("never written"), which no window can match.
+    slots: Vec<(u64, Histogram)>,
+}
+
+impl RollingHistogram {
+    /// A ring covering the last `capacity_s` seconds (at least 1).
+    pub fn new(capacity_s: usize) -> RollingHistogram {
+        RollingHistogram {
+            slots: vec![(u64::MAX, Histogram::new()); capacity_s.max(1)],
+        }
+    }
+
+    /// The longest window this ring can answer, seconds.
+    pub fn capacity_s(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Record one latency at second `now_s`. Reuses (and resets) the ring
+    /// slot whose second has lapped.
+    pub fn record(&mut self, now_s: u64, x: f64) {
+        let i = (now_s % self.slots.len() as u64) as usize;
+        let (tag, h) = &mut self.slots[i];
+        if *tag != now_s {
+            *tag = now_s;
+            *h = Histogram::new();
+        }
+        h.record(x);
+    }
+
+    /// Merge the slots covering `(now_s - window_s, now_s]` into one
+    /// [`Histogram`] (the lossless bucket merge; `window_s` is clamped to
+    /// the ring capacity).
+    pub fn snapshot(&self, now_s: u64, window_s: u64) -> Histogram {
+        let window = window_s.clamp(1, self.slots.len() as u64);
+        let mut out = Histogram::new();
+        for (tag, h) in &self.slots {
+            if *tag <= now_s && now_s - *tag < window {
+                out.merge(h);
+            }
+        }
+        out
+    }
+}
+
 /// Histogram with fixed-width bins over `[lo, hi)` (Fig 6's accuracy
 /// distributions).
 pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
@@ -659,6 +713,37 @@ mod tests {
                     && ab.max().to_bits() == ba.max().to_bits()
             },
         );
+    }
+
+    #[test]
+    fn rolling_histogram_windows_and_lapped_slots() {
+        let mut r = RollingHistogram::new(5);
+        assert_eq!(r.capacity_s(), 5);
+        // Nothing recorded: every window is empty.
+        assert_eq!(r.snapshot(100, 5).n(), 0);
+
+        r.record(10, 100.0);
+        r.record(11, 200.0);
+        r.record(13, 400.0);
+        // Window (8, 13]: all three. Window (12, 13]: just the last.
+        assert_eq!(r.snapshot(13, 5).n(), 3);
+        assert_eq!(r.snapshot(13, 1).n(), 1);
+        assert_eq!(r.snapshot(13, 1).max(), 400.0);
+        // Window math matches the lossless merge: mean over (11, 13].
+        assert_eq!(r.snapshot(13, 2).mean(), 400.0);
+        assert_eq!(r.snapshot(13, 3).mean(), 300.0);
+        // Advancing time ages data out without any writes.
+        assert_eq!(r.snapshot(17, 5).n(), 1);
+        assert_eq!(r.snapshot(18, 5).n(), 0);
+        // A lapped slot (13 and 18 share slot 3) resets on reuse.
+        r.record(18, 800.0);
+        let s = r.snapshot(18, 5);
+        assert_eq!(s.n(), 1);
+        assert_eq!(s.min(), 800.0);
+        // Windows larger than the ring clamp to its capacity.
+        assert_eq!(r.snapshot(18, 500).n(), 1);
+        // A zero window still answers for the current second.
+        assert_eq!(r.snapshot(18, 0).n(), 1);
     }
 
     #[test]

@@ -13,7 +13,7 @@ pub mod powerlaw;
 pub mod study;
 pub mod variance;
 
-pub use basic::{histogram, welch_t, Histogram, Summary};
+pub use basic::{histogram, welch_t, Histogram, RollingHistogram, Summary};
 pub use calibration::cace;
 pub use powerlaw::{effective_speedup, fit_power_law, PowerLaw};
 pub use study::{paired, PairedComparison, StudyCell, StudyResult};

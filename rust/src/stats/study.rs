@@ -323,6 +323,8 @@ mod tests {
                 runs: Vec::new(),
                 accuracies: accs.to_vec(),
                 accuracies_no_tta: accs.to_vec(),
+                times: vec![0.0; accs.len()],
+                epochs_to_target: vec![None; accs.len()],
             },
         }
     }

@@ -175,6 +175,8 @@ fn validate_any_dispatches_study_reports() {
         policy: Policy::parse(policy).unwrap(),
         fleet: FleetResult {
             runs: Vec::new(),
+            times: vec![0.0; accuracies.len()],
+            epochs_to_target: vec![None; accuracies.len()],
             accuracies: accuracies.clone(),
             accuracies_no_tta: accuracies,
         },

@@ -1,0 +1,341 @@
+//! Distributed fleet coordinator suite (DESIGN.md §13).
+//!
+//! Pins the PR 10 acceptance contract:
+//! * the shard planner is frozen by a committed golden fixture, and a
+//!   property test proves every plan's shard union reconstructs the
+//!   `fleet_seeds` table exactly — contiguous, no overlap, no gap,
+//!   balanced to within one run;
+//! * a study sharded across **two loopback serve workers** writes a
+//!   report **byte-identical** to the same study run locally;
+//! * killing one worker mid-run re-queues its shard to the survivor and
+//!   the merged report is *still* byte-identical (retry-on-worker-loss +
+//!   at-most-once application);
+//! * dead pools fail with the typed `RemoteError` markers, and a worker
+//!   refuses a shard whose dataset fingerprint does not match its own.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+
+use airbench::api::{Engine, EngineConfig, Event, FleetShardJob, JobSpec, StudyJob};
+use airbench::config::TrainConfig;
+use airbench::coordinator::remote::{run_fleet_remote, RemoteJob};
+use airbench::coordinator::{fleet_seeds, is_remote_error, plan_shards, RemoteError, WorkerPool};
+use airbench::data::augment::Policy;
+use airbench::experiments::DataKind;
+use airbench::util::json::parse;
+
+const TRAIN_N: usize = 64;
+const TEST_N: usize = 32;
+const RUNS: usize = 3;
+
+fn nano_config(seed: u64, epochs: f64) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    for (k, v) in [
+        ("variant", "nano"),
+        ("backend", "native"),
+        ("tta", "none"),
+        ("whiten_samples", "32"),
+    ] {
+        cfg.set(k, v).unwrap();
+    }
+    cfg.epochs = epochs;
+    cfg.seed = seed;
+    cfg
+}
+
+// ---------------------------------------------------------------------------
+// Shard planner: golden fixture + property
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shard_planner_matches_the_committed_golden_fixture() {
+    let path =
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/shard_plan_v1.json");
+    let j = parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let cases = j.get("cases").unwrap().as_arr().unwrap();
+    assert!(!cases.is_empty());
+    for case in cases {
+        let runs = case.get("runs").unwrap().as_usize().unwrap();
+        let workers = case.get("workers").unwrap().as_usize().unwrap();
+        let want: Vec<(usize, usize, usize)> = case
+            .get("shards")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|s| {
+                let t = s.as_arr().unwrap();
+                (
+                    t[0].as_usize().unwrap(),
+                    t[1].as_usize().unwrap(),
+                    t[2].as_usize().unwrap(),
+                )
+            })
+            .collect();
+        let got: Vec<(usize, usize, usize)> = plan_shards(runs, workers)
+            .iter()
+            .map(|s| (s.id, s.start, s.len))
+            .collect();
+        assert_eq!(got, want, "plan_shards({runs}, {workers}) drifted from the fixture");
+    }
+}
+
+#[test]
+fn shard_unions_reconstruct_the_seed_table_exactly() {
+    airbench::util::proptest::check(
+        "shard_plan_covers_seed_table",
+        airbench::util::proptest::cases_from_env(200),
+        |r| (r.below(128), r.below(12), r.next_u64()),
+        |&(runs, workers, seed)| {
+            let cfg = TrainConfig {
+                seed,
+                ..TrainConfig::default()
+            };
+            let table = fleet_seeds(&cfg, runs);
+            let plan = plan_shards(runs, workers);
+            if runs == 0 || workers == 0 {
+                return plan.is_empty();
+            }
+            // Ids in seed order; contiguous with no gap or overlap; every
+            // shard non-empty; one shard per worker up to the run count.
+            let mut next = 0usize;
+            for (i, s) in plan.iter().enumerate() {
+                if s.id != i || s.start != next || s.len == 0 {
+                    return false;
+                }
+                next += s.len;
+            }
+            if next != runs || plan.len() != workers.min(runs) {
+                return false;
+            }
+            // Balanced to within one run.
+            let lens: Vec<usize> = plan.iter().map(|s| s.len).collect();
+            if lens.iter().max().unwrap() - lens.iter().min().unwrap() > 1 {
+                return false;
+            }
+            // The shard seed slices concatenate back to the exact table —
+            // the coordinator ships these slices, so this *is* the
+            // determinism precondition.
+            let rebuilt: Vec<u64> = plan
+                .iter()
+                .flat_map(|s| table[s.start..s.start + s.len].iter().copied())
+                .collect();
+            rebuilt == table
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Loopback workers
+// ---------------------------------------------------------------------------
+
+/// A real serve worker on an ephemeral loopback port: its own engine, the
+/// production TCP transport. The thread serves forever (test-process
+/// lifetime), exactly like `airbench serve --addr`.
+fn spawn_worker() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        let engine = Engine::new(EngineConfig {
+            job_slots: 2,
+            ..EngineConfig::default()
+        });
+        let _ = airbench::serve::serve_tcp(&engine, listener);
+    });
+    addr
+}
+
+/// A worker that dies mid-shard: accepts one connection, reads the shard
+/// spec, acknowledges it queued — then drops the socket. The coordinator
+/// must see `WorkerLost` and re-queue the shard to a survivor.
+fn spawn_doomed_worker() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        if let Ok((stream, _)) = listener.accept() {
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut spec = String::new();
+            let _ = reader.read_line(&mut spec);
+            let mut w = stream;
+            let _ = writeln!(w, "{{\"type\":\"queued\",\"job\":1}}");
+            let _ = w.flush();
+            // Dropping the stream here kills the worker mid-shard.
+        }
+    });
+    addr
+}
+
+fn study_spec(cfg: TrainConfig, log: PathBuf) -> JobSpec {
+    JobSpec::Study(StudyJob {
+        config: cfg,
+        data: DataKind::Cifar10,
+        policies: vec![
+            Policy::parse("random").unwrap(),
+            Policy::parse("alternating+cutout=4").unwrap(),
+        ],
+        runs: Some(RUNS),
+        parallel: None,
+        train_n: Some(TRAIN_N),
+        test_n: Some(TEST_N),
+        warmup: false,
+        log: Some(log),
+    })
+}
+
+/// Submit and drain one study job, returning its log lines; panics on a
+/// terminal error.
+fn run_study_job(engine: &Engine, spec: JobSpec) -> Vec<String> {
+    let handle = engine.submit(spec);
+    let mut logs = Vec::new();
+    for ev in handle.events() {
+        match ev {
+            Event::Log { line, .. } => logs.push(line),
+            Event::Error { message, .. } => panic!("study job failed: {message}"),
+            Event::Result { .. } => return logs,
+            _ => {}
+        }
+    }
+    panic!("study job ended without a terminal event");
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("airbench_remote_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn study_across_two_loopback_workers_is_byte_identical_to_local() {
+    let dir = tmp_dir("two_workers");
+    let local_log = dir.join("local.json");
+    let dist_log = dir.join("dist.json");
+    let coordinator = Engine::new(EngineConfig {
+        job_slots: 1,
+        ..EngineConfig::default()
+    });
+
+    let cfg = nano_config(7, 1.0);
+    run_study_job(&coordinator, study_spec(cfg.clone(), local_log.clone()));
+
+    let (w1, w2) = (spawn_worker(), spawn_worker());
+    let mut dist_cfg = cfg;
+    dist_cfg.set("dist_workers", &format!("{w1},{w2}")).unwrap();
+    dist_cfg.set("dist_timeout_s", "120").unwrap();
+    let logs = run_study_job(&coordinator, study_spec(dist_cfg, dist_log.clone()));
+    assert!(
+        logs.iter().any(|l| l.contains("distributed: workers=2")),
+        "the distributed branch did not announce itself: {logs:?}"
+    );
+
+    let local = std::fs::read(&local_log).unwrap();
+    let dist = std::fs::read(&dist_log).unwrap();
+    assert!(!local.is_empty());
+    assert_eq!(
+        local, dist,
+        "distributed study report is not byte-identical to the local run"
+    );
+    // Sanity: the report is a schema-valid study document.
+    airbench::stats::study::validate(&parse(std::str::from_utf8(&dist).unwrap()).unwrap())
+        .unwrap();
+}
+
+#[test]
+fn killing_one_worker_mid_run_still_merges_byte_identical() {
+    let dir = tmp_dir("worker_kill");
+    let local_log = dir.join("local.json");
+    let dist_log = dir.join("dist.json");
+    let coordinator = Engine::new(EngineConfig {
+        job_slots: 1,
+        ..EngineConfig::default()
+    });
+
+    let cfg = nano_config(13, 1.0);
+    run_study_job(&coordinator, study_spec(cfg.clone(), local_log.clone()));
+
+    // The doomed worker dies after accepting its first shard; the survivor
+    // must pick the re-queued shard up and finish the whole grid.
+    let doomed = spawn_doomed_worker();
+    let survivor = spawn_worker();
+    let mut dist_cfg = cfg;
+    dist_cfg
+        .set("dist_workers", &format!("{doomed},{survivor}"))
+        .unwrap();
+    dist_cfg.set("dist_timeout_s", "120").unwrap();
+    let logs = run_study_job(&coordinator, study_spec(dist_cfg, dist_log.clone()));
+    assert!(
+        logs.iter().any(|l| l.contains("worker") && l.contains("lost")),
+        "the kill was never observed — the doomed worker claimed no shard: {logs:?}"
+    );
+
+    let local = std::fs::read(&local_log).unwrap();
+    let dist = std::fs::read(&dist_log).unwrap();
+    assert_eq!(
+        local, dist,
+        "report drifted after a mid-run worker loss (re-queue or at-most-once broke)"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Typed failure modes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dead_pools_fail_with_typed_remote_errors() {
+    let cfg = nano_config(3, 1.0);
+    let job = RemoteJob {
+        cfg: &cfg,
+        data: DataKind::Cifar10,
+        train_n: Some(8),
+        test_n: Some(8),
+        data_hash: None,
+    };
+
+    // Nothing listens on port 1: every connect is refused, so the run
+    // fails Connect-typed once the whole pool is gone.
+    let pool = WorkerPool::parse("127.0.0.1:1", 5.0).unwrap();
+    let err = run_fleet_remote(&pool, &job, 2, None).unwrap_err();
+    assert!(
+        is_remote_error(&err, RemoteError::Connect),
+        "expected a typed connect failure, got: {err:#}"
+    );
+
+    // A pool whose only worker dies mid-shard fails WorkerLost-typed.
+    let pool = WorkerPool::parse(&spawn_doomed_worker(), 5.0).unwrap();
+    let err = run_fleet_remote(&pool, &job, 2, None).unwrap_err();
+    assert!(
+        is_remote_error(&err, RemoteError::WorkerLost),
+        "expected a typed worker-lost failure, got: {err:#}"
+    );
+}
+
+#[test]
+fn a_worker_refuses_a_shard_whose_dataset_hash_mismatches() {
+    let engine = Engine::new(EngineConfig {
+        job_slots: 1,
+        ..EngineConfig::default()
+    });
+    let err = engine
+        .submit(JobSpec::FleetShard(FleetShardJob {
+            config: nano_config(1, 1.0),
+            data: DataKind::Cifar10,
+            seeds: vec![42],
+            start: 0,
+            shard: 0,
+            parallel: None,
+            train_n: Some(8),
+            test_n: Some(8),
+            data_hash: Some("0".repeat(32)),
+        }))
+        .wait()
+        .unwrap_err();
+    let rendered = format!("{err:#}");
+    assert!(
+        rendered.contains(RemoteError::DataMismatch.marker()),
+        "expected the typed dataset-mismatch marker, got: {rendered}"
+    );
+    assert!(
+        rendered.contains("fingerprint"),
+        "the mismatch message should explain both fingerprints: {rendered}"
+    );
+}

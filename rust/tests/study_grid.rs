@@ -163,6 +163,8 @@ fn study_report_carries_the_fixture_numerics() {
         policy: Policy::parse(policy).unwrap(),
         fleet: FleetResult {
             runs: Vec::new(),
+            times: vec![0.0; accuracies.len()],
+            epochs_to_target: vec![None; accuracies.len()],
             accuracies: accuracies.clone(),
             accuracies_no_tta: accuracies,
         },
